@@ -1,0 +1,70 @@
+//! Framework comparison (paper Section IV-J, Fig 11): HeLEx vs the
+//! REVAMP-like hotspot-index baseline and the HETA-like BO baseline on
+//! the 8 HETA DFGs (Table IX).
+//!
+//! ```sh
+//! cargo run --release --example compare_frameworks -- --quick  # 14x14
+//! cargo run --release --example compare_frameworks             # 20x20
+//! ```
+
+use helex::baselines::{fig11_metrics, heta as heta_bl, revamp};
+use helex::cgra::{Grid, Layout};
+use helex::coordinator::{Coordinator, ExperimentConfig};
+use helex::dfg::heta;
+use helex::metrics::total_reduction_pct;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let size = if quick { 14 } else { 20 };
+    let dfgs = heta::all();
+    println!(
+        "comparison on {} HETA DFGs @ {size}x{size} (paper uses 20x20)\n",
+        dfgs.len()
+    );
+    let grid = Grid::new(size, size);
+    let full = Layout::full(grid, helex::dfg::groups_used(&dfgs));
+
+    let mut co = Coordinator::new(ExperimentConfig {
+        l_test_base: if quick { 250 } else { 500 },
+        verbose: true,
+        ..Default::default()
+    });
+
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    if let Some(r) = co.run_helex(&dfgs, grid) {
+        let (a, m) = fig11_metrics(&r.full_layout, &r.best_layout);
+        rows.push(("HeLEx".into(), a, m, total_reduction_pct(&r.full_layout, &r.best_layout)));
+    }
+    if let Some(r) = revamp::run(&dfgs, &full, &co.mapper) {
+        let (a, m) = fig11_metrics(&full, &r.layout);
+        rows.push(("REVAMP-like".into(), a, m, total_reduction_pct(&full, &r.layout)));
+    }
+    let hcfg = heta_bl::HetaConfig {
+        budget: if quick { 150 } else { 600 },
+        ..Default::default()
+    };
+    if let Some(r) = heta_bl::run(&dfgs, &full, &co.mapper, &co.area, &hcfg) {
+        let (a, m) = fig11_metrics(&full, &r.layout);
+        rows.push(("HETA-like".into(), a, m, total_reduction_pct(&full, &r.layout)));
+    }
+
+    println!("{:<14} {:>12} {:>10} {:>10}", "framework", "Add/Sub red%", "Mult red%", "total%");
+    for (name, a, m, t) in &rows {
+        println!("{name:<14} {a:>12.1} {m:>10.1} {t:>10.1}");
+    }
+    // the paper's claim: HeLEx removes up to 2.6x more excess compute
+    if let (Some(helex_row), Some(best_bl)) = (
+        rows.iter().find(|r| r.0 == "HeLEx"),
+        rows.iter().filter(|r| r.0 != "HeLEx").map(|r| r.3).fold(None, |m: Option<f64>, v| {
+            Some(m.map_or(v, |x| x.max(v)))
+        }),
+    ) {
+        if best_bl > 0.0 {
+            println!(
+                "\nHeLEx removes {:.2}x the excess compute of the best baseline",
+                helex_row.3 / best_bl
+            );
+        }
+    }
+}

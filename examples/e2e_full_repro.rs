@@ -1,0 +1,98 @@
+//! End-to-end driver: the full HeLEx reproduction workload.
+//!
+//! Runs the complete pipeline on the paper's primary experiment — the 12
+//! Table II DFGs against the target CGRA sizes — through all system
+//! layers: DFG generation, RodMap-like mapping, heatmap construction,
+//! OPSG + GSG branch-and-bound with XLA-batched scoring via PJRT, cost
+//! models, posteriori FIFO pruning — and reports the paper's headline
+//! metrics (instance/area/power reduction, gap to theoretical minimum).
+//!
+//! ```sh
+//! cargo run --release --example e2e_full_repro -- --quick   # 3 sizes
+//! cargo run --release --example e2e_full_repro              # all 9 sizes
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use helex::cgra::Grid;
+use helex::coordinator::{Coordinator, ExperimentConfig};
+use helex::cost::reduction_pct;
+use helex::dfg::benchmarks;
+use helex::search::posteriori;
+use helex::util::Stopwatch;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: Vec<(usize, usize)> = if quick {
+        vec![(10, 10), (11, 13), (12, 12)]
+    } else {
+        benchmarks::PAPER_SIZES.to_vec()
+    };
+    let dfgs = benchmarks::all();
+    println!("== HeLEx end-to-end reproduction ==");
+    println!("12 DFGs (Table II) x {} CGRA sizes\n", sizes.len());
+
+    let mut co = Coordinator::new(ExperimentConfig {
+        l_test_base: if quick { 300 } else { 600 },
+        verbose: true,
+        ..Default::default()
+    });
+    if let Some(err) = co.self_check() {
+        println!("XLA/native scorer self-check: max rel err {err:.2e} ✓");
+    } else {
+        println!("(XLA scorer unavailable — native scoring; run `make artifacts`)");
+    }
+
+    let sw = Stopwatch::start();
+    let (mut s_inst, mut s_area, mut s_pow, mut s_gap, mut n) = (0.0, 0.0, 0.0, 0.0, 0);
+    let mut heatmap_starts = 0;
+    for (r, c) in sizes.iter().copied() {
+        let grid = Grid::new(r, c);
+        let Some(res) = co.run_helex(&dfgs, grid) else {
+            println!("{r}x{c}: infeasible (should not happen at paper sizes)");
+            continue;
+        };
+        let inst_red = helex::metrics::total_reduction_pct(&res.full_layout, &res.best_layout);
+        let a_red = reduction_pct(
+            co.area.layout_cost(&res.full_layout),
+            co.area.layout_cost(&res.best_layout),
+        );
+        let p_red = reduction_pct(
+            co.power.layout_cost(&res.full_layout),
+            co.power.layout_cost(&res.best_layout),
+        );
+        // gap to theoretical minimum (Fig 6)
+        let full_cost = co.area.layout_cost(&res.full_layout);
+        let tmin = co.area.theoretical_min_cost(&res.full_layout, &res.min_insts);
+        let gap = 100.0 * (res.best_cost - tmin) / (full_cost - tmin);
+        // posteriori FIFO pruning (Table VI)
+        let fifo = posteriori::fifo_analysis(&dfgs, &res.best_layout, &res.full_layout, &co.mapper);
+        println!(
+            "{r}x{c}{}: insts -{inst_red:.1}%  area -{a_red:.1}%  power -{p_red:.1}%  gap-to-min {gap:.1}%  S_tst {}  {}s{}",
+            if res.stats.heatmap_used { "" } else { "*" },
+            res.stats.tested,
+            helex::util::fmt_f(res.stats.t_total(), 1),
+            fifo.map(|f| format!("  (+{:.1}%A from {} unused FIFOs)", f.area_impr_pct, f.unused))
+                .unwrap_or_default(),
+        );
+        if res.stats.heatmap_used {
+            heatmap_starts += 1;
+        }
+        s_inst += inst_red;
+        s_area += a_red;
+        s_pow += p_red;
+        s_gap += gap;
+        n += 1;
+    }
+    let n = n as f64;
+    println!("\n== headline metrics (paper values in parentheses) ==");
+    println!("avg instance reduction : {:.1}%  (paper: 68.7%)", s_inst / n);
+    println!("avg area reduction     : {:.1}%  (paper: 69.4%)", s_area / n);
+    println!("avg power reduction    : {:.1}%  (paper: 52.3%)", s_pow / n);
+    println!("avg gap to theor. min  : {:.1}%  (paper: 6.2%)", s_gap / n);
+    println!("heatmap-start sizes    : {heatmap_starts}/{} (paper: 4/9)", n as usize);
+    println!("total wall time        : {:.1}s", sw.secs());
+    if let Some(s) = co.scorer.as_ref() {
+        println!("PJRT scorer executions : {}", s.calls);
+    }
+}

@@ -1,0 +1,66 @@
+//! Domain example: designing one CGRA for a multi-kernel image pipeline.
+//!
+//! A camera ISP-style pipeline runs several filter kernels back to back
+//! (blur -> gradient -> suppression -> conversion). A spatially-configured
+//! CGRA executes one kernel at a time and is reconfigured between
+//! kernels, so the chip must carry a functional layout that every kernel
+//! maps onto. This example designs that layout with HeLEx and then
+//! "deploys" it: maps each pipeline stage, reports per-stage latency, and
+//! shows the area saved relative to a homogeneous chip.
+//!
+//! ```sh
+//! cargo run --release --example image_pipeline
+//! ```
+
+use helex::cgra::Grid;
+use helex::coordinator::{Coordinator, ExperimentConfig};
+use helex::cost::reduction_pct;
+use helex::dfg::benchmarks;
+
+fn main() {
+    // the pipeline: Gaussian blur -> Sobel -> NMS -> RGB conversion -> box
+    let stages = ["GB", "SOB", "NMS", "RGB", "BOX"];
+    let dfgs: Vec<_> = stages.iter().map(|n| benchmarks::benchmark(n)).collect();
+    let grid = Grid::new(9, 9);
+    println!("image pipeline: {}", stages.join(" -> "));
+    println!("target chip: {grid}\n");
+
+    let mut co = Coordinator::new(ExperimentConfig {
+        l_test_base: 300,
+        ..Default::default()
+    });
+    let r = co.run_helex(&dfgs, grid).expect("pipeline must map on 9x9");
+
+    println!("-- design phase --");
+    println!(
+        "homogeneous chip cost {:.1}, heterogeneous {:.1} ({:.1}% area saved)",
+        co.area.layout_cost(&r.full_layout),
+        r.best_cost,
+        reduction_pct(co.area.layout_cost(&r.full_layout), r.best_cost)
+    );
+    let insts = r.best_layout.compute_group_instances();
+    print!("provisioned ALUs:");
+    for g in helex::ops::COMPUTE_GROUPS {
+        if insts[g.index()] > 0 {
+            print!(" {}x{}", insts[g.index()], g.name());
+        }
+    }
+    println!("\n");
+
+    println!("-- deployment phase: per-stage mapping on the final chip --");
+    for (di, d) in dfgs.iter().enumerate() {
+        let full_map = co.mapper.map(d, &r.full_layout).expect("full maps");
+        let m = &r.final_mappings[di];
+        println!(
+            "{:<4} latency {:>3} cycles (vs {:>3} on homogeneous, {:.2}x), {} cells reserved for routing",
+            d.name,
+            m.latency(d),
+            full_map.latency(d),
+            m.latency(d) as f64 / full_map.latency(d) as f64,
+            m.reserved.len()
+        );
+    }
+    println!("\nthroughput note: pipelined execution is unaffected by the latency\n\
+              delta (Section IV-I) — the mapper balances DFG paths, so only\n\
+              fill latency changes.");
+}

@@ -1,0 +1,68 @@
+"""AOT lowering: Layer-2 JAX graphs -> HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the rust coordinator loads
+the artifacts with ``HloModuleProto::from_text_file`` and never invokes
+Python again.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.heatmap import CELLS_PAD, DFGS_PAD, GROUPS_PAD
+from compile.kernels.layout_cost import BATCH
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (with return_tuple=True so
+    the rust side can unwrap uniformly with to_tupleN)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_score_layouts() -> str:
+    spec = jax.ShapeDtypeStruct((BATCH, CELLS_PAD, GROUPS_PAD), jax.numpy.float32)
+    gspec = jax.ShapeDtypeStruct((GROUPS_PAD,), jax.numpy.float32)
+    bspec = jax.ShapeDtypeStruct((1,), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.score_layouts).lower(spec, gspec, bspec))
+
+
+def lower_heatmap_stats() -> str:
+    spec = jax.ShapeDtypeStruct((DFGS_PAD, CELLS_PAD, GROUPS_PAD), jax.numpy.float32)
+    return to_hlo_text(jax.jit(model.heatmap_stats).lower(spec))
+
+
+ARTIFACTS = {
+    "layout_cost.hlo.txt": lower_score_layouts,
+    "heatmap_stats.hlo.txt": lower_heatmap_stats,
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        text = lower()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

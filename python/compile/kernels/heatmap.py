@@ -1,0 +1,55 @@
+"""Layer-1 Pallas kernel: heatmap overlay (paper Section III-E).
+
+Given per-DFG usage bitmaps ``mappings[D, C, G]`` (1 where DFG d placed an
+op of group g on cell c), computes the heatmap layout union
+
+    heat[c, g] = max_d mappings[d, c, g]
+
+The per-group theoretical minimum instance counts (Section III-D),
+``min_insts[g] = max_d sum_c mappings[d, c, g]``, are derived in Layer 2
+from the same input.
+
+The cell dimension is tiled; each block reduces over the (small, padded)
+DFG dimension in VMEM.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DFGS_PAD = 16
+CELLS_PAD = 512
+GROUPS_PAD = 8
+BLOCK_C = 128
+
+
+def _heatmap_kernel(mappings_ref, out_ref):
+    """One cell tile: out[c, g] = max_d mappings[d, c, g]."""
+    block = mappings_ref[...]          # [D, BLOCK_C, G]
+    out_ref[...] = jnp.max(block, axis=0)
+
+
+@partial(jax.jit, static_argnames=("block_c",))
+def heatmap_union(mappings, block_c=BLOCK_C):
+    """Union of per-DFG usage bitmaps.
+
+    Args:
+      mappings: f32[D, C, G] 0/1 usage bitmaps (zero-padded).
+      block_c:  cell tile size (must divide C).
+
+    Returns:
+      f32[C, G] union bitmap.
+    """
+    d, c, g = mappings.shape
+    assert c % block_c == 0, f"cells {c} not divisible by block {block_c}"
+    grid = (c // block_c,)
+    return pl.pallas_call(
+        _heatmap_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((d, block_c, g), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((block_c, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, g), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(mappings)

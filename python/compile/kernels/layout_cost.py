@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: batched layout cost (paper Equation 1).
+
+Scores a batch of candidate functional layouts in one shot. A layout is a
+``[C, G]`` 0/1 bitmap over (cell, operation-group); its cost is
+
+    cost[b] = base + sum_{c,g} layouts[b, c, g] * gcosts[g]
+
+where ``base = N_t * (cost(empty) + cost(FIFOs))`` is passed in from the
+caller (it depends only on the grid, not the candidate).
+
+TPU mapping (DESIGN.md §4): the batch dimension is tiled into VMEM-sized
+blocks (``BLOCK_B x C x G`` fits comfortably: 32*512*8 f32 = 512 KiB);
+within a block the reduction is a broadcast-multiply + full reduction over
+(c, g), which XLA lowers to an MXU-friendly contraction. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+the artifact must run inside the rust coordinator's CPU client.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes — must match rust/src/runtime/mod.rs constants.
+BATCH = 256
+CELLS_PAD = 512
+GROUPS_PAD = 8
+BLOCK_B = 32
+
+
+def _cost_kernel(layouts_ref, gcosts_ref, out_ref):
+    """One batch tile: out[b] = sum_{c,g} layouts[b,c,g] * gcosts[g]."""
+    block = layouts_ref[...]                      # [BLOCK_B, C, G]
+    g = gcosts_ref[...]                           # [G]
+    weighted = block * g[None, None, :]           # broadcast over b, c
+    out_ref[...] = jnp.sum(weighted, axis=(1, 2))  # [BLOCK_B]
+
+
+@partial(jax.jit, static_argnames=("block_b",))
+def layout_cost(layouts, gcosts, base, block_b=BLOCK_B):
+    """Batched Equation-1 cost.
+
+    Args:
+      layouts: f32[B, C, G] 0/1 bitmaps (zero-padded).
+      gcosts:  f32[G] per-group costs (zero-padded).
+      base:    f32[1] grid-constant base cost.
+      block_b: batch tile size (must divide B).
+
+    Returns:
+      f32[B] costs.
+    """
+    b, c, g = layouts.shape
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+    grid = (b // block_b,)
+    costs = pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, c, g), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(layouts, gcosts)
+    return costs + base[0]

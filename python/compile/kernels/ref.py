@@ -1,0 +1,21 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suite compares against.
+"""
+
+import jax.numpy as jnp
+
+
+def layout_cost_ref(layouts, gcosts, base):
+    """Equation 1: cost[b] = base + sum_{c,g} layouts[b,c,g] * gcosts[g]."""
+    return jnp.einsum("bcg,g->b", layouts, gcosts) + base[0]
+
+
+def heatmap_union_ref(mappings):
+    """heat[c,g] = max_d mappings[d,c,g]."""
+    return jnp.max(mappings, axis=0)
+
+
+def min_insts_ref(mappings):
+    """min_insts[g] = max_d sum_c mappings[d,c,g] (Section III-D)."""
+    return jnp.max(jnp.sum(mappings, axis=1), axis=0)

@@ -1,0 +1,35 @@
+"""Layer-2 JAX compute graphs, calling the Layer-1 Pallas kernels.
+
+Two entry points, both AOT-lowered by ``aot.py``:
+
+* :func:`score_layouts` — batched Equation-1 layout scoring (the BB
+  search's queue-fill hot path in the rust coordinator).
+* :func:`heatmap_stats` — heatmap union + theoretical minimum instance
+  counts (Sections III-D/E).
+
+Python exists only on this compile path; the rust coordinator executes
+the lowered artifacts through PJRT.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.heatmap import heatmap_union
+from compile.kernels.layout_cost import layout_cost
+
+
+def score_layouts(layouts, gcosts, base):
+    """cost f32[B] for layout bitmaps f32[B,C,G]; returns a 1-tuple (the
+    rust loader unwraps with ``to_tuple1``)."""
+    return (layout_cost(layouts, gcosts, base),)
+
+
+def heatmap_stats(mappings):
+    """(heatmap f32[C,G], min_insts f32[G]) for usage bitmaps f32[D,C,G].
+
+    The union comes from the Pallas kernel; the per-group minimum
+    instance counts are the L2 glue on the same input:
+    ``min_insts[g] = max_d sum_c mappings[d,c,g]``.
+    """
+    heat = heatmap_union(mappings)
+    min_insts = jnp.max(jnp.sum(mappings, axis=1), axis=0)
+    return (heat, min_insts)

@@ -1,0 +1,97 @@
+"""AOT lowering tests: the artifacts must be valid HLO *text* that XLA's
+parser round-trips (the property the rust loader depends on:
+``HloModuleProto::from_text_file`` -> compile -> execute).
+
+Actual PJRT execution numerics are covered on the rust side by
+``rust/tests/runtime_integration.rs`` (and by the coordinator's startup
+self-check, which cross-checks the XLA scorer against the native cost
+model).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.heatmap import CELLS_PAD, DFGS_PAD, GROUPS_PAD
+from compile.kernels.layout_cost import BATCH
+
+
+def test_artifact_registry_names():
+    assert set(aot.ARTIFACTS) == {"layout_cost.hlo.txt", "heatmap_stats.hlo.txt"}
+
+
+def test_score_layouts_lowers_to_hlo_text():
+    text = aot.lower_score_layouts()
+    assert "HloModule" in text
+    assert f"f32[{BATCH},{CELLS_PAD},{GROUPS_PAD}]" in text
+
+
+def test_heatmap_lowers_to_hlo_text():
+    text = aot.lower_heatmap_stats()
+    assert "HloModule" in text
+    assert f"f32[{DFGS_PAD},{CELLS_PAD},{GROUPS_PAD}]" in text
+
+
+def test_hlo_text_parses_back():
+    """The exact parser the rust loader uses must accept the text."""
+    for lower in aot.ARTIFACTS.values():
+        hm = xc._xla.hlo_module_from_text(lower())
+        proto = hm.as_serialized_hlo_module_proto()
+        assert len(proto) > 0
+
+
+def test_score_layouts_output_is_tuple1():
+    """return_tuple=True must make the root a 1-tuple (rust: to_tuple1)."""
+    text = aot.lower_score_layouts()
+    assert f"(f32[{BATCH}]" in text.splitlines()[0] or "tuple" in text
+
+
+def test_heatmap_output_is_tuple2():
+    text = aot.lower_heatmap_stats()
+    first = text.splitlines()[0]
+    assert f"f32[{CELLS_PAD},{GROUPS_PAD}]" in first
+    assert f"f32[{GROUPS_PAD}]" in first
+
+
+def test_jit_outputs_match_eager_model():
+    """The jitted L2 graph equals the eager L2 graph (fusion safety)."""
+    rng = np.random.default_rng(9)
+    layouts = jnp.asarray(
+        (rng.random((BATCH, CELLS_PAD, GROUPS_PAD)) < 0.2).astype(np.float32)
+    )
+    gcosts = jnp.asarray((rng.random(GROUPS_PAD) * 5).astype(np.float32))
+    base = jnp.asarray(np.array([10.0], np.float32))
+    eager = model.score_layouts(layouts, gcosts, base)[0]
+    jitted = jax.jit(model.score_layouts)(layouts, gcosts, base)[0]
+    np.testing.assert_allclose(eager, jitted, rtol=1e-5)
+    # and both equal the oracle
+    want = ref.layout_cost_ref(np.asarray(layouts), np.asarray(gcosts), np.asarray(base))
+    np.testing.assert_allclose(np.asarray(jitted), want, rtol=1e-4)
+
+
+def test_heatmap_jit_matches_refs():
+    rng = np.random.default_rng(11)
+    m = (rng.random((DFGS_PAD, CELLS_PAD, GROUPS_PAD)) < 0.05).astype(np.float32)
+    heat, mins = jax.jit(model.heatmap_stats)(jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(heat), np.asarray(ref.heatmap_union_ref(m)))
+    np.testing.assert_allclose(np.asarray(mins), np.asarray(ref.min_insts_ref(m)))
+
+
+def test_main_writes_artifacts(tmp_path):
+    import subprocess, sys, os
+
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+        capture_output=True,
+        text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr
+    for name in aot.ARTIFACTS:
+        assert (tmp_path / name).exists()
+        assert "HloModule" in (tmp_path / name).read_text()[:200]

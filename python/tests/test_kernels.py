@@ -1,0 +1,167 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes and value distributions; every comparison is
+assert_allclose against ref.py. Kernels run under interpret=True (the
+only mode the CPU PJRT client can execute).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.heatmap import heatmap_union
+from compile.kernels.layout_cost import layout_cost
+
+
+def rand_layouts(rng, b, c, g, density=0.3):
+    return (rng.random((b, c, g)) < density).astype(np.float32)
+
+
+# ---------------------------------------------------------------- layout_cost
+
+class TestLayoutCost:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        layouts = rand_layouts(rng, 32, 64, 8)
+        gcosts = rng.random(8).astype(np.float32) * 10
+        base = np.array([123.0], dtype=np.float32)
+        got = layout_cost(jnp.asarray(layouts), jnp.asarray(gcosts), jnp.asarray(base))
+        want = ref.layout_cost_ref(layouts, gcosts, base)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_zero_layouts_cost_base(self):
+        layouts = jnp.zeros((32, 64, 8), jnp.float32)
+        gcosts = jnp.ones(8, jnp.float32)
+        base = jnp.array([42.0], jnp.float32)
+        got = layout_cost(layouts, gcosts, base)
+        np.testing.assert_allclose(got, np.full(32, 42.0), rtol=1e-6)
+
+    def test_single_instance_costs_its_group(self):
+        layouts = np.zeros((32, 64, 8), np.float32)
+        layouts[3, 10, 5] = 1.0
+        gcosts = np.arange(8, dtype=np.float32)
+        base = np.array([0.0], np.float32)
+        got = np.asarray(layout_cost(jnp.asarray(layouts), jnp.asarray(gcosts),
+                                     jnp.asarray(base)))
+        assert got[3] == pytest.approx(5.0)
+        assert got[0] == pytest.approx(0.0)
+
+    def test_table_iii_costs(self):
+        """Score a full 10x10 layout with the paper's Table III costs."""
+        # 64 compute cells, 5 groups set (indices 0,1,2,4,5; Mem=3 empty)
+        layouts = np.zeros((32, 128, 8), np.float32)
+        for cell in range(64):
+            for g in (0, 1, 2, 4, 5):
+                layouts[0, cell, g] = 1.0
+        gcosts = np.array([1.0, 17.0, 4.4, 0.0, 6.2, 12.3, 0, 0], np.float32)
+        base = np.array([64 * 9.5], np.float32)
+        got = np.asarray(layout_cost(jnp.asarray(layouts), jnp.asarray(gcosts),
+                                     jnp.asarray(base)))
+        # Equation 1: 64*9.5 + 64*40.9 = 3225.6
+        assert got[0] == pytest.approx(64 * 9.5 + 64 * 40.9, rel=1e-6)
+        assert got[1] == pytest.approx(64 * 9.5, rel=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 4),
+        c=st.sampled_from([8, 32, 64, 128]),
+        g=st.sampled_from([4, 8]),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b_blocks, c, g, density, seed):
+        rng = np.random.default_rng(seed)
+        b = 8 * b_blocks
+        layouts = rand_layouts(rng, b, c, g, density)
+        gcosts = (rng.random(g) * 20).astype(np.float32)
+        base = rng.random(1).astype(np.float32) * 100
+        got = layout_cost(
+            jnp.asarray(layouts), jnp.asarray(gcosts), jnp.asarray(base), block_b=8
+        )
+        want = ref.layout_cost_ref(layouts, gcosts, base)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_indivisible_batch(self):
+        with pytest.raises(AssertionError):
+            layout_cost(
+                jnp.zeros((33, 8, 8), jnp.float32),
+                jnp.zeros(8, jnp.float32),
+                jnp.zeros(1, jnp.float32),
+                block_b=32,
+            )
+
+
+# --------------------------------------------------------------- heatmap
+
+class TestHeatmapUnion:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(1)
+        m = rand_layouts(rng, 16, 128, 8)
+        got = heatmap_union(jnp.asarray(m))
+        want = ref.heatmap_union_ref(m)
+        np.testing.assert_allclose(got, want)
+
+    def test_union_semantics(self):
+        m = np.zeros((4, 128, 8), np.float32)
+        m[0, 5, 2] = 1.0
+        m[3, 5, 2] = 1.0
+        m[2, 7, 1] = 1.0
+        got = np.asarray(heatmap_union(jnp.asarray(m)))
+        assert got[5, 2] == 1.0
+        assert got[7, 1] == 1.0
+        assert got.sum() == 2.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        d=st.integers(1, 16),
+        c_blocks=st.integers(1, 4),
+        g=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, d, c_blocks, g, seed):
+        rng = np.random.default_rng(seed)
+        c = 32 * c_blocks
+        m = rand_layouts(rng, d, c, g, 0.2)
+        got = heatmap_union(jnp.asarray(m), block_c=32)
+        want = ref.heatmap_union_ref(m)
+        np.testing.assert_allclose(got, want)
+
+
+# --------------------------------------------------------- L2 model glue
+
+class TestModel:
+    def test_score_layouts_returns_tuple(self):
+        from compile import model
+
+        out = model.score_layouts(
+            jnp.zeros((32, 64, 8), jnp.float32),
+            jnp.zeros(8, jnp.float32),
+            jnp.zeros(1, jnp.float32),
+        )
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (32,)
+
+    def test_heatmap_stats_min_insts(self):
+        from compile import model
+
+        m = np.zeros((4, 128, 8), np.float32)
+        # DFG 0 uses 3 Arith cells; DFG 1 uses 5 Arith cells
+        for cell in range(3):
+            m[0, cell, 0] = 1.0
+        for cell in range(5):
+            m[1, 40 + cell, 0] = 1.0
+        heat, mins = model.heatmap_stats(jnp.asarray(m))
+        np.testing.assert_allclose(mins, ref.min_insts_ref(m))
+        assert float(mins[0]) == 5.0  # max over DFGs
+        assert float(np.asarray(heat).sum()) == 8.0  # disjoint cells union
+
+    def test_heatmap_stats_shapes(self):
+        from compile import model
+
+        m = jnp.zeros((16, 512, 8), jnp.float32)
+        heat, mins = model.heatmap_stats(m)
+        assert heat.shape == (512, 8)
+        assert mins.shape == (8,)

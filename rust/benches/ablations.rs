@@ -1,0 +1,75 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! heatmap start vs full start, GSG on/off, reserve-on-demand on/off,
+//! routing negotiation depth. Each reports both wall time and result
+//! quality (final cost), because the trade-off is the point.
+//!
+//! ```sh
+//! cargo bench --bench ablations
+//! ```
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::dfg::benchmarks;
+use helex::mapper::MapperConfig;
+use helex::search::SearchConfig;
+use helex::util::bench::Harness;
+use helex::Mapper;
+
+fn main() {
+    let mut h = Harness::from_args();
+    let cost = CostModel::area();
+    let dfgs = benchmarks::dfg_set("S3");
+    let grid = Grid::new(10, 10);
+    let mapper = Mapper::default();
+    let base = SearchConfig { l_test: 150, gsg_passes: 1, ..Default::default() };
+
+    println!("== search ablations (S3 @ 10x10, L_test=150) ==");
+    for (name, cfg) in [
+        ("search::heatmap+gsg", base.clone()),
+        ("search::no_heatmap", SearchConfig { use_heatmap: false, ..base.clone() }),
+        ("search::no_gsg", SearchConfig { run_gsg: false, ..base.clone() }),
+        (
+            "search::no_heatmap_no_gsg",
+            SearchConfig { use_heatmap: false, run_gsg: false, ..base.clone() },
+        ),
+    ] {
+        let mut final_cost = 0.0;
+        h.bench_once(name, || {
+            let r = helex::search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+            final_cost = r.best_cost;
+        });
+        println!("    -> final cost {final_cost:.1}");
+    }
+
+    println!("\n== mapper ablations (MD @ 10x10) ==");
+    let d = benchmarks::benchmark("MD");
+    let full = Layout::full(grid, d.groups_used());
+    for (name, mcfg) in [
+        ("mapper::default", MapperConfig::default()),
+        (
+            "mapper::no_reserve",
+            MapperConfig { max_reserves: 0, ..MapperConfig::default() },
+        ),
+        (
+            "mapper::route_iters_4",
+            MapperConfig { route_iters: 4, ..MapperConfig::default() },
+        ),
+        (
+            "mapper::route_iters_24",
+            MapperConfig { route_iters: 24, ..MapperConfig::default() },
+        ),
+        (
+            "mapper::single_attempt",
+            MapperConfig { placement_attempts: 1, ..MapperConfig::default() },
+        ),
+    ] {
+        let m = Mapper::new(mcfg);
+        let mut success = false;
+        h.bench(name, || {
+            let r = m.map(&d, &full);
+            success = r.is_some();
+            r
+        });
+        println!("    -> success: {success}");
+    }
+}

@@ -1,0 +1,47 @@
+//! Mapper micro-benches: the search's true hot path (thousands of map
+//! attempts per run). Tracked across the perf pass in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo bench --bench mapper
+//! ```
+
+use helex::cgra::{Grid, Layout};
+use helex::dfg::{benchmarks, heta};
+use helex::util::bench::Harness;
+use helex::Mapper;
+
+fn main() {
+    let mut h = Harness::from_args();
+    let mapper = Mapper::default();
+
+    // individual DFGs, spanning sizes
+    for (name, r, c) in [
+        ("SOB", 5, 5),
+        ("GB", 7, 7),
+        ("NMS", 9, 9),
+        ("FFT", 10, 10),
+        ("MD", 10, 10),
+        ("SAD", 12, 12),
+    ] {
+        let d = benchmarks::benchmark(name);
+        let l = Layout::full(Grid::new(r, c), d.groups_used());
+        h.bench(&format!("map::{name}_{r}x{c}"), || mapper.map(&d, &l));
+    }
+
+    // the testLayout composite (all 12 DFGs), the unit the BB search pays
+    let dfgs = benchmarks::all();
+    let full = Layout::full(Grid::new(10, 10), helex::dfg::groups_used(&dfgs));
+    h.bench("test_layout::12dfgs_10x10", || mapper.test_layout(&dfgs, &full));
+
+    // heterogeneous layout (harder placement): heatmap of the 12 DFGs
+    if let Some(heat) = helex::search::heatmap::overlay(&dfgs, &full, &mapper) {
+        h.bench("test_layout::12dfgs_10x10_heatmap", || {
+            mapper.test_layout(&dfgs, &heat)
+        });
+    }
+
+    // the 20x20 comparison grid
+    let hdfgs = heta::all();
+    let big = Layout::full(Grid::new(20, 20), helex::dfg::groups_used(&hdfgs));
+    h.bench("test_layout::8heta_20x20", || mapper.test_layout(&hdfgs, &big));
+}

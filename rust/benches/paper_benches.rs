@@ -1,0 +1,39 @@
+//! End-to-end benches: one per paper table/figure. Each regenerates the
+//! experiment at bench scale and reports its wall time (criterion is not
+//! vendored in this image; `util::bench::Harness` provides the harness).
+//!
+//! ```sh
+//! cargo bench --bench paper_benches             # all
+//! cargo bench --bench paper_benches -- fig3     # filter
+//! ```
+
+use helex::coordinator::{experiments, Coordinator, ExperimentConfig};
+use helex::util::bench::Harness;
+
+fn co() -> Coordinator {
+    Coordinator::new(ExperimentConfig {
+        l_test_base: 120,
+        gsg_passes: 1,
+        verbose: false,
+        ..Default::default()
+    })
+}
+
+fn main() {
+    let mut h = Harness::from_args();
+    println!("== paper experiment benches (bench-scale budgets) ==");
+
+    // Each experiment is measured once end-to-end: these are
+    // minutes-scale workloads, not microbenchmarks.
+    for exp in [
+        "fig3", "fig4", "table4", "fig5", "fig6", "table5", "table6", "fig7", "table8",
+        "fig9", "fig10", "fig11",
+    ] {
+        h.bench_once(&format!("exp::{exp}"), || {
+            let mut c = co();
+            // suppress experiment stdout: route results to a sink table
+            experiments::run_experiment(&mut c, exp, true).expect("experiment runs");
+        });
+    }
+    println!("\n{} experiments benchmarked", h.results.len());
+}

@@ -1,0 +1,64 @@
+//! Scorer benches: XLA/PJRT batched scoring vs the native evaluator, and
+//! the end-to-end search with/without the XLA scorer. This is the
+//! ablation for the runtime layer (EXPERIMENTS.md §Perf).
+//!
+//! ```sh
+//! cargo bench --bench scorer
+//! ```
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::ops::{GroupSet, NUM_GROUPS};
+use helex::runtime::{artifacts_dir, Scorer, BATCH};
+use helex::search::{BatchScorer, NativeScorer};
+use helex::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::from_args();
+    let cost = CostModel::area();
+    let grid = Grid::new(10, 10);
+
+    // workload: one full BATCH of candidate instance vectors
+    let vectors: Vec<[usize; NUM_GROUPS]> = (0..BATCH)
+        .map(|i| [i % 64, i % 7, i % 13, 0, i % 11, i % 5])
+        .collect();
+
+    let mut native = NativeScorer { cost: cost.clone() };
+    h.bench("native_scorer::score_256_vectors", || {
+        native.score(grid.num_compute(), &vectors)
+    });
+
+    match Scorer::load(&artifacts_dir(), &cost) {
+        Ok(mut s) => {
+            h.bench("xla_scorer::score_256_vectors", || {
+                s.score(grid.num_compute(), &vectors)
+            });
+            // cell-level layout scoring (the exact-representation path)
+            let full = Layout::full(grid, GroupSet::all_compute());
+            let layouts: Vec<Layout> = (0..64)
+                .map(|i| {
+                    let cell = grid.compute_cells().nth(i % grid.num_compute()).unwrap();
+                    full.without_group(cell, helex::ops::COMPUTE_GROUPS[i % 5])
+                })
+                .collect();
+            h.bench("xla_scorer::score_64_layouts", || {
+                s.score_layouts(&layouts).unwrap()
+            });
+            println!("\n(total PJRT executions this run: {})", s.calls);
+        }
+        Err(e) => println!("xla scorer skipped: {e}"),
+    }
+
+    // end-to-end search ablation: native vs XLA scoring
+    let dfgs = vec![helex::dfg::benchmarks::benchmark("NMS")];
+    let mapper = helex::Mapper::default();
+    let cfg = helex::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
+    h.bench_once("search::nms_8x8_native_scoring", || {
+        helex::search::run(&dfgs, Grid::new(8, 8), &mapper, &cost, &cfg, None)
+    });
+    if let Ok(mut s) = Scorer::load(&artifacts_dir(), &cost) {
+        h.bench_once("search::nms_8x8_xla_scoring", || {
+            helex::search::run(&dfgs, Grid::new(8, 8), &mapper, &cost, &cfg, Some(&mut s))
+        });
+    }
+}

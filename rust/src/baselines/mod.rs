@@ -1,0 +1,55 @@
+//! Comparator frameworks for Section IV-J (Fig 11).
+//!
+//! * [`revamp`] — REVAMP-like one-shot hotspot-index layout. The paper
+//!   itself computes REVAMP's result by following the procedure in [4]
+//!   without running the framework; we do the same.
+//! * [`heta`] — HETA-like Bayesian-optimization-flavoured iterative
+//!   remover: surrogate-scored random removal proposals validated with
+//!   the mapper.
+
+pub mod heta;
+pub mod revamp;
+
+use crate::cgra::Layout;
+use crate::ops::{OpGroup, NUM_GROUPS};
+
+/// Reduction in instances of specific groups vs a full layout, in %, as
+/// reported in Fig 11 (Add/Sub ≈ Arith, Mult).
+pub fn reduction_by_group(full: &Layout, hetero: &Layout) -> [f64; NUM_GROUPS] {
+    crate::metrics::group_reduction_pct(full, hetero)
+}
+
+/// Fig 11 metric pair: (Add/Sub reduction %, Mult reduction %).
+pub fn fig11_metrics(full: &Layout, hetero: &Layout) -> (f64, f64) {
+    let r = reduction_by_group(full, hetero);
+    (r[OpGroup::Arith.index()], r[OpGroup::Mult.index()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::ops::GroupSet;
+
+    #[test]
+    fn fig11_metrics_extract_arith_and_mult() {
+        let full = Layout::full(
+            Grid::new(5, 5),
+            GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mult]),
+        );
+        let mut h = full.clone();
+        let cells: Vec<_> = h.grid.compute_cells().collect();
+        // remove Arith from 3 of 9 cells, Mult from all 9
+        for (i, c) in cells.iter().enumerate() {
+            let mut s = h.support(*c);
+            if i < 3 {
+                s.remove(OpGroup::Arith);
+            }
+            s.remove(OpGroup::Mult);
+            h.set_support(*c, s);
+        }
+        let (a, m) = fig11_metrics(&full, &h);
+        assert!((a - 100.0 * 3.0 / 9.0).abs() < 1e-9);
+        assert!((m - 100.0).abs() < 1e-9);
+    }
+}

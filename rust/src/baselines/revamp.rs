@@ -1,0 +1,78 @@
+//! REVAMP-like hotspot-index baseline (Section IV-J, [4]).
+//!
+//! REVAMP's functional layout is "one-shot": map the DFG set once on the
+//! full homogeneous CGRA, build a *hotspot index* — per PE, the maximum
+//! number of operations of each kind any single DFG placed there — and
+//! provision each PE with exactly the op kinds its hotspot index shows.
+//! The layout is not refined further (only memory/interconnect are, which
+//! are outside this comparison). This is exactly the paper's own
+//! procedure for obtaining REVAMP numbers without running REVAMP.
+
+use crate::cgra::Layout;
+use crate::dfg::Dfg;
+use crate::mapper::Mapper;
+use crate::ops::GroupSet;
+
+/// Compute the REVAMP-style hotspot layout. Returns `None` if some DFG
+/// cannot map on the full layout.
+pub fn hotspot_layout(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<Layout> {
+    // The hotspot index over *kinds* collapses to the same union-overlay
+    // the heatmap uses (spatial CGRA: each cell hosts at most one op per
+    // DFG, so the per-kind max over DFGs is 0/1 per cell).
+    let mut layout = Layout::empty(full.grid);
+    for dfg in dfgs {
+        let m = mapper.map(dfg, full)?;
+        for (n, op) in dfg.nodes.iter().enumerate() {
+            if op.is_memory() {
+                continue;
+            }
+            let cell = m.node_cell[n];
+            let s = layout.support(cell).with(op.group());
+            layout.set_support(cell, s);
+        }
+    }
+    Some(layout)
+}
+
+/// Full REVAMP-like baseline result: the hotspot layout, *not* verified
+/// by re-mapping (REVAMP is one-shot; the paper notes the hotspot layout
+/// "remains static and is not further optimized").
+pub struct RevampResult {
+    pub layout: Layout,
+}
+
+pub fn run(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<RevampResult> {
+    Some(RevampResult { layout: hotspot_layout(dfgs, full, mapper)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::heta;
+
+    #[test]
+    fn hotspot_layout_is_subset_and_covers_needs() {
+        let dfgs = heta::all();
+        let full = Layout::full(Grid::new(20, 20), crate::dfg::groups_used(&dfgs));
+        let r = run(&dfgs, &full, &Mapper::default()).expect("20x20 must map");
+        assert!(r.layout.is_subset_of(&full));
+        // per-group totals cover each DFG's needs
+        let n = r.layout.compute_group_instances();
+        for d in &dfgs {
+            let h = d.group_histogram();
+            for g in crate::ops::COMPUTE_GROUPS {
+                assert!(n[g.index()] >= h[g.index()], "{}: {g}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_reduces_instances_substantially() {
+        let dfgs = heta::all();
+        let full = Layout::full(Grid::new(20, 20), crate::dfg::groups_used(&dfgs));
+        let r = run(&dfgs, &full, &Mapper::default()).unwrap();
+        let red = crate::metrics::total_reduction_pct(&full, &r.layout);
+        assert!(red > 30.0, "hotspot reduction only {red}%");
+    }
+}

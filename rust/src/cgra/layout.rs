@@ -1,0 +1,258 @@
+//! Functional layouts: which operation groups each cell supports.
+//!
+//! A layout is the unit the BB search manipulates (a "subproblem"
+//! corresponds to one layout). I/O cells always support exactly Mem and
+//! are never touched by the search (Section III-E); compute cells carry a
+//! subset of the compute groups. Cells can additionally be marked
+//! *reserved* by the mapper (reserve-on-demand: routing only, no ops).
+
+use super::{CellId, Grid};
+use crate::ops::{GroupSet, OpGroup, NUM_GROUPS};
+
+/// A functional layout of a grid.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Layout {
+    pub grid: Grid,
+    /// Per-cell supported groups (row-major, same indexing as `Grid`).
+    support: Vec<GroupSet>,
+}
+
+impl Layout {
+    /// Full homogeneous layout: every compute cell supports every compute
+    /// group in `groups` (Mem is routed to I/O cells automatically).
+    pub fn full(grid: Grid, groups: GroupSet) -> Self {
+        let compute_support = groups.intersect(GroupSet::all_compute());
+        let support = grid
+            .cells()
+            .map(|c| if grid.is_compute(c) { compute_support } else { GroupSet::mem_only() })
+            .collect();
+        Self { grid, support }
+    }
+
+    /// Layout with empty compute cells (used as a base for constructing
+    /// heatmap layouts).
+    pub fn empty(grid: Grid) -> Self {
+        let support = grid
+            .cells()
+            .map(|c| if grid.is_compute(c) { GroupSet::EMPTY } else { GroupSet::mem_only() })
+            .collect();
+        Self { grid, support }
+    }
+
+    pub fn support(&self, cell: CellId) -> GroupSet {
+        self.support[cell as usize]
+    }
+
+    pub fn supports(&self, cell: CellId, g: OpGroup) -> bool {
+        self.support[cell as usize].contains(g)
+    }
+
+    /// Set the support of a compute cell. Panics on I/O cells — the
+    /// search must never touch them.
+    pub fn set_support(&mut self, cell: CellId, s: GroupSet) {
+        assert!(self.grid.is_compute(cell), "cannot reconfigure I/O cell {cell}");
+        assert!(
+            s.is_subset_of(GroupSet::all_compute()),
+            "compute cells cannot host Mem"
+        );
+        self.support[cell as usize] = s;
+    }
+
+    /// Remove one group from a compute cell, returning the new layout.
+    pub fn without_group(&self, cell: CellId, g: OpGroup) -> Layout {
+        let mut l = self.clone();
+        l.set_support(cell, l.support(cell).without(g));
+        l
+    }
+
+    /// Remove a set of groups from a compute cell, returning the new
+    /// layout.
+    pub fn without_groups(&self, cell: CellId, mask: GroupSet) -> Layout {
+        let mut l = self.clone();
+        l.set_support(cell, l.support(cell).minus(mask));
+        l
+    }
+
+    /// Number of instances of each group over *compute* cells, indexed by
+    /// `OpGroup::index()` (the `N_g` of Equation 1). Mem instances count
+    /// I/O cells and are reported for completeness but never searched.
+    pub fn group_instances(&self) -> [usize; NUM_GROUPS] {
+        let mut n = [0usize; NUM_GROUPS];
+        for c in self.grid.cells() {
+            for g in self.support(c).iter() {
+                n[g.index()] += 1;
+            }
+        }
+        n
+    }
+
+    /// Total group instances over compute cells only (the headline
+    /// "number of operations" metric of the paper).
+    pub fn compute_instances(&self) -> usize {
+        self.grid
+            .compute_cells()
+            .map(|c| self.support(c).len())
+            .sum()
+    }
+
+    /// Per-group instance counts over compute cells only.
+    pub fn compute_group_instances(&self) -> [usize; NUM_GROUPS] {
+        let mut n = [0usize; NUM_GROUPS];
+        for c in self.grid.compute_cells() {
+            for g in self.support(c).iter() {
+                n[g.index()] += 1;
+            }
+        }
+        n
+    }
+
+    /// True if every compute cell's support is a subset of `other`'s.
+    pub fn is_subset_of(&self, other: &Layout) -> bool {
+        self.grid == other.grid
+            && self
+                .grid
+                .cells()
+                .all(|c| self.support(c).is_subset_of(other.support(c)))
+    }
+
+    /// Union with another layout (used to overlay per-DFG usage maps into
+    /// the heatmap layout).
+    pub fn union(&self, other: &Layout) -> Layout {
+        assert_eq!(self.grid, other.grid);
+        let support = self
+            .grid
+            .cells()
+            .map(|c| self.support(c).union(other.support(c)))
+            .collect();
+        Layout { grid: self.grid, support }
+    }
+
+    /// Compact one-char-per-group textual rendering, for debugging and
+    /// the CLI `show` command.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in 0..self.grid.rows {
+            for c in 0..self.grid.cols {
+                let id = self.grid.cell(r, c);
+                let s = self.support(id);
+                let glyph = if self.grid.is_io(id) {
+                    "IO....".to_string()
+                } else {
+                    let mut t = String::new();
+                    for (g, ch) in
+                        [(OpGroup::Arith, 'A'), (OpGroup::Div, 'D'), (OpGroup::FP, 'F'),
+                         (OpGroup::Mult, 'M'), (OpGroup::Other, 'O')]
+                    {
+                        t.push(if s.contains(g) { ch } else { '.' });
+                    }
+                    format!(".{t}")
+                };
+                out.push_str(&glyph);
+                out.push(' ');
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> Grid {
+        Grid::new(4, 5)
+    }
+
+    #[test]
+    fn full_layout_supports_everything_on_compute() {
+        let l = Layout::full(grid(), GroupSet::all_compute().with(OpGroup::Mem));
+        for c in l.grid.compute_cells() {
+            assert_eq!(l.support(c), GroupSet::all_compute());
+        }
+        for c in l.grid.io_cells() {
+            assert_eq!(l.support(c), GroupSet::mem_only());
+        }
+    }
+
+    #[test]
+    fn full_layout_restricted_to_used_groups() {
+        // Section IV-F: if the DFG set has no divides, the full layout has
+        // no cells supporting divide.
+        let used = GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mult, OpGroup::Mem]);
+        let l = Layout::full(grid(), used);
+        for c in l.grid.compute_cells() {
+            assert!(l.supports(c, OpGroup::Arith));
+            assert!(l.supports(c, OpGroup::Mult));
+            assert!(!l.supports(c, OpGroup::Div));
+        }
+    }
+
+    #[test]
+    fn instance_counts() {
+        let g = grid(); // 4x5: compute = 2*3 = 6
+        let l = Layout::full(g, GroupSet::all_compute());
+        let n = l.compute_group_instances();
+        assert_eq!(n[OpGroup::Arith.index()], 6);
+        assert_eq!(n[OpGroup::Div.index()], 6);
+        assert_eq!(l.compute_instances(), 30);
+        // group_instances includes Mem on the 14 I/O cells
+        assert_eq!(l.group_instances()[OpGroup::Mem.index()], 14);
+    }
+
+    #[test]
+    fn removal_is_functional() {
+        let l = Layout::full(grid(), GroupSet::all_compute());
+        let cell = l.grid.compute_cells().next().unwrap();
+        let l2 = l.without_group(cell, OpGroup::Div);
+        assert!(l.supports(cell, OpGroup::Div)); // original untouched
+        assert!(!l2.supports(cell, OpGroup::Div));
+        assert_eq!(l2.compute_instances(), l.compute_instances() - 1);
+        assert!(l2.is_subset_of(&l));
+        assert!(!l.is_subset_of(&l2));
+    }
+
+    #[test]
+    fn without_groups_mask() {
+        let l = Layout::full(grid(), GroupSet::all_compute());
+        let cell = l.grid.compute_cells().next().unwrap();
+        let mask = GroupSet::from_groups(&[OpGroup::Div, OpGroup::Other]);
+        let l2 = l.without_groups(cell, mask);
+        assert_eq!(l2.support(cell).len(), 3);
+        assert!(!l2.supports(cell, OpGroup::Div));
+        assert!(!l2.supports(cell, OpGroup::Other));
+        assert!(l2.supports(cell, OpGroup::Arith));
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot reconfigure I/O cell")]
+    fn touching_io_cell_panics() {
+        let mut l = Layout::full(grid(), GroupSet::all_compute());
+        let io = l.grid.io_cells().next().unwrap();
+        l.set_support(io, GroupSet::EMPTY);
+    }
+
+    #[test]
+    fn union_overlays() {
+        let g = grid();
+        let mut a = Layout::empty(g);
+        let mut b = Layout::empty(g);
+        let c1 = g.cell(1, 1);
+        let c2 = g.cell(1, 2);
+        a.set_support(c1, GroupSet::from_groups(&[OpGroup::Arith]));
+        b.set_support(c1, GroupSet::from_groups(&[OpGroup::Mult]));
+        b.set_support(c2, GroupSet::from_groups(&[OpGroup::Div]));
+        let u = a.union(&b);
+        assert_eq!(u.support(c1).len(), 2);
+        assert_eq!(u.support(c2).len(), 1);
+    }
+
+    #[test]
+    fn render_shape() {
+        let l = Layout::full(grid(), GroupSet::all_compute());
+        let r = l.render();
+        assert_eq!(r.lines().count(), 4);
+        assert!(r.contains("IO"));
+        assert!(r.contains("ADFMO"));
+    }
+}

@@ -1,0 +1,237 @@
+//! T-CGRA architecture model (paper Section II-A, Fig 1).
+//!
+//! An R×C grid of cells in a 4-nearest-neighbour topology. Border cells
+//! are *I/O cells* (FIFOs only; execute LOAD/STORE), interior cells are
+//! *compute cells* (FU + ALU + switches + FIFOs). The machine is
+//! spatially configured: each cell runs one fixed operation for the whole
+//! execution, and programmable switches route values between cells,
+//! possibly *through* cells (pass-through routing does not occupy the FU).
+
+pub mod layout;
+
+pub use layout::Layout;
+
+/// Cell index within a grid (row-major).
+pub type CellId = u16;
+
+/// The four link directions, in neighbour order N, E, S, W.
+pub const DIRS: [(i32, i32); 4] = [(-1, 0), (0, 1), (1, 0), (0, -1)];
+
+/// Kind of a cell, determined purely by its position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// Border cell: FIFOs only, executes LOAD/STORE.
+    Io,
+    /// Interior cell: FU + ALU(s).
+    Compute,
+}
+
+/// An R×C T-CGRA grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Grid {
+    /// Create a grid. Needs at least 3×3 so at least one compute cell
+    /// exists.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows >= 3 && cols >= 3, "grid must be at least 3x3, got {rows}x{cols}");
+        assert!(rows * cols <= u16::MAX as usize, "grid too large for CellId");
+        Self { rows, cols }
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Number of interior (compute) cells.
+    pub fn num_compute(&self) -> usize {
+        (self.rows - 2) * (self.cols - 2)
+    }
+
+    /// Number of border (I/O) cells.
+    pub fn num_io(&self) -> usize {
+        self.num_cells() - self.num_compute()
+    }
+
+    pub fn cell(&self, r: usize, c: usize) -> CellId {
+        debug_assert!(r < self.rows && c < self.cols);
+        (r * self.cols + c) as CellId
+    }
+
+    pub fn coords(&self, id: CellId) -> (usize, usize) {
+        let id = id as usize;
+        (id / self.cols, id % self.cols)
+    }
+
+    pub fn kind(&self, id: CellId) -> CellKind {
+        let (r, c) = self.coords(id);
+        if r == 0 || c == 0 || r == self.rows - 1 || c == self.cols - 1 {
+            CellKind::Io
+        } else {
+            CellKind::Compute
+        }
+    }
+
+    pub fn is_compute(&self, id: CellId) -> bool {
+        self.kind(id) == CellKind::Compute
+    }
+
+    pub fn is_io(&self, id: CellId) -> bool {
+        self.kind(id) == CellKind::Io
+    }
+
+    /// Neighbour in direction `dir` (N/E/S/W), if inside the grid.
+    pub fn neighbor(&self, id: CellId, dir: usize) -> Option<CellId> {
+        let (r, c) = self.coords(id);
+        let (dr, dc) = DIRS[dir];
+        let (nr, nc) = (r as i32 + dr, c as i32 + dc);
+        if nr < 0 || nc < 0 || nr >= self.rows as i32 || nc >= self.cols as i32 {
+            None
+        } else {
+            Some(self.cell(nr as usize, nc as usize))
+        }
+    }
+
+    /// All in-grid neighbours of a cell.
+    pub fn neighbors(&self, id: CellId) -> impl Iterator<Item = CellId> + '_ {
+        (0..4).filter_map(move |d| self.neighbor(id, d))
+    }
+
+    /// Manhattan distance between two cells.
+    pub fn manhattan(&self, a: CellId, b: CellId) -> usize {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+
+    /// Directed-link id for the link leaving `cell` in direction `dir`.
+    /// Link ids are dense in `[0, 4 * num_cells)`; out-of-grid directions
+    /// simply have no user.
+    pub fn link(&self, cell: CellId, dir: usize) -> usize {
+        cell as usize * 4 + dir
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.num_cells() * 4
+    }
+
+    /// Iterate all cell ids.
+    pub fn cells(&self) -> impl Iterator<Item = CellId> {
+        (0..self.num_cells() as u16).map(|i| i as CellId)
+    }
+
+    /// Iterate compute cell ids, top-left to bottom-right (the branching
+    /// order Algorithms 2/3 specify).
+    pub fn compute_cells(&self) -> impl Iterator<Item = CellId> + '_ {
+        self.cells().filter(move |&c| self.is_compute(c))
+    }
+
+    /// Iterate I/O (border) cell ids.
+    pub fn io_cells(&self) -> impl Iterator<Item = CellId> + '_ {
+        self.cells().filter(move |&c| self.is_io(c))
+    }
+}
+
+impl std::fmt::Display for Grid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_10x10() {
+        let g = Grid::new(10, 10);
+        assert_eq!(g.num_cells(), 100);
+        assert_eq!(g.num_compute(), 64);
+        assert_eq!(g.num_io(), 36);
+    }
+
+    #[test]
+    fn paper_20x20_has_76_io_cells() {
+        // Section IV-J: 18x18 inner compute grid + 76 boundary I/O cells.
+        let g = Grid::new(20, 20);
+        assert_eq!(g.num_compute(), 324);
+        assert_eq!(g.num_io(), 76);
+    }
+
+    #[test]
+    fn kind_by_position() {
+        let g = Grid::new(5, 7);
+        assert_eq!(g.kind(g.cell(0, 0)), CellKind::Io);
+        assert_eq!(g.kind(g.cell(0, 3)), CellKind::Io);
+        assert_eq!(g.kind(g.cell(4, 6)), CellKind::Io);
+        assert_eq!(g.kind(g.cell(2, 3)), CellKind::Compute);
+        assert_eq!(g.kind(g.cell(1, 1)), CellKind::Compute);
+    }
+
+    #[test]
+    fn neighbors_on_edges_and_interior() {
+        let g = Grid::new(4, 4);
+        let corner = g.cell(0, 0);
+        assert_eq!(g.neighbors(corner).count(), 2);
+        let interior = g.cell(1, 1);
+        assert_eq!(g.neighbors(interior).count(), 4);
+        let edge = g.cell(0, 2);
+        assert_eq!(g.neighbors(edge).count(), 3);
+    }
+
+    #[test]
+    fn neighbor_directions() {
+        let g = Grid::new(4, 4);
+        let c = g.cell(1, 1);
+        assert_eq!(g.neighbor(c, 0), Some(g.cell(0, 1))); // N
+        assert_eq!(g.neighbor(c, 1), Some(g.cell(1, 2))); // E
+        assert_eq!(g.neighbor(c, 2), Some(g.cell(2, 1))); // S
+        assert_eq!(g.neighbor(c, 3), Some(g.cell(1, 0))); // W
+        assert_eq!(g.neighbor(g.cell(0, 0), 0), None);
+        assert_eq!(g.neighbor(g.cell(0, 0), 3), None);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let g = Grid::new(6, 9);
+        for id in g.cells() {
+            let (r, c) = g.coords(id);
+            assert_eq!(g.cell(r, c), id);
+        }
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let g = Grid::new(8, 8);
+        assert_eq!(g.manhattan(g.cell(0, 0), g.cell(3, 4)), 7);
+        assert_eq!(g.manhattan(g.cell(2, 2), g.cell(2, 2)), 0);
+    }
+
+    #[test]
+    fn compute_cells_iteration_order_is_row_major() {
+        let g = Grid::new(4, 4);
+        let cs: Vec<CellId> = g.compute_cells().collect();
+        assert_eq!(cs, vec![g.cell(1, 1), g.cell(1, 2), g.cell(2, 1), g.cell(2, 2)]);
+    }
+
+    #[test]
+    fn link_ids_dense_and_distinct() {
+        let g = Grid::new(3, 3);
+        let mut seen = std::collections::HashSet::new();
+        for c in g.cells() {
+            for d in 0..4 {
+                assert!(seen.insert(g.link(c, d)));
+                assert!(g.link(c, d) < g.num_links());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 3x3")]
+    fn too_small_grid_panics() {
+        Grid::new(2, 5);
+    }
+}

@@ -1,0 +1,191 @@
+//! Experiment coordinator: configuration, run orchestration and report
+//! emission for every table and figure of the paper.
+
+pub mod experiments;
+pub mod report;
+
+use crate::cgra::Grid;
+use crate::cost::CostModel;
+use crate::dfg::Dfg;
+use crate::mapper::{Mapper, MapperConfig};
+use crate::search::{self, SearchConfig, SearchResult};
+use crate::util::config::Config;
+use std::path::PathBuf;
+
+/// Global experiment configuration (CLI/config-file driven).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// `L_test` at the 10×10 reference size; scaled per grid. The paper
+    /// uses 2000; the default here is bench-scale so that experiments
+    /// finish in minutes on one core (Fig 5 shows the reductions
+    /// saturate early, which our traces confirm).
+    pub l_test_base: usize,
+    pub l_fail: usize,
+    pub run_gsg: bool,
+    pub gsg_passes: usize,
+    pub use_heatmap: bool,
+    /// Section IV-G noGSG variant: also skip the Arith group in OPSG.
+    pub opsg_skip_arith: bool,
+    pub mapper: MapperConfig,
+    /// Where CSVs are written.
+    pub results_dir: PathBuf,
+    /// Use the PJRT scorer when artifacts are present.
+    pub use_xla_scorer: bool,
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            l_test_base: 400,
+            l_fail: 3,
+            run_gsg: true,
+            gsg_passes: 2,
+            use_heatmap: true,
+            opsg_skip_arith: false,
+            mapper: MapperConfig::default(),
+            results_dir: PathBuf::from("results"),
+            use_xla_scorer: true,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper-fidelity settings (L_test = 2000 @ 10×10; multi-hour runs).
+    pub fn paper_scale() -> Self {
+        Self { l_test_base: 2000, ..Default::default() }
+    }
+
+    /// Merge values from a config file (TOML-subset, see `util::config`).
+    pub fn apply_file(&mut self, cfg: &Config) {
+        self.l_test_base = cfg.int_or("search.l_test", self.l_test_base as i64) as usize;
+        self.l_fail = cfg.int_or("search.l_fail", self.l_fail as i64) as usize;
+        self.run_gsg = cfg.bool_or("search.run_gsg", self.run_gsg);
+        self.gsg_passes = cfg.int_or("search.gsg_passes", self.gsg_passes as i64) as usize;
+        self.use_heatmap = cfg.bool_or("search.use_heatmap", self.use_heatmap);
+        self.use_xla_scorer = cfg.bool_or("runtime.use_xla_scorer", self.use_xla_scorer);
+        self.mapper.route_iters =
+            cfg.int_or("mapper.route_iters", self.mapper.route_iters as i64) as usize;
+        self.mapper.placement_attempts = cfg
+            .int_or("mapper.placement_attempts", self.mapper.placement_attempts as i64)
+            as usize;
+        self.mapper.max_reserves =
+            cfg.int_or("mapper.max_reserves", self.mapper.max_reserves as i64) as usize;
+        self.mapper.seed = cfg.int_or("mapper.seed", self.mapper.seed as i64) as u64;
+        if let Some(v) = cfg.get("results_dir").and_then(|v| v.as_str()) {
+            self.results_dir = PathBuf::from(v);
+        }
+        self.verbose = cfg.bool_or("verbose", self.verbose);
+    }
+
+    /// SearchConfig for a specific grid (scales `L_test` like the paper).
+    pub fn search_config(&self, grid: Grid) -> SearchConfig {
+        let base_cells = 8 * 8;
+        let l_test = (self.l_test_base * grid.num_compute() + base_cells - 1) / base_cells;
+        SearchConfig {
+            l_test,
+            l_fail: self.l_fail,
+            run_gsg: self.run_gsg,
+            gsg_passes: self.gsg_passes,
+            gsg_stale_prune_after: 64,
+            use_heatmap: self.use_heatmap,
+            opsg_skip_arith: self.opsg_skip_arith,
+        }
+    }
+}
+
+/// A coordinator instance: owns the mapper, cost models, and (when
+/// artifacts are available) the PJRT scorer.
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    pub mapper: Mapper,
+    pub area: CostModel,
+    pub power: CostModel,
+    pub scorer: Option<crate::runtime::Scorer>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        let mapper = Mapper::new(cfg.mapper.clone());
+        let area = CostModel::area();
+        let scorer = if cfg.use_xla_scorer {
+            match crate::runtime::Scorer::load(&crate::runtime::artifacts_dir(), &area) {
+                Ok(s) => {
+                    if cfg.verbose {
+                        eprintln!("[helex] PJRT scorer loaded ({})", s.platform());
+                    }
+                    Some(s)
+                }
+                Err(e) => {
+                    if cfg.verbose {
+                        eprintln!("[helex] PJRT scorer unavailable ({e}); native scoring");
+                    }
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        Self { cfg, mapper, area, power: CostModel::power(), scorer }
+    }
+
+    /// Run HeLEx on a DFG set and grid with the area objective.
+    pub fn run_helex(&mut self, dfgs: &[Dfg], grid: Grid) -> Option<SearchResult> {
+        let scfg = self.cfg.search_config(grid);
+        let scorer: Option<&mut dyn search::BatchScorer> = match self.scorer.as_mut() {
+            Some(s) => Some(s),
+            None => None,
+        };
+        search::run(dfgs, grid, &self.mapper, &self.area, &scfg, scorer)
+    }
+
+    /// Startup self-check: XLA scorer must agree with the native cost
+    /// model on a probe layout (returns max relative error, if checked).
+    pub fn self_check(&mut self) -> Option<f64> {
+        let scorer = self.scorer.as_mut()?;
+        let grid = Grid::new(10, 10);
+        let full = crate::cgra::Layout::full(grid, crate::ops::GroupSet::all_compute());
+        let some = full.without_group(grid.cell(1, 1), crate::ops::OpGroup::Div);
+        crate::runtime::cross_check(scorer, &self.area, &[full, some]).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_config_scales_l_test() {
+        let cfg = ExperimentConfig { l_test_base: 2000, ..Default::default() };
+        assert_eq!(cfg.search_config(Grid::new(10, 10)).l_test, 2000);
+        let big = cfg.search_config(Grid::new(13, 15)).l_test;
+        assert!(big > 2000, "13x15 should scale up, got {big}");
+    }
+
+    #[test]
+    fn config_file_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        let file = Config::parse(
+            "[search]\nl_test = 77\nrun_gsg = false\n[mapper]\nseed = 9\nverbose = true",
+        );
+        cfg.apply_file(&file);
+        assert_eq!(cfg.l_test_base, 77);
+        assert!(!cfg.run_gsg);
+        assert_eq!(cfg.mapper.seed, 9);
+    }
+
+    #[test]
+    fn coordinator_runs_tiny_search_natively() {
+        let cfg = ExperimentConfig {
+            l_test_base: 40,
+            use_xla_scorer: false, // artifacts may not exist in unit tests
+            gsg_passes: 1,
+            ..Default::default()
+        };
+        let mut co = Coordinator::new(cfg);
+        let dfgs = vec![crate::dfg::benchmarks::benchmark("SOB")];
+        let r = co.run_helex(&dfgs, Grid::new(5, 5)).unwrap();
+        assert!(r.best_cost < co.area.layout_cost(&r.full_layout));
+    }
+}

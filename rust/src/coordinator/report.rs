@@ -1,0 +1,66 @@
+//! Report emission: every experiment prints an ASCII table and writes a
+//! CSV under the configured results directory.
+
+use crate::util::table::Table;
+use std::path::Path;
+
+/// Print a table and persist its CSV.
+pub fn emit(table: &Table, results_dir: &Path, name: &str) {
+    print!("{}", table.ascii());
+    if let Err(e) = table.save_csv(results_dir, name) {
+        eprintln!("[helex] warning: could not save {name}.csv: {e}");
+    } else {
+        println!("(csv: {}/{name}.csv)\n", results_dir.display());
+    }
+}
+
+/// Format a percentage with one decimal.
+pub fn pct(v: f64) -> String {
+    crate::util::fmt_f(v, 1)
+}
+
+/// Format a float with `d` decimals.
+pub fn f(v: f64, d: usize) -> String {
+    crate::util::fmt_f(v, d)
+}
+
+/// Format a ratio like `1.12X`.
+pub fn ratio(v: f64) -> String {
+    format!("{}X", crate::util::fmt_f(v, 2))
+}
+
+/// Scientific notation like the paper's Table IV (e.g. `2.22e+6`).
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let exp = v.abs().log10().floor() as i32;
+    let mant = v / 10f64.powi(exp);
+    format!("{:.2}e+{}", mant, exp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sci_matches_paper_style() {
+        assert_eq!(sci(2.22e6), "2.22e+6");
+        assert_eq!(sci(901.0), "9.01e+2");
+        assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(ratio(1.1234), "1.12X");
+    }
+
+    #[test]
+    fn emit_writes_csv() {
+        let dir = std::env::temp_dir().join("helex_report_test");
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1"]);
+        emit(&t, &dir, "probe");
+        assert!(dir.join("probe.csv").exists());
+    }
+}

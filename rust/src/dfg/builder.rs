@@ -1,0 +1,273 @@
+//! Deterministic synthetic-DFG builder.
+//!
+//! The paper's 12 benchmark DFGs (Table II) and HETA's 8 DFGs (Table IX)
+//! are not published as files; what the search observes is their
+//! *structure*: node/edge counts, per-group op histograms and DAG shape.
+//! This builder generates DAGs that match those exactly (asserted in
+//! tests) with kernel-like locality: consumers prefer recently-produced
+//! values, loads feed the front, stores drain the back.
+
+use super::{Dfg, NodeId};
+use crate::ops::Op;
+use crate::util::rng::Rng;
+
+/// Specification for one synthetic DFG.
+#[derive(Debug, Clone)]
+pub struct DfgSpec {
+    pub name: &'static str,
+    pub loads: usize,
+    pub stores: usize,
+    /// Compute op multiset as `(op, count)`.
+    pub compute: Vec<(Op, usize)>,
+    /// How many of the arity-2-capable compute nodes actually receive two
+    /// inputs (the rest receive one — an implicit-constant operand, as in
+    /// the ExPRESS/HETA DFGs). Unary ops always receive one.
+    pub binary: usize,
+    /// RNG seed: structure is a pure function of the spec.
+    pub seed: u64,
+}
+
+impl DfgSpec {
+    pub fn num_nodes(&self) -> usize {
+        self.loads + self.stores + self.compute.iter().map(|(_, c)| c).sum::<usize>()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        let n_compute: usize = self.compute.iter().map(|(_, c)| c).sum();
+        let n_unary_ops: usize =
+            self.compute.iter().filter(|(o, _)| o.arity() == 1).map(|(_, c)| c).sum();
+        let binary_capable = n_compute - n_unary_ops;
+        assert!(
+            self.binary <= binary_capable,
+            "{}: binary={} exceeds capable={}",
+            self.name,
+            self.binary,
+            binary_capable
+        );
+        // stores contribute 1 in-edge each; compute nodes contribute their
+        // assigned indegree.
+        self.stores + n_compute + self.binary
+    }
+
+    /// Build the DFG. Panics (via debug assertions in tests) only on
+    /// impossible specs.
+    pub fn build(&self) -> Dfg {
+        // Coverage bound: every non-store node needs >= 1 consumer, and
+        // each edge covers at most one new producer, so E >= V - S.
+        assert!(
+            self.num_edges() >= self.num_nodes() - self.stores,
+            "{}: E={} < V-S={} — spec cannot cover all producers",
+            self.name,
+            self.num_edges(),
+            self.num_nodes() - self.stores
+        );
+        let mut rng = Rng::seed(self.seed);
+
+        // Node layout: [loads][compute (shuffled op order)][stores].
+        let mut ops: Vec<Op> = Vec::with_capacity(self.num_nodes());
+        for _ in 0..self.loads {
+            ops.push(Op::Load);
+        }
+        let mut compute_ops: Vec<Op> = Vec::new();
+        for &(op, count) in &self.compute {
+            for _ in 0..count {
+                compute_ops.push(op);
+            }
+        }
+        rng.shuffle(&mut compute_ops);
+        let compute_start = ops.len();
+        ops.extend(compute_ops.iter().copied());
+        let store_start = ops.len();
+        for _ in 0..self.stores {
+            ops.push(Op::Store);
+        }
+        let _n_compute = store_start - compute_start;
+
+        // Assign indegrees: binary-capable nodes get 2 inputs until the
+        // budget is spent (later nodes first, so the "front" of the kernel
+        // stays load-fed and the reduction tree sits at the back).
+        let mut indeg = vec![0usize; ops.len()];
+        let mut budget = self.binary;
+        for i in (compute_start..store_start).rev() {
+            let cap = ops[i].arity();
+            indeg[i] = 1;
+            // a node at position i can see only the i producers before it,
+            // so indeg 2 requires i >= 2
+            if cap == 2 && budget > 0 && i >= 2 {
+                indeg[i] = 2;
+                budget -= 1;
+            }
+        }
+        assert_eq!(
+            budget, 0,
+            "{}: not enough binary-capable nodes with >=2 visible producers",
+            self.name
+        );
+        for i in store_start..ops.len() {
+            indeg[i] = 1;
+        }
+
+        // Wire edges. `uncovered` = earlier value-producing nodes that do
+        // not yet feed anything; every producer must end up consumed.
+        let mut edges: Vec<(NodeId, NodeId)> = Vec::with_capacity(self.num_edges());
+        let mut outdeg = vec![0usize; ops.len()];
+        for i in compute_start..ops.len() {
+            let mut picked: Vec<usize> = Vec::with_capacity(indeg[i]);
+            // producers visible to node i: all loads + compute before i
+            // (stores consume compute-or-load values like everyone else).
+            let visible_end = i.min(store_start);
+            for _slot in 0..indeg[i] {
+                // 1) earliest uncovered producer, to guarantee coverage;
+                let uncovered: Vec<usize> = (0..visible_end)
+                    .filter(|&p| outdeg[p] == 0 && !picked.contains(&p))
+                    .collect();
+                let choice = if !uncovered.is_empty() {
+                    // Bias stores toward *late* uncovered producers (drain
+                    // the back of the kernel), compute toward early ones.
+                    if i >= store_start {
+                        *uncovered.last().unwrap()
+                    } else {
+                        uncovered[0]
+                    }
+                } else {
+                    // 2) otherwise a random recent producer (locality).
+                    let window = 8.max(visible_end / 3);
+                    let lo = visible_end.saturating_sub(window);
+                    let mut tries = 0;
+                    loop {
+                        let p = rng.range(lo, visible_end);
+                        if !picked.contains(&p) {
+                            break p;
+                        }
+                        tries += 1;
+                        if tries > 32 {
+                            // fall back to any unpicked producer
+                            break (0..visible_end).find(|p| !picked.contains(p)).expect(
+                                "at least indeg distinct producers must exist",
+                            );
+                        }
+                    }
+                };
+                picked.push(choice);
+                outdeg[choice] += 1;
+                edges.push((choice as NodeId, i as NodeId));
+            }
+        }
+
+        // Repair pass: any producer still uncovered steals an edge slot
+        // from an over-shared producer of some later consumer.
+        loop {
+            let Some(u) = (0..store_start).find(|&p| outdeg[p] == 0) else { break };
+            let mut fixed = false;
+            // find a consumer later than u whose some pred has outdeg >= 2
+            for ei in 0..edges.len() {
+                let (p, c) = edges[ei];
+                let (p, c) = (p as usize, c as usize);
+                if c > u
+                    && outdeg[p] >= 2
+                    && p != u
+                    && !edges.iter().any(|&(a, b)| a as usize == u && b as usize == c)
+                {
+                    outdeg[p] -= 1;
+                    outdeg[u] += 1;
+                    edges[ei] = (u as NodeId, c as NodeId);
+                    fixed = true;
+                    break;
+                }
+            }
+            assert!(fixed, "{}: cannot cover producer {} — spec infeasible", self.name, u);
+        }
+
+        let dfg = Dfg::new(self.name, ops, edges);
+        debug_assert_eq!(dfg.num_nodes(), self.num_nodes());
+        debug_assert_eq!(dfg.num_edges(), self.num_edges());
+        dfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{Op::*, OpGroup};
+
+    fn spec() -> DfgSpec {
+        DfgSpec {
+            name: "t",
+            loads: 4,
+            stores: 2,
+            compute: vec![(Add, 5), (Mul, 3), (Abs, 2)],
+            binary: 6,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn counts_match_formula() {
+        let s = spec();
+        assert_eq!(s.num_nodes(), 16);
+        // stores(2) + compute(10) + binary(6) = 18
+        assert_eq!(s.num_edges(), 18);
+        let d = s.build();
+        assert_eq!(d.num_nodes(), 16);
+        assert_eq!(d.num_edges(), 18);
+    }
+
+    #[test]
+    fn built_dfg_is_valid() {
+        let d = spec().build();
+        let errs = d.validate();
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn deterministic_for_same_spec() {
+        let a = spec().build();
+        let b = spec().build();
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.nodes, b.nodes);
+    }
+
+    #[test]
+    fn different_seed_different_wiring() {
+        let a = spec().build();
+        let mut s = spec();
+        s.seed = 99;
+        let b = s.build();
+        assert_ne!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn histogram_matches_spec() {
+        let d = spec().build();
+        let h = d.group_histogram();
+        assert_eq!(h[OpGroup::Mem.index()], 6);
+        assert_eq!(h[OpGroup::Arith.index()], 7); // 5 add + 2 abs
+        assert_eq!(h[OpGroup::Mult.index()], 3);
+    }
+
+    #[test]
+    fn every_producer_is_consumed() {
+        let d = spec().build();
+        let succs = d.succs();
+        for (i, op) in d.nodes.iter().enumerate() {
+            if *op != Store {
+                assert!(!succs[i].is_empty(), "node {i} ({op}) unconsumed");
+            }
+        }
+    }
+
+    #[test]
+    fn unary_heavy_spec_builds() {
+        let s = DfgSpec {
+            name: "u",
+            loads: 3,
+            stores: 2,
+            compute: vec![(Abs, 6), (Add, 2)],
+            binary: 1,
+            seed: 5,
+        };
+        let d = s.build();
+        assert!(d.validate().is_empty(), "{:?}", d.validate());
+        assert_eq!(d.num_edges(), s.num_edges());
+    }
+}

@@ -1,0 +1,102 @@
+//! The 8 DFGs used in the HETA comparison (paper Table IX, sourced from
+//! HETA's evaluation / the ExPRESS benchmark suite).
+//!
+//! Table IX fully specifies V, E and the Add/Sub, Mult, Load/Store op
+//! histograms; the builder reproduces them exactly (asserted in tests).
+
+use super::builder::DfgSpec;
+use super::Dfg;
+use crate::ops::Op::*;
+
+/// Table IX rows: (name, V, E, add_sub, mult, load_store).
+pub const TABLE_IX: [(&str, usize, usize, usize, usize, usize); 8] = [
+    ("arf", 46, 48, 12, 16, 18),
+    ("centro-fir", 46, 60, 20, 8, 18),
+    ("cosine2", 82, 91, 26, 16, 40),
+    ("ewf", 43, 56, 26, 8, 9),
+    ("fft", 37, 48, 12, 8, 17),
+    ("fir", 44, 43, 10, 11, 23),
+    ("resnet2", 64, 63, 15, 16, 33),
+    ("stencil3d", 66, 68, 25, 7, 34),
+];
+
+/// (loads, stores) split of each row's load_store total, chosen so the
+/// edge count is achievable (B = E - V + L must be 0..=compute ops).
+const LS_SPLIT: [(usize, usize); 8] =
+    [(12, 6), (12, 6), (26, 14), (6, 3), (9, 8), (15, 8), (22, 11), (24, 10)];
+
+fn spec(idx: usize) -> DfgSpec {
+    let (name, v, e, add_sub, mult, load_store) = TABLE_IX[idx];
+    let (loads, stores) = LS_SPLIT[idx];
+    assert_eq!(loads + stores, load_store, "{name} L/S split");
+    let adds = add_sub / 2 + add_sub % 2;
+    let subs = add_sub / 2;
+    let compute = vec![(Add, adds), (Sub, subs), (Mul, mult)];
+    let binary = e + loads - v; // from E = S + C + B and V = L + S + C
+    DfgSpec { name, loads, stores, compute, binary, seed: 0x4e7a + idx as u64 }
+}
+
+/// Build one Table IX DFG by name.
+pub fn heta_benchmark(name: &str) -> Dfg {
+    let idx = TABLE_IX
+        .iter()
+        .position(|(n, ..)| *n == name)
+        .unwrap_or_else(|| panic!("unknown HETA benchmark {name}"));
+    spec(idx).build()
+}
+
+/// All 8 HETA DFGs in Table IX order.
+pub fn all() -> Vec<Dfg> {
+    (0..TABLE_IX.len()).map(|i| spec(i).build()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::OpGroup;
+
+    #[test]
+    fn counts_match_table_9() {
+        for (i, (name, v, e, add_sub, mult, load_store)) in TABLE_IX.iter().enumerate() {
+            let d = spec(i).build();
+            assert_eq!(d.num_nodes(), *v, "{name} V");
+            assert_eq!(d.num_edges(), *e, "{name} E");
+            let h = d.group_histogram();
+            assert_eq!(h[OpGroup::Arith.index()], *add_sub, "{name} add/sub");
+            assert_eq!(h[OpGroup::Mult.index()], *mult, "{name} mult");
+            assert_eq!(h[OpGroup::Mem.index()], *load_store, "{name} load/store");
+            assert_eq!(h[OpGroup::Div.index()], 0, "{name}");
+            assert_eq!(h[OpGroup::FP.index()], 0, "{name}");
+            assert_eq!(h[OpGroup::Other.index()], 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn all_valid() {
+        for d in all() {
+            let errs = d.validate();
+            assert!(errs.is_empty(), "{}: {errs:?}", d.name);
+        }
+    }
+
+    #[test]
+    fn fits_20x20_comparison_grid() {
+        // Section IV-J: 18x18 compute + 76 border I/O cells.
+        for d in all() {
+            assert!(d.mem_ops() <= 76, "{}", d.name);
+            assert!(d.compute_ops() <= 18 * 18, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let d = heta_benchmark("ewf");
+        assert_eq!(d.num_nodes(), 43);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown HETA benchmark")]
+    fn unknown_name_panics() {
+        heta_benchmark("nope");
+    }
+}

@@ -1,0 +1,305 @@
+//! Data-flow graph IR.
+//!
+//! A DFG is a DAG of operations (Section II-A): nodes carry an [`Op`],
+//! edges carry values. Loads are sources, stores are sinks; compute nodes
+//! have 1 or 2 data inputs. Instances of the DFG execute pipelined on the
+//! CGRA, so the mapper assigns every node to a distinct cell.
+
+pub mod builder;
+pub mod benchmarks;
+pub mod heta;
+
+use crate::ops::{GroupSet, Op, OpGroup, NUM_GROUPS};
+use std::collections::VecDeque;
+
+/// Node id within a DFG.
+pub type NodeId = u32;
+
+/// A data-flow graph.
+#[derive(Debug, Clone)]
+pub struct Dfg {
+    pub name: String,
+    /// Node id = index.
+    pub nodes: Vec<Op>,
+    /// Directed value edges `(src, dst)`.
+    pub edges: Vec<(NodeId, NodeId)>,
+}
+
+impl Dfg {
+    pub fn new(name: &str, nodes: Vec<Op>, edges: Vec<(NodeId, NodeId)>) -> Self {
+        Self { name: name.to_string(), nodes, edges }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Predecessor lists, indexed by node.
+    pub fn preds(&self) -> Vec<Vec<NodeId>> {
+        let mut p = vec![Vec::new(); self.nodes.len()];
+        for &(s, d) in &self.edges {
+            p[d as usize].push(s);
+        }
+        p
+    }
+
+    /// Successor lists, indexed by node.
+    pub fn succs(&self) -> Vec<Vec<NodeId>> {
+        let mut s = vec![Vec::new(); self.nodes.len()];
+        for &(a, b) in &self.edges {
+            s[a as usize].push(b);
+        }
+        s
+    }
+
+    /// Kahn topological order. Returns `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for &(_, d) in &self.edges {
+            indeg[d as usize] += 1;
+        }
+        let succs = self.succs();
+        let mut q: VecDeque<NodeId> =
+            (0..n as NodeId).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = q.pop_front() {
+            order.push(u);
+            for &v in &succs[u as usize] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    q.push_back(v);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Count of operations per group, indexed by `OpGroup::index()`.
+    pub fn group_histogram(&self) -> [usize; NUM_GROUPS] {
+        let mut h = [0usize; NUM_GROUPS];
+        for op in &self.nodes {
+            h[op.group().index()] += 1;
+        }
+        h
+    }
+
+    /// Set of groups appearing in this DFG.
+    pub fn groups_used(&self) -> GroupSet {
+        let mut s = GroupSet::EMPTY;
+        for op in &self.nodes {
+            s.insert(op.group());
+        }
+        s
+    }
+
+    /// Number of memory (load/store) operations.
+    pub fn mem_ops(&self) -> usize {
+        self.nodes.iter().filter(|o| o.is_memory()).count()
+    }
+
+    /// Number of compute (non-memory) operations.
+    pub fn compute_ops(&self) -> usize {
+        self.nodes.len() - self.mem_ops()
+    }
+
+    /// True if the DFG uses any group in `mask` (used by OPSG selective
+    /// testing: only DFGs containing the removed group need re-mapping).
+    pub fn uses_any(&self, mask: GroupSet) -> bool {
+        !self.groups_used().intersect(mask).is_empty()
+    }
+
+    /// Structural validation. Returns a list of violations (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let n = self.nodes.len();
+        for &(s, d) in &self.edges {
+            if s as usize >= n || d as usize >= n {
+                errs.push(format!("edge ({s},{d}) out of range"));
+            }
+            if s == d {
+                errs.push(format!("self-loop at {s}"));
+            }
+        }
+        if self.topo_order().is_none() {
+            errs.push("graph has a cycle".into());
+        }
+        let preds = self.preds();
+        let succs = self.succs();
+        for (i, op) in self.nodes.iter().enumerate() {
+            let indeg = preds[i].len();
+            let outdeg = succs[i].len();
+            match op {
+                Op::Load => {
+                    if indeg != 0 {
+                        errs.push(format!("load {i} has {indeg} inputs"));
+                    }
+                    if outdeg == 0 {
+                        errs.push(format!("load {i} has no consumers"));
+                    }
+                }
+                Op::Store => {
+                    if indeg != 1 {
+                        errs.push(format!("store {i} has {indeg} inputs"));
+                    }
+                }
+                _ => {
+                    if indeg == 0 || indeg > op.arity().max(1) {
+                        errs.push(format!(
+                            "compute {i} ({op}) indeg {indeg} vs arity {}",
+                            op.arity()
+                        ));
+                    }
+                    if outdeg == 0 {
+                        errs.push(format!("compute {i} ({op}) has no consumers"));
+                    }
+                }
+            }
+            // duplicate parallel edges
+            let mut ps = preds[i].clone();
+            ps.sort_unstable();
+            ps.dedup();
+            if ps.len() != preds[i].len() {
+                errs.push(format!("node {i} has parallel in-edges"));
+            }
+        }
+        errs
+    }
+
+    /// Longest path length in *nodes* (unmapped critical path), used as
+    /// the latency baseline denominator in Fig 10.
+    pub fn critical_path_nodes(&self) -> usize {
+        let order = self.topo_order().expect("DAG");
+        let preds = self.preds();
+        let mut depth = vec![1usize; self.nodes.len()];
+        for &u in &order {
+            for &p in &preds[u as usize] {
+                depth[u as usize] = depth[u as usize].max(depth[p as usize] + 1);
+            }
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Per-group maximum op count across a set of DFGs — the theoretical
+/// minimum number of group instances a layout must provide (Section
+/// III-D), used for pruning and for the Fig 6 bound.
+pub fn min_group_instances(dfgs: &[Dfg]) -> [usize; NUM_GROUPS] {
+    let mut m = [0usize; NUM_GROUPS];
+    for d in dfgs {
+        let h = d.group_histogram();
+        for i in 0..NUM_GROUPS {
+            m[i] = m[i].max(h[i]);
+        }
+    }
+    m
+}
+
+/// Union of groups used across a set of DFGs (defines the full layout).
+pub fn groups_used(dfgs: &[Dfg]) -> GroupSet {
+    let mut s = GroupSet::EMPTY;
+    for d in dfgs {
+        s = s.union(d.groups_used());
+    }
+    s
+}
+
+/// Convenience: per-group op count of one DFG restricted to compute groups.
+pub fn compute_group_count(d: &Dfg, g: OpGroup) -> usize {
+    d.group_histogram()[g.index()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Op::*;
+
+    fn tiny() -> Dfg {
+        // load -> add -> store ; load -> add
+        Dfg::new(
+            "tiny",
+            vec![Load, Load, Add, Store],
+            vec![(0, 2), (1, 2), (2, 3)],
+        )
+    }
+
+    #[test]
+    fn tiny_is_valid() {
+        assert!(tiny().validate().is_empty());
+    }
+
+    #[test]
+    fn topo_order_is_topological() {
+        let d = tiny();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; d.num_nodes()];
+            for (i, &n) in order.iter().enumerate() {
+                p[n as usize] = i;
+            }
+            p
+        };
+        for &(s, t) in &d.edges {
+            assert!(pos[s as usize] < pos[t as usize]);
+        }
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let d = Dfg::new("cyc", vec![Add, Add], vec![(0, 1), (1, 0)]);
+        assert!(d.topo_order().is_none());
+        assert!(d.validate().iter().any(|e| e.contains("cycle")));
+    }
+
+    #[test]
+    fn histogram_and_groups() {
+        let d = tiny();
+        let h = d.group_histogram();
+        assert_eq!(h[OpGroup::Mem.index()], 3);
+        assert_eq!(h[OpGroup::Arith.index()], 1);
+        assert!(d.groups_used().contains(OpGroup::Mem));
+        assert!(d.groups_used().contains(OpGroup::Arith));
+        assert!(!d.groups_used().contains(OpGroup::Div));
+        assert_eq!(d.mem_ops(), 3);
+        assert_eq!(d.compute_ops(), 1);
+    }
+
+    #[test]
+    fn min_instances_is_per_group_max() {
+        let a = Dfg::new("a", vec![Load, Mul, Mul, Store], vec![(0, 1), (1, 2), (2, 3)]);
+        let b = tiny();
+        let m = min_group_instances(&[a, b]);
+        assert_eq!(m[OpGroup::Mult.index()], 2);
+        assert_eq!(m[OpGroup::Arith.index()], 1);
+        assert_eq!(m[OpGroup::Mem.index()], 3);
+    }
+
+    #[test]
+    fn critical_path_counts_nodes() {
+        assert_eq!(tiny().critical_path_nodes(), 3); // load->add->store
+    }
+
+    #[test]
+    fn invalid_arity_flagged() {
+        // add with 3 inputs
+        let d = Dfg::new(
+            "bad",
+            vec![Load, Load, Load, Add, Store],
+            vec![(0, 3), (1, 3), (2, 3), (3, 4)],
+        );
+        assert!(d.validate().iter().any(|e| e.contains("indeg")));
+    }
+
+    #[test]
+    fn uses_any_matches_selective_testing_rule() {
+        let d = tiny();
+        let mut only_div = GroupSet::EMPTY;
+        only_div.insert(OpGroup::Div);
+        assert!(!d.uses_any(only_div));
+        assert!(d.uses_any(only_div.with(OpGroup::Arith)));
+    }
+}

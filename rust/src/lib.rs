@@ -1,0 +1,41 @@
+//! # HeLEx — Heterogeneous Layout Explorer for spatial elastic CGRAs
+//!
+//! Reproduction of *"HeLEx: A Heterogeneous Layout Explorer for Spatial
+//! Elastic Coarse-Grained Reconfigurable Arrays"* (Du & Abdelrahman,
+//! 2025). Given a set of data-flow graphs and a target CGRA size, HeLEx
+//! finds a heterogeneous functional layout — which operation groups each
+//! compute cell supports — that minimises area/power cost while keeping
+//! every input DFG mappable.
+//!
+//! ## Layering
+//!
+//! * [`ops`], [`dfg`], [`cgra`], [`mapper`], [`cost`] — substrates: the
+//!   operation/cost model, benchmark DFGs, the T-CGRA grid and the
+//!   RodMap-like reserve-on-demand spatial mapper.
+//! * [`search`] — the paper's contribution: heatmap initial layout and
+//!   the two-phase branch-and-bound search (OPSG then GSG).
+//! * [`baselines`] — HETA-like and REVAMP-like comparators (Fig 11).
+//! * [`runtime`] — PJRT client executing the AOT-compiled XLA artifact
+//!   (built once by `python/compile/aot.py`; Python is never on the
+//!   search path) for batched layout scoring.
+//! * [`coordinator`] — experiment runner regenerating every paper table
+//!   and figure; [`metrics`] — latency accounting; [`util`] — in-tree
+//!   RNG/CLI/config/bench/property-test substrates.
+
+pub mod baselines;
+pub mod cgra;
+pub mod coordinator;
+pub mod cost;
+pub mod dfg;
+pub mod mapper;
+pub mod metrics;
+pub mod ops;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod util;
+
+pub use cgra::{Grid, Layout};
+pub use cost::CostModel;
+pub use dfg::Dfg;
+pub use mapper::{Mapper, MapperConfig, Mapping};

@@ -1,0 +1,244 @@
+//! `helex` CLI — leader entrypoint.
+//!
+//! ```text
+//! helex exp <fig3|...|table8|all> [--quick] [--l-test N] [--no-gsg]
+//! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N]
+//! helex map --dfg FFT --size 10x10
+//! helex heatmap --set S4 --size 9x9
+//! helex sweep --set S4 --from 7x7 --to 10x10
+//! helex compare [--quick]
+//! helex show-dfg <NAME>
+//! helex self-check
+//! ```
+
+use anyhow::{bail, Context, Result};
+use helex::cgra::Grid;
+use helex::coordinator::{experiments, Coordinator, ExperimentConfig};
+use helex::dfg::{benchmarks, heta, Dfg};
+use helex::util::cli::{parse_size, Args};
+use helex::util::config::Config;
+
+fn load_dfgs(spec: &str) -> Result<Vec<Dfg>> {
+    if let Some(set) = spec.strip_prefix('S').and_then(|s| s.parse::<u8>().ok()) {
+        if (1..=6).contains(&set) {
+            return Ok(benchmarks::dfg_set(spec));
+        }
+    }
+    spec.split(',')
+        .map(|n| {
+            let n = n.trim();
+            if benchmarks::TABLE_II.iter().any(|(b, _, _)| *b == n) {
+                Ok(benchmarks::benchmark(n))
+            } else if heta::TABLE_IX.iter().any(|(b, ..)| *b == n) {
+                Ok(heta::heta_benchmark(n))
+            } else {
+                bail!("unknown DFG '{n}' (Table II names, Table IX names, or S1..S6)")
+            }
+        })
+        .collect()
+}
+
+fn build_config(args: &Args) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config") {
+        match Config::load(std::path::Path::new(path)) {
+            Ok(file) => cfg.apply_file(&file),
+            Err(e) => eprintln!("[helex] warning: config {path}: {e}"),
+        }
+    }
+    if let Some(v) = args.get("l-test") {
+        cfg.l_test_base = v.parse().unwrap_or(cfg.l_test_base);
+    }
+    if args.flag("paper-scale") {
+        cfg.l_test_base = 2000;
+    }
+    if args.flag("no-gsg") {
+        cfg.run_gsg = false;
+    }
+    if args.flag("no-heatmap") {
+        cfg.use_heatmap = false;
+    }
+    if args.flag("no-xla") {
+        cfg.use_xla_scorer = false;
+    }
+    if args.flag("verbose") {
+        cfg.verbose = true;
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.mapper.seed = seed.parse().unwrap_or(cfg.mapper.seed);
+    }
+    if let Some(dir) = args.get("results-dir") {
+        cfg.results_dir = dir.into();
+    }
+    cfg
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.subcommand.clone() else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "exp" => {
+            let name = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("all");
+            let quick = args.flag("quick") || !args.flag("paper-scale");
+            let mut co = Coordinator::new(build_config(&args));
+            if let Some(err) = co.self_check() {
+                eprintln!("[helex] scorer self-check ok (max rel err {err:.2e})");
+            }
+            experiments::run_experiment(&mut co, name, quick)?;
+        }
+        "explore" => {
+            let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
+            let (r, c) = args.size("size").context("--size RxC required")?;
+            let mut co = Coordinator::new(build_config(&args));
+            let result = co
+                .run_helex(&dfgs, Grid::new(r, c))
+                .context("DFG set does not map onto this CGRA size")?;
+            println!("full cost     : {:.1}", co.area.layout_cost(&result.full_layout));
+            println!("initial layout: {}", if result.stats.heatmap_used { "heatmap" } else { "full" });
+            println!("best cost     : {:.1}", result.best_cost);
+            println!(
+                "reduction     : {:.1}% area, {:.1}% power",
+                helex::cost::reduction_pct(
+                    co.area.layout_cost(&result.full_layout),
+                    result.best_cost
+                ),
+                helex::cost::reduction_pct(
+                    co.power.layout_cost(&result.full_layout),
+                    co.power.layout_cost(&result.best_layout)
+                ),
+            );
+            println!(
+                "instances     : {} -> {}",
+                result.full_layout.compute_instances(),
+                result.best_layout.compute_instances()
+            );
+            println!(
+                "S_exp {} S_tst {}  t={:.1}s",
+                result.stats.expanded,
+                result.stats.tested,
+                result.stats.t_total()
+            );
+            if args.flag("show") {
+                println!("{}", result.best_layout.render());
+            }
+        }
+        "map" => {
+            let dfgs = load_dfgs(args.get("dfg").context("--dfg NAME required")?)?;
+            let (r, c) = args.size("size").context("--size RxC required")?;
+            let co = Coordinator::new(build_config(&args));
+            let grid = Grid::new(r, c);
+            let full =
+                helex::cgra::Layout::full(grid, helex::dfg::groups_used(&dfgs));
+            for d in &dfgs {
+                match co.mapper.map(d, &full) {
+                    Some(m) => println!(
+                        "{}: mapped (latency {}, reserved {})",
+                        d.name,
+                        m.latency(d),
+                        m.reserved.len()
+                    ),
+                    None => println!("{}: FAILED", d.name),
+                }
+            }
+        }
+        "heatmap" => {
+            let dfgs = load_dfgs(args.get_or("set", "S4"))?;
+            let (r, c) = args.size("size").context("--size RxC required")?;
+            let co = Coordinator::new(build_config(&args));
+            let grid = Grid::new(r, c);
+            let full = helex::cgra::Layout::full(grid, helex::dfg::groups_used(&dfgs));
+            match helex::search::heatmap::initial_layout(&dfgs, &full, &co.mapper) {
+                helex::search::heatmap::HeatmapOutcome::Heatmap(h) => {
+                    println!(
+                        "heatmap usable: {} -> {} instances",
+                        full.compute_instances(),
+                        h.compute_instances()
+                    );
+                    println!("{}", h.render());
+                }
+                helex::search::heatmap::HeatmapOutcome::FullFallback => {
+                    println!("heatmap failed re-mapping; search would start from full")
+                }
+                helex::search::heatmap::HeatmapOutcome::Infeasible => {
+                    println!("set does not map on the full layout")
+                }
+            }
+        }
+        "sweep" => {
+            let dfgs = load_dfgs(args.get_or("set", "S4"))?;
+            let (r0, c0) = parse_size(args.get_or("from", "7x7")).context("--from")?;
+            let (r1, c1) = parse_size(args.get_or("to", "10x10")).context("--to")?;
+            let mut co = Coordinator::new(build_config(&args));
+            let mut best: Option<((usize, usize), f64)> = None;
+            for r in r0..=r1 {
+                for c in c0..=c1 {
+                    if let Some(res) = co.run_helex(&dfgs, Grid::new(r, c)) {
+                        println!("{r}x{c}: cost {:.1}", res.best_cost);
+                        if best.map_or(true, |(_, b)| res.best_cost < b) {
+                            best = Some(((r, c), res.best_cost));
+                        }
+                    } else {
+                        println!("{r}x{c}: unmappable");
+                    }
+                }
+            }
+            if let Some(((r, c), cost)) = best {
+                println!("best size: {r}x{c} (cost {cost:.1})");
+            }
+        }
+        "compare" => {
+            let mut co = Coordinator::new(build_config(&args));
+            experiments::run_experiment(&mut co, "fig11", args.flag("quick"))?;
+        }
+        "show-dfg" => {
+            let name = args.positional.first().context("show-dfg NAME")?;
+            let d = load_dfgs(name)?.remove(0);
+            println!("{}: V={} E={}", d.name, d.num_nodes(), d.num_edges());
+            let h = d.group_histogram();
+            for g in helex::ops::ALL_GROUPS {
+                if h[g.index()] > 0 {
+                    println!("  {:<6} {}", g.name(), h[g.index()]);
+                }
+            }
+            println!("  critical path: {} nodes", d.critical_path_nodes());
+        }
+        "self-check" => {
+            let mut co = Coordinator::new(build_config(&args));
+            match co.self_check() {
+                Some(err) => println!("scorer self-check OK (max rel err {err:.2e})"),
+                None => println!("scorer unavailable (run `make artifacts`)"),
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "helex — heterogeneous layout explorer for spatial elastic CGRAs
+
+USAGE:
+  helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
+            [--quick] [--paper-scale] [--l-test N] [--no-gsg] [--no-heatmap]
+            [--no-xla] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
+  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show]
+  helex map --dfg NAME --size RxC
+  helex heatmap --set S4 --size RxC
+  helex sweep --set S4 --from 7x7 --to 10x10
+  helex compare [--quick]
+  helex show-dfg NAME
+  helex self-check"
+    );
+}

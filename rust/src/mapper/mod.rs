@@ -1,0 +1,364 @@
+//! Reserve-on-demand spatial mapper (RodMap-like substrate).
+//!
+//! The paper uses RodMap [22] as a black box: a fast heuristic spatial
+//! mapper with ~90% success that resolves link congestion by *reserving*
+//! CGRA cells around congested links solely for routing. This module
+//! implements the same mechanism:
+//!
+//! 1. **Placement** ([`place`]): loads spread around the border, compute
+//!    nodes greedily placed in topological order minimising distance to
+//!    placed predecessors, stores drained to the nearest border cell.
+//! 2. **Routing** ([`route`]): negotiated-congestion routing (PathFinder
+//!    style) over the 4NN switch network; links have capacity one value
+//!    stream, but edges with the same source share links for free
+//!    (fan-out broadcast).
+//! 3. **Reserve-on-demand**: if congestion persists, the compute cell
+//!    next to the most-overused link is evicted and reserved for routing
+//!    only, its node re-placed elsewhere, and routing retried.
+//!
+//! The mapper is deterministic for a given seed; multiple placement
+//! attempts perturb tie-breaks.
+
+pub mod place;
+pub mod route;
+
+use crate::cgra::{CellId, Grid, Layout};
+use crate::dfg::Dfg;
+use crate::util::rng::Rng;
+
+/// Mapper tuning knobs.
+#[derive(Debug, Clone)]
+pub struct MapperConfig {
+    /// Negotiated-congestion routing rounds per placement.
+    pub route_iters: usize,
+    /// Independent placement attempts (different tie-break jitter).
+    pub placement_attempts: usize,
+    /// Maximum cells reserved for routing before giving up.
+    pub max_reserves: usize,
+    /// History penalty increment per overused link per round.
+    pub hist_increment: f64,
+    /// Present-sharing penalty factor.
+    pub present_penalty: f64,
+    /// Base RNG seed (attempt index is mixed in).
+    pub seed: u64,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        Self {
+            route_iters: 12,
+            placement_attempts: 5,
+            max_reserves: 12,
+            hist_increment: 1.5,
+            present_penalty: 2.0,
+            seed: 0xC6A1,
+        }
+    }
+}
+
+/// A successful mapping of one DFG onto one layout.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// Cell hosting each DFG node.
+    pub node_cell: Vec<CellId>,
+    /// For each DFG edge (same index as `dfg.edges`), the cell path from
+    /// the source node's cell to the destination node's cell (inclusive).
+    pub edge_paths: Vec<Vec<CellId>>,
+    /// Cells reserved for routing only (no op placed).
+    pub reserved: Vec<CellId>,
+}
+
+impl Mapping {
+    /// Post-map latency: longest register-to-register path where each op
+    /// costs one cycle and each link hop costs one cycle (Section IV-I).
+    pub fn latency(&self, dfg: &Dfg) -> usize {
+        let order = dfg.topo_order().expect("mapped DFG must be a DAG");
+        let preds = dfg.preds();
+        // per-edge hop count lookup
+        let mut hops = std::collections::HashMap::new();
+        for (i, &(s, d)) in dfg.edges.iter().enumerate() {
+            let h = self.edge_paths[i].len().saturating_sub(1);
+            hops.insert((s, d), h);
+        }
+        let mut lat = vec![1usize; dfg.num_nodes()];
+        for &u in &order {
+            let mut best = 0usize;
+            for &p in &preds[u as usize] {
+                let h = *hops.get(&(p, u)).unwrap_or(&0);
+                best = best.max(lat[p as usize] + h);
+            }
+            lat[u as usize] = best + 1;
+        }
+        lat.into_iter().max().unwrap_or(0)
+    }
+
+    /// Directed input ports (cell, direction 0..4) receiving a value in
+    /// this mapping — the FIFO-usage footprint for Table VI.
+    pub fn input_ports_used(&self, grid: &Grid) -> std::collections::HashSet<(CellId, usize)> {
+        let mut used = std::collections::HashSet::new();
+        for path in &self.edge_paths {
+            for w in path.windows(2) {
+                let (u, v) = (w[0], w[1]);
+                // direction from v's perspective: which neighbour is u?
+                for d in 0..4 {
+                    if grid.neighbor(v, d) == Some(u) {
+                        used.insert((v, d));
+                    }
+                }
+            }
+        }
+        used
+    }
+
+    /// Fast feasibility-witness check: this mapping remains valid for
+    /// `layout` iff every compute node sits on a cell that still supports
+    /// its group (support removal never touches the switch fabric, so
+    /// routes stay valid). Used by the search to skip re-mapping.
+    pub fn still_valid(&self, dfg: &Dfg, layout: &Layout) -> bool {
+        dfg.nodes.iter().enumerate().all(|(n, op)| {
+            op.is_memory() || layout.supports(self.node_cell[n], op.group())
+        })
+    }
+
+    /// Structural validation against a DFG + layout; returns violations.
+    pub fn validate(&self, dfg: &Dfg, layout: &Layout) -> Vec<String> {
+        let g = &layout.grid;
+        let mut errs = Vec::new();
+        if self.node_cell.len() != dfg.num_nodes() {
+            errs.push("node_cell length mismatch".into());
+            return errs;
+        }
+        // 1. one node per cell
+        let mut seen = std::collections::HashSet::new();
+        for (n, &c) in self.node_cell.iter().enumerate() {
+            if !seen.insert(c) {
+                errs.push(format!("cell {c} hosts more than one node (node {n})"));
+            }
+        }
+        // 2. compatibility + cell kinds + reservations
+        for (n, op) in dfg.nodes.iter().enumerate() {
+            let c = self.node_cell[n];
+            if op.is_memory() {
+                if !g.is_io(c) {
+                    errs.push(format!("mem node {n} on non-IO cell {c}"));
+                }
+            } else {
+                if !g.is_compute(c) {
+                    errs.push(format!("compute node {n} on non-compute cell {c}"));
+                }
+                if !layout.supports(c, op.group()) {
+                    errs.push(format!("node {n} ({op}) on cell {c} lacking {}", op.group()));
+                }
+                if self.reserved.contains(&c) {
+                    errs.push(format!("node {n} on reserved cell {c}"));
+                }
+            }
+        }
+        // 3. paths connect and are adjacent
+        for (i, &(s, d)) in dfg.edges.iter().enumerate() {
+            let path = &self.edge_paths[i];
+            if path.first() != Some(&self.node_cell[s as usize])
+                || path.last() != Some(&self.node_cell[d as usize])
+            {
+                errs.push(format!("edge {i} path endpoints wrong"));
+            }
+            for w in path.windows(2) {
+                if g.manhattan(w[0], w[1]) != 1 {
+                    errs.push(format!("edge {i} has non-adjacent hop {}->{}", w[0], w[1]));
+                }
+            }
+        }
+        // 4. link capacity: distinct source nodes per directed link <= 1
+        let mut link_srcs: std::collections::HashMap<usize, std::collections::HashSet<u32>> =
+            std::collections::HashMap::new();
+        for (i, &(s, _)) in dfg.edges.iter().enumerate() {
+            for w in self.edge_paths[i].windows(2) {
+                for dir in 0..4 {
+                    if g.neighbor(w[0], dir) == Some(w[1]) {
+                        link_srcs.entry(g.link(w[0], dir)).or_default().insert(s);
+                    }
+                }
+            }
+        }
+        for (link, srcs) in link_srcs {
+            if srcs.len() > 1 {
+                errs.push(format!("link {link} carries {} distinct values", srcs.len()));
+            }
+        }
+        errs
+    }
+}
+
+/// The mapper.
+#[derive(Debug, Clone, Default)]
+pub struct Mapper {
+    pub cfg: MapperConfig,
+}
+
+impl Mapper {
+    pub fn new(cfg: MapperConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Map one DFG onto a layout. Returns `None` on failure.
+    pub fn map(&self, dfg: &Dfg, layout: &Layout) -> Option<Mapping> {
+        for attempt in 0..self.cfg.placement_attempts {
+            let mut rng = Rng::seed(self.cfg.seed ^ (attempt as u64).wrapping_mul(0x9E37));
+            let mut reserved: Vec<CellId> = Vec::new();
+            // placement; retried after each new reservation. Reserves
+            // that do not reduce congestion earn strikes; two strikes
+            // abandon this placement attempt (perf: avoids burning the
+            // whole reserve budget on hopeless placements).
+            let mut best_overuse = usize::MAX;
+            let mut strikes = 0usize;
+            'reserve: for _round in 0..=self.cfg.max_reserves {
+                let Some(placement) =
+                    place::place(dfg, layout, &reserved, &mut rng)
+                else {
+                    break 'reserve; // placement impossible under reservations
+                };
+                match route::route(dfg, layout, &placement, &self.cfg) {
+                    route::RouteOutcome::Routed(paths) => {
+                        let m = Mapping {
+                            node_cell: placement,
+                            edge_paths: paths,
+                            reserved: reserved.clone(),
+                        };
+                        debug_assert!(
+                            m.validate(dfg, layout).is_empty(),
+                            "mapper produced invalid mapping: {:?}",
+                            m.validate(dfg, layout)
+                        );
+                        return Some(m);
+                    }
+                    route::RouteOutcome::Congested { hot_cell, overuse } => {
+                        if overuse < best_overuse {
+                            best_overuse = overuse;
+                            strikes = 0;
+                        } else {
+                            strikes += 1;
+                            if strikes >= 3 {
+                                break 'reserve; // reserves are not helping
+                            }
+                        }
+                        // reserve-on-demand: free the hot cell for routing
+                        if reserved.len() >= self.cfg.max_reserves {
+                            break 'reserve;
+                        }
+                        if layout.grid.is_compute(hot_cell) && !reserved.contains(&hot_cell) {
+                            reserved.push(hot_cell);
+                        } else {
+                            break 'reserve; // nothing sensible to reserve
+                        }
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// Test whether *all* DFGs map (the paper's `testLayout`). Short-
+    /// circuits on first failure.
+    pub fn test_layout(&self, dfgs: &[Dfg], layout: &Layout) -> bool {
+        dfgs.iter().all(|d| self.map(d, layout).is_some())
+    }
+
+    /// Map all DFGs individually, returning all mappings or None.
+    pub fn map_all(&self, dfgs: &[Dfg], layout: &Layout) -> Option<Vec<Mapping>> {
+        dfgs.iter().map(|d| self.map(d, layout)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::benchmarks;
+    use crate::ops::GroupSet;
+
+    fn full_layout(r: usize, c: usize, dfgs: &[Dfg]) -> Layout {
+        Layout::full(Grid::new(r, c), crate::dfg::groups_used(dfgs))
+    }
+
+    #[test]
+    fn maps_tiny_dfg_on_small_grid() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, std::slice::from_ref(&d));
+        let m = Mapper::default().map(&d, &l).expect("SOB must map on 5x5");
+        assert!(m.validate(&d, &l).is_empty());
+    }
+
+    #[test]
+    fn maps_all_paper_benchmarks_on_10x10() {
+        let dfgs = benchmarks::all();
+        let l = full_layout(10, 10, &dfgs);
+        let mapper = Mapper::default();
+        for d in &dfgs {
+            let m = mapper.map(d, &l);
+            assert!(m.is_some(), "{} failed to map on 10x10 full layout", d.name);
+            let m = m.unwrap();
+            let errs = m.validate(d, &l);
+            assert!(errs.is_empty(), "{}: {errs:?}", d.name);
+        }
+    }
+
+    #[test]
+    fn fails_when_support_missing() {
+        let d = benchmarks::benchmark("BIL"); // needs Div + Other
+        let groups = GroupSet::from_groups(&[crate::ops::OpGroup::Arith]);
+        let l = Layout::full(Grid::new(10, 10), groups);
+        assert!(Mapper::default().map(&d, &l).is_none());
+    }
+
+    #[test]
+    fn fails_when_grid_too_small() {
+        let d = benchmarks::benchmark("SAD"); // 63 compute ops
+        let l = full_layout(5, 5, std::slice::from_ref(&d)); // 9 compute cells
+        assert!(Mapper::default().map(&d, &l).is_none());
+    }
+
+    #[test]
+    fn latency_at_least_critical_path() {
+        let d = benchmarks::benchmark("BOX");
+        let l = full_layout(8, 8, std::slice::from_ref(&d));
+        let m = Mapper::default().map(&d, &l).unwrap();
+        assert!(m.latency(&d) >= d.critical_path_nodes());
+    }
+
+    #[test]
+    fn input_ports_are_plausible() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, std::slice::from_ref(&d));
+        let m = Mapper::default().map(&d, &l).unwrap();
+        let ports = m.input_ports_used(&l.grid);
+        // at least one port per edge endpoint, at most 4 per cell
+        assert!(!ports.is_empty());
+        for &(_, dir) in &ports {
+            assert!(dir < 4);
+        }
+    }
+
+    #[test]
+    fn test_layout_checks_all() {
+        let dfgs: Vec<Dfg> =
+            ["SOB", "GB"].iter().map(|n| benchmarks::benchmark(n)).collect();
+        let l = full_layout(7, 7, &dfgs);
+        assert!(Mapper::default().test_layout(&dfgs, &l));
+        // removing Arith everywhere must break both
+        let mut crippled = l.clone();
+        for c in crippled.grid.compute_cells().collect::<Vec<_>>() {
+            let s = crippled.support(c).without(crate::ops::OpGroup::Arith);
+            crippled.set_support(c, s);
+        }
+        assert!(!Mapper::default().test_layout(&dfgs, &crippled));
+    }
+
+    #[test]
+    fn deterministic_mapping() {
+        let d = benchmarks::benchmark("RGB");
+        let l = full_layout(8, 8, std::slice::from_ref(&d));
+        let m1 = Mapper::default().map(&d, &l).unwrap();
+        let m2 = Mapper::default().map(&d, &l).unwrap();
+        assert_eq!(m1.node_cell, m2.node_cell);
+        assert_eq!(m1.edge_paths, m2.edge_paths);
+    }
+}

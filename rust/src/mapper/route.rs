@@ -1,0 +1,403 @@
+//! Negotiated-congestion routing over the 4NN switch network.
+//!
+//! PathFinder-style: every routing round rips up all paths and re-routes
+//! each edge by A* search, where a link's cost is
+//! `base + history + present_penalty * overuse`. Links carry one value
+//! stream, but edges with the same source share links for free (fan-out
+//! of the same value). History accumulates on overused links between
+//! rounds, pushing later rounds around persistent congestion; negotiation
+//! exits early when total overuse stops improving.
+//!
+//! If congestion survives, the most-overused link's adjacent occupied
+//! compute cell is reported as the `hot_cell` so the driver can apply
+//! reserve-on-demand.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): the A* heuristic is the full
+//! manhattan distance when the edge's source drives no links yet (every
+//! remaining hop then costs ≥ 1), and the 0.01-reuse floor otherwise —
+//! both admissible. Distance/parent arrays are reused across calls via
+//! generation stamps instead of reallocation.
+
+use crate::cgra::{CellId, Layout};
+use crate::dfg::Dfg;
+use crate::mapper::MapperConfig;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Outcome of a routing attempt.
+pub enum RouteOutcome {
+    Routed(Vec<Vec<CellId>>),
+    /// Still congested; `hot_cell` is the recommended reservation target
+    /// and `overuse` the best (lowest) total link overuse seen — the
+    /// driver uses it to detect reserves that are not helping.
+    Congested { hot_cell: CellId, overuse: usize },
+}
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    /// cost-so-far + admissible heuristic
+    priority: f64,
+    cost: f64,
+    cell: CellId,
+}
+
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap on priority, tie-break on cell id for determinism
+        other
+            .priority
+            .partial_cmp(&self.priority)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.cell.cmp(&self.cell))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Per-link usage bookkeeping: which source nodes currently drive a link.
+#[derive(Clone, Default)]
+struct LinkUse {
+    srcs: Vec<u32>, // distinct DFG source nodes using this link
+}
+
+impl LinkUse {
+    fn overuse(&self) -> usize {
+        self.srcs.len().saturating_sub(1)
+    }
+    fn has(&self, s: u32) -> bool {
+        self.srcs.contains(&s)
+    }
+    fn add(&mut self, s: u32) {
+        if !self.has(s) {
+            self.srcs.push(s);
+        }
+    }
+}
+
+/// Reusable A* scratch buffers (generation-stamped to skip clearing).
+struct AStarBuffers {
+    dist: Vec<f64>,
+    prev: Vec<CellId>,
+    stamp: Vec<u32>,
+    generation: u32,
+}
+
+impl AStarBuffers {
+    fn new(n: usize) -> Self {
+        Self {
+            dist: vec![f64::INFINITY; n],
+            prev: vec![u16::MAX; n],
+            stamp: vec![0; n],
+            generation: 0,
+        }
+    }
+    fn begin(&mut self) {
+        self.generation += 1;
+    }
+    #[inline]
+    fn get_dist(&self, c: usize) -> f64 {
+        if self.stamp[c] == self.generation {
+            self.dist[c]
+        } else {
+            f64::INFINITY
+        }
+    }
+    #[inline]
+    fn set(&mut self, c: usize, d: f64, p: CellId) {
+        self.dist[c] = d;
+        self.prev[c] = p;
+        self.stamp[c] = self.generation;
+    }
+}
+
+/// Route all edges of a placed DFG.
+pub fn route(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    cfg: &MapperConfig,
+) -> RouteOutcome {
+    let g = &layout.grid;
+    let nlinks = g.num_links();
+    let mut history = vec![0.0f64; nlinks];
+
+    // Route longer edges first: they have fewer detour options.
+    let mut order: Vec<usize> = (0..dfg.edges.len()).collect();
+    order.sort_by_key(|&i| {
+        let (s, d) = dfg.edges[i];
+        std::cmp::Reverse(
+            g.manhattan(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
+        )
+    });
+
+    let mut paths: Vec<Vec<CellId>> = vec![Vec::new(); dfg.edges.len()];
+    let mut last_usage: Vec<LinkUse> = vec![LinkUse::default(); nlinks];
+    let mut buffers = AStarBuffers::new(g.num_cells());
+    // links-per-source count this round: a source with zero links admits
+    // the strong (manhattan) heuristic.
+    let mut src_links: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    // early-exit when negotiation stalls: if total overuse has not
+    // improved for `stall_limit` rounds, more rounds will not help and
+    // the caller should reserve a cell instead.
+    let mut best_overuse = usize::MAX;
+    let mut stalled = 0usize;
+    let stall_limit = 3;
+
+    for _round in 0..cfg.route_iters {
+        let mut usage: Vec<LinkUse> = vec![LinkUse::default(); nlinks];
+        src_links.clear();
+        for &ei in &order {
+            let (sn, dn) = dfg.edges[ei];
+            let (src, dst) = (placement[sn as usize], placement[dn as usize]);
+            let strong_heuristic = src_links.get(&sn).copied().unwrap_or(0) == 0;
+            let path = astar(
+                g,
+                src,
+                dst,
+                sn,
+                strong_heuristic,
+                &usage,
+                &history,
+                cfg,
+                &mut buffers,
+            );
+            for w in path.windows(2) {
+                let dir = direction(g, w[0], w[1]);
+                usage[g.link(w[0], dir)].add(sn);
+            }
+            *src_links.entry(sn).or_insert(0) += path.len().saturating_sub(1) as u32;
+            paths[ei] = path;
+        }
+        // converged?
+        let over: Vec<usize> =
+            (0..nlinks).filter(|&l| usage[l].overuse() > 0).collect();
+        if over.is_empty() {
+            return RouteOutcome::Routed(paths);
+        }
+        // accumulate history on overused links
+        let mut total_overuse = 0;
+        for &l in &over {
+            history[l] += cfg.hist_increment * usage[l].overuse() as f64;
+            total_overuse += usage[l].overuse();
+        }
+        last_usage = usage;
+        if total_overuse < best_overuse {
+            best_overuse = total_overuse;
+            stalled = 0;
+        } else {
+            stalled += 1;
+            if stalled >= stall_limit {
+                break; // negotiation stalled; hand over to reserve-on-demand
+            }
+        }
+    }
+
+    // Pick the hottest link and suggest reserving an adjacent occupied
+    // compute cell (RodMap's reserve-on-demand trigger).
+    let hottest = (0..nlinks)
+        .max_by_key(|&l| last_usage[l].overuse())
+        .unwrap_or(0);
+    let cell = (hottest / 4) as CellId;
+    let dir = hottest % 4;
+    let occupied: Vec<CellId> = placement.to_vec();
+    let candidates = [Some(cell), g.neighbor(cell, dir)];
+    let hot_cell = candidates
+        .into_iter()
+        .flatten()
+        .chain(g.neighbors(cell))
+        .find(|&c| g.is_compute(c) && occupied.contains(&c))
+        .unwrap_or(cell);
+    RouteOutcome::Congested { hot_cell, overuse: best_overuse }
+}
+
+/// Direction index (0..4) such that `g.neighbor(a, dir) == b`.
+fn direction(g: &crate::cgra::Grid, a: CellId, b: CellId) -> usize {
+    (0..4)
+        .find(|&d| g.neighbor(a, d) == Some(b))
+        .expect("cells must be adjacent")
+}
+
+/// A* from `src` to `dst` for the value produced by node `src_node`.
+///
+/// Heuristic: `manhattan` when the source drives no links yet this round
+/// (every remaining step costs at least the base 1.0), else
+/// `0.01 * manhattan` (a route could in principle ride reused links the
+/// whole way at the reuse floor). Both are admissible, so paths are
+/// optimal under the current penalty landscape.
+#[allow(clippy::too_many_arguments)]
+fn astar(
+    g: &crate::cgra::Grid,
+    src: CellId,
+    dst: CellId,
+    src_node: u32,
+    strong_heuristic: bool,
+    usage: &[LinkUse],
+    history: &[f64],
+    cfg: &MapperConfig,
+    buf: &mut AStarBuffers,
+) -> Vec<CellId> {
+    let h_scale = if strong_heuristic { 0.999 } else { 0.01 };
+    let h = |c: CellId| g.manhattan(c, dst) as f64 * h_scale;
+    buf.begin();
+    let mut heap = BinaryHeap::with_capacity(64);
+    buf.set(src as usize, 0.0, src);
+    heap.push(HeapEntry { priority: h(src), cost: 0.0, cell: src });
+    while let Some(HeapEntry { cost, cell, .. }) = heap.pop() {
+        if cell == dst {
+            break;
+        }
+        if cost > buf.get_dist(cell as usize) {
+            continue;
+        }
+        for d in 0..4 {
+            let Some(next) = g.neighbor(cell, d) else { continue };
+            let link = g.link(cell, d);
+            let u = &usage[link];
+            // same-source reuse is nearly free (fan-out broadcast);
+            // otherwise pay base + congestion penalties.
+            let step = if u.has(src_node) {
+                0.01
+            } else {
+                1.0 + history[link] + cfg.present_penalty * u.srcs.len() as f64
+            };
+            let nc = cost + step;
+            if nc < buf.get_dist(next as usize) {
+                buf.set(next as usize, nc, cell);
+                heap.push(HeapEntry { priority: nc + h(next), cost: nc, cell: next });
+            }
+        }
+    }
+    // reconstruct
+    let mut path = vec![dst];
+    let mut cur = dst;
+    while cur != src {
+        cur = buf.prev[cur as usize];
+        debug_assert!(cur != u16::MAX, "grid is connected; path must exist");
+        path.push(cur);
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::ops::{GroupSet, Op};
+
+    fn straight_line_dfg() -> (Dfg, Layout, Vec<CellId>) {
+        // load(0) -> add(1) -> store(2), placed in a row
+        let d = Dfg::new("line", vec![Op::Load, Op::Add, Op::Store], vec![(0, 1), (1, 2)]);
+        let l = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
+        let g = &l.grid;
+        let placement = vec![g.cell(2, 0), g.cell(2, 2), g.cell(2, 4)];
+        (d, l, placement)
+    }
+
+    #[test]
+    fn routes_straight_line() {
+        let (d, l, p) = straight_line_dfg();
+        match route(&d, &l, &p, &MapperConfig::default()) {
+            RouteOutcome::Routed(paths) => {
+                assert_eq!(paths[0].first(), Some(&p[0]));
+                assert_eq!(paths[0].last(), Some(&p[1]));
+                // shortest path length = manhattan + 1 cells
+                assert_eq!(paths[0].len(), 3);
+                assert_eq!(paths[1].len(), 3);
+            }
+            RouteOutcome::Congested { .. } => panic!("line must route"),
+        }
+    }
+
+    #[test]
+    fn fanout_shares_links() {
+        // one load feeding two adjacent consumers: the shared prefix may
+        // overlap on the same link without counting as congestion.
+        let d = Dfg::new(
+            "fan",
+            vec![Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 1), (0, 2), (1, 3), (2, 4)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![g.cell(0, 2), g.cell(3, 2), g.cell(3, 3), g.cell(5, 2), g.cell(5, 3)];
+        match route(&d, &l, &p, &MapperConfig::default()) {
+            RouteOutcome::Routed(_) => {}
+            RouteOutcome::Congested { .. } => panic!("fanout must route"),
+        }
+    }
+
+    #[test]
+    fn distinct_values_avoid_link_overlap() {
+        // two independent chains crossing the grid: router must keep
+        // their links disjoint.
+        let d = Dfg::new(
+            "cross",
+            vec![Op::Load, Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 2), (1, 3), (2, 4), (3, 5)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![
+            g.cell(0, 1),
+            g.cell(0, 3),
+            g.cell(3, 3), // crosses
+            g.cell(3, 1), // crosses
+            g.cell(5, 3),
+            g.cell(5, 1),
+        ];
+        match route(&d, &l, &p, &MapperConfig::default()) {
+            RouteOutcome::Routed(paths) => {
+                // verify capacity invariant with the Mapping validator
+                let m = crate::mapper::Mapping {
+                    node_cell: p,
+                    edge_paths: paths,
+                    reserved: vec![],
+                };
+                assert!(m.validate(&d, &l).is_empty());
+            }
+            RouteOutcome::Congested { .. } => panic!("cross must route"),
+        }
+    }
+
+    #[test]
+    fn astar_finds_shortest_path_uncongested() {
+        let g = Grid::new(8, 8);
+        let mut buf = AStarBuffers::new(g.num_cells());
+        let usage = vec![LinkUse::default(); g.num_links()];
+        let history = vec![0.0; g.num_links()];
+        let cfg = MapperConfig::default();
+        for (a, b) in [((1, 1), (6, 6)), ((0, 0), (7, 3)), ((4, 4), (4, 4))] {
+            let src = g.cell(a.0, a.1);
+            let dst = g.cell(b.0, b.1);
+            let p = astar(&g, src, dst, 0, true, &usage, &history, &cfg, &mut buf);
+            assert_eq!(p.len(), g.manhattan(src, dst) + 1, "{a:?}->{b:?}");
+        }
+    }
+
+    #[test]
+    fn buffers_reuse_across_generations() {
+        let g = Grid::new(5, 5);
+        let mut buf = AStarBuffers::new(g.num_cells());
+        let usage = vec![LinkUse::default(); g.num_links()];
+        let history = vec![0.0; g.num_links()];
+        let cfg = MapperConfig::default();
+        let p1 = astar(&g, g.cell(0, 0), g.cell(4, 4), 0, true, &usage, &history, &cfg, &mut buf);
+        let p2 = astar(&g, g.cell(4, 0), g.cell(0, 4), 1, true, &usage, &history, &cfg, &mut buf);
+        assert_eq!(p1.len(), 9);
+        assert_eq!(p2.len(), 9);
+    }
+
+    #[test]
+    fn direction_helper() {
+        let g = Grid::new(4, 4);
+        assert_eq!(direction(&g, g.cell(1, 1), g.cell(0, 1)), 0);
+        assert_eq!(direction(&g, g.cell(1, 1), g.cell(1, 2)), 1);
+    }
+}

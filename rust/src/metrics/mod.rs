@@ -1,0 +1,95 @@
+//! Latency and reduction accounting (paper Sections IV-A/IV-I).
+
+use crate::cgra::Layout;
+use crate::dfg::Dfg;
+use crate::mapper::Mapper;
+use crate::ops::NUM_GROUPS;
+
+/// Post-map latency ratio of a heterogeneous layout relative to the full
+/// layout, per DFG (Fig 10). Returns `None` when either layout fails to
+/// map (should not happen for layouts produced by the search).
+pub fn latency_ratio(
+    mapper: &Mapper,
+    dfg: &Dfg,
+    full: &Layout,
+    hetero: &Layout,
+) -> Option<f64> {
+    let mf = mapper.map(dfg, full)?;
+    let mh = mapper.map(dfg, hetero)?;
+    Some(mh.latency(dfg) as f64 / mf.latency(dfg) as f64)
+}
+
+/// Latency ratio using a known witness mapping for the heterogeneous
+/// layout (search results carry witnesses; layouts accepted through the
+/// witness fast-path may not re-map heuristically from scratch).
+pub fn latency_ratio_with_witness(
+    mapper: &Mapper,
+    dfg: &Dfg,
+    full: &Layout,
+    hetero_mapping: &crate::mapper::Mapping,
+) -> Option<f64> {
+    let mf = mapper.map(dfg, full)?;
+    Some(hetero_mapping.latency(dfg) as f64 / mf.latency(dfg) as f64)
+}
+
+/// Per-group instance reduction (in %) of `hetero` vs `full` over compute
+/// cells, indexed by `OpGroup::index()`. Groups absent from `full` report
+/// 0 (nothing to remove).
+pub fn group_reduction_pct(full: &Layout, hetero: &Layout) -> [f64; NUM_GROUPS] {
+    let nf = full.compute_group_instances();
+    let nh = hetero.compute_group_instances();
+    let mut out = [0.0; NUM_GROUPS];
+    for i in 0..NUM_GROUPS {
+        if nf[i] > 0 {
+            out[i] = (1.0 - nh[i] as f64 / nf[i] as f64) * 100.0;
+        }
+    }
+    out
+}
+
+/// Total instance reduction (%) over compute cells.
+pub fn total_reduction_pct(full: &Layout, hetero: &Layout) -> f64 {
+    let a = full.compute_instances();
+    let b = hetero.compute_instances();
+    if a == 0 {
+        0.0
+    } else {
+        (1.0 - b as f64 / a as f64) * 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::{GroupSet, OpGroup};
+
+    #[test]
+    fn reductions_zero_for_identical_layouts() {
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        assert_eq!(total_reduction_pct(&l, &l), 0.0);
+        assert_eq!(group_reduction_pct(&l, &l), [0.0; NUM_GROUPS]);
+    }
+
+    #[test]
+    fn reductions_track_removals() {
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let cell = l.grid.compute_cells().next().unwrap();
+        let h = l.without_group(cell, OpGroup::Div);
+        let g = group_reduction_pct(&l, &h);
+        // 1 of 16 Div instances removed
+        assert!((g[OpGroup::Div.index()] - 100.0 / 16.0).abs() < 1e-9);
+        assert_eq!(g[OpGroup::Arith.index()], 0.0);
+        assert!(total_reduction_pct(&l, &h) > 0.0);
+    }
+
+    #[test]
+    fn latency_ratio_one_for_same_layout() {
+        let d = benchmarks::benchmark("SOB");
+        let l = Layout::full(Grid::new(6, 6), d.groups_used());
+        let m = Mapper::default();
+        let r = latency_ratio(&m, &d, &l, &l).unwrap();
+        assert!((r - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,389 @@
+//! DFG operations and HeLEx operation groups (paper Table I).
+//!
+//! HeLEx never removes *individual* operations from a cell: operations are
+//! grouped by hardware implementation (Synopsys DesignWare in the paper)
+//! into six groups, and the search removes one *group instance* at a time.
+
+pub mod costs;
+
+use std::fmt;
+
+/// The six operation groups of Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum OpGroup {
+    /// Integer and logic ops (excluding DIV and MULT).
+    Arith = 0,
+    /// Integer and floating point DIV.
+    Div = 1,
+    /// Floating point ops (excluding DIV and MULT).
+    FP = 2,
+    /// Memory ops (LOAD, STORE) — only ever on I/O cells.
+    Mem = 3,
+    /// Integer and floating point MULT.
+    Mult = 4,
+    /// Special ops (EXP, LOG, SQRT, ...).
+    Other = 5,
+}
+
+/// Number of operation groups.
+pub const NUM_GROUPS: usize = 6;
+
+/// All groups, in enum order (also the order used by the AOT artifacts).
+pub const ALL_GROUPS: [OpGroup; NUM_GROUPS] = [
+    OpGroup::Arith,
+    OpGroup::Div,
+    OpGroup::FP,
+    OpGroup::Mem,
+    OpGroup::Mult,
+    OpGroup::Other,
+];
+
+/// The groups a *compute* cell may support (Mem lives on I/O cells and is
+/// never part of the search space).
+pub const COMPUTE_GROUPS: [OpGroup; 5] =
+    [OpGroup::Arith, OpGroup::Div, OpGroup::FP, OpGroup::Mult, OpGroup::Other];
+
+impl OpGroup {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<Self> {
+        ALL_GROUPS.get(i).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpGroup::Arith => "Arith",
+            OpGroup::Div => "Div",
+            OpGroup::FP => "FP",
+            OpGroup::Mem => "Mem",
+            OpGroup::Mult => "Mult",
+            OpGroup::Other => "Other",
+        }
+    }
+}
+
+impl fmt::Display for OpGroup {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Concrete DFG operations. The set mirrors what the paper's DFGs use:
+/// integer/logic arithmetic, FP arithmetic, int/FP multiply and divide,
+/// loads/stores, and the "Other" specials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    // Arith group
+    Add,
+    Sub,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Min,
+    Max,
+    Abs,
+    Cmp,
+    Select,
+    // FP group
+    FAdd,
+    FSub,
+    FMin,
+    FMax,
+    FAbs,
+    FCmp,
+    FToI,
+    IToF,
+    // Mult group
+    Mul,
+    FMul,
+    // Div group
+    Div,
+    Rem,
+    FDiv,
+    // Other group
+    Exp,
+    Log,
+    Sqrt,
+    Sin,
+    Cos,
+    // Mem group
+    Load,
+    Store,
+}
+
+impl Op {
+    /// Table I grouping.
+    pub fn group(self) -> OpGroup {
+        use Op::*;
+        match self {
+            Add | Sub | And | Or | Xor | Shl | Shr | Min | Max | Abs | Cmp | Select => {
+                OpGroup::Arith
+            }
+            FAdd | FSub | FMin | FMax | FAbs | FCmp | FToI | IToF => OpGroup::FP,
+            Mul | FMul => OpGroup::Mult,
+            Div | Rem | FDiv => OpGroup::Div,
+            Exp | Log | Sqrt | Sin | Cos => OpGroup::Other,
+            Load | Store => OpGroup::Mem,
+        }
+    }
+
+    /// Number of data inputs the operation consumes (1 or 2). Stores take
+    /// one data input (address generation is implicit in the elastic I/O
+    /// cell, as in T-CGRA); loads are sources.
+    pub fn arity(self) -> usize {
+        use Op::*;
+        match self {
+            Load => 0,
+            Abs | FAbs | FToI | IToF | Exp | Log | Sqrt | Sin | Cos | Store => 1,
+            _ => 2,
+        }
+    }
+
+    pub fn is_memory(self) -> bool {
+        self.group() == OpGroup::Mem
+    }
+
+    pub fn name(self) -> &'static str {
+        use Op::*;
+        match self {
+            Add => "add",
+            Sub => "sub",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Shl => "shl",
+            Shr => "shr",
+            Min => "min",
+            Max => "max",
+            Abs => "abs",
+            Cmp => "cmp",
+            Select => "select",
+            FAdd => "fadd",
+            FSub => "fsub",
+            FMin => "fmin",
+            FMax => "fmax",
+            FAbs => "fabs",
+            FCmp => "fcmp",
+            FToI => "ftoi",
+            IToF => "itof",
+            Mul => "mul",
+            FMul => "fmul",
+            Div => "div",
+            Rem => "rem",
+            FDiv => "fdiv",
+            Exp => "exp",
+            Log => "log",
+            Sqrt => "sqrt",
+            Sin => "sin",
+            Cos => "cos",
+            Load => "load",
+            Store => "store",
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A set of operation groups, as a bitmask. This is the per-cell unit the
+/// whole search manipulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default, PartialOrd, Ord)]
+pub struct GroupSet(pub u8);
+
+impl GroupSet {
+    pub const EMPTY: GroupSet = GroupSet(0);
+
+    /// All compute groups (everything except Mem).
+    pub fn all_compute() -> Self {
+        let mut s = GroupSet::EMPTY;
+        for g in COMPUTE_GROUPS {
+            s.insert(g);
+        }
+        s
+    }
+
+    /// Only the Mem group (I/O cells).
+    pub fn mem_only() -> Self {
+        let mut s = GroupSet::EMPTY;
+        s.insert(OpGroup::Mem);
+        s
+    }
+
+    pub fn from_groups(groups: &[OpGroup]) -> Self {
+        let mut s = GroupSet::EMPTY;
+        for &g in groups {
+            s.insert(g);
+        }
+        s
+    }
+
+    pub fn contains(self, g: OpGroup) -> bool {
+        self.0 & (1 << g.index()) != 0
+    }
+
+    pub fn insert(&mut self, g: OpGroup) {
+        self.0 |= 1 << g.index();
+    }
+
+    pub fn remove(&mut self, g: OpGroup) {
+        self.0 &= !(1 << g.index());
+    }
+
+    pub fn with(mut self, g: OpGroup) -> Self {
+        self.insert(g);
+        self
+    }
+
+    pub fn without(mut self, g: OpGroup) -> Self {
+        self.remove(g);
+        self
+    }
+
+    /// Remove every group in `mask`.
+    pub fn minus(self, mask: GroupSet) -> Self {
+        GroupSet(self.0 & !mask.0)
+    }
+
+    pub fn union(self, other: GroupSet) -> Self {
+        GroupSet(self.0 | other.0)
+    }
+
+    pub fn intersect(self, other: GroupSet) -> Self {
+        GroupSet(self.0 & other.0)
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn is_subset_of(self, other: GroupSet) -> bool {
+        self.0 & !other.0 == 0
+    }
+
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = OpGroup> {
+        ALL_GROUPS.into_iter().filter(move |g| self.contains(*g))
+    }
+}
+
+impl fmt::Display for GroupSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_empty() {
+            return f.write_str("{}");
+        }
+        let names: Vec<&str> = self.iter().map(|g| g.name()).collect();
+        write!(f, "{{{}}}", names.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_op_has_a_group() {
+        use Op::*;
+        let ops = [
+            Add, Sub, And, Or, Xor, Shl, Shr, Min, Max, Abs, Cmp, Select, FAdd, FSub, FMin,
+            FMax, FAbs, FCmp, FToI, IToF, Mul, FMul, Div, Rem, FDiv, Exp, Log, Sqrt, Sin, Cos,
+            Load, Store,
+        ];
+        for op in ops {
+            let g = op.group();
+            assert!(ALL_GROUPS.contains(&g));
+            assert!(op.arity() <= 2);
+        }
+    }
+
+    #[test]
+    fn grouping_matches_table_1() {
+        assert_eq!(Op::Add.group(), OpGroup::Arith);
+        assert_eq!(Op::Shl.group(), OpGroup::Arith);
+        assert_eq!(Op::Div.group(), OpGroup::Div);
+        assert_eq!(Op::FDiv.group(), OpGroup::Div);
+        assert_eq!(Op::FAdd.group(), OpGroup::FP);
+        assert_eq!(Op::Load.group(), OpGroup::Mem);
+        assert_eq!(Op::Store.group(), OpGroup::Mem);
+        assert_eq!(Op::Mul.group(), OpGroup::Mult);
+        assert_eq!(Op::FMul.group(), OpGroup::Mult);
+        assert_eq!(Op::Exp.group(), OpGroup::Other);
+        assert_eq!(Op::Sqrt.group(), OpGroup::Other);
+    }
+
+    #[test]
+    fn groupset_basic_algebra() {
+        let mut s = GroupSet::EMPTY;
+        assert!(s.is_empty());
+        s.insert(OpGroup::Arith);
+        s.insert(OpGroup::Mult);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(OpGroup::Arith));
+        assert!(!s.contains(OpGroup::Div));
+        s.remove(OpGroup::Arith);
+        assert!(!s.contains(OpGroup::Arith));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn all_compute_excludes_mem() {
+        let s = GroupSet::all_compute();
+        assert_eq!(s.len(), 5);
+        assert!(!s.contains(OpGroup::Mem));
+        for g in COMPUTE_GROUPS {
+            assert!(s.contains(g));
+        }
+    }
+
+    #[test]
+    fn subset_and_minus() {
+        let a = GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mult]);
+        let b = GroupSet::all_compute();
+        assert!(a.is_subset_of(b));
+        assert!(!b.is_subset_of(a));
+        let c = b.minus(a);
+        assert!(!c.contains(OpGroup::Arith));
+        assert!(!c.contains(OpGroup::Mult));
+        assert!(c.contains(OpGroup::Div));
+        assert_eq!(c.union(a), b);
+    }
+
+    #[test]
+    fn groupset_iter_order_is_stable() {
+        let s = GroupSet::all_compute();
+        let v: Vec<OpGroup> = s.iter().collect();
+        assert_eq!(
+            v,
+            vec![OpGroup::Arith, OpGroup::Div, OpGroup::FP, OpGroup::Mult, OpGroup::Other]
+        );
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(GroupSet::EMPTY.to_string(), "{}");
+        assert_eq!(
+            GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mem]).to_string(),
+            "{Arith,Mem}"
+        );
+        assert_eq!(OpGroup::Other.to_string(), "Other");
+        assert_eq!(Op::FDiv.to_string(), "fdiv");
+    }
+
+    #[test]
+    fn from_index_roundtrip() {
+        for g in ALL_GROUPS {
+            assert_eq!(OpGroup::from_index(g.index()), Some(g));
+        }
+        assert_eq!(OpGroup::from_index(6), None);
+    }
+}

@@ -1,0 +1,282 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! `python/compile/aot.py` lowers the Layer-2 JAX functions (which call
+//! the Layer-1 Pallas kernels) to HLO **text** once at build time
+//! (`make artifacts`); this module loads that text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client
+//! and executes it from the search hot path. Python never runs here.
+//!
+//! Artifacts (shapes fixed at AOT time, zero-padded at call time):
+//!
+//! * `layout_cost.hlo.txt` —
+//!   `(layouts f32[B,C,G], gcosts f32[G], base f32[1]) -> (cost f32[B],)`
+//!   with B=256, C=512, G=8. Equation 1 over cell-level layout bitmaps.
+//! * `heatmap_stats.hlo.txt` —
+//!   `(mappings f32[D,C,G]) -> (heatmap f32[C,G], min_insts f32[G])`
+//!   with D=16: the per-cell union over DFGs and the per-group theoretical
+//!   minimum instance counts (Sections III-D/III-E).
+
+use crate::cgra::Layout;
+use crate::cost::CostModel;
+use crate::ops::{OpGroup, NUM_GROUPS};
+use crate::search::BatchScorer;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// AOT shape constants — must match `python/compile/aot.py`.
+pub const BATCH: usize = 256;
+pub const CELLS_PAD: usize = 512;
+pub const GROUPS_PAD: usize = 8;
+pub const DFGS_PAD: usize = 16;
+
+/// Default artifact directory, overridable with `HELEX_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("HELEX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("loading HLO text from {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).context("PJRT compile failed")
+}
+
+/// The PJRT-backed batch scorer.
+pub struct Scorer {
+    client: xla::PjRtClient,
+    cost_exe: xla::PjRtLoadedExecutable,
+    heatmap_exe: Option<xla::PjRtLoadedExecutable>,
+    /// Padded group-cost vector for the current cost model.
+    gcosts: Vec<f32>,
+    base_per_cell: f64,
+    /// Executions performed (for perf accounting).
+    pub calls: usize,
+}
+
+impl Scorer {
+    /// Load artifacts from `dir` for the given cost model.
+    pub fn load(dir: &Path, cost: &CostModel) -> Result<Self> {
+        let cost_path = dir.join("layout_cost.hlo.txt");
+        if !cost_path.exists() {
+            bail!(
+                "artifact {} missing — run `make artifacts` first",
+                cost_path.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let cost_exe = load_exe(&client, &cost_path)?;
+        let heatmap_path = dir.join("heatmap_stats.hlo.txt");
+        let heatmap_exe = if heatmap_path.exists() {
+            Some(load_exe(&client, &heatmap_path)?)
+        } else {
+            None
+        };
+        let mut gcosts = vec![0f32; GROUPS_PAD];
+        for g in crate::ops::ALL_GROUPS {
+            gcosts[g.index()] = cost.components.group[g.index()] as f32;
+        }
+        Ok(Self {
+            client,
+            cost_exe,
+            heatmap_exe,
+            gcosts,
+            base_per_cell: cost.components.empty_cell + cost.components.fifos,
+            calls: 0,
+        })
+    }
+
+    /// Convenience: load from the default artifact dir with area costs.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&artifacts_dir(), &CostModel::area())
+    }
+
+    pub fn has_heatmap_artifact(&self) -> bool {
+        self.heatmap_exe.is_some()
+    }
+
+    fn execute_cost(&mut self, layouts: Vec<f32>, base: f32) -> Result<Vec<f32>> {
+        let x = xla::Literal::vec1(&layouts).reshape(&[
+            BATCH as i64,
+            CELLS_PAD as i64,
+            GROUPS_PAD as i64,
+        ])?;
+        let g = xla::Literal::vec1(&self.gcosts);
+        let b = xla::Literal::vec1(&[base]);
+        let result = self.cost_exe.execute::<xla::Literal>(&[x, g, b])?[0][0]
+            .to_literal_sync()?;
+        self.calls += 1;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Score up to any number of cell-level layouts exactly (chunked into
+    /// BATCH-sized PJRT executions).
+    pub fn score_layouts(&mut self, layouts: &[Layout]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(layouts.len());
+        for chunk in layouts.chunks(BATCH) {
+            let nt = chunk[0].grid.num_compute();
+            let base = (nt as f64 * self.base_per_cell) as f32;
+            let mut buf = vec![0f32; BATCH * CELLS_PAD * GROUPS_PAD];
+            for (bi, l) in chunk.iter().enumerate() {
+                assert!(l.grid.num_cells() <= CELLS_PAD, "grid exceeds CELLS_PAD");
+                assert_eq!(l.grid.num_compute(), nt, "mixed grids in one chunk");
+                for (ci, cell) in l.grid.compute_cells().enumerate() {
+                    let s = l.support(cell);
+                    for g in s.iter() {
+                        buf[(bi * CELLS_PAD + ci) * GROUPS_PAD + g.index()] = 1.0;
+                    }
+                }
+            }
+            let costs = self.execute_cost(buf, base)?;
+            out.extend(costs[..chunk.len()].iter().map(|&c| c as f64));
+        }
+        Ok(out)
+    }
+
+    /// Score per-group instance vectors. Costs are linear in instance
+    /// counts, so counts are spread over pseudo-cells; results equal the
+    /// cell-level scoring exactly.
+    pub fn score_instance_vectors(
+        &mut self,
+        num_compute_cells: usize,
+        vectors: &[[usize; NUM_GROUPS]],
+    ) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(vectors.len());
+        for chunk in vectors.chunks(BATCH) {
+            let base = (num_compute_cells as f64 * self.base_per_cell) as f32;
+            let mut buf = vec![0f32; BATCH * CELLS_PAD * GROUPS_PAD];
+            for (bi, v) in chunk.iter().enumerate() {
+                for g in crate::ops::COMPUTE_GROUPS {
+                    let mut remaining = v[g.index()];
+                    let mut ci = 0;
+                    while remaining > 0 {
+                        // pack counts as 0/1 over pseudo-cells
+                        buf[(bi * CELLS_PAD + ci) * GROUPS_PAD + g.index()] = 1.0;
+                        remaining -= 1;
+                        ci += 1;
+                        assert!(ci <= CELLS_PAD, "instance count exceeds CELLS_PAD");
+                    }
+                }
+            }
+            let costs = self.execute_cost(buf, base)?;
+            out.extend(costs[..chunk.len()].iter().map(|&c| c as f64));
+        }
+        Ok(out)
+    }
+
+    /// Run the heatmap-stats artifact over per-DFG usage bitmaps:
+    /// returns (per-cell union bitmap, per-group minimum instances).
+    pub fn heatmap_stats(
+        &mut self,
+        usage: &[Vec<[f32; NUM_GROUPS]>], // [dfg][cell][group]
+    ) -> Result<(Vec<[f32; GROUPS_PAD]>, [f64; NUM_GROUPS])> {
+        let exe = self
+            .heatmap_exe
+            .as_ref()
+            .context("heatmap_stats.hlo.txt not loaded")?;
+        assert!(usage.len() <= DFGS_PAD, "too many DFGs for DFGS_PAD");
+        let ncells = usage.first().map_or(0, |u| u.len());
+        assert!(ncells <= CELLS_PAD);
+        let mut buf = vec![0f32; DFGS_PAD * CELLS_PAD * GROUPS_PAD];
+        for (d, cells) in usage.iter().enumerate() {
+            for (c, groups) in cells.iter().enumerate() {
+                for (g, &v) in groups.iter().enumerate() {
+                    buf[(d * CELLS_PAD + c) * GROUPS_PAD + g] = v;
+                }
+            }
+        }
+        let x = xla::Literal::vec1(&buf).reshape(&[
+            DFGS_PAD as i64,
+            CELLS_PAD as i64,
+            GROUPS_PAD as i64,
+        ])?;
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        self.calls += 1;
+        let (heat_lit, mins_lit) = result.to_tuple2()?;
+        let heat_flat = heat_lit.to_vec::<f32>()?;
+        let mins_flat = mins_lit.to_vec::<f32>()?;
+        let mut heat = vec![[0f32; GROUPS_PAD]; CELLS_PAD];
+        for c in 0..CELLS_PAD {
+            for g in 0..GROUPS_PAD {
+                heat[c][g] = heat_flat[c * GROUPS_PAD + g];
+            }
+        }
+        let mut mins = [0f64; NUM_GROUPS];
+        for g in 0..NUM_GROUPS {
+            mins[g] = mins_flat[g] as f64;
+        }
+        Ok((heat, mins))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl BatchScorer for Scorer {
+    fn score(
+        &mut self,
+        num_compute_cells: usize,
+        instance_vectors: &[[usize; NUM_GROUPS]],
+    ) -> Vec<f64> {
+        self.score_instance_vectors(num_compute_cells, instance_vectors)
+            .expect("PJRT execution failed")
+    }
+}
+
+/// Sanity cross-check used by the coordinator on startup: XLA and native
+/// scorers must agree on a sample of layouts.
+pub fn cross_check(scorer: &mut Scorer, cost: &CostModel, layouts: &[Layout]) -> Result<f64> {
+    let xla_costs = scorer.score_layouts(layouts)?;
+    let mut max_rel = 0.0f64;
+    for (l, &xc) in layouts.iter().zip(&xla_costs) {
+        let nc = cost.layout_cost(l);
+        let rel = ((xc - nc) / nc).abs();
+        max_rel = max_rel.max(rel);
+    }
+    if max_rel > 1e-3 {
+        bail!("XLA/native scorer disagreement: max rel err {max_rel}");
+    }
+    Ok(max_rel)
+}
+
+/// Mem index helper re-exported for artifact-layout documentation.
+pub fn mem_group_index() -> usize {
+    OpGroup::Mem.index()
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/
+    // runtime_integration.rs (they require `make artifacts` first).
+    use super::*;
+
+    #[test]
+    fn artifact_dir_env_override() {
+        std::env::set_var("HELEX_ARTIFACTS", "/tmp/helex_artifacts_test");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/helex_artifacts_test"));
+        std::env::remove_var("HELEX_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_friendly() {
+        let err = Scorer::load(Path::new("/nonexistent"), &CostModel::area())
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn shape_constants_cover_paper_grids() {
+        // biggest grid in the paper: 20x20 comparison = 400 cells
+        assert!(20 * 20 <= CELLS_PAD);
+        assert!(crate::ops::NUM_GROUPS <= GROUPS_PAD);
+        assert!(12 <= DFGS_PAD); // 12 Table II DFGs
+    }
+}

@@ -1,0 +1,325 @@
+//! General subproblem generation (paper Algorithm 3).
+//!
+//! Removes *any combination* of operation groups from a single cell, in
+//! no particular order. Differences from OPSG: the loop does not stop at
+//! the first improvement; candidates must be tested against the *entire*
+//! DFG set (layouts in the queue descend from different bases, so
+//! selective testing is unsound); and a `failChart` counts how often a
+//! particular `(removed-combination, cell)` pair has failed, pruning
+//! pairs that failed `L_fail` times. Successful improvements reset the
+//! failChart and expand new subproblems from the improved layout. The
+//! queue is additionally pruned of subproblems too far from the best
+//! cost after prolonged non-improvement (Section III-F2 last paragraph).
+
+use super::{BatchScorer, Phase, SearchConfig, SearchStats, TracePoint};
+use crate::cgra::{CellId, Layout};
+use crate::cost::CostModel;
+use crate::dfg::Dfg;
+use crate::mapper::Mapper;
+use crate::ops::{GroupSet, NUM_GROUPS};
+use crate::util::Stopwatch;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+
+/// A queued subproblem: a layout plus the (cell, removed-mask) metadata
+/// that produced it.
+struct Cand {
+    cost: f64,
+    layout: Layout,
+    cell: CellId,
+    removed: GroupSet,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cost == other.cost
+    }
+}
+impl Eq for Cand {}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by cost; deterministic tie-break
+        other
+            .cost
+            .partial_cmp(&self.cost)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.cell.cmp(&self.cell))
+            .then_with(|| other.removed.0.cmp(&self.removed.0))
+    }
+}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Enumerate all non-empty removal masks of a cell's support set.
+fn removal_masks(support: GroupSet) -> Vec<GroupSet> {
+    let bits: Vec<u8> = support.iter().map(|g| 1u8 << g.index()).collect();
+    let mut out = Vec::new();
+    for m in 1u32..(1 << bits.len()) {
+        let mut mask = 0u8;
+        for (i, b) in bits.iter().enumerate() {
+            if m & (1 << i) != 0 {
+                mask |= b;
+            }
+        }
+        out.push(GroupSet(mask));
+    }
+    out
+}
+
+/// Generate all valid GSG subproblems from `base` (Algorithm 3 line 3 /
+/// line 17), pushing into `pq`. Batch-scores candidate costs.
+#[allow(clippy::too_many_arguments)]
+fn expand(
+    base: &Layout,
+    min_insts: &[usize; NUM_GROUPS],
+    fail_chart: &HashMap<(u8, CellId), usize>,
+    l_fail: usize,
+    seen: &mut HashSet<u64>,
+    pq: &mut BinaryHeap<Cand>,
+    stats: &mut SearchStats,
+    cost: &CostModel,
+    scorer: &mut Option<&mut dyn BatchScorer>,
+) {
+    let base_insts = base.compute_group_instances();
+    let base_cost = cost.layout_cost(base);
+    let mut metas: Vec<(CellId, GroupSet)> = Vec::new();
+    let mut vectors: Vec<[usize; NUM_GROUPS]> = Vec::new();
+    for cell in base.grid.compute_cells() {
+        let support = base.support(cell);
+        if support.is_empty() {
+            continue;
+        }
+        for mask in removal_masks(support) {
+            // failChart pruning at generation time (cheap) — the pop-time
+            // check (Algorithm 3 line 8) is retained as well.
+            if *fail_chart.get(&(mask.0, cell)).unwrap_or(&0) >= l_fail {
+                continue;
+            }
+            // min-instances validity
+            let mut v = base_insts;
+            let mut ok = true;
+            for g in mask.iter() {
+                if v[g.index()] == 0 || v[g.index()] - 1 < min_insts[g.index()] {
+                    ok = false;
+                    break;
+                }
+                v[g.index()] -= 1;
+            }
+            if !ok {
+                continue;
+            }
+            metas.push((cell, mask));
+            vectors.push(v);
+        }
+    }
+    stats.expanded += metas.len();
+    // candidate costs, batched through the XLA artifact when available
+    let costs: Vec<f64> = if let Some(s) = scorer.as_deref_mut() {
+        s.score(base.grid.num_compute(), &vectors)
+    } else {
+        metas
+            .iter()
+            .map(|(_, mask)| {
+                base_cost + mask.iter().map(|g| cost.removal_delta(g)).sum::<f64>()
+            })
+            .collect()
+    };
+    for (((cell, mask), _v), c) in metas.into_iter().zip(vectors).zip(costs) {
+        let layout = base.without_groups(cell, mask);
+        // dedupe layouts reachable through multiple removal orders
+        let h = layout_hash(&layout);
+        if !seen.insert(h) {
+            continue;
+        }
+        pq.push(Cand { cost: c, layout, cell, removed: mask });
+    }
+}
+
+fn layout_hash(l: &Layout) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    l.hash(&mut h);
+    h.finish()
+}
+
+/// Algorithm 3. Returns the best layout found; updates `stats`.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    initial: &Layout,
+    dfgs: &[Dfg],
+    mapper: &Mapper,
+    cost: &CostModel,
+    min_insts: &[usize; NUM_GROUPS],
+    cfg: &SearchConfig,
+    stats: &mut SearchStats,
+    sw: &Stopwatch,
+    scorer: &mut Option<&mut dyn BatchScorer>,
+    // witness mappings: a cached mapping whose placements the candidate
+    // layout still supports proves feasibility without re-mapping (see
+    // Mapping::still_valid; EXPERIMENTS.md §Perf). Shared with OPSG.
+    witness: &mut Vec<Option<crate::mapper::Mapping>>,
+) -> Layout {
+    let mut best = initial.clone();
+    let mut best_cost = cost.layout_cost(&best);
+    let mut fail_chart: HashMap<(u8, CellId), usize> = HashMap::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut pq: BinaryHeap<Cand> = BinaryHeap::new();
+    expand(
+        &best, min_insts, &fail_chart, cfg.l_fail, &mut seen, &mut pq, stats, cost,
+        scorer,
+    );
+    let mut stale = 0usize;
+
+    while let Some(cand) = pq.pop() {
+        if stats.tested >= cfg.l_test {
+            break;
+        }
+        if cand.cost >= best_cost {
+            continue;
+        }
+        // failChart pruning (line 8)
+        let key = (cand.removed.0, cand.cell);
+        if *fail_chart.get(&key).unwrap_or(&0) >= cfg.l_fail {
+            continue;
+        }
+        // full-set testing (line 9), with witness fast-path
+        stats.tested += 1;
+        let mut succ = true;
+        let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
+        for (di, d) in dfgs.iter().enumerate() {
+            let valid = witness[di]
+                .as_ref()
+                .map_or(false, |w| w.still_valid(d, &cand.layout));
+            if valid {
+                continue;
+            }
+            match mapper.map(d, &cand.layout) {
+                Some(m) => new_witnesses.push((di, m)),
+                None => {
+                    succ = false;
+                    break;
+                }
+            }
+        }
+        if succ {
+            for (di, m) in new_witnesses {
+                witness[di] = Some(m);
+            }
+            fail_chart.clear(); // line 12
+            best = cand.layout;
+            best_cost = cand.cost;
+            stale = 0;
+            stats.trace.push(TracePoint {
+                phase: Phase::Gsg,
+                secs: sw.secs(),
+                tested: stats.tested,
+                best_cost,
+            });
+            // line 17: expand subproblems from the improved layout
+            expand(
+                &best, min_insts, &fail_chart, cfg.l_fail, &mut seen, &mut pq, stats,
+                cost, scorer,
+            );
+        } else {
+            *fail_chart.entry(key).or_insert(0) += 1; // line 15
+            stale += 1;
+            if stale >= cfg.gsg_stale_prune_after {
+                // prune subproblems too far in cost from the best layout
+                let keep: Vec<Cand> =
+                    pq.drain().filter(|c| c.cost < best_cost).collect();
+                pq.extend(keep);
+                stale = 0;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::OpGroup;
+
+    #[test]
+    fn removal_masks_enumerate_powerset() {
+        let s = GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mult, OpGroup::Div]);
+        let masks = removal_masks(s);
+        assert_eq!(masks.len(), 7); // 2^3 - 1
+        for m in &masks {
+            assert!(m.is_subset_of(s));
+            assert!(!m.is_empty());
+        }
+        // all distinct
+        let mut raw: Vec<u8> = masks.iter().map(|m| m.0).collect();
+        raw.sort_unstable();
+        raw.dedup();
+        assert_eq!(raw.len(), 7);
+    }
+
+    #[test]
+    fn gsg_improves_on_arith_only_workload() {
+        // Section IV-G: GSG matters most when only cheap groups remain.
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let full = Layout::full(Grid::new(7, 7), crate::dfg::groups_used(&dfgs));
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let cfg = SearchConfig { l_test: 200, l_fail: 2, ..Default::default() };
+        let mut stats = SearchStats::default();
+        let sw = Stopwatch::start();
+        let best =
+            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        assert!(cost.layout_cost(&best) < cost.layout_cost(&full));
+        assert!(mapper.test_layout(&dfgs, &best));
+        assert!(crate::search::meets_min_instances(&best, &mins));
+    }
+
+    #[test]
+    fn gsg_respects_budget_and_failchart() {
+        let dfgs = vec![benchmarks::benchmark("SOB")];
+        let full = Layout::full(Grid::new(6, 6), crate::dfg::groups_used(&dfgs));
+        let cfg = SearchConfig { l_test: 10, l_fail: 1, ..Default::default() };
+        let mut stats = SearchStats::default();
+        let sw = Stopwatch::start();
+        let _ = run(
+            &full,
+            &dfgs,
+            &Mapper::default(),
+            &CostModel::area(),
+            &crate::dfg::min_group_instances(&dfgs),
+            &cfg,
+            &mut stats,
+            &sw,
+            &mut None,
+            &mut vec![None; dfgs.len()],
+        );
+        assert!(stats.tested <= 10);
+    }
+
+    #[test]
+    fn empty_support_cells_are_skipped() {
+        let grid = Grid::new(5, 5);
+        let l = Layout::empty(grid);
+        let mut pq = BinaryHeap::new();
+        let mut seen = HashSet::new();
+        let mut stats = SearchStats::default();
+        let mut scorer: Option<&mut dyn BatchScorer> = None;
+        expand(
+            &l,
+            &[0; NUM_GROUPS],
+            &HashMap::new(),
+            3,
+            &mut seen,
+            &mut pq,
+            &mut stats,
+            &CostModel::area(),
+            &mut scorer,
+        );
+        assert!(pq.is_empty());
+    }
+}

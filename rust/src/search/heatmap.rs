@@ -1,0 +1,151 @@
+//! Heatmap initial layout (paper Section III-E, Fig 2).
+//!
+//! Map each DFG *individually* on the full layout; overlay the resulting
+//! node→cell assignments into a heterogeneous layout where each compute
+//! cell supports exactly the groups some DFG actually executed there.
+//! I/O cells are untouched. If all DFGs successfully *re-map* onto the
+//! heatmap layout, it becomes the initial layout; otherwise the search
+//! starts from the full layout.
+
+use crate::cgra::Layout;
+use crate::dfg::Dfg;
+use crate::mapper::Mapper;
+
+
+/// Outcome of initial-layout construction.
+pub enum HeatmapOutcome {
+    /// Heatmap built and all DFGs re-mapped onto it.
+    Heatmap(Layout),
+    /// Some DFG failed to re-map onto the heatmap; start from full.
+    FullFallback,
+    /// Some DFG failed to map even on the *full* layout — HeLEx
+    /// terminates in failure (Algorithm 1 precondition).
+    Infeasible,
+}
+
+/// Overlay of per-DFG mappings: the heterogeneous usage layout.
+pub fn overlay(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<Layout> {
+    let mut heat = Layout::empty(full.grid);
+    for dfg in dfgs {
+        let m = mapper.map(dfg, full)?;
+        for (n, op) in dfg.nodes.iter().enumerate() {
+            if op.is_memory() {
+                continue; // I/O cells untouched
+            }
+            let cell = m.node_cell[n];
+            let mut s = heat.support(cell);
+            s.insert(op.group());
+            heat.set_support(cell, s);
+        }
+    }
+    Some(heat)
+}
+
+/// Section III-E procedure.
+pub fn initial_layout(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> HeatmapOutcome {
+    let Some(heat) = overlay(dfgs, full, mapper) else {
+        return HeatmapOutcome::Infeasible;
+    };
+    // re-map all DFGs onto the heatmap layout
+    if mapper.test_layout(dfgs, &heat) {
+        HeatmapOutcome::Heatmap(heat)
+    } else {
+        HeatmapOutcome::FullFallback
+    }
+}
+
+/// Heatmap "pressure" statistics used by the REVAMP-like baseline and by
+/// diagnostics: per (cell, group) count of how many DFGs placed an op of
+/// that group there.
+pub fn usage_counts(
+    dfgs: &[Dfg],
+    full: &Layout,
+    mapper: &Mapper,
+) -> Option<Vec<[u16; crate::ops::NUM_GROUPS]>> {
+    let mut counts = vec![[0u16; crate::ops::NUM_GROUPS]; full.grid.num_cells()];
+    for dfg in dfgs {
+        let m = mapper.map(dfg, full)?;
+        for (n, op) in dfg.nodes.iter().enumerate() {
+            counts[m.node_cell[n] as usize][op.group().index()] += 1;
+        }
+    }
+    Some(counts)
+}
+
+/// The heatmap is always a subset of the full layout and always meets the
+/// per-DFG group-usage lower bound on its own mappings.
+pub fn heatmap_is_subset(heat: &Layout, full: &Layout) -> bool {
+    heat.grid == full.grid
+        && full
+            .grid
+            .compute_cells()
+            .all(|c| heat.support(c).is_subset_of(full.support(c)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+
+    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, Mapper) {
+        let dfgs: Vec<Dfg> = names.iter().map(|n| benchmarks::benchmark(n)).collect();
+        let full = Layout::full(Grid::new(r, c), crate::dfg::groups_used(&dfgs));
+        (dfgs, full, Mapper::default())
+    }
+
+    #[test]
+    fn overlay_is_subset_of_full() {
+        let (dfgs, full, mapper) = setup(&["SOB", "GB", "RGB"], 8, 8);
+        let heat = overlay(&dfgs, &full, &mapper).unwrap();
+        assert!(heat.is_subset_of(&full));
+        assert!(heatmap_is_subset(&heat, &full));
+        // strictly smaller in practice for these tiny DFGs on 8x8
+        assert!(heat.compute_instances() < full.compute_instances());
+    }
+
+    #[test]
+    fn overlay_covers_each_dfg_needs() {
+        let (dfgs, full, mapper) = setup(&["NMS"], 9, 9);
+        let heat = overlay(&dfgs, &full, &mapper).unwrap();
+        // total instances per group >= the DFG's op count per group
+        let h = heat.compute_group_instances();
+        let need = dfgs[0].group_histogram();
+        for g in crate::ops::COMPUTE_GROUPS {
+            assert!(
+                h[g.index()] >= need[g.index()].min(full.grid.num_compute()),
+                "group {g}: {} < {}",
+                h[g.index()],
+                need[g.index()]
+            );
+        }
+    }
+
+    #[test]
+    fn initial_layout_feasible_or_fallback() {
+        let (dfgs, full, mapper) = setup(&["SOB", "GB"], 7, 7);
+        match initial_layout(&dfgs, &full, &mapper) {
+            HeatmapOutcome::Heatmap(h) => {
+                assert!(mapper.test_layout(&dfgs, &h));
+            }
+            HeatmapOutcome::FullFallback => {} // acceptable
+            HeatmapOutcome::Infeasible => panic!("SOB+GB must be feasible on 7x7"),
+        }
+    }
+
+    #[test]
+    fn infeasible_reported() {
+        let (dfgs, full, mapper) = setup(&["SAD"], 5, 5);
+        assert!(matches!(initial_layout(&dfgs, &full, &mapper), HeatmapOutcome::Infeasible));
+    }
+
+    #[test]
+    fn usage_counts_sum_to_node_counts() {
+        let (dfgs, full, mapper) = setup(&["SOB", "GB"], 8, 8);
+        let counts = usage_counts(&dfgs, &full, &mapper).unwrap();
+        let total: usize =
+            counts.iter().map(|c| c.iter().map(|&x| x as usize).sum::<usize>()).sum();
+        let expect: usize = dfgs.iter().map(|d| d.num_nodes()).sum();
+        assert_eq!(total, expect);
+    }
+}

@@ -1,0 +1,402 @@
+//! The HeLEx search (paper Section III).
+//!
+//! Three phases, mirroring Algorithm 1:
+//!
+//! 1. [`heatmap`] — initial layout: map each DFG individually on the full
+//!    layout, overlay the per-cell usage into a heterogeneous heatmap
+//!    layout, and keep it if all DFGs re-map (else fall back to full).
+//! 2. [`opsg`] — BB search removing one operation group at a time, most
+//!    expensive group first, with *selective testing* (only DFGs that use
+//!    the removed group are re-mapped).
+//! 3. [`gsg`] — BB search removing arbitrary group combinations with a
+//!    `failChart` pruning memory and full-set testing.
+//!
+//! [`run`] drives all three and records per-phase statistics and the
+//! convergence trace used by Figs 3–6 and Table IV.
+
+pub mod gsg;
+pub mod heatmap;
+pub mod opsg;
+pub mod posteriori;
+
+use crate::cgra::Layout;
+use crate::cost::CostModel;
+use crate::dfg::{min_group_instances, Dfg};
+use crate::mapper::Mapper;
+use crate::ops::NUM_GROUPS;
+use crate::util::Stopwatch;
+
+/// Which phase produced an event / a removal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Heatmap,
+    Opsg,
+    Gsg,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Heatmap => "heatmap",
+            Phase::Opsg => "OPSG",
+            Phase::Gsg => "GSG",
+        }
+    }
+}
+
+/// One point of the convergence trace (Fig 5): cost of the incumbent best
+/// layout at a given wall time / tested-layout count.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    pub phase: Phase,
+    pub secs: f64,
+    pub tested: usize,
+    pub best_cost: f64,
+}
+
+/// Search configuration (Algorithm 1 inputs + engineering knobs).
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    /// Mapper-invocation budget `L_test` (paper: 2000 for 10×10, grown
+    /// with instance size).
+    pub l_test: usize,
+    /// GSG failChart threshold `L_fail`.
+    pub l_fail: usize,
+    /// Run the GSG phase (Section IV-G allows disabling it).
+    pub run_gsg: bool,
+    /// Number of GSG passes (the paper runs GSG twice).
+    pub gsg_passes: usize,
+    /// Prune GSG queue entries whose cost is too far from best after this
+    /// many consecutive non-improving iterations.
+    pub gsg_stale_prune_after: usize,
+    /// Attempt the heatmap initial layout.
+    pub use_heatmap: bool,
+    /// Skip the Arith group in OPSG (the paper's `noGSG` variant is
+    /// "HeLEx without targeting the Arith group and without running GSG",
+    /// Section IV-G).
+    pub opsg_skip_arith: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            l_test: 2000,
+            l_fail: 3,
+            run_gsg: true,
+            gsg_passes: 2,
+            gsg_stale_prune_after: 64,
+            use_heatmap: true,
+            opsg_skip_arith: false,
+        }
+    }
+}
+
+impl SearchConfig {
+    /// Paper rule: `L_test` = 2000 at 10×10, scaled with compute-cell
+    /// count for larger instances.
+    pub fn l_test_for(grid: crate::cgra::Grid) -> usize {
+        let base_cells = 8 * 8; // 10x10 compute cells
+        (2000 * grid.num_compute() + base_cells - 1) / base_cells
+    }
+}
+
+/// Statistics of one HeLEx run (Table IV + Figs 3/5/6 inputs).
+#[derive(Debug, Clone, Default)]
+pub struct SearchStats {
+    /// Subproblems expanded (`S_exp`): layouts generated into queues.
+    pub expanded: usize,
+    /// Subproblems tested with the mapper (`S_tst`).
+    pub tested: usize,
+    /// Wall time per phase, seconds.
+    pub t_heatmap: f64,
+    pub t_opsg: f64,
+    pub t_gsg: f64,
+    /// Whether the heatmap was usable as the initial layout.
+    pub heatmap_used: bool,
+    /// Per-group instances after each phase (for the Fig 3 breakdown).
+    pub insts_full: [usize; NUM_GROUPS],
+    pub insts_after_heatmap: [usize; NUM_GROUPS],
+    pub insts_after_opsg: [usize; NUM_GROUPS],
+    pub insts_after_gsg: [usize; NUM_GROUPS],
+    /// Convergence trace.
+    pub trace: Vec<TracePoint>,
+}
+
+impl SearchStats {
+    pub fn t_total(&self) -> f64 {
+        self.t_heatmap + self.t_opsg + self.t_gsg
+    }
+}
+
+/// Result of a full HeLEx run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub full_layout: Layout,
+    pub initial_layout: Layout,
+    pub best_layout: Layout,
+    pub best_cost: f64,
+    pub min_insts: [usize; NUM_GROUPS],
+    /// Feasibility witnesses: one valid mapping per input DFG for
+    /// `best_layout` (same order as the input slice). The search accepts
+    /// layouts whose feasibility is proven by a cached witness even when
+    /// the heuristic mapper cannot re-derive a mapping from scratch, so
+    /// consumers must use these instead of re-mapping.
+    pub final_mappings: Vec<crate::mapper::Mapping>,
+    pub stats: SearchStats,
+}
+
+/// Algorithm 1: run HeLEx on a DFG set and target grid.
+///
+/// `scorer` optionally batches candidate-cost evaluation through the AOT
+/// XLA artifact (see `runtime`); pass `None` to use the native evaluator
+/// only.
+pub fn run(
+    dfgs: &[Dfg],
+    grid: crate::cgra::Grid,
+    mapper: &Mapper,
+    cost: &CostModel,
+    cfg: &SearchConfig,
+    mut scorer: Option<&mut dyn BatchScorer>,
+) -> Option<SearchResult> {
+    let mut stats = SearchStats::default();
+    let sw = Stopwatch::start();
+
+    // line 1: minimum group instances
+    let min_insts = min_group_instances(dfgs);
+
+    // full layout over the groups the DFG set actually uses (Section IV-F)
+    let full_layout = Layout::full(grid, crate::dfg::groups_used(dfgs));
+    stats.insts_full = full_layout.compute_group_instances();
+
+    // lines 2-4: initial layout (heatmap if possible, else full —
+    // terminate in failure if even the full layout does not map)
+    let hm_sw = Stopwatch::start();
+    let initial_layout = if cfg.use_heatmap {
+        match heatmap::initial_layout(dfgs, &full_layout, mapper) {
+            heatmap::HeatmapOutcome::Heatmap(l) => {
+                stats.heatmap_used = true;
+                l
+            }
+            heatmap::HeatmapOutcome::FullFallback => full_layout.clone(),
+            heatmap::HeatmapOutcome::Infeasible => return None,
+        }
+    } else {
+        if !mapper.test_layout(dfgs, &full_layout) {
+            return None;
+        }
+        full_layout.clone()
+    };
+    stats.t_heatmap = hm_sw.secs();
+    stats.insts_after_heatmap = initial_layout.compute_group_instances();
+    stats.trace.push(TracePoint {
+        phase: Phase::Heatmap,
+        secs: sw.secs(),
+        tested: stats.tested,
+        best_cost: cost.layout_cost(&initial_layout),
+    });
+
+    // witnesses shared across phases, seeded with mappings on the
+    // initial layout (which just passed test_layout): a DFG untouched by
+    // every later removal keeps its seed witness valid to the end.
+    let mut witness: Vec<Option<crate::mapper::Mapping>> =
+        dfgs.iter().map(|d| mapper.map(d, &initial_layout)).collect();
+    if witness.iter().any(Option::is_none) {
+        return None; // initial layout no longer maps (should not happen)
+    }
+
+    // line 5: OPSG phase
+    let opsg_sw = Stopwatch::start();
+    let best = opsg::run(
+        &initial_layout,
+        dfgs,
+        mapper,
+        cost,
+        &min_insts,
+        cfg,
+        &mut stats,
+        &sw,
+        &mut scorer,
+        &mut witness,
+    );
+    stats.t_opsg = opsg_sw.secs();
+    stats.insts_after_opsg = best.compute_group_instances();
+
+    // line 6: GSG phase
+    let gsg_sw = Stopwatch::start();
+    let best = if cfg.run_gsg {
+        let mut b = best;
+        for _pass in 0..cfg.gsg_passes {
+            b = gsg::run(
+                &b,
+                dfgs,
+                mapper,
+                cost,
+                &min_insts,
+                cfg,
+                &mut stats,
+                &sw,
+                &mut scorer,
+                &mut witness,
+            );
+        }
+        b
+    } else {
+        best
+    };
+    stats.t_gsg = gsg_sw.secs();
+    stats.insts_after_gsg = best.compute_group_instances();
+
+    // materialize final witnesses: any DFG whose cached witness is
+    // missing or stale gets a fresh mapping on the final layout (always
+    // possible: its support was never removed from under a None witness
+    // without a successful remap).
+    let mut final_mappings = Vec::with_capacity(dfgs.len());
+    for (di, d) in dfgs.iter().enumerate() {
+        let w = match witness[di].take() {
+            Some(w) if w.still_valid(d, &best) => w,
+            _ => mapper
+                .map(d, &best)
+                .expect("accepted layout must be mappable for untouched DFGs"),
+        };
+        debug_assert!(w.validate(d, &best).is_empty());
+        final_mappings.push(w);
+    }
+
+    let best_cost = cost.layout_cost(&best);
+    Some(SearchResult {
+        full_layout,
+        initial_layout,
+        best_layout: best,
+        best_cost,
+        min_insts,
+        final_mappings,
+        stats,
+    })
+}
+
+/// Batched candidate-cost evaluation interface, implemented by
+/// `runtime::Scorer` over the AOT XLA artifact. Candidates are described
+/// by their per-group instance vectors; the scorer returns Equation-1
+/// costs in the same order.
+pub trait BatchScorer {
+    fn score(
+        &mut self,
+        num_compute_cells: usize,
+        instance_vectors: &[[usize; NUM_GROUPS]],
+    ) -> Vec<f64>;
+}
+
+/// Native (non-XLA) reference scorer; also used when artifacts are
+/// unavailable.
+pub struct NativeScorer {
+    pub cost: CostModel,
+}
+
+impl BatchScorer for NativeScorer {
+    fn score(
+        &mut self,
+        num_compute_cells: usize,
+        instance_vectors: &[[usize; NUM_GROUPS]],
+    ) -> Vec<f64> {
+        let base = num_compute_cells as f64
+            * (self.cost.components.empty_cell + self.cost.components.fifos);
+        instance_vectors
+            .iter()
+            .map(|n| base + self.cost.instances_cost(n))
+            .collect()
+    }
+}
+
+/// Validity check shared by both branching strategies: a layout may only
+/// enter a queue if it still meets the theoretical minimum instance
+/// counts (Section III-D pruning).
+pub fn meets_min_instances(layout: &Layout, min_insts: &[usize; NUM_GROUPS]) -> bool {
+    let n = layout.compute_group_instances();
+    (0..NUM_GROUPS).all(|i| {
+        // Mem lives on I/O cells and is not tracked on compute cells.
+        i == crate::ops::OpGroup::Mem.index() || n[i] >= min_insts[i]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::OpGroup;
+
+    fn small_cfg() -> SearchConfig {
+        SearchConfig { l_test: 120, l_fail: 2, gsg_passes: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn end_to_end_search_reduces_cost() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let grid = Grid::new(6, 6);
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let r = run(&dfgs, grid, &mapper, &cost, &small_cfg(), None).expect("feasible");
+        assert!(r.best_cost <= cost.layout_cost(&r.initial_layout));
+        assert!(r.best_cost < cost.layout_cost(&r.full_layout));
+        // result is feasible: every DFG has a valid witness mapping
+        for (di, d) in dfgs.iter().enumerate() {
+            assert!(r.final_mappings[di].validate(d, &r.best_layout).is_empty());
+        }
+        // and must respect the theoretical minimum
+        assert!(meets_min_instances(&r.best_layout, &r.min_insts));
+        // stats populated
+        assert!(r.stats.tested > 0);
+        assert!(r.stats.expanded >= r.stats.tested);
+        assert!(!r.stats.trace.is_empty());
+    }
+
+    #[test]
+    fn infeasible_set_returns_none() {
+        let dfgs = vec![benchmarks::benchmark("SAD")]; // 63 compute ops
+        let grid = Grid::new(5, 5); // 9 compute cells
+        let r = run(&dfgs, grid, &Mapper::default(), &CostModel::area(), &small_cfg(), None);
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn min_instances_pruning_rule() {
+        let grid = Grid::new(5, 5);
+        let l = Layout::full(grid, crate::ops::GroupSet::all_compute());
+        let mut mins = [0usize; NUM_GROUPS];
+        assert!(meets_min_instances(&l, &mins));
+        mins[OpGroup::Arith.index()] = 9;
+        assert!(meets_min_instances(&l, &mins)); // 9 compute cells
+        mins[OpGroup::Arith.index()] = 10;
+        assert!(!meets_min_instances(&l, &mins));
+        // Mem mins never block
+        mins[OpGroup::Arith.index()] = 0;
+        mins[OpGroup::Mem.index()] = 1000;
+        assert!(meets_min_instances(&l, &mins));
+    }
+
+    #[test]
+    fn native_scorer_matches_cost_model() {
+        let cost = CostModel::area();
+        let grid = Grid::new(6, 6);
+        let l = Layout::full(grid, crate::ops::GroupSet::all_compute());
+        let mut s = NativeScorer { cost: cost.clone() };
+        let v = s.score(grid.num_compute(), &[l.compute_group_instances()]);
+        assert!((v[0] - cost.layout_cost(&l)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l_test_scales_with_size() {
+        assert_eq!(SearchConfig::l_test_for(Grid::new(10, 10)), 2000);
+        assert!(SearchConfig::l_test_for(Grid::new(13, 15)) > 2000);
+    }
+
+    #[test]
+    fn nogsg_skips_gsg_phase() {
+        let dfgs = vec![benchmarks::benchmark("SOB")];
+        let grid = Grid::new(5, 5);
+        let cfg = SearchConfig { run_gsg: false, ..small_cfg() };
+        let r = run(&dfgs, grid, &Mapper::default(), &CostModel::area(), &cfg, None).unwrap();
+        assert_eq!(r.stats.insts_after_gsg, r.stats.insts_after_opsg);
+        assert!(!r.stats.trace.iter().any(|t| t.phase == Phase::Gsg));
+    }
+}

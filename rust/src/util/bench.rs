@@ -1,0 +1,182 @@
+//! Minimal bench harness (criterion is not vendored in this image).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! each bench measures wall time over warmup + timed iterations and prints
+//! `name ... median ± spread` lines, plus supports `--filter substring`.
+
+use std::time::Instant;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn human(&self) -> String {
+        fn t(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<48} {:>12} (min {:>12}, max {:>12}, {} iters)",
+            self.name,
+            t(self.median_ns),
+            t(self.min_ns),
+            t(self.max_ns),
+            self.iters
+        )
+    }
+}
+
+/// Bench runner: collects results, honours a `--filter` substring from argv.
+pub struct Harness {
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+    /// Target samples per bench (each sample may batch several iterations).
+    pub samples: usize,
+    /// Minimum measured time per bench, seconds.
+    pub min_time_s: f64,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Self::from_args()
+    }
+}
+
+impl Harness {
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let mut filter = None;
+        let mut i = 0;
+        while i < args.len() {
+            if args[i] == "--filter" && i + 1 < args.len() {
+                filter = Some(args[i + 1].clone());
+                i += 1;
+            } else if args[i] != "--bench" && i > 0 && !args[i].starts_with('-') && filter.is_none()
+            {
+                // `cargo bench -- substring` convention
+                filter = Some(args[i].clone());
+            }
+            i += 1;
+        }
+        Self { filter, results: Vec::new(), samples: 15, min_time_s: 0.05 }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Measure `f`; its return value is black-boxed to prevent DCE.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        // Warmup + calibration: find iters per sample so a sample >= ~2ms.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let one = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_sample = ((2e-3 / one).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        let deadline = Instant::now();
+        let mut total_iters = 0u64;
+        while samples_ns.len() < self.samples
+            || deadline.elapsed().as_secs_f64() < self.min_time_s
+        {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                std::hint::black_box(f());
+            }
+            let ns = t.elapsed().as_nanos() as f64 / per_sample as f64;
+            samples_ns.push(ns);
+            total_iters += per_sample;
+            if samples_ns.len() > 200 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples_ns[samples_ns.len() / 2];
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            min_ns: samples_ns[0],
+            max_ns: *samples_ns.last().unwrap(),
+        };
+        println!("{}", res.human());
+        self.results.push(res);
+    }
+
+    /// Run a coarse, once-only measurement (for long end-to-end benches
+    /// that regenerate a whole paper table).
+    pub fn bench_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let t = Instant::now();
+        std::hint::black_box(f());
+        let ns = t.elapsed().as_nanos() as f64;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            median_ns: ns,
+            mean_ns: ns,
+            min_ns: ns,
+            max_ns: ns,
+        };
+        println!("{}", res.human());
+        self.results.push(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut h = Harness { filter: None, results: vec![], samples: 3, min_time_s: 0.0 };
+        h.bench("noop", || 1 + 1);
+        assert_eq!(h.results.len(), 1);
+        assert!(h.results[0].median_ns > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut h =
+            Harness { filter: Some("xyz".into()), results: vec![], samples: 3, min_time_s: 0.0 };
+        h.bench("abc", || ());
+        assert!(h.results.is_empty());
+        h.bench_once("xyz_once", || ());
+        assert_eq!(h.results.len(), 1);
+    }
+
+    #[test]
+    fn human_formats_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1.5e6,
+            mean_ns: 1.5e6,
+            min_ns: 1.0e6,
+            max_ns: 2.0e6,
+        };
+        assert!(r.human().contains("ms"));
+    }
+}

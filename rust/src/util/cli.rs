@@ -1,0 +1,113 @@
+//! Tiny argv parser (clap is not vendored in this image).
+//!
+//! Supports `helex <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Parse a `RxC` size like `10x12`.
+    pub fn size(&self, name: &str) -> Option<(usize, usize)> {
+        parse_size(self.get(name)?)
+    }
+}
+
+/// Parse `"10x12"` → `(10, 12)`.
+pub fn parse_size(s: &str) -> Option<(usize, usize)> {
+    let (r, c) = s.split_once(['x', 'X'])?;
+    Some((r.trim().parse().ok()?, c.trim().parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(v(&["exp", "fig3", "--size", "10x10", "--verbose", "--ltest=50"]));
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.get("size"), Some("10x10"));
+        assert_eq!(a.usize_or("ltest", 0), 50);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("10x12"), Some((10, 12)));
+        assert_eq!(parse_size("7X9"), Some((7, 9)));
+        assert_eq!(parse_size("bogus"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&[]));
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.usize_or("missing", 3), 3);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

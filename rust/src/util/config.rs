@@ -1,0 +1,218 @@
+//! Minimal `key = value` config-file parser (TOML subset; serde/toml are
+//! not vendored in this image).
+//!
+//! Supports comments (`#`), sections (`[name]` — flattened into dotted
+//! keys), strings (quoted or bare), numbers, booleans and simple arrays
+//! of scalars. That covers everything `coordinator::ExperimentConfig`
+//! needs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(l) => Some(l),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::List(l) => {
+                write!(f, "[")?;
+                for (i, v) in l.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(s: &str) -> Value {
+    let s = s.trim();
+    if let Some(q) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Value::Str(q.to_string());
+    }
+    if s.eq_ignore_ascii_case("true") {
+        return Value::Bool(true);
+    }
+    if s.eq_ignore_ascii_case("false") {
+        return Value::Bool(false);
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(s.to_string())
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Self {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for raw in text.lines() {
+            let line = match raw.find('#') {
+                // keep '#' inside quotes simple: only strip when not in quotes
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                    &raw[..i]
+                }
+                _ => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                let v = v.trim();
+                let value = if v.starts_with('[') && v.ends_with(']') {
+                    let inner = &v[1..v.len() - 1];
+                    let items = inner
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .map(parse_scalar)
+                        .collect();
+                    Value::List(items)
+                } else {
+                    parse_scalar(v)
+                };
+                cfg.values.insert(key, value);
+            }
+        }
+        cfg
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        Ok(Self::parse(&fs::read_to_string(path)?))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+l_test = 2000
+seed = 42
+verbose = true
+name = "helex run"
+
+[search]
+l_fail = 3          # inline comment
+sizes = ["10x10", "10x12"]
+alpha = 0.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE);
+        assert_eq!(c.int_or("l_test", 0), 2000);
+        assert_eq!(c.bool_or("verbose", false), true);
+        assert_eq!(c.str_or("name", ""), "helex run");
+        assert_eq!(c.int_or("search.l_fail", 0), 3);
+        assert_eq!(c.float_or("search.alpha", 0.0), 0.5);
+        let sizes = c.get("search.sizes").unwrap().as_list().unwrap();
+        assert_eq!(sizes.len(), 2);
+        assert_eq!(sizes[0].as_str(), Some("10x10"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("");
+        assert_eq!(c.int_or("missing", 7), 7);
+        assert_eq!(c.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn display_roundtrips_values() {
+        assert_eq!(Value::Int(3).to_string(), "3");
+        assert_eq!(
+            Value::List(vec![Value::Int(1), Value::Bool(true)]).to_string(),
+            "[1, true]"
+        );
+    }
+}

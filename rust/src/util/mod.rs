@@ -1,0 +1,71 @@
+//! Small self-contained utilities.
+//!
+//! The build image vendors only the `xla` crate's dependency closure, so
+//! the usual ecosystem crates (rand, clap, serde, criterion, proptest) are
+//! unavailable. Everything HeLEx needs from them is implemented here:
+//! a seeded PRNG ([`rng`]), an ASCII/CSV table emitter ([`table`]), a
+//! micro bench harness ([`bench`]), a tiny key-value config parser
+//! ([`config`]) and a property-test driver ([`prop`]).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch used by search statistics (Table IV) and the
+/// convergence trace (Fig 5).
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since construction.
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a float with a fixed number of decimals, trimming `-0.0`.
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    let s = format!("{v:.decimals$}");
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+        assert!(sw.millis() >= b * 1e3);
+    }
+
+    #[test]
+    fn fmt_trims_negative_zero() {
+        assert_eq!(fmt_f(-0.000001, 2), "0.00");
+        assert_eq!(fmt_f(1.2345, 2), "1.23");
+        assert_eq!(fmt_f(-1.5, 1), "-1.5");
+    }
+}

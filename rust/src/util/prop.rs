@@ -1,0 +1,87 @@
+//! Property-test driver (proptest is not vendored in this image).
+//!
+//! [`forall`] runs a seeded-random property over N generated cases and, on
+//! failure, reports the seed of the failing case so it can be replayed
+//! deterministically. Shrinking is approximated by retrying failing cases
+//! with "smaller" size hints.
+
+use crate::util::rng::Rng;
+
+/// Generation context passed to properties: a replayable RNG plus a size
+/// hint properties can use to scale their random structures (fewer nodes,
+/// smaller grids, ...).
+pub struct GenCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+/// Run `prop` over `cases` generated cases. `prop` returns `Err(msg)` on
+/// property violation. Panics with a replayable seed on failure.
+pub fn forall<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut GenCtx) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        // Ramp size up with case index so early cases are small (cheap
+        // shrinking-by-construction).
+        let size = 2 + (case * 20) / cases.max(1);
+        let mut rng = Rng::seed(seed);
+        let mut ctx = GenCtx { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut ctx) {
+            // Try to find a smaller failing size for a friendlier report.
+            let mut min_fail: Option<(usize, u64, String)> = None;
+            for s in 2..=size {
+                let mut r = Rng::seed(seed);
+                let mut c = GenCtx { rng: &mut r, size: s };
+                if let Err(m) = prop(&mut c) {
+                    min_fail = Some((s, seed, m));
+                    break;
+                }
+            }
+            let (s, sd, m) = min_fail.unwrap_or((size, seed, msg));
+            panic!(
+                "property '{name}' failed (case {case}, seed {sd:#x}, size {s}): {m}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("sum_commutes", 50, 1, |g| {
+            count += 1;
+            let a = g.rng.below(1000) as i64;
+            let b = g.rng.below(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always_fails", 10, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let mut max_size = 0;
+        forall("size_ramp", 40, 3, |g| {
+            max_size = max_size.max(g.size);
+            Ok(())
+        });
+        assert!(max_size >= 10, "max_size={max_size}");
+    }
+}

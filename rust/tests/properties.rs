@@ -1,0 +1,271 @@
+//! Property-based tests over randomly generated DFGs, layouts and
+//! searches (in-tree `util::prop` driver; proptest is not vendored).
+//!
+//! Invariants:
+//! * generated DFGs are always valid DAGs with covered producers;
+//! * mapper output is always *valid* (placement respects layout and cell
+//!   kinds, paths are connected/adjacent, link capacity holds);
+//! * the search never returns an infeasible layout, never violates
+//!   minimum instance counts, and never increases cost;
+//! * heatmap layouts are subsets of full layouts;
+//! * cost algebra: removal deltas compose linearly.
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::dfg::builder::DfgSpec;
+use helex::dfg::Dfg;
+use helex::ops::{GroupSet, Op, OpGroup};
+use helex::search::SearchConfig;
+use helex::util::prop::{forall, GenCtx};
+use helex::util::rng::Rng;
+use helex::Mapper;
+
+/// Generate a random-but-valid DfgSpec scaled by `size`.
+fn arb_spec(g: &mut GenCtx, tag: u64) -> DfgSpec {
+    // loads >= 2 so that even the first compute node can be binary
+    let loads = 2 + g.rng.below(2 + g.size / 4);
+    let stores = 1 + g.rng.below(2 + g.size / 6);
+    let ops_pool = [
+        Op::Add,
+        Op::Sub,
+        Op::Mul,
+        Op::FAdd,
+        Op::FMul,
+        Op::FDiv,
+        Op::Abs,
+        Op::Sqrt,
+        Op::Max,
+        Op::Shr,
+    ];
+    let n_compute = 2 + g.rng.below(2 + g.size);
+    let mut counts = std::collections::HashMap::new();
+    for _ in 0..n_compute {
+        *counts.entry(*g.rng.choose(&ops_pool)).or_insert(0usize) += 1;
+    }
+    let compute: Vec<(Op, usize)> = counts.into_iter().collect();
+    let binary_capable: usize =
+        compute.iter().filter(|(o, _)| o.arity() == 2).map(|(_, c)| c).sum();
+    // choose binary so that E >= V - S (coverage bound)
+    let v = loads + stores + n_compute;
+    let min_edges = v - stores;
+    let base_edges = stores + n_compute; // all-unary edge count
+    let needed = min_edges.saturating_sub(base_edges);
+    if needed > binary_capable {
+        // not coverable: fall back to a known-good tiny spec
+        return DfgSpec {
+            name: "fallback",
+            loads: 2,
+            stores: 1,
+            compute: vec![(Op::Add, 3)],
+            binary: 2,
+            seed: tag,
+        };
+    }
+    let binary = needed + g.rng.below(binary_capable - needed + 1);
+    DfgSpec { name: "prop", loads, stores, compute, binary, seed: tag }
+}
+
+#[test]
+fn prop_generated_dfgs_are_valid() {
+    forall("dfg_valid", 120, 0xD1, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let errs = dfg.validate();
+        if !errs.is_empty() {
+            return Err(format!("{spec:?}: {errs:?}"));
+        }
+        if dfg.num_nodes() != spec.num_nodes() || dfg.num_edges() != spec.num_edges() {
+            return Err("count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapper_output_always_valid() {
+    forall("mapper_valid", 40, 0xA2, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 5 + g.rng.below(4);
+        let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
+        if let Some(m) = Mapper::default().map(&dfg, &layout) {
+            let errs = m.validate(&dfg, &layout);
+            if !errs.is_empty() {
+                return Err(format!("{}: {errs:?}", dfg.name));
+            }
+            // latency is at least the unmapped critical path
+            if m.latency(&dfg) < dfg.critical_path_nodes() {
+                return Err("latency below critical path".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapper_valid_on_random_heterogeneous_layouts() {
+    forall("mapper_hetero_valid", 30, 0xA3, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let mut layout = Layout::full(grid, dfg.groups_used());
+        // randomly remove ~30% of group instances
+        let cells: Vec<_> = grid.compute_cells().collect();
+        for &c in &cells {
+            for grp in layout.support(c).iter().collect::<Vec<_>>() {
+                if g.rng.chance(0.3) {
+                    layout.set_support(c, layout.support(c).without(grp));
+                }
+            }
+        }
+        if let Some(m) = Mapper::default().map(&dfg, &layout) {
+            let errs = m.validate(&dfg, &layout);
+            if !errs.is_empty() {
+                return Err(format!("{errs:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_search_result_feasible_and_bounded() {
+    forall("search_sound", 12, 0x5E, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let cfg = SearchConfig { l_test: 40, gsg_passes: 1, ..Default::default() };
+        let dfgs = vec![dfg];
+        match helex::search::run(&dfgs, grid, &mapper, &cost, &cfg, None) {
+            Some(r) => {
+                for (di, d) in dfgs.iter().enumerate() {
+                    let errs = r.final_mappings[di].validate(d, &r.best_layout);
+                    if !errs.is_empty() {
+                        return Err(format!("witness invalid: {errs:?}"));
+                    }
+                }
+                if !helex::search::meets_min_instances(&r.best_layout, &r.min_insts) {
+                    return Err("min instances violated".into());
+                }
+                let full_cost = cost.layout_cost(&r.full_layout);
+                if r.best_cost > full_cost + 1e-9 {
+                    return Err(format!("cost increased: {} > {full_cost}", r.best_cost));
+                }
+                let tmin = cost.theoretical_min_cost(&r.full_layout, &r.min_insts);
+                if r.best_cost < tmin - 1e-9 {
+                    return Err(format!("cost below theoretical min: {} < {tmin}", r.best_cost));
+                }
+                // heatmap (initial) must be a subset of full
+                if !r.initial_layout.is_subset_of(&r.full_layout) {
+                    return Err("initial layout not a subset of full".into());
+                }
+            }
+            None => { /* infeasible random instance: fine */ }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_linear_in_removals() {
+    forall("cost_linear", 200, 0xC0, |g| {
+        let grid = Grid::new(4 + g.rng.below(6), 4 + g.rng.below(6));
+        let mut layout = Layout::full(grid, GroupSet::all_compute());
+        let cost = CostModel::area();
+        let mut expected = cost.layout_cost(&layout);
+        for _ in 0..g.size {
+            let cells: Vec<_> = grid.compute_cells().collect();
+            let cell = *g.rng.choose(&cells);
+            let sup: Vec<OpGroup> = layout.support(cell).iter().collect();
+            if sup.is_empty() {
+                continue;
+            }
+            let grp = *g.rng.choose(&sup);
+            layout.set_support(cell, layout.support(cell).without(grp));
+            expected += cost.removal_delta(grp);
+        }
+        let actual = cost.layout_cost(&layout);
+        if (actual - expected).abs() > 1e-6 {
+            return Err(format!("linearity broken: {actual} vs {expected}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_min_group_instances_is_max_over_dfgs() {
+    forall("min_insts", 80, 0x3D, |g| {
+        let n = 1 + g.rng.below(4);
+        let dfgs: Vec<Dfg> =
+            (0..n)
+                .map(|_| {
+                    let tag = g.rng.next_u64();
+                    arb_spec(g, tag).build()
+                })
+                .collect();
+        let mins = helex::dfg::min_group_instances(&dfgs);
+        for d in &dfgs {
+            let h = d.group_histogram();
+            for i in 0..helex::ops::NUM_GROUPS {
+                if h[i] > mins[i] {
+                    return Err(format!("{}: group {i} {} > min {}", d.name, h[i], mins[i]));
+                }
+            }
+        }
+        // and tight: some DFG achieves each min
+        for i in 0..helex::ops::NUM_GROUPS {
+            if mins[i] > 0
+                && !dfgs.iter().any(|d| d.group_histogram()[i] == mins[i])
+            {
+                return Err(format!("min for group {i} not achieved"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapping_determinism() {
+    // same seed, same layout, same DFG -> identical mapping
+    forall("map_deterministic", 20, 0xDE, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let layout = Layout::full(Grid::new(7, 7), dfg.groups_used());
+        let m1 = Mapper::default().map(&dfg, &layout);
+        let m2 = Mapper::default().map(&dfg, &layout);
+        match (m1, m2) {
+            (Some(a), Some(b)) => {
+                if a.node_cell != b.node_cell || a.edge_paths != b.edge_paths {
+                    return Err("nondeterministic mapping".into());
+                }
+            }
+            (None, None) => {}
+            _ => return Err("nondeterministic success".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_groupset_algebra() {
+    let mut rng = Rng::seed(0x6e);
+    for _ in 0..500 {
+        let a = GroupSet(rng.below(64) as u8);
+        let b = GroupSet(rng.below(64) as u8);
+        // de morgan-ish sanity on the 6-group universe
+        assert_eq!(a.union(b).len() + a.intersect(b).len(), a.len() + b.len());
+        assert!(a.intersect(b).is_subset_of(a));
+        assert!(a.is_subset_of(a.union(b)));
+        assert_eq!(a.minus(b).intersect(b), GroupSet::EMPTY);
+        assert_eq!(a.minus(b).union(a.intersect(b)), a);
+    }
+}

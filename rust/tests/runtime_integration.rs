@@ -1,0 +1,148 @@
+//! Runtime integration: the rust PJRT client must load the AOT artifacts
+//! (built by `make artifacts`) and produce costs identical to the native
+//! cost model — the end-to-end proof that all three layers compose.
+//!
+//! These tests are skipped (with a loud message) when artifacts are
+//! missing, so `cargo test` works pre-`make artifacts`; `make test`
+//! always builds artifacts first.
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::ops::{GroupSet, OpGroup, NUM_GROUPS};
+use helex::runtime::{artifacts_dir, cross_check, Scorer};
+use helex::search::BatchScorer;
+
+fn scorer_or_skip() -> Option<Scorer> {
+    match Scorer::load(&artifacts_dir(), &CostModel::area()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIPPING runtime integration ({e})");
+            None
+        }
+    }
+}
+
+#[test]
+fn scorer_matches_native_cost_model_on_layouts() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    let cost = CostModel::area();
+    let grid = Grid::new(10, 10);
+    let full = Layout::full(grid, GroupSet::all_compute());
+    let mut variants = vec![full.clone()];
+    // a few heterogeneous variants
+    let cells: Vec<_> = grid.compute_cells().collect();
+    for (i, &c) in cells.iter().take(8).enumerate() {
+        let g = helex::ops::COMPUTE_GROUPS[i % 5];
+        variants.push(variants[i].without_group(c, g));
+    }
+    let xla = scorer.score_layouts(&variants).unwrap();
+    for (l, &x) in variants.iter().zip(&xla) {
+        let native = cost.layout_cost(l);
+        assert!(
+            (x - native).abs() < 1e-2,
+            "XLA {x} vs native {native} for layout"
+        );
+    }
+}
+
+#[test]
+fn scorer_instance_vectors_match_native() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    let cost = CostModel::area();
+    let vectors: Vec<[usize; NUM_GROUPS]> = vec![
+        [64, 64, 64, 0, 64, 64],
+        [10, 2, 5, 0, 6, 3],
+        [0, 0, 0, 0, 0, 0],
+        [1, 0, 0, 0, 0, 0],
+    ];
+    let got = scorer.score(64, &vectors);
+    for (v, &g) in vectors.iter().zip(&got) {
+        let base = 64.0 * (cost.components.empty_cell + cost.components.fifos);
+        let want = base + cost.instances_cost(v);
+        assert!((g - want).abs() < 1e-2, "{g} vs {want} for {v:?}");
+    }
+}
+
+#[test]
+fn scorer_handles_oversized_batches() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    // 300 > BATCH=256 forces chunking
+    let vectors: Vec<[usize; NUM_GROUPS]> =
+        (0..300).map(|i| [i % 60, 0, 0, 0, i % 10, 0]).collect();
+    let got = scorer.score(36, &vectors);
+    assert_eq!(got.len(), 300);
+    let cost = CostModel::area();
+    let base = 36.0 * (cost.components.empty_cell + cost.components.fifos);
+    for (v, &g) in vectors.iter().zip(&got) {
+        let want = base + cost.instances_cost(v);
+        assert!((g - want).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn cross_check_helper_passes() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    let grid = Grid::new(12, 12);
+    let full = Layout::full(grid, GroupSet::all_compute());
+    let hetero = full.without_group(grid.cell(2, 3), OpGroup::Div);
+    let err = cross_check(&mut scorer, &CostModel::area(), &[full, hetero]).unwrap();
+    assert!(err < 1e-3, "max rel err {err}");
+}
+
+#[test]
+fn heatmap_artifact_matches_native_heatmap() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    if !scorer.has_heatmap_artifact() {
+        eprintln!("SKIPPING heatmap artifact test");
+        return;
+    }
+    // build usage bitmaps from real mappings of two DFGs
+    let dfgs = vec![
+        helex::dfg::benchmarks::benchmark("SOB"),
+        helex::dfg::benchmarks::benchmark("GB"),
+    ];
+    let grid = Grid::new(8, 8);
+    let full = Layout::full(grid, helex::dfg::groups_used(&dfgs));
+    let mapper = helex::Mapper::default();
+    let mut usage = Vec::new();
+    for d in &dfgs {
+        let m = mapper.map(d, &full).unwrap();
+        let mut cells = vec![[0f32; NUM_GROUPS]; grid.num_cells()];
+        for (n, op) in d.nodes.iter().enumerate() {
+            cells[m.node_cell[n] as usize][op.group().index()] = 1.0;
+        }
+        usage.push(cells);
+    }
+    let (heat, mins) = scorer.heatmap_stats(&usage).unwrap();
+    // mins must equal native min_group_instances
+    let native = helex::dfg::min_group_instances(&dfgs);
+    for g in helex::ops::ALL_GROUPS {
+        assert_eq!(mins[g.index()] as usize, native[g.index()], "group {g}");
+    }
+    // union: heat cell is 1 iff some DFG used it
+    for (c, row) in heat.iter().enumerate().take(grid.num_cells()) {
+        for g in 0..NUM_GROUPS {
+            let want = usage.iter().any(|u| u[c][g] > 0.0);
+            assert_eq!(row[g] > 0.0, want, "cell {c} group {g}");
+        }
+    }
+}
+
+#[test]
+fn end_to_end_search_with_xla_scorer_matches_native() {
+    let Some(mut scorer) = scorer_or_skip() else { return };
+    let dfgs = vec![helex::dfg::benchmarks::benchmark("SOB")];
+    let grid = Grid::new(5, 5);
+    let mapper = helex::Mapper::default();
+    let cost = CostModel::area();
+    let cfg = helex::search::SearchConfig { l_test: 60, gsg_passes: 1, ..Default::default() };
+    let with_xla =
+        helex::search::run(&dfgs, grid, &mapper, &cost, &cfg, Some(&mut scorer)).unwrap();
+    let native = helex::search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+    assert!(
+        (with_xla.best_cost - native.best_cost).abs() < 1e-6,
+        "scorer changed the search: {} vs {}",
+        with_xla.best_cost,
+        native.best_cost
+    );
+}
