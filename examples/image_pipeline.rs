@@ -12,10 +12,10 @@
 //! cargo run --release --example image_pipeline
 //! ```
 
-use helex::cgra::Grid;
-use helex::coordinator::{Coordinator, ExperimentConfig};
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
+use helex::search::{Explorer, SearchConfig};
+use helex::{CostModel, Grid, Mapper};
 
 fn main() {
     // the pipeline: Gaussian blur -> Sobel -> NMS -> RGB conversion -> box
@@ -25,18 +25,25 @@ fn main() {
     println!("image pipeline: {}", stages.join(" -> "));
     println!("target chip: {grid}\n");
 
-    let mut co = Coordinator::new(ExperimentConfig {
-        l_test_base: 300,
-        ..Default::default()
-    });
-    let r = co.run_helex(&dfgs, grid).expect("pipeline must map on 9x9");
+    let mapper = Mapper::default();
+    let area = CostModel::area();
+    let r = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .mapper(&mapper)
+        .cost(&area)
+        .config(SearchConfig {
+            l_test: SearchConfig::scale_l_test(300, grid),
+            ..Default::default()
+        })
+        .run()
+        .expect("pipeline must map on 9x9");
 
     println!("-- design phase --");
     println!(
         "homogeneous chip cost {:.1}, heterogeneous {:.1} ({:.1}% area saved)",
-        co.area.layout_cost(&r.full_layout),
+        area.layout_cost(&r.full_layout),
         r.best_cost,
-        reduction_pct(co.area.layout_cost(&r.full_layout), r.best_cost)
+        reduction_pct(area.layout_cost(&r.full_layout), r.best_cost)
     );
     let insts = r.best_layout.compute_group_instances();
     print!("provisioned ALUs:");
@@ -49,7 +56,7 @@ fn main() {
 
     println!("-- deployment phase: per-stage mapping on the final chip --");
     for (di, d) in dfgs.iter().enumerate() {
-        let full_map = co.mapper.map(d, &r.full_layout).expect("full maps");
+        let full_map = mapper.map(d, &r.full_layout).expect("full maps");
         let m = &r.final_mappings[di];
         println!(
             "{:<4} latency {:>3} cycles (vs {:>3} on homogeneous, {:.2}x), {} cells reserved for routing",

@@ -1,14 +1,16 @@
-//! Quickstart: run HeLEx on a small image-processing DFG set and print
-//! the resulting heterogeneous layout.
+//! Quickstart: drive the `Explorer` session API directly — builder,
+//! default heatmap -> OPSG -> GSG pipeline, and a progress observer —
+//! on a small image-processing DFG set, then print the resulting
+//! heterogeneous layout.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use helex::cgra::Grid;
-use helex::coordinator::{Coordinator, ExperimentConfig};
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
+use helex::search::{Explorer, SearchConfig, SearchEvent};
+use helex::{CostModel, Grid, Mapper};
 
 fn main() {
     // 1. Pick a DFG set (S4 = the paper's image-processing set) and a
@@ -18,20 +20,38 @@ fn main() {
     println!("DFGs: {}", dfgs.iter().map(|d| d.name.as_str()).collect::<Vec<_>>().join(", "));
     println!("target CGRA: {grid} ({} compute cells)\n", grid.num_compute());
 
-    // 2. Run HeLEx (heatmap -> OPSG -> GSG). The coordinator picks up the
-    //    AOT XLA scorer automatically when `make artifacts` has run.
-    let mut co = Coordinator::new(ExperimentConfig {
-        l_test_base: 300,
-        verbose: true,
+    // 2. Build the session: substrates, a bench-scale budget scaled to
+    //    the grid, and an observer subscribed to the search event stream.
+    let mapper = Mapper::default();
+    let area = CostModel::area();
+    let power = CostModel::power();
+    let cfg = SearchConfig {
+        l_test: SearchConfig::scale_l_test(300, grid),
         ..Default::default()
-    });
-    let r = co.run_helex(&dfgs, grid).expect("S4 must map on 9x9");
+    };
+    let mut progress = |ev: &SearchEvent| match ev {
+        SearchEvent::PhaseStarted { phase, incumbent_cost } => {
+            println!("  {phase}: start at cost {incumbent_cost:.1}")
+        }
+        SearchEvent::PhaseFinished { phase, secs, best_cost } => {
+            println!("  {phase}: done in {secs:.2}s, cost {best_cost:.1}")
+        }
+        _ => {}
+    };
+    let r = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .mapper(&mapper)
+        .cost(&area)
+        .config(cfg)
+        .observer(&mut progress)
+        .run()
+        .expect("S4 must map on 9x9");
 
     // 3. Report.
-    let full_a = co.area.layout_cost(&r.full_layout);
-    let full_p = co.power.layout_cost(&r.full_layout);
-    let best_p = co.power.layout_cost(&r.best_layout);
-    println!("initial layout : {}", if r.stats.heatmap_used { "heatmap" } else { "full" });
+    let full_a = area.layout_cost(&r.full_layout);
+    let full_p = power.layout_cost(&r.full_layout);
+    let best_p = power.layout_cost(&r.best_layout);
+    println!("\ninitial layout : {}", if r.stats.heatmap_used { "heatmap" } else { "full" });
     println!("full cost      : {full_a:.1}");
     println!("best cost      : {:.1}", r.best_cost);
     println!("area reduction : {:.1}%", reduction_pct(full_a, r.best_cost));

@@ -35,7 +35,13 @@ fn main() {
     ] {
         let mut final_cost = 0.0;
         h.bench_once(name, || {
-            let r = helex::search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+            let r = helex::search::Explorer::new(grid)
+                .dfgs(&dfgs)
+                .mapper(&mapper)
+                .cost(&cost)
+                .config(cfg.clone())
+                .run()
+                .unwrap();
             final_cost = r.best_cost;
         });
         println!("    -> final cost {final_cost:.1}");

@@ -54,11 +54,22 @@ fn main() {
     let mapper = helex::Mapper::default();
     let cfg = helex::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
     h.bench_once("search::nms_8x8_native_scoring", || {
-        helex::search::run(&dfgs, Grid::new(8, 8), &mapper, &cost, &cfg, None)
+        helex::search::Explorer::new(Grid::new(8, 8))
+            .dfgs(&dfgs)
+            .mapper(&mapper)
+            .cost(&cost)
+            .config(cfg.clone())
+            .run()
     });
     if let Ok(mut s) = Scorer::load(&artifacts_dir(), &cost) {
         h.bench_once("search::nms_8x8_xla_scoring", || {
-            helex::search::run(&dfgs, Grid::new(8, 8), &mapper, &cost, &cfg, Some(&mut s))
+            helex::search::Explorer::new(Grid::new(8, 8))
+                .dfgs(&dfgs)
+                .mapper(&mapper)
+                .cost(&cost)
+                .config(cfg.clone())
+                .scorer(&mut s)
+                .run()
         });
     }
 }

@@ -15,7 +15,7 @@ use crate::cgra::{Grid, Layout};
 use crate::cost::reduction_pct;
 use crate::dfg::{benchmarks, heta, Dfg};
 use crate::ops::{COMPUTE_GROUPS, NUM_GROUPS};
-use crate::search::{posteriori, SearchResult};
+use crate::search::{posteriori, GsgPhase, HeatmapPhase, OpsgPhase, SearchResult};
 use crate::util::table::Table;
 use std::collections::HashMap;
 
@@ -56,14 +56,15 @@ pub fn sizes(quick: bool) -> Vec<(usize, usize)> {
     }
 }
 
+/// Instance counts after each default-pipeline phase, falling back to
+/// the previous stage's counts for phases that did not run.
 fn phase_counts(r: &SearchResult) -> ([usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS])
 {
-    (
-        r.stats.insts_full,
-        r.stats.insts_after_heatmap,
-        r.stats.insts_after_opsg,
-        r.stats.insts_after_gsg,
-    )
+    let full = r.stats.insts_full;
+    let hm = r.stats.insts_after(HeatmapPhase::NAME).unwrap_or(full);
+    let op = r.stats.insts_after(OpsgPhase::NAME).unwrap_or(hm);
+    let gs = r.stats.insts_after(GsgPhase::NAME).unwrap_or(op);
+    (full, hm, op, gs)
 }
 
 /// Fig 3: per-group instance reduction with heatmap/OPSG/GSG breakdown,
@@ -196,8 +197,8 @@ pub fn table4(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table 
             format!("{}x{}{star}", size.0, size.1),
             sci(r.stats.expanded as f64),
             sci(r.stats.tested as f64),
-            f(r.stats.t_opsg, 2),
-            f(r.stats.t_gsg, 2),
+            f(r.stats.t_opsg(), 2),
+            f(r.stats.t_gsg(), 2),
             f(r.stats.t_total(), 2),
         ]);
     }
@@ -215,7 +216,7 @@ pub fn fig5(co: &mut Coordinator, cache: &mut RunCache) -> Table {
     if let Some(r) = cache.run(co, "table2", &dfgs, (10, 10)) {
         for p in &r.stats.trace {
             t.row(vec![
-                p.phase.name().to_string(),
+                p.phase.clone(),
                 f(p.secs, 3),
                 p.tested.to_string(),
                 f(p.best_cost, 1),
@@ -380,9 +381,10 @@ pub fn fig7_fig8(co: &mut Coordinator, cache: &mut RunCache) -> (Table, Table) {
                             "-".into(), "-".into()]);
                 continue;
             };
+            let fin = r.stats.insts_final();
             for i in 0..NUM_GROUPS {
                 acc_full[i] += r.stats.insts_full[i];
-                acc_final[i] += r.stats.insts_after_gsg[i];
+                acc_final[i] += fin[i];
             }
             let ra = reduction_pct(
                 co.area.layout_cost(&r.full_layout),

@@ -79,12 +79,11 @@ impl ExperimentConfig {
         self.verbose = cfg.bool_or("verbose", self.verbose);
     }
 
-    /// SearchConfig for a specific grid (scales `L_test` like the paper).
+    /// SearchConfig for a specific grid (scales `L_test` like the paper;
+    /// see [`SearchConfig::scale_l_test`] for the rule).
     pub fn search_config(&self, grid: Grid) -> SearchConfig {
-        let base_cells = 8 * 8;
-        let l_test = (self.l_test_base * grid.num_compute() + base_cells - 1) / base_cells;
         SearchConfig {
-            l_test,
+            l_test: SearchConfig::scale_l_test(self.l_test_base, grid),
             l_fail: self.l_fail,
             run_gsg: self.run_gsg,
             gsg_passes: self.gsg_passes,
@@ -132,12 +131,39 @@ impl Coordinator {
 
     /// Run HeLEx on a DFG set and grid with the area objective.
     pub fn run_helex(&mut self, dfgs: &[Dfg], grid: Grid) -> Option<SearchResult> {
+        self.run_helex_observed(dfgs, grid, None)
+    }
+
+    /// Like [`Self::run_helex`], delivering [`search::SearchEvent`]s to
+    /// `observer` (phase progress, per-candidate tests, improvements) —
+    /// the hook the CLI and benches use for live traces.
+    pub fn run_helex_observed(
+        &mut self,
+        dfgs: &[Dfg],
+        grid: Grid,
+        observer: Option<&mut dyn search::SearchObserver>,
+    ) -> Option<SearchResult> {
         let scfg = self.cfg.search_config(grid);
-        let scorer: Option<&mut dyn search::BatchScorer> = match self.scorer.as_mut() {
-            Some(s) => Some(s),
-            None => None,
-        };
-        search::run(dfgs, grid, &self.mapper, &self.area, &scfg, scorer)
+        let mut explorer = search::Explorer::new(grid)
+            .dfgs(dfgs)
+            .mapper(&self.mapper)
+            .cost(&self.area)
+            .config(scfg);
+        if let Some(s) = self.scorer.as_mut() {
+            explorer = explorer.scorer(s);
+        }
+        if let Some(obs) = observer {
+            explorer = explorer.observer(obs);
+        }
+        match explorer.run() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                if self.cfg.verbose {
+                    eprintln!("[helex] search aborted: {e}");
+                }
+                None
+            }
+        }
     }
 
     /// Startup self-check: XLA scorer must agree with the native cost

@@ -7,20 +7,43 @@
 //! compute cell supports — that minimises area/power cost while keeping
 //! every input DFG mappable.
 //!
+//! ## Architecture
+//!
+//! The search is organised around the **`Explorer` session API**
+//! ([`search::Explorer`]): a builder
+//! (`Explorer::new(grid).dfgs(..).mapper(..).cost(..).config(..)`)
+//! assembles one search session that drives a configurable pipeline of
+//! [`search::SearchPhase`]s. All phases share a single
+//! [`search::SearchCtx`] — DFG set, mapper, cost model,
+//! minimum-instance bounds, configuration, statistics, stopwatch,
+//! optional batch scorer and the feasibility-witness cache — and report
+//! progress as [`search::SearchEvent`]s (`PhaseStarted`, `LayoutTested`,
+//! `Improved`, `PhaseFinished`) to a registered
+//! [`search::SearchObserver`]. The paper's Algorithm 1 is the default
+//! pipeline ([`search::HeatmapPhase`] → [`search::OpsgPhase`] →
+//! [`search::GsgPhase`]); alternative strategies plug in as further
+//! phases without changing any signature, and [`search::run`] remains as
+//! a thin compatibility wrapper.
+//!
 //! ## Layering
 //!
 //! * [`ops`], [`dfg`], [`cgra`], [`mapper`], [`cost`] — substrates: the
 //!   operation/cost model, benchmark DFGs, the T-CGRA grid and the
 //!   RodMap-like reserve-on-demand spatial mapper.
-//! * [`search`] — the paper's contribution: heatmap initial layout and
-//!   the two-phase branch-and-bound search (OPSG then GSG).
+//! * [`search`] — the paper's contribution behind the `Explorer`
+//!   session API: heatmap initial layout and the two branch-and-bound
+//!   phases (OPSG then GSG), plus the convergence trace recorded from
+//!   the event stream.
 //! * [`baselines`] — HETA-like and REVAMP-like comparators (Fig 11).
 //! * [`runtime`] — PJRT client executing the AOT-compiled XLA artifact
 //!   (built once by `python/compile/aot.py`; Python is never on the
-//!   search path) for batched layout scoring.
+//!   search path) for batched layout scoring, behind the
+//!   [`search::BatchScorer`] trait. Builds without the XLA runtime use
+//!   an in-tree stub and fall back to native scoring.
 //! * [`coordinator`] — experiment runner regenerating every paper table
-//!   and figure; [`metrics`] — latency accounting; [`util`] — in-tree
-//!   RNG/CLI/config/bench/property-test substrates.
+//!   and figure by subscribing to `Explorer` sessions; [`metrics`] —
+//!   latency accounting; [`util`] — in-tree RNG/CLI/config/bench/
+//!   property-test substrates.
 
 pub mod baselines;
 pub mod cgra;

@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 use helex::cgra::Grid;
 use helex::coordinator::{experiments, Coordinator, ExperimentConfig};
 use helex::dfg::{benchmarks, heta, Dfg};
+use helex::search::{SearchEvent, SearchObserver};
 use helex::util::cli::{parse_size, Args};
 use helex::util::config::Config;
 
@@ -97,8 +98,24 @@ fn main() -> Result<()> {
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").context("--size RxC required")?;
             let mut co = Coordinator::new(build_config(&args));
+            // live progress from the Explorer event stream
+            let trace = args.flag("trace") || co.cfg.verbose;
+            let mut printer = |ev: &SearchEvent| match ev {
+                SearchEvent::PhaseStarted { phase, incumbent_cost } => {
+                    eprintln!("[helex] {phase}: start (incumbent cost {incumbent_cost:.1})")
+                }
+                SearchEvent::Improved { best_cost, tested, .. } => {
+                    eprintln!("[helex]   improved to {best_cost:.1} ({tested} layouts tested)")
+                }
+                SearchEvent::PhaseFinished { phase, secs, best_cost } => {
+                    eprintln!("[helex] {phase}: done in {secs:.2}s (best cost {best_cost:.1})")
+                }
+                SearchEvent::LayoutTested { .. } => {}
+            };
+            let observer: Option<&mut dyn SearchObserver> =
+                if trace { Some(&mut printer) } else { None };
             let result = co
-                .run_helex(&dfgs, Grid::new(r, c))
+                .run_helex_observed(&dfgs, Grid::new(r, c), observer)
                 .context("DFG set does not map onto this CGRA size")?;
             println!("full cost     : {:.1}", co.area.layout_cost(&result.full_layout));
             println!("initial layout: {}", if result.stats.heatmap_used { "heatmap" } else { "full" });
@@ -233,7 +250,7 @@ USAGE:
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
             [--quick] [--paper-scale] [--l-test N] [--no-gsg] [--no-heatmap]
             [--no-xla] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
-  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show]
+  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10

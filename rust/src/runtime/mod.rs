@@ -23,6 +23,15 @@ use crate::search::BatchScorer;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+/// PJRT bindings. Build environments without the XLA C++ runtime get the
+/// in-tree stand-in ([`stub`]-backed `xla` module): the API surface is
+/// identical, but client construction fails, `Scorer::load` returns an
+/// error, and every consumer falls back to [`crate::search::NativeScorer`]
+/// semantics. To use real PJRT, replace this module declaration with the
+/// `xla` crate dependency; no other code changes.
+#[path = "stub.rs"]
+mod xla;
+
 /// AOT shape constants — must match `python/compile/aot.py`.
 pub const BATCH: usize = 256;
 pub const CELLS_PAD: usize = 512;

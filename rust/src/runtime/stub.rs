@@ -1,0 +1,101 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! This build does not ship the XLA C++ runtime, so this module mirrors
+//! the slice of the `xla` crate's API that [`super`] uses and fails at
+//! client-construction time. `Scorer::load` therefore returns a friendly
+//! error and every consumer falls back to native scoring. Swapping the
+//! real bindings back in means deleting this module (and its `mod xla`
+//! declaration in `runtime/mod.rs`) and adding the `xla` crate to
+//! `Cargo.toml`; no other code changes.
+
+use std::fmt;
+
+/// Error produced by every stub entry point.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: XLA/PJRT runtime not available in this build (native scoring is used instead)"
+    ))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal), XlaError> {
+        Err(unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}

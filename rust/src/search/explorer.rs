@@ -1,0 +1,557 @@
+//! The `Explorer` session API: a builder-configured search pipeline of
+//! pluggable [`SearchPhase`]s sharing one [`SearchCtx`], with progress
+//! delivered to a registered [`SearchObserver`] as [`SearchEvent`]s.
+//!
+//! The paper's Algorithm 1 (heatmap → OPSG → GSG) is one instantiation:
+//! [`Explorer::default_phases`] builds exactly that pipeline, and the
+//! legacy [`super::run`] free function is a thin wrapper over it. New
+//! strategies — annealing phases, parallel branch-and-bound, the
+//! subgraph-driven exploration of Melchert et al. — plug in as further
+//! `SearchPhase` impls without touching any existing signature.
+//!
+//! ```no_run
+//! use helex::dfg::benchmarks;
+//! use helex::search::{Explorer, SearchConfig, SearchEvent};
+//! use helex::{CostModel, Grid, Mapper};
+//!
+//! let dfgs = benchmarks::dfg_set("S4");
+//! let mapper = Mapper::default();
+//! let cost = CostModel::area();
+//! let mut progress = |ev: &SearchEvent| {
+//!     if let SearchEvent::Improved { best_cost, .. } = ev {
+//!         println!("improved to {best_cost:.1}");
+//!     }
+//! };
+//! let result = Explorer::new(Grid::new(9, 9))
+//!     .dfgs(&dfgs)
+//!     .mapper(&mapper)
+//!     .cost(&cost)
+//!     .config(SearchConfig::default())
+//!     .observer(&mut progress)
+//!     .run()
+//!     .expect("S4 maps on 9x9");
+//! ```
+
+use super::{gsg, heatmap, opsg, BatchScorer, SearchConfig, SearchResult, SearchStats, TracePoint};
+use crate::cgra::{Grid, Layout};
+use crate::cost::CostModel;
+use crate::dfg::{groups_used, min_group_instances, Dfg};
+use crate::mapper::{Mapper, Mapping};
+use crate::ops::NUM_GROUPS;
+use crate::util::Stopwatch;
+use std::fmt;
+
+/// One progress event of a search session, delivered to the registered
+/// [`SearchObserver`] as it happens. Replaces the ad-hoc trace pushes of
+/// the pre-session API: the convergence trace (Fig 5), CLI progress and
+/// bench instrumentation are all observers of this stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SearchEvent {
+    /// A phase is about to run on the incumbent best layout.
+    PhaseStarted { phase: String, incumbent_cost: f64 },
+    /// One candidate layout was feasibility-tested with the mapper
+    /// (`tested` is the running `S_tst` counter after this test).
+    LayoutTested { feasible: bool, cost: f64, tested: usize },
+    /// The incumbent best layout improved. Costs are monotonically
+    /// non-increasing across the whole session.
+    Improved { best_cost: f64, tested: usize, secs: f64 },
+    /// A phase finished; `secs` is the phase's own wall time.
+    PhaseFinished { phase: String, secs: f64, best_cost: f64 },
+}
+
+/// Receiver of [`SearchEvent`]s. Any `FnMut(&SearchEvent)` closure is an
+/// observer.
+pub trait SearchObserver {
+    fn on_event(&mut self, event: &SearchEvent);
+}
+
+impl<F: FnMut(&SearchEvent)> SearchObserver for F {
+    fn on_event(&mut self, event: &SearchEvent) {
+        self(event)
+    }
+}
+
+/// The shared state of one search session, threaded through every phase.
+///
+/// Bundles what the pre-session API passed as ten loose positional
+/// arguments: the DFG set, mapper, cost model, minimum-instance bounds,
+/// configuration, statistics, session stopwatch, optional batch scorer
+/// and the per-DFG witness cache.
+pub struct SearchCtx<'a> {
+    /// The DFG set the layout must keep mappable.
+    pub dfgs: &'a [Dfg],
+    pub mapper: &'a Mapper,
+    pub cost: &'a CostModel,
+    /// Theoretical minimum instances per group (Section III-D pruning).
+    pub min_insts: [usize; NUM_GROUPS],
+    pub cfg: SearchConfig,
+    pub stats: SearchStats,
+    /// Session-wide wall clock (trace timestamps span all phases).
+    pub sw: Stopwatch,
+    /// Optional batched candidate-cost evaluator (XLA artifact).
+    pub scorer: Option<&'a mut dyn BatchScorer>,
+    /// Feasibility witnesses: one cached mapping per DFG, valid for the
+    /// incumbent best layout. A candidate that does not invalidate a
+    /// witness is feasible for that DFG without re-mapping.
+    pub witness: Vec<Option<Mapping>>,
+    /// The layout the search proper starts from, recorded by
+    /// initialization phases (e.g. [`HeatmapPhase`]).
+    /// [`SearchResult`]`::initial_layout` falls back to the full layout
+    /// when no phase records one, so custom pipelines without an
+    /// initialization phase keep the correct reduction baseline.
+    pub initial: Option<Layout>,
+    observer: Option<&'a mut dyn SearchObserver>,
+    current_phase: String,
+    aborted: Option<String>,
+}
+
+impl<'a> SearchCtx<'a> {
+    pub fn new(
+        dfgs: &'a [Dfg],
+        mapper: &'a Mapper,
+        cost: &'a CostModel,
+        min_insts: [usize; NUM_GROUPS],
+        cfg: SearchConfig,
+    ) -> Self {
+        Self {
+            dfgs,
+            mapper,
+            cost,
+            min_insts,
+            cfg,
+            stats: SearchStats::default(),
+            sw: Stopwatch::start(),
+            scorer: None,
+            witness: vec![None; dfgs.len()],
+            initial: None,
+            observer: None,
+            current_phase: String::new(),
+            aborted: None,
+        }
+    }
+
+    pub fn set_observer(&mut self, observer: &'a mut dyn SearchObserver) {
+        self.observer = Some(observer);
+    }
+
+    /// Name of the phase currently running (empty between phases).
+    pub fn current_phase(&self) -> &str {
+        &self.current_phase
+    }
+
+    /// Mark the session as failed; the `Explorer` turns this into
+    /// [`ExploreError::Infeasible`] once the current phase returns.
+    pub fn abort(&mut self, reason: impl Into<String>) {
+        if self.aborted.is_none() {
+            self.aborted = Some(reason.into());
+        }
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.is_some()
+    }
+
+    pub(crate) fn take_abort(&mut self) -> Option<String> {
+        self.aborted.take()
+    }
+
+    /// Deliver an event to the observer. `Improved` events also extend
+    /// the convergence trace, so phases emit events instead of pushing
+    /// `TracePoint`s by hand.
+    pub fn emit(&mut self, event: SearchEvent) {
+        if let SearchEvent::Improved { best_cost, tested, secs } = &event {
+            self.stats.trace.push(TracePoint {
+                phase: self.current_phase.clone(),
+                secs: *secs,
+                tested: *tested,
+                best_cost: *best_cost,
+            });
+        }
+        if let Some(obs) = self.observer.as_deref_mut() {
+            obs.on_event(&event);
+        }
+    }
+
+    /// Convenience wrapper for the common `Improved` emission.
+    pub fn emit_improved(&mut self, best_cost: f64) {
+        let tested = self.stats.tested;
+        let secs = self.sw.secs();
+        self.emit(SearchEvent::Improved { best_cost, tested, secs });
+    }
+
+    pub(crate) fn begin_phase(&mut self, name: &str, incumbent_cost: f64) {
+        self.current_phase = name.to_string();
+        self.emit(SearchEvent::PhaseStarted { phase: name.to_string(), incumbent_cost });
+    }
+
+    pub(crate) fn finish_phase(
+        &mut self,
+        name: &str,
+        secs: f64,
+        best_cost: f64,
+        insts: [usize; NUM_GROUPS],
+    ) {
+        self.stats.phase_secs.push((name.to_string(), secs));
+        self.stats.insts_after_phase.push((name.to_string(), insts));
+        self.emit(SearchEvent::PhaseFinished { phase: name.to_string(), secs, best_cost });
+        self.current_phase.clear();
+    }
+}
+
+/// One pluggable stage of the search pipeline. A phase receives the
+/// incumbent best layout and the shared session context, and returns the
+/// (possibly improved) incumbent. Phases must only return layouts whose
+/// feasibility is proven (by mapper tests or cached witnesses).
+pub trait SearchPhase {
+    fn name(&self) -> &str;
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout;
+}
+
+/// Initial-layout phase (Section III-E): overlay per-DFG mappings into a
+/// heatmap layout, fall back to the full layout if the heatmap does not
+/// re-map, and seed the witness cache. Aborts the session if the DFG set
+/// does not map on the full layout (Algorithm 1 precondition).
+pub struct HeatmapPhase;
+
+impl HeatmapPhase {
+    pub const NAME: &'static str = "heatmap";
+}
+
+impl SearchPhase for HeatmapPhase {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
+        let initial = if ctx.cfg.use_heatmap {
+            match heatmap::initial_layout(ctx.dfgs, &incumbent, ctx.mapper) {
+                heatmap::HeatmapOutcome::Heatmap(l) => {
+                    ctx.stats.heatmap_used = true;
+                    l
+                }
+                heatmap::HeatmapOutcome::FullFallback => incumbent.clone(),
+                heatmap::HeatmapOutcome::Infeasible => {
+                    ctx.abort("DFG set does not map on the full layout");
+                    return incumbent;
+                }
+            }
+        } else {
+            if !ctx.mapper.test_layout(ctx.dfgs, &incumbent) {
+                ctx.abort("DFG set does not map on the full layout");
+                return incumbent;
+            }
+            incumbent.clone()
+        };
+        // Seed witnesses with mappings on the initial layout (which just
+        // passed test_layout): a DFG untouched by every later removal
+        // keeps its seed witness valid to the end of the session.
+        let seeded: Vec<Option<Mapping>> =
+            ctx.dfgs.iter().map(|d| ctx.mapper.map(d, &initial)).collect();
+        if seeded.iter().any(Option::is_none) {
+            ctx.abort("initial layout no longer maps"); // should not happen
+            return incumbent;
+        }
+        ctx.witness = seeded;
+        ctx.initial = Some(initial.clone());
+        let cost = ctx.cost.layout_cost(&initial);
+        ctx.emit_improved(cost);
+        initial
+    }
+}
+
+/// Operation-based subproblem generation (Algorithm 2) as a phase.
+pub struct OpsgPhase;
+
+impl OpsgPhase {
+    pub const NAME: &'static str = "OPSG";
+}
+
+impl SearchPhase for OpsgPhase {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
+        opsg::run(&incumbent, ctx)
+    }
+}
+
+/// General subproblem generation (Algorithm 3) as a phase; the paper
+/// runs it twice, so it carries its own pass count.
+pub struct GsgPhase {
+    pub passes: usize,
+}
+
+impl GsgPhase {
+    pub const NAME: &'static str = "GSG";
+}
+
+impl SearchPhase for GsgPhase {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
+        let mut best = incumbent;
+        for _pass in 0..self.passes {
+            best = gsg::run(&best, ctx);
+        }
+        best
+    }
+}
+
+/// Why an [`Explorer`] session could not produce a result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExploreError {
+    /// No (or an empty) DFG set was supplied to the builder.
+    MissingDfgs,
+    /// An explicit empty phase pipeline was supplied.
+    EmptyPipeline,
+    /// The DFG set does not map (Algorithm 1 terminates in failure).
+    Infeasible(String),
+}
+
+impl fmt::Display for ExploreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExploreError::MissingDfgs => write!(f, "no DFGs supplied to the Explorer builder"),
+            ExploreError::EmptyPipeline => write!(f, "empty search-phase pipeline"),
+            ExploreError::Infeasible(why) => write!(f, "search infeasible: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ExploreError {}
+
+/// Builder-style search session. See the module docs for an example.
+///
+/// Required: a target grid (constructor) and a DFG set ([`Self::dfgs`]).
+/// Everything else has defaults: [`Mapper::default`], the area
+/// [`CostModel`], [`SearchConfig::default`] and the paper's
+/// heatmap → OPSG → GSG pipeline ([`Self::default_phases`]).
+pub struct Explorer<'a> {
+    grid: Grid,
+    dfgs: Option<&'a [Dfg]>,
+    mapper: Option<&'a Mapper>,
+    cost: Option<&'a CostModel>,
+    cfg: SearchConfig,
+    scorer: Option<&'a mut dyn BatchScorer>,
+    observer: Option<&'a mut dyn SearchObserver>,
+    phases: Option<Vec<Box<dyn SearchPhase>>>,
+}
+
+impl<'a> Explorer<'a> {
+    pub fn new(grid: Grid) -> Self {
+        Self {
+            grid,
+            dfgs: None,
+            mapper: None,
+            cost: None,
+            cfg: SearchConfig::default(),
+            scorer: None,
+            observer: None,
+            phases: None,
+        }
+    }
+
+    /// The DFG set to optimise the layout for (required).
+    pub fn dfgs(mut self, dfgs: &'a [Dfg]) -> Self {
+        self.dfgs = Some(dfgs);
+        self
+    }
+
+    pub fn mapper(mut self, mapper: &'a Mapper) -> Self {
+        self.mapper = Some(mapper);
+        self
+    }
+
+    pub fn cost(mut self, cost: &'a CostModel) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    pub fn config(mut self, cfg: SearchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn scorer(mut self, scorer: &'a mut dyn BatchScorer) -> Self {
+        self.scorer = Some(scorer);
+        self
+    }
+
+    pub fn observer(mut self, observer: &'a mut dyn SearchObserver) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Replace the whole phase pipeline. An empty vector is rejected at
+    /// [`Self::run`] time.
+    pub fn phases(mut self, phases: Vec<Box<dyn SearchPhase>>) -> Self {
+        self.phases = Some(phases);
+        self
+    }
+
+    /// Append one phase. Starts from an *empty* pipeline (not the
+    /// default one) the first time it is called; use
+    /// [`Self::default_phases`] to extend the standard pipeline.
+    pub fn phase(mut self, phase: Box<dyn SearchPhase>) -> Self {
+        self.phases.get_or_insert_with(Vec::new).push(phase);
+        self
+    }
+
+    /// The paper's Algorithm 1 pipeline for a given configuration:
+    /// heatmap, OPSG, and (when `cfg.run_gsg`) `cfg.gsg_passes` GSG
+    /// passes.
+    pub fn default_phases(cfg: &SearchConfig) -> Vec<Box<dyn SearchPhase>> {
+        let mut phases: Vec<Box<dyn SearchPhase>> =
+            vec![Box::new(HeatmapPhase), Box::new(OpsgPhase)];
+        if cfg.run_gsg {
+            phases.push(Box::new(GsgPhase { passes: cfg.gsg_passes }));
+        }
+        phases
+    }
+
+    /// Run the session: validate the builder, assemble the [`SearchCtx`],
+    /// drive every phase and materialize the witness mappings.
+    pub fn run(self) -> Result<SearchResult, ExploreError> {
+        let dfgs = self.dfgs.filter(|d| !d.is_empty()).ok_or(ExploreError::MissingDfgs)?;
+        let default_mapper;
+        let mapper = match self.mapper {
+            Some(m) => m,
+            None => {
+                default_mapper = Mapper::default();
+                &default_mapper
+            }
+        };
+        let default_cost;
+        let cost = match self.cost {
+            Some(c) => c,
+            None => {
+                default_cost = CostModel::area();
+                &default_cost
+            }
+        };
+        let phases = match self.phases {
+            Some(p) => p,
+            None => Self::default_phases(&self.cfg),
+        };
+        if phases.is_empty() {
+            return Err(ExploreError::EmptyPipeline);
+        }
+
+        let min_insts = min_group_instances(dfgs);
+        // full layout over the groups the DFG set actually uses
+        // (Section IV-F)
+        let full_layout = Layout::full(self.grid, groups_used(dfgs));
+
+        let mut ctx = SearchCtx::new(dfgs, mapper, cost, min_insts, self.cfg);
+        // destructure rather than assign the Option whole: the call-site
+        // coercion reborrows the &mut trait object and shortens its
+        // object lifetime to the ctx's (a direct Option-to-Option
+        // assignment would force the ctx lifetime to equal 'a, which the
+        // default_mapper/default_cost locals cannot satisfy)
+        if let Some(s) = self.scorer {
+            ctx.scorer = Some(s);
+        }
+        if let Some(obs) = self.observer {
+            ctx.set_observer(obs);
+        }
+        ctx.stats.insts_full = full_layout.compute_group_instances();
+
+        let mut best = full_layout.clone();
+        for mut phase in phases {
+            let name = phase.name().to_string();
+            ctx.begin_phase(&name, cost.layout_cost(&best));
+            let t = Stopwatch::start();
+            best = phase.run(best, &mut ctx);
+            // an aborted phase failed rather than finished: error out
+            // without emitting a misleading PhaseFinished (the
+            // started/finished pairing invariant holds for successful
+            // sessions)
+            if let Some(reason) = ctx.take_abort() {
+                return Err(ExploreError::Infeasible(reason));
+            }
+            let insts = best.compute_group_instances();
+            ctx.finish_phase(&name, t.secs(), cost.layout_cost(&best), insts);
+        }
+        // the reduction baseline: what the initialization phase recorded,
+        // or the full layout for pipelines without one
+        let initial_layout = ctx.initial.take().unwrap_or_else(|| full_layout.clone());
+
+        // materialize final witnesses: any DFG whose cached witness is
+        // missing or stale gets a fresh mapping on the final layout
+        let mut final_mappings = Vec::with_capacity(dfgs.len());
+        for (di, d) in dfgs.iter().enumerate() {
+            let w = match ctx.witness[di].take() {
+                Some(w) if w.still_valid(d, &best) => w,
+                _ => mapper.map(d, &best).ok_or_else(|| {
+                    ExploreError::Infeasible(format!(
+                        "{}: no mapping on the final layout",
+                        d.name
+                    ))
+                })?,
+            };
+            debug_assert!(w.validate(d, &best).is_empty());
+            final_mappings.push(w);
+        }
+
+        let best_cost = cost.layout_cost(&best);
+        Ok(SearchResult {
+            full_layout,
+            initial_layout,
+            best_layout: best,
+            best_cost,
+            min_insts,
+            final_mappings,
+            stats: ctx.stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::benchmarks;
+
+    #[test]
+    fn default_phase_pipeline_shape() {
+        let cfg = SearchConfig::default();
+        let names: Vec<String> =
+            Explorer::default_phases(&cfg).iter().map(|p| p.name().to_string()).collect();
+        assert_eq!(names, vec!["heatmap", "OPSG", "GSG"]);
+        let nogsg = SearchConfig { run_gsg: false, ..cfg };
+        let names: Vec<String> =
+            Explorer::default_phases(&nogsg).iter().map(|p| p.name().to_string()).collect();
+        assert_eq!(names, vec!["heatmap", "OPSG"]);
+    }
+
+    #[test]
+    fn ctx_abort_is_sticky_and_taken_once() {
+        let dfgs = vec![benchmarks::benchmark("SOB")];
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let mut ctx =
+            SearchCtx::new(&dfgs, &mapper, &cost, [0; NUM_GROUPS], SearchConfig::default());
+        assert!(!ctx.is_aborted());
+        ctx.abort("first");
+        ctx.abort("second");
+        assert!(ctx.is_aborted());
+        assert_eq!(ctx.take_abort().as_deref(), Some("first"));
+        assert!(ctx.take_abort().is_none());
+    }
+
+    #[test]
+    fn emit_improved_extends_trace_with_current_phase() {
+        let dfgs = vec![benchmarks::benchmark("SOB")];
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let mut ctx =
+            SearchCtx::new(&dfgs, &mapper, &cost, [0; NUM_GROUPS], SearchConfig::default());
+        ctx.begin_phase("custom", 10.0);
+        ctx.emit_improved(5.0);
+        assert_eq!(ctx.stats.trace.len(), 1);
+        assert_eq!(ctx.stats.trace[0].phase, "custom");
+        assert_eq!(ctx.stats.trace[0].best_cost, 5.0);
+    }
+}

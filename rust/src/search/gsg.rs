@@ -11,13 +11,9 @@
 //! queue is additionally pruned of subproblems too far from the best
 //! cost after prolonged non-improvement (Section III-F2 last paragraph).
 
-use super::{BatchScorer, Phase, SearchConfig, SearchStats, TracePoint};
+use super::{SearchCtx, SearchEvent};
 use crate::cgra::{CellId, Layout};
-use crate::cost::CostModel;
-use crate::dfg::Dfg;
-use crate::mapper::Mapper;
 use crate::ops::{GroupSet, NUM_GROUPS};
-use crate::util::Stopwatch;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 
@@ -70,19 +66,18 @@ fn removal_masks(support: GroupSet) -> Vec<GroupSet> {
 }
 
 /// Generate all valid GSG subproblems from `base` (Algorithm 3 line 3 /
-/// line 17), pushing into `pq`. Batch-scores candidate costs.
-#[allow(clippy::too_many_arguments)]
+/// line 17), pushing into `pq`. Batch-scores candidate costs through the
+/// context's scorer when one is attached.
 fn expand(
     base: &Layout,
-    min_insts: &[usize; NUM_GROUPS],
     fail_chart: &HashMap<(u8, CellId), usize>,
-    l_fail: usize,
     seen: &mut HashSet<u64>,
     pq: &mut BinaryHeap<Cand>,
-    stats: &mut SearchStats,
-    cost: &CostModel,
-    scorer: &mut Option<&mut dyn BatchScorer>,
+    ctx: &mut SearchCtx,
 ) {
+    let cost = ctx.cost;
+    let min_insts = ctx.min_insts;
+    let l_fail = ctx.cfg.l_fail;
     let base_insts = base.compute_group_instances();
     let base_cost = cost.layout_cost(base);
     let mut metas: Vec<(CellId, GroupSet)> = Vec::new();
@@ -115,9 +110,9 @@ fn expand(
             vectors.push(v);
         }
     }
-    stats.expanded += metas.len();
+    ctx.stats.expanded += metas.len();
     // candidate costs, batched through the XLA artifact when available
-    let costs: Vec<f64> = if let Some(s) = scorer.as_deref_mut() {
+    let costs: Vec<f64> = if let Some(s) = ctx.scorer.as_deref_mut() {
         s.score(base.grid.num_compute(), &vectors)
     } else {
         metas
@@ -145,36 +140,26 @@ fn layout_hash(l: &Layout) -> u64 {
     h.finish()
 }
 
-/// Algorithm 3. Returns the best layout found; updates `stats`.
-#[allow(clippy::too_many_arguments)]
-pub fn run(
-    initial: &Layout,
-    dfgs: &[Dfg],
-    mapper: &Mapper,
-    cost: &CostModel,
-    min_insts: &[usize; NUM_GROUPS],
-    cfg: &SearchConfig,
-    stats: &mut SearchStats,
-    sw: &Stopwatch,
-    scorer: &mut Option<&mut dyn BatchScorer>,
-    // witness mappings: a cached mapping whose placements the candidate
-    // layout still supports proves feasibility without re-mapping (see
-    // Mapping::still_valid; EXPERIMENTS.md §Perf). Shared with OPSG.
-    witness: &mut Vec<Option<crate::mapper::Mapping>>,
-) -> Layout {
+/// Algorithm 3. Returns the best layout found; all shared search state
+/// — stats, scorer, the witness cache shared with OPSG (a cached mapping
+/// whose placements the candidate layout still supports proves
+/// feasibility without re-mapping, see `Mapping::still_valid`;
+/// EXPERIMENTS.md §Perf) — lives in the [`SearchCtx`].
+pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
+    let dfgs = ctx.dfgs;
+    let mapper = ctx.mapper;
+    let cost = ctx.cost;
+    let cfg = ctx.cfg.clone();
     let mut best = initial.clone();
     let mut best_cost = cost.layout_cost(&best);
     let mut fail_chart: HashMap<(u8, CellId), usize> = HashMap::new();
     let mut seen: HashSet<u64> = HashSet::new();
     let mut pq: BinaryHeap<Cand> = BinaryHeap::new();
-    expand(
-        &best, min_insts, &fail_chart, cfg.l_fail, &mut seen, &mut pq, stats, cost,
-        scorer,
-    );
+    expand(&best, &fail_chart, &mut seen, &mut pq, ctx);
     let mut stale = 0usize;
 
     while let Some(cand) = pq.pop() {
-        if stats.tested >= cfg.l_test {
+        if ctx.stats.tested >= cfg.l_test {
             break;
         }
         if cand.cost >= best_cost {
@@ -186,11 +171,11 @@ pub fn run(
             continue;
         }
         // full-set testing (line 9), with witness fast-path
-        stats.tested += 1;
+        ctx.stats.tested += 1;
         let mut succ = true;
         let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
         for (di, d) in dfgs.iter().enumerate() {
-            let valid = witness[di]
+            let valid = ctx.witness[di]
                 .as_ref()
                 .map_or(false, |w| w.still_valid(d, &cand.layout));
             if valid {
@@ -204,25 +189,22 @@ pub fn run(
                 }
             }
         }
+        ctx.emit(SearchEvent::LayoutTested {
+            feasible: succ,
+            cost: cand.cost,
+            tested: ctx.stats.tested,
+        });
         if succ {
             for (di, m) in new_witnesses {
-                witness[di] = Some(m);
+                ctx.witness[di] = Some(m);
             }
             fail_chart.clear(); // line 12
             best = cand.layout;
             best_cost = cand.cost;
             stale = 0;
-            stats.trace.push(TracePoint {
-                phase: Phase::Gsg,
-                secs: sw.secs(),
-                tested: stats.tested,
-                best_cost,
-            });
+            ctx.emit_improved(best_cost);
             // line 17: expand subproblems from the improved layout
-            expand(
-                &best, min_insts, &fail_chart, cfg.l_fail, &mut seen, &mut pq, stats,
-                cost, scorer,
-            );
+            expand(&best, &fail_chart, &mut seen, &mut pq, ctx);
         } else {
             *fail_chart.entry(key).or_insert(0) += 1; // line 15
             stale += 1;
@@ -242,8 +224,21 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::cgra::Grid;
-    use crate::dfg::benchmarks;
+    use crate::cost::CostModel;
+    use crate::dfg::{benchmarks, Dfg};
+    use crate::mapper::Mapper;
     use crate::ops::OpGroup;
+    use crate::search::SearchConfig;
+
+    fn ctx<'a>(
+        dfgs: &'a [Dfg],
+        mapper: &'a Mapper,
+        cost: &'a CostModel,
+        cfg: SearchConfig,
+    ) -> SearchCtx<'a> {
+        let mins = crate::dfg::min_group_instances(dfgs);
+        SearchCtx::new(dfgs, mapper, cost, mins, cfg)
+    }
 
     #[test]
     fn removal_masks_enumerate_powerset() {
@@ -268,37 +263,24 @@ mod tests {
         let full = Layout::full(Grid::new(7, 7), crate::dfg::groups_used(&dfgs));
         let mapper = Mapper::default();
         let cost = CostModel::area();
-        let mins = crate::dfg::min_group_instances(&dfgs);
         let cfg = SearchConfig { l_test: 200, l_fail: 2, ..Default::default() };
-        let mut stats = SearchStats::default();
-        let sw = Stopwatch::start();
-        let best =
-            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let best = run(&full, &mut c);
         assert!(cost.layout_cost(&best) < cost.layout_cost(&full));
         assert!(mapper.test_layout(&dfgs, &best));
-        assert!(crate::search::meets_min_instances(&best, &mins));
+        assert!(crate::search::meets_min_instances(&best, &c.min_insts));
     }
 
     #[test]
     fn gsg_respects_budget_and_failchart() {
         let dfgs = vec![benchmarks::benchmark("SOB")];
         let full = Layout::full(Grid::new(6, 6), crate::dfg::groups_used(&dfgs));
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
         let cfg = SearchConfig { l_test: 10, l_fail: 1, ..Default::default() };
-        let mut stats = SearchStats::default();
-        let sw = Stopwatch::start();
-        let _ = run(
-            &full,
-            &dfgs,
-            &Mapper::default(),
-            &CostModel::area(),
-            &crate::dfg::min_group_instances(&dfgs),
-            &cfg,
-            &mut stats,
-            &sw,
-            &mut None,
-            &mut vec![None; dfgs.len()],
-        );
-        assert!(stats.tested <= 10);
+        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let _ = run(&full, &mut c);
+        assert!(c.stats.tested <= 10);
     }
 
     #[test]
@@ -307,19 +289,17 @@ mod tests {
         let l = Layout::empty(grid);
         let mut pq = BinaryHeap::new();
         let mut seen = HashSet::new();
-        let mut stats = SearchStats::default();
-        let mut scorer: Option<&mut dyn BatchScorer> = None;
-        expand(
-            &l,
-            &[0; NUM_GROUPS],
-            &HashMap::new(),
-            3,
-            &mut seen,
-            &mut pq,
-            &mut stats,
-            &CostModel::area(),
-            &mut scorer,
+        let dfgs: Vec<Dfg> = Vec::new();
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let mut c = SearchCtx::new(
+            &dfgs,
+            &mapper,
+            &cost,
+            [0; NUM_GROUPS],
+            SearchConfig { l_fail: 3, ..Default::default() },
         );
+        expand(&l, &HashMap::new(), &mut seen, &mut pq, &mut c);
         assert!(pq.is_empty());
     }
 }

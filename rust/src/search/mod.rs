@@ -1,54 +1,50 @@
-//! The HeLEx search (paper Section III).
+//! The HeLEx search (paper Section III), exposed as an [`Explorer`]
+//! session of pluggable [`SearchPhase`]s.
 //!
-//! Three phases, mirroring Algorithm 1:
+//! The paper's Algorithm 1 is the default pipeline:
 //!
-//! 1. [`heatmap`] — initial layout: map each DFG individually on the full
-//!    layout, overlay the per-cell usage into a heterogeneous heatmap
-//!    layout, and keep it if all DFGs re-map (else fall back to full).
-//! 2. [`opsg`] — BB search removing one operation group at a time, most
-//!    expensive group first, with *selective testing* (only DFGs that use
-//!    the removed group are re-mapped).
-//! 3. [`gsg`] — BB search removing arbitrary group combinations with a
-//!    `failChart` pruning memory and full-set testing.
+//! 1. [`HeatmapPhase`] ([`heatmap`]) — initial layout: map each DFG
+//!    individually on the full layout, overlay the per-cell usage into a
+//!    heterogeneous heatmap layout, and keep it if all DFGs re-map (else
+//!    fall back to full).
+//! 2. [`OpsgPhase`] ([`opsg`]) — BB search removing one operation group
+//!    at a time, most expensive group first, with *selective testing*
+//!    (only DFGs that use the removed group are re-mapped).
+//! 3. [`GsgPhase`] ([`gsg`]) — BB search removing arbitrary group
+//!    combinations with a `failChart` pruning memory and full-set
+//!    testing.
 //!
-//! [`run`] drives all three and records per-phase statistics and the
-//! convergence trace used by Figs 3–6 and Table IV.
+//! All phases share one [`SearchCtx`] (DFG set, mapper, cost model,
+//! bounds, config, stats, stopwatch, scorer, witness cache) and report
+//! progress as [`SearchEvent`]s to an optional [`SearchObserver`]; the
+//! convergence trace used by Figs 3–6 and Table IV is recorded from the
+//! event stream. [`run`] is the legacy entry point, kept as a thin
+//! wrapper over [`Explorer`].
 
+pub mod explorer;
 pub mod gsg;
 pub mod heatmap;
 pub mod opsg;
 pub mod posteriori;
 
+pub use explorer::{
+    ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchCtx, SearchEvent,
+    SearchObserver, SearchPhase,
+};
+
 use crate::cgra::Layout;
 use crate::cost::CostModel;
-use crate::dfg::{min_group_instances, Dfg};
+use crate::dfg::Dfg;
 use crate::mapper::Mapper;
 use crate::ops::NUM_GROUPS;
-use crate::util::Stopwatch;
-
-/// Which phase produced an event / a removal.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Phase {
-    Heatmap,
-    Opsg,
-    Gsg,
-}
-
-impl Phase {
-    pub fn name(self) -> &'static str {
-        match self {
-            Phase::Heatmap => "heatmap",
-            Phase::Opsg => "OPSG",
-            Phase::Gsg => "GSG",
-        }
-    }
-}
 
 /// One point of the convergence trace (Fig 5): cost of the incumbent best
-/// layout at a given wall time / tested-layout count.
+/// layout at a given wall time / tested-layout count. Recorded from
+/// [`SearchEvent::Improved`] events; `phase` is the emitting phase's
+/// name (e.g. `"heatmap"`, `"OPSG"`, `"GSG"`).
 #[derive(Debug, Clone)]
 pub struct TracePoint {
-    pub phase: Phase,
+    pub phase: String,
     pub secs: f64,
     pub tested: usize,
     pub best_cost: f64,
@@ -91,12 +87,24 @@ impl Default for SearchConfig {
     }
 }
 
+/// Compute cells of the paper's 10×10 reference instance: a T-CGRA grid
+/// carries a one-cell I/O border, so a 10×10 grid has an 8×8 = 64-cell
+/// compute core. `L_test` budgets are quoted at this size and scaled.
+const REF_COMPUTE_CELLS: usize = 8 * 8;
+
 impl SearchConfig {
-    /// Paper rule: `L_test` = 2000 at 10×10, scaled with compute-cell
-    /// count for larger instances.
+    /// Paper rule: `L_test` = 2000 at the 10×10 reference size, scaled
+    /// with compute-cell count for larger instances.
     pub fn l_test_for(grid: crate::cgra::Grid) -> usize {
-        let base_cells = 8 * 8; // 10x10 compute cells
-        (2000 * grid.num_compute() + base_cells - 1) / base_cells
+        Self::scale_l_test(2000, grid)
+    }
+
+    /// Scaling rule for mapper-invocation budgets: `base` is the budget
+    /// at the 10×10 reference instance (64 compute cells) and grows
+    /// proportionally with the target grid's compute-cell count,
+    /// rounded up: `ceil(base · num_compute / 64)`.
+    pub fn scale_l_test(base: usize, grid: crate::cgra::Grid) -> usize {
+        (base * grid.num_compute() + REF_COMPUTE_CELLS - 1) / REF_COMPUTE_CELLS
     }
 }
 
@@ -107,24 +115,57 @@ pub struct SearchStats {
     pub expanded: usize,
     /// Subproblems tested with the mapper (`S_tst`).
     pub tested: usize,
-    /// Wall time per phase, seconds.
-    pub t_heatmap: f64,
-    pub t_opsg: f64,
-    pub t_gsg: f64,
+    /// Wall seconds per executed phase, in pipeline order (one entry per
+    /// phase execution; repeated phases accumulate entries).
+    pub phase_secs: Vec<(String, f64)>,
     /// Whether the heatmap was usable as the initial layout.
     pub heatmap_used: bool,
-    /// Per-group instances after each phase (for the Fig 3 breakdown).
+    /// Per-group instances of the full layout.
     pub insts_full: [usize; NUM_GROUPS],
-    pub insts_after_heatmap: [usize; NUM_GROUPS],
-    pub insts_after_opsg: [usize; NUM_GROUPS],
-    pub insts_after_gsg: [usize; NUM_GROUPS],
+    /// Per-group instance counts after each executed phase, in pipeline
+    /// order (for the Fig 3 breakdown).
+    pub insts_after_phase: Vec<(String, [usize; NUM_GROUPS])>,
     /// Convergence trace.
     pub trace: Vec<TracePoint>,
 }
 
 impl SearchStats {
+    /// Total wall seconds across every phase.
     pub fn t_total(&self) -> f64 {
-        self.t_heatmap + self.t_opsg + self.t_gsg
+        self.phase_secs.iter().map(|(_, s)| *s).sum()
+    }
+
+    /// Wall seconds spent in phases named `name` (0.0 if it never ran).
+    pub fn phase_secs_for(&self, name: &str) -> f64 {
+        self.phase_secs.iter().filter(|(n, _)| n.as_str() == name).map(|(_, s)| *s).sum()
+    }
+
+    pub fn t_heatmap(&self) -> f64 {
+        self.phase_secs_for(HeatmapPhase::NAME)
+    }
+
+    pub fn t_opsg(&self) -> f64 {
+        self.phase_secs_for(OpsgPhase::NAME)
+    }
+
+    pub fn t_gsg(&self) -> f64 {
+        self.phase_secs_for(GsgPhase::NAME)
+    }
+
+    /// Instance counts after the last execution of phase `name`, if it
+    /// ran.
+    pub fn insts_after(&self, name: &str) -> Option<[usize; NUM_GROUPS]> {
+        self.insts_after_phase
+            .iter()
+            .rev()
+            .find(|(n, _)| n.as_str() == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Instance counts after the final phase (the full layout's counts
+    /// if no phase ran).
+    pub fn insts_final(&self) -> [usize; NUM_GROUPS] {
+        self.insts_after_phase.last().map(|(_, v)| *v).unwrap_or(self.insts_full)
     }
 }
 
@@ -147,131 +188,24 @@ pub struct SearchResult {
 
 /// Algorithm 1: run HeLEx on a DFG set and target grid.
 ///
-/// `scorer` optionally batches candidate-cost evaluation through the AOT
-/// XLA artifact (see `runtime`); pass `None` to use the native evaluator
-/// only.
+/// Legacy entry point, kept as a thin wrapper over the [`Explorer`]
+/// session API with the default phase pipeline. `scorer` optionally
+/// batches candidate-cost evaluation through the AOT XLA artifact (see
+/// `runtime`); pass `None` to use the native evaluator only.
 pub fn run(
     dfgs: &[Dfg],
     grid: crate::cgra::Grid,
     mapper: &Mapper,
     cost: &CostModel,
     cfg: &SearchConfig,
-    mut scorer: Option<&mut dyn BatchScorer>,
+    scorer: Option<&mut dyn BatchScorer>,
 ) -> Option<SearchResult> {
-    let mut stats = SearchStats::default();
-    let sw = Stopwatch::start();
-
-    // line 1: minimum group instances
-    let min_insts = min_group_instances(dfgs);
-
-    // full layout over the groups the DFG set actually uses (Section IV-F)
-    let full_layout = Layout::full(grid, crate::dfg::groups_used(dfgs));
-    stats.insts_full = full_layout.compute_group_instances();
-
-    // lines 2-4: initial layout (heatmap if possible, else full —
-    // terminate in failure if even the full layout does not map)
-    let hm_sw = Stopwatch::start();
-    let initial_layout = if cfg.use_heatmap {
-        match heatmap::initial_layout(dfgs, &full_layout, mapper) {
-            heatmap::HeatmapOutcome::Heatmap(l) => {
-                stats.heatmap_used = true;
-                l
-            }
-            heatmap::HeatmapOutcome::FullFallback => full_layout.clone(),
-            heatmap::HeatmapOutcome::Infeasible => return None,
-        }
-    } else {
-        if !mapper.test_layout(dfgs, &full_layout) {
-            return None;
-        }
-        full_layout.clone()
-    };
-    stats.t_heatmap = hm_sw.secs();
-    stats.insts_after_heatmap = initial_layout.compute_group_instances();
-    stats.trace.push(TracePoint {
-        phase: Phase::Heatmap,
-        secs: sw.secs(),
-        tested: stats.tested,
-        best_cost: cost.layout_cost(&initial_layout),
-    });
-
-    // witnesses shared across phases, seeded with mappings on the
-    // initial layout (which just passed test_layout): a DFG untouched by
-    // every later removal keeps its seed witness valid to the end.
-    let mut witness: Vec<Option<crate::mapper::Mapping>> =
-        dfgs.iter().map(|d| mapper.map(d, &initial_layout)).collect();
-    if witness.iter().any(Option::is_none) {
-        return None; // initial layout no longer maps (should not happen)
+    let mut explorer =
+        Explorer::new(grid).dfgs(dfgs).mapper(mapper).cost(cost).config(cfg.clone());
+    if let Some(s) = scorer {
+        explorer = explorer.scorer(s);
     }
-
-    // line 5: OPSG phase
-    let opsg_sw = Stopwatch::start();
-    let best = opsg::run(
-        &initial_layout,
-        dfgs,
-        mapper,
-        cost,
-        &min_insts,
-        cfg,
-        &mut stats,
-        &sw,
-        &mut scorer,
-        &mut witness,
-    );
-    stats.t_opsg = opsg_sw.secs();
-    stats.insts_after_opsg = best.compute_group_instances();
-
-    // line 6: GSG phase
-    let gsg_sw = Stopwatch::start();
-    let best = if cfg.run_gsg {
-        let mut b = best;
-        for _pass in 0..cfg.gsg_passes {
-            b = gsg::run(
-                &b,
-                dfgs,
-                mapper,
-                cost,
-                &min_insts,
-                cfg,
-                &mut stats,
-                &sw,
-                &mut scorer,
-                &mut witness,
-            );
-        }
-        b
-    } else {
-        best
-    };
-    stats.t_gsg = gsg_sw.secs();
-    stats.insts_after_gsg = best.compute_group_instances();
-
-    // materialize final witnesses: any DFG whose cached witness is
-    // missing or stale gets a fresh mapping on the final layout (always
-    // possible: its support was never removed from under a None witness
-    // without a successful remap).
-    let mut final_mappings = Vec::with_capacity(dfgs.len());
-    for (di, d) in dfgs.iter().enumerate() {
-        let w = match witness[di].take() {
-            Some(w) if w.still_valid(d, &best) => w,
-            _ => mapper
-                .map(d, &best)
-                .expect("accepted layout must be mappable for untouched DFGs"),
-        };
-        debug_assert!(w.validate(d, &best).is_empty());
-        final_mappings.push(w);
-    }
-
-    let best_cost = cost.layout_cost(&best);
-    Some(SearchResult {
-        full_layout,
-        initial_layout,
-        best_layout: best,
-        best_cost,
-        min_insts,
-        final_mappings,
-        stats,
-    })
+    explorer.run().ok()
 }
 
 /// Batched candidate-cost evaluation interface, implemented by
@@ -348,6 +282,9 @@ mod tests {
         assert!(r.stats.tested > 0);
         assert!(r.stats.expanded >= r.stats.tested);
         assert!(!r.stats.trace.is_empty());
+        // one stats entry per default-pipeline phase
+        assert_eq!(r.stats.phase_secs.len(), 3);
+        assert_eq!(r.stats.insts_after_phase.len(), 3);
     }
 
     #[test]
@@ -388,6 +325,10 @@ mod tests {
     fn l_test_scales_with_size() {
         assert_eq!(SearchConfig::l_test_for(Grid::new(10, 10)), 2000);
         assert!(SearchConfig::l_test_for(Grid::new(13, 15)) > 2000);
+        // the documented rule: ceil(base * num_compute / 64)
+        let g = Grid::new(12, 12); // 10x10 compute core = 100 cells
+        assert_eq!(SearchConfig::scale_l_test(2000, g), (2000 * 100 + 63) / 64);
+        assert_eq!(SearchConfig::scale_l_test(64, Grid::new(10, 10)), 64);
     }
 
     #[test]
@@ -396,7 +337,27 @@ mod tests {
         let grid = Grid::new(5, 5);
         let cfg = SearchConfig { run_gsg: false, ..small_cfg() };
         let r = run(&dfgs, grid, &Mapper::default(), &CostModel::area(), &cfg, None).unwrap();
-        assert_eq!(r.stats.insts_after_gsg, r.stats.insts_after_opsg);
-        assert!(!r.stats.trace.iter().any(|t| t.phase == Phase::Gsg));
+        assert!(r.stats.insts_after(GsgPhase::NAME).is_none());
+        assert_eq!(r.stats.insts_final(), r.stats.insts_after(OpsgPhase::NAME).unwrap());
+        assert_eq!(r.stats.t_gsg(), 0.0);
+        assert!(!r.stats.trace.iter().any(|t| t.phase == GsgPhase::NAME));
+    }
+
+    #[test]
+    fn stats_phase_accessors() {
+        let mut s = SearchStats { insts_full: [9; NUM_GROUPS], ..Default::default() };
+        assert_eq!(s.insts_final(), [9; NUM_GROUPS]);
+        s.phase_secs.push(("GSG".into(), 1.0));
+        s.phase_secs.push(("GSG".into(), 2.0));
+        s.phase_secs.push(("OPSG".into(), 4.0));
+        assert_eq!(s.t_gsg(), 3.0);
+        assert_eq!(s.t_opsg(), 4.0);
+        assert_eq!(s.t_heatmap(), 0.0);
+        assert_eq!(s.t_total(), 7.0);
+        s.insts_after_phase.push(("OPSG".into(), [5; NUM_GROUPS]));
+        s.insts_after_phase.push(("GSG".into(), [3; NUM_GROUPS]));
+        assert_eq!(s.insts_after("OPSG"), Some([5; NUM_GROUPS]));
+        assert_eq!(s.insts_final(), [3; NUM_GROUPS]);
+        assert_eq!(s.insts_after("heatmap"), None);
     }
 }

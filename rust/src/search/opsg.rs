@@ -9,14 +9,10 @@
 //! re-mapped — the others' mappings cannot be invalidated by removing a
 //! group they never use (the base layout is always feasible in OPSG).
 
-use super::{BatchScorer, Phase, SearchConfig, SearchStats, TracePoint};
+use super::{SearchCtx, SearchEvent};
 use crate::cgra::{CellId, Layout};
-use crate::cost::CostModel;
-use crate::dfg::Dfg;
-use crate::mapper::Mapper;
 use crate::ops::costs::groups_by_descending_cost;
 use crate::ops::{GroupSet, OpGroup, NUM_GROUPS};
-use crate::util::Stopwatch;
 
 /// One queue fill: all valid single-removals of `op_type` from `base`.
 /// Returns candidate cells in branching order; their (equal) costs come
@@ -42,7 +38,8 @@ fn generate_valid_layouts(
     out
 }
 
-/// Algorithm 2. Returns the best layout found; updates `stats`.
+/// Algorithm 2. Returns the best layout found; all shared search state
+/// (stats, scorer, witness cache, config) lives in the [`SearchCtx`].
 ///
 /// Perf (EXPERIMENTS.md §Perf): feasibility testing keeps a *witness
 /// mapping* per DFG for the incumbent best layout. Removing group `g`
@@ -50,19 +47,12 @@ fn generate_valid_layouts(
 /// `g`-op on `c` (support removal does not touch the switch fabric), so
 /// such candidates are accepted without re-mapping — a sound
 /// strengthening of the paper's selective testing.
-#[allow(clippy::too_many_arguments)]
-pub fn run(
-    initial: &Layout,
-    dfgs: &[Dfg],
-    mapper: &Mapper,
-    cost: &CostModel,
-    min_insts: &[usize; NUM_GROUPS],
-    cfg: &SearchConfig,
-    stats: &mut SearchStats,
-    sw: &Stopwatch,
-    scorer: &mut Option<&mut dyn BatchScorer>,
-    witness: &mut Vec<Option<crate::mapper::Mapping>>,
-) -> Layout {
+pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
+    let dfgs = ctx.dfgs;
+    let mapper = ctx.mapper;
+    let cost = ctx.cost;
+    let min_insts = ctx.min_insts;
+    let cfg = ctx.cfg.clone();
     let mut best = initial.clone();
     let mut best_cost = cost.layout_cost(&best);
     let removal_order = groups_by_descending_cost(&cost.components);
@@ -76,15 +66,15 @@ pub fn run(
         let mut failed: std::collections::HashSet<CellId> = std::collections::HashSet::new();
         loop {
             // line 7-8: (re)fill the queue from the incumbent best
-            let cells = generate_valid_layouts(&best, op_type, min_insts, &failed);
-            stats.expanded += cells.len();
+            let cells = generate_valid_layouts(&best, op_type, &min_insts, &failed);
+            ctx.stats.expanded += cells.len();
             if cells.is_empty() {
                 break; // next group
             }
             // candidate costs: all equal (same removal from same base);
             // computed through the batch scorer when available, which is
             // also the cross-check that XLA and native cost agree.
-            let cand_cost = if let Some(s) = scorer.as_deref_mut() {
+            let cand_cost = if let Some(s) = ctx.scorer.as_deref_mut() {
                 let mut v = best.compute_group_instances();
                 v[op_type.index()] -= 1;
                 s.score(best.grid.num_compute(), &[v])[0]
@@ -102,18 +92,18 @@ pub fn run(
 
             let mut new_best_found = false;
             for cell in cells {
-                if stats.tested >= cfg.l_test {
+                if ctx.stats.tested >= cfg.l_test {
                     break 'groups;
                 }
                 let candidate = best.without_group(cell, op_type);
-                stats.tested += 1;
+                ctx.stats.tested += 1;
                 // witness reuse: a DFG only needs re-mapping if its
                 // current witness executes an op of `op_type` on `cell`.
                 let mut ok = true;
                 let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
                 for &di in &affected {
                     let d = &dfgs[di];
-                    let needs_remap = match &witness[di] {
+                    let needs_remap = match &ctx.witness[di] {
                         Some(w) => !w.still_valid(d, &candidate),
                         None => true,
                     };
@@ -128,19 +118,19 @@ pub fn run(
                         }
                     }
                 }
+                ctx.emit(SearchEvent::LayoutTested {
+                    feasible: ok,
+                    cost: cand_cost,
+                    tested: ctx.stats.tested,
+                });
                 if ok {
                     best = candidate;
                     best_cost = cand_cost;
                     for (di, m) in new_witnesses {
-                        witness[di] = Some(m);
+                        ctx.witness[di] = Some(m);
                     }
                     failed.clear();
-                    stats.trace.push(TracePoint {
-                        phase: Phase::Opsg,
-                        secs: sw.secs(),
-                        tested: stats.tested,
-                        best_cost,
-                    });
+                    ctx.emit_improved(best_cost);
                     new_best_found = true;
                     break; // rebuild queue from new best
                 } else {
@@ -159,8 +149,10 @@ pub fn run(
 mod tests {
     use super::*;
     use crate::cgra::Grid;
-    use crate::dfg::benchmarks;
-    use crate::search::NativeScorer;
+    use crate::cost::CostModel;
+    use crate::dfg::{benchmarks, Dfg};
+    use crate::mapper::Mapper;
+    use crate::search::{NativeScorer, SearchConfig};
 
     fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, Mapper, CostModel) {
         let dfgs: Vec<Dfg> = names.iter().map(|n| benchmarks::benchmark(n)).collect();
@@ -168,15 +160,23 @@ mod tests {
         (dfgs, full, Mapper::default(), CostModel::area())
     }
 
+    fn ctx<'a>(
+        dfgs: &'a [Dfg],
+        mapper: &'a Mapper,
+        cost: &'a CostModel,
+        cfg: SearchConfig,
+    ) -> SearchCtx<'a> {
+        let mins = crate::dfg::min_group_instances(dfgs);
+        SearchCtx::new(dfgs, mapper, cost, mins, cfg)
+    }
+
     #[test]
     fn opsg_removes_expensive_groups_first_and_most() {
         let (dfgs, full, mapper, cost) = setup(&["BIL"], 8, 8);
         let mins = crate::dfg::min_group_instances(&dfgs);
-        let mut stats = SearchStats::default();
-        let sw = Stopwatch::start();
         let cfg = SearchConfig { l_test: 400, ..Default::default() };
-        let best =
-            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
+        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let best = run(&full, &mut c);
         let nf = full.compute_group_instances();
         let nb = best.compute_group_instances();
         // BIL needs only 2 Div instances: almost all of the 36 must go
@@ -184,43 +184,37 @@ mod tests {
         assert!(nb[OpGroup::Div.index()] < nf[OpGroup::Div.index()]);
         // result still maps
         assert!(mapper.test_layout(&dfgs, &best));
-        assert!(stats.tested > 0 && stats.expanded >= stats.tested);
+        assert!(c.stats.tested > 0 && c.stats.expanded >= c.stats.tested);
     }
 
     #[test]
     fn opsg_respects_l_test_budget() {
         let (dfgs, full, mapper, cost) = setup(&["SOB", "GB"], 7, 7);
-        let mins = crate::dfg::min_group_instances(&dfgs);
-        let mut stats = SearchStats::default();
-        let sw = Stopwatch::start();
         let cfg = SearchConfig { l_test: 5, ..Default::default() };
-        let _ = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
-        assert!(stats.tested <= 5);
+        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let _ = run(&full, &mut c);
+        assert!(c.stats.tested <= 5);
     }
 
     #[test]
     fn opsg_never_violates_min_instances() {
         let (dfgs, full, mapper, cost) = setup(&["RGB"], 7, 7);
-        let mins = crate::dfg::min_group_instances(&dfgs);
-        let mut stats = SearchStats::default();
-        let sw = Stopwatch::start();
         let cfg = SearchConfig { l_test: 300, ..Default::default() };
-        let best = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut stats, &sw, &mut None, &mut vec![None; dfgs.len()]);
-        assert!(crate::search::meets_min_instances(&best, &mins));
+        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let best = run(&full, &mut c);
+        assert!(crate::search::meets_min_instances(&best, &c.min_insts));
     }
 
     #[test]
     fn scorer_and_native_agree() {
         let (dfgs, full, mapper, cost) = setup(&["SOB"], 6, 6);
-        let mins = crate::dfg::min_group_instances(&dfgs);
         let cfg = SearchConfig { l_test: 100, ..Default::default() };
-        let sw = Stopwatch::start();
-        let mut s1 = SearchStats::default();
-        let b1 = run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut s1, &sw, &mut None, &mut vec![None; dfgs.len()]);
-        let mut s2 = SearchStats::default();
+        let mut c1 = ctx(&dfgs, &mapper, &cost, cfg.clone());
+        let b1 = run(&full, &mut c1);
         let mut ns = NativeScorer { cost: cost.clone() };
-        let b2 =
-            run(&full, &dfgs, &mapper, &cost, &mins, &cfg, &mut s2, &sw, &mut Some(&mut ns), &mut vec![None; dfgs.len()]);
+        let mut c2 = ctx(&dfgs, &mapper, &cost, cfg);
+        c2.scorer = Some(&mut ns);
+        let b2 = run(&full, &mut c2);
         assert_eq!(
             cost.layout_cost(&b1),
             cost.layout_cost(&b2),

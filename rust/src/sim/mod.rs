@@ -279,7 +279,13 @@ mod tests {
         let mapper = Mapper::default();
         let cost = crate::cost::CostModel::area();
         let cfg = crate::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
-        let r = crate::search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+        let r = crate::search::Explorer::new(grid)
+            .dfgs(&dfgs)
+            .mapper(&mapper)
+            .cost(&cost)
+            .config(cfg)
+            .run()
+            .unwrap();
         let full = map_and_simulate(&dfgs[0], &r.full_layout, &mapper, 40).unwrap();
         let het = map_and_simulate(&dfgs[0], &r.best_layout, &mapper, 40).unwrap();
         assert_eq!(full.completed, 40);

@@ -1,0 +1,199 @@
+//! Integration tests for the `Explorer` session API: builder defaults
+//! and validation, observer event-stream invariants, custom phase
+//! pipelines, and parity with the legacy `search::run` wrapper.
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::dfg::benchmarks;
+use helex::search::{
+    self, ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchConfig, SearchCtx,
+    SearchEvent, SearchPhase,
+};
+use helex::Mapper;
+
+fn small_cfg() -> SearchConfig {
+    SearchConfig { l_test: 120, l_fail: 2, gsg_passes: 1, ..Default::default() }
+}
+
+#[test]
+fn builder_requires_dfgs() {
+    assert_eq!(
+        Explorer::new(Grid::new(6, 6)).run().unwrap_err(),
+        ExploreError::MissingDfgs
+    );
+    let empty: Vec<helex::Dfg> = Vec::new();
+    assert_eq!(
+        Explorer::new(Grid::new(6, 6)).dfgs(&empty).run().unwrap_err(),
+        ExploreError::MissingDfgs
+    );
+}
+
+#[test]
+fn builder_rejects_empty_pipeline() {
+    let dfgs = vec![benchmarks::benchmark("SOB")];
+    assert_eq!(
+        Explorer::new(Grid::new(6, 6)).dfgs(&dfgs).phases(Vec::new()).run().unwrap_err(),
+        ExploreError::EmptyPipeline
+    );
+}
+
+#[test]
+fn builder_defaults_mapper_and_cost() {
+    // only grid + DFGs + a small budget: mapper, cost model and the
+    // default heatmap -> OPSG -> GSG pipeline are filled in.
+    let dfgs = vec![benchmarks::benchmark("SOB")];
+    let r = Explorer::new(Grid::new(6, 6)).dfgs(&dfgs).config(small_cfg()).run().unwrap();
+    let cost = CostModel::area(); // the documented default objective
+    assert!(r.best_cost < cost.layout_cost(&r.full_layout));
+    assert!((r.best_cost - cost.layout_cost(&r.best_layout)).abs() < 1e-9);
+    assert_eq!(r.final_mappings.len(), dfgs.len());
+}
+
+#[test]
+fn infeasible_set_is_an_error_not_a_panic() {
+    let dfgs = vec![benchmarks::benchmark("SAD")]; // 63 compute ops
+    let err = Explorer::new(Grid::new(5, 5)) // 9 compute cells
+        .dfgs(&dfgs)
+        .config(small_cfg())
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, ExploreError::Infeasible(_)), "{err:?}");
+    // and the legacy wrapper maps it to None
+    assert!(search::run(
+        &dfgs,
+        Grid::new(5, 5),
+        &Mapper::default(),
+        &CostModel::area(),
+        &small_cfg(),
+        None
+    )
+    .is_none());
+}
+
+#[test]
+fn observer_event_stream_is_well_formed() {
+    let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+    let mut events: Vec<SearchEvent> = Vec::new();
+    let mut obs = |ev: &SearchEvent| events.push(ev.clone());
+    let r = Explorer::new(Grid::new(6, 6))
+        .dfgs(&dfgs)
+        .config(small_cfg())
+        .observer(&mut obs)
+        .run()
+        .unwrap();
+
+    // every PhaseStarted has a matching PhaseFinished, in order, and
+    // phases do not overlap
+    let mut open: Option<String> = None;
+    let mut finished: Vec<String> = Vec::new();
+    for ev in &events {
+        match ev {
+            SearchEvent::PhaseStarted { phase, .. } => {
+                assert!(open.is_none(), "phase {phase} started inside {open:?}");
+                open = Some(phase.clone());
+            }
+            SearchEvent::PhaseFinished { phase, .. } => {
+                assert_eq!(open.as_deref(), Some(phase.as_str()));
+                finished.push(open.take().unwrap());
+            }
+            _ => assert!(open.is_some(), "event outside any phase: {ev:?}"),
+        }
+    }
+    assert!(open.is_none(), "unfinished phase {open:?}");
+    assert_eq!(finished, vec!["heatmap", "OPSG", "GSG"]);
+
+    // Improved costs are monotonically non-increasing across the session
+    let improved: Vec<f64> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            SearchEvent::Improved { best_cost, .. } => Some(*best_cost),
+            _ => None,
+        })
+        .collect();
+    assert!(!improved.is_empty());
+    assert!(improved.windows(2).all(|w| w[1] <= w[0] + 1e-9), "{improved:?}");
+    assert!((improved.last().unwrap() - r.best_cost).abs() < 1e-9);
+
+    // the event stream is the trace: one LayoutTested per mapper test,
+    // one Improved per trace point
+    let tested_events =
+        events.iter().filter(|e| matches!(e, SearchEvent::LayoutTested { .. })).count();
+    assert_eq!(tested_events, r.stats.tested);
+    assert_eq!(improved.len(), r.stats.trace.len());
+}
+
+#[test]
+fn explorer_matches_legacy_run_wrapper() {
+    // parity on two benchmark DFGs: the default pipeline must produce
+    // the same SearchResult as the legacy entry point (the mapper is
+    // deterministic per seed).
+    let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+    let grid = Grid::new(7, 7);
+    let mapper = Mapper::default();
+    let cost = CostModel::area();
+    let cfg = small_cfg();
+
+    let a = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .mapper(&mapper)
+        .cost(&cost)
+        .config(cfg.clone())
+        .run()
+        .unwrap();
+    let b = search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+
+    assert_eq!(a.best_cost, b.best_cost);
+    assert_eq!(a.best_layout, b.best_layout);
+    assert_eq!(a.initial_layout, b.initial_layout);
+    assert_eq!(a.min_insts, b.min_insts);
+    assert_eq!(a.stats.tested, b.stats.tested);
+    assert_eq!(a.stats.expanded, b.stats.expanded);
+    assert_eq!(a.stats.trace.len(), b.stats.trace.len());
+}
+
+/// A do-nothing phase: exercises the pluggable-pipeline seam from
+/// outside the crate.
+struct NullPhase;
+
+impl SearchPhase for NullPhase {
+    fn name(&self) -> &str {
+        "null"
+    }
+
+    fn run(&mut self, incumbent: Layout, _ctx: &mut SearchCtx) -> Layout {
+        incumbent
+    }
+}
+
+#[test]
+fn custom_phase_pipeline_plugs_in() {
+    let dfgs = vec![benchmarks::benchmark("SOB")];
+    let grid = Grid::new(6, 6);
+    let cost = CostModel::area();
+    // heatmap only + a custom no-op phase: the result is the initial
+    // layout, untouched, and the custom phase shows up in the stats.
+    let r = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .cost(&cost)
+        .config(small_cfg())
+        .phases(vec![Box::new(HeatmapPhase), Box::new(NullPhase)])
+        .run()
+        .unwrap();
+    assert_eq!(r.best_layout, r.initial_layout);
+    assert_eq!(r.stats.phase_secs.len(), 2);
+    assert_eq!(r.stats.insts_after_phase[1].0, "null");
+    assert!(r.stats.insts_after("null").is_some());
+
+    // the standard pipeline is reproducible via default_phases + phase()
+    let full = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .cost(&cost)
+        .config(small_cfg())
+        .phases(Explorer::default_phases(&small_cfg()))
+        .phase(Box::new(NullPhase))
+        .run()
+        .unwrap();
+    let names: Vec<&str> =
+        full.stats.phase_secs.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, vec![HeatmapPhase::NAME, OpsgPhase::NAME, GsgPhase::NAME, "null"]);
+}
