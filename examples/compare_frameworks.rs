@@ -36,7 +36,7 @@ fn main() {
         let (a, m) = fig11_metrics(&r.full_layout, &r.best_layout);
         rows.push(("HeLEx".into(), a, m, total_reduction_pct(&r.full_layout, &r.best_layout)));
     }
-    if let Some(r) = revamp::run(&dfgs, &full, &co.mapper) {
+    if let Some(r) = revamp::run(&dfgs, &full, &co.engine) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         rows.push(("REVAMP-like".into(), a, m, total_reduction_pct(&full, &r.layout)));
     }
@@ -44,7 +44,7 @@ fn main() {
         budget: if quick { 150 } else { 600 },
         ..Default::default()
     };
-    if let Some(r) = heta_bl::run(&dfgs, &full, &co.mapper, &co.area, &hcfg) {
+    if let Some(r) = heta_bl::run(&dfgs, &full, &co.engine, &co.area, &hcfg) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         rows.push(("HETA-like".into(), a, m, total_reduction_pct(&full, &r.layout)));
     }

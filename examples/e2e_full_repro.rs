@@ -65,15 +65,19 @@ fn main() {
         let full_cost = co.area.layout_cost(&res.full_layout);
         let tmin = co.area.theoretical_min_cost(&res.full_layout, &res.min_insts);
         let gap = 100.0 * (res.best_cost - tmin) / (full_cost - tmin);
-        // posteriori FIFO pruning (Table VI)
-        let fifo = posteriori::fifo_analysis(&dfgs, &res.best_layout, &res.full_layout, &co.mapper);
+        // posteriori FIFO pruning (Table VI), from the search witnesses
+        let fifo = posteriori::fifo_analysis_with(
+            &res.final_mappings,
+            &res.best_layout,
+            &res.full_layout,
+        );
         println!(
-            "{r}x{c}{}: insts -{inst_red:.1}%  area -{a_red:.1}%  power -{p_red:.1}%  gap-to-min {gap:.1}%  S_tst {}  {}s{}",
+            "{r}x{c}{}: insts -{inst_red:.1}%  area -{a_red:.1}%  power -{p_red:.1}%  gap-to-min {gap:.1}%  S_tst {}  {}s  (+{:.1}%A from {} unused FIFOs)",
             if res.stats.heatmap_used { "" } else { "*" },
             res.stats.tested,
             helex::util::fmt_f(res.stats.t_total(), 1),
-            fifo.map(|f| format!("  (+{:.1}%A from {} unused FIFOs)", f.area_impr_pct, f.unused))
-                .unwrap_or_default(),
+            fifo.area_impr_pct,
+            fifo.unused,
         );
         if res.stats.heatmap_used {
             heatmap_starts += 1;

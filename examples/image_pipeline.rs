@@ -15,7 +15,7 @@
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
 use helex::search::{Explorer, SearchConfig};
-use helex::{CostModel, Grid, Mapper};
+use helex::{CostModel, Grid, MapOutcome, MappingEngine};
 
 fn main() {
     // the pipeline: Gaussian blur -> Sobel -> NMS -> RGB conversion -> box
@@ -25,11 +25,11 @@ fn main() {
     println!("image pipeline: {}", stages.join(" -> "));
     println!("target chip: {grid}\n");
 
-    let mapper = Mapper::default();
+    let engine = MappingEngine::default();
     let area = CostModel::area();
     let r = Explorer::new(grid)
         .dfgs(&dfgs)
-        .mapper(&mapper)
+        .engine(&engine)
         .cost(&area)
         .config(SearchConfig {
             l_test: SearchConfig::scale_l_test(300, grid),
@@ -56,7 +56,9 @@ fn main() {
 
     println!("-- deployment phase: per-stage mapping on the final chip --");
     for (di, d) in dfgs.iter().enumerate() {
-        let full_map = mapper.map(d, &r.full_layout).expect("full maps");
+        let MapOutcome::Mapped { mapping: full_map, .. } = engine.map(d, &r.full_layout) else {
+            unreachable!("the full layout always maps (search precondition)");
+        };
         let m = &r.final_mappings[di];
         println!(
             "{:<4} latency {:>3} cycles (vs {:>3} on homogeneous, {:.2}x), {} cells reserved for routing",

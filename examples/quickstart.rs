@@ -10,7 +10,7 @@
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
 use helex::search::{Explorer, SearchConfig, SearchEvent};
-use helex::{CostModel, Grid, Mapper};
+use helex::{CostModel, Grid, MappingEngine};
 
 fn main() {
     // 1. Pick a DFG set (S4 = the paper's image-processing set) and a
@@ -22,7 +22,7 @@ fn main() {
 
     // 2. Build the session: substrates, a bench-scale budget scaled to
     //    the grid, and an observer subscribed to the search event stream.
-    let mapper = Mapper::default();
+    let engine = MappingEngine::default();
     let area = CostModel::area();
     let power = CostModel::power();
     let cfg = SearchConfig {
@@ -40,7 +40,7 @@ fn main() {
     };
     let r = Explorer::new(grid)
         .dfgs(&dfgs)
-        .mapper(&mapper)
+        .engine(&engine)
         .cost(&area)
         .config(cfg)
         .observer(&mut progress)

@@ -10,17 +10,16 @@
 use helex::cgra::{Grid, Layout};
 use helex::cost::CostModel;
 use helex::dfg::benchmarks;
-use helex::mapper::MapperConfig;
+use helex::mapper::{MapperConfig, MappingEngine};
 use helex::search::SearchConfig;
 use helex::util::bench::Harness;
-use helex::Mapper;
 
 fn main() {
     let mut h = Harness::from_args();
     let cost = CostModel::area();
     let dfgs = benchmarks::dfg_set("S3");
     let grid = Grid::new(10, 10);
-    let mapper = Mapper::default();
+    let engine = MappingEngine::default();
     let base = SearchConfig { l_test: 150, gsg_passes: 1, ..Default::default() };
 
     println!("== search ablations (S3 @ 10x10, L_test=150) ==");
@@ -37,7 +36,7 @@ fn main() {
         h.bench_once(name, || {
             let r = helex::search::Explorer::new(grid)
                 .dfgs(&dfgs)
-                .mapper(&mapper)
+                .engine(&engine)
                 .cost(&cost)
                 .config(cfg.clone())
                 .run()
@@ -51,31 +50,36 @@ fn main() {
     let d = benchmarks::benchmark("MD");
     let full = Layout::full(grid, d.groups_used());
     for (name, mcfg) in [
-        ("mapper::default", MapperConfig::default()),
+        ("mapper::default", bench_cfg(MapperConfig::default())),
         (
             "mapper::no_reserve",
-            MapperConfig { max_reserves: 0, ..MapperConfig::default() },
+            bench_cfg(MapperConfig { max_reserves: 0, ..MapperConfig::default() }),
         ),
         (
             "mapper::route_iters_4",
-            MapperConfig { route_iters: 4, ..MapperConfig::default() },
+            bench_cfg(MapperConfig { route_iters: 4, ..MapperConfig::default() }),
         ),
         (
             "mapper::route_iters_24",
-            MapperConfig { route_iters: 24, ..MapperConfig::default() },
+            bench_cfg(MapperConfig { route_iters: 24, ..MapperConfig::default() }),
         ),
         (
             "mapper::single_attempt",
-            MapperConfig { placement_attempts: 1, ..MapperConfig::default() },
+            bench_cfg(MapperConfig { placement_attempts: 1, ..MapperConfig::default() }),
         ),
     ] {
-        let m = Mapper::new(mcfg);
+        let m = MappingEngine::new(mcfg);
         let mut success = false;
         h.bench(name, || {
             let r = m.map(&d, &full);
-            success = r.is_some();
-            r
+            success = r.is_mapped();
+            r.is_mapped()
         });
         println!("    -> success: {success}");
     }
+}
+
+/// Repeated identical map calls must do real work: cache off.
+fn bench_cfg(cfg: MapperConfig) -> MapperConfig {
+    MapperConfig { feasibility_cache: false, ..cfg }
 }

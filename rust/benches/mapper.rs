@@ -1,18 +1,26 @@
 //! Mapper micro-benches: the search's true hot path (thousands of map
 //! attempts per run). Tracked across the perf pass in EXPERIMENTS.md.
 //!
+//! The `remap::*` section is the MappingEngine headline: on a workload
+//! of one-group-removal neighbor layouts (exactly what OPSG/GSG test),
+//! the incremental warm-start path (`remap_from`) is compared against
+//! from-scratch mapping of the same neighbors — warm must win.
+//!
 //! ```sh
 //! cargo bench --bench mapper
 //! ```
 
 use helex::cgra::{Grid, Layout};
 use helex::dfg::{benchmarks, heta};
+use helex::mapper::{MapOutcome, MapperConfig, MappingEngine};
 use helex::util::bench::Harness;
-use helex::Mapper;
 
 fn main() {
     let mut h = Harness::from_args();
-    let mapper = Mapper::default();
+    // micro-benches re-map identical (DFG, layout) pairs on purpose, so
+    // the feasibility cache must be off to measure real work
+    let engine =
+        MappingEngine::new(MapperConfig { feasibility_cache: false, ..Default::default() });
 
     // individual DFGs, spanning sizes
     for (name, r, c) in [
@@ -25,23 +33,59 @@ fn main() {
     ] {
         let d = benchmarks::benchmark(name);
         let l = Layout::full(Grid::new(r, c), d.groups_used());
-        h.bench(&format!("map::{name}_{r}x{c}"), || mapper.map(&d, &l));
+        h.bench(&format!("map::{name}_{r}x{c}"), || engine.map(&d, &l).is_mapped());
     }
 
     // the testLayout composite (all 12 DFGs), the unit the BB search pays
     let dfgs = benchmarks::all();
     let full = Layout::full(Grid::new(10, 10), helex::dfg::groups_used(&dfgs));
-    h.bench("test_layout::12dfgs_10x10", || mapper.test_layout(&dfgs, &full));
+    h.bench("test_layout::12dfgs_10x10", || engine.test_layout(&dfgs, &full));
 
     // heterogeneous layout (harder placement): heatmap of the 12 DFGs
-    if let Some(heat) = helex::search::heatmap::overlay(&dfgs, &full, &mapper) {
-        h.bench("test_layout::12dfgs_10x10_heatmap", || {
-            mapper.test_layout(&dfgs, &heat)
-        });
+    if let Some(heat) = helex::search::heatmap::overlay(&dfgs, &full, &engine) {
+        h.bench("test_layout::12dfgs_10x10_heatmap", || engine.test_layout(&dfgs, &heat));
     }
 
     // the 20x20 comparison grid
     let hdfgs = heta::all();
     let big = Layout::full(Grid::new(20, 20), helex::dfg::groups_used(&hdfgs));
-    h.bench("test_layout::8heta_20x20", || mapper.test_layout(&hdfgs, &big));
+    h.bench("test_layout::8heta_20x20", || engine.test_layout(&hdfgs, &big));
+
+    // warm-start vs from-scratch on one-group-removal neighbors: for
+    // each compute node of a witness mapping, remove its group under its
+    // cell — the displacement-forcing neighbor workload the BB search
+    // generates. Warm remaps repair the witness; cold maps start over.
+    println!("\n== warm-start vs from-scratch (one-group-removal neighbors) ==");
+    for (name, r, c) in [("NMS", 9, 9), ("FFT", 10, 10), ("MD", 10, 10)] {
+        let d = benchmarks::benchmark(name);
+        let full = Layout::full(Grid::new(r, c), d.groups_used());
+        let MapOutcome::Mapped { mapping: witness, .. } = engine.map(&d, &full) else {
+            println!("(skipping {name}: does not map on {r}x{c})");
+            continue;
+        };
+        let neighbors: Vec<Layout> = d
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| !op.is_memory())
+            .map(|(n, op)| full.without_group(witness.node_cell[n], op.group()))
+            .collect();
+        let mut warm_ok = 0usize;
+        let mut cold_ok = 0usize;
+        h.bench(&format!("remap::{name}_{}neighbors_cold", neighbors.len()), || {
+            cold_ok = neighbors.iter().filter(|l| engine.map(&d, l).is_mapped()).count();
+            cold_ok
+        });
+        h.bench(&format!("remap::{name}_{}neighbors_warm", neighbors.len()), || {
+            warm_ok = neighbors
+                .iter()
+                .filter(|l| engine.remap_from(&witness, &d, l).is_mapped())
+                .count();
+            warm_ok
+        });
+        println!(
+            "    -> feasible neighbors: warm {warm_ok}/{n}, cold {cold_ok}/{n}",
+            n = neighbors.len()
+        );
+    }
 }

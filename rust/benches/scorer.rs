@@ -51,12 +51,12 @@ fn main() {
 
     // end-to-end search ablation: native vs XLA scoring
     let dfgs = vec![helex::dfg::benchmarks::benchmark("NMS")];
-    let mapper = helex::Mapper::default();
+    let engine = helex::MappingEngine::default();
     let cfg = helex::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
     h.bench_once("search::nms_8x8_native_scoring", || {
         helex::search::Explorer::new(Grid::new(8, 8))
             .dfgs(&dfgs)
-            .mapper(&mapper)
+            .engine(&engine)
             .cost(&cost)
             .config(cfg.clone())
             .run()
@@ -65,7 +65,7 @@ fn main() {
         h.bench_once("search::nms_8x8_xla_scoring", || {
             helex::search::Explorer::new(Grid::new(8, 8))
                 .dfgs(&dfgs)
-                .mapper(&mapper)
+                .engine(&engine)
                 .cost(&cost)
                 .config(cfg.clone())
                 .scorer(&mut s)

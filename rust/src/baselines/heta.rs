@@ -19,7 +19,7 @@
 use crate::cgra::{CellId, Layout};
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
-use crate::mapper::Mapper;
+use crate::mapper::MappingEngine;
 use crate::ops::{OpGroup, NUM_GROUPS};
 use crate::util::rng::Rng;
 
@@ -78,11 +78,11 @@ pub struct HetaResult {
 pub fn run(
     dfgs: &[Dfg],
     full: &Layout,
-    mapper: &Mapper,
+    engine: &MappingEngine,
     cost: &CostModel,
     cfg: &HetaConfig,
 ) -> Option<HetaResult> {
-    if !mapper.test_layout(dfgs, full) {
+    if !engine.test_layout(dfgs, full) {
         return None;
     }
     let min_insts = crate::dfg::min_group_instances(dfgs);
@@ -125,7 +125,7 @@ pub fn run(
         // ground-truth evaluation with the mapper
         let cand = best.without_group(cell, g);
         evals += 1;
-        let ok = mapper.test_layout(dfgs, &cand);
+        let ok = engine.test_layout(dfgs, &cand);
         let arm = arms.entry(arm_id(cell, g)).or_default();
         arm.tries += 1;
         if ok {
@@ -142,37 +142,37 @@ mod tests {
     use crate::cgra::Grid;
     use crate::dfg::heta;
 
-    fn small() -> (Vec<Dfg>, Layout, Mapper, CostModel) {
+    fn small() -> (Vec<Dfg>, Layout, MappingEngine, CostModel) {
         let dfgs = vec![heta::heta_benchmark("ewf")];
         let full = Layout::full(Grid::new(10, 10), crate::dfg::groups_used(&dfgs));
-        (dfgs, full, Mapper::default(), CostModel::area())
+        (dfgs, full, MappingEngine::default(), CostModel::area())
     }
 
     #[test]
     fn heta_reduces_mult_but_keeps_arith() {
-        let (dfgs, full, mapper, cost) = small();
+        let (dfgs, full, engine, cost) = small();
         let cfg = HetaConfig { budget: 60, ..Default::default() };
-        let r = run(&dfgs, &full, &mapper, &cost, &cfg).unwrap();
+        let r = run(&dfgs, &full, &engine, &cost, &cfg).unwrap();
         let red = crate::metrics::group_reduction_pct(&full, &r.layout);
         assert_eq!(red[OpGroup::Arith.index()], 0.0, "HETA keeps Add/Sub");
         assert!(red[OpGroup::Mult.index()] > 0.0, "HETA must remove some Mult");
-        assert!(mapper.test_layout(&dfgs, &r.layout));
+        assert!(engine.test_layout(&dfgs, &r.layout));
     }
 
     #[test]
     fn heta_respects_budget() {
-        let (dfgs, full, mapper, cost) = small();
+        let (dfgs, full, engine, cost) = small();
         let cfg = HetaConfig { budget: 7, ..Default::default() };
-        let r = run(&dfgs, &full, &mapper, &cost, &cfg).unwrap();
+        let r = run(&dfgs, &full, &engine, &cost, &cfg).unwrap();
         assert!(r.evaluations <= 7);
     }
 
     #[test]
     fn heta_result_always_feasible() {
-        let (dfgs, full, mapper, cost) = small();
+        let (dfgs, full, engine, cost) = small();
         let cfg = HetaConfig { budget: 40, keep_arith: false, ..Default::default() };
-        let r = run(&dfgs, &full, &mapper, &cost, &cfg).unwrap();
-        assert!(mapper.test_layout(&dfgs, &r.layout));
+        let r = run(&dfgs, &full, &engine, &cost, &cfg).unwrap();
+        assert!(engine.test_layout(&dfgs, &r.layout));
         assert!(crate::search::meets_min_instances(
             &r.layout,
             &crate::dfg::min_group_instances(&dfgs)
@@ -183,7 +183,7 @@ mod tests {
     fn infeasible_returns_none() {
         let dfgs = vec![crate::dfg::benchmarks::benchmark("SAD")];
         let full = Layout::full(Grid::new(5, 5), crate::dfg::groups_used(&dfgs));
-        assert!(run(&dfgs, &full, &Mapper::default(), &CostModel::area(),
+        assert!(run(&dfgs, &full, &MappingEngine::default(), &CostModel::area(),
                     &HetaConfig::default())
             .is_none());
     }

@@ -10,18 +10,20 @@
 
 use crate::cgra::Layout;
 use crate::dfg::Dfg;
-use crate::mapper::Mapper;
+use crate::mapper::{MapOutcome, MappingEngine};
 use crate::ops::GroupSet;
 
 /// Compute the REVAMP-style hotspot layout. Returns `None` if some DFG
 /// cannot map on the full layout.
-pub fn hotspot_layout(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<Layout> {
+pub fn hotspot_layout(dfgs: &[Dfg], full: &Layout, engine: &MappingEngine) -> Option<Layout> {
     // The hotspot index over *kinds* collapses to the same union-overlay
     // the heatmap uses (spatial CGRA: each cell hosts at most one op per
     // DFG, so the per-kind max over DFGs is 0/1 per cell).
     let mut layout = Layout::empty(full.grid);
     for dfg in dfgs {
-        let m = mapper.map(dfg, full)?;
+        let MapOutcome::Mapped { mapping: m, .. } = engine.map(dfg, full) else {
+            return None;
+        };
         for (n, op) in dfg.nodes.iter().enumerate() {
             if op.is_memory() {
                 continue;
@@ -41,8 +43,8 @@ pub struct RevampResult {
     pub layout: Layout,
 }
 
-pub fn run(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<RevampResult> {
-    Some(RevampResult { layout: hotspot_layout(dfgs, full, mapper)? })
+pub fn run(dfgs: &[Dfg], full: &Layout, engine: &MappingEngine) -> Option<RevampResult> {
+    Some(RevampResult { layout: hotspot_layout(dfgs, full, engine)? })
 }
 
 #[cfg(test)]
@@ -55,7 +57,7 @@ mod tests {
     fn hotspot_layout_is_subset_and_covers_needs() {
         let dfgs = heta::all();
         let full = Layout::full(Grid::new(20, 20), crate::dfg::groups_used(&dfgs));
-        let r = run(&dfgs, &full, &Mapper::default()).expect("20x20 must map");
+        let r = run(&dfgs, &full, &MappingEngine::default()).expect("20x20 must map");
         assert!(r.layout.is_subset_of(&full));
         // per-group totals cover each DFG's needs
         let n = r.layout.compute_group_instances();
@@ -71,7 +73,7 @@ mod tests {
     fn hotspot_reduces_instances_substantially() {
         let dfgs = heta::all();
         let full = Layout::full(Grid::new(20, 20), crate::dfg::groups_used(&dfgs));
-        let r = run(&dfgs, &full, &Mapper::default()).unwrap();
+        let r = run(&dfgs, &full, &MappingEngine::default()).unwrap();
         let red = crate::metrics::total_reduction_pct(&full, &r.layout);
         assert!(red > 30.0, "hotspot reduction only {red}%");
     }

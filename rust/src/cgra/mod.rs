@@ -141,6 +141,66 @@ impl std::fmt::Display for Grid {
     }
 }
 
+/// A set of cells over one grid, backed by a bitset. Replaces the linear
+/// `Vec::contains` scans on the mapper hot path (reservation checks run
+/// once per node per candidate layout).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellSet {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl CellSet {
+    /// Empty set over a universe of `num_cells` cells.
+    pub fn new(num_cells: usize) -> Self {
+        Self { bits: vec![0; (num_cells + 63) / 64], len: 0 }
+    }
+
+    /// Build from a slice of cell ids (duplicates collapse).
+    pub fn from_cells(num_cells: usize, cells: &[CellId]) -> Self {
+        let mut s = Self::new(num_cells);
+        for &c in cells {
+            s.insert(c);
+        }
+        s
+    }
+
+    /// Insert a cell; returns true if it was newly added.
+    pub fn insert(&mut self, c: CellId) -> bool {
+        let (w, b) = (c as usize / 64, c as usize % 64);
+        let fresh = self.bits[w] & (1 << b) == 0;
+        self.bits[w] |= 1 << b;
+        self.len += fresh as usize;
+        fresh
+    }
+
+    pub fn contains(&self, c: CellId) -> bool {
+        let (w, b) = (c as usize / 64, c as usize % 64);
+        self.bits.get(w).map_or(false, |word| word & (1 << b) != 0)
+    }
+
+    pub fn remove(&mut self, c: CellId) {
+        let (w, b) = (c as usize / 64, c as usize % 64);
+        if self.bits[w] & (1 << b) != 0 {
+            self.bits[w] &= !(1 << b);
+            self.len -= 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.bits.fill(0);
+        self.len = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,5 +293,37 @@ mod tests {
     #[should_panic(expected = "at least 3x3")]
     fn too_small_grid_panics() {
         Grid::new(2, 5);
+    }
+
+    #[test]
+    fn cellset_insert_contains_remove() {
+        let g = Grid::new(10, 10);
+        let mut s = CellSet::new(g.num_cells());
+        assert!(s.is_empty());
+        assert!(s.insert(7));
+        assert!(!s.insert(7)); // duplicate collapses
+        assert!(s.insert(99));
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(7) && s.contains(99));
+        assert!(!s.contains(8));
+        s.remove(7);
+        assert!(!s.contains(7));
+        assert_eq!(s.len(), 1);
+        s.remove(7); // double-remove is a no-op
+        assert_eq!(s.len(), 1);
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(99));
+    }
+
+    #[test]
+    fn cellset_from_cells_matches_vec_contains() {
+        let g = Grid::new(6, 6);
+        let cells = [3u16, 17, 17, 35, 0];
+        let s = CellSet::from_cells(g.num_cells(), &cells);
+        assert_eq!(s.len(), 4);
+        for c in g.cells() {
+            assert_eq!(s.contains(c), cells.contains(&c), "cell {c}");
+        }
     }
 }

@@ -517,7 +517,7 @@ pub fn fig10(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
         let Some(r) = cache.run(co, "table2", &dfgs, size) else { continue };
         for (di, d) in dfgs.iter().enumerate() {
             if let Some(ratio) = crate::metrics::latency_ratio_with_witness(
-                &co.mapper,
+                &co.engine,
                 d,
                 &r.full_layout,
                 &r.final_mappings[di],
@@ -571,7 +571,7 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
         ]);
     }
     // REVAMP-like hotspot
-    if let Some(r) = revamp::run(&dfgs, &full, &co.mapper) {
+    if let Some(r) = revamp::run(&dfgs, &full, &co.engine) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         t.row(vec![
             "REVAMP-like".into(),
@@ -583,7 +583,7 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
     // HETA-like BO
     let budget = if quick { 150 } else { 600 };
     let hcfg = heta_bl::HetaConfig { budget, ..Default::default() };
-    if let Some(r) = heta_bl::run(&dfgs, &full, &co.mapper, &co.area, &hcfg) {
+    if let Some(r) = heta_bl::run(&dfgs, &full, &co.engine, &co.area, &hcfg) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         t.row(vec![
             "HETA-like".into(),

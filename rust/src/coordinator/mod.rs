@@ -7,7 +7,7 @@ pub mod report;
 use crate::cgra::Grid;
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
-use crate::mapper::{Mapper, MapperConfig};
+use crate::mapper::{MapperConfig, MappingEngine};
 use crate::search::{self, SearchConfig, SearchResult};
 use crate::util::config::Config;
 use std::path::PathBuf;
@@ -73,6 +73,8 @@ impl ExperimentConfig {
         self.mapper.max_reserves =
             cfg.int_or("mapper.max_reserves", self.mapper.max_reserves as i64) as usize;
         self.mapper.seed = cfg.int_or("mapper.seed", self.mapper.seed as i64) as u64;
+        self.mapper.feasibility_cache =
+            cfg.bool_or("mapper.feasibility_cache", self.mapper.feasibility_cache);
         if let Some(v) = cfg.get("results_dir").and_then(|v| v.as_str()) {
             self.results_dir = PathBuf::from(v);
         }
@@ -94,11 +96,13 @@ impl ExperimentConfig {
     }
 }
 
-/// A coordinator instance: owns the mapper, cost models, and (when
-/// artifacts are available) the PJRT scorer.
+/// A coordinator instance: owns the mapping engine, cost models, and
+/// (when artifacts are available) the PJRT scorer. The engine is shared
+/// across every search the coordinator runs, so its feasibility cache
+/// persists between experiments.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
-    pub mapper: Mapper,
+    pub engine: MappingEngine,
     pub area: CostModel,
     pub power: CostModel,
     pub scorer: Option<crate::runtime::Scorer>,
@@ -106,7 +110,7 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: ExperimentConfig) -> Self {
-        let mapper = Mapper::new(cfg.mapper.clone());
+        let engine = MappingEngine::new(cfg.mapper.clone());
         let area = CostModel::area();
         let scorer = if cfg.use_xla_scorer {
             match crate::runtime::Scorer::load(&crate::runtime::artifacts_dir(), &area) {
@@ -126,7 +130,7 @@ impl Coordinator {
         } else {
             None
         };
-        Self { cfg, mapper, area, power: CostModel::power(), scorer }
+        Self { cfg, engine, area, power: CostModel::power(), scorer }
     }
 
     /// Run HeLEx on a DFG set and grid with the area objective.
@@ -146,7 +150,7 @@ impl Coordinator {
         let scfg = self.cfg.search_config(grid);
         let mut explorer = search::Explorer::new(grid)
             .dfgs(dfgs)
-            .mapper(&self.mapper)
+            .engine(&self.engine)
             .cost(&self.area)
             .config(scfg);
         if let Some(s) = self.scorer.as_mut() {

@@ -11,7 +11,7 @@
 //!
 //! The search is organised around the **`Explorer` session API**
 //! ([`search::Explorer`]): a builder
-//! (`Explorer::new(grid).dfgs(..).mapper(..).cost(..).config(..)`)
+//! (`Explorer::new(grid).dfgs(..).engine(..).cost(..).config(..)`)
 //! assembles one search session that drives a configurable pipeline of
 //! [`search::SearchPhase`]s. All phases share a single
 //! [`search::SearchCtx`] — DFG set, mapper, cost model,
@@ -25,11 +25,23 @@
 //! phases without changing any signature, and [`search::run`] remains as
 //! a thin compatibility wrapper.
 //!
+//! One layer down, spatial mapping sits behind the **`MappingEngine`
+//! API** ([`mapper::MappingEngine`]): pluggable
+//! [`mapper::PlacementStrategy`]/[`mapper::RoutingStrategy`] traits
+//! (greedy-topological placement + PathFinder-style routing as
+//! defaults), [`mapper::MapRequest`] → [`mapper::MapOutcome`] resolution
+//! where failures carry structured [`mapper::MapFailure`] diagnostics,
+//! and incremental warm-start remapping
+//! ([`mapper::MappingEngine::remap_from`]) with a per-DFG feasibility
+//! cache — the search's hot path, since branch-and-bound candidates are
+//! one-removal neighbors of already-witnessed layouts.
+//!
 //! ## Layering
 //!
 //! * [`ops`], [`dfg`], [`cgra`], [`mapper`], [`cost`] — substrates: the
 //!   operation/cost model, benchmark DFGs, the T-CGRA grid and the
-//!   RodMap-like reserve-on-demand spatial mapper.
+//!   RodMap-like reserve-on-demand spatial mapper behind the
+//!   `MappingEngine` API (structured outcomes + warm-start remapping).
 //! * [`search`] — the paper's contribution behind the `Explorer`
 //!   session API: heatmap initial layout and the two branch-and-bound
 //!   phases (OPSG then GSG), plus the convergence trace recorded from
@@ -61,4 +73,6 @@ pub mod util;
 pub use cgra::{Grid, Layout};
 pub use cost::CostModel;
 pub use dfg::Dfg;
-pub use mapper::{Mapper, MapperConfig, Mapping};
+pub use mapper::{
+    MapFailure, MapOutcome, MapRequest, Mapper, MapperConfig, Mapping, MappingEngine,
+};

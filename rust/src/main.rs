@@ -154,14 +154,18 @@ fn main() -> Result<()> {
             let full =
                 helex::cgra::Layout::full(grid, helex::dfg::groups_used(&dfgs));
             for d in &dfgs {
-                match co.mapper.map(d, &full) {
-                    Some(m) => println!(
-                        "{}: mapped (latency {}, reserved {})",
+                match co.engine.map(d, &full) {
+                    helex::mapper::MapOutcome::Mapped { mapping: m, stats } => println!(
+                        "{}: mapped (latency {}, reserved {}, {} placement attempt{})",
                         d.name,
                         m.latency(d),
-                        m.reserved.len()
+                        m.reserved.len(),
+                        stats.attempts,
+                        if stats.attempts == 1 { "" } else { "s" },
                     ),
-                    None => println!("{}: FAILED", d.name),
+                    helex::mapper::MapOutcome::Failed { failure, .. } => {
+                        println!("{}: FAILED ({failure})", d.name)
+                    }
                 }
             }
         }
@@ -171,7 +175,7 @@ fn main() -> Result<()> {
             let co = Coordinator::new(build_config(&args));
             let grid = Grid::new(r, c);
             let full = helex::cgra::Layout::full(grid, helex::dfg::groups_used(&dfgs));
-            match helex::search::heatmap::initial_layout(&dfgs, &full, &co.mapper) {
+            match helex::search::heatmap::initial_layout(&dfgs, &full, &co.engine) {
                 helex::search::heatmap::HeatmapOutcome::Heatmap(h) => {
                     println!(
                         "heatmap usable: {} -> {} instances",
@@ -183,8 +187,8 @@ fn main() -> Result<()> {
                 helex::search::heatmap::HeatmapOutcome::FullFallback => {
                     println!("heatmap failed re-mapping; search would start from full")
                 }
-                helex::search::heatmap::HeatmapOutcome::Infeasible => {
-                    println!("set does not map on the full layout")
+                helex::search::heatmap::HeatmapOutcome::Infeasible { dfg, failure } => {
+                    println!("set does not map on the full layout: {dfg}: {failure}")
                 }
             }
         }

@@ -1,0 +1,1019 @@
+//! The `MappingEngine`: pluggable place/route strategies, structured
+//! [`MapOutcome`]s, and incremental warm-start remapping.
+//!
+//! The engine decomposes one map attempt into a [`PlacementStrategy`]
+//! and a [`RoutingStrategy`] joined by the reserve-on-demand driver loop,
+//! so alternative placers/routers (simulated-annealing placement, ILP
+//! routing, ...) slot in without forking the engine. Every request
+//! resolves to a [`MapOutcome`]: success carries the [`Mapping`] plus
+//! attempt statistics, failure carries a structured [`MapFailure`]
+//! (which group ran out of capacity, which links stayed congested, or
+//! that placement was exhausted) instead of a bare `None`.
+//!
+//! ## Warm-start remapping
+//!
+//! The search tests candidate layouts that differ from an already-mapped
+//! layout by a single support removal, so [`MappingEngine::remap_from`]
+//! keeps the witness mapping fixed, re-places only the nodes displaced
+//! by the removal ([`place::replace_displaced`]) and
+//! rip-up-reroutes only their incident edges
+//! ([`route::route_partial`]), falling back to from-scratch mapping when
+//! the incremental path cannot close. A per-DFG feasibility cache keyed
+//! by (DFG, layout) fingerprints short-circuits repeated tests of the
+//! same candidate.
+
+use super::place;
+use super::route::{self, RouteOutcome};
+use super::{Mapper, MapperConfig, Mapping};
+use crate::cgra::{CellId, CellSet, Layout};
+use crate::dfg::Dfg;
+use crate::ops::{OpGroup, COMPUTE_GROUPS};
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt;
+use std::hash::{Hash, Hasher};
+
+/// Places every DFG node on a cell of the layout, avoiding `reserved`
+/// cells. Implementations must be deterministic for a given `rng` state.
+pub trait PlacementStrategy {
+    fn name(&self) -> &'static str;
+    fn place(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        reserved: &[CellId],
+        rng: &mut Rng,
+    ) -> Option<Vec<CellId>>;
+}
+
+/// Routes every DFG edge over the switch network for a fixed placement.
+pub trait RoutingStrategy {
+    fn name(&self) -> &'static str;
+    fn route(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        cfg: &MapperConfig,
+    ) -> RouteOutcome;
+
+    /// Re-route only `affected` edges, keeping the other entries of
+    /// `fixed_paths` pinned. The default falls back to full routing (a
+    /// strategy without incremental support still works, just slower).
+    fn route_partial(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        fixed_paths: &[Vec<CellId>],
+        affected: &[usize],
+        cfg: &MapperConfig,
+    ) -> Option<Vec<Vec<CellId>>> {
+        let _ = (fixed_paths, affected);
+        match self.route(dfg, layout, placement, cfg) {
+            RouteOutcome::Routed(paths) => Some(paths),
+            RouteOutcome::Congested { .. } => None,
+        }
+    }
+}
+
+/// The default placer: loads spread around the border, compute nodes
+/// greedily placed in topological order, stores drained to the border
+/// (see [`place::place`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GreedyTopoPlacer;
+
+impl PlacementStrategy for GreedyTopoPlacer {
+    fn name(&self) -> &'static str {
+        "greedy-topo"
+    }
+
+    fn place(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        reserved: &[CellId],
+        rng: &mut Rng,
+    ) -> Option<Vec<CellId>> {
+        place::place(dfg, layout, reserved, rng)
+    }
+}
+
+/// The default router: negotiated-congestion (PathFinder-style) A* over
+/// the 4NN switch network (see [`route::route`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PathFinderRouter;
+
+impl RoutingStrategy for PathFinderRouter {
+    fn name(&self) -> &'static str {
+        "pathfinder"
+    }
+
+    fn route(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        cfg: &MapperConfig,
+    ) -> RouteOutcome {
+        route::route(dfg, layout, placement, cfg)
+    }
+
+    fn route_partial(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        fixed_paths: &[Vec<CellId>],
+        affected: &[usize],
+        cfg: &MapperConfig,
+    ) -> Option<Vec<Vec<CellId>>> {
+        route::route_partial(dfg, layout, placement, fixed_paths, affected, cfg)
+    }
+}
+
+/// Why a map request failed. Carried by [`MapOutcome::Failed`] so that
+/// consumers (search diagnostics, provisioning-aware tooling, the CLI)
+/// can act on *why*, not just *that*, a mapping failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapFailure {
+    /// The layout cannot supply enough instances of `group`: the DFG
+    /// demands `demand` cells supporting it but only `capacity` exist.
+    /// (For [`OpGroup::Mem`] the capacity is the I/O cell count.)
+    UnsupportedGroup { group: OpGroup, demand: usize, capacity: usize },
+    /// Routing never converged; `hot_links` are the overused link ids of
+    /// the final negotiation round (hottest first) and `overuse` the best
+    /// total overuse seen.
+    Congested { hot_links: Vec<usize>, overuse: usize },
+    /// No placement satisfied the layout (too few compatible free cells,
+    /// possibly after reservations ate the slack).
+    PlacementExhausted,
+}
+
+impl fmt::Display for MapFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapFailure::UnsupportedGroup { group, demand, capacity } => {
+                write!(f, "unsupported group {group}: demand {demand} > capacity {capacity}")
+            }
+            MapFailure::Congested { hot_links, overuse } => {
+                write!(f, "congested: {} hot links, overuse {overuse}", hot_links.len())
+            }
+            MapFailure::PlacementExhausted => write!(f, "placement exhausted"),
+        }
+    }
+}
+
+/// Effort accounting of one map request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MapStats {
+    /// Cold placement attempts consumed.
+    pub attempts: usize,
+    /// Reserve-on-demand reservations tried across all attempts.
+    pub reserves: usize,
+    /// The warm-start (incremental) path produced the result.
+    pub warm: bool,
+    /// The result was served from the feasibility cache.
+    pub cached: bool,
+}
+
+/// Resolution of a [`MapRequest`]: the structured replacement for the
+/// old `Option<Mapping>`.
+#[derive(Debug, Clone)]
+pub enum MapOutcome {
+    Mapped { mapping: Mapping, stats: MapStats },
+    Failed { failure: MapFailure, stats: MapStats },
+}
+
+impl MapOutcome {
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, MapOutcome::Mapped { .. })
+    }
+
+    pub fn mapping(&self) -> Option<&Mapping> {
+        match self {
+            MapOutcome::Mapped { mapping, .. } => Some(mapping),
+            MapOutcome::Failed { .. } => None,
+        }
+    }
+
+    /// Consume the outcome into the legacy `Option<Mapping>` shape (used
+    /// by the deprecated [`Mapper`] wrappers).
+    pub fn into_mapping(self) -> Option<Mapping> {
+        match self {
+            MapOutcome::Mapped { mapping, .. } => Some(mapping),
+            MapOutcome::Failed { .. } => None,
+        }
+    }
+
+    pub fn failure(&self) -> Option<&MapFailure> {
+        match self {
+            MapOutcome::Mapped { .. } => None,
+            MapOutcome::Failed { failure, .. } => Some(failure),
+        }
+    }
+
+    pub fn stats(&self) -> &MapStats {
+        match self {
+            MapOutcome::Mapped { stats, .. } | MapOutcome::Failed { stats, .. } => stats,
+        }
+    }
+}
+
+/// One map request: a DFG, a target layout, and optionally a witness
+/// mapping from a predecessor layout enabling the warm-start path.
+#[derive(Clone, Copy)]
+pub struct MapRequest<'a> {
+    pub dfg: &'a Dfg,
+    pub layout: &'a Layout,
+    /// Witness from a predecessor layout (same grid); when set, the
+    /// engine re-places only displaced nodes and reroutes only their
+    /// incident edges before falling back to from-scratch mapping.
+    pub warm_start: Option<&'a Mapping>,
+}
+
+impl<'a> MapRequest<'a> {
+    pub fn new(dfg: &'a Dfg, layout: &'a Layout) -> Self {
+        Self { dfg, layout, warm_start: None }
+    }
+
+    pub fn warm_start(mut self, witness: &'a Mapping) -> Self {
+        self.warm_start = Some(witness);
+        self
+    }
+}
+
+/// A whole-set map failure: which DFG failed and why.
+#[derive(Debug, Clone)]
+pub struct MapSetFailure {
+    pub dfg_index: usize,
+    pub dfg_name: String,
+    pub failure: MapFailure,
+}
+
+impl fmt::Display for MapSetFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.dfg_name, self.failure)
+    }
+}
+
+/// Reserve-on-demand abandonment accounting: reservations that do not
+/// reduce congestion earn strikes; [`RESERVE_STRIKE_LIMIT`] consecutive
+/// non-improving observations abandon the placement attempt (perf:
+/// avoids burning the whole reserve budget on hopeless placements).
+#[derive(Debug, Clone)]
+pub(crate) struct StrikeCounter {
+    best: usize,
+    strikes: usize,
+    limit: usize,
+}
+
+/// A placement attempt is abandoned on the `RESERVE_STRIKE_LIMIT`-th
+/// consecutive non-improving reserve observation (so `LIMIT - 1` such
+/// rounds are tolerated; an improvement resets the count).
+pub const RESERVE_STRIKE_LIMIT: usize = 3;
+
+impl StrikeCounter {
+    pub(crate) fn new(limit: usize) -> Self {
+        Self { best: usize::MAX, strikes: 0, limit }
+    }
+
+    /// Record a congestion observation; returns true when the attempt
+    /// should be abandoned. Improvements reset the strike count.
+    pub(crate) fn observe(&mut self, overuse: usize) -> bool {
+        if overuse < self.best {
+            self.best = overuse;
+            self.strikes = 0;
+            false
+        } else {
+            self.strikes += 1;
+            self.strikes >= self.limit
+        }
+    }
+}
+
+/// Feasibility-cache entry: a proof either way for one (DFG, layout)
+/// pair under this engine's configuration.
+#[derive(Debug, Clone)]
+enum CacheEntry {
+    Feasible(Mapping),
+    /// Recorded only by the cold path: the warm path may still succeed
+    /// where from-scratch mapping failed, so warm requests ignore this.
+    Infeasible(MapFailure),
+}
+
+/// Hard cap on cached (DFG, layout) pairs; the cache resets when full
+/// (simple and good enough: search sessions rarely exceed it).
+const CACHE_CAP: usize = 1 << 16;
+
+/// The mapping engine. See the module docs.
+pub struct MappingEngine {
+    pub cfg: MapperConfig,
+    placer: Box<dyn PlacementStrategy>,
+    router: Box<dyn RoutingStrategy>,
+    cache: RefCell<HashMap<(u64, u64), CacheEntry>>,
+}
+
+impl Default for MappingEngine {
+    fn default() -> Self {
+        Self::new(MapperConfig::default())
+    }
+}
+
+impl fmt::Debug for MappingEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MappingEngine")
+            .field("cfg", &self.cfg)
+            .field("placer", &self.placer.name())
+            .field("router", &self.router.name())
+            .finish()
+    }
+}
+
+impl MappingEngine {
+    /// Engine with the default strategies ([`GreedyTopoPlacer`] +
+    /// [`PathFinderRouter`]).
+    pub fn new(cfg: MapperConfig) -> Self {
+        Self::with_strategies(cfg, Box::new(GreedyTopoPlacer), Box::new(PathFinderRouter))
+    }
+
+    /// Engine with custom strategies.
+    pub fn with_strategies(
+        cfg: MapperConfig,
+        placer: Box<dyn PlacementStrategy>,
+        router: Box<dyn RoutingStrategy>,
+    ) -> Self {
+        Self { cfg, placer, router, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Engine sharing the deprecated [`Mapper`]'s configuration.
+    pub fn from_mapper(mapper: &Mapper) -> Self {
+        Self::new(mapper.cfg.clone())
+    }
+
+    pub fn placer_name(&self) -> &'static str {
+        self.placer.name()
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    /// Entries currently held by the feasibility cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Map one DFG onto a layout from scratch.
+    pub fn map(&self, dfg: &Dfg, layout: &Layout) -> MapOutcome {
+        self.run(MapRequest::new(dfg, layout))
+    }
+
+    /// Incremental warm-start remapping: keep `witness` (a valid mapping
+    /// on a predecessor layout of the same grid) fixed, re-place only the
+    /// nodes displaced by support removal and reroute only their incident
+    /// edges. Falls back to from-scratch mapping when the incremental
+    /// path cannot close, so `remap_from` succeeds whenever [`Self::map`]
+    /// would.
+    pub fn remap_from(&self, witness: &Mapping, dfg: &Dfg, layout: &Layout) -> MapOutcome {
+        self.run(MapRequest::new(dfg, layout).warm_start(witness))
+    }
+
+    /// Resolve a [`MapRequest`].
+    pub fn run(&self, req: MapRequest) -> MapOutcome {
+        let key = self.cache_key(req.dfg, req.layout);
+        if let Some(k) = key {
+            match self.cache.borrow().get(&k) {
+                Some(CacheEntry::Feasible(m)) => {
+                    return MapOutcome::Mapped {
+                        mapping: m.clone(),
+                        stats: MapStats { cached: true, ..MapStats::default() },
+                    };
+                }
+                // a cached cold failure only settles cold requests: a
+                // warm start may still close where from-scratch failed
+                Some(CacheEntry::Infeasible(fail)) if req.warm_start.is_none() => {
+                    return MapOutcome::Failed {
+                        failure: fail.clone(),
+                        stats: MapStats { cached: true, ..MapStats::default() },
+                    };
+                }
+                _ => {}
+            }
+        }
+
+        let mut stats = MapStats::default();
+        if let Some(w) = req.warm_start {
+            if let Some(mapping) = self.try_warm(w, req.dfg, req.layout) {
+                stats.warm = true;
+                self.cache_store(key, CacheEntry::Feasible(mapping.clone()));
+                return MapOutcome::Mapped { mapping, stats };
+            }
+            // warm path failed; reuse a cached cold verdict if one exists
+            if let Some(k) = key {
+                if let Some(CacheEntry::Infeasible(fail)) = self.cache.borrow().get(&k) {
+                    return MapOutcome::Failed {
+                        failure: fail.clone(),
+                        stats: MapStats { cached: true, ..stats },
+                    };
+                }
+            }
+        }
+
+        match self.map_cold(req.dfg, req.layout, &mut stats) {
+            Ok(mapping) => {
+                self.cache_store(key, CacheEntry::Feasible(mapping.clone()));
+                MapOutcome::Mapped { mapping, stats }
+            }
+            Err(failure) => {
+                self.cache_store(key, CacheEntry::Infeasible(failure.clone()));
+                MapOutcome::Failed { failure, stats }
+            }
+        }
+    }
+
+    /// Map all DFGs, returning every mapping or the first failure.
+    pub fn map_all(&self, dfgs: &[Dfg], layout: &Layout) -> Result<Vec<Mapping>, MapSetFailure> {
+        let mut out = Vec::with_capacity(dfgs.len());
+        for (di, d) in dfgs.iter().enumerate() {
+            match self.map(d, layout) {
+                MapOutcome::Mapped { mapping, .. } => out.push(mapping),
+                MapOutcome::Failed { failure, .. } => {
+                    return Err(MapSetFailure {
+                        dfg_index: di,
+                        dfg_name: d.name.clone(),
+                        failure,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The paper's `testLayout`: do *all* DFGs map? Short-circuits on the
+    /// first failure.
+    pub fn test_layout(&self, dfgs: &[Dfg], layout: &Layout) -> bool {
+        dfgs.iter().all(|d| self.map(d, layout).is_mapped())
+    }
+
+    // ---- internals ----
+
+    fn cache_key(&self, dfg: &Dfg, layout: &Layout) -> Option<(u64, u64)> {
+        if !self.cfg.feasibility_cache {
+            return None;
+        }
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        dfg.name.hash(&mut h);
+        dfg.nodes.hash(&mut h);
+        dfg.edges.hash(&mut h);
+        let dk = h.finish();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        layout.hash(&mut h);
+        Some((dk, h.finish()))
+    }
+
+    fn cache_store(&self, key: Option<(u64, u64)>, entry: CacheEntry) {
+        if let Some(k) = key {
+            let mut cache = self.cache.borrow_mut();
+            if cache.len() >= CACHE_CAP {
+                cache.clear();
+            }
+            cache.insert(k, entry);
+        }
+    }
+
+    /// Necessary-condition precheck, cheap relative to placement: per
+    /// group, the DFG's demand must not exceed the layout's cell count
+    /// supporting it. Failing this yields the structured
+    /// [`MapFailure::UnsupportedGroup`] diagnostic without touching the
+    /// placer.
+    fn precheck(dfg: &Dfg, layout: &Layout) -> Option<MapFailure> {
+        let demand = dfg.group_histogram();
+        let mem = demand[OpGroup::Mem.index()];
+        if mem > layout.grid.num_io() {
+            return Some(MapFailure::UnsupportedGroup {
+                group: OpGroup::Mem,
+                demand: mem,
+                capacity: layout.grid.num_io(),
+            });
+        }
+        for g in COMPUTE_GROUPS {
+            let need = demand[g.index()];
+            if need == 0 {
+                continue;
+            }
+            let capacity =
+                layout.grid.compute_cells().filter(|&c| layout.supports(c, g)).count();
+            if need > capacity {
+                return Some(MapFailure::UnsupportedGroup { group: g, demand: need, capacity });
+            }
+        }
+        if dfg.compute_ops() > layout.grid.num_compute() {
+            return Some(MapFailure::PlacementExhausted);
+        }
+        None
+    }
+
+    /// From-scratch place-and-route with the reserve-on-demand loop.
+    fn map_cold(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        stats: &mut MapStats,
+    ) -> Result<Mapping, MapFailure> {
+        if let Some(fail) = Self::precheck(dfg, layout) {
+            return Err(fail);
+        }
+        // the least-congested routing failure across attempts, reported
+        // when every attempt stays congested
+        let mut best_congestion: Option<(Vec<usize>, usize)> = None;
+        for attempt in 0..self.cfg.placement_attempts {
+            stats.attempts += 1;
+            let mut rng = Rng::seed(self.cfg.seed ^ (attempt as u64).wrapping_mul(0x9E37));
+            let mut reserved: Vec<CellId> = Vec::new();
+            let mut reserved_set = CellSet::new(layout.grid.num_cells());
+            // placement; retried after each new reservation, abandoned
+            // when reserves stop reducing congestion (StrikeCounter).
+            let mut strikes = StrikeCounter::new(RESERVE_STRIKE_LIMIT);
+            'reserve: for _round in 0..=self.cfg.max_reserves {
+                let Some(placement) = self.placer.place(dfg, layout, &reserved, &mut rng)
+                else {
+                    break 'reserve; // placement impossible under reservations
+                };
+                match self.router.route(dfg, layout, &placement, &self.cfg) {
+                    RouteOutcome::Routed(paths) => {
+                        let m = Mapping {
+                            node_cell: placement,
+                            edge_paths: paths,
+                            reserved: reserved.clone(),
+                        };
+                        debug_assert!(
+                            m.validate(dfg, layout).is_empty(),
+                            "engine produced invalid mapping: {:?}",
+                            m.validate(dfg, layout)
+                        );
+                        return Ok(m);
+                    }
+                    RouteOutcome::Congested { hot_cell, hot_links, overuse } => {
+                        if best_congestion.as_ref().map_or(true, |&(_, o)| overuse < o) {
+                            best_congestion = Some((hot_links, overuse));
+                        }
+                        if strikes.observe(overuse) {
+                            break 'reserve; // reserves are not helping
+                        }
+                        // reserve-on-demand: free the hot cell for routing
+                        if reserved.len() >= self.cfg.max_reserves {
+                            break 'reserve;
+                        }
+                        if layout.grid.is_compute(hot_cell) && !reserved_set.contains(hot_cell)
+                        {
+                            reserved.push(hot_cell);
+                            reserved_set.insert(hot_cell);
+                            stats.reserves += 1;
+                        } else {
+                            break 'reserve; // nothing sensible to reserve
+                        }
+                    }
+                }
+            }
+        }
+        Err(match best_congestion {
+            Some((hot_links, overuse)) => MapFailure::Congested { hot_links, overuse },
+            None => MapFailure::PlacementExhausted,
+        })
+    }
+
+    /// Structural guard for the warm path: the witness must describe
+    /// this DFG on this grid — lengths match, every cell is in range and
+    /// of the right kind for its node, and every path connects its
+    /// endpoints through grid-adjacent hops. A witness from a
+    /// different-shaped grid fails here and falls back to cold mapping
+    /// (support and link capacity are covered elsewhere: displaced-node
+    /// computation re-checks support, and adjacency-valid paths reuse
+    /// the exact `(cell, dir)` link ids the witness already satisfied).
+    fn witness_matches_grid(witness: &Mapping, dfg: &Dfg, layout: &Layout) -> bool {
+        let g = &layout.grid;
+        let num_cells = g.num_cells();
+        if witness.node_cell.len() != dfg.num_nodes()
+            || witness.edge_paths.len() != dfg.num_edges()
+            || witness.node_cell.iter().any(|&c| c as usize >= num_cells)
+            || witness.reserved.iter().any(|&c| c as usize >= num_cells)
+        {
+            return false;
+        }
+        for (n, op) in dfg.nodes.iter().enumerate() {
+            let c = witness.node_cell[n];
+            if op.is_memory() != g.is_io(c) {
+                return false;
+            }
+        }
+        for (i, &(s, d)) in dfg.edges.iter().enumerate() {
+            let path = &witness.edge_paths[i];
+            if path.first() != Some(&witness.node_cell[s as usize])
+                || path.last() != Some(&witness.node_cell[d as usize])
+                || path.iter().any(|&c| c as usize >= num_cells)
+                || path.windows(2).any(|w| g.manhattan(w[0], w[1]) != 1)
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// The incremental path: `None` means "fall back to cold mapping".
+    fn try_warm(&self, witness: &Mapping, dfg: &Dfg, layout: &Layout) -> Option<Mapping> {
+        let num_cells = layout.grid.num_cells();
+        if !Self::witness_matches_grid(witness, dfg, layout) {
+            return None;
+        }
+        // nodes whose cell lost support for their group (support removal
+        // never touches memory nodes or the switch fabric)
+        let displaced: Vec<usize> = dfg
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(n, op)| {
+                !op.is_memory() && !layout.supports(witness.node_cell[*n], op.group())
+            })
+            .map(|(n, _)| n)
+            .collect();
+        if displaced.is_empty() {
+            // the witness is still valid as-is
+            return Some(witness.clone());
+        }
+        // when most of the DFG moved, incremental repair loses to a
+        // fresh placement
+        if displaced.len() * 2 > dfg.compute_ops() {
+            return None;
+        }
+        let mut displaced_mask = vec![false; dfg.num_nodes()];
+        for &n in &displaced {
+            displaced_mask[n] = true;
+        }
+        let mut cell_of = witness.node_cell.clone();
+        let mut occupied = vec![false; num_cells];
+        for &c in &witness.reserved {
+            occupied[c as usize] = true;
+        }
+        for (n, &c) in witness.node_cell.iter().enumerate() {
+            if !displaced_mask[n] {
+                occupied[c as usize] = true;
+            }
+        }
+        if !place::replace_displaced(dfg, layout, &mut cell_of, &displaced, &mut occupied) {
+            return None;
+        }
+        // rip up and reroute only the displaced nodes' incident edges
+        let affected: Vec<usize> = (0..dfg.edges.len())
+            .filter(|&i| {
+                let (s, d) = dfg.edges[i];
+                displaced_mask[s as usize] || displaced_mask[d as usize]
+            })
+            .collect();
+        let paths = self.router.route_partial(
+            dfg,
+            layout,
+            &cell_of,
+            &witness.edge_paths,
+            &affected,
+            &self.cfg,
+        )?;
+        let m = Mapping { node_cell: cell_of, edge_paths: paths, reserved: witness.reserved.clone() };
+        // guard the incremental path with full validation: an invalid
+        // repair (should not happen) falls back to cold mapping instead
+        // of corrupting the search
+        if !m.validate(dfg, layout).is_empty() {
+            debug_assert!(false, "warm-start repair invalid: {:?}", m.validate(dfg, layout));
+            return None;
+        }
+        Some(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::{GroupSet, Op};
+
+    fn full_layout(r: usize, c: usize, d: &Dfg) -> Layout {
+        Layout::full(Grid::new(r, c), d.groups_used())
+    }
+
+    #[test]
+    fn engine_maps_where_mapper_did() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, &d);
+        let engine = MappingEngine::default();
+        match engine.map(&d, &l) {
+            MapOutcome::Mapped { mapping, stats } => {
+                assert!(mapping.validate(&d, &l).is_empty());
+                assert!(stats.attempts >= 1);
+                assert!(!stats.warm && !stats.cached);
+            }
+            MapOutcome::Failed { failure, .. } => panic!("SOB must map: {failure}"),
+        }
+    }
+
+    #[test]
+    fn unsupported_group_failure_carries_demand_and_capacity() {
+        let d = benchmarks::benchmark("BIL"); // needs Div + Other
+        let l = Layout::full(Grid::new(10, 10), GroupSet::from_groups(&[OpGroup::Arith]));
+        let engine = MappingEngine::default();
+        match engine.map(&d, &l) {
+            MapOutcome::Failed {
+                failure: MapFailure::UnsupportedGroup { group, demand, capacity },
+                ..
+            } => {
+                assert_ne!(group, OpGroup::Arith);
+                assert!(demand > 0);
+                assert_eq!(capacity, 0);
+            }
+            other => panic!("expected UnsupportedGroup, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn too_small_grid_fails_with_structured_outcome() {
+        let d = benchmarks::benchmark("SAD"); // 63 compute ops
+        let l = full_layout(5, 5, &d); // 9 compute cells
+        let engine = MappingEngine::default();
+        match engine.map(&d, &l) {
+            MapOutcome::Failed { failure, .. } => match failure {
+                MapFailure::UnsupportedGroup { demand, capacity, .. } => {
+                    assert!(demand > capacity)
+                }
+                MapFailure::PlacementExhausted => {}
+                MapFailure::Congested { .. } => panic!("should fail before routing"),
+            },
+            MapOutcome::Mapped { .. } => panic!("SAD cannot fit 5x5"),
+        }
+    }
+
+    #[test]
+    fn engine_matches_deprecated_wrapper() {
+        // the wrapper delegates here, so both must agree bit-for-bit
+        let d = benchmarks::benchmark("RGB");
+        let l = full_layout(8, 8, &d);
+        let engine = MappingEngine::default();
+        let m1 = engine.map(&d, &l).into_mapping().unwrap();
+        #[allow(deprecated)]
+        let m2 = Mapper::default().map(&d, &l).unwrap();
+        assert_eq!(m1.node_cell, m2.node_cell);
+        assert_eq!(m1.edge_paths, m2.edge_paths);
+        assert_eq!(m1.reserved, m2.reserved);
+    }
+
+    #[test]
+    fn feasibility_cache_serves_repeats() {
+        let d = benchmarks::benchmark("GB");
+        let l = full_layout(7, 7, &d);
+        let engine = MappingEngine::default();
+        let first = engine.map(&d, &l);
+        assert!(!first.stats().cached);
+        assert_eq!(engine.cache_len(), 1);
+        let second = engine.map(&d, &l);
+        assert!(second.stats().cached, "repeat must hit the cache");
+        assert_eq!(
+            first.mapping().unwrap().node_cell,
+            second.mapping().unwrap().node_cell
+        );
+        // failures are cached too
+        let sad = benchmarks::benchmark("SAD");
+        let small = full_layout(5, 5, &sad);
+        assert!(!engine.map(&sad, &small).is_mapped());
+        assert!(engine.map(&sad, &small).stats().cached);
+    }
+
+    #[test]
+    fn cache_can_be_disabled() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, &d);
+        let engine =
+            MappingEngine::new(MapperConfig { feasibility_cache: false, ..Default::default() });
+        assert!(engine.map(&d, &l).is_mapped());
+        assert!(!engine.map(&d, &l).stats().cached);
+        assert_eq!(engine.cache_len(), 0);
+    }
+
+    #[test]
+    fn warm_start_repairs_single_removal() {
+        // an uncongested chain on a roomy grid: the incremental path is
+        // guaranteed to close, so the warm flag and the single-node move
+        // can be asserted exactly
+        let d = Dfg::new(
+            "chain",
+            vec![Op::Load, Op::Add, Op::Mul, Op::Store],
+            vec![(0, 1), (1, 2), (2, 3)],
+        );
+        let full = full_layout(6, 6, &d);
+        let engine = MappingEngine::default();
+        let witness = engine.map(&d, &full).into_mapping().expect("chain maps on 6x6");
+        let neighbor = full.without_group(witness.node_cell[1], OpGroup::Arith);
+        match engine.remap_from(&witness, &d, &neighbor) {
+            MapOutcome::Mapped { mapping, stats } => {
+                assert!(stats.warm, "one-removal neighbor must take the warm path");
+                assert!(mapping.validate(&d, &neighbor).is_empty());
+                // the displaced node moved, everything else stayed
+                assert_ne!(mapping.node_cell[1], witness.node_cell[1]);
+                let moved = mapping
+                    .node_cell
+                    .iter()
+                    .zip(&witness.node_cell)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert_eq!(moved, 1, "only the displaced node may move");
+            }
+            MapOutcome::Failed { failure, .. } => {
+                panic!("single-removal neighbor must remap: {failure}")
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_on_real_benchmark_neighbors_stays_sound() {
+        // one-group-removal neighbors of an NMS witness: every remap
+        // (warm or fallen back to cold) must agree with feasibility and
+        // validate cleanly
+        let d = benchmarks::benchmark("NMS");
+        let full = full_layout(9, 9, &d);
+        let engine = MappingEngine::default();
+        let witness = engine.map(&d, &full).into_mapping().expect("NMS maps on 9x9");
+        for (node, op) in d.nodes.iter().enumerate().filter(|(_, op)| !op.is_memory()).take(6)
+        {
+            let neighbor = full.without_group(witness.node_cell[node], op.group());
+            match engine.remap_from(&witness, &d, &neighbor) {
+                MapOutcome::Mapped { mapping, .. } => {
+                    assert!(
+                        mapping.validate(&d, &neighbor).is_empty(),
+                        "node {node}: invalid remap"
+                    );
+                }
+                MapOutcome::Failed { .. } => {
+                    // fallback guarantee: remap_from fails only when
+                    // from-scratch mapping fails too
+                    let cold = MappingEngine::new(MapperConfig {
+                        feasibility_cache: false,
+                        ..Default::default()
+                    });
+                    assert!(
+                        !cold.map(&d, &neighbor).is_mapped(),
+                        "node {node}: warm failed where cold succeeds"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_with_valid_witness_is_a_noop() {
+        let d = benchmarks::benchmark("SOB");
+        let full = full_layout(6, 6, &d);
+        let engine = MappingEngine::default();
+        let witness = engine.map(&d, &full).into_mapping().unwrap();
+        // remove support on a cell hosting no node of that group
+        let used: Vec<CellId> = witness.node_cell.clone();
+        let spare = full
+            .grid
+            .compute_cells()
+            .find(|c| !used.contains(c))
+            .expect("6x6 has spare cells");
+        let neighbor = full.without_group(spare, OpGroup::Arith);
+        match engine.remap_from(&witness, &d, &neighbor) {
+            MapOutcome::Mapped { mapping, stats } => {
+                assert!(stats.warm);
+                assert_eq!(mapping.node_cell, witness.node_cell);
+                assert_eq!(mapping.edge_paths, witness.edge_paths);
+            }
+            MapOutcome::Failed { failure, .. } => panic!("witness still valid: {failure}"),
+        }
+    }
+
+    #[test]
+    fn warm_start_falls_back_to_cold_when_repair_impossible() {
+        let d = benchmarks::benchmark("SOB");
+        let full = full_layout(6, 6, &d);
+        let engine = MappingEngine::default();
+        let witness = engine.map(&d, &full).into_mapping().unwrap();
+        // strip Arith everywhere: warm repair and cold mapping both fail,
+        // and the failure is the structured UnsupportedGroup diagnostic
+        let mut crippled = full.clone();
+        for c in crippled.grid.compute_cells().collect::<Vec<_>>() {
+            let s = crippled.support(c).without(OpGroup::Arith);
+            crippled.set_support(c, s);
+        }
+        match engine.remap_from(&witness, &d, &crippled) {
+            MapOutcome::Failed {
+                failure: MapFailure::UnsupportedGroup { group, .. },
+                ..
+            } => assert_eq!(group, OpGroup::Arith),
+            other => panic!("expected UnsupportedGroup, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn witness_from_another_grid_falls_back_to_cold() {
+        // same cell count, different shape: the structural guard must
+        // reject the witness (no panic, no unvalidated pass-through) and
+        // the request must resolve through the cold path
+        let d = benchmarks::benchmark("SOB");
+        let engine = MappingEngine::default();
+        let narrow = Layout::full(Grid::new(4, 9), d.groups_used()); // 36 cells
+        let square = Layout::full(Grid::new(6, 6), d.groups_used()); // 36 cells
+        let witness = engine.map(&d, &narrow).into_mapping().expect("SOB maps on 4x9");
+        match engine.remap_from(&witness, &d, &square) {
+            MapOutcome::Mapped { mapping, stats } => {
+                assert!(!stats.warm, "cross-grid witness must not warm-start");
+                assert!(mapping.validate(&d, &square).is_empty());
+            }
+            MapOutcome::Failed { failure, .. } => {
+                panic!("SOB must map on 6x6 via the cold fallback: {failure}")
+            }
+        }
+    }
+
+    #[test]
+    fn strike_counter_abandons_after_limit_and_resets_on_improvement() {
+        let mut s = StrikeCounter::new(RESERVE_STRIKE_LIMIT);
+        assert!(!s.observe(10)); // first observation improves on MAX
+        assert!(!s.observe(10)); // strike 1
+        assert!(!s.observe(12)); // strike 2
+        assert!(s.observe(11)); // strike 3 = RESERVE_STRIKE_LIMIT: abandon
+        // an improvement resets the count
+        let mut s = StrikeCounter::new(RESERVE_STRIKE_LIMIT);
+        assert!(!s.observe(10));
+        assert!(!s.observe(10)); // strike 1
+        assert!(!s.observe(5)); // improvement: reset
+        assert!(!s.observe(6)); // strike 1
+        assert!(!s.observe(6)); // strike 2
+        assert!(s.observe(6)); // strike 3: abandon
+    }
+
+    #[test]
+    fn map_all_reports_first_failure_with_name() {
+        let sob = benchmarks::benchmark("SOB");
+        let sad = benchmarks::benchmark("SAD");
+        let l = Layout::full(Grid::new(6, 6), crate::dfg::groups_used(&[sob.clone(), sad.clone()]));
+        let engine = MappingEngine::default();
+        let err = engine.map_all(&[sob, sad], &l).unwrap_err();
+        assert_eq!(err.dfg_index, 1);
+        assert_eq!(err.dfg_name, "SAD");
+        assert!(!engine.test_layout(
+            &[benchmarks::benchmark("SOB"), benchmarks::benchmark("SAD")],
+            &l
+        ));
+    }
+
+    #[test]
+    fn custom_strategies_plug_in() {
+        // a placer that defers to the default and a router that defers to
+        // the default, but with their own names: the seam the engine
+        // promises to alternative strategies.
+        struct NamedPlacer;
+        impl PlacementStrategy for NamedPlacer {
+            fn name(&self) -> &'static str {
+                "custom-placer"
+            }
+            fn place(
+                &self,
+                dfg: &Dfg,
+                layout: &Layout,
+                reserved: &[CellId],
+                rng: &mut Rng,
+            ) -> Option<Vec<CellId>> {
+                GreedyTopoPlacer.place(dfg, layout, reserved, rng)
+            }
+        }
+        struct NamedRouter;
+        impl RoutingStrategy for NamedRouter {
+            fn name(&self) -> &'static str {
+                "custom-router"
+            }
+            fn route(
+                &self,
+                dfg: &Dfg,
+                layout: &Layout,
+                placement: &[CellId],
+                cfg: &MapperConfig,
+            ) -> RouteOutcome {
+                PathFinderRouter.route(dfg, layout, placement, cfg)
+            }
+        }
+        let engine = MappingEngine::with_strategies(
+            MapperConfig::default(),
+            Box::new(NamedPlacer),
+            Box::new(NamedRouter),
+        );
+        assert_eq!(engine.placer_name(), "custom-placer");
+        assert_eq!(engine.router_name(), "custom-router");
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, &d);
+        assert!(engine.map(&d, &l).is_mapped());
+        // NamedRouter relies on the default route_partial fallback: warm
+        // requests still resolve correctly
+        let witness = engine.map(&d, &l).into_mapping().unwrap();
+        assert!(engine.remap_from(&witness, &d, &l).is_mapped());
+    }
+}

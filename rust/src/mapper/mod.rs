@@ -1,30 +1,47 @@
-//! Reserve-on-demand spatial mapper (RodMap-like substrate).
+//! Spatial mapping behind the [`MappingEngine`] API.
 //!
 //! The paper uses RodMap [22] as a black box: a fast heuristic spatial
 //! mapper with ~90% success that resolves link congestion by *reserving*
 //! CGRA cells around congested links solely for routing. This module
-//! implements the same mechanism:
+//! implements the same mechanism as three layers:
 //!
-//! 1. **Placement** ([`place`]): loads spread around the border, compute
-//!    nodes greedily placed in topological order minimising distance to
-//!    placed predecessors, stores drained to the nearest border cell.
-//! 2. **Routing** ([`route`]): negotiated-congestion routing (PathFinder
-//!    style) over the 4NN switch network; links have capacity one value
-//!    stream, but edges with the same source share links for free
-//!    (fan-out broadcast).
-//! 3. **Reserve-on-demand**: if congestion persists, the compute cell
-//!    next to the most-overused link is evicted and reserved for routing
-//!    only, its node re-placed elsewhere, and routing retried.
+//! 1. **Strategies** — [`PlacementStrategy`] and [`RoutingStrategy`]
+//!    traits with the defaults [`GreedyTopoPlacer`] ([`place`]: loads
+//!    spread around the border, compute nodes greedily placed in
+//!    topological order, stores drained to the border) and
+//!    [`PathFinderRouter`] ([`route`]: negotiated-congestion A* over the
+//!    4NN switch network; links carry one value stream, but edges with
+//!    the same source share links for free). Alternative placers/routers
+//!    plug in via [`MappingEngine::with_strategies`].
+//! 2. **The engine** ([`engine`]) — drives the strategies through the
+//!    reserve-on-demand loop (evict the compute cell next to the
+//!    most-overused link, re-place, re-route) and resolves every
+//!    [`MapRequest`] to a structured [`MapOutcome`]: a [`Mapping`] plus
+//!    stats, or a [`MapFailure`] saying *why* (unsupported group with
+//!    demand/capacity, persistent congestion with the hot links, or
+//!    placement exhaustion).
+//! 3. **Warm-start remapping** — [`MappingEngine::remap_from`] repairs a
+//!    witness mapping incrementally after support removal (re-place only
+//!    displaced nodes, rip-up-reroute only their incident edges), with a
+//!    feasibility cache keyed by (DFG, layout) fingerprints. This is the
+//!    search's hot path: OPSG/GSG candidates are one-removal neighbors
+//!    of already-witnessed layouts.
 //!
-//! The mapper is deterministic for a given seed; multiple placement
-//! attempts perturb tie-breaks.
+//! The engine is deterministic for a given seed; multiple placement
+//! attempts perturb tie-breaks. The pre-engine [`Mapper`] type survives
+//! as a thin deprecated wrapper.
 
+pub mod engine;
 pub mod place;
 pub mod route;
 
-use crate::cgra::{CellId, Grid, Layout};
+pub use engine::{
+    GreedyTopoPlacer, MapFailure, MapOutcome, MapRequest, MapSetFailure, MapStats, MappingEngine,
+    PathFinderRouter, PlacementStrategy, RoutingStrategy,
+};
+
+use crate::cgra::{CellId, CellSet, Grid, Layout};
 use crate::dfg::Dfg;
-use crate::util::rng::Rng;
 
 /// Mapper tuning knobs.
 #[derive(Debug, Clone)]
@@ -41,6 +58,10 @@ pub struct MapperConfig {
     pub present_penalty: f64,
     /// Base RNG seed (attempt index is mixed in).
     pub seed: u64,
+    /// Memoize per-(DFG, layout) feasibility results (see
+    /// [`MappingEngine`]); disable for micro-benchmarks that re-map the
+    /// same pair on purpose.
+    pub feasibility_cache: bool,
 }
 
 impl Default for MapperConfig {
@@ -52,6 +73,7 @@ impl Default for MapperConfig {
             hist_increment: 1.5,
             present_penalty: 2.0,
             seed: 0xC6A1,
+            feasibility_cache: true,
         }
     }
 }
@@ -73,19 +95,20 @@ impl Mapping {
     /// costs one cycle and each link hop costs one cycle (Section IV-I).
     pub fn latency(&self, dfg: &Dfg) -> usize {
         let order = dfg.topo_order().expect("mapped DFG must be a DAG");
-        let preds = dfg.preds();
-        // per-edge hop count lookup
-        let mut hops = std::collections::HashMap::new();
-        for (i, &(s, d)) in dfg.edges.iter().enumerate() {
-            let h = self.edge_paths[i].len().saturating_sub(1);
-            hops.insert((s, d), h);
+        // incoming edges per node, by edge index: parallel edges between
+        // the same node pair keep their distinct hop counts (a (src, dst)
+        // keyed lookup would collapse them)
+        let mut in_edges: Vec<Vec<usize>> = vec![Vec::new(); dfg.num_nodes()];
+        for (i, &(_, d)) in dfg.edges.iter().enumerate() {
+            in_edges[d as usize].push(i);
         }
         let mut lat = vec![1usize; dfg.num_nodes()];
         for &u in &order {
             let mut best = 0usize;
-            for &p in &preds[u as usize] {
-                let h = *hops.get(&(p, u)).unwrap_or(&0);
-                best = best.max(lat[p as usize] + h);
+            for &e in &in_edges[u as usize] {
+                let (p, _) = dfg.edges[e];
+                let hops = self.edge_paths[e].len().saturating_sub(1);
+                best = best.max(lat[p as usize] + hops);
             }
             lat[u as usize] = best + 1;
         }
@@ -128,14 +151,22 @@ impl Mapping {
             errs.push("node_cell length mismatch".into());
             return errs;
         }
+        // 0. every referenced cell is on this grid
+        for &c in self.node_cell.iter().chain(self.reserved.iter()) {
+            if c as usize >= g.num_cells() {
+                errs.push(format!("cell {c} outside the {} grid", g));
+                return errs;
+            }
+        }
         // 1. one node per cell
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = CellSet::new(g.num_cells());
         for (n, &c) in self.node_cell.iter().enumerate() {
             if !seen.insert(c) {
                 errs.push(format!("cell {c} hosts more than one node (node {n})"));
             }
         }
         // 2. compatibility + cell kinds + reservations
+        let reserved = CellSet::from_cells(g.num_cells(), &self.reserved);
         for (n, op) in dfg.nodes.iter().enumerate() {
             let c = self.node_cell[n];
             if op.is_memory() {
@@ -149,7 +180,7 @@ impl Mapping {
                 if !layout.supports(c, op.group()) {
                     errs.push(format!("node {n} ({op}) on cell {c} lacking {}", op.group()));
                 }
-                if self.reserved.contains(&c) {
+                if reserved.contains(c) {
                     errs.push(format!("node {n} on reserved cell {c}"));
                 }
             }
@@ -189,7 +220,11 @@ impl Mapping {
     }
 }
 
-/// The mapper.
+/// The pre-engine mapper handle: configuration plus thin deprecated
+/// wrappers over [`MappingEngine`] with the default strategies. New code
+/// should construct a `MappingEngine` (it adds structured outcomes,
+/// warm-start remapping and the feasibility cache); this type survives
+/// so downstream callers migrate at their own pace.
 #[derive(Debug, Clone, Default)]
 pub struct Mapper {
     pub cfg: MapperConfig,
@@ -201,71 +236,22 @@ impl Mapper {
     }
 
     /// Map one DFG onto a layout. Returns `None` on failure.
+    #[deprecated(note = "use MappingEngine::map, which returns a structured MapOutcome")]
     pub fn map(&self, dfg: &Dfg, layout: &Layout) -> Option<Mapping> {
-        for attempt in 0..self.cfg.placement_attempts {
-            let mut rng = Rng::seed(self.cfg.seed ^ (attempt as u64).wrapping_mul(0x9E37));
-            let mut reserved: Vec<CellId> = Vec::new();
-            // placement; retried after each new reservation. Reserves
-            // that do not reduce congestion earn strikes; two strikes
-            // abandon this placement attempt (perf: avoids burning the
-            // whole reserve budget on hopeless placements).
-            let mut best_overuse = usize::MAX;
-            let mut strikes = 0usize;
-            'reserve: for _round in 0..=self.cfg.max_reserves {
-                let Some(placement) =
-                    place::place(dfg, layout, &reserved, &mut rng)
-                else {
-                    break 'reserve; // placement impossible under reservations
-                };
-                match route::route(dfg, layout, &placement, &self.cfg) {
-                    route::RouteOutcome::Routed(paths) => {
-                        let m = Mapping {
-                            node_cell: placement,
-                            edge_paths: paths,
-                            reserved: reserved.clone(),
-                        };
-                        debug_assert!(
-                            m.validate(dfg, layout).is_empty(),
-                            "mapper produced invalid mapping: {:?}",
-                            m.validate(dfg, layout)
-                        );
-                        return Some(m);
-                    }
-                    route::RouteOutcome::Congested { hot_cell, overuse } => {
-                        if overuse < best_overuse {
-                            best_overuse = overuse;
-                            strikes = 0;
-                        } else {
-                            strikes += 1;
-                            if strikes >= 3 {
-                                break 'reserve; // reserves are not helping
-                            }
-                        }
-                        // reserve-on-demand: free the hot cell for routing
-                        if reserved.len() >= self.cfg.max_reserves {
-                            break 'reserve;
-                        }
-                        if layout.grid.is_compute(hot_cell) && !reserved.contains(&hot_cell) {
-                            reserved.push(hot_cell);
-                        } else {
-                            break 'reserve; // nothing sensible to reserve
-                        }
-                    }
-                }
-            }
-        }
-        None
+        MappingEngine::from_mapper(self).map(dfg, layout).into_mapping()
     }
 
     /// Test whether *all* DFGs map (the paper's `testLayout`). Short-
     /// circuits on first failure.
+    #[deprecated(note = "use MappingEngine::test_layout")]
     pub fn test_layout(&self, dfgs: &[Dfg], layout: &Layout) -> bool {
-        dfgs.iter().all(|d| self.map(d, layout).is_some())
+        MappingEngine::from_mapper(self).test_layout(dfgs, layout)
     }
 
     /// Map all DFGs individually, returning all mappings or None.
+    #[deprecated(note = "use MappingEngine::map_all, which names the failing DFG")]
     pub fn map_all(&self, dfgs: &[Dfg], layout: &Layout) -> Option<Vec<Mapping>> {
-        dfgs.iter().map(|d| self.map(d, layout)).collect()
+        MappingEngine::from_mapper(self).map_all(dfgs, layout).ok()
     }
 }
 
@@ -273,17 +259,21 @@ impl Mapper {
 mod tests {
     use super::*;
     use crate::dfg::benchmarks;
-    use crate::ops::GroupSet;
+    use crate::ops::{GroupSet, Op};
 
     fn full_layout(r: usize, c: usize, dfgs: &[Dfg]) -> Layout {
         Layout::full(Grid::new(r, c), crate::dfg::groups_used(dfgs))
+    }
+
+    fn engine() -> MappingEngine {
+        MappingEngine::default()
     }
 
     #[test]
     fn maps_tiny_dfg_on_small_grid() {
         let d = benchmarks::benchmark("SOB");
         let l = full_layout(5, 5, std::slice::from_ref(&d));
-        let m = Mapper::default().map(&d, &l).expect("SOB must map on 5x5");
+        let m = engine().map(&d, &l).into_mapping().expect("SOB must map on 5x5");
         assert!(m.validate(&d, &l).is_empty());
     }
 
@@ -291,11 +281,11 @@ mod tests {
     fn maps_all_paper_benchmarks_on_10x10() {
         let dfgs = benchmarks::all();
         let l = full_layout(10, 10, &dfgs);
-        let mapper = Mapper::default();
+        let engine = engine();
         for d in &dfgs {
-            let m = mapper.map(d, &l);
-            assert!(m.is_some(), "{} failed to map on 10x10 full layout", d.name);
-            let m = m.unwrap();
+            let m = engine.map(d, &l);
+            assert!(m.is_mapped(), "{} failed to map on 10x10 full layout", d.name);
+            let m = m.into_mapping().unwrap();
             let errs = m.validate(d, &l);
             assert!(errs.is_empty(), "{}: {errs:?}", d.name);
         }
@@ -306,29 +296,58 @@ mod tests {
         let d = benchmarks::benchmark("BIL"); // needs Div + Other
         let groups = GroupSet::from_groups(&[crate::ops::OpGroup::Arith]);
         let l = Layout::full(Grid::new(10, 10), groups);
-        assert!(Mapper::default().map(&d, &l).is_none());
+        assert!(!engine().map(&d, &l).is_mapped());
     }
 
     #[test]
     fn fails_when_grid_too_small() {
         let d = benchmarks::benchmark("SAD"); // 63 compute ops
         let l = full_layout(5, 5, std::slice::from_ref(&d)); // 9 compute cells
-        assert!(Mapper::default().map(&d, &l).is_none());
+        assert!(!engine().map(&d, &l).is_mapped());
     }
 
     #[test]
     fn latency_at_least_critical_path() {
         let d = benchmarks::benchmark("BOX");
         let l = full_layout(8, 8, std::slice::from_ref(&d));
-        let m = Mapper::default().map(&d, &l).unwrap();
+        let m = engine().map(&d, &l).into_mapping().unwrap();
         assert!(m.latency(&d) >= d.critical_path_nodes());
+    }
+
+    #[test]
+    fn latency_keeps_parallel_edges_distinct() {
+        // two edges between the same node pair with different path
+        // lengths: latency must follow the *longer* one (a (src, dst)
+        // keyed hop lookup would let whichever edge came last win)
+        let d = Dfg::new("par", vec![Op::Load, Op::Add, Op::Store], vec![(0, 1), (0, 1), (1, 2)]);
+        let l = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
+        let g = &l.grid;
+        let (load, add, store) = (g.cell(2, 0), g.cell(2, 2), g.cell(2, 4));
+        let short = vec![load, g.cell(2, 1), add];
+        let long = vec![load, g.cell(1, 0), g.cell(1, 1), g.cell(1, 2), g.cell(2, 2)];
+        let out = vec![add, g.cell(2, 3), store];
+        let hops_long = long.len() - 1; // 4
+        let m = Mapping {
+            node_cell: vec![load, add, store],
+            edge_paths: vec![short.clone(), long.clone(), out.clone()],
+            reserved: vec![],
+        };
+        // load(1) + long hops(4) + add(1) + out hops(2) + store(1) = 9
+        assert_eq!(m.latency(&d), 1 + hops_long + 1 + (out.len() - 1) + 1);
+        // edge order must not matter
+        let m2 = Mapping {
+            node_cell: vec![load, add, store],
+            edge_paths: vec![long, short, out],
+            reserved: vec![],
+        };
+        assert_eq!(m.latency(&d), m2.latency(&d));
     }
 
     #[test]
     fn input_ports_are_plausible() {
         let d = benchmarks::benchmark("SOB");
         let l = full_layout(5, 5, std::slice::from_ref(&d));
-        let m = Mapper::default().map(&d, &l).unwrap();
+        let m = engine().map(&d, &l).into_mapping().unwrap();
         let ports = m.input_ports_used(&l.grid);
         // at least one port per edge endpoint, at most 4 per cell
         assert!(!ports.is_empty());
@@ -342,23 +361,53 @@ mod tests {
         let dfgs: Vec<Dfg> =
             ["SOB", "GB"].iter().map(|n| benchmarks::benchmark(n)).collect();
         let l = full_layout(7, 7, &dfgs);
-        assert!(Mapper::default().test_layout(&dfgs, &l));
+        assert!(engine().test_layout(&dfgs, &l));
         // removing Arith everywhere must break both
         let mut crippled = l.clone();
         for c in crippled.grid.compute_cells().collect::<Vec<_>>() {
             let s = crippled.support(c).without(crate::ops::OpGroup::Arith);
             crippled.set_support(c, s);
         }
-        assert!(!Mapper::default().test_layout(&dfgs, &crippled));
+        assert!(!engine().test_layout(&dfgs, &crippled));
     }
 
     #[test]
     fn deterministic_mapping() {
         let d = benchmarks::benchmark("RGB");
         let l = full_layout(8, 8, std::slice::from_ref(&d));
-        let m1 = Mapper::default().map(&d, &l).unwrap();
-        let m2 = Mapper::default().map(&d, &l).unwrap();
+        let m1 = engine().map(&d, &l).into_mapping().unwrap();
+        let m2 = engine().map(&d, &l).into_mapping().unwrap();
         assert_eq!(m1.node_cell, m2.node_cell);
         assert_eq!(m1.edge_paths, m2.edge_paths);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_still_work() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(5, 5, std::slice::from_ref(&d));
+        let mapper = Mapper::default();
+        let m = mapper.map(&d, &l).expect("wrapper must still map");
+        assert!(m.validate(&d, &l).is_empty());
+        assert!(mapper.test_layout(std::slice::from_ref(&d), &l));
+        assert_eq!(mapper.map_all(std::slice::from_ref(&d), &l).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn validate_flags_reserved_cell_use() {
+        let d = Dfg::new("r", vec![Op::Load, Op::Add, Op::Store], vec![(0, 1), (1, 2)]);
+        let l = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
+        let g = &l.grid;
+        let add = g.cell(2, 2);
+        let m = Mapping {
+            node_cell: vec![g.cell(2, 0), add, g.cell(2, 4)],
+            edge_paths: vec![
+                vec![g.cell(2, 0), g.cell(2, 1), add],
+                vec![add, g.cell(2, 3), g.cell(2, 4)],
+            ],
+            reserved: vec![add],
+        };
+        let errs = m.validate(&d, &l);
+        assert!(errs.iter().any(|e| e.contains("reserved")), "{errs:?}");
     }
 }

@@ -139,6 +139,69 @@ pub fn place(
     Some(cell_of)
 }
 
+/// Warm-start re-placement: assign new cells to only the `displaced`
+/// nodes, keeping every other node where `cell_of` already puts it.
+/// `occupied` must mark reserved cells and the cells of all
+/// non-displaced nodes (the displaced nodes' old cells are free).
+///
+/// Unlike cold placement, a displaced node's *successors* are fixed too,
+/// so both predecessors and successors anchor the choice: each node goes
+/// to the free compatible cell minimising total manhattan distance to its
+/// already-placed neighbours (deterministic; ties resolve to the lowest
+/// cell id). Returns `false` when some node has no compatible free cell.
+pub fn replace_displaced(
+    dfg: &Dfg,
+    layout: &Layout,
+    cell_of: &mut [CellId],
+    displaced: &[usize],
+    occupied: &mut [bool],
+) -> bool {
+    let g = &layout.grid;
+    let preds = dfg.preds();
+    let succs = dfg.succs();
+    let mut pending = vec![false; dfg.num_nodes()];
+    for &n in displaced {
+        pending[n] = true;
+    }
+    // topological order among the displaced nodes, so re-placed
+    // predecessors anchor their re-placed consumers
+    let Some(order) = dfg.topo_order() else { return false };
+    for u in order {
+        let u = u as usize;
+        if !pending[u] {
+            continue;
+        }
+        let group = dfg.nodes[u].group();
+        let old = cell_of[u];
+        let mut best: Option<(f64, CellId)> = None;
+        for cand in g.compute_cells() {
+            if occupied[cand as usize] || !layout.supports(cand, group) {
+                continue;
+            }
+            let mut score = 0.0;
+            let mut anchors = 0usize;
+            for &v in preds[u].iter().chain(succs[u].iter()) {
+                if !pending[v as usize] {
+                    score += g.manhattan(cand, cell_of[v as usize]) as f64;
+                    anchors += 1;
+                }
+            }
+            if anchors == 0 {
+                // no fixed neighbour yet: stay close to the old spot
+                score = g.manhattan(cand, old) as f64;
+            }
+            if best.map_or(true, |(bs, _)| score < bs) {
+                best = Some((score, cand));
+            }
+        }
+        let Some((_, cell)) = best else { return false };
+        occupied[cell as usize] = true;
+        cell_of[u] = cell;
+        pending[u] = false;
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +264,64 @@ mod tests {
         let l = Layout::full(Grid::new(6, 6), d.groups_used()); // 16 compute
         let mut rng = Rng::seed(3);
         assert!(place(&d, &l, &[], &mut rng).is_none());
+    }
+
+    #[test]
+    fn replace_displaced_keeps_fixed_nodes_and_respects_support() {
+        let d = benchmarks::benchmark("SOB");
+        let l = Layout::full(Grid::new(6, 6), d.groups_used());
+        let mut rng = Rng::seed(7);
+        let mut cells = place(&d, &l, &[], &mut rng).unwrap();
+        let before = cells.clone();
+        // displace the first two compute nodes
+        let displaced: Vec<usize> = d
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| !op.is_memory())
+            .map(|(i, _)| i)
+            .take(2)
+            .collect();
+        let mut occupied = vec![false; l.grid.num_cells()];
+        for (i, &c) in cells.iter().enumerate() {
+            if !displaced.contains(&i) {
+                occupied[c as usize] = true;
+            }
+        }
+        assert!(replace_displaced(&d, &l, &mut cells, &displaced, &mut occupied));
+        let mut seen = std::collections::HashSet::new();
+        for (i, &c) in cells.iter().enumerate() {
+            assert!(seen.insert(c), "cell reuse at node {i}");
+            if displaced.contains(&i) {
+                assert!(l.grid.is_compute(c));
+                assert!(l.supports(c, d.nodes[i].group()));
+            } else {
+                assert_eq!(c, before[i], "fixed node {i} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn replace_displaced_fails_when_no_support_left() {
+        let d = benchmarks::benchmark("SOB");
+        let l = Layout::full(Grid::new(6, 6), d.groups_used());
+        let mut rng = Rng::seed(9);
+        let mut cells = place(&d, &l, &[], &mut rng).unwrap();
+        let victim =
+            (0..d.num_nodes()).find(|&i| !d.nodes[i].is_memory()).unwrap();
+        // strip the victim's group everywhere
+        let mut crippled = l.clone();
+        for c in crippled.grid.compute_cells().collect::<Vec<_>>() {
+            let s = crippled.support(c).without(d.nodes[victim].group());
+            crippled.set_support(c, s);
+        }
+        let mut occupied = vec![false; l.grid.num_cells()];
+        for (i, &c) in cells.iter().enumerate() {
+            if i != victim {
+                occupied[c as usize] = true;
+            }
+        }
+        assert!(!replace_displaced(&d, &crippled, &mut cells, &[victim], &mut occupied));
     }
 
     #[test]

@@ -27,10 +27,12 @@ use std::collections::BinaryHeap;
 /// Outcome of a routing attempt.
 pub enum RouteOutcome {
     Routed(Vec<Vec<CellId>>),
-    /// Still congested; `hot_cell` is the recommended reservation target
-    /// and `overuse` the best (lowest) total link overuse seen — the
-    /// driver uses it to detect reserves that are not helping.
-    Congested { hot_cell: CellId, overuse: usize },
+    /// Still congested; `hot_cell` is the recommended reservation target,
+    /// `hot_links` the overused link ids of the final round (hottest
+    /// first, for diagnostics), and `overuse` the best (lowest) total
+    /// link overuse seen — the driver uses it to detect reserves that
+    /// are not helping.
+    Congested { hot_cell: CellId, hot_links: Vec<usize>, overuse: usize },
 }
 
 #[derive(PartialEq)]
@@ -200,9 +202,13 @@ pub fn route(
 
     // Pick the hottest link and suggest reserving an adjacent occupied
     // compute cell (RodMap's reserve-on-demand trigger).
-    let hottest = (0..nlinks)
-        .max_by_key(|&l| last_usage[l].overuse())
-        .unwrap_or(0);
+    let mut hot_links: Vec<usize> =
+        (0..nlinks).filter(|&l| last_usage[l].overuse() > 0).collect();
+    // hottest first; ties resolve to the highest link id (same pick as
+    // the previous `max_by_key`, which kept the last maximal element)
+    hot_links
+        .sort_by_key(|&l| (std::cmp::Reverse(last_usage[l].overuse()), std::cmp::Reverse(l)));
+    let hottest = hot_links.first().copied().unwrap_or(0);
     let cell = (hottest / 4) as CellId;
     let dir = hottest % 4;
     let occupied: Vec<CellId> = placement.to_vec();
@@ -213,7 +219,111 @@ pub fn route(
         .chain(g.neighbors(cell))
         .find(|&c| g.is_compute(c) && occupied.contains(&c))
         .unwrap_or(cell);
-    RouteOutcome::Congested { hot_cell, overuse: best_overuse }
+    RouteOutcome::Congested { hot_cell, hot_links, overuse: best_overuse }
+}
+
+/// Incremental rip-up-and-reroute: re-route only the `affected` edges of
+/// a placed DFG, keeping every other edge's path in `fixed_paths` pinned
+/// (their link usage is seeded into every negotiation round and never
+/// ripped up). Used by the warm-start remapping path, where support
+/// removal displaces a few nodes and only their incident edges need new
+/// routes. Returns the complete path set (fixed paths untouched) once
+/// overuse reaches zero, or `None` if negotiation cannot clear the
+/// congestion — the caller then falls back to from-scratch mapping.
+pub fn route_partial(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    fixed_paths: &[Vec<CellId>],
+    affected: &[usize],
+    cfg: &MapperConfig,
+) -> Option<Vec<Vec<CellId>>> {
+    let g = &layout.grid;
+    let nlinks = g.num_links();
+    let mut affected_mask = vec![false; dfg.edges.len()];
+    for &ei in affected {
+        affected_mask[ei] = true;
+    }
+
+    // Usage contributed by the pinned paths: constant across rounds.
+    let mut fixed_usage: Vec<LinkUse> = vec![LinkUse::default(); nlinks];
+    let mut fixed_src_links: std::collections::HashMap<u32, u32> =
+        std::collections::HashMap::new();
+    for (ei, &(s, _)) in dfg.edges.iter().enumerate() {
+        if affected_mask[ei] {
+            continue;
+        }
+        for w in fixed_paths[ei].windows(2) {
+            let dir = direction(g, w[0], w[1]);
+            fixed_usage[g.link(w[0], dir)].add(s);
+        }
+        *fixed_src_links.entry(s).or_insert(0) +=
+            fixed_paths[ei].len().saturating_sub(1) as u32;
+    }
+
+    // Longest affected edges first, as in the full router.
+    let mut order: Vec<usize> = affected.to_vec();
+    order.sort_by_key(|&i| {
+        let (s, d) = dfg.edges[i];
+        std::cmp::Reverse(
+            g.manhattan(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
+        )
+    });
+
+    let mut history = vec![0.0f64; nlinks];
+    let mut buffers = AStarBuffers::new(g.num_cells());
+    let mut paths = fixed_paths.to_vec();
+    let mut best_overuse = usize::MAX;
+    let mut stalled = 0usize;
+    let stall_limit = 3;
+
+    for _round in 0..cfg.route_iters {
+        let mut usage = fixed_usage.clone();
+        let mut src_links = fixed_src_links.clone();
+        for &ei in &order {
+            let (sn, dn) = dfg.edges[ei];
+            let (src, dst) = (placement[sn as usize], placement[dn as usize]);
+            let strong_heuristic = src_links.get(&sn).copied().unwrap_or(0) == 0;
+            let path = astar(
+                g,
+                src,
+                dst,
+                sn,
+                strong_heuristic,
+                &usage,
+                &history,
+                cfg,
+                &mut buffers,
+            );
+            for w in path.windows(2) {
+                let dir = direction(g, w[0], w[1]);
+                usage[g.link(w[0], dir)].add(sn);
+            }
+            *src_links.entry(sn).or_insert(0) += path.len().saturating_sub(1) as u32;
+            paths[ei] = path;
+        }
+        let mut total_overuse = 0;
+        for l in 0..nlinks {
+            let o = usage[l].overuse();
+            if o > 0 {
+                history[l] += cfg.hist_increment * o as f64;
+                total_overuse += o;
+            }
+        }
+        if total_overuse == 0 {
+            return Some(paths);
+        }
+        if total_overuse < best_overuse {
+            best_overuse = total_overuse;
+            stalled = 0;
+        } else {
+            stalled += 1;
+            if stalled >= stall_limit {
+                break;
+            }
+        }
+    }
+    None
 }
 
 /// Direction index (0..4) such that `g.neighbor(a, dir) == b`.
@@ -399,5 +509,121 @@ mod tests {
         let g = Grid::new(4, 4);
         assert_eq!(direction(&g, g.cell(1, 1), g.cell(0, 1)), 0);
         assert_eq!(direction(&g, g.cell(1, 1), g.cell(1, 2)), 1);
+    }
+
+    #[test]
+    fn route_partial_keeps_fixed_paths_pinned() {
+        // route everything, then move one consumer and re-route only its
+        // incident edge: the other paths must come back byte-identical.
+        let d = Dfg::new(
+            "pin",
+            vec![Op::Load, Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 2), (1, 3), (2, 4), (3, 5)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let mut p = vec![
+            g.cell(0, 1),
+            g.cell(0, 4),
+            g.cell(2, 1),
+            g.cell(2, 4),
+            g.cell(5, 1),
+            g.cell(5, 4),
+        ];
+        let cfg = MapperConfig::default();
+        let RouteOutcome::Routed(paths) = route(&d, &l, &p, &cfg) else {
+            panic!("must route");
+        };
+        // displace node 3 one cell left and re-route its edges (1 and 3)
+        p[3] = g.cell(2, 3);
+        let new = route_partial(&d, &l, &p, &paths, &[1, 3], &cfg).expect("partial");
+        assert_eq!(new[0], paths[0], "unaffected edge 0 must stay pinned");
+        assert_eq!(new[2], paths[2], "unaffected edge 2 must stay pinned");
+        assert_eq!(new[1].first(), Some(&p[1]));
+        assert_eq!(new[1].last(), Some(&p[3]));
+        assert_eq!(new[3].first(), Some(&p[3]));
+        assert_eq!(new[3].last(), Some(&p[5]));
+        // the full mapping still satisfies every invariant
+        let m = crate::mapper::Mapping { node_cell: p, edge_paths: new, reserved: vec![] };
+        assert!(m.validate(&d, &l).is_empty());
+    }
+
+    #[test]
+    fn route_partial_avoids_links_taken_by_fixed_paths() {
+        // a straight corridor owned by a pinned path forces the re-routed
+        // edge to detour rather than overlap it.
+        let d = Dfg::new(
+            "detour",
+            vec![Op::Load, Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 2), (1, 3), (2, 4), (3, 5)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![
+            g.cell(2, 0),
+            g.cell(1, 0),
+            g.cell(2, 4),
+            g.cell(2, 2),
+            g.cell(5, 4),
+            g.cell(5, 2),
+        ];
+        let cfg = MapperConfig::default();
+        let RouteOutcome::Routed(paths) = route(&d, &l, &p, &cfg) else {
+            panic!("must route");
+        };
+        // re-route edge 1 (load(1,0) -> add(2,2)) while edge 0 pins the
+        // row-2 corridor; the result must still be overlap-free.
+        let new = route_partial(&d, &l, &p, &paths, &[1], &cfg).expect("partial");
+        let m = crate::mapper::Mapping { node_cell: p, edge_paths: new, reserved: vec![] };
+        assert!(m.validate(&d, &l).is_empty());
+    }
+
+    #[test]
+    fn congested_outcome_reports_hot_links() {
+        // Four distinct values must cross the cut between columns 3 and 4
+        // eastbound, but a 3-row grid has only 3 eastbound links per cut:
+        // at least one link is shared, so routing must report congestion.
+        let d = Dfg::new(
+            "jam",
+            vec![
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+            ],
+            vec![(0, 4), (1, 5), (2, 6), (3, 7), (4, 8), (5, 9), (6, 10), (7, 11)],
+        );
+        let l = Layout::full(Grid::new(3, 9), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![
+            g.cell(0, 0),
+            g.cell(0, 1),
+            g.cell(0, 2),
+            g.cell(0, 3),
+            g.cell(1, 4),
+            g.cell(1, 5),
+            g.cell(1, 6),
+            g.cell(1, 7),
+            g.cell(2, 4),
+            g.cell(2, 5),
+            g.cell(2, 6),
+            g.cell(2, 7),
+        ];
+        match route(&d, &l, &p, &MapperConfig { route_iters: 3, ..Default::default() }) {
+            RouteOutcome::Routed(_) => panic!("4 values cannot fit a 3-link cut"),
+            RouteOutcome::Congested { hot_links, overuse, .. } => {
+                assert!(!hot_links.is_empty(), "congestion must name links");
+                assert!(overuse > 0);
+                assert!(hot_links.iter().all(|&l| l < g.num_links()));
+            }
+        }
     }
 }

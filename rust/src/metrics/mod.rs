@@ -2,33 +2,34 @@
 
 use crate::cgra::Layout;
 use crate::dfg::Dfg;
-use crate::mapper::Mapper;
+use crate::mapper::MappingEngine;
 use crate::ops::NUM_GROUPS;
 
 /// Post-map latency ratio of a heterogeneous layout relative to the full
 /// layout, per DFG (Fig 10). Returns `None` when either layout fails to
 /// map (should not happen for layouts produced by the search).
 pub fn latency_ratio(
-    mapper: &Mapper,
+    engine: &MappingEngine,
     dfg: &Dfg,
     full: &Layout,
     hetero: &Layout,
 ) -> Option<f64> {
-    let mf = mapper.map(dfg, full)?;
-    let mh = mapper.map(dfg, hetero)?;
+    let mf = engine.map(dfg, full).into_mapping()?;
+    let mh = engine.map(dfg, hetero).into_mapping()?;
     Some(mh.latency(dfg) as f64 / mf.latency(dfg) as f64)
 }
 
 /// Latency ratio using a known witness mapping for the heterogeneous
 /// layout (search results carry witnesses; layouts accepted through the
-/// witness fast-path may not re-map heuristically from scratch).
+/// warm-start or witness fast-path may not re-map heuristically from
+/// scratch).
 pub fn latency_ratio_with_witness(
-    mapper: &Mapper,
+    engine: &MappingEngine,
     dfg: &Dfg,
     full: &Layout,
     hetero_mapping: &crate::mapper::Mapping,
 ) -> Option<f64> {
-    let mf = mapper.map(dfg, full)?;
+    let mf = engine.map(dfg, full).into_mapping()?;
     Some(hetero_mapping.latency(dfg) as f64 / mf.latency(dfg) as f64)
 }
 
@@ -88,7 +89,7 @@ mod tests {
     fn latency_ratio_one_for_same_layout() {
         let d = benchmarks::benchmark("SOB");
         let l = Layout::full(Grid::new(6, 6), d.groups_used());
-        let m = Mapper::default();
+        let m = MappingEngine::default();
         let r = latency_ratio(&m, &d, &l, &l).unwrap();
         assert!((r - 1.0).abs() < 1e-9);
     }

@@ -12,10 +12,10 @@
 //! ```no_run
 //! use helex::dfg::benchmarks;
 //! use helex::search::{Explorer, SearchConfig, SearchEvent};
-//! use helex::{CostModel, Grid, Mapper};
+//! use helex::{CostModel, Grid, MappingEngine};
 //!
 //! let dfgs = benchmarks::dfg_set("S4");
-//! let mapper = Mapper::default();
+//! let engine = MappingEngine::default();
 //! let cost = CostModel::area();
 //! let mut progress = |ev: &SearchEvent| {
 //!     if let SearchEvent::Improved { best_cost, .. } = ev {
@@ -24,7 +24,7 @@
 //! };
 //! let result = Explorer::new(Grid::new(9, 9))
 //!     .dfgs(&dfgs)
-//!     .mapper(&mapper)
+//!     .engine(&engine)
 //!     .cost(&cost)
 //!     .config(SearchConfig::default())
 //!     .observer(&mut progress)
@@ -36,7 +36,7 @@ use super::{gsg, heatmap, opsg, BatchScorer, SearchConfig, SearchResult, SearchS
 use crate::cgra::{Grid, Layout};
 use crate::cost::CostModel;
 use crate::dfg::{groups_used, min_group_instances, Dfg};
-use crate::mapper::{Mapper, Mapping};
+use crate::mapper::{MapOutcome, Mapper, Mapping, MappingEngine};
 use crate::ops::NUM_GROUPS;
 use crate::util::Stopwatch;
 use std::fmt;
@@ -74,13 +74,16 @@ impl<F: FnMut(&SearchEvent)> SearchObserver for F {
 /// The shared state of one search session, threaded through every phase.
 ///
 /// Bundles what the pre-session API passed as ten loose positional
-/// arguments: the DFG set, mapper, cost model, minimum-instance bounds,
-/// configuration, statistics, session stopwatch, optional batch scorer
-/// and the per-DFG witness cache.
+/// arguments: the DFG set, mapping engine, cost model, minimum-instance
+/// bounds, configuration, statistics, session stopwatch, optional batch
+/// scorer and the per-DFG witness cache.
 pub struct SearchCtx<'a> {
     /// The DFG set the layout must keep mappable.
     pub dfgs: &'a [Dfg],
-    pub mapper: &'a Mapper,
+    /// Feasibility oracle: phases consume [`MapOutcome`]s from it, using
+    /// [`MappingEngine::remap_from`] with the cached witness so candidate
+    /// tests take the incremental warm-start path.
+    pub engine: &'a MappingEngine,
     pub cost: &'a CostModel,
     /// Theoretical minimum instances per group (Section III-D pruning).
     pub min_insts: [usize; NUM_GROUPS],
@@ -108,14 +111,14 @@ pub struct SearchCtx<'a> {
 impl<'a> SearchCtx<'a> {
     pub fn new(
         dfgs: &'a [Dfg],
-        mapper: &'a Mapper,
+        engine: &'a MappingEngine,
         cost: &'a CostModel,
         min_insts: [usize; NUM_GROUPS],
         cfg: SearchConfig,
     ) -> Self {
         Self {
             dfgs,
-            mapper,
+            engine,
             cost,
             min_insts,
             cfg,
@@ -184,6 +187,19 @@ impl<'a> SearchCtx<'a> {
         self.emit(SearchEvent::PhaseStarted { phase: name.to_string(), incumbent_cost });
     }
 
+    /// Feasibility-test one DFG against a candidate layout, consuming a
+    /// [`MapOutcome`] from the engine. The DFG's cached witness (when
+    /// present) is passed as a warm start, so one-removal candidates
+    /// take the incremental remap path instead of a full place-and-route.
+    /// Callers store the returned mapping as the new witness when the
+    /// candidate is accepted.
+    pub fn test_dfg(&self, di: usize, layout: &Layout) -> MapOutcome {
+        match &self.witness[di] {
+            Some(w) => self.engine.remap_from(w, &self.dfgs[di], layout),
+            None => self.engine.map(&self.dfgs[di], layout),
+        }
+    }
+
     pub(crate) fn finish_phase(
         &mut self,
         name: &str,
@@ -224,34 +240,36 @@ impl SearchPhase for HeatmapPhase {
 
     fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
         let initial = if ctx.cfg.use_heatmap {
-            match heatmap::initial_layout(ctx.dfgs, &incumbent, ctx.mapper) {
+            match heatmap::initial_layout(ctx.dfgs, &incumbent, ctx.engine) {
                 heatmap::HeatmapOutcome::Heatmap(l) => {
                     ctx.stats.heatmap_used = true;
                     l
                 }
                 heatmap::HeatmapOutcome::FullFallback => incumbent.clone(),
-                heatmap::HeatmapOutcome::Infeasible => {
-                    ctx.abort("DFG set does not map on the full layout");
+                heatmap::HeatmapOutcome::Infeasible { dfg, failure } => {
+                    ctx.abort(format!("{dfg} does not map on the full layout: {failure}"));
                     return incumbent;
                 }
             }
         } else {
-            if !ctx.mapper.test_layout(ctx.dfgs, &incumbent) {
-                ctx.abort("DFG set does not map on the full layout");
-                return incumbent;
+            match ctx.engine.map_all(ctx.dfgs, &incumbent) {
+                Ok(_) => incumbent.clone(),
+                Err(fail) => {
+                    ctx.abort(format!("{fail} on the full layout"));
+                    return incumbent;
+                }
             }
-            incumbent.clone()
         };
         // Seed witnesses with mappings on the initial layout (which just
-        // passed test_layout): a DFG untouched by every later removal
-        // keeps its seed witness valid to the end of the session.
-        let seeded: Vec<Option<Mapping>> =
-            ctx.dfgs.iter().map(|d| ctx.mapper.map(d, &initial)).collect();
-        if seeded.iter().any(Option::is_none) {
-            ctx.abort("initial layout no longer maps"); // should not happen
-            return incumbent;
+        // passed map_all/heatmap re-mapping): a DFG untouched by every
+        // later removal keeps its seed witness valid to the session end.
+        match ctx.engine.map_all(ctx.dfgs, &initial) {
+            Ok(mappings) => ctx.witness = mappings.into_iter().map(Some).collect(),
+            Err(fail) => {
+                ctx.abort(format!("initial layout no longer maps: {fail}")); // should not happen
+                return incumbent;
+            }
         }
-        ctx.witness = seeded;
         ctx.initial = Some(initial.clone());
         let cost = ctx.cost.layout_cost(&initial);
         ctx.emit_improved(cost);
@@ -326,13 +344,16 @@ impl std::error::Error for ExploreError {}
 /// Builder-style search session. See the module docs for an example.
 ///
 /// Required: a target grid (constructor) and a DFG set ([`Self::dfgs`]).
-/// Everything else has defaults: [`Mapper::default`], the area
+/// Everything else has defaults: [`MappingEngine::default`], the area
 /// [`CostModel`], [`SearchConfig::default`] and the paper's
 /// heatmap → OPSG → GSG pipeline ([`Self::default_phases`]).
 pub struct Explorer<'a> {
     grid: Grid,
     dfgs: Option<&'a [Dfg]>,
-    mapper: Option<&'a Mapper>,
+    engine: Option<&'a MappingEngine>,
+    /// Engine built from a legacy [`Self::mapper`] call (owned so the
+    /// borrowed-engine path stays zero-cost).
+    owned_engine: Option<MappingEngine>,
     cost: Option<&'a CostModel>,
     cfg: SearchConfig,
     scorer: Option<&'a mut dyn BatchScorer>,
@@ -345,7 +366,8 @@ impl<'a> Explorer<'a> {
         Self {
             grid,
             dfgs: None,
-            mapper: None,
+            engine: None,
+            owned_engine: None,
             cost: None,
             cfg: SearchConfig::default(),
             scorer: None,
@@ -360,8 +382,20 @@ impl<'a> Explorer<'a> {
         self
     }
 
-    pub fn mapper(mut self, mapper: &'a Mapper) -> Self {
-        self.mapper = Some(mapper);
+    /// Share a [`MappingEngine`] with the session (and with other
+    /// sessions: the engine's feasibility cache persists across runs).
+    pub fn engine(mut self, engine: &'a MappingEngine) -> Self {
+        self.engine = Some(engine);
+        self.owned_engine = None;
+        self
+    }
+
+    /// Legacy entry: derive an owned engine from a [`Mapper`]'s
+    /// configuration. Prefer [`Self::engine`].
+    pub fn mapper(mut self, mapper: &Mapper) -> Self {
+        if self.engine.is_none() {
+            self.owned_engine = Some(MappingEngine::from_mapper(mapper));
+        }
         self
     }
 
@@ -416,12 +450,12 @@ impl<'a> Explorer<'a> {
     /// drive every phase and materialize the witness mappings.
     pub fn run(self) -> Result<SearchResult, ExploreError> {
         let dfgs = self.dfgs.filter(|d| !d.is_empty()).ok_or(ExploreError::MissingDfgs)?;
-        let default_mapper;
-        let mapper = match self.mapper {
-            Some(m) => m,
+        let default_engine;
+        let engine = match self.engine {
+            Some(e) => e,
             None => {
-                default_mapper = Mapper::default();
-                &default_mapper
+                default_engine = self.owned_engine.unwrap_or_default();
+                &default_engine
             }
         };
         let default_cost;
@@ -445,7 +479,7 @@ impl<'a> Explorer<'a> {
         // (Section IV-F)
         let full_layout = Layout::full(self.grid, groups_used(dfgs));
 
-        let mut ctx = SearchCtx::new(dfgs, mapper, cost, min_insts, self.cfg);
+        let mut ctx = SearchCtx::new(dfgs, engine, cost, min_insts, self.cfg);
         // destructure rather than assign the Option whole: the call-site
         // coercion reborrows the &mut trait object and shortens its
         // object lifetime to the ctx's (a direct Option-to-Option
@@ -480,20 +514,31 @@ impl<'a> Explorer<'a> {
         let initial_layout = ctx.initial.take().unwrap_or_else(|| full_layout.clone());
 
         // materialize final witnesses: any DFG whose cached witness is
-        // missing or stale gets a fresh mapping on the final layout
+        // stale gets a warm-start remap (falling back to from-scratch
+        // inside the engine) on the final layout
         let mut final_mappings = Vec::with_capacity(dfgs.len());
         for (di, d) in dfgs.iter().enumerate() {
-            let w = match ctx.witness[di].take() {
-                Some(w) if w.still_valid(d, &best) => w,
-                _ => mapper.map(d, &best).ok_or_else(|| {
-                    ExploreError::Infeasible(format!(
-                        "{}: no mapping on the final layout",
-                        d.name
-                    ))
-                })?,
+            let outcome = match ctx.witness[di].take() {
+                Some(w) if w.still_valid(d, &best) => {
+                    debug_assert!(w.validate(d, &best).is_empty());
+                    final_mappings.push(w);
+                    continue;
+                }
+                Some(w) => engine.remap_from(&w, d, &best),
+                None => engine.map(d, &best),
             };
-            debug_assert!(w.validate(d, &best).is_empty());
-            final_mappings.push(w);
+            match outcome {
+                MapOutcome::Mapped { mapping, .. } => {
+                    debug_assert!(mapping.validate(d, &best).is_empty());
+                    final_mappings.push(mapping);
+                }
+                MapOutcome::Failed { failure, .. } => {
+                    return Err(ExploreError::Infeasible(format!(
+                        "{}: no mapping on the final layout ({failure})",
+                        d.name
+                    )));
+                }
+            }
         }
 
         let best_cost = cost.layout_cost(&best);
@@ -529,10 +574,10 @@ mod tests {
     #[test]
     fn ctx_abort_is_sticky_and_taken_once() {
         let dfgs = vec![benchmarks::benchmark("SOB")];
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = CostModel::area();
         let mut ctx =
-            SearchCtx::new(&dfgs, &mapper, &cost, [0; NUM_GROUPS], SearchConfig::default());
+            SearchCtx::new(&dfgs, &engine, &cost, [0; NUM_GROUPS], SearchConfig::default());
         assert!(!ctx.is_aborted());
         ctx.abort("first");
         ctx.abort("second");
@@ -544,10 +589,10 @@ mod tests {
     #[test]
     fn emit_improved_extends_trace_with_current_phase() {
         let dfgs = vec![benchmarks::benchmark("SOB")];
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = CostModel::area();
         let mut ctx =
-            SearchCtx::new(&dfgs, &mapper, &cost, [0; NUM_GROUPS], SearchConfig::default());
+            SearchCtx::new(&dfgs, &engine, &cost, [0; NUM_GROUPS], SearchConfig::default());
         ctx.begin_phase("custom", 10.0);
         ctx.emit_improved(5.0);
         assert_eq!(ctx.stats.trace.len(), 1);

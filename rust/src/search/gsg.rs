@@ -144,10 +144,11 @@ fn layout_hash(l: &Layout) -> u64 {
 /// — stats, scorer, the witness cache shared with OPSG (a cached mapping
 /// whose placements the candidate layout still supports proves
 /// feasibility without re-mapping, see `Mapping::still_valid`;
-/// EXPERIMENTS.md §Perf) — lives in the [`SearchCtx`].
+/// EXPERIMENTS.md §Perf) — lives in the [`SearchCtx`]. DFGs whose
+/// witness went stale are remapped through [`SearchCtx::test_dfg`],
+/// which warm-starts the engine from the witness.
 pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
     let dfgs = ctx.dfgs;
-    let mapper = ctx.mapper;
     let cost = ctx.cost;
     let cfg = ctx.cfg.clone();
     let mut best = initial.clone();
@@ -170,7 +171,8 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
         if *fail_chart.get(&key).unwrap_or(&0) >= cfg.l_fail {
             continue;
         }
-        // full-set testing (line 9), with witness fast-path
+        // full-set testing (line 9), with witness fast-path and
+        // warm-start remapping for stale witnesses
         ctx.stats.tested += 1;
         let mut succ = true;
         let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
@@ -181,9 +183,11 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
             if valid {
                 continue;
             }
-            match mapper.map(d, &cand.layout) {
-                Some(m) => new_witnesses.push((di, m)),
-                None => {
+            match ctx.test_dfg(di, &cand.layout) {
+                crate::mapper::MapOutcome::Mapped { mapping, .. } => {
+                    new_witnesses.push((di, mapping))
+                }
+                crate::mapper::MapOutcome::Failed { .. } => {
                     succ = false;
                     break;
                 }
@@ -226,18 +230,18 @@ mod tests {
     use crate::cgra::Grid;
     use crate::cost::CostModel;
     use crate::dfg::{benchmarks, Dfg};
-    use crate::mapper::Mapper;
+    use crate::mapper::MappingEngine;
     use crate::ops::OpGroup;
     use crate::search::SearchConfig;
 
     fn ctx<'a>(
         dfgs: &'a [Dfg],
-        mapper: &'a Mapper,
+        engine: &'a MappingEngine,
         cost: &'a CostModel,
         cfg: SearchConfig,
     ) -> SearchCtx<'a> {
         let mins = crate::dfg::min_group_instances(dfgs);
-        SearchCtx::new(dfgs, mapper, cost, mins, cfg)
+        SearchCtx::new(dfgs, engine, cost, mins, cfg)
     }
 
     #[test]
@@ -261,13 +265,20 @@ mod tests {
         // Section IV-G: GSG matters most when only cheap groups remain.
         let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
         let full = Layout::full(Grid::new(7, 7), crate::dfg::groups_used(&dfgs));
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = CostModel::area();
         let cfg = SearchConfig { l_test: 200, l_fail: 2, ..Default::default() };
-        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c = ctx(&dfgs, &engine, &cost, cfg);
         let best = run(&full, &mut c);
         assert!(cost.layout_cost(&best) < cost.layout_cost(&full));
-        assert!(mapper.test_layout(&dfgs, &best));
+        // feasibility is witness-proven: every accepted candidate either
+        // kept a valid witness or produced a fresh mapping for it
+        for (di, d) in dfgs.iter().enumerate() {
+            match &c.witness[di] {
+                Some(w) => assert!(w.validate(d, &best).is_empty(), "{}", d.name),
+                None => assert!(c.engine.map(d, &best).is_mapped(), "{}", d.name),
+            }
+        }
         assert!(crate::search::meets_min_instances(&best, &c.min_insts));
     }
 
@@ -275,10 +286,10 @@ mod tests {
     fn gsg_respects_budget_and_failchart() {
         let dfgs = vec![benchmarks::benchmark("SOB")];
         let full = Layout::full(Grid::new(6, 6), crate::dfg::groups_used(&dfgs));
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = CostModel::area();
         let cfg = SearchConfig { l_test: 10, l_fail: 1, ..Default::default() };
-        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c = ctx(&dfgs, &engine, &cost, cfg);
         let _ = run(&full, &mut c);
         assert!(c.stats.tested <= 10);
     }
@@ -290,11 +301,11 @@ mod tests {
         let mut pq = BinaryHeap::new();
         let mut seen = HashSet::new();
         let dfgs: Vec<Dfg> = Vec::new();
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = CostModel::area();
         let mut c = SearchCtx::new(
             &dfgs,
-            &mapper,
+            &engine,
             &cost,
             [0; NUM_GROUPS],
             SearchConfig { l_fail: 3, ..Default::default() },

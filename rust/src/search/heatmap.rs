@@ -5,12 +5,13 @@
 //! cell supports exactly the groups some DFG actually executed there.
 //! I/O cells are untouched. If all DFGs successfully *re-map* onto the
 //! heatmap layout, it becomes the initial layout; otherwise the search
-//! starts from the full layout.
+//! starts from the full layout. All mapping goes through the
+//! [`MappingEngine`], so infeasibility carries the structured
+//! [`MapFailure`] diagnostic of the DFG that failed.
 
 use crate::cgra::Layout;
 use crate::dfg::Dfg;
-use crate::mapper::Mapper;
-
+use crate::mapper::{MapFailure, MapSetFailure, MappingEngine};
 
 /// Outcome of initial-layout construction.
 pub enum HeatmapOutcome {
@@ -19,35 +20,48 @@ pub enum HeatmapOutcome {
     /// Some DFG failed to re-map onto the heatmap; start from full.
     FullFallback,
     /// Some DFG failed to map even on the *full* layout — HeLEx
-    /// terminates in failure (Algorithm 1 precondition).
-    Infeasible,
+    /// terminates in failure (Algorithm 1 precondition). Carries which
+    /// DFG and why.
+    Infeasible { dfg: String, failure: MapFailure },
 }
 
-/// Overlay of per-DFG mappings: the heterogeneous usage layout.
-pub fn overlay(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> Option<Layout> {
+/// Overlay of per-DFG mappings: the heterogeneous usage layout. Fails
+/// with the first DFG that does not map on `full`.
+pub fn try_overlay(
+    dfgs: &[Dfg],
+    full: &Layout,
+    engine: &MappingEngine,
+) -> Result<Layout, MapSetFailure> {
     let mut heat = Layout::empty(full.grid);
-    for dfg in dfgs {
-        let m = mapper.map(dfg, full)?;
+    for (mapping, dfg) in engine.map_all(dfgs, full)?.iter().zip(dfgs) {
         for (n, op) in dfg.nodes.iter().enumerate() {
             if op.is_memory() {
                 continue; // I/O cells untouched
             }
-            let cell = m.node_cell[n];
+            let cell = mapping.node_cell[n];
             let mut s = heat.support(cell);
             s.insert(op.group());
             heat.set_support(cell, s);
         }
     }
-    Some(heat)
+    Ok(heat)
+}
+
+/// [`try_overlay`] without the failure diagnostic.
+pub fn overlay(dfgs: &[Dfg], full: &Layout, engine: &MappingEngine) -> Option<Layout> {
+    try_overlay(dfgs, full, engine).ok()
 }
 
 /// Section III-E procedure.
-pub fn initial_layout(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> HeatmapOutcome {
-    let Some(heat) = overlay(dfgs, full, mapper) else {
-        return HeatmapOutcome::Infeasible;
+pub fn initial_layout(dfgs: &[Dfg], full: &Layout, engine: &MappingEngine) -> HeatmapOutcome {
+    let heat = match try_overlay(dfgs, full, engine) {
+        Ok(heat) => heat,
+        Err(fail) => {
+            return HeatmapOutcome::Infeasible { dfg: fail.dfg_name, failure: fail.failure };
+        }
     };
     // re-map all DFGs onto the heatmap layout
-    if mapper.test_layout(dfgs, &heat) {
+    if engine.test_layout(dfgs, &heat) {
         HeatmapOutcome::Heatmap(heat)
     } else {
         HeatmapOutcome::FullFallback
@@ -60,11 +74,10 @@ pub fn initial_layout(dfgs: &[Dfg], full: &Layout, mapper: &Mapper) -> HeatmapOu
 pub fn usage_counts(
     dfgs: &[Dfg],
     full: &Layout,
-    mapper: &Mapper,
+    engine: &MappingEngine,
 ) -> Option<Vec<[u16; crate::ops::NUM_GROUPS]>> {
     let mut counts = vec![[0u16; crate::ops::NUM_GROUPS]; full.grid.num_cells()];
-    for dfg in dfgs {
-        let m = mapper.map(dfg, full)?;
+    for (m, dfg) in engine.map_all(dfgs, full).ok()?.iter().zip(dfgs) {
         for (n, op) in dfg.nodes.iter().enumerate() {
             counts[m.node_cell[n] as usize][op.group().index()] += 1;
         }
@@ -88,16 +101,16 @@ mod tests {
     use crate::cgra::Grid;
     use crate::dfg::benchmarks;
 
-    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, Mapper) {
+    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, MappingEngine) {
         let dfgs: Vec<Dfg> = names.iter().map(|n| benchmarks::benchmark(n)).collect();
         let full = Layout::full(Grid::new(r, c), crate::dfg::groups_used(&dfgs));
-        (dfgs, full, Mapper::default())
+        (dfgs, full, MappingEngine::default())
     }
 
     #[test]
     fn overlay_is_subset_of_full() {
-        let (dfgs, full, mapper) = setup(&["SOB", "GB", "RGB"], 8, 8);
-        let heat = overlay(&dfgs, &full, &mapper).unwrap();
+        let (dfgs, full, engine) = setup(&["SOB", "GB", "RGB"], 8, 8);
+        let heat = overlay(&dfgs, &full, &engine).unwrap();
         assert!(heat.is_subset_of(&full));
         assert!(heatmap_is_subset(&heat, &full));
         // strictly smaller in practice for these tiny DFGs on 8x8
@@ -106,8 +119,8 @@ mod tests {
 
     #[test]
     fn overlay_covers_each_dfg_needs() {
-        let (dfgs, full, mapper) = setup(&["NMS"], 9, 9);
-        let heat = overlay(&dfgs, &full, &mapper).unwrap();
+        let (dfgs, full, engine) = setup(&["NMS"], 9, 9);
+        let heat = overlay(&dfgs, &full, &engine).unwrap();
         // total instances per group >= the DFG's op count per group
         let h = heat.compute_group_instances();
         let need = dfgs[0].group_histogram();
@@ -123,26 +136,36 @@ mod tests {
 
     #[test]
     fn initial_layout_feasible_or_fallback() {
-        let (dfgs, full, mapper) = setup(&["SOB", "GB"], 7, 7);
-        match initial_layout(&dfgs, &full, &mapper) {
+        let (dfgs, full, engine) = setup(&["SOB", "GB"], 7, 7);
+        match initial_layout(&dfgs, &full, &engine) {
             HeatmapOutcome::Heatmap(h) => {
-                assert!(mapper.test_layout(&dfgs, &h));
+                assert!(engine.test_layout(&dfgs, &h));
             }
             HeatmapOutcome::FullFallback => {} // acceptable
-            HeatmapOutcome::Infeasible => panic!("SOB+GB must be feasible on 7x7"),
+            HeatmapOutcome::Infeasible { dfg, failure } => {
+                panic!("SOB+GB must be feasible on 7x7: {dfg}: {failure}")
+            }
         }
     }
 
     #[test]
-    fn infeasible_reported() {
-        let (dfgs, full, mapper) = setup(&["SAD"], 5, 5);
-        assert!(matches!(initial_layout(&dfgs, &full, &mapper), HeatmapOutcome::Infeasible));
+    fn infeasible_reported_with_diagnostic() {
+        let (dfgs, full, engine) = setup(&["SAD"], 5, 5);
+        match initial_layout(&dfgs, &full, &engine) {
+            HeatmapOutcome::Infeasible { dfg, failure } => {
+                assert_eq!(dfg, "SAD");
+                // 63 compute ops cannot fit 9 compute cells: the failure
+                // is structural, not congestion
+                assert!(!matches!(failure, MapFailure::Congested { .. }), "{failure}");
+            }
+            _ => panic!("SAD on 5x5 must be infeasible"),
+        }
     }
 
     #[test]
     fn usage_counts_sum_to_node_counts() {
-        let (dfgs, full, mapper) = setup(&["SOB", "GB"], 8, 8);
-        let counts = usage_counts(&dfgs, &full, &mapper).unwrap();
+        let (dfgs, full, engine) = setup(&["SOB", "GB"], 8, 8);
+        let counts = usage_counts(&dfgs, &full, &engine).unwrap();
         let total: usize =
             counts.iter().map(|c| c.iter().map(|&x| x as usize).sum::<usize>()).sum();
         let expect: usize = dfgs.iter().map(|d| d.num_nodes()).sum();

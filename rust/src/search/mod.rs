@@ -14,12 +14,15 @@
 //!    combinations with a `failChart` pruning memory and full-set
 //!    testing.
 //!
-//! All phases share one [`SearchCtx`] (DFG set, mapper, cost model,
-//! bounds, config, stats, stopwatch, scorer, witness cache) and report
-//! progress as [`SearchEvent`]s to an optional [`SearchObserver`]; the
-//! convergence trace used by Figs 3–6 and Table IV is recorded from the
-//! event stream. [`run`] is the legacy entry point, kept as a thin
-//! wrapper over [`Explorer`].
+//! All phases share one [`SearchCtx`] (DFG set, mapping engine, cost
+//! model, bounds, config, stats, stopwatch, scorer, witness cache) and
+//! report progress as [`SearchEvent`]s to an optional [`SearchObserver`];
+//! the convergence trace used by Figs 3–6 and Table IV is recorded from
+//! the event stream. Feasibility testing consumes structured
+//! [`crate::mapper::MapOutcome`]s from the [`crate::mapper::MappingEngine`]
+//! via [`SearchCtx::test_dfg`], warm-starting each candidate test from
+//! the cached witness mapping. [`run`] is the legacy entry point, kept
+//! as a thin wrapper over [`Explorer`].
 
 pub mod explorer;
 pub mod gsg;

@@ -46,10 +46,12 @@ fn generate_valid_layouts(
 /// from cell `c` cannot invalidate a witness that does not execute a
 /// `g`-op on `c` (support removal does not touch the switch fabric), so
 /// such candidates are accepted without re-mapping — a sound
-/// strengthening of the paper's selective testing.
+/// strengthening of the paper's selective testing. DFGs that *do* need
+/// re-mapping go through [`SearchCtx::test_dfg`], which warm-starts the
+/// engine from the witness: only the displaced nodes are re-placed and
+/// only their incident edges re-routed.
 pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
     let dfgs = ctx.dfgs;
-    let mapper = ctx.mapper;
     let cost = ctx.cost;
     let min_insts = ctx.min_insts;
     let cfg = ctx.cfg.clone();
@@ -98,7 +100,8 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
                 let candidate = best.without_group(cell, op_type);
                 ctx.stats.tested += 1;
                 // witness reuse: a DFG only needs re-mapping if its
-                // current witness executes an op of `op_type` on `cell`.
+                // current witness executes an op of `op_type` on `cell`;
+                // those that do are remapped warm from the witness.
                 let mut ok = true;
                 let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
                 for &di in &affected {
@@ -110,9 +113,11 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
                     if !needs_remap {
                         continue;
                     }
-                    match mapper.map(d, &candidate) {
-                        Some(m) => new_witnesses.push((di, m)),
-                        None => {
+                    match ctx.test_dfg(di, &candidate) {
+                        crate::mapper::MapOutcome::Mapped { mapping, .. } => {
+                            new_witnesses.push((di, mapping))
+                        }
+                        crate::mapper::MapOutcome::Failed { .. } => {
                             ok = false;
                             break;
                         }
@@ -151,68 +156,78 @@ mod tests {
     use crate::cgra::Grid;
     use crate::cost::CostModel;
     use crate::dfg::{benchmarks, Dfg};
-    use crate::mapper::Mapper;
+    use crate::mapper::MappingEngine;
     use crate::search::{NativeScorer, SearchConfig};
 
-    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, Mapper, CostModel) {
+    fn setup(names: &[&str], r: usize, c: usize) -> (Vec<Dfg>, Layout, MappingEngine, CostModel) {
         let dfgs: Vec<Dfg> = names.iter().map(|n| benchmarks::benchmark(n)).collect();
         let full = Layout::full(Grid::new(r, c), crate::dfg::groups_used(&dfgs));
-        (dfgs, full, Mapper::default(), CostModel::area())
+        (dfgs, full, MappingEngine::default(), CostModel::area())
     }
 
     fn ctx<'a>(
         dfgs: &'a [Dfg],
-        mapper: &'a Mapper,
+        engine: &'a MappingEngine,
         cost: &'a CostModel,
         cfg: SearchConfig,
     ) -> SearchCtx<'a> {
         let mins = crate::dfg::min_group_instances(dfgs);
-        SearchCtx::new(dfgs, mapper, cost, mins, cfg)
+        SearchCtx::new(dfgs, engine, cost, mins, cfg)
+    }
+
+    /// Feasibility check for a finished search state: the result is
+    /// proven by witnesses (layouts accepted through the warm-start or
+    /// witness fast-path may not re-map heuristically from scratch).
+    fn witnesses_prove(c: &SearchCtx, best: &Layout) -> bool {
+        c.dfgs.iter().enumerate().all(|(di, d)| match &c.witness[di] {
+            Some(w) => w.validate(d, best).is_empty(),
+            None => c.engine.map(d, best).is_mapped(),
+        })
     }
 
     #[test]
     fn opsg_removes_expensive_groups_first_and_most() {
-        let (dfgs, full, mapper, cost) = setup(&["BIL"], 8, 8);
+        let (dfgs, full, engine, cost) = setup(&["BIL"], 8, 8);
         let mins = crate::dfg::min_group_instances(&dfgs);
         let cfg = SearchConfig { l_test: 400, ..Default::default() };
-        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c = ctx(&dfgs, &engine, &cost, cfg);
         let best = run(&full, &mut c);
         let nf = full.compute_group_instances();
         let nb = best.compute_group_instances();
         // BIL needs only 2 Div instances: almost all of the 36 must go
         assert!(nb[OpGroup::Div.index()] <= mins[OpGroup::Div.index()] + 2);
         assert!(nb[OpGroup::Div.index()] < nf[OpGroup::Div.index()]);
-        // result still maps
-        assert!(mapper.test_layout(&dfgs, &best));
+        // result still maps (witness-proven)
+        assert!(witnesses_prove(&c, &best));
         assert!(c.stats.tested > 0 && c.stats.expanded >= c.stats.tested);
     }
 
     #[test]
     fn opsg_respects_l_test_budget() {
-        let (dfgs, full, mapper, cost) = setup(&["SOB", "GB"], 7, 7);
+        let (dfgs, full, engine, cost) = setup(&["SOB", "GB"], 7, 7);
         let cfg = SearchConfig { l_test: 5, ..Default::default() };
-        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c = ctx(&dfgs, &engine, &cost, cfg);
         let _ = run(&full, &mut c);
         assert!(c.stats.tested <= 5);
     }
 
     #[test]
     fn opsg_never_violates_min_instances() {
-        let (dfgs, full, mapper, cost) = setup(&["RGB"], 7, 7);
+        let (dfgs, full, engine, cost) = setup(&["RGB"], 7, 7);
         let cfg = SearchConfig { l_test: 300, ..Default::default() };
-        let mut c = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c = ctx(&dfgs, &engine, &cost, cfg);
         let best = run(&full, &mut c);
         assert!(crate::search::meets_min_instances(&best, &c.min_insts));
     }
 
     #[test]
     fn scorer_and_native_agree() {
-        let (dfgs, full, mapper, cost) = setup(&["SOB"], 6, 6);
+        let (dfgs, full, engine, cost) = setup(&["SOB"], 6, 6);
         let cfg = SearchConfig { l_test: 100, ..Default::default() };
-        let mut c1 = ctx(&dfgs, &mapper, &cost, cfg.clone());
+        let mut c1 = ctx(&dfgs, &engine, &cost, cfg.clone());
         let b1 = run(&full, &mut c1);
         let mut ns = NativeScorer { cost: cost.clone() };
-        let mut c2 = ctx(&dfgs, &mapper, &cost, cfg);
+        let mut c2 = ctx(&dfgs, &engine, &cost, cfg);
         c2.scorer = Some(&mut ns);
         let b2 = run(&full, &mut c2);
         assert_eq!(

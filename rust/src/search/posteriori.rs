@@ -8,7 +8,7 @@
 use crate::cgra::Layout;
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
-use crate::mapper::Mapper;
+use crate::mapper::MappingEngine;
 use std::collections::HashSet;
 
 /// Result of the posteriori FIFO analysis.
@@ -33,10 +33,10 @@ pub fn fifo_analysis(
     dfgs: &[Dfg],
     layout: &Layout,
     full: &Layout,
-    mapper: &Mapper,
+    engine: &MappingEngine,
 ) -> Option<FifoReport> {
-    let mappings: Option<Vec<_>> = dfgs.iter().map(|d| mapper.map(d, layout)).collect();
-    Some(fifo_analysis_with(&mappings?, layout, full))
+    let mappings = engine.map_all(dfgs, layout).ok()?;
+    Some(fifo_analysis_with(&mappings, layout, full))
 }
 
 /// FIFO analysis from known witness mappings (preferred: search results
@@ -81,7 +81,7 @@ mod tests {
     fn fifo_counts_match_grid_size() {
         let dfgs = vec![benchmarks::benchmark("SOB")];
         let l = Layout::full(Grid::new(10, 10), crate::dfg::groups_used(&dfgs));
-        let r = fifo_analysis(&dfgs, &l, &l, &Mapper::default()).unwrap();
+        let r = fifo_analysis(&dfgs, &l, &l, &MappingEngine::default()).unwrap();
         assert_eq!(r.total, 400); // Table VI: 10x10 -> 400 FIFOs
         assert!(r.unused > 0 && r.unused < r.total);
     }
@@ -90,7 +90,7 @@ mod tests {
     fn small_dfg_leaves_most_fifos_unused() {
         let dfgs = vec![benchmarks::benchmark("SOB")]; // 9 nodes
         let l = Layout::full(Grid::new(10, 10), crate::dfg::groups_used(&dfgs));
-        let r = fifo_analysis(&dfgs, &l, &l, &Mapper::default()).unwrap();
+        let r = fifo_analysis(&dfgs, &l, &l, &MappingEngine::default()).unwrap();
         assert!(r.unused as f64 / r.total as f64 > 0.5);
         assert!(r.area_impr_pct > 0.0);
         assert!(r.power_impr_pct > 0.0);
@@ -102,7 +102,7 @@ mod tests {
         // (FIFOs carry a larger power share).
         let dfgs = vec![benchmarks::benchmark("GB"), benchmarks::benchmark("SOB")];
         let l = Layout::full(Grid::new(10, 10), crate::dfg::groups_used(&dfgs));
-        let r = fifo_analysis(&dfgs, &l, &l, &Mapper::default()).unwrap();
+        let r = fifo_analysis(&dfgs, &l, &l, &MappingEngine::default()).unwrap();
         assert!(
             r.power_impr_pct > r.area_impr_pct,
             "power {} <= area {}",
@@ -115,6 +115,6 @@ mod tests {
     fn infeasible_returns_none() {
         let dfgs = vec![benchmarks::benchmark("SAD")];
         let l = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
-        assert!(fifo_analysis(&dfgs, &l, &l, &Mapper::default()).is_none());
+        assert!(fifo_analysis(&dfgs, &l, &l, &MappingEngine::default()).is_none());
     }
 }

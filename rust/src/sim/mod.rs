@@ -204,12 +204,16 @@ pub fn simulate(
 pub fn map_and_simulate(
     dfg: &Dfg,
     layout: &Layout,
-    mapper: &crate::Mapper,
+    engine: &crate::MappingEngine,
     n_instances: usize,
 ) -> Option<SimReport> {
-    let m = mapper.map(dfg, layout)?;
-    let bound = 64 * n_instances + 16 * dfg.num_nodes() + 4096;
-    Some(simulate(dfg, layout, &m, n_instances, bound))
+    let m = engine.map(dfg, layout).into_mapping()?;
+    Some(simulate(dfg, layout, &m, n_instances, sim_cycle_bound(dfg, n_instances)))
+}
+
+/// Default simulation cycle bound for `n_instances` of a DFG.
+pub fn sim_cycle_bound(dfg: &Dfg, n_instances: usize) -> usize {
+    64 * n_instances + 16 * dfg.num_nodes() + 4096
 }
 
 #[cfg(test)]
@@ -218,12 +222,12 @@ mod tests {
     use crate::cgra::Grid;
     use crate::dfg::benchmarks;
     use crate::ops::GroupSet;
-    use crate::Mapper;
+    use crate::MappingEngine;
 
     fn sim(name: &str, r: usize, c: usize, n: usize) -> (Dfg, SimReport) {
         let d = benchmarks::benchmark(name);
         let l = Layout::full(Grid::new(r, c), d.groups_used());
-        let rep = map_and_simulate(&d, &l, &Mapper::default(), n).expect("must map");
+        let rep = map_and_simulate(&d, &l, &MappingEngine::default(), n).expect("must map");
         (d, rep)
     }
 
@@ -257,8 +261,8 @@ mod tests {
     fn fill_latency_tracks_static_critical_path() {
         let d = benchmarks::benchmark("BOX");
         let l = Layout::full(Grid::new(8, 8), d.groups_used());
-        let mapper = Mapper::default();
-        let m = mapper.map(&d, &l).unwrap();
+        let engine = MappingEngine::default();
+        let m = engine.map(&d, &l).into_mapping().unwrap();
         let rep = simulate(&d, &l, &m, 20, 10_000);
         let static_lat = m.latency(&d);
         // simulated fill is within 2x of the static estimate and at
@@ -276,18 +280,26 @@ mod tests {
         // the paper's core latency/throughput claim, executably
         let dfgs = vec![benchmarks::benchmark("NMS")];
         let grid = Grid::new(9, 9);
-        let mapper = Mapper::default();
+        let engine = MappingEngine::default();
         let cost = crate::cost::CostModel::area();
         let cfg = crate::search::SearchConfig { l_test: 80, gsg_passes: 1, ..Default::default() };
         let r = crate::search::Explorer::new(grid)
             .dfgs(&dfgs)
-            .mapper(&mapper)
+            .engine(&engine)
             .cost(&cost)
             .config(cfg)
             .run()
             .unwrap();
-        let full = map_and_simulate(&dfgs[0], &r.full_layout, &mapper, 40).unwrap();
-        let het = map_and_simulate(&dfgs[0], &r.best_layout, &mapper, 40).unwrap();
+        let full = map_and_simulate(&dfgs[0], &r.full_layout, &engine, 40).unwrap();
+        // the best layout may only be warm-start reachable: simulate its
+        // witness mapping instead of re-mapping from scratch
+        let het = simulate(
+            &dfgs[0],
+            &r.best_layout,
+            &r.final_mappings[0],
+            40,
+            sim_cycle_bound(&dfgs[0], 40),
+        );
         assert_eq!(full.completed, 40);
         assert_eq!(het.completed, 40);
         // throughput preserved within noise
@@ -312,7 +324,7 @@ mod tests {
         let d = benchmarks::benchmark("SOB");
         let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute().with(crate::ops::OpGroup::Mem));
         let l = Layout::full(l.grid, d.groups_used());
-        let m = Mapper::default().map(&d, &l).unwrap();
+        let m = MappingEngine::default().map(&d, &l).into_mapping().unwrap();
         let rep = simulate(&d, &l, &m, 0, 100);
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.cycles, 0);

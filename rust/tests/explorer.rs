@@ -1,6 +1,7 @@
 //! Integration tests for the `Explorer` session API: builder defaults
 //! and validation, observer event-stream invariants, custom phase
-//! pipelines, and parity with the legacy `search::run` wrapper.
+//! pipelines, engine sharing, and parity with the legacy `search::run`
+//! and `.mapper(..)` compatibility surfaces.
 
 use helex::cgra::{Grid, Layout};
 use helex::cost::CostModel;
@@ -9,7 +10,7 @@ use helex::search::{
     self, ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchConfig, SearchCtx,
     SearchEvent, SearchPhase,
 };
-use helex::Mapper;
+use helex::{Mapper, MappingEngine};
 
 fn small_cfg() -> SearchConfig {
     SearchConfig { l_test: 120, l_fail: 2, gsg_passes: 1, ..Default::default() }
@@ -125,30 +126,70 @@ fn observer_event_stream_is_well_formed() {
 #[test]
 fn explorer_matches_legacy_run_wrapper() {
     // parity on two benchmark DFGs: the default pipeline must produce
-    // the same SearchResult as the legacy entry point (the mapper is
-    // deterministic per seed).
+    // the same SearchResult whether the engine is passed directly, built
+    // from the legacy `.mapper(..)` shim, or reached via `search::run`
+    // (the engine is deterministic per seed).
     let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
     let grid = Grid::new(7, 7);
+    let engine = MappingEngine::default();
     let mapper = Mapper::default();
     let cost = CostModel::area();
     let cfg = small_cfg();
 
     let a = Explorer::new(grid)
         .dfgs(&dfgs)
-        .mapper(&mapper)
+        .engine(&engine)
         .cost(&cost)
         .config(cfg.clone())
         .run()
         .unwrap();
     let b = search::run(&dfgs, grid, &mapper, &cost, &cfg, None).unwrap();
+    let c = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .mapper(&mapper)
+        .cost(&cost)
+        .config(cfg.clone())
+        .run()
+        .unwrap();
 
+    for other in [&b, &c] {
+        assert_eq!(a.best_cost, other.best_cost);
+        assert_eq!(a.best_layout, other.best_layout);
+        assert_eq!(a.initial_layout, other.initial_layout);
+        assert_eq!(a.min_insts, other.min_insts);
+        assert_eq!(a.stats.tested, other.stats.tested);
+        assert_eq!(a.stats.expanded, other.stats.expanded);
+        assert_eq!(a.stats.trace.len(), other.stats.trace.len());
+    }
+}
+
+#[test]
+fn shared_engine_cache_persists_across_sessions() {
+    // a shared engine accumulates feasibility-cache entries; a second
+    // session over the same DFGs reuses them and lands on the same result
+    let dfgs = vec![benchmarks::benchmark("SOB")];
+    let grid = Grid::new(6, 6);
+    let engine = MappingEngine::default();
+    let cost = CostModel::area();
+    let a = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .engine(&engine)
+        .cost(&cost)
+        .config(small_cfg())
+        .run()
+        .unwrap();
+    let filled = engine.cache_len();
+    assert!(filled > 0, "a session must populate the shared cache");
+    let b = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .engine(&engine)
+        .cost(&cost)
+        .config(small_cfg())
+        .run()
+        .unwrap();
     assert_eq!(a.best_cost, b.best_cost);
     assert_eq!(a.best_layout, b.best_layout);
-    assert_eq!(a.initial_layout, b.initial_layout);
-    assert_eq!(a.min_insts, b.min_insts);
-    assert_eq!(a.stats.tested, b.stats.tested);
-    assert_eq!(a.stats.expanded, b.stats.expanded);
-    assert_eq!(a.stats.trace.len(), b.stats.trace.len());
+    assert!(engine.cache_len() >= filled);
 }
 
 /// A do-nothing phase: exercises the pluggable-pipeline seam from

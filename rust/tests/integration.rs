@@ -7,7 +7,7 @@ use helex::cost::{reduction_pct, CostModel};
 use helex::dfg::{benchmarks, heta, min_group_instances};
 use helex::ops::OpGroup;
 use helex::search::{self, SearchConfig};
-use helex::Mapper;
+use helex::{Mapper, MappingEngine};
 
 fn tiny_cfg() -> ExperimentConfig {
     ExperimentConfig {
@@ -21,37 +21,34 @@ fn tiny_cfg() -> ExperimentConfig {
 
 #[test]
 fn all_20_benchmarks_map_on_their_paper_grids() {
-    let mapper = Mapper::default();
+    let engine = MappingEngine::default();
     // Table II set on 10x10 (the smallest size the paper says all map on)
     let dfgs = benchmarks::all();
     let full = Layout::full(Grid::new(10, 10), helex::dfg::groups_used(&dfgs));
     for d in &dfgs {
-        let m = mapper.map(d, &full);
-        assert!(m.is_some(), "{} must map on 10x10", d.name);
-        let m = m.unwrap();
+        let m = engine.map(d, &full);
+        assert!(m.is_mapped(), "{} must map on 10x10: {:?}", d.name, m.failure());
+        let m = m.into_mapping().unwrap();
         assert!(m.validate(d, &full).is_empty(), "{}", d.name);
     }
     // HETA set on 20x20
     let hd = heta::all();
     let big = Layout::full(Grid::new(20, 20), helex::dfg::groups_used(&hd));
     for d in &hd {
-        assert!(mapper.map(d, &big).is_some(), "{} must map on 20x20", d.name);
+        assert!(engine.map(d, &big).is_mapped(), "{} must map on 20x20", d.name);
     }
 }
 
 #[test]
 fn table_vii_sets_map_on_their_configs() {
-    let mapper = Mapper::default();
+    let engine = MappingEngine::default();
     for (id, _names, cfgs) in benchmarks::TABLE_VII {
         let dfgs = benchmarks::dfg_set(id);
         for (r, c) in cfgs {
             let full = Layout::full(Grid::new(r, c), helex::dfg::groups_used(&dfgs));
-            for d in &dfgs {
-                assert!(
-                    mapper.map(d, &full).is_some(),
-                    "{id}: {} must map on {r}x{c}",
-                    d.name
-                );
+            match engine.map_all(&dfgs, &full) {
+                Ok(_) => {}
+                Err(fail) => panic!("{id}: {fail} on {r}x{c}"),
             }
         }
     }
@@ -65,7 +62,7 @@ fn search_monotonically_dominates_baselines_on_small_case() {
     let grid = Grid::new(10, 10);
     let mut co = Coordinator::new(tiny_cfg());
     let full = Layout::full(grid, helex::dfg::groups_used(&dfgs));
-    let hotspot = helex::baselines::revamp::run(&dfgs, &full, &co.mapper).unwrap();
+    let hotspot = helex::baselines::revamp::run(&dfgs, &full, &co.engine).unwrap();
     let r = co.run_helex(&dfgs, grid).unwrap();
     let helex_red = helex::metrics::total_reduction_pct(&r.full_layout, &r.best_layout);
     let revamp_red = helex::metrics::total_reduction_pct(&full, &hotspot.layout);
@@ -157,7 +154,7 @@ fn latency_ratios_bounded() {
     let r = co.run_helex(&dfgs, Grid::new(9, 9)).unwrap();
     for (di, d) in dfgs.iter().enumerate() {
         let ratio = helex::metrics::latency_ratio_with_witness(
-            &co.mapper,
+            &co.engine,
             d,
             &r.full_layout,
             &r.final_mappings[di],

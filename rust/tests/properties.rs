@@ -14,11 +14,12 @@ use helex::cgra::{Grid, Layout};
 use helex::cost::CostModel;
 use helex::dfg::builder::DfgSpec;
 use helex::dfg::Dfg;
+use helex::mapper::{MapOutcome, MapperConfig};
 use helex::ops::{GroupSet, Op, OpGroup};
 use helex::search::SearchConfig;
 use helex::util::prop::{forall, GenCtx};
 use helex::util::rng::Rng;
-use helex::Mapper;
+use helex::{Mapper, MappingEngine};
 
 /// Generate a random-but-valid DfgSpec scaled by `size`.
 fn arb_spec(g: &mut GenCtx, tag: u64) -> DfgSpec {
@@ -90,7 +91,8 @@ fn prop_mapper_output_always_valid() {
         let dfg = spec.build();
         let side = 5 + g.rng.below(4);
         let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
-        if let Some(m) = Mapper::default().map(&dfg, &layout) {
+        if let MapOutcome::Mapped { mapping: m, .. } = MappingEngine::default().map(&dfg, &layout)
+        {
             let errs = m.validate(&dfg, &layout);
             if !errs.is_empty() {
                 return Err(format!("{}: {errs:?}", dfg.name));
@@ -122,7 +124,8 @@ fn prop_mapper_valid_on_random_heterogeneous_layouts() {
                 }
             }
         }
-        if let Some(m) = Mapper::default().map(&dfg, &layout) {
+        if let MapOutcome::Mapped { mapping: m, .. } = MappingEngine::default().map(&dfg, &layout)
+        {
             let errs = m.validate(&dfg, &layout);
             if !errs.is_empty() {
                 return Err(format!("{errs:?}"));
@@ -240,8 +243,8 @@ fn prop_mapping_determinism() {
         let spec = arb_spec(g, tag);
         let dfg = spec.build();
         let layout = Layout::full(Grid::new(7, 7), dfg.groups_used());
-        let m1 = Mapper::default().map(&dfg, &layout);
-        let m2 = Mapper::default().map(&dfg, &layout);
+        let m1 = MappingEngine::default().map(&dfg, &layout).into_mapping();
+        let m2 = MappingEngine::default().map(&dfg, &layout).into_mapping();
         match (m1, m2) {
             (Some(a), Some(b)) => {
                 if a.node_cell != b.node_cell || a.edge_paths != b.edge_paths {
@@ -250,6 +253,57 @@ fn prop_mapping_determinism() {
             }
             (None, None) => {}
             _ => return Err("nondeterministic success".into()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_start_remap_parity() {
+    // remap_from must be feasibility-equivalent to from-scratch mapping
+    // across random support removals: whenever it succeeds the result
+    // validates cleanly, and it succeeds at least whenever the cold path
+    // does (the engine falls back internally).
+    forall("warm_start_parity", 25, 0xAB, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let full = Layout::full(grid, dfg.groups_used());
+        let engine = MappingEngine::default();
+        let MapOutcome::Mapped { mapping: witness, .. } = engine.map(&dfg, &full) else {
+            return Ok(()); // unmappable random instance: nothing to warm-start
+        };
+        // random support removals (some displace witness nodes)
+        let mut layout = full.clone();
+        for c in grid.compute_cells().collect::<Vec<_>>() {
+            for grp in layout.support(c).iter().collect::<Vec<_>>() {
+                if g.rng.chance(0.25) {
+                    layout.set_support(c, layout.support(c).without(grp));
+                }
+            }
+        }
+        let warm = engine.remap_from(&witness, &dfg, &layout);
+        let cold = MappingEngine::new(MapperConfig {
+            feasibility_cache: false,
+            ..Default::default()
+        })
+        .map(&dfg, &layout);
+        match (&warm, &cold) {
+            (MapOutcome::Mapped { mapping, stats }, _) => {
+                let errs = mapping.validate(&dfg, &layout);
+                if !errs.is_empty() {
+                    return Err(format!(
+                        "warm remap invalid (warm path: {}): {errs:?}",
+                        stats.warm
+                    ));
+                }
+            }
+            (MapOutcome::Failed { .. }, MapOutcome::Mapped { .. }) => {
+                return Err("remap_from failed where from-scratch succeeds".into());
+            }
+            (MapOutcome::Failed { .. }, MapOutcome::Failed { .. }) => {}
         }
         Ok(())
     });

@@ -103,10 +103,10 @@ fn heatmap_artifact_matches_native_heatmap() {
     ];
     let grid = Grid::new(8, 8);
     let full = Layout::full(grid, helex::dfg::groups_used(&dfgs));
-    let mapper = helex::Mapper::default();
+    let engine = helex::MappingEngine::default();
     let mut usage = Vec::new();
     for d in &dfgs {
-        let m = mapper.map(d, &full).unwrap();
+        let m = engine.map(d, &full).into_mapping().unwrap();
         let mut cells = vec![[0f32; NUM_GROUPS]; grid.num_cells()];
         for (n, op) in d.nodes.iter().enumerate() {
             cells[m.node_cell[n] as usize][op.group().index()] = 1.0;
