@@ -3,67 +3,104 @@
 //! Runs the complete pipeline on the paper's primary experiment — the 12
 //! Table II DFGs against the target CGRA sizes — through all system
 //! layers: DFG generation, RodMap-like mapping, heatmap construction,
-//! OPSG + GSG branch-and-bound with XLA-batched scoring via PJRT, cost
-//! models, posteriori FIFO pruning — and reports the paper's headline
-//! metrics (instance/area/power reduction, gap to theoretical minimum).
+//! OPSG + GSG branch-and-bound, cost models, posteriori FIFO pruning.
+//! The per-size runs execute as one parallel batch on the
+//! `ExplorationService` worker pool (one job per size, each worker
+//! owning its own mapping engine), and the driver folds the completed
+//! jobs into the paper's headline metrics (instance/area/power
+//! reduction, gap to theoretical minimum).
 //!
 //! ```sh
-//! cargo run --release --example e2e_full_repro -- --quick   # 3 sizes
-//! cargo run --release --example e2e_full_repro              # all 9 sizes
+//! cargo run --release --example e2e_full_repro -- --quick        # 3 sizes
+//! cargo run --release --example e2e_full_repro                   # all 9 sizes
+//! cargo run --release --example e2e_full_repro -- --jobs 4       # pin workers
 //! ```
 //!
 //! The run is recorded in EXPERIMENTS.md.
 
 use helex::cgra::Grid;
-use helex::coordinator::{Coordinator, ExperimentConfig};
+use helex::coordinator::ExperimentConfig;
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
 use helex::search::posteriori;
+use helex::service::{ExplorationService, JobSpec, ServiceConfig, ServiceEvent};
 use helex::util::Stopwatch;
+use helex::CostModel;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let jobs: usize = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
     let sizes: Vec<(usize, usize)> = if quick {
         vec![(10, 10), (11, 13), (12, 12)]
     } else {
         benchmarks::PAPER_SIZES.to_vec()
     };
     let dfgs = benchmarks::all();
-    println!("== HeLEx end-to-end reproduction ==");
-    println!("12 DFGs (Table II) x {} CGRA sizes\n", sizes.len());
-
-    let mut co = Coordinator::new(ExperimentConfig {
+    let cfg = ExperimentConfig {
         l_test_base: if quick { 300 } else { 600 },
-        verbose: true,
         ..Default::default()
-    });
-    if let Some(err) = co.self_check() {
-        println!("XLA/native scorer self-check: max rel err {err:.2e} ✓");
-    } else {
-        println!("(XLA scorer unavailable — native scoring; run `make artifacts`)");
-    }
+    };
+    let service = ExplorationService::new(ServiceConfig { jobs, live_trace: false });
+    println!("== HeLEx end-to-end reproduction ==");
+    println!(
+        "12 DFGs (Table II) x {} CGRA sizes, {} worker(s)\n",
+        sizes.len(),
+        service.workers().min(sizes.len())
+    );
+
+    // one job per size; seeds derive from job content, so the metrics
+    // below are identical for any worker count
+    let specs: Vec<JobSpec> = sizes
+        .iter()
+        .map(|&(r, c)| {
+            let grid = Grid::new(r, c);
+            JobSpec {
+                search: cfg.search_config(grid),
+                mapper: cfg.mapper.clone(),
+                seed: cfg.mapper.seed,
+                ..JobSpec::new("table2", dfgs.clone(), grid)
+            }
+        })
+        .collect();
 
     let sw = Stopwatch::start();
+    let mut progress = |ev: &ServiceEvent| {
+        if let ServiceEvent::Finished { describe, best_cost, secs, done, total, .. } = ev {
+            match best_cost {
+                Some(c) => println!("[{done}/{total}] {describe}: best cost {c:.1} ({secs:.1}s)"),
+                None => println!("[{done}/{total}] {describe}: infeasible"),
+            }
+        }
+    };
+    let results = service.run_batch(specs, Some(&mut progress));
+    println!();
+
+    let (area, power) = (CostModel::area(), CostModel::power());
     let (mut s_inst, mut s_area, mut s_pow, mut s_gap, mut n) = (0.0, 0.0, 0.0, 0.0, 0);
     let mut heatmap_starts = 0;
-    for (r, c) in sizes.iter().copied() {
-        let grid = Grid::new(r, c);
-        let Some(res) = co.run_helex(&dfgs, grid) else {
+    for ((r, c), job) in sizes.iter().copied().zip(&results) {
+        let Some(res) = job.outcome.search_result() else {
             println!("{r}x{c}: infeasible (should not happen at paper sizes)");
             continue;
         };
         let inst_red = helex::metrics::total_reduction_pct(&res.full_layout, &res.best_layout);
         let a_red = reduction_pct(
-            co.area.layout_cost(&res.full_layout),
-            co.area.layout_cost(&res.best_layout),
+            area.layout_cost(&res.full_layout),
+            area.layout_cost(&res.best_layout),
         );
         let p_red = reduction_pct(
-            co.power.layout_cost(&res.full_layout),
-            co.power.layout_cost(&res.best_layout),
+            power.layout_cost(&res.full_layout),
+            power.layout_cost(&res.best_layout),
         );
         // gap to theoretical minimum (Fig 6)
-        let full_cost = co.area.layout_cost(&res.full_layout);
-        let tmin = co.area.theoretical_min_cost(&res.full_layout, &res.min_insts);
+        let full_cost = area.layout_cost(&res.full_layout);
+        let tmin = area.theoretical_min_cost(&res.full_layout, &res.min_insts);
         let gap = 100.0 * (res.best_cost - tmin) / (full_cost - tmin);
         // posteriori FIFO pruning (Table VI), from the search witnesses
         let fifo = posteriori::fifo_analysis_with(
@@ -72,7 +109,7 @@ fn main() {
             &res.full_layout,
         );
         println!(
-            "{r}x{c}{}: insts -{inst_red:.1}%  area -{a_red:.1}%  power -{p_red:.1}%  gap-to-min {gap:.1}%  S_tst {}  {}s  (+{:.1}%A from {} unused FIFOs)",
+            "{r}x{c}{}: insts -{inst_red:.1}%  area -{a_red:.1}%  power -{p_red:.1}%  gap-to-min {gap:.1}%  S_tst {}  {}s search  (+{:.1}%A from {} unused FIFOs)",
             if res.stats.heatmap_used { "" } else { "*" },
             res.stats.tested,
             helex::util::fmt_f(res.stats.t_total(), 1),
@@ -95,8 +132,14 @@ fn main() {
     println!("avg power reduction    : {:.1}%  (paper: 52.3%)", s_pow / n);
     println!("avg gap to theor. min  : {:.1}%  (paper: 6.2%)", s_gap / n);
     println!("heatmap-start sizes    : {heatmap_starts}/{} (paper: 4/9)", n as usize);
-    println!("total wall time        : {:.1}s", sw.secs());
-    if let Some(s) = co.scorer.as_ref() {
-        println!("PJRT scorer executions : {}", s.calls);
-    }
+    println!(
+        "search time (sum)      : {:.1}s across jobs, {:.1}s wall on {} worker(s)",
+        results
+            .iter()
+            .filter_map(|j| j.outcome.search_result())
+            .map(|r| r.stats.t_total())
+            .sum::<f64>(),
+        sw.secs(),
+        service.workers().min(results.len().max(1))
+    );
 }

@@ -1,27 +1,51 @@
 //! Size-sweep example (paper Section IV-H, Fig 9): find the best CGRA
-//! size for a DFG set by running HeLEx across a size range.
+//! size for a DFG set by running HeLEx across a size range — as one
+//! parallel batch on the `ExplorationService` worker pool (one job per
+//! size, all cores by default).
 //!
 //! ```sh
 //! cargo run --release --example size_sweep
 //! ```
 
 use helex::cgra::Grid;
-use helex::coordinator::{Coordinator, ExperimentConfig};
+use helex::coordinator::ExperimentConfig;
 use helex::cost::reduction_pct;
 use helex::dfg::benchmarks;
+use helex::service::{ExplorationService, JobSpec};
+use helex::CostModel;
 
 fn main() {
     let dfgs = benchmarks::dfg_set("S4");
-    println!("size sweep for S4 (image-processing set), 7x7 .. 10x10\n");
-    let mut co = Coordinator::new(ExperimentConfig {
-        l_test_base: 250,
-        ..Default::default()
-    });
+    let cfg = ExperimentConfig { l_test_base: 250, ..Default::default() };
+    let sizes = [(7, 7), (7, 8), (8, 8), (9, 9), (10, 10)];
+    let service = ExplorationService::default();
+    println!(
+        "size sweep for S4 (image-processing set), {} sizes on {} worker(s)\n",
+        sizes.len(),
+        service.workers().min(sizes.len())
+    );
+
+    // one job per candidate size; the service runs them concurrently
+    let specs: Vec<JobSpec> = sizes
+        .iter()
+        .map(|&(r, c)| {
+            let grid = Grid::new(r, c);
+            JobSpec {
+                search: cfg.search_config(grid),
+                mapper: cfg.mapper.clone(),
+                seed: cfg.mapper.seed,
+                ..JobSpec::new("S4", dfgs.clone(), grid)
+            }
+        })
+        .collect();
+    let results = service.run_batch(specs, None);
+
+    let area = CostModel::area();
     let mut best: Option<((usize, usize), f64)> = None;
-    for (r, c) in [(7, 7), (7, 8), (8, 8), (9, 9), (10, 10)] {
-        match co.run_helex(&dfgs, Grid::new(r, c)) {
+    for ((r, c), job) in sizes.iter().copied().zip(&results) {
+        match job.outcome.search_result() {
             Some(res) => {
-                let full = co.area.layout_cost(&res.full_layout);
+                let full = area.layout_cost(&res.full_layout);
                 println!(
                     "{r}x{c}: final cost {:>7.1}  (full {:>7.1}, improvement {:>5.1}%)",
                     res.best_cost,
@@ -40,6 +64,6 @@ fn main() {
     println!(
         "paper's observation holds: the best size is the smallest that maps,\n\
          because each extra cell adds {:.1} base cost that removals must repay.",
-        co.area.components.empty_cell + co.area.components.fifos
+        area.components.empty_cell + area.components.fifos
     );
 }

@@ -7,7 +7,8 @@
 //! cargo bench --bench paper_benches -- fig3     # filter
 //! ```
 
-use helex::coordinator::{experiments, Coordinator, ExperimentConfig};
+use helex::coordinator::{experiments, suite, Coordinator, ExperimentConfig};
+use helex::service::ExplorationService;
 use helex::util::bench::Harness;
 
 fn co() -> Coordinator {
@@ -34,6 +35,37 @@ fn main() {
             // suppress experiment stdout: route results to a sink table
             experiments::run_experiment(&mut c, exp, true).expect("experiment runs");
         });
+    }
+
+    // Suite throughput: jobs/sec at 1, 2 and 4 workers on the fig9
+    // sweep (5 independent jobs). A fresh service per measurement keeps
+    // the run cache from hiding work, so the numbers track the worker
+    // pool's real speedup in the perf trajectory.
+    println!("\n== suite throughput (fig9 sweep, 5 jobs) ==");
+    for workers in [1usize, 2, 4] {
+        let name = format!("suite::fig9@{workers}w");
+        let mut unique_jobs = 0usize;
+        h.bench_once(&name, || {
+            let cfg = ExperimentConfig {
+                l_test_base: 120,
+                gsg_passes: 1,
+                ..Default::default()
+            };
+            let defs = experiments::find("fig9").expect("fig9 exists");
+            let service = ExplorationService::with_jobs(workers);
+            let tables = suite::run_suite(&cfg, &defs, true, &service, None);
+            unique_jobs = service.cache_len();
+            tables
+        });
+        match h.results.last() {
+            Some(r) if r.name == name && unique_jobs > 0 => {
+                println!(
+                    "    -> {:.2} jobs/s over {unique_jobs} unique jobs",
+                    unique_jobs as f64 / (r.median_ns / 1e9)
+                );
+            }
+            _ => {}
+        }
     }
     println!("\n{} experiments benchmarked", h.results.len());
 }

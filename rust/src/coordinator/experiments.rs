@@ -1,50 +1,30 @@
-//! Regeneration of every table and figure in the paper's evaluation
-//! (Section IV). Each function prints the paper-shaped table and writes a
-//! CSV; `run_experiment` dispatches by name ("fig3".."fig11",
-//! "table4".."table8", "all").
+//! Every table and figure of the paper's evaluation (Section IV),
+//! expressed as *data*: each is an [`ExperimentDef`] pairing a set of
+//! [`JobSpec`]s with a fold from completed runs into its table(s). The
+//! definitions all execute through the one generic
+//! [`suite::run_suite`] path on the [`ExplorationService`] worker pool —
+//! there is no per-figure driver code anymore, and shared sweeps (the
+//! "table2" runs feeding Figs 3–6, Table IV, Table VI and Fig 10)
+//! deduplicate by content fingerprint instead of by hand-threaded cache
+//! arguments.
 //!
 //! Absolute wall-times differ from the paper (hours on an i9 at
 //! `L_test`=2000 vs minutes here at bench-scale budgets) — Fig 5 shows
 //! the reductions saturate early, so bench-scale budgets preserve the
 //! result *shape*, which is what EXPERIMENTS.md compares.
 
-use super::report::{emit, f, pct, ratio, sci};
-use super::Coordinator;
+use super::report::{f, pct, ratio, sci};
+use super::suite::{self, ExperimentDef, FoldCtx};
+use super::{Coordinator, ExperimentConfig};
 use crate::baselines::{fig11_metrics, heta as heta_bl, revamp};
 use crate::cgra::{Grid, Layout};
 use crate::cost::reduction_pct;
 use crate::dfg::{benchmarks, heta, Dfg};
 use crate::ops::{COMPUTE_GROUPS, NUM_GROUPS};
 use crate::search::{posteriori, GsgPhase, HeatmapPhase, OpsgPhase, SearchResult};
+use crate::service::{ExplorationService, JobSpec, Objective, ServiceConfig, ServiceEvent};
 use crate::util::table::Table;
 use std::collections::HashMap;
-
-/// Cache of HeLEx runs keyed by (set label, grid), so `exp all` does not
-/// repeat multi-minute searches.
-#[derive(Default)]
-pub struct RunCache {
-    runs: HashMap<(String, (usize, usize)), Option<SearchResult>>,
-}
-
-impl RunCache {
-    pub fn run(
-        &mut self,
-        co: &mut Coordinator,
-        label: &str,
-        dfgs: &[Dfg],
-        size: (usize, usize),
-    ) -> Option<SearchResult> {
-        let key = (label.to_string(), size);
-        if !self.runs.contains_key(&key) {
-            if co.cfg.verbose {
-                eprintln!("[helex] running {label} @ {}x{}...", size.0, size.1);
-            }
-            let r = co.run_helex(dfgs, Grid::new(size.0, size.1));
-            self.runs.insert(key.clone(), r);
-        }
-        self.runs[&key].clone()
-    }
-}
 
 /// The sizes used for the Table II experiments: all 9 paper sizes in full
 /// mode, a 3-size subset in quick mode.
@@ -56,10 +36,92 @@ pub fn sizes(quick: bool) -> Vec<(usize, usize)> {
     }
 }
 
+/// One spec with the experiment configuration's search/mapper settings
+/// for its grid and the area objective (the search always optimises
+/// area; folds evaluate power on the result, as the paper does).
+fn spec(cfg: &ExperimentConfig, label: &str, dfgs: Vec<Dfg>, size: (usize, usize)) -> JobSpec {
+    let grid = Grid::new(size.0, size.1);
+    JobSpec {
+        label: label.to_string(),
+        dfgs,
+        grid,
+        objective: Objective::Area,
+        search: cfg.search_config(grid),
+        mapper: cfg.mapper.clone(),
+        seed: cfg.mapper.seed,
+    }
+}
+
+/// The primary sweep: the 12 Table II DFGs across the paper sizes.
+fn table2_specs(cfg: &ExperimentConfig, quick: bool) -> Vec<JobSpec> {
+    sizes(quick)
+        .into_iter()
+        .map(|size| spec(cfg, "table2", benchmarks::all(), size))
+        .collect()
+}
+
+fn fig5_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    vec![spec(cfg, "table2", benchmarks::all(), (10, 10))]
+}
+
+fn table5_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    // 8x8 carries the S4 image set (12 Table II DFGs do not fit 8x8);
+    // 12x12 carries the full Table II set, as in Section IV-D.
+    vec![
+        spec(cfg, "table5_8x8", benchmarks::dfg_set("S4"), (8, 8)),
+        spec(cfg, "table5_12x12", benchmarks::all(), (12, 12)),
+    ]
+}
+
+fn sets_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    let mut out = Vec::new();
+    for (id, _names, cfgs) in benchmarks::TABLE_VII {
+        for size in cfgs {
+            out.push(spec(cfg, &format!("set_{id}"), benchmarks::dfg_set(id), size));
+        }
+    }
+    out
+}
+
+fn table8_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    let mut out = Vec::new();
+    for size in [(10, 10), (10, 12)] {
+        out.push(spec(cfg, "set_S3_gsg", benchmarks::dfg_set("S3"), size));
+        // noGSG: disable GSG *and* Arith-targeting per Section IV-G
+        let mut nogsg = spec(cfg, "set_S3_nogsg", benchmarks::dfg_set("S3"), size);
+        nogsg.search.run_gsg = false;
+        nogsg.search.opsg_skip_arith = true;
+        out.push(nogsg);
+    }
+    out
+}
+
+const FIG9_SWEEP: [(usize, usize); 5] = [(7, 7), (7, 8), (8, 8), (9, 9), (10, 10)];
+
+fn fig9_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    FIG9_SWEEP
+        .into_iter()
+        .map(|size| spec(cfg, "set_S4_sweep", benchmarks::dfg_set("S4"), size))
+        .collect()
+}
+
+fn fig11_size(quick: bool) -> (usize, usize) {
+    if quick {
+        (14, 14)
+    } else {
+        (20, 20)
+    }
+}
+
+fn fig11_specs(cfg: &ExperimentConfig, quick: bool) -> Vec<JobSpec> {
+    vec![spec(cfg, "heta_cmp", heta::all(), fig11_size(quick))]
+}
+
 /// Instance counts after each default-pipeline phase, falling back to
 /// the previous stage's counts for phases that did not run.
-fn phase_counts(r: &SearchResult) -> ([usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS])
-{
+fn phase_counts(
+    r: &SearchResult,
+) -> ([usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS], [usize; NUM_GROUPS]) {
     let full = r.stats.insts_full;
     let hm = r.stats.insts_after(HeatmapPhase::NAME).unwrap_or(full);
     let op = r.stats.insts_after(OpsgPhase::NAME).unwrap_or(hm);
@@ -69,8 +131,7 @@ fn phase_counts(r: &SearchResult) -> ([usize; NUM_GROUPS], [usize; NUM_GROUPS], 
 
 /// Fig 3: per-group instance reduction with heatmap/OPSG/GSG breakdown,
 /// averaged over CGRA sizes, on the 12 Table II DFGs.
-pub fn fig3(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_fig3(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 3: reduction in number of operation group instances (avg over sizes)",
         &["Group", "Full insts", "Final insts", "Red %", "by heatmap %", "by OPSG %", "by GSG %"],
@@ -80,8 +141,8 @@ pub fn fig3(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
     let mut acc_opsg = [0usize; NUM_GROUPS];
     let mut acc_gsg = [0usize; NUM_GROUPS];
     for size in sizes(quick) {
-        if let Some(r) = cache.run(co, "table2", &dfgs, size) {
-            let (full, hm, op, gs) = phase_counts(&r);
+        if let Some(r) = ctx.runs.get("table2", size) {
+            let (full, hm, op, gs) = phase_counts(r);
             for i in 0..NUM_GROUPS {
                 acc_full[i] += full[i];
                 acc_hm[i] += hm[i];
@@ -131,31 +192,28 @@ pub fn fig3(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
         pct(if removed > 0.0 { 100.0 * tot_removed_op as f64 / removed } else { 0.0 }),
         pct(if removed > 0.0 { 100.0 * tot_removed_gs as f64 / removed } else { 0.0 }),
     ]);
-    t
+    vec![t]
 }
 
 /// Fig 4: area and power reduction per CGRA size.
-pub fn fig4(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_fig4(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 4: improvement in area (A) and power (P) per CGRA size",
         &["Size", "Initial", "A red %", "P red %", "A by search %", "P by search %"],
     );
     let (mut sa, mut sp, mut n) = (0.0, 0.0, 0);
     for size in sizes(quick) {
-        let Some(r) = cache.run(co, "table2", &dfgs, size) else {
+        let Some(r) = ctx.runs.get("table2", size) else {
             t.row(vec![format!("{}x{}", size.0, size.1), "infeasible".into(), "-".into(),
                        "-".into(), "-".into(), "-".into()]);
             continue;
         };
-        let area = &co.area;
-        let power = &co.power;
-        let a_full = area.layout_cost(&r.full_layout);
-        let a_init = area.layout_cost(&r.initial_layout);
-        let a_best = area.layout_cost(&r.best_layout);
-        let p_full = power.layout_cost(&r.full_layout);
-        let p_init = power.layout_cost(&r.initial_layout);
-        let p_best = power.layout_cost(&r.best_layout);
+        let a_full = ctx.area.layout_cost(&r.full_layout);
+        let a_init = ctx.area.layout_cost(&r.initial_layout);
+        let a_best = ctx.area.layout_cost(&r.best_layout);
+        let p_full = ctx.power.layout_cost(&r.full_layout);
+        let p_init = ctx.power.layout_cost(&r.initial_layout);
+        let p_best = ctx.power.layout_cost(&r.best_layout);
         let ra = reduction_pct(a_full, a_best);
         let rp = reduction_pct(p_full, p_best);
         sa += ra;
@@ -180,18 +238,17 @@ pub fn fig4(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
             "".to_string(),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Table IV: subproblem counts and phase times per size.
-pub fn table4(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_table4(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Table IV: subproblems and search time (seconds; paper reports hours at L_test=2000)",
         &["Size", "S_exp", "S_tst", "T_opsg(s)", "T_gsg(s)", "T_total(s)"],
     );
     for size in sizes(quick) {
-        let Some(r) = cache.run(co, "table2", &dfgs, size) else { continue };
+        let Some(r) = ctx.runs.get("table2", size) else { continue };
         let star = if r.stats.heatmap_used { "" } else { "*" };
         t.row(vec![
             format!("{}x{}{star}", size.0, size.1),
@@ -202,18 +259,17 @@ pub fn table4(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table 
             f(r.stats.t_total(), 2),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Fig 5: convergence trace (cost of best layout vs time and iteration)
 /// at 10×10.
-pub fn fig5(co: &mut Coordinator, cache: &mut RunCache) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_fig5(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 5: cost of best layout over the search (10x10)",
         &["Phase", "secs", "tested", "best cost"],
     );
-    if let Some(r) = cache.run(co, "table2", &dfgs, (10, 10)) {
+    if let Some(r) = ctx.runs.get("table2", (10, 10)) {
         for p in &r.stats.trace {
             t.row(vec![
                 p.phase.clone(),
@@ -244,29 +300,27 @@ pub fn fig5(co: &mut Coordinator, cache: &mut RunCache) -> Table {
             }
         }
     }
-    t
+    vec![t]
 }
 
 /// Fig 6: percentage of area/power reduction remaining to the
 /// theoretical-minimum layout.
-pub fn fig6(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_fig6(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 6: reduction remaining to theoretical minimum (%Rm)",
         &["Size", "A achieved %", "A remaining %", "P achieved %", "P remaining %"],
     );
     let (mut ra, mut rp, mut n) = (0.0, 0.0, 0);
     for size in sizes(quick) {
-        let Some(r) = cache.run(co, "table2", &dfgs, size) else { continue };
+        let Some(r) = ctx.runs.get("table2", size) else { continue };
         let calc = |m: &crate::cost::CostModel| {
             let full = m.layout_cost(&r.full_layout);
             let best = m.layout_cost(&r.best_layout);
             let tmin = m.theoretical_min_cost(&r.full_layout, &r.min_insts);
-            let achieved = 100.0 * (full - best) / (full - tmin);
-            achieved
+            100.0 * (full - best) / (full - tmin)
         };
-        let a = calc(&co.area);
-        let p = calc(&co.power);
+        let a = calc(&ctx.area);
+        let p = calc(&ctx.power);
         ra += a;
         rp += p;
         n += 1;
@@ -287,25 +341,19 @@ pub fn fig6(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
             pct(100.0 - rp / n as f64),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Table V: cost-model validation against the independent synthesis
 /// estimator, on complete 8×8 and 12×12 CGRAs (full + HeLEx layouts).
-pub fn table5(co: &mut Coordinator, cache: &mut RunCache) -> Table {
+fn fold_table5(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Table V: validation of cost model vs synthesis (compute + I/O cells)",
         &["Config", "Synth area", "Synth power", "Est area", "Est power", "dA %", "dP %"],
     );
-    // 8x8 carries the S4 image set (12 Table II DFGs do not fit 8x8);
-    // 12x12 carries the full Table II set, as in Section IV-D.
-    let cases: Vec<(&str, Vec<Dfg>, (usize, usize))> = vec![
-        ("8x8", benchmarks::dfg_set("S4"), (8, 8)),
-        ("12x12", benchmarks::all(), (12, 12)),
-    ];
-    for (name, dfgs, size) in cases {
+    for (name, size) in [("8x8", (8, 8)), ("12x12", (12, 12))] {
         let label = format!("table5_{name}");
-        let Some(r) = cache.run(co, &label, &dfgs, size) else { continue };
+        let Some(r) = ctx.runs.get(&label, size) else { continue };
         for (kind, layout) in [("Full", &r.full_layout), ("Hetero", &r.best_layout)] {
             let s = crate::cost::synth::synthesize(layout);
             let e = crate::cost::synth::helex_estimate(layout);
@@ -333,18 +381,17 @@ pub fn table5(co: &mut Coordinator, cache: &mut RunCache) -> Table {
             "".into(),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Table VI: posteriori FIFO pruning per size.
-pub fn table6(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
-    let dfgs = benchmarks::all();
+fn fold_table6(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Table VI: impact of removing excess memory resources (FIFOs)",
         &["Size", "Unused FIFOs", "Total", "A impr %", "P impr %"],
     );
     for size in sizes(quick) {
-        let Some(r) = cache.run(co, "table2", &dfgs, size) else { continue };
+        let Some(r) = ctx.runs.get("table2", size) else { continue };
         let rep =
             posteriori::fifo_analysis_with(&r.final_mappings, &r.best_layout, &r.full_layout);
         t.row(vec![
@@ -355,12 +402,12 @@ pub fn table6(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table 
             pct(rep.power_impr_pct),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Figs 7+8: DFG sets S1–S6 — per-group reduction and area/power
 /// improvement per configuration.
-pub fn fig7_fig8(co: &mut Coordinator, cache: &mut RunCache) -> (Table, Table) {
+fn fold_fig7_fig8(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
     let mut t7 = Table::new(
         "Fig 7: reduction in group instances across DFG sets (per group, avg over configs)",
         &["Group", "Full insts", "Final insts", "Red %"],
@@ -373,10 +420,9 @@ pub fn fig7_fig8(co: &mut Coordinator, cache: &mut RunCache) -> (Table, Table) {
     let mut acc_final = [0usize; NUM_GROUPS];
     let (mut sa, mut sp, mut n) = (0.0, 0.0, 0usize);
     for (id, _names, cfgs) in benchmarks::TABLE_VII {
-        let dfgs = benchmarks::dfg_set(id);
         for size in cfgs {
             let label = format!("set_{id}");
-            let Some(r) = cache.run(co, &label, &dfgs, size) else {
+            let Some(r) = ctx.runs.get(&label, size) else {
                 t8.row(vec![format!("{id} {}x{}", size.0, size.1), "infeasible".into(),
                             "-".into(), "-".into()]);
                 continue;
@@ -387,12 +433,12 @@ pub fn fig7_fig8(co: &mut Coordinator, cache: &mut RunCache) -> (Table, Table) {
                 acc_final[i] += fin[i];
             }
             let ra = reduction_pct(
-                co.area.layout_cost(&r.full_layout),
-                co.area.layout_cost(&r.best_layout),
+                ctx.area.layout_cost(&r.full_layout),
+                ctx.area.layout_cost(&r.best_layout),
             );
             let rp = reduction_pct(
-                co.power.layout_cost(&r.full_layout),
-                co.power.layout_cost(&r.best_layout),
+                ctx.power.layout_cost(&r.full_layout),
+                ctx.power.layout_cost(&r.best_layout),
             );
             sa += ra;
             sp += rp;
@@ -431,25 +477,18 @@ pub fn fig7_fig8(co: &mut Coordinator, cache: &mut RunCache) -> (Table, Table) {
     if n > 0 {
         t8.row(vec!["AVG".into(), "".into(), pct(sa / n as f64), pct(sp / n as f64)]);
     }
-    (t7, t8)
+    vec![t7, t8]
 }
 
 /// Table VIII: noGSG vs full HeLEx on the Arith/Mult-only S3 set.
-pub fn table8(co: &mut Coordinator, cache: &mut RunCache) -> Table {
-    let dfgs = benchmarks::dfg_set("S3");
+fn fold_table8(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Table VIII: fraction of full reductions achieved without GSG (S3)",
         &["Config", "noGSG/full area", "noGSG/full power"],
     );
     for size in [(10, 10), (10, 12)] {
-        let Some(full_run) = cache.run(co, "set_S3_gsg", &dfgs, size) else { continue };
-        // noGSG: disable GSG *and* Arith-targeting per Section IV-G
-        let saved = (co.cfg.run_gsg, co.cfg.opsg_skip_arith);
-        co.cfg.run_gsg = false;
-        co.cfg.opsg_skip_arith = true;
-        let nogsg_run = cache.run(co, "set_S3_nogsg", &dfgs, size);
-        (co.cfg.run_gsg, co.cfg.opsg_skip_arith) = saved;
-        let Some(ng) = nogsg_run else { continue };
+        let Some(full_run) = ctx.runs.get("set_S3_gsg", size) else { continue };
+        let Some(ng) = ctx.runs.get("set_S3_nogsg", size) else { continue };
         let frac = |m: &crate::cost::CostModel, a: &SearchResult, b: &SearchResult| {
             let fa = m.layout_cost(&a.full_layout);
             let full_red = fa - m.layout_cost(&a.best_layout);
@@ -462,31 +501,29 @@ pub fn table8(co: &mut Coordinator, cache: &mut RunCache) -> Table {
         };
         t.row(vec![
             format!("{}x{} S3", size.0, size.1),
-            pct(frac(&co.area, &full_run, &ng)),
-            pct(frac(&co.power, &full_run, &ng)),
+            pct(frac(&ctx.area, full_run, ng)),
+            pct(frac(&ctx.power, full_run, ng)),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Fig 9: size sweep on S4 — final cost per size and improvement; the
 /// best size is the smallest that maps.
-pub fn fig9(co: &mut Coordinator, cache: &mut RunCache) -> Table {
-    let dfgs = benchmarks::dfg_set("S4");
+fn fold_fig9(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 9: cost and improvement per CGRA size (S4 sweep)",
         &["Size", "Final cost", "Full cost", "Improvement %", "Best?"],
     );
-    let sweep = [(7, 7), (7, 8), (8, 8), (9, 9), (10, 10)];
     let mut best: Option<((usize, usize), f64)> = None;
     let mut rows: Vec<((usize, usize), f64, f64)> = Vec::new();
-    for size in sweep {
-        let Some(r) = cache.run(co, "set_S4_sweep", &dfgs, size) else {
+    for size in FIG9_SWEEP {
+        let Some(r) = ctx.runs.get("set_S4_sweep", size) else {
             t.row(vec![format!("{}x{}", size.0, size.1), "unmappable".into(), "-".into(),
                        "-".into(), "".into()]);
             continue;
         };
-        let fc = co.area.layout_cost(&r.full_layout);
+        let fc = ctx.area.layout_cost(&r.full_layout);
         rows.push((size, r.best_cost, fc));
         if best.map_or(true, |(_, c)| r.best_cost < c) {
             best = Some((size, r.best_cost));
@@ -501,12 +538,12 @@ pub fn fig9(co: &mut Coordinator, cache: &mut RunCache) -> Table {
             if best.map(|(s, _)| s) == Some(size) { "<= best".into() } else { "".into() },
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Fig 10: post-map latency increase of the best layout vs the full
 /// layout, per DFG, averaged over the configs it appears in.
-pub fn fig10(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
+fn fold_fig10(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let dfgs = benchmarks::all();
     let mut t = Table::new(
         "Fig 10: HeLEx's impact on latency (hetero/full critical path ratio)",
@@ -514,10 +551,10 @@ pub fn fig10(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
     );
     let mut per_dfg: HashMap<String, Vec<f64>> = HashMap::new();
     for size in sizes(quick) {
-        let Some(r) = cache.run(co, "table2", &dfgs, size) else { continue };
+        let Some(r) = ctx.runs.get("table2", size) else { continue };
         for (di, d) in dfgs.iter().enumerate() {
             if let Some(ratio) = crate::metrics::latency_ratio_with_witness(
-                &co.engine,
+                &ctx.engine,
                 d,
                 &r.full_layout,
                 &r.final_mappings[di],
@@ -542,14 +579,14 @@ pub fn fig10(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
             "".into(),
         ]);
     }
-    t
+    vec![t]
 }
 
 /// Fig 11: compute-resource reduction vs HETA-like and REVAMP-like
-/// baselines on the 8 HETA DFGs at 20×20.
-pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
+/// baselines on the 8 HETA DFGs at 20×20 (14×14 in quick mode).
+fn fold_fig11(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let dfgs = heta::all();
-    let size = if quick { (14, 14) } else { (20, 20) };
+    let size = fig11_size(quick);
     let mut t = Table::new(
         &format!(
             "Fig 11: Add/Sub and Mult PE reduction vs baselines ({}x{})",
@@ -560,8 +597,8 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
     let grid = Grid::new(size.0, size.1);
     let full = Layout::full(grid, crate::dfg::groups_used(&dfgs));
 
-    // HeLEx
-    if let Some(r) = cache.run(co, "heta_cmp", &dfgs, size) {
+    // HeLEx (through the service)
+    if let Some(r) = ctx.runs.get("heta_cmp", size) {
         let (a, m) = fig11_metrics(&r.full_layout, &r.best_layout);
         t.row(vec![
             "HeLEx".into(),
@@ -570,8 +607,8 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
             pct(crate::metrics::total_reduction_pct(&r.full_layout, &r.best_layout)),
         ]);
     }
-    // REVAMP-like hotspot
-    if let Some(r) = revamp::run(&dfgs, &full, &co.engine) {
+    // REVAMP-like hotspot (fold-side: cheap relative to the search)
+    if let Some(r) = revamp::run(&dfgs, &full, &ctx.engine) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         t.row(vec![
             "REVAMP-like".into(),
@@ -583,7 +620,7 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
     // HETA-like BO
     let budget = if quick { 150 } else { 600 };
     let hcfg = heta_bl::HetaConfig { budget, ..Default::default() };
-    if let Some(r) = heta_bl::run(&dfgs, &full, &co.engine, &co.area, &hcfg) {
+    if let Some(r) = heta_bl::run(&dfgs, &full, &ctx.engine, &ctx.area, &hcfg) {
         let (a, m) = fig11_metrics(&full, &r.layout);
         t.row(vec![
             "HETA-like".into(),
@@ -592,50 +629,127 @@ pub fn fig11(co: &mut Coordinator, cache: &mut RunCache, quick: bool) -> Table {
             pct(crate::metrics::total_reduction_pct(&full, &r.layout)),
         ]);
     }
-    t
+    vec![t]
 }
 
-/// Dispatch an experiment by name; `quick` trims sizes/budgets.
-pub fn run_experiment(co: &mut Coordinator, name: &str, quick: bool) -> anyhow::Result<()> {
-    let mut cache = RunCache::default();
-    let dir = co.cfg.results_dir.clone();
-    match name {
-        "fig3" => emit(&fig3(co, &mut cache, quick), &dir, "fig3_group_reduction"),
-        "fig4" => emit(&fig4(co, &mut cache, quick), &dir, "fig4_area_power"),
-        "table4" => emit(&table4(co, &mut cache, quick), &dir, "table4_search_perf"),
-        "fig5" => emit(&fig5(co, &mut cache), &dir, "fig5_convergence"),
-        "fig6" => emit(&fig6(co, &mut cache, quick), &dir, "fig6_remaining"),
-        "table5" => emit(&table5(co, &mut cache), &dir, "table5_validation"),
-        "table6" => emit(&table6(co, &mut cache, quick), &dir, "table6_fifo"),
-        "fig7" | "fig8" => {
-            let (t7, t8) = fig7_fig8(co, &mut cache);
-            emit(&t7, &dir, "fig7_sets_groups");
-            emit(&t8, &dir, "fig8_sets_area_power");
-        }
-        "table8" => emit(&table8(co, &mut cache), &dir, "table8_nogsg"),
-        "fig9" => emit(&fig9(co, &mut cache), &dir, "fig9_size_sweep"),
-        "fig10" => emit(&fig10(co, &mut cache, quick), &dir, "fig10_latency"),
-        "fig11" => emit(&fig11(co, &mut cache, quick), &dir, "fig11_compare"),
-        "all" => {
-            emit(&fig3(co, &mut cache, quick), &dir, "fig3_group_reduction");
-            emit(&fig4(co, &mut cache, quick), &dir, "fig4_area_power");
-            emit(&table4(co, &mut cache, quick), &dir, "table4_search_perf");
-            emit(&fig5(co, &mut cache), &dir, "fig5_convergence");
-            emit(&fig6(co, &mut cache, quick), &dir, "fig6_remaining");
-            emit(&table5(co, &mut cache), &dir, "table5_validation");
-            emit(&table6(co, &mut cache, quick), &dir, "table6_fifo");
-            let (t7, t8) = fig7_fig8(co, &mut cache);
-            emit(&t7, &dir, "fig7_sets_groups");
-            emit(&t8, &dir, "fig8_sets_area_power");
-            emit(&table8(co, &mut cache), &dir, "table8_nogsg");
-            emit(&fig9(co, &mut cache), &dir, "fig9_size_sweep");
-            emit(&fig10(co, &mut cache, quick), &dir, "fig10_latency");
-            emit(&fig11(co, &mut cache, quick), &dir, "fig11_compare");
-        }
-        other => anyhow::bail!(
-            "unknown experiment '{other}' (try fig3..fig11, table4/5/6/8, all)"
-        ),
+/// Every experiment of the evaluation, in the paper's emission order.
+pub const EXPERIMENTS: &[ExperimentDef] = &[
+    ExperimentDef {
+        name: "fig3",
+        aliases: &[],
+        csvs: &["fig3_group_reduction"],
+        specs: table2_specs,
+        fold: fold_fig3,
+    },
+    ExperimentDef {
+        name: "fig4",
+        aliases: &[],
+        csvs: &["fig4_area_power"],
+        specs: table2_specs,
+        fold: fold_fig4,
+    },
+    ExperimentDef {
+        name: "table4",
+        aliases: &[],
+        csvs: &["table4_search_perf"],
+        specs: table2_specs,
+        fold: fold_table4,
+    },
+    ExperimentDef {
+        name: "fig5",
+        aliases: &[],
+        csvs: &["fig5_convergence"],
+        specs: fig5_specs,
+        fold: fold_fig5,
+    },
+    ExperimentDef {
+        name: "fig6",
+        aliases: &[],
+        csvs: &["fig6_remaining"],
+        specs: table2_specs,
+        fold: fold_fig6,
+    },
+    ExperimentDef {
+        name: "table5",
+        aliases: &[],
+        csvs: &["table5_validation"],
+        specs: table5_specs,
+        fold: fold_table5,
+    },
+    ExperimentDef {
+        name: "table6",
+        aliases: &[],
+        csvs: &["table6_fifo"],
+        specs: table2_specs,
+        fold: fold_table6,
+    },
+    ExperimentDef {
+        name: "fig7",
+        aliases: &["fig8"],
+        csvs: &["fig7_sets_groups", "fig8_sets_area_power"],
+        specs: sets_specs,
+        fold: fold_fig7_fig8,
+    },
+    ExperimentDef {
+        name: "table8",
+        aliases: &[],
+        csvs: &["table8_nogsg"],
+        specs: table8_specs,
+        fold: fold_table8,
+    },
+    ExperimentDef {
+        name: "fig9",
+        aliases: &[],
+        csvs: &["fig9_size_sweep"],
+        specs: fig9_specs,
+        fold: fold_fig9,
+    },
+    ExperimentDef {
+        name: "fig10",
+        aliases: &[],
+        csvs: &["fig10_latency"],
+        specs: table2_specs,
+        fold: fold_fig10,
+    },
+    ExperimentDef {
+        name: "fig11",
+        aliases: &[],
+        csvs: &["fig11_compare"],
+        specs: fig11_specs,
+        fold: fold_fig11,
+    },
+];
+
+/// Resolve an experiment name (or `"all"`) to its definitions.
+pub fn find(name: &str) -> anyhow::Result<Vec<&'static ExperimentDef>> {
+    if name == "all" {
+        return Ok(EXPERIMENTS.iter().collect());
     }
+    let matched: Vec<&'static ExperimentDef> =
+        EXPERIMENTS.iter().filter(|d| d.matches(name)).collect();
+    if matched.is_empty() {
+        anyhow::bail!("unknown experiment '{name}' (try fig3..fig11, table4/5/6/8, all)");
+    }
+    Ok(matched)
+}
+
+/// Dispatch an experiment by name through the generic suite path. The
+/// compatibility entry point for library callers holding a
+/// [`Coordinator`]; the CLI builds its own [`ExplorationService`] so it
+/// can attach live progress output.
+pub fn run_experiment(co: &mut Coordinator, name: &str, quick: bool) -> anyhow::Result<()> {
+    let defs = find(name)?;
+    let service =
+        ExplorationService::new(ServiceConfig { jobs: co.cfg.jobs, live_trace: false });
+    let verbose = co.cfg.verbose;
+    let mut printer = |ev: &ServiceEvent| {
+        if let ServiceEvent::Started { describe, .. } = ev {
+            eprintln!("[helex] running {describe}...");
+        }
+    };
+    let progress: Option<&mut dyn FnMut(&ServiceEvent)> =
+        if verbose { Some(&mut printer) } else { None };
+    suite::run_and_emit(&co.cfg, &defs, quick, &service, progress);
     Ok(())
 }
 
@@ -644,29 +758,12 @@ mod tests {
     use super::*;
     use crate::coordinator::ExperimentConfig;
 
-    fn tiny_co() -> Coordinator {
-        Coordinator::new(ExperimentConfig {
-            l_test_base: 30,
-            gsg_passes: 1,
-            use_xla_scorer: false,
-            ..Default::default()
-        })
-    }
-
-    #[test]
-    fn run_cache_deduplicates() {
-        let mut co = tiny_co();
-        let mut cache = RunCache::default();
-        let dfgs = vec![benchmarks::benchmark("SOB")];
-        let a = cache.run(&mut co, "x", &dfgs, (5, 5)).unwrap();
-        let b = cache.run(&mut co, "x", &dfgs, (5, 5)).unwrap();
-        assert_eq!(a.best_cost, b.best_cost);
-        assert_eq!(cache.runs.len(), 1);
-    }
-
     #[test]
     fn unknown_experiment_errors() {
-        let mut co = tiny_co();
+        let mut co = Coordinator::new(ExperimentConfig {
+            use_xla_scorer: false,
+            ..Default::default()
+        });
         assert!(run_experiment(&mut co, "fig99", true).is_err());
     }
 
@@ -674,5 +771,50 @@ mod tests {
     fn sizes_quick_subset() {
         assert_eq!(sizes(true).len(), 3);
         assert_eq!(sizes(false).len(), 9);
+    }
+
+    #[test]
+    fn all_experiments_resolvable_and_unique() {
+        let all = find("all").unwrap();
+        assert_eq!(all.len(), EXPERIMENTS.len());
+        for def in EXPERIMENTS {
+            let by_name = find(def.name).unwrap();
+            assert!(by_name.iter().any(|d| d.name == def.name));
+            assert!(!def.csvs.is_empty());
+        }
+        // fig8 is an alias of the fig7 def
+        let fig8 = find("fig8").unwrap();
+        assert_eq!(fig8.len(), 1);
+        assert_eq!(fig8[0].name, "fig7");
+        // names and CSV basenames are globally unique
+        let mut names: Vec<&str> = EXPERIMENTS.iter().map(|d| d.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), EXPERIMENTS.len());
+        let mut csvs: Vec<&str> = EXPERIMENTS.iter().flat_map(|d| d.csvs.iter().copied()).collect();
+        let total = csvs.len();
+        csvs.sort_unstable();
+        csvs.dedup();
+        assert_eq!(csvs.len(), total);
+    }
+
+    #[test]
+    fn specs_derive_search_config_from_experiment_config() {
+        let cfg = ExperimentConfig { l_test_base: 100, ..Default::default() };
+        let specs = table2_specs(&cfg, true);
+        assert_eq!(specs.len(), 3);
+        for s in &specs {
+            assert_eq!(s.label, "table2");
+            assert_eq!(
+                s.search.l_test,
+                crate::search::SearchConfig::scale_l_test(100, s.grid)
+            );
+        }
+        // the noGSG variant differs from its twin in search config only
+        let t8 = table8_specs(&cfg, true);
+        assert_eq!(t8.len(), 4);
+        assert!(t8[0].search.run_gsg && !t8[1].search.run_gsg);
+        assert!(!t8[0].search.opsg_skip_arith && t8[1].search.opsg_skip_arith);
+        assert_ne!(t8[0].fingerprint(), t8[1].fingerprint());
     }
 }

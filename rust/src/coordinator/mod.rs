@@ -1,8 +1,13 @@
-//! Experiment coordinator: configuration, run orchestration and report
-//! emission for every table and figure of the paper.
+//! Experiment coordinator: configuration plus the single-session
+//! [`Coordinator`] wrapper. The paper's tables and figures live in
+//! [`experiments`] as declarative [`suite::ExperimentDef`] data and
+//! execute through the generic [`suite::run_suite`] path on the
+//! [`crate::service::ExplorationService`] worker pool; [`report`] emits
+//! the folded tables.
 
 pub mod experiments;
 pub mod report;
+pub mod suite;
 
 use crate::cgra::Grid;
 use crate::cost::CostModel;
@@ -32,6 +37,9 @@ pub struct ExperimentConfig {
     /// Use the PJRT scorer when artifacts are present.
     pub use_xla_scorer: bool,
     pub verbose: bool,
+    /// Worker threads for the experiment suite (`--jobs N` /
+    /// `service.jobs`); `0` means available parallelism.
+    pub jobs: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -47,6 +55,7 @@ impl Default for ExperimentConfig {
             results_dir: PathBuf::from("results"),
             use_xla_scorer: true,
             verbose: false,
+            jobs: 0,
         }
     }
 }
@@ -57,13 +66,17 @@ impl ExperimentConfig {
         Self { l_test_base: 2000, ..Default::default() }
     }
 
-    /// Merge values from a config file (TOML-subset, see `util::config`).
+    /// Merge values from a config file (TOML-subset, see
+    /// [`crate::util::config`] — the module docs list every recognized
+    /// key). Unknown keys are ignored; recognized keys override the
+    /// current value.
     pub fn apply_file(&mut self, cfg: &Config) {
         self.l_test_base = cfg.int_or("search.l_test", self.l_test_base as i64) as usize;
         self.l_fail = cfg.int_or("search.l_fail", self.l_fail as i64) as usize;
         self.run_gsg = cfg.bool_or("search.run_gsg", self.run_gsg);
         self.gsg_passes = cfg.int_or("search.gsg_passes", self.gsg_passes as i64) as usize;
         self.use_heatmap = cfg.bool_or("search.use_heatmap", self.use_heatmap);
+        self.opsg_skip_arith = cfg.bool_or("search.opsg_skip_arith", self.opsg_skip_arith);
         self.use_xla_scorer = cfg.bool_or("runtime.use_xla_scorer", self.use_xla_scorer);
         self.mapper.route_iters =
             cfg.int_or("mapper.route_iters", self.mapper.route_iters as i64) as usize;
@@ -72,9 +85,14 @@ impl ExperimentConfig {
             as usize;
         self.mapper.max_reserves =
             cfg.int_or("mapper.max_reserves", self.mapper.max_reserves as i64) as usize;
+        self.mapper.hist_increment =
+            cfg.float_or("mapper.hist_increment", self.mapper.hist_increment);
+        self.mapper.present_penalty =
+            cfg.float_or("mapper.present_penalty", self.mapper.present_penalty);
         self.mapper.seed = cfg.int_or("mapper.seed", self.mapper.seed as i64) as u64;
         self.mapper.feasibility_cache =
             cfg.bool_or("mapper.feasibility_cache", self.mapper.feasibility_cache);
+        self.jobs = cfg.int_or("service.jobs", self.jobs as i64) as usize;
         if let Some(v) = cfg.get("results_dir").and_then(|v| v.as_str()) {
             self.results_dir = PathBuf::from(v);
         }
@@ -96,10 +114,15 @@ impl ExperimentConfig {
     }
 }
 
-/// A coordinator instance: owns the mapping engine, cost models, and
-/// (when artifacts are available) the PJRT scorer. The engine is shared
-/// across every search the coordinator runs, so its feasibility cache
-/// persists between experiments.
+/// A coordinator instance: the *single-session* wrapper. Owns a mapping
+/// engine, cost models, and (when artifacts are available) the PJRT
+/// scorer; the engine is shared across every search this coordinator
+/// runs, so its feasibility cache persists between calls.
+///
+/// Multi-job work — suites, sweeps, the full paper reproduction — goes
+/// through the [`crate::service::ExplorationService`] worker pool
+/// instead; [`Self::run_helex`] remains the thin one-job path (and the
+/// only one that scores through the PJRT artifact).
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
     pub engine: MappingEngine,
@@ -203,6 +226,24 @@ mod tests {
         assert_eq!(cfg.l_test_base, 77);
         assert!(!cfg.run_gsg);
         assert_eq!(cfg.mapper.seed, 9);
+    }
+
+    #[test]
+    fn config_file_covers_every_documented_key() {
+        // the keys apply_file used to silently drop, plus the service key
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.opsg_skip_arith);
+        let file = Config::parse(
+            "[search]\nopsg_skip_arith = true\nuse_heatmap = false\n\
+             [mapper]\nhist_increment = 2.5\npresent_penalty = 3.25\n\
+             [service]\njobs = 6",
+        );
+        cfg.apply_file(&file);
+        assert!(cfg.opsg_skip_arith);
+        assert!(!cfg.use_heatmap);
+        assert_eq!(cfg.mapper.hist_increment, 2.5);
+        assert_eq!(cfg.mapper.present_penalty, 3.25);
+        assert_eq!(cfg.jobs, 6);
     }
 
     #[test]

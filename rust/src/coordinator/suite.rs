@@ -1,0 +1,212 @@
+//! The declarative experiment suite: paper figures/tables as *data*.
+//!
+//! Each evaluation artifact is an [`ExperimentDef`] — a function from the
+//! [`ExperimentConfig`] to a set of [`JobSpec`]s, plus a *fold* from the
+//! completed jobs into [`Table`]s. [`run_suite`] collects every requested
+//! spec across the selected definitions, deduplicates them by content
+//! fingerprint (figures share runs: Figs 3–6, Table IV, Table VI and
+//! Fig 10 all fold the same "table2" sweep), executes the unique specs on
+//! the [`ExplorationService`] worker pool, and then folds each definition
+//! in order.
+//!
+//! Because jobs are deterministic per fingerprint (see
+//! [`crate::service`]) and folding happens serially in definition order
+//! after the batch completes, the emitted tables are byte-identical for
+//! any `--jobs N` — only wall-clock cells (Table IV times, the Fig 5
+//! trace) vary between runs.
+
+use super::report::emit;
+use super::ExperimentConfig;
+use crate::cost::CostModel;
+use crate::mapper::MappingEngine;
+use crate::search::SearchResult;
+use crate::service::{ExplorationService, JobResult, JobSpec, ServiceEvent};
+use crate::util::table::Table;
+use std::collections::{HashMap, HashSet};
+
+/// One paper figure/table, as data: a name (plus aliases it answers to on
+/// the CLI), the CSV basenames it emits, the specs it needs, and the fold
+/// from completed runs to tables (one per CSV basename, same order).
+pub struct ExperimentDef {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub csvs: &'static [&'static str],
+    pub specs: fn(&ExperimentConfig, bool) -> Vec<JobSpec>,
+    pub fold: fn(&FoldCtx, bool) -> Vec<Table>,
+}
+
+impl ExperimentDef {
+    pub fn matches(&self, name: &str) -> bool {
+        self.name == name || self.aliases.contains(&name)
+    }
+}
+
+/// Completed runs of one suite, indexed the way folds look them up:
+/// by (spec label, grid size). `None` records an infeasible run.
+pub struct SuiteRuns {
+    runs: HashMap<(String, (usize, usize)), Option<SearchResult>>,
+}
+
+impl SuiteRuns {
+    /// The run for `label` at `size`; `None` when it was infeasible (or
+    /// never requested — folds only ask for what their def requested).
+    pub fn get(&self, label: &str, size: (usize, usize)) -> Option<&SearchResult> {
+        self.runs.get(&(label.to_string(), size)).and_then(Option::as_ref)
+    }
+}
+
+/// Everything a fold may consult besides the runs: the experiment
+/// configuration, both cost models, and an engine for fold-side mapping
+/// work (Fig 10 latency ratios, the Fig 11 baselines) seeded with the
+/// base mapper configuration.
+pub struct FoldCtx<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub runs: &'a SuiteRuns,
+    pub area: CostModel,
+    pub power: CostModel,
+    pub engine: MappingEngine,
+}
+
+/// Execute the selected definitions through the service and fold them
+/// into `(csv_basename, table)` pairs, in definition order.
+pub fn run_suite(
+    cfg: &ExperimentConfig,
+    defs: &[&ExperimentDef],
+    quick: bool,
+    service: &ExplorationService,
+    progress: Option<&mut dyn FnMut(&ServiceEvent)>,
+) -> Vec<(String, Table)> {
+    // 1. collect every requested (label, size) and the unique specs.
+    // (label, size) is the key folds look runs up by, so two specs may
+    // share one only when their content is identical — a definition
+    // asking for different configurations under one key would silently
+    // read the wrong run, which we refuse loudly instead.
+    let mut requested: Vec<(String, (usize, usize), u64)> = Vec::new();
+    let mut unique: Vec<JobSpec> = Vec::new();
+    let mut seen: HashSet<u64> = HashSet::new();
+    for def in defs {
+        for spec in (def.specs)(cfg, quick) {
+            let fp = spec.fingerprint();
+            let size = (spec.grid.rows, spec.grid.cols);
+            match requested.iter().find(|(l, s, _)| *l == spec.label && *s == size) {
+                Some((l, s, prior)) => assert_eq!(
+                    *prior, fp,
+                    "conflicting specs for run '{l} @ {s:?}': two different \
+                     configurations share one label+size"
+                ),
+                None => requested.push((spec.label.clone(), size, fp)),
+            }
+            if seen.insert(fp) {
+                unique.push(spec);
+            }
+        }
+    }
+
+    // 2. one parallel batch over the deduplicated specs
+    let results: Vec<JobResult> = service.run_batch(unique, progress);
+    let by_fp: HashMap<u64, Option<SearchResult>> = results
+        .iter()
+        .map(|r| (r.fingerprint, r.outcome.search_result().cloned()))
+        .collect();
+    let mut runs = HashMap::new();
+    for (label, size, fp) in requested {
+        runs.insert((label, size), by_fp.get(&fp).cloned().flatten());
+    }
+    let runs = SuiteRuns { runs };
+
+    // 3. fold serially in definition order (this is what keeps the
+    // output independent of worker count)
+    let ctx = FoldCtx {
+        cfg,
+        runs: &runs,
+        area: CostModel::area(),
+        power: CostModel::power(),
+        engine: MappingEngine::new(cfg.mapper.clone()),
+    };
+    let mut out = Vec::new();
+    for def in defs {
+        let tables = (def.fold)(&ctx, quick);
+        assert_eq!(
+            tables.len(),
+            def.csvs.len(),
+            "{}: fold must emit one table per declared CSV",
+            def.name
+        );
+        for (table, csv) in tables.into_iter().zip(def.csvs) {
+            out.push((csv.to_string(), table));
+        }
+    }
+    out
+}
+
+/// [`run_suite`], then print every table and persist its CSV under
+/// `cfg.results_dir`.
+pub fn run_and_emit(
+    cfg: &ExperimentConfig,
+    defs: &[&ExperimentDef],
+    quick: bool,
+    service: &ExplorationService,
+    progress: Option<&mut dyn FnMut(&ServiceEvent)>,
+) {
+    for (csv, table) in run_suite(cfg, defs, quick, service, progress) {
+        emit(&table, &cfg.results_dir, &csv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::coordinator::experiments;
+    use crate::service::ExplorationService;
+
+    fn conflicting_specs(_cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+        // same label + size, different search config: a definition bug
+        let a = JobSpec::new("clash", Vec::new(), Grid::new(5, 5));
+        let mut b = a.clone();
+        b.search.l_test += 1;
+        vec![a, b]
+    }
+
+    fn empty_fold(_ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
+        Vec::new()
+    }
+
+    #[test]
+    #[should_panic(expected = "conflicting specs")]
+    fn conflicting_label_size_specs_are_refused() {
+        let def = ExperimentDef {
+            name: "clash",
+            aliases: &[],
+            csvs: &[],
+            specs: conflicting_specs,
+            fold: empty_fold,
+        };
+        let cfg = ExperimentConfig::default();
+        let service = ExplorationService::with_jobs(1);
+        run_suite(&cfg, &[&def], true, &service, None);
+    }
+
+    #[test]
+    fn suite_dedupes_shared_runs_across_defs() {
+        // fig3 and fig4 fold the same table2 sweep: together they must
+        // request exactly the same unique specs as either alone
+        let cfg = ExperimentConfig { l_test_base: 30, ..Default::default() };
+        let fig3 = experiments::find("fig3").unwrap();
+        let both: Vec<&ExperimentDef> = experiments::find("fig3")
+            .unwrap()
+            .into_iter()
+            .chain(experiments::find("fig4").unwrap())
+            .collect();
+        let count = |defs: &[&ExperimentDef]| {
+            let mut seen = HashSet::new();
+            for d in defs {
+                for s in (d.specs)(&cfg, true) {
+                    seen.insert(s.fingerprint());
+                }
+            }
+            seen.len()
+        };
+        assert_eq!(count(&fig3), count(&both));
+    }
+}

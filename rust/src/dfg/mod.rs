@@ -15,8 +15,10 @@ use std::collections::VecDeque;
 /// Node id within a DFG.
 pub type NodeId = u32;
 
-/// A data-flow graph.
-#[derive(Debug, Clone)]
+/// A data-flow graph. `Hash` is content identity (name + nodes + edges),
+/// used by the mapper's feasibility cache and the service's job
+/// fingerprints.
+#[derive(Debug, Clone, Hash)]
 pub struct Dfg {
     pub name: String,
     /// Node id = index.

@@ -36,6 +36,20 @@
 //! cache — the search's hot path, since branch-and-bound candidates are
 //! one-removal neighbors of already-witnessed layouts.
 //!
+//! One layer *up*, multi-job work goes through the
+//! **`ExplorationService`** ([`service::ExplorationService`]): a typed
+//! job API ([`service::JobSpec`] → [`service::JobId`] →
+//! [`service::JobResult`]) executed by a `std::thread` worker pool
+//! (`--jobs N`, default available parallelism). Each worker owns the
+//! `MappingEngine` of the job it runs — feasibility caches stay
+//! lock-free — while a sharded, mutex-protected run cache dedupes
+//! identical specs (including concurrent in-flight twins) across
+//! experiments. Per-job seeds derive from the spec's content
+//! fingerprint, so suite output is byte-identical at any worker count.
+//! The paper's evaluation rides on top as *data*: every figure/table is
+//! a declarative [`coordinator::suite::ExperimentDef`] (specs + fold)
+//! run by the one generic [`coordinator::suite::run_suite`] path.
+//!
 //! ## Layering
 //!
 //! * [`ops`], [`dfg`], [`cgra`], [`mapper`], [`cost`] — substrates: the
@@ -46,16 +60,21 @@
 //!   session API: heatmap initial layout and the two branch-and-bound
 //!   phases (OPSG then GSG), plus the convergence trace recorded from
 //!   the event stream.
+//! * [`service`] — the parallel job layer: `JobSpec`/`JobResult`,
+//!   the worker pool, the sharded deduplicating run cache, and the
+//!   `ServiceEvent` progress stream. The seam for any future
+//!   serving/batching front-end.
 //! * [`baselines`] — HETA-like and REVAMP-like comparators (Fig 11).
 //! * [`runtime`] — PJRT client executing the AOT-compiled XLA artifact
 //!   (built once by `python/compile/aot.py`; Python is never on the
 //!   search path) for batched layout scoring, behind the
 //!   [`search::BatchScorer`] trait. Builds without the XLA runtime use
 //!   an in-tree stub and fall back to native scoring.
-//! * [`coordinator`] — experiment runner regenerating every paper table
-//!   and figure by subscribing to `Explorer` sessions; [`metrics`] —
-//!   latency accounting; [`util`] — in-tree RNG/CLI/config/bench/
-//!   property-test substrates.
+//! * [`coordinator`] — the single-session `Coordinator` wrapper plus
+//!   the declarative experiment suite ([`coordinator::experiments`] as
+//!   `ExperimentDef` data, [`coordinator::suite`] as the generic
+//!   runner); [`metrics`] — latency accounting; [`util`] — in-tree
+//!   RNG/CLI/config/bench/property-test substrates.
 
 pub mod baselines;
 pub mod cgra;
@@ -67,6 +86,7 @@ pub mod metrics;
 pub mod ops;
 pub mod runtime;
 pub mod search;
+pub mod service;
 pub mod sim;
 pub mod util;
 
@@ -76,3 +96,4 @@ pub use dfg::Dfg;
 pub use mapper::{
     MapFailure, MapOutcome, MapRequest, Mapper, MapperConfig, Mapping, MappingEngine,
 };
+pub use service::{ExplorationService, JobId, JobResult, JobSpec, Objective, ServiceConfig};

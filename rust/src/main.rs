@@ -1,7 +1,8 @@
 //! `helex` CLI — leader entrypoint.
 //!
 //! ```text
-//! helex exp <fig3|...|table8|all> [--quick] [--l-test N] [--no-gsg]
+//! helex repro [--quick] [--jobs N]
+//! helex exp <fig3|...|table8|all> [--quick] [--jobs N] [--l-test N] [--no-gsg]
 //! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N]
 //! helex map --dfg FFT --size 10x10
 //! helex heatmap --set S4 --size 9x9
@@ -13,11 +14,13 @@
 
 use anyhow::{bail, Context, Result};
 use helex::cgra::Grid;
-use helex::coordinator::{experiments, Coordinator, ExperimentConfig};
+use helex::coordinator::{experiments, suite, Coordinator, ExperimentConfig};
 use helex::dfg::{benchmarks, heta, Dfg};
 use helex::search::{SearchEvent, SearchObserver};
+use helex::service::{ExplorationService, ServiceConfig, ServiceEvent};
 use helex::util::cli::{parse_size, Args};
 use helex::util::config::Config;
+use helex::util::Stopwatch;
 
 fn load_dfgs(spec: &str) -> Result<Vec<Dfg>> {
     if let Some(set) = spec.strip_prefix('S').and_then(|s| s.parse::<u8>().ok()) {
@@ -68,10 +71,58 @@ fn build_config(args: &Args) -> ExperimentConfig {
     if let Some(seed) = args.get("seed") {
         cfg.mapper.seed = seed.parse().unwrap_or(cfg.mapper.seed);
     }
+    if let Some(jobs) = args.get("jobs") {
+        cfg.jobs = jobs.parse().unwrap_or(cfg.jobs);
+    }
     if let Some(dir) = args.get("results-dir") {
         cfg.results_dir = dir.into();
     }
     cfg
+}
+
+/// Run an experiment suite through the [`ExplorationService`] worker
+/// pool with live multi-job progress lines.
+fn run_suite_cmd(args: &Args, name: &str) -> Result<()> {
+    let quick = args.flag("quick") || !args.flag("paper-scale");
+    let cfg = build_config(args);
+    let defs = experiments::find(name)?;
+    let service =
+        ExplorationService::new(ServiceConfig { jobs: cfg.jobs, live_trace: cfg.verbose });
+    let sw = Stopwatch::start();
+    let mut printer = |ev: &ServiceEvent| match ev {
+        ServiceEvent::Started { id, describe, worker } => {
+            eprintln!("[helex] {id} start : {describe} (worker {worker})")
+        }
+        ServiceEvent::Improved { id, best_cost, tested } => {
+            eprintln!("[helex] {id}   cost {best_cost:.1} ({tested} tested)")
+        }
+        ServiceEvent::Finished {
+            id,
+            describe,
+            best_cost,
+            secs,
+            from_cache,
+            done,
+            total,
+        } => {
+            let cost = match best_cost {
+                Some(c) => format!("cost {c:.1}"),
+                None => "infeasible".to_string(),
+            };
+            let tag = if *from_cache { " [cached]" } else { "" };
+            eprintln!(
+                "[helex] {id} done  : {describe} — {cost} in {secs:.1}s{tag} ({done}/{total})"
+            )
+        }
+    };
+    suite::run_and_emit(&cfg, &defs, quick, &service, Some(&mut printer));
+    eprintln!(
+        "[helex] suite '{name}' done in {:.1}s on {} worker(s), {} unique run(s)",
+        sw.secs(),
+        service.workers(),
+        service.cache_len()
+    );
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -86,14 +137,13 @@ fn main() -> Result<()> {
                 .positional
                 .first()
                 .map(String::as_str)
-                .unwrap_or("all");
-            let quick = args.flag("quick") || !args.flag("paper-scale");
-            let mut co = Coordinator::new(build_config(&args));
-            if let Some(err) = co.self_check() {
-                eprintln!("[helex] scorer self-check ok (max rel err {err:.2e})");
-            }
-            experiments::run_experiment(&mut co, name, quick)?;
+                .unwrap_or("all")
+                .to_string();
+            run_suite_cmd(&args, &name)?;
         }
+        // the full paper reproduction: every figure/table through the
+        // parallel suite path
+        "repro" => run_suite_cmd(&args, "all")?,
         "explore" => {
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").context("--size RxC required")?;
@@ -251,15 +301,19 @@ fn print_usage() {
         "helex — heterogeneous layout explorer for spatial elastic CGRAs
 
 USAGE:
+  helex repro [--quick] [--jobs N]           full paper suite on N workers
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
-            [--quick] [--paper-scale] [--l-test N] [--no-gsg] [--no-heatmap]
-            [--no-xla] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
-  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace]
+            [--quick] [--paper-scale] [--jobs N] [--l-test N] [--no-gsg]
+            [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
+  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace] [--no-xla]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10
   helex compare [--quick]
   helex show-dfg NAME
-  helex self-check"
+  helex self-check
+
+  --jobs N defaults to the machine's available parallelism; output is
+  byte-identical for any N (per-job seeds derive from job content)."
     );
 }

@@ -78,6 +78,32 @@ impl Default for MapperConfig {
     }
 }
 
+/// Hashing keys the service's run cache and per-job seed derivation, so
+/// every knob must participate (floats via `to_bits`). The exhaustive
+/// destructuring makes adding a field a compile error here, forcing the
+/// decision to be revisited instead of silently drifting.
+impl std::hash::Hash for MapperConfig {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        use std::hash::Hash as _;
+        let Self {
+            route_iters,
+            placement_attempts,
+            max_reserves,
+            hist_increment,
+            present_penalty,
+            seed,
+            feasibility_cache,
+        } = self;
+        route_iters.hash(state);
+        placement_attempts.hash(state);
+        max_reserves.hash(state);
+        hist_increment.to_bits().hash(state);
+        present_penalty.to_bits().hash(state);
+        seed.hash(state);
+        feasibility_cache.hash(state);
+    }
+}
+
 /// A successful mapping of one DFG onto one layout.
 #[derive(Debug, Clone)]
 pub struct Mapping {

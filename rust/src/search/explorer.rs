@@ -71,6 +71,22 @@ impl<F: FnMut(&SearchEvent)> SearchObserver for F {
     }
 }
 
+/// Owned, `Send` observer handle: forwards every event into an
+/// [`std::sync::mpsc`] channel, so a session running on a worker thread
+/// streams its trace without borrowing anything across threads. Register
+/// it with [`Explorer::observer_owned`] and drain the receiver on the
+/// other side; the sender drops (disconnecting the channel) when the
+/// session ends. This is how the `ExplorationService` worker pool gives
+/// each job its own event channel. (A disconnected receiver just means
+/// nobody is listening anymore — events are then discarded.)
+pub fn channel_observer(
+    tx: std::sync::mpsc::Sender<SearchEvent>,
+) -> impl SearchObserver + Send + 'static {
+    move |event: &SearchEvent| {
+        let _ = tx.send(event.clone());
+    }
+}
+
 /// The shared state of one search session, threaded through every phase.
 ///
 /// Bundles what the pre-session API passed as ten loose positional
@@ -358,6 +374,7 @@ pub struct Explorer<'a> {
     cfg: SearchConfig,
     scorer: Option<&'a mut dyn BatchScorer>,
     observer: Option<&'a mut dyn SearchObserver>,
+    owned_observer: Option<Box<dyn SearchObserver + 'a>>,
     phases: Option<Vec<Box<dyn SearchPhase>>>,
 }
 
@@ -372,6 +389,7 @@ impl<'a> Explorer<'a> {
             cfg: SearchConfig::default(),
             scorer: None,
             observer: None,
+            owned_observer: None,
             phases: None,
         }
     }
@@ -416,6 +434,17 @@ impl<'a> Explorer<'a> {
 
     pub fn observer(mut self, observer: &'a mut dyn SearchObserver) -> Self {
         self.observer = Some(observer);
+        self
+    }
+
+    /// Register an observer the session *owns* — the `Send`-compatible
+    /// alternative to [`Self::observer`]'s borrow. A worker thread hands
+    /// the session a handle it can move (typically a [`channel_observer`]
+    /// or another boxed closure over channel senders) and events cross
+    /// threads over the channel instead of through a borrow. When both
+    /// are registered, the borrowed observer wins.
+    pub fn observer_owned(mut self, observer: Box<dyn SearchObserver + 'a>) -> Self {
+        self.owned_observer = Some(observer);
         self
     }
 
@@ -479,6 +508,9 @@ impl<'a> Explorer<'a> {
         // (Section IV-F)
         let full_layout = Layout::full(self.grid, groups_used(dfgs));
 
+        // declared before ctx so the ctx's borrow of the owned observer
+        // (below) outlives it, exactly like default_engine/default_cost
+        let mut owned_observer = self.owned_observer;
         let mut ctx = SearchCtx::new(dfgs, engine, cost, min_insts, self.cfg);
         // destructure rather than assign the Option whole: the call-site
         // coercion reborrows the &mut trait object and shortens its
@@ -489,6 +521,8 @@ impl<'a> Explorer<'a> {
             ctx.scorer = Some(s);
         }
         if let Some(obs) = self.observer {
+            ctx.set_observer(obs);
+        } else if let Some(obs) = owned_observer.as_deref_mut() {
             ctx.set_observer(obs);
         }
         ctx.stats.insts_full = full_layout.compute_group_instances();
@@ -584,6 +618,44 @@ mod tests {
         assert!(ctx.is_aborted());
         assert_eq!(ctx.take_abort().as_deref(), Some("first"));
         assert!(ctx.take_abort().is_none());
+    }
+
+    #[test]
+    fn owned_channel_observer_streams_events_across_threads() {
+        // the Send-compatible observer path: the session runs on a worker
+        // thread and owns its observer; events arrive over the channel
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let dfgs = vec![benchmarks::benchmark("SOB")];
+            let engine = MappingEngine::default();
+            let cost = CostModel::area();
+            Explorer::new(Grid::new(5, 5))
+                .dfgs(&dfgs)
+                .engine(&engine)
+                .cost(&cost)
+                .config(SearchConfig { l_test: 30, gsg_passes: 1, ..Default::default() })
+                .observer_owned(Box::new(channel_observer(tx)))
+                .run()
+                .expect("SOB maps on 5x5")
+        });
+        // iteration ends when the sender drops, i.e. when the session ends
+        let events: Vec<SearchEvent> = rx.iter().collect();
+        let result = worker.join().unwrap();
+        assert!(!events.is_empty());
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, SearchEvent::PhaseStarted { phase, .. } if phase == "heatmap")));
+        let finishes = events
+            .iter()
+            .filter(|e| matches!(e, SearchEvent::PhaseFinished { .. }))
+            .count();
+        assert_eq!(finishes, 3, "one PhaseFinished per default-pipeline phase");
+        // the channel trace agrees with the recorded stats trace
+        let improvements = events
+            .iter()
+            .filter(|e| matches!(e, SearchEvent::Improved { .. }))
+            .count();
+        assert_eq!(improvements, result.stats.trace.len());
     }
 
     #[test]

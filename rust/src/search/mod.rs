@@ -31,8 +31,8 @@ pub mod opsg;
 pub mod posteriori;
 
 pub use explorer::{
-    ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchCtx, SearchEvent,
-    SearchObserver, SearchPhase,
+    channel_observer, ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchCtx,
+    SearchEvent, SearchObserver, SearchPhase,
 };
 
 use crate::cgra::Layout;
@@ -54,7 +54,11 @@ pub struct TracePoint {
 }
 
 /// Search configuration (Algorithm 1 inputs + engineering knobs).
-#[derive(Debug, Clone)]
+///
+/// `Hash` participates in the service's job fingerprints (run-cache key
+/// + per-job seed derivation); the derive keeps any field added here
+/// automatically result-relevant.
+#[derive(Debug, Clone, Hash)]
 pub struct SearchConfig {
     /// Mapper-invocation budget `L_test` (paper: 2000 for 10×10, grown
     /// with instance size).

@@ -1,0 +1,246 @@
+//! Sharded, mutex-protected run cache with in-flight deduplication.
+//!
+//! The [`super::ExplorationService`] worker pool keys completed jobs by
+//! the [`super::JobSpec`] content fingerprint so identical specs — within
+//! one suite or across suites submitted to the same service — compute
+//! once. Sharding keeps lock contention negligible (workers only touch a
+//! shard for the microseconds of a lookup/insert; the search itself runs
+//! outside every lock), and each entry is an [`std::sync::Arc`]'d slot
+//! with a [`std::sync::Condvar`] so a duplicate submitted *while* its
+//! twin is still running waits for that result instead of repeating
+//! minutes of branch-and-bound.
+//!
+//! Results are deterministic per fingerprint (per-job engines with
+//! derived seeds), so serving a hit is observationally identical to
+//! recomputing — which is what makes `--jobs N` output byte-identical to
+//! `--jobs 1`.
+
+use super::JobOutcome;
+use crate::search::SearchEvent;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shard count; keyed by the fingerprint's top bits so the low bits stay
+/// fresh for the per-shard `HashMap`.
+const NUM_SHARDS: usize = 16;
+
+/// A completed job as stored in the cache: the outcome plus the full
+/// event trace, so deduplicated jobs replay the original convergence
+/// trace in their [`super::JobResult`].
+#[derive(Debug, Clone)]
+pub struct CachedJob {
+    pub outcome: JobOutcome,
+    pub events: Vec<SearchEvent>,
+}
+
+/// One cache entry: empty while its computing thread runs, then filled
+/// once — or poisoned if that thread panicked, so waiters propagate the
+/// panic instead of blocking forever.
+#[derive(Default)]
+enum SlotState {
+    #[default]
+    Empty,
+    Ready(CachedJob),
+    Poisoned,
+}
+
+#[derive(Default)]
+struct Slot {
+    state: Mutex<SlotState>,
+    ready: Condvar,
+}
+
+impl Slot {
+    /// Block until the computing thread fills (or poisons) the slot.
+    fn wait(&self) -> CachedJob {
+        let mut state = self.state.lock().unwrap();
+        loop {
+            match &*state {
+                SlotState::Ready(job) => return job.clone(),
+                SlotState::Poisoned => {
+                    panic!("the thread computing this cached job panicked")
+                }
+                SlotState::Empty => state = self.ready.wait(state).unwrap(),
+            }
+        }
+    }
+
+    fn fill(&self, job: CachedJob) {
+        *self.state.lock().unwrap() = SlotState::Ready(job);
+        self.ready.notify_all();
+    }
+
+    fn poison(&self) {
+        *self.state.lock().unwrap() = SlotState::Poisoned;
+        self.ready.notify_all();
+    }
+}
+
+/// Poisons the slot unless the computation filled it — turning a panic
+/// in `compute` into a propagated panic for every waiter (instead of a
+/// silent hang) and a sticky poisoned entry for later lookups.
+struct FillGuard<'a> {
+    slot: &'a Slot,
+    filled: bool,
+}
+
+impl Drop for FillGuard<'_> {
+    fn drop(&mut self) {
+        if !self.filled {
+            self.slot.poison();
+        }
+    }
+}
+
+/// The sharded run cache. See the module docs.
+pub struct ShardedRunCache {
+    shards: [Mutex<HashMap<u64, Arc<Slot>>>; NUM_SHARDS],
+}
+
+impl Default for ShardedRunCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedRunCache {
+    pub fn new() -> Self {
+        Self { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Arc<Slot>>> {
+        &self.shards[(key >> 60) as usize % NUM_SHARDS]
+    }
+
+    /// Look up `key`, computing on a miss. Returns `(job, true)` when the
+    /// result came from the cache — including the case where this caller
+    /// waited for an identical in-flight computation — and `(job, false)`
+    /// when this caller ran `compute` itself. `compute` runs outside
+    /// every lock, so concurrent *distinct* jobs never serialize here.
+    pub fn get_or_compute(
+        &self,
+        key: u64,
+        compute: impl FnOnce() -> CachedJob,
+    ) -> (CachedJob, bool) {
+        let slot = {
+            let mut map = self.shard(key).lock().unwrap();
+            if let Some(slot) = map.get(&key) {
+                let slot = Arc::clone(slot);
+                drop(map);
+                return (slot.wait(), true);
+            }
+            let slot = Arc::new(Slot::default());
+            map.insert(key, Arc::clone(&slot));
+            slot
+        };
+        // compute outside every lock; the guard poisons the slot if
+        // `compute` panics, so waiters panic too instead of hanging
+        let mut guard = FillGuard { slot: &slot, filled: false };
+        let job = compute();
+        slot.fill(job.clone());
+        guard.filled = true;
+        (job, false)
+    }
+
+    /// Completed or in-flight entries currently held.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn probe(tag: usize) -> CachedJob {
+        CachedJob {
+            outcome: JobOutcome::Infeasible(format!("probe-{tag}")),
+            events: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hit_after_miss_and_distinct_keys_separate() {
+        let cache = ShardedRunCache::new();
+        let (a, hit) = cache.get_or_compute(1, || probe(1));
+        assert!(!hit);
+        assert!(matches!(&a.outcome, JobOutcome::Infeasible(m) if m == "probe-1"));
+        let (b, hit) = cache.get_or_compute(1, || probe(99));
+        assert!(hit, "second lookup of the same key must be a hit");
+        assert!(matches!(&b.outcome, JobOutcome::Infeasible(m) if m == "probe-1"));
+        let (_, hit) = cache.get_or_compute(2, || probe(2));
+        assert!(!hit, "a different key must compute");
+        assert_eq!(cache.len(), 2);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let cache = ShardedRunCache::new();
+        for i in 0..64u64 {
+            // use high bits so the shard selector actually varies
+            cache.get_or_compute(i << 58, || probe(i as usize));
+        }
+        assert_eq!(cache.len(), 64);
+        let occupied =
+            cache.shards.iter().filter(|s| !s.lock().unwrap().is_empty()).count();
+        assert!(occupied > 1, "64 spread keys must occupy multiple shards");
+    }
+
+    #[test]
+    fn panicked_computation_poisons_the_slot() {
+        let cache = ShardedRunCache::new();
+        let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.get_or_compute(9, || panic!("boom"));
+        }));
+        assert!(first.is_err());
+        // later lookups of the poisoned key propagate instead of hanging
+        let second = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.get_or_compute(9, || probe(9));
+        }));
+        assert!(second.is_err(), "poisoned slot must propagate the panic");
+        // other keys are unaffected
+        let (job, hit) = cache.get_or_compute(10, || probe(10));
+        assert!(!hit);
+        assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-10"));
+    }
+
+    #[test]
+    fn concurrent_duplicates_compute_once() {
+        let cache = ShardedRunCache::new();
+        let computed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                handles.push(s.spawn(|| {
+                    cache.get_or_compute(7, || {
+                        computed.fetch_add(1, Ordering::SeqCst);
+                        // widen the in-flight window so siblings really wait
+                        std::thread::sleep(std::time::Duration::from_millis(30));
+                        probe(7)
+                    })
+                }));
+            }
+            let results: Vec<(CachedJob, bool)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            assert_eq!(computed.load(Ordering::SeqCst), 1, "duplicates must compute once");
+            assert_eq!(results.iter().filter(|(_, hit)| !hit).count(), 1);
+            for (job, _) in &results {
+                assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-7"));
+            }
+        });
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,576 @@
+//! The `ExplorationService`: a typed, parallel job API over the search.
+//!
+//! The paper's evaluation is an embarrassingly parallel sweep — DFG sets
+//! × grid sizes × objectives — and this layer is what executes it at
+//! scale. A job is data ([`JobSpec`]): the DFG set, target grid,
+//! optimisation [`Objective`], [`SearchConfig`], [`MapperConfig`] and a
+//! base seed. Submitting specs to [`ExplorationService::run_batch`]
+//! assigns each a [`JobId`] and resolves it to a [`JobResult`] carrying
+//! the [`SearchResult`], per-phase timings (via `SearchStats`) and the
+//! full [`SearchEvent`] trace.
+//!
+//! Execution model:
+//!
+//! * a `std::thread` worker pool of `--jobs N` threads (default:
+//!   available parallelism); each worker **owns the `MappingEngine` of
+//!   the job it is running**, so the engine's feasibility cache stays
+//!   lock-free on the mapping hot path;
+//! * a sharded, mutex-protected [`cache::ShardedRunCache`] keyed by the
+//!   spec's content fingerprint dedupes identical specs across
+//!   experiments — duplicates submitted concurrently wait for the
+//!   in-flight twin instead of recomputing;
+//! * every job's mapper seed is **derived** as
+//!   `splitmix64(fingerprint(spec))` ([`JobSpec::derived_seed`]), a pure
+//!   function of the job's content, so results are reproducible
+//!   regardless of worker count or scheduling order — `--jobs 8` emits
+//!   byte-identical tables to `--jobs 1`;
+//! * progress streams to the caller as [`ServiceEvent`]s (job
+//!   started/improved/finished), the multi-job analogue of the
+//!   `Explorer`'s per-session observer.
+//!
+//! Searches score natively inside jobs (the optional PJRT scorer remains
+//! a single-session facility on the [`crate::coordinator::Coordinator`]
+//! path). The declarative experiment suite
+//! ([`crate::coordinator::suite`]) sits on top: each paper figure/table
+//! is a set of specs plus a fold over the completed results.
+
+pub mod cache;
+
+use crate::cgra::Grid;
+use crate::cost::CostModel;
+use crate::dfg::Dfg;
+use crate::mapper::{MapperConfig, MappingEngine};
+use crate::search::{Explorer, SearchConfig, SearchEvent, SearchResult};
+use crate::util::rng::splitmix64;
+use crate::util::{StableHasher, Stopwatch};
+use cache::{CachedJob, ShardedRunCache};
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Which cost model guides a job's search. (Experiment folds may still
+/// evaluate the *other* model on the result, as Fig 4 does.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    Area,
+    Power,
+}
+
+impl Objective {
+    pub fn cost_model(self) -> CostModel {
+        match self {
+            Objective::Area => CostModel::area(),
+            Objective::Power => CostModel::power(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Area => "area",
+            Objective::Power => "power",
+        }
+    }
+}
+
+/// One unit of exploration work, as data. Identical specs (by content,
+/// label excluded) are interchangeable: they fingerprint equally, derive
+/// the same seed, and produce the same result.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Display/grouping label (e.g. the experiment's DFG-set name). Not
+    /// part of the fingerprint: two labels asking for the same
+    /// computation share one run.
+    pub label: String,
+    pub dfgs: Vec<Dfg>,
+    pub grid: Grid,
+    pub objective: Objective,
+    pub search: SearchConfig,
+    pub mapper: MapperConfig,
+    /// Base seed mixed into [`Self::derived_seed`]; change it to get an
+    /// independent replication of the same sweep.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// A spec with the default objective (area), search and mapper
+    /// configuration.
+    pub fn new(label: impl Into<String>, dfgs: Vec<Dfg>, grid: Grid) -> Self {
+        let mapper = MapperConfig::default();
+        let seed = mapper.seed;
+        Self {
+            label: label.into(),
+            dfgs,
+            grid,
+            objective: Objective::Area,
+            search: SearchConfig::default(),
+            mapper,
+            seed,
+        }
+    }
+
+    /// Content fingerprint: every result-relevant field (DFGs, grid,
+    /// objective, search config, mapper config, base seed) — but not the
+    /// label. This keys the run cache and seeds the job.
+    ///
+    /// The exhaustive destructuring means a field added to `JobSpec`
+    /// breaks this function until someone decides whether it keys the
+    /// cache; `SearchConfig`/`MapperConfig`/`Dfg` hash themselves, so
+    /// their future fields participate automatically. Hashing uses the
+    /// release- and platform-stable [`StableHasher`] (never
+    /// `DefaultHasher`): per-job seeds derive from this value, so it is
+    /// part of the reproducibility contract.
+    pub fn fingerprint(&self) -> u64 {
+        let Self { label: _, dfgs, grid, objective, search, mapper, seed } = self;
+        let mut h = StableHasher::new();
+        dfgs.hash(&mut h);
+        grid.hash(&mut h);
+        objective.hash(&mut h);
+        search.hash(&mut h);
+        mapper.hash(&mut h);
+        seed.hash(&mut h);
+        h.finish()
+    }
+
+    /// The mapper seed this job actually runs with:
+    /// `splitmix64(fingerprint)`. A pure function of the spec's content,
+    /// so a suite's results do not depend on which worker picked the job
+    /// up, or in what order.
+    pub fn derived_seed(&self) -> u64 {
+        splitmix64(self.fingerprint())
+    }
+
+    /// `"label @ RxC"`, for progress lines.
+    pub fn describe(&self) -> String {
+        format!("{} @ {}x{}", self.label, self.grid.rows, self.grid.cols)
+    }
+}
+
+/// Service-assigned job handle, unique within one service instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// How a job resolved.
+#[derive(Debug, Clone)]
+pub enum JobOutcome {
+    Completed(SearchResult),
+    /// The DFG set does not map on that grid — a *result*, not an error.
+    Infeasible(String),
+    /// The spec itself was invalid (e.g. an empty DFG set): a caller bug
+    /// surfaced as data, so a worker never panics mid-batch — but kept
+    /// distinct from [`Self::Infeasible`] so folds cannot present it as
+    /// a scientific finding.
+    Rejected(String),
+}
+
+impl JobOutcome {
+    pub fn is_completed(&self) -> bool {
+        matches!(self, JobOutcome::Completed(_))
+    }
+
+    pub fn search_result(&self) -> Option<&SearchResult> {
+        match self {
+            JobOutcome::Completed(r) => Some(r),
+            JobOutcome::Infeasible(_) | JobOutcome::Rejected(_) => None,
+        }
+    }
+
+    /// The infeasibility diagnostic — `None` for completed *and*
+    /// rejected jobs (a rejected spec says nothing about mappability).
+    pub fn infeasible_reason(&self) -> Option<&str> {
+        match self {
+            JobOutcome::Infeasible(why) => Some(why),
+            JobOutcome::Completed(_) | JobOutcome::Rejected(_) => None,
+        }
+    }
+}
+
+/// The resolution of one submitted [`JobSpec`].
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: JobId,
+    pub label: String,
+    pub grid: Grid,
+    pub fingerprint: u64,
+    pub outcome: JobOutcome,
+    /// The session's full [`SearchEvent`] trace (replayed from the run
+    /// cache for deduplicated jobs, so every result carries one).
+    pub events: Vec<SearchEvent>,
+    /// Wall seconds this job occupied a worker (near zero on cache hits;
+    /// per-phase search timings live in `SearchStats::phase_secs`).
+    pub wall_secs: f64,
+    pub from_cache: bool,
+}
+
+impl JobResult {
+    pub fn best_cost(&self) -> Option<f64> {
+        self.outcome.search_result().map(|r| r.best_cost)
+    }
+}
+
+/// Progress stream of a batch, delivered to the `run_batch` callback on
+/// the submitting thread.
+#[derive(Debug, Clone)]
+pub enum ServiceEvent {
+    /// A worker picked the job up.
+    Started { id: JobId, describe: String, worker: usize },
+    /// The job's incumbent improved — forwarded from its event channel
+    /// when [`ServiceConfig::live_trace`] is set.
+    Improved { id: JobId, best_cost: f64, tested: usize },
+    /// The job resolved (`best_cost: None` means infeasible).
+    Finished {
+        id: JobId,
+        describe: String,
+        best_cost: Option<f64>,
+        secs: f64,
+        from_cache: bool,
+        done: usize,
+        total: usize,
+    },
+}
+
+/// Service tuning.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceConfig {
+    /// Worker threads; `0` means available parallelism.
+    pub jobs: usize,
+    /// Forward per-candidate `Improved` events as
+    /// [`ServiceEvent::Improved`] (chatty; meant for `--verbose`).
+    pub live_trace: bool,
+}
+
+/// Worker → coordinator messages (internal).
+enum WorkerMsg {
+    Started { index: usize, worker: usize },
+    Improved { id: JobId, best_cost: f64, tested: usize },
+    Finished { index: usize, result: Box<JobResult> },
+}
+
+/// The exploration service. See the module docs.
+pub struct ExplorationService {
+    cfg: ServiceConfig,
+    cache: ShardedRunCache,
+    next_id: AtomicU64,
+}
+
+impl Default for ExplorationService {
+    fn default() -> Self {
+        Self::new(ServiceConfig::default())
+    }
+}
+
+impl ExplorationService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        Self { cfg, cache: ShardedRunCache::new(), next_id: AtomicU64::new(0) }
+    }
+
+    /// Service with `jobs` workers and defaults otherwise.
+    pub fn with_jobs(jobs: usize) -> Self {
+        Self::new(ServiceConfig { jobs, ..Default::default() })
+    }
+
+    /// Effective worker-pool width.
+    pub fn workers(&self) -> usize {
+        if self.cfg.jobs > 0 {
+            self.cfg.jobs
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// Completed or in-flight runs held by the service's run cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Run one job synchronously on the calling thread.
+    pub fn run_job(&self, spec: &JobSpec) -> JobResult {
+        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
+        self.execute(id, spec, None)
+    }
+
+    /// Run a batch on the worker pool; results return in submission
+    /// order. `progress` (called on this thread) receives the live
+    /// [`ServiceEvent`] stream.
+    ///
+    /// Duplicate specs inside one batch resolve to a single computation:
+    /// the first claims the cache slot and the duplicate's worker waits
+    /// for that result. When duplicates of *long* jobs are likely,
+    /// pre-deduplicate by [`JobSpec::fingerprint`] (as the experiment
+    /// suite does) so pool threads keep pulling fresh work instead of
+    /// waiting on a twin.
+    pub fn run_batch(
+        &self,
+        specs: Vec<JobSpec>,
+        mut progress: Option<&mut dyn FnMut(&ServiceEvent)>,
+    ) -> Vec<JobResult> {
+        let total = specs.len();
+        if total == 0 {
+            return Vec::new();
+        }
+        let ids: Vec<JobId> = specs
+            .iter()
+            .map(|_| JobId(self.next_id.fetch_add(1, Ordering::Relaxed)))
+            .collect();
+        // workers() >= 1 and total >= 1 here, so the pool is never empty
+        let workers = self.workers().min(total);
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let mut results: Vec<Option<JobResult>> = (0..total).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for worker in 0..workers {
+                let tx = tx.clone();
+                let (next, specs, ids) = (&next, &specs, &ids);
+                scope.spawn(move || loop {
+                    let index = next.fetch_add(1, Ordering::Relaxed);
+                    if index >= specs.len() {
+                        break;
+                    }
+                    let _ = tx.send(WorkerMsg::Started { index, worker });
+                    let live = if self.cfg.live_trace { Some(&tx) } else { None };
+                    let result = self.execute(ids[index], &specs[index], live);
+                    let _ = tx.send(WorkerMsg::Finished { index, result: Box::new(result) });
+                });
+            }
+            drop(tx); // the receive loop ends when the last worker exits
+            let mut done = 0usize;
+            for msg in rx {
+                let event = match msg {
+                    WorkerMsg::Started { index, worker } => ServiceEvent::Started {
+                        id: ids[index],
+                        describe: specs[index].describe(),
+                        worker,
+                    },
+                    WorkerMsg::Improved { id, best_cost, tested } => {
+                        ServiceEvent::Improved { id, best_cost, tested }
+                    }
+                    WorkerMsg::Finished { index, result } => {
+                        done += 1;
+                        let event = ServiceEvent::Finished {
+                            id: ids[index],
+                            describe: specs[index].describe(),
+                            best_cost: result.best_cost(),
+                            secs: result.wall_secs,
+                            from_cache: result.from_cache,
+                            done,
+                            total,
+                        };
+                        results[index] = Some(*result);
+                        event
+                    }
+                };
+                if let Some(cb) = progress.as_deref_mut() {
+                    cb(&event);
+                }
+            }
+        });
+        results.into_iter().map(|r| r.expect("every submitted job resolves")).collect()
+    }
+
+    /// Resolve one spec: serve it from the run cache or compute it on the
+    /// calling thread (waiting on an identical in-flight run if one
+    /// exists).
+    fn execute(
+        &self,
+        id: JobId,
+        spec: &JobSpec,
+        live: Option<&mpsc::Sender<WorkerMsg>>,
+    ) -> JobResult {
+        let sw = Stopwatch::start();
+        let fingerprint = spec.fingerprint();
+        let (cached, from_cache) =
+            self.cache.get_or_compute(fingerprint, || run_spec(id, spec, live));
+        JobResult {
+            id,
+            label: spec.label.clone(),
+            grid: spec.grid,
+            fingerprint,
+            outcome: cached.outcome,
+            events: cached.events,
+            wall_secs: sw.secs(),
+            from_cache,
+        }
+    }
+}
+
+/// Execute one spec on the calling thread: a per-job [`MappingEngine`]
+/// (its feasibility cache stays thread-local and lock-free) seeded with
+/// the spec's derived seed, a per-job event channel owned by the session
+/// observer, and the objective's cost model.
+fn run_spec(id: JobId, spec: &JobSpec, live: Option<&mpsc::Sender<WorkerMsg>>) -> CachedJob {
+    let engine =
+        MappingEngine::new(MapperConfig { seed: spec.derived_seed(), ..spec.mapper.clone() });
+    let cost = spec.objective.cost_model();
+    // per-job event channel: the session owns the sender half (an owned
+    // observer closure), the receiver drains into the result's trace —
+    // and improvements stream live to the service progress channel
+    let (events_tx, events_rx) = mpsc::channel();
+    let live_tx = live.cloned();
+    let observer = move |event: &SearchEvent| {
+        let _ = events_tx.send(event.clone());
+        if let (SearchEvent::Improved { best_cost, tested, .. }, Some(tx)) = (event, &live_tx)
+        {
+            let _ = tx.send(WorkerMsg::Improved {
+                id,
+                best_cost: *best_cost,
+                tested: *tested,
+            });
+        }
+    };
+    let run = Explorer::new(spec.grid)
+        .dfgs(&spec.dfgs)
+        .engine(&engine)
+        .cost(&cost)
+        .config(spec.search.clone())
+        .observer_owned(Box::new(observer))
+        .run();
+    // the observer (and with it the sender) dropped when `run` returned,
+    // so this drains the complete trace
+    let events: Vec<SearchEvent> = events_rx.try_iter().collect();
+    let outcome = match run {
+        Ok(result) => JobOutcome::Completed(result),
+        // only genuine unmappability is infeasibility-as-data; builder
+        // errors (empty DFG set, empty pipeline) are caller bugs
+        Err(err @ crate::search::ExploreError::Infeasible(_)) => {
+            JobOutcome::Infeasible(err.to_string())
+        }
+        Err(bad_spec) => JobOutcome::Rejected(bad_spec.to_string()),
+    };
+    CachedJob { outcome, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::benchmarks;
+
+    fn tiny_spec(label: &str, size: (usize, usize)) -> JobSpec {
+        JobSpec {
+            search: SearchConfig { l_test: 40, l_fail: 2, gsg_passes: 1, ..Default::default() },
+            seed: 1,
+            ..JobSpec::new(label, vec![benchmarks::benchmark("SOB")], Grid::new(size.0, size.1))
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_label_and_tracks_content() {
+        let a = tiny_spec("x", (6, 6));
+        let mut b = tiny_spec("y", (6, 6));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "label must not key the cache");
+
+        b = tiny_spec("x", (6, 7));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "grid change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.search.l_test = 41;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "l_test change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.seed = 2;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "seed change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.objective = Objective::Power;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "objective change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.dfgs.push(benchmarks::benchmark("GB"));
+        assert_ne!(a.fingerprint(), b.fingerprint(), "DFG-set change must miss");
+    }
+
+    #[test]
+    fn derived_seed_is_content_stable() {
+        let a = tiny_spec("x", (6, 6));
+        assert_eq!(a.derived_seed(), tiny_spec("renamed", (6, 6)).derived_seed());
+        let mut b = tiny_spec("x", (6, 6));
+        b.seed = 2;
+        assert_ne!(a.derived_seed(), b.derived_seed());
+    }
+
+    #[test]
+    fn run_job_completes_and_caches() {
+        let service = ExplorationService::with_jobs(1);
+        let spec = tiny_spec("one", (6, 6));
+        let r = service.run_job(&spec);
+        assert!(r.outcome.is_completed(), "{:?}", r.outcome.infeasible_reason());
+        assert!(!r.from_cache);
+        assert!(!r.events.is_empty(), "the event trace must be captured");
+        assert!(r.best_cost().unwrap() > 0.0);
+        let again = service.run_job(&spec);
+        assert!(again.from_cache);
+        assert_eq!(again.best_cost(), r.best_cost());
+        assert_eq!(again.events.len(), r.events.len(), "cached jobs replay the trace");
+        assert_eq!(service.cache_len(), 1);
+    }
+
+    #[test]
+    fn infeasible_spec_is_a_result_not_a_panic() {
+        // SAD (63 compute ops) cannot fit a 5x5 (9 compute cells)
+        let spec = JobSpec {
+            search: SearchConfig { l_test: 20, ..Default::default() },
+            ..JobSpec::new("no", vec![benchmarks::benchmark("SAD")], Grid::new(5, 5))
+        };
+        let r = ExplorationService::with_jobs(1).run_job(&spec);
+        assert!(!r.outcome.is_completed());
+        assert!(r.outcome.infeasible_reason().is_some());
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_not_infeasible() {
+        // an empty DFG set is a caller bug, not an unmappability finding
+        let spec = JobSpec::new("empty", Vec::new(), Grid::new(5, 5));
+        let r = ExplorationService::with_jobs(1).run_job(&spec);
+        assert!(matches!(r.outcome, JobOutcome::Rejected(_)), "{:?}", r.outcome);
+        assert!(r.outcome.infeasible_reason().is_none());
+        assert!(r.outcome.search_result().is_none());
+    }
+
+    #[test]
+    fn parallel_duplicate_submissions_compute_once() {
+        let service = ExplorationService::with_jobs(4);
+        let specs: Vec<JobSpec> = (0..4).map(|_| tiny_spec("dup", (6, 6))).collect();
+        let results = service.run_batch(specs, None);
+        assert_eq!(results.len(), 4);
+        let computed = results.iter().filter(|r| !r.from_cache).count();
+        assert_eq!(computed, 1, "identical concurrent specs must compute once");
+        let costs: Vec<_> = results.iter().map(|r| r.best_cost()).collect();
+        assert!(costs.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(service.cache_len(), 1);
+    }
+
+    #[test]
+    fn batch_results_keep_submission_order_and_are_worker_count_invariant() {
+        let specs = vec![
+            tiny_spec("a", (5, 5)),
+            tiny_spec("b", (6, 6)),
+            tiny_spec("c", (6, 7)),
+        ];
+        let serial = ExplorationService::with_jobs(1).run_batch(specs.clone(), None);
+        let mut finished = 0usize;
+        let mut cb = |ev: &ServiceEvent| {
+            if matches!(ev, ServiceEvent::Finished { .. }) {
+                finished += 1;
+            }
+        };
+        let parallel = ExplorationService::with_jobs(3).run_batch(specs, Some(&mut cb));
+        assert_eq!(finished, 3);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.label, p.label, "submission order must be preserved");
+            assert_eq!(s.fingerprint, p.fingerprint);
+            assert_eq!(s.best_cost(), p.best_cost(), "{}: worker count changed result", s.label);
+            let (a, b) = (s.outcome.search_result(), p.outcome.search_result());
+            assert_eq!(
+                a.map(|r| r.best_layout.clone()),
+                b.map(|r| r.best_layout.clone()),
+                "{}: layouts must match across worker counts",
+                s.label
+            );
+        }
+    }
+}

@@ -5,6 +5,32 @@
 //! keys), strings (quoted or bare), numbers, booleans and simple arrays
 //! of scalars. That covers everything `coordinator::ExperimentConfig`
 //! needs.
+//!
+//! ## Recognized keys
+//!
+//! `ExperimentConfig::apply_file` reads exactly these dotted keys;
+//! anything else is ignored (it is not an error, so configs can carry
+//! keys for other tools):
+//!
+//! | Key | Type | Maps to |
+//! |-----|------|---------|
+//! | `search.l_test` | int | `l_test_base` (budget at the 10×10 reference size) |
+//! | `search.l_fail` | int | `l_fail` (GSG failChart threshold) |
+//! | `search.run_gsg` | bool | `run_gsg` |
+//! | `search.gsg_passes` | int | `gsg_passes` |
+//! | `search.use_heatmap` | bool | `use_heatmap` |
+//! | `search.opsg_skip_arith` | bool | `opsg_skip_arith` (Section IV-G noGSG variant) |
+//! | `runtime.use_xla_scorer` | bool | `use_xla_scorer` |
+//! | `mapper.route_iters` | int | `mapper.route_iters` |
+//! | `mapper.placement_attempts` | int | `mapper.placement_attempts` |
+//! | `mapper.max_reserves` | int | `mapper.max_reserves` |
+//! | `mapper.hist_increment` | float | `mapper.hist_increment` |
+//! | `mapper.present_penalty` | float | `mapper.present_penalty` |
+//! | `mapper.seed` | int | `mapper.seed` (base seed; per-job seeds derive from it) |
+//! | `mapper.feasibility_cache` | bool | `mapper.feasibility_cache` |
+//! | `service.jobs` | int | `jobs` (suite worker threads; 0 = available parallelism) |
+//! | `results_dir` | string | `results_dir` |
+//! | `verbose` | bool | `verbose` |
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -14,6 +14,7 @@ pub mod prop;
 pub mod rng;
 pub mod table;
 
+use std::hash::Hasher;
 use std::time::Instant;
 
 /// Wall-clock stopwatch used by search statistics (Table IV) and the
@@ -36,6 +37,60 @@ impl Stopwatch {
     /// Elapsed milliseconds since construction.
     pub fn millis(&self) -> f64 {
         self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// FNV-1a 64-bit [`std::hash::Hasher`], stable across Rust releases and
+/// platforms — unlike `DefaultHasher`, whose algorithm is explicitly
+/// unspecified. Used wherever a hash is part of a *reproducibility
+/// contract* (the service derives per-job mapper seeds from spec
+/// fingerprints, so a toolchain upgrade must not re-seed every
+/// experiment). The multi-byte writes are overridden to little-endian
+/// (the defaults use native endianness) and `usize` is widened to `u64`
+/// so 32- and 64-bit hosts agree.
+pub struct StableHasher(u64);
+
+impl StableHasher {
+    pub fn new() -> Self {
+        Self(0xCBF2_9CE4_8422_2325) // FNV offset basis
+    }
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher for StableHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01B3); // FNV prime
+        }
+    }
+
+    fn write_u8(&mut self, i: u8) {
+        self.write(&[i]);
+    }
+    fn write_u16(&mut self, i: u16) {
+        self.write(&i.to_le_bytes());
+    }
+    fn write_u32(&mut self, i: u32) {
+        self.write(&i.to_le_bytes());
+    }
+    fn write_u64(&mut self, i: u64) {
+        self.write(&i.to_le_bytes());
+    }
+    fn write_u128(&mut self, i: u128) {
+        self.write(&i.to_le_bytes());
+    }
+    fn write_usize(&mut self, i: usize) {
+        self.write_u64(i as u64);
     }
 }
 
@@ -67,5 +122,24 @@ mod tests {
         assert_eq!(fmt_f(-0.000001, 2), "0.00");
         assert_eq!(fmt_f(1.2345, 2), "1.23");
         assert_eq!(fmt_f(-1.5, 1), "-1.5");
+    }
+
+    #[test]
+    fn stable_hasher_is_pinned_fnv1a() {
+        // FNV-1a reference vectors: these values are a compatibility
+        // contract (per-job seeds derive from them) and must never change
+        let mut h = StableHasher::new();
+        assert_eq!(h.finish(), 0xCBF2_9CE4_8422_2325, "empty input = offset basis");
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xAF63_DC4C_8601_EC8C);
+        let mut h = StableHasher::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171F73967E8);
+        // widened usize and LE multi-byte writes agree with raw bytes
+        let mut a = StableHasher::new();
+        a.write_usize(0x0102_0304);
+        let mut b = StableHasher::new();
+        b.write(&0x0102_0304u64.to_le_bytes());
+        assert_eq!(a.finish(), b.finish());
     }
 }

@@ -10,23 +10,29 @@ pub struct Rng {
     s: [u64; 4],
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
+/// One step of the splitmix64 sequence: mixes `x + γ` through the
+/// finalizer. This is the canonical stateless form — the project's seed
+/// expansion ([`Rng::seed`]) and the service's per-job seed derivation
+/// (`JobSpec::derived_seed`) both go through here, so the mixer exists
+/// exactly once.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
     z ^ (z >> 31)
 }
 
 impl Rng {
-    /// Create a generator from a 64-bit seed.
+    /// Create a generator from a 64-bit seed (four splitmix64 steps —
+    /// the sequence `mix(seed + kγ)` for k = 1..=4, identical to the
+    /// historical stateful expansion).
     pub fn seed(seed: u64) -> Self {
-        let mut sm = seed;
+        const GAMMA: u64 = 0x9E3779B97F4A7C15;
         let s = [
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
-            splitmix64(&mut sm),
+            splitmix64(seed),
+            splitmix64(seed.wrapping_add(GAMMA)),
+            splitmix64(seed.wrapping_add(GAMMA.wrapping_mul(2))),
+            splitmix64(seed.wrapping_add(GAMMA.wrapping_mul(3))),
         ];
         Self { s }
     }
@@ -107,6 +113,30 @@ mod tests {
         let mut b = Rng::seed(42);
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seed_expansion_matches_stateful_splitmix() {
+        // the historical expansion advanced a state by γ before each mix;
+        // the pure form must reproduce it exactly (results depend on it)
+        fn stateful(state: &mut u64) -> u64 {
+            *state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = *state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let mut sm = seed;
+            let expect = [
+                stateful(&mut sm),
+                stateful(&mut sm),
+                stateful(&mut sm),
+                stateful(&mut sm),
+            ];
+            assert_eq!(Rng::seed(seed).s, expect);
+            assert_eq!(splitmix64(seed), expect[0]);
         }
     }
 

@@ -1,0 +1,140 @@
+//! Integration tests for the `ExplorationService` job layer and the
+//! declarative experiment suite: worker-count invariance (the property
+//! behind byte-identical `--jobs N` CSVs), run-cache keying, and the
+//! end-to-end suite path.
+
+use helex::cgra::Grid;
+use helex::coordinator::{experiments, suite, ExperimentConfig};
+use helex::dfg::benchmarks;
+use helex::search::{SearchConfig, SearchEvent};
+use helex::service::{ExplorationService, JobSpec, Objective, ServiceEvent};
+use helex::util::prop;
+
+fn tiny_cfg(seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        l_test_base: 30,
+        gsg_passes: 1,
+        use_xla_scorer: false,
+        ..Default::default()
+    };
+    cfg.mapper.seed = seed;
+    cfg
+}
+
+/// The suite's emitted `(csv_basename, csv_body)` pairs for one worker
+/// count (fresh service per call, so nothing is shared between runs).
+fn suite_csvs(cfg: &ExperimentConfig, name: &str, jobs: usize) -> Vec<(String, String)> {
+    let defs = experiments::find(name).unwrap();
+    let service = ExplorationService::with_jobs(jobs);
+    suite::run_suite(cfg, &defs, true, &service, None)
+        .into_iter()
+        .map(|(csv, table)| (csv, table.csv()))
+        .collect()
+}
+
+#[test]
+fn two_and_eight_worker_suites_emit_identical_tables() {
+    // the deterministic-seeding property: per-job seeds derive from job
+    // content, so worker count and scheduling order cannot change any
+    // table cell (fig9 has no wall-clock cells, making the comparison
+    // exact). Replayed over varying base seeds by the property harness.
+    prop::forall("worker-count invariance", 2, 0xC6A1, |g| {
+        let cfg = tiny_cfg(g.rng.next_u64());
+        let two = suite_csvs(&cfg, "fig9", 2);
+        let eight = suite_csvs(&cfg, "fig9", 8);
+        if two != eight {
+            return Err(format!(
+                "fig9 tables differ between 2 and 8 workers (seed {:#x})",
+                cfg.mapper.seed
+            ));
+        }
+        if two.len() != 1 || two[0].0 != "fig9_size_sweep" {
+            return Err("fig9 must emit exactly its one CSV".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn base_seed_still_selects_independent_replications() {
+    // derived seeds must not collapse distinct base seeds onto one run
+    let a = suite_csvs(&tiny_cfg(1), "fig9", 2);
+    let b = suite_csvs(&tiny_cfg(1), "fig9", 4);
+    assert_eq!(a, b, "same base seed must reproduce exactly");
+    let spec_a = JobSpec {
+        seed: 1,
+        ..JobSpec::new("s", benchmarks::dfg_set("S4"), Grid::new(9, 9))
+    };
+    let spec_b = JobSpec { seed: 2, ..spec_a.clone() };
+    assert_ne!(spec_a.derived_seed(), spec_b.derived_seed());
+}
+
+#[test]
+fn run_cache_keying_matches_spec_content() {
+    // identical specs hit; any result-relevant field change misses
+    let service = ExplorationService::with_jobs(2);
+    let base = JobSpec {
+        search: SearchConfig { l_test: 30, gsg_passes: 1, ..Default::default() },
+        ..JobSpec::new("base", vec![benchmarks::benchmark("SOB")], Grid::new(6, 6))
+    };
+    let first = service.run_job(&base);
+    assert!(!first.from_cache);
+    assert!(service.run_job(&base).from_cache, "identical spec must hit");
+
+    let mut relabeled = base.clone();
+    relabeled.label = "other-label".into();
+    assert!(service.run_job(&relabeled).from_cache, "label is not part of the key");
+
+    let mut grid = base.clone();
+    grid.grid = Grid::new(6, 7);
+    assert!(!service.run_job(&grid).from_cache, "grid change must miss");
+
+    let mut l_test = base.clone();
+    l_test.search.l_test = 31;
+    assert!(!service.run_job(&l_test).from_cache, "l_test change must miss");
+
+    let mut seed = base.clone();
+    seed.seed = 99;
+    assert!(!service.run_job(&seed).from_cache, "seed change must miss");
+
+    let mut objective = base.clone();
+    objective.objective = Objective::Power;
+    assert!(!service.run_job(&objective).from_cache, "objective change must miss");
+
+    assert_eq!(service.cache_len(), 5);
+}
+
+#[test]
+fn suite_batch_streams_progress_and_replays_event_traces() {
+    let cfg = tiny_cfg(7);
+    let defs = experiments::find("fig9").unwrap();
+    let service = ExplorationService::with_jobs(2);
+    let mut started = 0usize;
+    let mut finished = 0usize;
+    let mut last_done = 0usize;
+    let mut cb = |ev: &ServiceEvent| match ev {
+        ServiceEvent::Started { .. } => started += 1,
+        ServiceEvent::Finished { done, total, .. } => {
+            finished += 1;
+            assert!(*done > last_done && *done <= *total);
+            last_done = *done;
+        }
+        ServiceEvent::Improved { .. } => {}
+    };
+    let tables = suite::run_suite(&cfg, &defs, true, &service, Some(&mut cb));
+    assert_eq!(tables.len(), 1);
+    assert_eq!(started, 5, "fig9 sweeps five sizes");
+    assert_eq!(finished, 5);
+    // every feasible job's result carries a usable event trace
+    let spec = JobSpec {
+        search: cfg.search_config(Grid::new(9, 9)),
+        ..JobSpec::new("probe", benchmarks::dfg_set("S4"), Grid::new(9, 9))
+    };
+    let r = service.run_job(&spec);
+    if r.outcome.is_completed() {
+        assert!(r
+            .events
+            .iter()
+            .any(|e| matches!(e, SearchEvent::PhaseFinished { .. })));
+    }
+}
