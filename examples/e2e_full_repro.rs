@@ -46,7 +46,7 @@ fn main() {
         l_test_base: if quick { 300 } else { 600 },
         ..Default::default()
     };
-    let service = ExplorationService::new(ServiceConfig { jobs, live_trace: false });
+    let service = ExplorationService::new(ServiceConfig { jobs, ..Default::default() });
     println!("== HeLEx end-to-end reproduction ==");
     println!(
         "12 DFGs (Table II) x {} CGRA sizes, {} worker(s)\n",

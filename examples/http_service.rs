@@ -1,0 +1,99 @@
+//! Serving walkthrough: start `helex serve` in-process on an ephemeral
+//! port with an on-disk result store, drive it over real HTTP with the
+//! `server::client` helpers (submit → live event stream → result), then
+//! prove the warm path: a second identical submission is answered from
+//! the store without recomputation. Everything `curl` would see, as a
+//! runnable program.
+//!
+//! ```sh
+//! cargo run --release --example http_service
+//! ```
+
+use helex::search::SearchConfig;
+use helex::server::{client, Server, ServerConfig};
+use helex::service::wire;
+use helex::service::JobSpec;
+use helex::util::json::{self, Json};
+use helex::Grid;
+use std::time::Duration;
+
+fn main() {
+    // 1. A server like `helex serve --jobs 2 --store-dir …` would give
+    //    you, but on an ephemeral port and a temp store.
+    let store_dir = std::env::temp_dir().join(format!("helex-example-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let server = Server::bind(ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 2,
+        store_dir: Some(store_dir.clone()),
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let handle = server.handle().expect("handle");
+    let serving = std::thread::spawn(move || server.serve().expect("serve"));
+    println!("serving on http://{addr} (store: {})", store_dir.display());
+
+    // 2. Submit the paper's S4 set on 8x8 at a bench-scale budget —
+    //    exactly what `helex submit --dfgs S4 --size 8x8` sends.
+    let grid = Grid::new(8, 8);
+    let spec = JobSpec {
+        search: SearchConfig {
+            l_test: SearchConfig::scale_l_test(200, grid),
+            gsg_passes: 1,
+            ..Default::default()
+        },
+        ..JobSpec::new("example", helex::dfg::benchmarks::dfg_set("S4"), grid)
+    };
+    let id = client::submit_spec(&addr, &spec).expect("submit");
+    println!("submitted: POST /v1/jobs -> {id}");
+
+    // 3. Tail the live event stream (chunked ndjson) while the job runs.
+    let (status, body) =
+        client::request_raw(&addr, "GET", &format!("/v1/jobs/{id}/events"), b"")
+            .expect("event stream");
+    assert_eq!(status, 200);
+    let lines = String::from_utf8(body).expect("ndjson");
+    let improvements = lines
+        .lines()
+        .filter_map(|l| json::parse(l).ok())
+        .filter(|e| e.get("type").and_then(Json::as_str) == Some("improved"))
+        .count();
+    println!("event stream: {} events, {improvements} improvements", lines.lines().count());
+
+    // 4. Poll the result.
+    let cold = client::wait_result(&addr, id, Duration::from_millis(100), 600).expect("result");
+    println!(
+        "cold run : cost {:?} in {:.2}s (from_cache: {})",
+        cold.best_cost(),
+        cold.wall_secs,
+        cold.from_cache
+    );
+
+    // 5. Same spec again: the content fingerprint matches, so the
+    //    answer comes from cache/store — no second search.
+    let warm = {
+        let id = client::submit_spec(&addr, &spec).expect("resubmit");
+        client::wait_result(&addr, id, Duration::from_millis(50), 600).expect("warm result")
+    };
+    println!(
+        "warm run : cost {:?} in {:.2}s (from_cache: {})",
+        warm.best_cost(),
+        warm.wall_secs,
+        warm.from_cache
+    );
+    assert!(warm.from_cache, "identical spec must be served from cache");
+    assert_eq!(
+        wire::strip_volatile(&wire::encode_result(&warm)).to_string(),
+        wire::strip_volatile(&wire::encode_result(&cold)).to_string(),
+        "cached answer is byte-identical (volatile fields aside)"
+    );
+
+    // 6. Introspection + graceful shutdown (what Ctrl-C does).
+    let stats = client::get_json(&addr, "/v1/stats").expect("stats");
+    println!("/v1/stats: {}", stats.to_string());
+    handle.begin_shutdown();
+    serving.join().expect("drained");
+    println!("drained cleanly; store persists at {}", store_dir.display());
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

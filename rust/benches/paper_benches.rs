@@ -8,8 +8,11 @@
 //! ```
 
 use helex::coordinator::{experiments, suite, Coordinator, ExperimentConfig};
+use helex::service::cache::CachedJob;
 use helex::service::ExplorationService;
+use helex::store::ResultStore;
 use helex::util::bench::Harness;
+use helex::util::json::{self, Json};
 
 fn co() -> Coordinator {
     Coordinator::new(ExperimentConfig {
@@ -42,6 +45,7 @@ fn main() {
     // the run cache from hiding work, so the numbers track the worker
     // pool's real speedup in the perf trajectory.
     println!("\n== suite throughput (fig9 sweep, 5 jobs) ==");
+    let mut throughput: Vec<(String, f64)> = Vec::new();
     for workers in [1usize, 2, 4] {
         let name = format!("suite::fig9@{workers}w");
         let mut unique_jobs = 0usize;
@@ -59,13 +63,95 @@ fn main() {
         });
         match h.results.last() {
             Some(r) if r.name == name && unique_jobs > 0 => {
-                println!(
-                    "    -> {:.2} jobs/s over {unique_jobs} unique jobs",
-                    unique_jobs as f64 / (r.median_ns / 1e9)
-                );
+                let jobs_per_sec = unique_jobs as f64 / (r.median_ns / 1e9);
+                println!("    -> {jobs_per_sec:.2} jobs/s over {unique_jobs} unique jobs");
+                throughput.push((format!("{workers}w"), jobs_per_sec));
             }
             _ => {}
         }
     }
+
+    // Result-store round-trip: encode+write+read+decode of one real
+    // completed JobResult. This is the per-job overhead `helex serve`
+    // pays for durability; it must stay orders of magnitude under the
+    // search itself. The fixture (a full search) is skipped entirely
+    // when the bench is filtered out.
+    let mut store_roundtrip_ns = 0.0f64;
+    if h.enabled("store::roundtrip") {
+        println!("\n== result store round-trip ==");
+        let store_dir =
+            std::env::temp_dir().join(format!("helex-bench-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let store = ResultStore::open(&store_dir, 0).expect("open bench store");
+        let service = ExplorationService::with_jobs(1);
+        let spec = helex::JobSpec {
+            search: helex::search::SearchConfig {
+                l_test: 120,
+                gsg_passes: 1,
+                ..Default::default()
+            },
+            ..helex::JobSpec::new(
+                "bench",
+                helex::dfg::benchmarks::dfg_set("S4"),
+                helex::Grid::new(8, 8),
+            )
+        };
+        let result = service.run_job(&spec);
+        let cached =
+            CachedJob { outcome: result.outcome.clone(), events: result.events.clone() };
+        let fingerprint = result.fingerprint;
+        h.bench("store::roundtrip", || {
+            store.put(fingerprint, &cached).expect("put");
+            store.get(fingerprint).expect("hit")
+        });
+        store_roundtrip_ns = h
+            .results
+            .iter()
+            .rev()
+            .find(|r| r.name == "store::roundtrip")
+            .map(|r| r.median_ns)
+            .unwrap_or(0.0);
+        let _ = std::fs::remove_dir_all(&store_dir);
+    }
+
+    // Emit the serving-layer perf record (consumed by the perf
+    // trajectory like the experiment CSVs). Metrics are merged
+    // per-field with any existing record, so a filtered run refreshes
+    // only what it measured and never clobbers the other metric with a
+    // zero.
+    let ran_suite = !throughput.is_empty();
+    let ran_store = store_roundtrip_ns > 0.0;
+    if ran_suite || ran_store {
+        let prior = std::fs::read_to_string("BENCH_service.json")
+            .ok()
+            .and_then(|text| json::parse(&text).ok());
+        let keep = |key: &str, fallback: Json| {
+            prior.as_ref().and_then(|p| p.get(key)).cloned().unwrap_or(fallback)
+        };
+        let suite_field = if ran_suite {
+            Json::Obj(
+                throughput
+                    .iter()
+                    .map(|(workers, jps)| (workers.clone(), Json::F64(*jps)))
+                    .collect(),
+            )
+        } else {
+            keep("suite_jobs_per_sec", Json::Obj(Vec::new()))
+        };
+        let store_field = if ran_store {
+            Json::F64(store_roundtrip_ns)
+        } else {
+            keep("store_roundtrip_ns", Json::F64(0.0))
+        };
+        let record = Json::obj(vec![
+            ("bench", Json::str("service")),
+            ("suite_jobs_per_sec", suite_field),
+            ("store_roundtrip_ns", store_field),
+        ]);
+        if std::fs::write("BENCH_service.json", record.to_string()).is_ok() {
+            println!("\nwrote BENCH_service.json");
+        }
+    }
+
     println!("\n{} experiments benchmarked", h.results.len());
 }

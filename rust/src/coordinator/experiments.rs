@@ -740,7 +740,7 @@ pub fn find(name: &str) -> anyhow::Result<Vec<&'static ExperimentDef>> {
 pub fn run_experiment(co: &mut Coordinator, name: &str, quick: bool) -> anyhow::Result<()> {
     let defs = find(name)?;
     let service =
-        ExplorationService::new(ServiceConfig { jobs: co.cfg.jobs, live_trace: false });
+        ExplorationService::new(ServiceConfig { jobs: co.cfg.jobs, ..Default::default() });
     let verbose = co.cfg.verbose;
     let mut printer = |ev: &ServiceEvent| {
         if let ServiceEvent::Started { describe, .. } = ev {

@@ -61,9 +61,20 @@
 //!   phases (OPSG then GSG), plus the convergence trace recorded from
 //!   the event stream.
 //! * [`service`] — the parallel job layer: `JobSpec`/`JobResult`,
-//!   the worker pool, the sharded deduplicating run cache, and the
-//!   `ServiceEvent` progress stream. The seam for any future
-//!   serving/batching front-end.
+//!   the worker pool, the sharded deduplicating run cache (bounded,
+//!   LRU), the `ServiceEvent` progress stream, the async
+//!   [`service::registry::JobRegistry`] (submit/poll states with a live
+//!   per-job event log) and the [`service::wire`] JSON codecs.
+//! * [`store`] — the durable tier under the run cache: a
+//!   content-addressed on-disk result store (`store/<fingerprint>.json`,
+//!   atomic writes, versioned schema, corruption-tolerant loading, LRU
+//!   eviction) so identical specs are never recomputed across processes
+//!   or restarts.
+//! * [`server`] — the serving front-end: a dependency-free HTTP/1.1 +
+//!   JSON API on `std::net` (`helex serve`) exposing submit/poll/stream
+//!   routes over the registry, with a bounded accept queue, read
+//!   timeouts, structured errors and SIGINT graceful drain; plus the
+//!   `helex submit` client ([`server::client`]).
 //! * [`baselines`] — HETA-like and REVAMP-like comparators (Fig 11).
 //! * [`runtime`] — PJRT client executing the AOT-compiled XLA artifact
 //!   (built once by `python/compile/aot.py`; Python is never on the
@@ -86,8 +97,10 @@ pub mod metrics;
 pub mod ops;
 pub mod runtime;
 pub mod search;
+pub mod server;
 pub mod service;
 pub mod sim;
+pub mod store;
 pub mod util;
 
 pub use cgra::{Grid, Layout};
@@ -96,4 +109,6 @@ pub use dfg::Dfg;
 pub use mapper::{
     MapFailure, MapOutcome, MapRequest, Mapper, MapperConfig, Mapping, MappingEngine,
 };
+pub use server::{Server, ServerConfig};
 pub use service::{ExplorationService, JobId, JobResult, JobSpec, Objective, ServiceConfig};
+pub use store::ResultStore;

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! helex repro [--quick] [--jobs N]
+//! helex serve [--addr H:P] [--jobs N] [--store-dir DIR]
+//! helex submit [--addr H:P] [--dfgs S4] [--size 9x9]
 //! helex exp <fig3|...|table8|all> [--quick] [--jobs N] [--l-test N] [--no-gsg]
 //! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N]
 //! helex map --dfg FFT --size 10x10
@@ -86,8 +88,11 @@ fn run_suite_cmd(args: &Args, name: &str) -> Result<()> {
     let quick = args.flag("quick") || !args.flag("paper-scale");
     let cfg = build_config(args);
     let defs = experiments::find(name)?;
-    let service =
-        ExplorationService::new(ServiceConfig { jobs: cfg.jobs, live_trace: cfg.verbose });
+    let service = ExplorationService::new(ServiceConfig {
+        jobs: cfg.jobs,
+        live_trace: cfg.verbose,
+        ..Default::default()
+    });
     let sw = Stopwatch::start();
     let mut printer = |ev: &ServiceEvent| match ev {
         ServiceEvent::Started { id, describe, worker } => {
@@ -144,6 +149,74 @@ fn main() -> Result<()> {
         // the full paper reproduction: every figure/table through the
         // parallel suite path
         "repro" => run_suite_cmd(&args, "all")?,
+        "serve" => {
+            let cfg = helex::ServerConfig {
+                addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+                jobs: args.usize_or("jobs", 0),
+                store_dir: args.get("store-dir").map(std::path::PathBuf::from),
+                store_capacity: args.usize_or("store-cap", 4096),
+                queue_cap: args.usize_or("queue", 64),
+                ..Default::default()
+            };
+            let store_note = match &cfg.store_dir {
+                Some(dir) => format!("store {}", dir.display()),
+                None => "no store (results die with the process)".to_string(),
+            };
+            let server = helex::Server::bind(cfg)?;
+            eprintln!(
+                "[helex] serving on http://{} — {} job worker(s), {store_note}",
+                server.local_addr()?,
+                server.workers(),
+            );
+            eprintln!("[helex] POST /v1/jobs · GET /v1/jobs/:id[/events] · /v1/healthz · /v1/stats");
+            server.serve()?;
+        }
+        "submit" => {
+            let addr = args.get_or("addr", "127.0.0.1:7878");
+            let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
+            let (r, c) = args.size("size").unwrap_or((9, 9));
+            let mut spec = helex::JobSpec::new(
+                args.get_or("label", "cli"),
+                dfgs,
+                Grid::new(r, c),
+            );
+            if args.get_or("objective", "area") == "power" {
+                spec.objective = helex::Objective::Power;
+            }
+            spec.search.l_test = args
+                .get("l-test")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| helex::search::SearchConfig::l_test_for(spec.grid));
+            if let Some(seed) = args.get("seed") {
+                spec.seed = seed.parse().unwrap_or(spec.seed);
+            }
+            let id = helex::server::client::submit_spec(addr, &spec)?;
+            eprintln!("[helex] submitted {id} ({})", spec.describe());
+            let result = helex::server::client::wait_result(
+                addr,
+                id,
+                std::time::Duration::from_millis(250),
+                4 * 3600, // poll ceiling: ~1h of 250ms polls
+            )?;
+            if args.flag("json") {
+                println!("{}", helex::service::wire::encode_result(&result).to_string());
+            } else {
+                let tag = if result.from_cache { " [cached]" } else { "" };
+                match result.best_cost() {
+                    Some(cost) => println!(
+                        "{id}: cost {cost:.1} in {:.1}s{tag}",
+                        result.wall_secs
+                    ),
+                    None => println!(
+                        "{id}: {}{tag}",
+                        result
+                            .outcome
+                            .infeasible_reason()
+                            .unwrap_or("rejected (invalid spec)")
+                    ),
+                }
+            }
+        }
         "explore" => {
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").context("--size RxC required")?;
@@ -302,6 +375,12 @@ fn print_usage() {
 
 USAGE:
   helex repro [--quick] [--jobs N]           full paper suite on N workers
+  helex serve [--addr HOST:PORT] [--jobs N] [--store-dir DIR] [--store-cap N] [--queue N]
+                                             HTTP job server (POST /v1/jobs, GET /v1/jobs/:id[/events],
+                                             /v1/healthz, /v1/stats); Ctrl-C drains gracefully
+  helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB] [--size RxC] [--l-test N]
+               [--objective area|power] [--seed N] [--label NAME] [--json]
+                                             submit one job over HTTP and wait for the result
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
             [--quick] [--paper-scale] [--jobs N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]

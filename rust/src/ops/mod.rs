@@ -187,6 +187,53 @@ impl Op {
     }
 }
 
+/// Every concrete operation, in declaration order. The wire codecs
+/// ([`crate::service::wire`]) use this to resolve [`Op::from_name`], so a
+/// variant added to [`Op`] must be added here — the `all_ops_is_exhaustive`
+/// test pins this with an exhaustive `match` that stops compiling when a
+/// variant is missing from it, forcing both lists to be revisited.
+pub const ALL_OPS: [Op; 32] = [
+    Op::Add,
+    Op::Sub,
+    Op::And,
+    Op::Or,
+    Op::Xor,
+    Op::Shl,
+    Op::Shr,
+    Op::Min,
+    Op::Max,
+    Op::Abs,
+    Op::Cmp,
+    Op::Select,
+    Op::FAdd,
+    Op::FSub,
+    Op::FMin,
+    Op::FMax,
+    Op::FAbs,
+    Op::FCmp,
+    Op::FToI,
+    Op::IToF,
+    Op::Mul,
+    Op::FMul,
+    Op::Div,
+    Op::Rem,
+    Op::FDiv,
+    Op::Exp,
+    Op::Log,
+    Op::Sqrt,
+    Op::Sin,
+    Op::Cos,
+    Op::Load,
+    Op::Store,
+];
+
+impl Op {
+    /// Inverse of [`Op::name`] (wire decoding); `None` for unknown names.
+    pub fn from_name(name: &str) -> Option<Op> {
+        ALL_OPS.iter().copied().find(|op| op.name() == name)
+    }
+}
+
 impl fmt::Display for Op {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.name())
@@ -385,5 +432,66 @@ mod tests {
             assert_eq!(OpGroup::from_index(g.index()), Some(g));
         }
         assert_eq!(OpGroup::from_index(6), None);
+    }
+
+    #[test]
+    fn op_names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for op in ALL_OPS {
+            assert!(seen.insert(op.name()), "duplicate name {}", op.name());
+            assert_eq!(Op::from_name(op.name()), Some(op));
+        }
+        assert_eq!(Op::from_name("frobnicate"), None);
+        assert_eq!(Op::from_name("ADD"), None, "names are case-sensitive");
+    }
+
+    #[test]
+    fn all_ops_is_exhaustive() {
+        // This match is the enforcement: adding an `Op` variant makes it
+        // stop compiling, and fixing it means updating the ordinal — at
+        // which point the assertions below force ALL_OPS to grow too
+        // (otherwise from_name would silently reject the new op's name
+        // and its DFGs could never cross the wire).
+        fn ordinal(op: Op) -> usize {
+            use Op::*;
+            match op {
+                Add => 0,
+                Sub => 1,
+                And => 2,
+                Or => 3,
+                Xor => 4,
+                Shl => 5,
+                Shr => 6,
+                Min => 7,
+                Max => 8,
+                Abs => 9,
+                Cmp => 10,
+                Select => 11,
+                FAdd => 12,
+                FSub => 13,
+                FMin => 14,
+                FMax => 15,
+                FAbs => 16,
+                FCmp => 17,
+                FToI => 18,
+                IToF => 19,
+                Mul => 20,
+                FMul => 21,
+                Div => 22,
+                Rem => 23,
+                FDiv => 24,
+                Exp => 25,
+                Log => 26,
+                Sqrt => 27,
+                Sin => 28,
+                Cos => 29,
+                Load => 30,
+                Store => 31,
+            }
+        }
+        assert_eq!(ALL_OPS.len(), 32, "ALL_OPS must list every variant of the match above");
+        for (i, op) in ALL_OPS.iter().enumerate() {
+            assert_eq!(ordinal(*op), i, "ALL_OPS must stay in declaration order");
+        }
     }
 }

@@ -1,0 +1,166 @@
+//! Tiny blocking HTTP client for the job API (used by `helex submit`,
+//! the CI smoke job and the end-to-end tests).
+//!
+//! One request per connection, mirroring the server's `Connection:
+//! close` policy. Responses are read to completion (Content-Length,
+//! chunked, or read-to-EOF) and parsed as JSON; transport and HTTP-level
+//! failures surface as `anyhow` errors with the server's structured
+//! error message when one is present.
+
+use crate::service::wire;
+use crate::service::{JobId, JobResult};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One raw HTTP exchange: returns `(status, body bytes)` with chunked
+/// transfer decoded. The byte-level entry point — the fuzz tests push
+/// deliberately malformed payloads through it.
+pub fn request_raw(
+    addr: &str,
+    method: &str,
+    path: &str,
+    payload: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(600)))?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line {line:?}"))?;
+
+    let mut content_length: Option<usize> = None;
+    let mut chunked = false;
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("connection closed inside response head");
+        }
+        let header = line.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().ok();
+            } else if name.trim().eq_ignore_ascii_case("transfer-encoding")
+                && value.trim().eq_ignore_ascii_case("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+
+    let mut body_bytes = Vec::new();
+    if chunked {
+        loop {
+            line.clear();
+            reader.read_line(&mut line)?;
+            let size = usize::from_str_radix(line.trim(), 16)
+                .with_context(|| format!("bad chunk size {line:?}"))?;
+            if size == 0 {
+                break;
+            }
+            let mut chunk = vec![0u8; size];
+            reader.read_exact(&mut chunk)?;
+            body_bytes.extend_from_slice(&chunk);
+            let mut crlf = [0u8; 2];
+            reader.read_exact(&mut crlf)?;
+        }
+    } else if let Some(len) = content_length {
+        body_bytes = vec![0u8; len];
+        reader.read_exact(&mut body_bytes)?;
+    } else {
+        reader.read_to_end(&mut body_bytes)?;
+    }
+    Ok((status, body_bytes))
+}
+
+/// One HTTP exchange with a JSON body: returns `(status, parsed body)`.
+/// Empty bodies parse as `Json::Null`.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let payload = body.map(|b| b.to_string()).unwrap_or_default();
+    let (status, body_bytes) = request_raw(addr, method, path, payload.as_bytes())?;
+    if body_bytes.is_empty() {
+        return Ok((status, Json::Null));
+    }
+    let text = std::str::from_utf8(&body_bytes).context("response body is not UTF-8")?;
+    let parsed = json::parse(text).with_context(|| format!("parsing response body: {text}"))?;
+    Ok((status, parsed))
+}
+
+/// Pull the server's structured `{"error":{code,message}}` out of a
+/// body, or fall back to the raw JSON.
+fn server_error(status: u16, body: &Json) -> anyhow::Error {
+    match body.get("error") {
+        Some(err) => anyhow!(
+            "server answered {status} {}: {}",
+            err.get("code").and_then(Json::as_str).unwrap_or("?"),
+            err.get("message").and_then(Json::as_str).unwrap_or("?")
+        ),
+        None => anyhow!("server answered {status}: {}", body.to_string()),
+    }
+}
+
+/// `GET path` expecting 200.
+pub fn get_json(addr: &str, path: &str) -> Result<Json> {
+    let (status, body) = request(addr, "GET", path, None)?;
+    if status != 200 {
+        return Err(server_error(status, &body));
+    }
+    Ok(body)
+}
+
+/// Submit a spec; returns the assigned id.
+pub fn submit_spec(addr: &str, spec: &crate::service::JobSpec) -> Result<JobId> {
+    let (status, body) = request(addr, "POST", "/v1/jobs", Some(&wire::encode_spec(spec)))?;
+    if status != 202 {
+        return Err(server_error(status, &body));
+    }
+    body.get("id")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<JobId>().ok())
+        .ok_or_else(|| anyhow!("submit response carries no job id: {}", body.to_string()))
+}
+
+/// Poll `GET /v1/jobs/:id` until the job is done; returns the decoded
+/// result. `poll_interval` paces the polling; `max_polls` bounds it.
+pub fn wait_result(
+    addr: &str,
+    id: JobId,
+    poll_interval: Duration,
+    max_polls: usize,
+) -> Result<JobResult> {
+    let path = format!("/v1/jobs/{id}");
+    for _ in 0..max_polls {
+        let body = get_json(addr, &path)?;
+        match body.get("status").and_then(Json::as_str) {
+            Some("done") => {
+                let result = body
+                    .get("result")
+                    .ok_or_else(|| anyhow!("done job without result: {}", body.to_string()))?;
+                return wire::decode_result(result).map_err(|e| anyhow!("{e}"));
+            }
+            Some("queued" | "running") => std::thread::sleep(poll_interval),
+            other => bail!("unexpected job status {other:?}"),
+        }
+    }
+    bail!("job {id} did not finish within {max_polls} polls")
+}

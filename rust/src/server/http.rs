@@ -1,0 +1,283 @@
+//! Minimal HTTP/1.1 on `std::net`: request parsing, fixed-length JSON
+//! responses and chunked transfer encoding (no hyper in this image).
+//!
+//! Scope is deliberately narrow — what the job API needs and nothing
+//! more: one request per connection (`Connection: close` on every
+//! response), bodies sized by `Content-Length` and capped, and head
+//! bytes capped *as they stream in* (a newline-free flood cannot buffer
+//! unboundedly). Stalls are bounded twice over: the socket read timeout
+//! caps each `read(2)`, and a whole-request deadline caps the sum, so a
+//! slow-loris client dripping one byte per timeout still loses its
+//! handler after [`REQUEST_BUDGET_TIMEOUTS`] timeouts' worth of wall
+//! time. Parsing is total: anything malformed becomes an [`HttpError`]
+//! carrying the status code the caller should answer with (the server
+//! must never panic on network input).
+
+use crate::util::json::Json;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Upper bound on the request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// The whole-request deadline, as a multiple of the per-read timeout:
+/// reading one complete request may take at most this many timeouts of
+/// wall time regardless of how the client paces its bytes.
+pub const REQUEST_BUDGET_TIMEOUTS: u32 = 3;
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path with any `?query` stripped.
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// A malformed or over-limit request, with the status to answer.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> Self {
+        Self { status, message: message.into() }
+    }
+}
+
+fn io_error(e: io::Error) -> HttpError {
+    match e.kind() {
+        // a read timeout surfaces as WouldBlock (unix) or TimedOut
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+            HttpError::new(408, "request read timed out")
+        }
+        _ => HttpError::new(400, format!("read failed: {e}")),
+    }
+}
+
+fn check_deadline(start: Instant, budget: Duration) -> Result<(), HttpError> {
+    if start.elapsed() > budget {
+        return Err(HttpError::new(408, "request read exceeded its time budget"));
+    }
+    Ok(())
+}
+
+/// One newline-terminated head line. The head-size cap is enforced *per
+/// buffered chunk*, not per completed line, so a newline-free flood is
+/// cut off at the cap instead of buffering without bound.
+fn read_head_line<R: BufRead>(
+    reader: &mut R,
+    line: &mut String,
+    head_bytes: &mut usize,
+    start: Instant,
+    budget: Duration,
+) -> Result<(), HttpError> {
+    line.clear();
+    let mut raw: Vec<u8> = Vec::new();
+    loop {
+        check_deadline(start, budget)?;
+        if *head_bytes >= MAX_HEAD_BYTES {
+            return Err(HttpError::new(431, "request head too large"));
+        }
+        let buf = reader.fill_buf().map_err(io_error)?;
+        if buf.is_empty() {
+            return Err(HttpError::new(400, "connection closed mid-request"));
+        }
+        let room = MAX_HEAD_BYTES - *head_bytes;
+        let window = &buf[..buf.len().min(room)];
+        match window.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                raw.extend_from_slice(&window[..=pos]);
+                reader.consume(pos + 1);
+                *head_bytes += pos + 1;
+                break;
+            }
+            None => {
+                raw.extend_from_slice(window);
+                let taken = window.len();
+                reader.consume(taken);
+                *head_bytes += taken;
+            }
+        }
+    }
+    *line = String::from_utf8(raw)
+        .map_err(|_| HttpError::new(400, "request head is not UTF-8"))?;
+    Ok(())
+}
+
+/// Read and parse one request from the stream (which should already have
+/// `read_timeout` set as its socket read timeout). `max_body` caps
+/// `Content-Length`; the whole request must arrive within
+/// [`REQUEST_BUDGET_TIMEOUTS`] × `read_timeout`.
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+    read_timeout: Duration,
+) -> Result<Request, HttpError> {
+    let start = Instant::now();
+    let budget = read_timeout.saturating_mul(REQUEST_BUDGET_TIMEOUTS);
+    let mut reader = BufReader::new(stream);
+    let mut head_bytes = 0usize;
+    let mut line = String::new();
+
+    read_head_line(&mut reader, &mut line, &mut head_bytes, start, budget)?;
+    let request_line = line.trim_end();
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| HttpError::new(400, "empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::new(400, "request line has no target"))?;
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => return Err(HttpError::new(400, "expected an HTTP/1.x request")),
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        read_head_line(&mut reader, &mut line, &mut head_bytes, start, budget)?;
+        let header = line.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        let Some((name, value)) = header.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header '{header}'")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| HttpError::new(400, "unparseable Content-Length"))?;
+        } else if name.trim().eq_ignore_ascii_case("transfer-encoding") {
+            // we never need streamed request bodies; refuse rather than
+            // misinterpret
+            return Err(HttpError::new(411, "chunked request bodies unsupported"));
+        }
+    }
+    if content_length > max_body {
+        return Err(HttpError::new(
+            413,
+            format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+        ));
+    }
+    // read the body in bounded steps so the whole-request deadline is
+    // re-checked between reads (read_exact alone would let a dripping
+    // client reset the socket timeout byte by byte)
+    let mut body = vec![0u8; content_length];
+    let mut filled = 0usize;
+    while filled < content_length {
+        check_deadline(start, budget)?;
+        let n = reader.read(&mut body[filled..]).map_err(io_error)?;
+        if n == 0 {
+            return Err(HttpError::new(400, "connection closed mid-body"));
+        }
+        filled += n;
+    }
+    Ok(Request { method, path, body })
+}
+
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a fixed-length response with the given content type.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Write a JSON body.
+pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> io::Result<()> {
+    write_response(stream, status, "application/json", body.to_string().as_bytes())
+}
+
+/// The structured error shape every non-2xx answer uses:
+/// `{"error":{"code":…,"message":…}}`.
+pub fn error_body(code: &str, message: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![("code", Json::str(code)), ("message", Json::str(message))]),
+    )])
+}
+
+pub fn write_error(
+    stream: &mut TcpStream,
+    status: u16,
+    code: &str,
+    message: &str,
+) -> io::Result<()> {
+    write_json(stream, status, &error_body(code, message))
+}
+
+/// Chunked-transfer writer for the event stream: call [`Self::start`],
+/// then [`Self::chunk`] per payload, then [`Self::finish`]. A client that
+/// went away surfaces as an `Err` from `chunk`, which the streamer uses
+/// to stop tailing.
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    pub fn start(
+        stream: &'a mut TcpStream,
+        status: u16,
+        content_type: &str,
+    ) -> io::Result<Self> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status,
+            status_text(status),
+            content_type
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.flush()?;
+        Ok(Self { stream })
+    }
+
+    pub fn chunk(&mut self, payload: &[u8]) -> io::Result<()> {
+        if payload.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.stream, "{:x}\r\n", payload.len())?;
+        self.stream.write_all(payload)?;
+        self.stream.write_all(b"\r\n")?;
+        self.stream.flush()
+    }
+
+    pub fn finish(mut self) -> io::Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}

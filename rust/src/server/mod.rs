@@ -1,0 +1,515 @@
+//! `helex serve`: a dependency-free HTTP/1.1 + JSON job server over the
+//! [`ExplorationService`].
+//!
+//! The API (all bodies JSON; errors are structured
+//! `{"error":{"code","message"}}`):
+//!
+//! | route | |
+//! |---|---|
+//! | `POST /v1/jobs` | submit a [`crate::service::JobSpec`] (wire schema, see [`crate::service::wire`]); answers `202 {"id","fingerprint","status","url"}` |
+//! | `GET /v1/jobs/:id` | status snapshot; `"result"` appears once done |
+//! | `GET /v1/jobs/:id/events` | live [`crate::search::SearchEvent`] stream, one JSON object per line, chunked transfer |
+//! | `GET /v1/healthz` | liveness + drain state |
+//! | `GET /v1/stats` | pool, queue, cache and store introspection |
+//!
+//! Execution: accepted connections enter a **bounded queue** consumed by
+//! a small pool of connection-handler threads; when the queue is full
+//! the listener answers `503 overloaded` immediately instead of letting
+//! accept backlog grow unboundedly. Handlers parse with per-connection
+//! **read timeouts** plus a whole-request deadline
+//! ([`http::REQUEST_BUDGET_TIMEOUTS`] × the timeout), so a stalled *or
+//! dripping* client costs one handler a bounded slice of wall time.
+//! Job execution happens on the separate
+//! [`crate::service::registry::JobRegistry`] worker pool, so slow
+//! searches never starve the HTTP plane.
+//!
+//! Shutdown: SIGINT (via the [`signal`] self-pipe) or
+//! [`ServerHandle::begin_shutdown`] flips the server into draining —
+//! new *submissions* get `503 draining` while polls, event streams and
+//! `healthz` (reporting `"draining"`) keep answering, the registry
+//! finishes every queued and running job, the store index is flushed —
+//! and only then does `serve` return. No worker is killed mid-write.
+
+pub mod client;
+pub mod http;
+pub mod signal;
+
+use crate::service::registry::{JobRegistry, JobStatus, SubmitError};
+use crate::service::{wire, ExplorationService, JobId, ServiceConfig};
+use crate::store::ResultStore;
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use http::{ChunkedWriter, Request};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server tuning. `addr` is the only field without a sensible default.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7878` (`:0` picks an ephemeral
+    /// port — tests read it back via [`Server::local_addr`]).
+    pub addr: String,
+    /// Job-executor threads (`0` = available parallelism).
+    pub jobs: usize,
+    /// Directory of the on-disk result store; `None` disables
+    /// persistence.
+    pub store_dir: Option<PathBuf>,
+    /// Store capacity in records (0 = unbounded).
+    pub store_capacity: usize,
+    /// Bound of the accepted-connection queue *and* of the pending job
+    /// queue.
+    pub queue_cap: usize,
+    /// Completed jobs kept in memory for polling; older ones are
+    /// evicted (their results stay in the store, keyed by fingerprint).
+    pub retain_results: usize,
+    /// Connection-handler threads (HTTP plane, not job execution).
+    pub conn_threads: usize,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+    /// Maximum request body size in bytes.
+    pub max_body: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            jobs: 0,
+            store_dir: None,
+            store_capacity: 4096,
+            queue_cap: 64,
+            retain_results: crate::service::registry::DEFAULT_RETAIN_DONE,
+            conn_threads: 4,
+            read_timeout: Duration::from_secs(10),
+            max_body: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// Drain-state flags shared between the accept loop, the signal watcher
+/// and test harnesses.
+struct Shutdown {
+    requested: AtomicBool,
+    drained: AtomicBool,
+}
+
+/// Concurrent `GET /v1/jobs/:id/events` streams. Each runs on its own
+/// spawned thread (they live as long as the watched job, which can be
+/// hours — parking them on the small request-handler pool would starve
+/// every other route); the cap bounds the thread count.
+const MAX_EVENT_STREAMS: usize = 64;
+
+/// Everything a connection handler needs.
+struct ServerCtx {
+    service: Arc<ExplorationService>,
+    registry: Arc<JobRegistry>,
+    shutdown: Arc<Shutdown>,
+    started: Instant,
+    read_timeout: Duration,
+    max_body: usize,
+    /// Live event-stream threads, bounded by [`MAX_EVENT_STREAMS`].
+    active_streams: std::sync::atomic::AtomicUsize,
+}
+
+/// Handle for triggering a graceful shutdown from another thread (tests;
+/// SIGINT does the same through the signal watcher).
+#[derive(Clone)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<Shutdown>,
+}
+
+impl ServerHandle {
+    /// Start draining: equivalent to sending the process SIGINT. Returns
+    /// immediately; `serve` returns once the drain completes.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.requested.store(true, Ordering::SeqCst);
+        // wake the (blocking) accept loop
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The server: bind with [`Server::bind`], then block in
+/// [`Server::serve`].
+pub struct Server {
+    cfg: ServerConfig,
+    listener: TcpListener,
+    ctx: Arc<ServerCtx>,
+}
+
+impl Server {
+    /// Bind the listener, open the store (if configured) and start the
+    /// job registry. No requests are served until [`Self::serve`].
+    pub fn bind(cfg: ServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let service = match &cfg.store_dir {
+            Some(dir) => {
+                let store = ResultStore::open(dir, cfg.store_capacity)
+                    .with_context(|| format!("opening result store {}", dir.display()))?;
+                Arc::new(ExplorationService::with_store(
+                    ServiceConfig { jobs: cfg.jobs, ..Default::default() },
+                    Arc::new(store),
+                ))
+            }
+            None => Arc::new(ExplorationService::new(ServiceConfig {
+                jobs: cfg.jobs,
+                ..Default::default()
+            })),
+        };
+        let registry = JobRegistry::start(
+            Arc::clone(&service),
+            service.workers(),
+            cfg.queue_cap,
+            cfg.retain_results,
+        );
+        let ctx = Arc::new(ServerCtx {
+            service,
+            registry,
+            shutdown: Arc::new(Shutdown {
+                requested: AtomicBool::new(false),
+                drained: AtomicBool::new(false),
+            }),
+            started: Instant::now(),
+            read_timeout: cfg.read_timeout,
+            max_body: cfg.max_body,
+            active_streams: std::sync::atomic::AtomicUsize::new(0),
+        });
+        Ok(Self { cfg, listener, ctx })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Job-executor pool width.
+    pub fn workers(&self) -> usize {
+        self.ctx.service.workers()
+    }
+
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle { addr: self.local_addr()?, shutdown: Arc::clone(&self.ctx.shutdown) })
+    }
+
+    /// Serve until a graceful shutdown (SIGINT or
+    /// [`ServerHandle::begin_shutdown`]) completes its drain.
+    pub fn serve(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let shutdown = Arc::clone(&self.ctx.shutdown);
+
+        // SIGINT watcher: self-pipe wakes this thread, which flips the
+        // flag and pokes the accept loop with a loopback connection
+        if let Some(waiter) = signal::install_sigint() {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                waiter.wait();
+                eprintln!("[helex] SIGINT: draining (in-flight jobs finish, new work gets 503)");
+                shutdown.requested.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(addr);
+            });
+        }
+
+        // bounded accepted-connection queue + handler pool
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.cfg.queue_cap);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::new();
+        for _ in 0..self.cfg.conn_threads.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let ctx = Arc::clone(&self.ctx);
+            handlers.push(std::thread::spawn(move || loop {
+                // hold the lock only to receive, not to handle
+                let next = conn_rx.lock().unwrap().recv();
+                match next {
+                    Ok(stream) => handle_connection(stream, &ctx),
+                    Err(_) => break, // sender dropped: accept loop ended
+                }
+            }));
+        }
+
+        let mut drainer: Option<std::thread::JoinHandle<()>> = None;
+        for stream in self.listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            if shutdown.requested.load(Ordering::SeqCst) {
+                if drainer.is_none() {
+                    // first wake after the request: drain in the
+                    // background while this loop keeps serving
+                    let ctx = Arc::clone(&self.ctx);
+                    let shutdown = Arc::clone(&shutdown);
+                    drainer = Some(std::thread::spawn(move || {
+                        ctx.registry.drain();
+                        if let Some(store) = ctx.service.store() {
+                            if let Err(e) = store.flush() {
+                                eprintln!("[helex] warning: store index flush failed: {e}");
+                            }
+                        }
+                        shutdown.drained.store(true, Ordering::SeqCst);
+                        let _ = TcpStream::connect(addr); // final wake
+                    }));
+                }
+                if shutdown.drained.load(Ordering::SeqCst) {
+                    break;
+                }
+                // fall through: the read side keeps answering during
+                // the drain (clients can still poll for the results of
+                // jobs the drain is finishing, and healthz reports
+                // "draining"); new *submissions* get 503 from the
+                // registry's Draining refusal
+            }
+            match conn_tx.try_send(stream) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(mut stream)) => {
+                    let _ = http::write_error(
+                        &mut stream,
+                        503,
+                        "overloaded",
+                        "connection queue is full, retry later",
+                    );
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            }
+        }
+
+        drop(conn_tx); // handlers exit once queued connections are served
+        for handler in handlers {
+            let _ = handler.join();
+        }
+        if let Some(drainer) = drainer {
+            let _ = drainer.join();
+        } else {
+            // shutdown without ever seeing a connection: still drain
+            self.ctx.registry.drain();
+            if let Some(store) = self.ctx.service.store() {
+                let _ = store.flush();
+            }
+        }
+        eprintln!("[helex] drained; bye");
+        Ok(())
+    }
+}
+
+/// Serve one connection (one request, `Connection: close`). Both
+/// directions carry socket timeouts: reads are additionally bounded by
+/// the whole-request deadline in [`http::read_request`], and the write
+/// timeout keeps a non-reading client from wedging a handler once the
+/// kernel send buffer fills.
+fn handle_connection(mut stream: TcpStream, ctx: &Arc<ServerCtx>) {
+    let _ = stream.set_read_timeout(Some(ctx.read_timeout));
+    let _ = stream.set_write_timeout(Some(ctx.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let request = match http::read_request(&mut stream, ctx.max_body, ctx.read_timeout) {
+        Ok(request) => request,
+        Err(e) => {
+            let _ = http::write_error(&mut stream, e.status, "bad_request", &e.message);
+            return;
+        }
+    };
+    route(stream, &request, ctx);
+}
+
+/// Dispatch. Takes the stream by value: the events route hands it to a
+/// dedicated streaming thread; everything else answers inline.
+fn route(mut stream: TcpStream, request: &Request, ctx: &Arc<ServerCtx>) {
+    let path = request.path.as_str();
+    let method = request.method.as_str();
+    match (method, path) {
+        ("POST", "/v1/jobs") => post_job(&mut stream, request, ctx),
+        ("GET", "/v1/healthz") => {
+            let draining = ctx.shutdown.requested.load(Ordering::SeqCst);
+            let body = Json::obj(vec![
+                ("status", Json::str(if draining { "draining" } else { "ok" })),
+                ("uptime_secs", Json::F64(ctx.started.elapsed().as_secs_f64())),
+            ]);
+            let _ = http::write_json(&mut stream, 200, &body);
+        }
+        ("GET", "/v1/stats") => {
+            let _ = http::write_json(&mut stream, 200, &stats_body(ctx));
+        }
+        ("GET", _) if path.starts_with("/v1/jobs/") => get_job(stream, path, ctx),
+        (_, "/v1/jobs") | (_, "/v1/healthz") | (_, "/v1/stats") => {
+            let _ = http::write_error(&mut stream, 405, "method_not_allowed", "wrong method");
+        }
+        (_, _) if path.starts_with("/v1/jobs/") => {
+            let _ = http::write_error(&mut stream, 405, "method_not_allowed", "wrong method");
+        }
+        _ => {
+            let _ = http::write_error(&mut stream, 404, "unknown_route", "no such route");
+        }
+    }
+}
+
+fn post_job(stream: &mut TcpStream, request: &Request, ctx: &ServerCtx) {
+    let text = match std::str::from_utf8(&request.body) {
+        Ok(text) => text,
+        Err(_) => {
+            let _ = http::write_error(stream, 400, "bad_encoding", "body is not UTF-8");
+            return;
+        }
+    };
+    let parsed = match json::parse(text) {
+        Ok(parsed) => parsed,
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_json", &e.to_string());
+            return;
+        }
+    };
+    let spec = match wire::decode_spec(&parsed) {
+        Ok(spec) => spec,
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_spec", &e.to_string());
+            return;
+        }
+    };
+    let fingerprint = spec.fingerprint();
+    match ctx.registry.submit(spec) {
+        Ok(id) => {
+            let body = Json::obj(vec![
+                ("id", Json::str(id.to_string())),
+                ("fingerprint", Json::str(wire::fp_hex(fingerprint))),
+                ("status", Json::str("queued")),
+                ("url", Json::str(format!("/v1/jobs/{id}"))),
+            ]);
+            let _ = http::write_json(stream, 202, &body);
+        }
+        Err(e @ SubmitError::QueueFull) => {
+            let _ = http::write_error(stream, 503, "queue_full", &e.to_string());
+        }
+        Err(e @ SubmitError::Draining) => {
+            let _ = http::write_error(stream, 503, "draining", &e.to_string());
+        }
+    }
+}
+
+/// `GET /v1/jobs/:id` and `GET /v1/jobs/:id/events`.
+fn get_job(mut stream: TcpStream, path: &str, ctx: &Arc<ServerCtx>) {
+    let rest = &path["/v1/jobs/".len()..];
+    let (id_text, events) = match rest.strip_suffix("/events") {
+        Some(id_text) => (id_text, true),
+        None => (rest, false),
+    };
+    let Ok(id) = id_text.parse::<JobId>() else {
+        let _ = http::write_error(&mut stream, 400, "bad_id", "job id must be job-<hex>");
+        return;
+    };
+    let Some(entry) = ctx.registry.get(id) else {
+        let _ =
+            http::write_error(&mut stream, 404, "unknown_job", "no such job on this server");
+        return;
+    };
+    if events {
+        // a stream lives as long as its job; run it on a dedicated
+        // (bounded-count) thread so it never occupies the request pool
+        use std::sync::atomic::Ordering as AOrd;
+        if ctx.active_streams.fetch_add(1, AOrd::SeqCst) >= MAX_EVENT_STREAMS {
+            ctx.active_streams.fetch_sub(1, AOrd::SeqCst);
+            let _ = http::write_error(
+                &mut stream,
+                503,
+                "overloaded",
+                "too many concurrent event streams",
+            );
+            return;
+        }
+        let ctx = Arc::clone(ctx);
+        std::thread::spawn(move || {
+            stream_events(&mut stream, &entry);
+            ctx.active_streams.fetch_sub(1, AOrd::SeqCst);
+        });
+        return;
+    }
+    let status = entry.status();
+    let mut pairs = vec![
+        ("id", Json::str(id.to_string())),
+        ("label", Json::str(&entry.spec.label)),
+        ("status", Json::str(status.name())),
+        ("fingerprint", Json::str(wire::fp_hex(entry.spec.fingerprint()))),
+    ];
+    if let JobStatus::Done(result) = &status {
+        pairs.push(("result", wire::encode_result(result)));
+    }
+    let _ = http::write_json(&mut stream, 200, &Json::obj(pairs));
+}
+
+/// Tail a job's event log as newline-delimited JSON over chunked
+/// transfer, live while the job runs, until the log closes. The log is
+/// cleared once the job resolves (the result owns the trace from then
+/// on), so any tail not yet delivered is completed from the result.
+fn stream_events(stream: &mut TcpStream, entry: &crate::service::registry::JobEntry) {
+    fn send(
+        writer: &mut ChunkedWriter<'_>,
+        event: &crate::search::SearchEvent,
+    ) -> std::io::Result<()> {
+        let mut line = wire::encode_event(event).to_string();
+        line.push('\n');
+        writer.chunk(line.as_bytes())
+    }
+    let mut writer = match ChunkedWriter::start(stream, 200, "application/x-ndjson") {
+        Ok(writer) => writer,
+        Err(_) => return,
+    };
+    let mut sent = 0usize;
+    loop {
+        let (new, closed) = entry.events.wait_from(sent, Duration::from_millis(250));
+        for event in &new {
+            if send(&mut writer, event).is_err() {
+                return; // client went away; stop tailing
+            }
+        }
+        sent += new.len();
+        if closed && new.is_empty() {
+            break;
+        }
+    }
+    // the log sealed (and dropped its buffer); deliver whatever of the
+    // trace this tail had not seen yet from the result
+    if let Some(result) = entry.result() {
+        for event in result.events.iter().skip(sent) {
+            if send(&mut writer, event).is_err() {
+                return;
+            }
+        }
+    }
+    let _ = writer.finish();
+}
+
+fn stats_body(ctx: &ServerCtx) -> Json {
+    let service = ctx.service.stats();
+    let registry = ctx.registry.stats();
+    let store = match &service.store {
+        Some(s) => Json::obj(vec![
+            ("entries", Json::U64(s.entries as u64)),
+            ("hits", Json::U64(s.hits)),
+            ("misses", Json::U64(s.misses)),
+            ("writes", Json::U64(s.writes)),
+            ("evictions", Json::U64(s.evictions)),
+            ("corrupt", Json::U64(s.corrupt)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("workers", Json::U64(service.workers as u64)),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("queued", Json::U64(registry.queued as u64)),
+                ("running", Json::U64(registry.running as u64)),
+                ("done", Json::U64(registry.done as u64)),
+                ("queue_capacity", Json::U64(registry.queue_capacity as u64)),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj(vec![
+                ("entries", Json::U64(service.cache_entries as u64)),
+                ("computed", Json::U64(service.computed)),
+                ("mem_hits", Json::U64(service.mem_hits)),
+                ("store_hits", Json::U64(service.store_hits)),
+            ]),
+        ),
+        ("store", store),
+        ("uptime_secs", Json::F64(ctx.started.elapsed().as_secs_f64())),
+    ])
+}

@@ -1,0 +1,104 @@
+//! Minimal SIGINT self-pipe (no `libc` crate in this image).
+//!
+//! The classic async-signal-safety problem: a signal handler may only
+//! call a handful of functions, and none of Rust's synchronization
+//! primitives are among them — but the accept loop blocks in `accept(2)`
+//! and must learn about Ctrl-C somehow. The self-pipe trick: the handler
+//! does exactly one `write(2)` of one byte into a pipe created at
+//! install time (both async-signal-safe), and an ordinary watcher thread
+//! blocks in `read(2)` on the other end, then triggers the server's
+//! graceful drain from safe code.
+//!
+//! The raw `pipe`/`write`/`read`/`signal` symbols are declared directly
+//! against the platform libc (always linked on unix targets); on
+//! non-unix builds [`install_sigint`] returns `None` and Ctrl-C falls
+//! back to the default process kill.
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::{AtomicBool, AtomicI32, Ordering};
+
+    extern "C" {
+        fn pipe(fds: *mut i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+
+    /// Write end of the self-pipe, stashed for the handler. One pipe per
+    /// process: `install` is first-come-only.
+    static PIPE_WR: AtomicI32 = AtomicI32::new(-1);
+    static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+    /// The handler: async-signal-safe by construction (one atomic load,
+    /// one `write`). A full pipe or closed read end is ignored — one
+    /// pending byte is enough to wake the watcher.
+    extern "C" fn on_sigint(_sig: i32) {
+        let fd = PIPE_WR.load(Ordering::Relaxed);
+        if fd >= 0 {
+            let byte = 1u8;
+            unsafe {
+                let _ = write(fd, &byte, 1);
+            }
+        }
+    }
+
+    /// Blocks the calling thread until the first SIGINT.
+    pub struct SigintWaiter {
+        read_fd: i32,
+    }
+
+    impl SigintWaiter {
+        /// Block in `read(2)` until the handler writes its byte.
+        pub fn wait(&self) {
+            let mut byte = 0u8;
+            loop {
+                let n = unsafe { read(self.read_fd, &mut byte, 1) };
+                // n == 1: signal arrived; n == -1 (EINTR): retry;
+                // n == 0 cannot happen (we hold the write end forever)
+                if n == 1 {
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Install the handler and return the waiter, or `None` if a pipe
+    /// could not be created or a handler is already installed.
+    pub fn install_sigint() -> Option<SigintWaiter> {
+        if INSTALLED.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        let mut fds = [-1i32; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return None;
+        }
+        PIPE_WR.store(fds[1], Ordering::SeqCst);
+        // coerce the fn item to a pointer before the integer cast (a
+        // direct item-to-usize cast is rejected)
+        let handler: extern "C" fn(i32) = on_sigint;
+        unsafe {
+            signal(SIGINT, handler as usize);
+        }
+        Some(SigintWaiter { read_fd: fds[0] })
+    }
+}
+
+#[cfg(unix)]
+pub use imp::{install_sigint, SigintWaiter};
+
+#[cfg(not(unix))]
+pub struct SigintWaiter;
+
+#[cfg(not(unix))]
+impl SigintWaiter {
+    pub fn wait(&self) {}
+}
+
+/// No self-pipe on this platform; Ctrl-C keeps the default behaviour.
+#[cfg(not(unix))]
+pub fn install_sigint() -> Option<SigintWaiter> {
+    None
+}

@@ -8,7 +8,11 @@
 //! outside every lock), and each entry is an [`std::sync::Arc`]'d slot
 //! with a [`std::sync::Condvar`] so a duplicate submitted *while* its
 //! twin is still running waits for that result instead of repeating
-//! minutes of branch-and-bound.
+//! minutes of branch-and-bound. A computation that panics poisons its
+//! slot for the waiters of that attempt (they propagate instead of
+//! hanging) but the entry itself is dropped, so the key stays
+//! retryable — one transient panic never permanently wedges a
+//! fingerprint.
 //!
 //! Results are deterministic per fingerprint (per-job engines with
 //! derived seeds), so serving a hit is observationally identical to
@@ -51,6 +55,14 @@ struct Slot {
 }
 
 impl Slot {
+    /// True once the computation resolved (filled or poisoned). Only
+    /// settled slots are eviction candidates: evicting an in-flight slot
+    /// would orphan the computing thread's entry and let a concurrent
+    /// twin start a duplicate computation.
+    fn is_settled(&self) -> bool {
+        !matches!(*self.state.lock().unwrap(), SlotState::Empty)
+    }
+
     /// Block until the computing thread fills (or poisons) the slot.
     fn wait(&self) -> CachedJob {
         let mut state = self.state.lock().unwrap();
@@ -77,10 +89,16 @@ impl Slot {
 }
 
 /// Poisons the slot unless the computation filled it — turning a panic
-/// in `compute` into a propagated panic for every waiter (instead of a
-/// silent hang) and a sticky poisoned entry for later lookups.
+/// in `compute` into a propagated panic for every *current* waiter
+/// (instead of a silent hang) — and removes the entry from its shard,
+/// so the panic is one-shot: a later submission of the same key gets a
+/// fresh slot and retries instead of inheriting a permanently poisoned
+/// result (a long-lived server must be able to recover from one
+/// transient panic).
 struct FillGuard<'a> {
-    slot: &'a Slot,
+    cache: &'a ShardedRunCache,
+    key: u64,
+    slot: &'a Arc<Slot>,
     filled: bool,
 }
 
@@ -88,13 +106,41 @@ impl Drop for FillGuard<'_> {
     fn drop(&mut self) {
         if !self.filled {
             self.slot.poison();
+            let mut shard = self.cache.shard(self.key).lock().unwrap();
+            // only remove our own slot: a concurrent retry may already
+            // have installed a fresh one under this key
+            if let Some(entry) = shard.map.get(&self.key) {
+                if Arc::ptr_eq(&entry.slot, self.slot) {
+                    shard.map.remove(&self.key);
+                }
+            }
         }
     }
 }
 
+/// One cache entry with its LRU stamp (per-shard monotonic tick).
+struct Entry {
+    slot: Arc<Slot>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    tick: u64,
+}
+
 /// The sharded run cache. See the module docs.
+///
+/// Memory is bounded: each shard holds at most `per_shard_cap` entries
+/// (`0` = unbounded). Inserting past the cap evicts the least recently
+/// used *settled* entry — in-flight slots are never evicted (their
+/// computing thread must find its entry when it fills it, and a twin
+/// must keep deduplicating against it), so a shard may transiently
+/// exceed the cap by the number of concurrently computing jobs.
 pub struct ShardedRunCache {
-    shards: [Mutex<HashMap<u64, Arc<Slot>>>; NUM_SHARDS],
+    shards: [Mutex<Shard>; NUM_SHARDS],
+    per_shard_cap: usize,
 }
 
 impl Default for ShardedRunCache {
@@ -104,11 +150,22 @@ impl Default for ShardedRunCache {
 }
 
 impl ShardedRunCache {
+    /// Unbounded cache (the embedded/suite default; long-lived servers
+    /// should set a cap).
     pub fn new() -> Self {
-        Self { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+        Self::with_capacity(0)
     }
 
-    fn shard(&self, key: u64) -> &Mutex<HashMap<u64, Arc<Slot>>> {
+    /// Cache holding at most `per_shard_cap` settled entries per shard
+    /// (`0` = unbounded).
+    pub fn with_capacity(per_shard_cap: usize) -> Self {
+        Self {
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            per_shard_cap,
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
         &self.shards[(key >> 60) as usize % NUM_SHARDS]
     }
 
@@ -123,19 +180,36 @@ impl ShardedRunCache {
         compute: impl FnOnce() -> CachedJob,
     ) -> (CachedJob, bool) {
         let slot = {
-            let mut map = self.shard(key).lock().unwrap();
-            if let Some(slot) = map.get(&key) {
-                let slot = Arc::clone(slot);
-                drop(map);
+            let mut shard = self.shard(key).lock().unwrap();
+            shard.tick += 1;
+            let tick = shard.tick;
+            if let Some(entry) = shard.map.get_mut(&key) {
+                entry.last_used = tick;
+                let slot = Arc::clone(&entry.slot);
+                drop(shard);
                 return (slot.wait(), true);
             }
             let slot = Arc::new(Slot::default());
-            map.insert(key, Arc::clone(&slot));
+            shard.map.insert(key, Entry { slot: Arc::clone(&slot), last_used: tick });
+            if self.per_shard_cap > 0 && shard.map.len() > self.per_shard_cap {
+                // evict the LRU settled entry; the one just inserted is
+                // in-flight (Empty) and therefore never a candidate
+                let victim = shard
+                    .map
+                    .iter()
+                    .filter(|(_, e)| e.slot.is_settled())
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| *k);
+                if let Some(victim) = victim {
+                    shard.map.remove(&victim);
+                }
+            }
             slot
         };
         // compute outside every lock; the guard poisons the slot if
-        // `compute` panics, so waiters panic too instead of hanging
-        let mut guard = FillGuard { slot: &slot, filled: false };
+        // `compute` panics (current waiters panic instead of hanging)
+        // and drops the entry so later lookups retry
+        let mut guard = FillGuard { cache: self, key, slot: &slot, filled: false };
         let job = compute();
         slot.fill(job.clone());
         guard.filled = true;
@@ -144,7 +218,7 @@ impl ShardedRunCache {
 
     /// Completed or in-flight entries currently held.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -153,7 +227,7 @@ impl ShardedRunCache {
 
     pub fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            s.lock().unwrap().map.clear();
         }
     }
 }
@@ -195,23 +269,81 @@ mod tests {
         }
         assert_eq!(cache.len(), 64);
         let occupied =
-            cache.shards.iter().filter(|s| !s.lock().unwrap().is_empty()).count();
+            cache.shards.iter().filter(|s| !s.lock().unwrap().map.is_empty()).count();
         assert!(occupied > 1, "64 spread keys must occupy multiple shards");
     }
 
+    /// Keys that all land in one shard (the shard selector uses the top
+    /// four bits), so per-shard capacity is exercised deterministically.
+    fn same_shard_key(n: u64) -> u64 {
+        (0xA << 60) | n
+    }
+
     #[test]
-    fn panicked_computation_poisons_the_slot() {
+    fn capacity_evicts_lru_settled_entries() {
+        let cache = ShardedRunCache::with_capacity(2);
+        cache.get_or_compute(same_shard_key(1), || probe(1));
+        cache.get_or_compute(same_shard_key(2), || probe(2));
+        // touch 1 so 2 becomes the LRU, then overflow the shard
+        let (_, hit) = cache.get_or_compute(same_shard_key(1), || probe(91));
+        assert!(hit);
+        cache.get_or_compute(same_shard_key(3), || probe(3));
+        assert_eq!(cache.len(), 2);
+        let (_, hit) = cache.get_or_compute(same_shard_key(1), || probe(91));
+        assert!(hit, "recently used entry must survive");
+        let (job, hit) = cache.get_or_compute(same_shard_key(2), || probe(92));
+        assert!(!hit, "LRU entry must have been evicted");
+        assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-92"));
+    }
+
+    #[test]
+    fn eviction_never_evicts_an_in_flight_slot() {
+        let cache = ShardedRunCache::with_capacity(1);
+        let (started_tx, started_rx) = std::sync::mpsc::channel();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        std::thread::scope(|s| {
+            // occupy the shard's only nominal slot with an in-flight run
+            // (move the receiver in: `Receiver` is Send but not Sync)
+            let cache_ref = &cache;
+            let worker = s.spawn(move || {
+                cache_ref.get_or_compute(same_shard_key(1), || {
+                    started_tx.send(()).unwrap();
+                    release_rx.recv().unwrap();
+                    probe(1)
+                })
+            });
+            started_rx.recv().unwrap();
+            // overflow the shard repeatedly while key 1 is in flight:
+            // the settled entries churn, the in-flight slot must stay
+            for n in 2..6 {
+                let (_, hit) = cache.get_or_compute(same_shard_key(n), || probe(n as usize));
+                assert!(!hit);
+            }
+            release_tx.send(()).unwrap();
+            let (job, hit) = worker.join().unwrap();
+            assert!(!hit);
+            assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-1"));
+        });
+        // the in-flight slot was never dropped: its result is still served
+        let (job, hit) = cache.get_or_compute(same_shard_key(1), || probe(99));
+        assert!(hit, "slot that was in flight during eviction pressure must survive");
+        assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-1"));
+    }
+
+    #[test]
+    fn panicked_computation_is_one_shot_and_later_lookups_retry() {
         let cache = ShardedRunCache::new();
         let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             cache.get_or_compute(9, || panic!("boom"));
         }));
-        assert!(first.is_err());
-        // later lookups of the poisoned key propagate instead of hanging
-        let second = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            cache.get_or_compute(9, || probe(9));
-        }));
-        assert!(second.is_err(), "poisoned slot must propagate the panic");
-        // other keys are unaffected
+        assert!(first.is_err(), "the computing caller propagates its own panic");
+        // the poisoned entry was dropped, so the key is retryable: a
+        // transient panic must not permanently wedge a fingerprint
+        assert_eq!(cache.len(), 0, "poisoned entry must be removed");
+        let (job, hit) = cache.get_or_compute(9, || probe(9));
+        assert!(!hit, "retry recomputes rather than inheriting the poison");
+        assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-9"));
+        // other keys were never affected
         let (job, hit) = cache.get_or_compute(10, || probe(10));
         assert!(!hit);
         assert!(matches!(&job.outcome, JobOutcome::Infeasible(m) if m == "probe-10"));

@@ -33,14 +33,25 @@
 //! path). The declarative experiment suite
 //! ([`crate::coordinator::suite`]) sits on top: each paper figure/table
 //! is a set of specs plus a fold over the completed results.
+//!
+//! For serving, three more pieces live here: the [`wire`] JSON codecs
+//! (specs and results over HTTP and on disk), the async [`registry`]
+//! (submit/poll job states with a live per-job event log, what
+//! `helex serve` executes on), and an optional
+//! [`crate::store::ResultStore`] behind the run cache
+//! ([`ExplorationService::with_store`]) so identical specs are answered
+//! across processes and restarts without recomputation.
 
 pub mod cache;
+pub mod registry;
+pub mod wire;
 
 use crate::cgra::Grid;
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
 use crate::mapper::{MapperConfig, MappingEngine};
 use crate::search::{Explorer, SearchConfig, SearchEvent, SearchResult};
+use crate::store::ResultStore;
 use crate::util::rng::splitmix64;
 use crate::util::{StableHasher, Stopwatch};
 use cache::{CachedJob, ShardedRunCache};
@@ -48,6 +59,7 @@ use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 
 /// Which cost model guides a job's search. (Experiment folds may still
 /// evaluate the *other* model on the result, as Fig 4 does.)
@@ -147,12 +159,44 @@ impl JobSpec {
 }
 
 /// Service-assigned job handle, unique within one service instance.
+///
+/// `Display` and `FromStr` round-trip through a *stable* zero-padded hex
+/// form (`job-000000000000002a`), which is what the HTTP API puts in
+/// URLs — fixed width, so ids sort lexicographically in the same order
+/// as numerically and can never drift from the in-memory value (the
+/// property test in `rust/tests/service.rs` pins the roundtrip).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct JobId(pub u64);
 
 impl fmt::Display for JobId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "job-{}", self.0)
+        write!(f, "job-{:016x}", self.0)
+    }
+}
+
+/// Failure to parse a [`JobId`] from its textual form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParseJobIdError;
+
+impl fmt::Display for ParseJobIdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("invalid job id (expected 'job-' followed by up to 16 hex digits)")
+    }
+}
+
+impl std::error::Error for ParseJobIdError {}
+
+impl std::str::FromStr for JobId {
+    type Err = ParseJobIdError;
+
+    /// Accepts the canonical `job-<16 hex>` form (leading zeros and the
+    /// prefix optional, so hand-typed `curl` ids work too).
+    fn from_str(s: &str) -> Result<Self, ParseJobIdError> {
+        let hex = s.strip_prefix("job-").unwrap_or(s);
+        if hex.is_empty() || hex.len() > 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(ParseJobIdError);
+        }
+        u64::from_str_radix(hex, 16).map(JobId).map_err(|_| ParseJobIdError)
     }
 }
 
@@ -236,13 +280,49 @@ pub enum ServiceEvent {
 }
 
 /// Service tuning.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Worker threads; `0` means available parallelism.
     pub jobs: usize,
     /// Forward per-candidate `Improved` events as
     /// [`ServiceEvent::Improved`] (chatty; meant for `--verbose`).
     pub live_trace: bool,
+    /// Per-shard entry cap of the in-memory run cache (16 shards, so the
+    /// default bounds the cache at 16×256 completed runs); `0` =
+    /// unbounded. In-flight runs never count against the cap — see
+    /// [`cache::ShardedRunCache`].
+    pub cache_shard_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { jobs: 0, live_trace: false, cache_shard_cap: 256 }
+    }
+}
+
+/// Receiver of one job's live [`SearchEvent`] stream, shared across
+/// threads (the server's job registry appends to a per-job log that the
+/// `/v1/jobs/:id/events` endpoint tails). For jobs served from a cache
+/// or the store the full recorded trace is replayed through the sink
+/// instead, so consumers always observe a complete stream.
+pub trait EventSink: Send + Sync {
+    fn on_event(&self, event: &SearchEvent);
+}
+
+/// Counter snapshot of one service, as served by `/v1/stats`.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub workers: usize,
+    /// Completed or in-flight entries in the in-memory run cache.
+    pub cache_entries: usize,
+    /// Jobs actually executed by a search (the warm-restart CI check
+    /// asserts this stays 0 when every answer comes from the store).
+    pub computed: u64,
+    /// Jobs answered by the in-memory cache (including in-flight twins).
+    pub mem_hits: u64,
+    /// Jobs answered by the on-disk store.
+    pub store_hits: u64,
+    pub store: Option<crate::store::StoreStats>,
 }
 
 /// Worker → coordinator messages (internal).
@@ -256,7 +336,13 @@ enum WorkerMsg {
 pub struct ExplorationService {
     cfg: ServiceConfig,
     cache: ShardedRunCache,
+    /// Durable tier under the in-memory cache: consulted on memory
+    /// misses, written through on fresh computes.
+    store: Option<Arc<ResultStore>>,
     next_id: AtomicU64,
+    computed: AtomicU64,
+    mem_hits: AtomicU64,
+    store_hits: AtomicU64,
 }
 
 impl Default for ExplorationService {
@@ -267,12 +353,46 @@ impl Default for ExplorationService {
 
 impl ExplorationService {
     pub fn new(cfg: ServiceConfig) -> Self {
-        Self { cfg, cache: ShardedRunCache::new(), next_id: AtomicU64::new(0) }
+        let cache = ShardedRunCache::with_capacity(cfg.cache_shard_cap);
+        Self {
+            cfg,
+            cache,
+            store: None,
+            next_id: AtomicU64::new(0),
+            computed: AtomicU64::new(0),
+            mem_hits: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+        }
     }
 
     /// Service with `jobs` workers and defaults otherwise.
     pub fn with_jobs(jobs: usize) -> Self {
         Self::new(ServiceConfig { jobs, ..Default::default() })
+    }
+
+    /// Service backed by an on-disk result store: memory misses fall
+    /// through to the store, fresh computes write through to it, and
+    /// identical specs are answered without recomputation across
+    /// processes and restarts.
+    pub fn with_store(cfg: ServiceConfig, store: Arc<ResultStore>) -> Self {
+        Self { store: Some(store), ..Self::new(cfg) }
+    }
+
+    /// The backing store, if one is attached.
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
+    }
+
+    /// Counter snapshot for introspection (`/v1/stats`).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            workers: self.workers(),
+            cache_entries: self.cache.len(),
+            computed: self.computed.load(Ordering::Relaxed),
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            store: self.store.as_ref().map(|s| s.stats()),
+        }
     }
 
     /// Effective worker-pool width.
@@ -289,10 +409,36 @@ impl ExplorationService {
         self.cache.len()
     }
 
+    /// Hand out the next job id (the async job registry assigns ids at
+    /// submit time, before a worker picks the job up).
+    pub fn allocate_id(&self) -> JobId {
+        JobId(self.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
     /// Run one job synchronously on the calling thread.
     pub fn run_job(&self, spec: &JobSpec) -> JobResult {
-        let id = JobId(self.next_id.fetch_add(1, Ordering::Relaxed));
-        self.execute(id, spec, None)
+        let id = self.allocate_id();
+        self.execute(id, spec, None, None)
+    }
+
+    /// Run one job synchronously, streaming its [`SearchEvent`]s into
+    /// `sink` as they happen. Cache- and store-served jobs replay their
+    /// recorded trace through the sink, so the stream is complete either
+    /// way.
+    pub fn run_job_sink(&self, spec: &JobSpec, sink: Arc<dyn EventSink>) -> JobResult {
+        let id = self.allocate_id();
+        self.run_assigned(id, spec, Some(sink))
+    }
+
+    /// [`Self::run_job_sink`] with a pre-allocated id (see
+    /// [`Self::allocate_id`]).
+    pub fn run_assigned(
+        &self,
+        id: JobId,
+        spec: &JobSpec,
+        sink: Option<Arc<dyn EventSink>>,
+    ) -> JobResult {
+        self.execute(id, spec, None, sink)
     }
 
     /// Run a batch on the worker pool; results return in submission
@@ -334,7 +480,7 @@ impl ExplorationService {
                     }
                     let _ = tx.send(WorkerMsg::Started { index, worker });
                     let live = if self.cfg.live_trace { Some(&tx) } else { None };
-                    let result = self.execute(ids[index], &specs[index], live);
+                    let result = self.execute(ids[index], &specs[index], live, None);
                     let _ = tx.send(WorkerMsg::Finished { index, result: Box::new(result) });
                 });
             }
@@ -373,19 +519,52 @@ impl ExplorationService {
         results.into_iter().map(|r| r.expect("every submitted job resolves")).collect()
     }
 
-    /// Resolve one spec: serve it from the run cache or compute it on the
-    /// calling thread (waiting on an identical in-flight run if one
-    /// exists).
+    /// Resolve one spec: serve it from the run cache, the on-disk store,
+    /// or compute it on the calling thread (waiting on an identical
+    /// in-flight run if one exists). Fresh computes write through to the
+    /// store.
     fn execute(
         &self,
         id: JobId,
         spec: &JobSpec,
         live: Option<&mpsc::Sender<WorkerMsg>>,
+        sink: Option<Arc<dyn EventSink>>,
     ) -> JobResult {
         let sw = Stopwatch::start();
         let fingerprint = spec.fingerprint();
-        let (cached, from_cache) =
-            self.cache.get_or_compute(fingerprint, || run_spec(id, spec, live));
+        let computed_here = std::cell::Cell::new(false);
+        let (cached, mem_hit) = self.cache.get_or_compute(fingerprint, || {
+            if let Some(store) = &self.store {
+                if let Some(job) = store.get(fingerprint) {
+                    self.store_hits.fetch_add(1, Ordering::Relaxed);
+                    return job;
+                }
+            }
+            computed_here.set(true);
+            self.computed.fetch_add(1, Ordering::Relaxed);
+            let job = run_spec(id, spec, live, sink.clone());
+            if let Some(store) = &self.store {
+                if let Err(e) = store.put(fingerprint, &job) {
+                    eprintln!(
+                        "[helex] warning: store write for {fingerprint:016x} failed: {e}"
+                    );
+                }
+            }
+            job
+        });
+        if mem_hit {
+            self.mem_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let from_cache = !computed_here.get();
+        if from_cache {
+            // cache- and store-served jobs still deliver a complete
+            // event stream: replay the recorded trace
+            if let Some(sink) = &sink {
+                for event in &cached.events {
+                    sink.on_event(event);
+                }
+            }
+        }
         JobResult {
             id,
             label: spec.label.clone(),
@@ -402,8 +581,14 @@ impl ExplorationService {
 /// Execute one spec on the calling thread: a per-job [`MappingEngine`]
 /// (its feasibility cache stays thread-local and lock-free) seeded with
 /// the spec's derived seed, a per-job event channel owned by the session
-/// observer, and the objective's cost model.
-fn run_spec(id: JobId, spec: &JobSpec, live: Option<&mpsc::Sender<WorkerMsg>>) -> CachedJob {
+/// observer, and the objective's cost model. `sink`, when present,
+/// receives every event as it happens (the HTTP server's live stream).
+fn run_spec(
+    id: JobId,
+    spec: &JobSpec,
+    live: Option<&mpsc::Sender<WorkerMsg>>,
+    sink: Option<Arc<dyn EventSink>>,
+) -> CachedJob {
     let engine =
         MappingEngine::new(MapperConfig { seed: spec.derived_seed(), ..spec.mapper.clone() });
     let cost = spec.objective.cost_model();
@@ -414,6 +599,9 @@ fn run_spec(id: JobId, spec: &JobSpec, live: Option<&mpsc::Sender<WorkerMsg>>) -
     let live_tx = live.cloned();
     let observer = move |event: &SearchEvent| {
         let _ = events_tx.send(event.clone());
+        if let Some(s) = &sink {
+            s.on_event(event);
+        }
         if let (SearchEvent::Improved { best_cost, tested, .. }, Some(tx)) = (event, &live_tx)
         {
             let _ = tx.send(WorkerMsg::Improved {

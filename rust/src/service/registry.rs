@@ -1,0 +1,481 @@
+//! Async job registry: submit-now, poll-later execution over the
+//! [`ExplorationService`].
+//!
+//! The synchronous service API (`run_job`, `run_batch`) resolves on the
+//! calling thread; an HTTP server cannot hold a connection open for a
+//! minutes-long search. The registry decouples the two halves:
+//! [`JobRegistry::submit`] validates nothing (the spec was already
+//! decoded), assigns a [`JobId`], enqueues, and returns immediately;
+//! a fixed pool of worker threads drains the queue through
+//! [`ExplorationService::run_assigned`]; [`JobRegistry::get`] serves the
+//! current [`JobStatus`] snapshot at any time.
+//!
+//! Every job carries an [`EventLog`] — an append-only, condvar-signalled
+//! trace of its [`SearchEvent`]s, fed live through the service's
+//! [`EventSink`] hook. The `/v1/jobs/:id/events` endpoint tails it with
+//! [`EventLog::wait_from`], so clients stream progress while the search
+//! runs and still see the full (replayed) trace for cache-served jobs.
+//!
+//! Shutdown: [`JobRegistry::drain`] stops admission ([`SubmitError::Draining`]),
+//! lets the workers finish everything already queued or running, and
+//! joins them — no worker is ever interrupted mid-write.
+
+use super::{EventSink, ExplorationService, JobId, JobOutcome, JobResult, JobSpec};
+use crate::search::SearchEvent;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Completed entries retained for polling, beyond which the oldest are
+/// evicted (queued/running jobs are never evicted). Keeps a long-lived
+/// server's per-job memory bounded; evicted results remain available
+/// from the store by fingerprint.
+pub const DEFAULT_RETAIN_DONE: usize = 4096;
+
+/// Where a job currently is. `Done` carries the result.
+#[derive(Debug, Clone)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done(Box<JobResult>),
+}
+
+impl JobStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done(_) => "done",
+        }
+    }
+}
+
+/// Append-only event trace of one job, safe to tail from any number of
+/// reader threads while the worker appends.
+#[derive(Default)]
+pub struct EventLog {
+    state: Mutex<LogState>,
+    grew: Condvar,
+}
+
+#[derive(Default)]
+struct LogState {
+    events: Vec<SearchEvent>,
+    closed: bool,
+}
+
+impl EventLog {
+    fn append(&self, event: &SearchEvent) {
+        let mut state = self.state.lock().unwrap();
+        state.events.push(event.clone());
+        self.grew.notify_all();
+    }
+
+    /// Seal the log *and drop its buffer*: once the job is Done, its
+    /// `JobResult.events` owns the (identical) trace, and keeping a
+    /// second copy per retained job would double the registry's memory.
+    /// Tailers that had not caught up complete their stream from the
+    /// result (see the server's event streamer).
+    fn close(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.closed = true;
+        state.events = Vec::new();
+        self.grew.notify_all();
+    }
+
+    /// Everything appended so far and whether the log is complete.
+    pub fn snapshot(&self) -> (Vec<SearchEvent>, bool) {
+        let state = self.state.lock().unwrap();
+        (state.events.clone(), state.closed)
+    }
+
+    /// Events past index `from`, blocking up to `timeout` for growth when
+    /// none are available yet. Returns `(new_events, closed)`; an empty
+    /// vector with `closed = false` means the timeout elapsed (poll
+    /// again — streamers use this to notice dropped clients).
+    pub fn wait_from(&self, from: usize, timeout: Duration) -> (Vec<SearchEvent>, bool) {
+        let mut state = self.state.lock().unwrap();
+        if state.events.len() <= from && !state.closed {
+            let (next, _timed_out) = self.grew.wait_timeout(state, timeout).unwrap();
+            state = next;
+        }
+        let new = state.events.get(from..).unwrap_or(&[]).to_vec();
+        (new, state.closed)
+    }
+}
+
+/// One submitted job: the spec, its mutable status, and the live trace.
+pub struct JobEntry {
+    pub id: JobId,
+    pub spec: JobSpec,
+    status: Mutex<JobStatus>,
+    pub events: EventLog,
+}
+
+impl JobEntry {
+    pub fn status(&self) -> JobStatus {
+        self.status.lock().unwrap().clone()
+    }
+
+    /// The result, once the job finished.
+    pub fn result(&self) -> Option<JobResult> {
+        match &*self.status.lock().unwrap() {
+            JobStatus::Done(result) => Some((**result).clone()),
+            _ => None,
+        }
+    }
+}
+
+impl EventSink for JobEntry {
+    fn on_event(&self, event: &SearchEvent) {
+        self.events.append(event);
+    }
+}
+
+/// Why a submission was refused (both map to HTTP 503).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The pending queue is at capacity; retry later.
+    QueueFull,
+    /// The server is shutting down and no longer admits work.
+    Draining,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => f.write_str("job queue is full"),
+            SubmitError::Draining => f.write_str("server is draining"),
+        }
+    }
+}
+
+/// Queue/worker occupancy snapshot (`/v1/stats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RegistryStats {
+    pub queued: usize,
+    pub running: usize,
+    pub done: usize,
+    pub queue_capacity: usize,
+}
+
+#[derive(Default)]
+struct Pending {
+    queue: VecDeque<Arc<JobEntry>>,
+    running: usize,
+    done: usize,
+    draining: bool,
+}
+
+/// The id→entry map plus completion order for bounded retention.
+#[derive(Default)]
+struct JobsMap {
+    by_id: HashMap<JobId, Arc<JobEntry>>,
+    /// Done jobs, oldest first; the eviction queue.
+    done_order: VecDeque<JobId>,
+}
+
+/// The registry. See the module docs.
+pub struct JobRegistry {
+    service: Arc<ExplorationService>,
+    pending: Mutex<Pending>,
+    /// Signalled on enqueue and on drain (workers wake to pick up work
+    /// or to exit).
+    work: Condvar,
+    /// Signalled whenever a job finishes or the queue empties (drain
+    /// waits on this).
+    quiet: Condvar,
+    jobs: Mutex<JobsMap>,
+    queue_cap: usize,
+    retain_done: usize,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl JobRegistry {
+    /// Start a registry with `workers` executor threads (min 1), a
+    /// pending queue bounded at `queue_cap` jobs, and at most
+    /// `retain_done` completed entries kept for polling (min 1).
+    pub fn start(
+        service: Arc<ExplorationService>,
+        workers: usize,
+        queue_cap: usize,
+        retain_done: usize,
+    ) -> Arc<Self> {
+        let registry = Arc::new(Self {
+            service,
+            pending: Mutex::new(Pending::default()),
+            work: Condvar::new(),
+            quiet: Condvar::new(),
+            jobs: Mutex::new(JobsMap::default()),
+            queue_cap: queue_cap.max(1),
+            retain_done: retain_done.max(1),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let reg = Arc::clone(&registry);
+            handles.push(std::thread::spawn(move || reg.worker_loop()));
+        }
+        *registry.workers.lock().unwrap() = handles;
+        registry
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let entry = {
+                let mut pending = self.pending.lock().unwrap();
+                loop {
+                    if let Some(entry) = pending.queue.pop_front() {
+                        pending.running += 1;
+                        break entry;
+                    }
+                    if pending.draining {
+                        return;
+                    }
+                    pending = self.work.wait(pending).unwrap();
+                }
+            };
+            *entry.status.lock().unwrap() = JobStatus::Running;
+            let sink: Arc<dyn EventSink> = Arc::clone(&entry);
+            // a panicking search (or a twin waiting on a poisoned cache
+            // slot) must not kill the worker: the pool would silently
+            // shrink, the job would stay "Running" forever, and drain()
+            // would hang on the leaked running counter. Catch it and
+            // resolve the job as Rejected instead.
+            let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.service.run_assigned(entry.id, &entry.spec, Some(sink))
+            }));
+            let result = computed.unwrap_or_else(|panic| {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                JobResult {
+                    id: entry.id,
+                    label: entry.spec.label.clone(),
+                    grid: entry.spec.grid,
+                    fingerprint: entry.spec.fingerprint(),
+                    outcome: JobOutcome::Rejected(format!("job panicked: {msg}")),
+                    events: Vec::new(),
+                    wall_secs: 0.0,
+                    from_cache: false,
+                }
+            });
+            *entry.status.lock().unwrap() = JobStatus::Done(Box::new(result));
+            entry.events.close();
+            self.retire(entry.id);
+            let mut pending = self.pending.lock().unwrap();
+            pending.running -= 1;
+            pending.done += 1;
+            self.quiet.notify_all();
+        }
+    }
+
+    /// Record a completion for retention bookkeeping, evicting the
+    /// oldest done entries past the cap.
+    fn retire(&self, id: JobId) {
+        let mut jobs = self.jobs.lock().unwrap();
+        jobs.done_order.push_back(id);
+        while jobs.done_order.len() > self.retain_done {
+            if let Some(oldest) = jobs.done_order.pop_front() {
+                jobs.by_id.remove(&oldest);
+            }
+        }
+    }
+
+    /// Enqueue a spec. Returns its id immediately; the job runs when a
+    /// worker frees up.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobId, SubmitError> {
+        let id = self.service.allocate_id();
+        let entry = Arc::new(JobEntry {
+            id,
+            spec,
+            status: Mutex::new(JobStatus::Queued),
+            events: EventLog::default(),
+        });
+        {
+            let mut pending = self.pending.lock().unwrap();
+            if pending.draining {
+                return Err(SubmitError::Draining);
+            }
+            if pending.queue.len() >= self.queue_cap {
+                return Err(SubmitError::QueueFull);
+            }
+            pending.queue.push_back(Arc::clone(&entry));
+        }
+        self.jobs.lock().unwrap().by_id.insert(id, entry);
+        self.work.notify_one();
+        Ok(id)
+    }
+
+    /// The entry for `id`, if it was submitted here and (for completed
+    /// jobs) is still within the retention window.
+    pub fn get(&self, id: JobId) -> Option<Arc<JobEntry>> {
+        self.jobs.lock().unwrap().by_id.get(&id).cloned()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let pending = self.pending.lock().unwrap();
+        RegistryStats {
+            queued: pending.queue.len(),
+            running: pending.running,
+            done: pending.done,
+            queue_capacity: self.queue_cap,
+        }
+    }
+
+    /// True once [`Self::drain`] has been called.
+    pub fn draining(&self) -> bool {
+        self.pending.lock().unwrap().draining
+    }
+
+    /// Graceful shutdown: refuse new submissions, wait for every queued
+    /// and running job to finish, then join the workers. Idempotent.
+    pub fn drain(&self) {
+        {
+            let mut pending = self.pending.lock().unwrap();
+            pending.draining = true;
+            self.work.notify_all();
+            while !(pending.queue.is_empty() && pending.running == 0) {
+                pending = self.quiet.wait(pending).unwrap();
+            }
+        }
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for handle in handles {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::search::SearchConfig;
+
+    fn tiny_spec(label: &str) -> JobSpec {
+        JobSpec {
+            search: SearchConfig { l_test: 30, l_fail: 2, gsg_passes: 1, ..Default::default() },
+            ..JobSpec::new(label, vec![benchmarks::benchmark("SOB")], Grid::new(5, 5))
+        }
+    }
+
+    fn wait_done(registry: &JobRegistry, id: JobId) -> JobResult {
+        let entry = registry.get(id).expect("submitted job is registered");
+        for _ in 0..600 {
+            if let Some(result) = entry.result() {
+                return result;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        panic!("job {id} did not finish in 30s");
+    }
+
+    #[test]
+    fn submit_poll_done_lifecycle() {
+        let service = Arc::new(ExplorationService::with_jobs(1));
+        let registry = JobRegistry::start(service, 2, 8, 64);
+        let id = registry.submit(tiny_spec("lifecycle")).unwrap();
+        let entry = registry.get(id).unwrap();
+        assert_eq!(entry.id, id);
+        let result = wait_done(&registry, id);
+        assert_eq!(result.id, id, "result carries the submit-time id");
+        assert!(result.outcome.is_completed());
+        assert!(matches!(entry.status(), JobStatus::Done(_)));
+        // the log seals and drops its buffer once Done — the result
+        // owns the trace from then on (no duplicate copy per job)
+        let (events, closed) = entry.events.snapshot();
+        assert!(closed);
+        assert!(events.is_empty(), "sealed log must not retain a second trace copy");
+        assert!(!result.events.is_empty(), "the result carries the trace");
+        assert!(registry.get(JobId(u64::MAX)).is_none());
+        registry.drain();
+        assert_eq!(registry.stats().done, 1);
+    }
+
+    #[test]
+    fn event_log_tail_is_a_prefix_the_result_completes() {
+        let service = Arc::new(ExplorationService::with_jobs(1));
+        let registry = JobRegistry::start(service, 1, 8, 64);
+        let id = registry.submit(tiny_spec("tail")).unwrap();
+        let entry = registry.get(id).unwrap();
+        let mut tailed = Vec::new();
+        loop {
+            let (new, closed) = entry.events.wait_from(tailed.len(), Duration::from_millis(100));
+            let drained = new.is_empty();
+            tailed.extend(new);
+            if closed && drained {
+                break;
+            }
+        }
+        // the log may seal (dropping its buffer) before a tailer drains
+        // it, so a tail is a *prefix* of the trace; streamers complete
+        // the remainder from the result — exactly what we check here
+        let result = wait_done(&registry, id);
+        assert!(tailed.len() <= result.events.len());
+        assert_eq!(
+            tailed,
+            result.events[..tailed.len()].to_vec(),
+            "tailed stream must be a prefix of the recorded trace"
+        );
+        registry.drain();
+    }
+
+    #[test]
+    fn drain_finishes_queued_work_and_refuses_new() {
+        let service = Arc::new(ExplorationService::with_jobs(1));
+        let registry = JobRegistry::start(service, 1, 8, 64);
+        let ids: Vec<JobId> = (0..3)
+            .map(|i| registry.submit(tiny_spec(&format!("drain-{i}"))).unwrap())
+            .collect();
+        registry.drain();
+        for id in ids {
+            let entry = registry.get(id).unwrap();
+            assert!(
+                matches!(entry.status(), JobStatus::Done(_)),
+                "drain must finish queued job {id}"
+            );
+        }
+        assert_eq!(registry.submit(tiny_spec("late")).unwrap_err(), SubmitError::Draining);
+        assert!(registry.draining());
+    }
+
+    #[test]
+    fn done_entries_are_evicted_past_the_retention_cap() {
+        let service = Arc::new(ExplorationService::with_jobs(1));
+        let registry = JobRegistry::start(service, 1, 8, 2);
+        let ids: Vec<JobId> = (0..3)
+            .map(|i| registry.submit(tiny_spec(&format!("retain-{i}"))).unwrap())
+            .collect();
+        registry.drain(); // all three complete, in submission order
+        assert!(
+            registry.get(ids[0]).is_none(),
+            "oldest done entry must be evicted past the cap of 2"
+        );
+        assert!(registry.get(ids[1]).is_some());
+        assert!(registry.get(ids[2]).is_some());
+        assert_eq!(registry.stats().done, 3, "counters track completions, not retention");
+    }
+
+    #[test]
+    fn queue_capacity_bounds_admission() {
+        // a registry whose single worker is guaranteed busy: give it a
+        // full queue before it can drain anything meaningful
+        let service = Arc::new(ExplorationService::with_jobs(1));
+        let registry = JobRegistry::start(service, 1, 2, 64);
+        let mut accepted = 0;
+        let mut refused = 0;
+        for i in 0..40 {
+            match registry.submit(tiny_spec(&format!("cap-{i}"))) {
+                Ok(_) => accepted += 1,
+                Err(SubmitError::QueueFull) => refused += 1,
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(refused > 0, "a 2-deep queue cannot admit 40 instant submissions");
+        assert!(accepted >= 2);
+        registry.drain();
+    }
+}

@@ -1,0 +1,789 @@
+//! Wire codecs: [`JobSpec`]/[`JobResult`]/[`SearchEvent`] ⇄ [`Json`].
+//!
+//! The HTTP API ([`crate::server`]) and the on-disk result store
+//! ([`crate::store`]) share these encoders, so a result served over the
+//! wire and a result persisted to disk are the same bytes. Encoding is
+//! deterministic (fixed key order, compact output — see
+//! [`crate::util::json`]), which is what lets tests byte-compare an
+//! HTTP-served result against a direct [`super::ExplorationService`]
+//! run.
+//!
+//! Decoding is *total and validating*: every function returns
+//! [`WireError`] instead of panicking, and [`decode_spec`] re-validates
+//! everything whose invariants the core types enforce with assertions
+//! (grid bounds, DFG structure, layout support masks) so a malicious
+//! request body can never take down a worker.
+//!
+//! Conventions:
+//! * `u64` identifiers travel as strings — job ids via their zero-padded
+//!   hex `Display` (`"job-00…2a"`), fingerprints via [`fp_hex`] (the same
+//!   16-hex-digit form the store uses for filenames) — so JavaScript
+//!   clients never push them through a lossy double.
+//! * enum-ish values are tagged objects (`{"status":"completed",…}`) or
+//!   lowercase names (`"area"`), never bare indices.
+
+use super::{JobId, JobOutcome, JobResult, JobSpec, Objective};
+use crate::cgra::{Grid, Layout};
+use crate::dfg::Dfg;
+use crate::mapper::{MapperConfig, Mapping};
+use crate::ops::{GroupSet, Op};
+use crate::search::{SearchConfig, SearchEvent, SearchResult, SearchStats, TracePoint};
+use crate::util::json::Json;
+use std::fmt;
+
+/// Version stamp embedded in persisted/served result payloads. Bump on
+/// any incompatible schema change; the store treats a mismatch as a miss
+/// (recompute) rather than an error.
+pub const WIRE_VERSION: u64 = 1;
+
+/// A decode failure: what was malformed, with enough context to fix the
+/// request.
+#[derive(Debug, Clone)]
+pub struct WireError(pub String);
+
+impl WireError {
+    fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+type Result<T> = std::result::Result<T, WireError>;
+
+/// Canonical 16-hex-digit rendering of a fingerprint — also the store's
+/// filename stem, so URLs, JSON payloads and on-disk names agree.
+pub fn fp_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+/// Inverse of [`fp_hex`] (leading zeros optional).
+pub fn parse_fp(s: &str) -> Result<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return Err(WireError::new(format!("bad fingerprint '{s}'")));
+    }
+    u64::from_str_radix(s, 16).map_err(|_| WireError::new(format!("bad fingerprint '{s}'")))
+}
+
+// ---------------------------------------------------------------- helpers
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key).ok_or_else(|| WireError::new(format!("missing field '{key}'")))
+}
+
+fn get_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+    field(obj, key)?
+        .as_str()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be a string")))
+}
+
+fn get_bool(obj: &Json, key: &str) -> Result<bool> {
+    field(obj, key)?
+        .as_bool()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be a boolean")))
+}
+
+fn get_u64(obj: &Json, key: &str) -> Result<u64> {
+    field(obj, key)?
+        .as_u64()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<usize> {
+    field(obj, key)?
+        .as_usize()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn get_f64(obj: &Json, key: &str) -> Result<f64> {
+    field(obj, key)?
+        .as_f64()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be a number")))
+}
+
+fn get_arr<'a>(obj: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(obj, key)?
+        .as_array()
+        .ok_or_else(|| WireError::new(format!("field '{key}' must be an array")))
+}
+
+fn insts_json(insts: &[usize; crate::ops::NUM_GROUPS]) -> Json {
+    Json::Arr(insts.iter().map(|&n| Json::U64(n as u64)).collect())
+}
+
+fn decode_insts(j: &Json, what: &str) -> Result<[usize; crate::ops::NUM_GROUPS]> {
+    let items = j
+        .as_array()
+        .ok_or_else(|| WireError::new(format!("{what} must be an array")))?;
+    if items.len() != crate::ops::NUM_GROUPS {
+        return Err(WireError::new(format!(
+            "{what} must have {} entries, got {}",
+            crate::ops::NUM_GROUPS,
+            items.len()
+        )));
+    }
+    let mut out = [0usize; crate::ops::NUM_GROUPS];
+    for (i, item) in items.iter().enumerate() {
+        out[i] = item
+            .as_usize()
+            .ok_or_else(|| WireError::new(format!("{what}[{i}] must be an integer")))?;
+    }
+    Ok(out)
+}
+
+fn decode_cells(j: &Json, what: &str) -> Result<Vec<crate::cgra::CellId>> {
+    let items = j
+        .as_array()
+        .ok_or_else(|| WireError::new(format!("{what} must be an array")))?;
+    items
+        .iter()
+        .map(|item| {
+            item.as_u64()
+                .and_then(|n| u16::try_from(n).ok())
+                .ok_or_else(|| WireError::new(format!("{what} entries must be cell ids")))
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------------- spec
+
+pub fn encode_grid(grid: Grid) -> Json {
+    Json::obj(vec![
+        ("rows", Json::U64(grid.rows as u64)),
+        ("cols", Json::U64(grid.cols as u64)),
+    ])
+}
+
+pub fn decode_grid(j: &Json) -> Result<Grid> {
+    let rows = get_usize(j, "rows")?;
+    let cols = get_usize(j, "cols")?;
+    // re-check the Grid::new assertions so bad input errors instead of
+    // panicking a worker
+    if rows < 3 || cols < 3 {
+        return Err(WireError::new(format!("grid must be at least 3x3, got {rows}x{cols}")));
+    }
+    if rows.saturating_mul(cols) > u16::MAX as usize {
+        return Err(WireError::new(format!("grid {rows}x{cols} too large")));
+    }
+    Ok(Grid::new(rows, cols))
+}
+
+pub fn encode_dfg(dfg: &Dfg) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&dfg.name)),
+        ("nodes", Json::Arr(dfg.nodes.iter().map(|op| Json::str(op.name())).collect())),
+        (
+            "edges",
+            Json::Arr(
+                dfg.edges
+                    .iter()
+                    .map(|&(s, d)| Json::Arr(vec![Json::U64(s as u64), Json::U64(d as u64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn decode_dfg(j: &Json) -> Result<Dfg> {
+    let name = get_str(j, "name")?.to_string();
+    let mut nodes = Vec::new();
+    for (i, node) in get_arr(j, "nodes")?.iter().enumerate() {
+        let op_name = node
+            .as_str()
+            .ok_or_else(|| WireError::new(format!("dfg '{name}': nodes[{i}] must be a string")))?;
+        let op = Op::from_name(op_name).ok_or_else(|| {
+            WireError::new(format!("dfg '{name}': unknown operation '{op_name}'"))
+        })?;
+        nodes.push(op);
+    }
+    let mut edges = Vec::new();
+    for (i, edge) in get_arr(j, "edges")?.iter().enumerate() {
+        let pair = edge
+            .as_array()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| WireError::new(format!("dfg '{name}': edges[{i}] must be [src,dst]")))?;
+        let endpoint = |k: usize| -> Result<u32> {
+            pair[k]
+                .as_u64()
+                .and_then(|n| u32::try_from(n).ok())
+                .filter(|&n| (n as usize) < nodes.len())
+                .ok_or_else(|| {
+                    WireError::new(format!("dfg '{name}': edges[{i}] endpoint out of range"))
+                })
+        };
+        edges.push((endpoint(0)?, endpoint(1)?));
+    }
+    let dfg = Dfg { name, nodes, edges };
+    // the mapper and search assume structurally valid DAGs (topo order,
+    // arity, no parallel edges); reject anything else up front
+    let violations = dfg.validate();
+    if !violations.is_empty() {
+        return Err(WireError::new(format!(
+            "dfg '{}' is invalid: {}",
+            dfg.name,
+            violations.join("; ")
+        )));
+    }
+    Ok(dfg)
+}
+
+fn encode_search_config(cfg: &SearchConfig) -> Json {
+    Json::obj(vec![
+        ("l_test", Json::U64(cfg.l_test as u64)),
+        ("l_fail", Json::U64(cfg.l_fail as u64)),
+        ("run_gsg", Json::Bool(cfg.run_gsg)),
+        ("gsg_passes", Json::U64(cfg.gsg_passes as u64)),
+        ("gsg_stale_prune_after", Json::U64(cfg.gsg_stale_prune_after as u64)),
+        ("use_heatmap", Json::Bool(cfg.use_heatmap)),
+        ("opsg_skip_arith", Json::Bool(cfg.opsg_skip_arith)),
+    ])
+}
+
+fn decode_search_config(j: &Json) -> Result<SearchConfig> {
+    Ok(SearchConfig {
+        l_test: get_usize(j, "l_test")?,
+        l_fail: get_usize(j, "l_fail")?,
+        run_gsg: get_bool(j, "run_gsg")?,
+        gsg_passes: get_usize(j, "gsg_passes")?,
+        gsg_stale_prune_after: get_usize(j, "gsg_stale_prune_after")?,
+        use_heatmap: get_bool(j, "use_heatmap")?,
+        opsg_skip_arith: get_bool(j, "opsg_skip_arith")?,
+    })
+}
+
+fn encode_mapper_config(cfg: &MapperConfig) -> Json {
+    Json::obj(vec![
+        ("route_iters", Json::U64(cfg.route_iters as u64)),
+        ("placement_attempts", Json::U64(cfg.placement_attempts as u64)),
+        ("max_reserves", Json::U64(cfg.max_reserves as u64)),
+        ("hist_increment", Json::F64(cfg.hist_increment)),
+        ("present_penalty", Json::F64(cfg.present_penalty)),
+        ("seed", Json::U64(cfg.seed)),
+        ("feasibility_cache", Json::Bool(cfg.feasibility_cache)),
+    ])
+}
+
+fn decode_mapper_config(j: &Json) -> Result<MapperConfig> {
+    Ok(MapperConfig {
+        route_iters: get_usize(j, "route_iters")?,
+        placement_attempts: get_usize(j, "placement_attempts")?,
+        max_reserves: get_usize(j, "max_reserves")?,
+        hist_increment: get_f64(j, "hist_increment")?,
+        present_penalty: get_f64(j, "present_penalty")?,
+        seed: get_u64(j, "seed")?,
+        feasibility_cache: get_bool(j, "feasibility_cache")?,
+    })
+}
+
+pub fn encode_spec(spec: &JobSpec) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&spec.label)),
+        ("dfgs", Json::Arr(spec.dfgs.iter().map(encode_dfg).collect())),
+        ("grid", encode_grid(spec.grid)),
+        ("objective", Json::str(spec.objective.name())),
+        ("search", encode_search_config(&spec.search)),
+        ("mapper", encode_mapper_config(&spec.mapper)),
+        ("seed", Json::U64(spec.seed)),
+    ])
+}
+
+/// Decode and validate a job spec. Optional fields: `objective` (default
+/// area), `search`/`mapper` (defaults), `seed` (defaults to the mapper
+/// seed), `label` (defaults to `"api"`) — so a minimal client only sends
+/// `dfgs` + `grid`.
+pub fn decode_spec(j: &Json) -> Result<JobSpec> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(WireError::new("job spec must be a JSON object"));
+    }
+    let label = match j.get("label") {
+        Some(l) => l
+            .as_str()
+            .ok_or_else(|| WireError::new("field 'label' must be a string"))?
+            .to_string(),
+        None => "api".to_string(),
+    };
+    let dfgs: Vec<Dfg> =
+        get_arr(j, "dfgs")?.iter().map(decode_dfg).collect::<Result<_>>()?;
+    let grid = decode_grid(field(j, "grid")?)?;
+    let objective = match j.get("objective") {
+        None => Objective::Area,
+        Some(o) => match o.as_str() {
+            Some("area") => Objective::Area,
+            Some("power") => Objective::Power,
+            _ => return Err(WireError::new("field 'objective' must be \"area\" or \"power\"")),
+        },
+    };
+    let search = match j.get("search") {
+        Some(s) => decode_search_config(s)?,
+        None => SearchConfig::default(),
+    };
+    let mapper = match j.get("mapper") {
+        Some(m) => decode_mapper_config(m)?,
+        None => MapperConfig::default(),
+    };
+    let seed = match j.get("seed") {
+        Some(s) => s.as_u64().ok_or_else(|| WireError::new("field 'seed' must be a u64"))?,
+        None => mapper.seed,
+    };
+    Ok(JobSpec { label, dfgs, grid, objective, search, mapper, seed })
+}
+
+// ----------------------------------------------------------------- result
+
+pub fn encode_layout(layout: &Layout) -> Json {
+    let grid = layout.grid;
+    Json::obj(vec![
+        ("rows", Json::U64(grid.rows as u64)),
+        ("cols", Json::U64(grid.cols as u64)),
+        (
+            "support",
+            Json::Arr(
+                grid.compute_cells()
+                    .map(|c| Json::U64(layout.support(c).0 as u64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn decode_layout(j: &Json) -> Result<Layout> {
+    let grid = decode_grid(j)?;
+    let support = get_arr(j, "support")?;
+    if support.len() != grid.num_compute() {
+        return Err(WireError::new(format!(
+            "layout support must have {} entries for a {grid} grid, got {}",
+            grid.num_compute(),
+            support.len()
+        )));
+    }
+    let mut layout = Layout::empty(grid);
+    for (cell, bits) in grid.compute_cells().zip(support) {
+        let bits = bits
+            .as_u64()
+            .and_then(|n| u8::try_from(n).ok())
+            .ok_or_else(|| WireError::new("layout support entries must be group masks"))?;
+        let set = GroupSet(bits);
+        // set_support asserts this; check it so decode stays total
+        if !set.is_subset_of(GroupSet::all_compute()) {
+            return Err(WireError::new(format!("support mask {bits:#x} is not a compute mask")));
+        }
+        layout.set_support(cell, set);
+    }
+    Ok(layout)
+}
+
+fn cells_json(cs: &[crate::cgra::CellId]) -> Json {
+    Json::Arr(cs.iter().map(|&c| Json::U64(c as u64)).collect())
+}
+
+fn encode_mapping(m: &Mapping) -> Json {
+    Json::obj(vec![
+        ("node_cell", cells_json(&m.node_cell)),
+        ("edge_paths", Json::Arr(m.edge_paths.iter().map(|p| cells_json(p)).collect())),
+        ("reserved", cells_json(&m.reserved)),
+    ])
+}
+
+fn decode_mapping(j: &Json) -> Result<Mapping> {
+    Ok(Mapping {
+        node_cell: decode_cells(field(j, "node_cell")?, "node_cell")?,
+        edge_paths: get_arr(j, "edge_paths")?
+            .iter()
+            .map(|p| decode_cells(p, "edge_paths"))
+            .collect::<Result<_>>()?,
+        reserved: decode_cells(field(j, "reserved")?, "reserved")?,
+    })
+}
+
+fn encode_stats(stats: &SearchStats) -> Json {
+    Json::obj(vec![
+        ("expanded", Json::U64(stats.expanded as u64)),
+        ("tested", Json::U64(stats.tested as u64)),
+        (
+            "phase_secs",
+            Json::Arr(
+                stats
+                    .phase_secs
+                    .iter()
+                    .map(|(phase, secs)| {
+                        Json::obj(vec![("phase", Json::str(phase)), ("secs", Json::F64(*secs))])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("heatmap_used", Json::Bool(stats.heatmap_used)),
+        ("insts_full", insts_json(&stats.insts_full)),
+        (
+            "insts_after_phase",
+            Json::Arr(
+                stats
+                    .insts_after_phase
+                    .iter()
+                    .map(|(phase, insts)| {
+                        Json::obj(vec![("phase", Json::str(phase)), ("insts", insts_json(insts))])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "trace",
+            Json::Arr(
+                stats
+                    .trace
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("phase", Json::str(&t.phase)),
+                            ("secs", Json::F64(t.secs)),
+                            ("tested", Json::U64(t.tested as u64)),
+                            ("best_cost", Json::F64(t.best_cost)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn decode_stats(j: &Json) -> Result<SearchStats> {
+    let mut stats = SearchStats {
+        expanded: get_usize(j, "expanded")?,
+        tested: get_usize(j, "tested")?,
+        heatmap_used: get_bool(j, "heatmap_used")?,
+        insts_full: decode_insts(field(j, "insts_full")?, "insts_full")?,
+        ..Default::default()
+    };
+    for item in get_arr(j, "phase_secs")? {
+        stats.phase_secs.push((get_str(item, "phase")?.to_string(), get_f64(item, "secs")?));
+    }
+    for item in get_arr(j, "insts_after_phase")? {
+        stats.insts_after_phase.push((
+            get_str(item, "phase")?.to_string(),
+            decode_insts(field(item, "insts")?, "insts")?,
+        ));
+    }
+    for item in get_arr(j, "trace")? {
+        stats.trace.push(TracePoint {
+            phase: get_str(item, "phase")?.to_string(),
+            secs: get_f64(item, "secs")?,
+            tested: get_usize(item, "tested")?,
+            best_cost: get_f64(item, "best_cost")?,
+        });
+    }
+    Ok(stats)
+}
+
+fn encode_search_result(r: &SearchResult) -> Json {
+    Json::obj(vec![
+        ("full_layout", encode_layout(&r.full_layout)),
+        ("initial_layout", encode_layout(&r.initial_layout)),
+        ("best_layout", encode_layout(&r.best_layout)),
+        ("best_cost", Json::F64(r.best_cost)),
+        ("min_insts", insts_json(&r.min_insts)),
+        ("final_mappings", Json::Arr(r.final_mappings.iter().map(encode_mapping).collect())),
+        ("stats", encode_stats(&r.stats)),
+    ])
+}
+
+fn decode_search_result(j: &Json) -> Result<SearchResult> {
+    Ok(SearchResult {
+        full_layout: decode_layout(field(j, "full_layout")?)?,
+        initial_layout: decode_layout(field(j, "initial_layout")?)?,
+        best_layout: decode_layout(field(j, "best_layout")?)?,
+        best_cost: get_f64(j, "best_cost")?,
+        min_insts: decode_insts(field(j, "min_insts")?, "min_insts")?,
+        final_mappings: get_arr(j, "final_mappings")?
+            .iter()
+            .map(decode_mapping)
+            .collect::<Result<_>>()?,
+        stats: decode_stats(field(j, "stats")?)?,
+    })
+}
+
+pub fn encode_outcome(outcome: &JobOutcome) -> Json {
+    match outcome {
+        JobOutcome::Completed(r) => Json::obj(vec![
+            ("status", Json::str("completed")),
+            ("result", encode_search_result(r)),
+        ]),
+        JobOutcome::Infeasible(why) => {
+            Json::obj(vec![("status", Json::str("infeasible")), ("reason", Json::str(why))])
+        }
+        JobOutcome::Rejected(why) => {
+            Json::obj(vec![("status", Json::str("rejected")), ("reason", Json::str(why))])
+        }
+    }
+}
+
+pub fn decode_outcome(j: &Json) -> Result<JobOutcome> {
+    match get_str(j, "status")? {
+        "completed" => Ok(JobOutcome::Completed(decode_search_result(field(j, "result")?)?)),
+        "infeasible" => Ok(JobOutcome::Infeasible(get_str(j, "reason")?.to_string())),
+        "rejected" => Ok(JobOutcome::Rejected(get_str(j, "reason")?.to_string())),
+        other => Err(WireError::new(format!("unknown outcome status '{other}'"))),
+    }
+}
+
+pub fn encode_event(event: &SearchEvent) -> Json {
+    match event {
+        SearchEvent::PhaseStarted { phase, incumbent_cost } => Json::obj(vec![
+            ("type", Json::str("phase_started")),
+            ("phase", Json::str(phase)),
+            ("incumbent_cost", Json::F64(*incumbent_cost)),
+        ]),
+        SearchEvent::LayoutTested { feasible, cost, tested } => Json::obj(vec![
+            ("type", Json::str("layout_tested")),
+            ("feasible", Json::Bool(*feasible)),
+            ("cost", Json::F64(*cost)),
+            ("tested", Json::U64(*tested as u64)),
+        ]),
+        SearchEvent::Improved { best_cost, tested, secs } => Json::obj(vec![
+            ("type", Json::str("improved")),
+            ("best_cost", Json::F64(*best_cost)),
+            ("tested", Json::U64(*tested as u64)),
+            ("secs", Json::F64(*secs)),
+        ]),
+        SearchEvent::PhaseFinished { phase, secs, best_cost } => Json::obj(vec![
+            ("type", Json::str("phase_finished")),
+            ("phase", Json::str(phase)),
+            ("secs", Json::F64(*secs)),
+            ("best_cost", Json::F64(*best_cost)),
+        ]),
+    }
+}
+
+pub fn decode_event(j: &Json) -> Result<SearchEvent> {
+    match get_str(j, "type")? {
+        "phase_started" => Ok(SearchEvent::PhaseStarted {
+            phase: get_str(j, "phase")?.to_string(),
+            incumbent_cost: get_f64(j, "incumbent_cost")?,
+        }),
+        "layout_tested" => Ok(SearchEvent::LayoutTested {
+            feasible: get_bool(j, "feasible")?,
+            cost: get_f64(j, "cost")?,
+            tested: get_usize(j, "tested")?,
+        }),
+        "improved" => Ok(SearchEvent::Improved {
+            best_cost: get_f64(j, "best_cost")?,
+            tested: get_usize(j, "tested")?,
+            secs: get_f64(j, "secs")?,
+        }),
+        "phase_finished" => Ok(SearchEvent::PhaseFinished {
+            phase: get_str(j, "phase")?.to_string(),
+            secs: get_f64(j, "secs")?,
+            best_cost: get_f64(j, "best_cost")?,
+        }),
+        other => Err(WireError::new(format!("unknown event type '{other}'"))),
+    }
+}
+
+pub fn encode_events(events: &[SearchEvent]) -> Json {
+    Json::Arr(events.iter().map(encode_event).collect())
+}
+
+pub fn decode_events(j: &Json) -> Result<Vec<SearchEvent>> {
+    j.as_array()
+        .ok_or_else(|| WireError::new("events must be an array"))?
+        .iter()
+        .map(decode_event)
+        .collect()
+}
+
+pub fn encode_result(result: &JobResult) -> Json {
+    Json::obj(vec![
+        ("version", Json::U64(WIRE_VERSION)),
+        ("id", Json::str(result.id.to_string())),
+        ("label", Json::str(&result.label)),
+        ("grid", encode_grid(result.grid)),
+        ("fingerprint", Json::str(fp_hex(result.fingerprint))),
+        ("outcome", encode_outcome(&result.outcome)),
+        ("events", encode_events(&result.events)),
+        ("wall_secs", Json::F64(result.wall_secs)),
+        ("from_cache", Json::Bool(result.from_cache)),
+    ])
+}
+
+pub fn decode_result(j: &Json) -> Result<JobResult> {
+    let version = get_u64(j, "version")?;
+    if version != WIRE_VERSION {
+        return Err(WireError::new(format!(
+            "unsupported result version {version} (this build speaks {WIRE_VERSION})"
+        )));
+    }
+    Ok(JobResult {
+        id: get_str(j, "id")?
+            .parse::<JobId>()
+            .map_err(|e| WireError::new(e.to_string()))?,
+        label: get_str(j, "label")?.to_string(),
+        grid: decode_grid(field(j, "grid")?)?,
+        fingerprint: parse_fp(get_str(j, "fingerprint")?)?,
+        outcome: decode_outcome(field(j, "outcome")?)?,
+        events: decode_events(field(j, "events")?)?,
+        wall_secs: get_f64(j, "wall_secs")?,
+        from_cache: get_bool(j, "from_cache")?,
+    })
+}
+
+/// Normalization for byte-comparing two encodings of "the same" job:
+/// recursively drops the fields that legitimately differ between two
+/// executions of one spec — ids, cache provenance and every wall-clock
+/// reading (`wall_secs`, and the `secs` fields of phase timings, trace
+/// points and events). Everything that survives is part of the
+/// determinism contract.
+pub fn strip_volatile(j: &Json) -> Json {
+    match j {
+        Json::Obj(pairs) => Json::Obj(
+            pairs
+                .iter()
+                .filter(|(k, _)| !matches!(k.as_str(), "id" | "from_cache" | "wall_secs" | "secs"))
+                .map(|(k, v)| (k.clone(), strip_volatile(v)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(strip_volatile).collect()),
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::benchmarks;
+    use crate::service::ExplorationService;
+    use crate::util::json;
+
+    fn tiny_spec() -> JobSpec {
+        JobSpec {
+            search: SearchConfig { l_test: 40, l_fail: 2, gsg_passes: 1, ..Default::default() },
+            objective: Objective::Power,
+            seed: 7,
+            ..JobSpec::new("wire", vec![benchmarks::benchmark("SOB")], Grid::new(6, 6))
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_preserves_fingerprint() {
+        let spec = tiny_spec();
+        let encoded = encode_spec(&spec);
+        let text = encoded.to_string();
+        let back = decode_spec(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), spec.fingerprint(), "codec must be content-lossless");
+        assert_eq!(back.label, spec.label);
+        assert_eq!(encode_spec(&back).to_string(), text, "re-encoding is byte-stable");
+    }
+
+    #[test]
+    fn minimal_spec_uses_defaults() {
+        let j = json::parse(
+            r#"{"dfgs":[{"name":"t","nodes":["load","add","load","store"],
+                 "edges":[[0,1],[2,1],[1,3]]}],"grid":{"rows":5,"cols":5}}"#,
+        )
+        .unwrap();
+        let spec = decode_spec(&j).unwrap();
+        assert_eq!(spec.label, "api");
+        assert_eq!(spec.objective, Objective::Area);
+        assert_eq!(spec.seed, MapperConfig::default().seed);
+        assert_eq!(spec.search.l_test, SearchConfig::default().l_test);
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected_with_reasons() {
+        for (body, needle) in [
+            (r#"[1,2]"#, "object"),
+            (r#"{"grid":{"rows":5,"cols":5}}"#, "dfgs"),
+            (r#"{"dfgs":[],"grid":{"rows":2,"cols":9}}"#, "3x3"),
+            (r#"{"dfgs":[],"grid":{"rows":300,"cols":300}}"#, "too large"),
+            (
+                r#"{"dfgs":[{"name":"t","nodes":["frob"],"edges":[]}],"grid":{"rows":5,"cols":5}}"#,
+                "unknown operation",
+            ),
+            (
+                r#"{"dfgs":[{"name":"t","nodes":["load","store"],"edges":[[0,7]]}],"grid":{"rows":5,"cols":5}}"#,
+                "out of range",
+            ),
+            (
+                r#"{"dfgs":[{"name":"t","nodes":["add","add"],"edges":[[0,1],[1,0]]}],"grid":{"rows":5,"cols":5}}"#,
+                "invalid",
+            ),
+            (
+                r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"objective":"speed"}"#,
+                "objective",
+            ),
+        ] {
+            let err = decode_spec(&json::parse(body).unwrap()).unwrap_err();
+            assert!(
+                err.0.contains(needle),
+                "body {body} should fail mentioning '{needle}', got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn result_roundtrip_is_byte_stable() {
+        let service = ExplorationService::with_jobs(1);
+        let result = service.run_job(&tiny_spec());
+        assert!(result.outcome.is_completed());
+        let text = encode_result(&result).to_string();
+        let back = decode_result(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(encode_result(&back).to_string(), text);
+        assert_eq!(back.best_cost(), result.best_cost());
+        assert_eq!(back.events.len(), result.events.len());
+        let (a, b) = (back.outcome.search_result().unwrap(), result.outcome.search_result().unwrap());
+        assert_eq!(a.best_layout, b.best_layout);
+        assert_eq!(a.stats.tested, b.stats.tested);
+        assert_eq!(a.final_mappings.len(), b.final_mappings.len());
+    }
+
+    #[test]
+    fn infeasible_and_rejected_outcomes_roundtrip() {
+        for outcome in [
+            JobOutcome::Infeasible("no fit".into()),
+            JobOutcome::Rejected("empty set".into()),
+        ] {
+            let back = decode_outcome(&encode_outcome(&outcome)).unwrap();
+            assert_eq!(format!("{back:?}"), format!("{outcome:?}"));
+        }
+        assert!(decode_outcome(&Json::obj(vec![("status", Json::str("exploded"))])).is_err());
+    }
+
+    #[test]
+    fn version_mismatch_is_an_error() {
+        let service = ExplorationService::with_jobs(1);
+        let result = service.run_job(&tiny_spec());
+        let mut j = encode_result(&result);
+        if let Json::Obj(pairs) = &mut j {
+            pairs[0].1 = Json::U64(WIRE_VERSION + 1);
+        }
+        assert!(decode_result(&j).unwrap_err().0.contains("version"));
+    }
+
+    #[test]
+    fn strip_volatile_removes_only_wall_clock_fields() {
+        let service = ExplorationService::with_jobs(1);
+        let spec = tiny_spec();
+        let first = service.run_job(&spec);
+        let second = service.run_job(&spec); // cache hit: same content, new clock
+        assert!(second.from_cache);
+        let a = strip_volatile(&encode_result(&first)).to_string();
+        let b = strip_volatile(&encode_result(&second)).to_string();
+        assert_eq!(a, b, "stripped encodings of one spec must be byte-identical");
+        assert!(!a.contains("wall_secs"));
+        assert!(a.contains("best_cost"), "non-volatile fields survive");
+    }
+
+    #[test]
+    fn fp_hex_roundtrip() {
+        for fp in [0u64, 1, 0xDEAD_BEEF, u64::MAX] {
+            assert_eq!(parse_fp(&fp_hex(fp)).unwrap(), fp);
+            assert_eq!(fp_hex(fp).len(), 16);
+        }
+        assert!(parse_fp("").is_err());
+        assert!(parse_fp("xyz").is_err());
+        assert!(parse_fp("11112222333344445").is_err());
+    }
+}

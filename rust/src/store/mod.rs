@@ -1,0 +1,479 @@
+//! Content-addressed on-disk result store.
+//!
+//! Persists completed jobs keyed by their [`crate::service::JobSpec`]
+//! content fingerprint, so identical specs are never recomputed across
+//! processes or restarts — the durable tier under the in-memory
+//! [`crate::service::cache::ShardedRunCache`]. Layout on disk:
+//!
+//! ```text
+//! <dir>/<fingerprint 16-hex>.json   one record per result (wire schema)
+//! <dir>/index.json                  LRU bookkeeping {fp, last_used}
+//! ```
+//!
+//! Design points:
+//!
+//! * **Atomic writes** — every file (records and the index) is written to
+//!   a temp name in the same directory and `rename`d into place, so a
+//!   crash mid-write can leave a stale temp file but never a torn record.
+//! * **Corruption tolerance** — unreadable, unparseable or
+//!   wrong-version records are treated as misses: the entry is dropped,
+//!   the file best-effort deleted, a counter incremented, and the caller
+//!   recomputes. A missing or corrupt index is rebuilt by scanning the
+//!   directory (which also reconciles records written just before a
+//!   crash), so no on-disk state can prevent the store from opening.
+//! * **Versioned schema** — records embed
+//!   [`crate::service::wire::WIRE_VERSION`]; a mismatch after an upgrade
+//!   is a recompute, not an error.
+//! * **LRU capacity eviction** — at most `capacity` records are kept
+//!   (0 = unbounded); inserting past the cap evicts the least recently
+//!   *used* (gets refresh recency), deleting the file.
+//!
+//! All methods take `&self`; an internal mutex serializes disk access
+//! (record files are small — the search dominates job cost by orders of
+//! magnitude, as the `store::roundtrip` bench shows).
+
+use crate::service::cache::CachedJob;
+use crate::service::wire;
+use crate::util::json::{self, Json};
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Schema version of `index.json` (records carry the wire version).
+const INDEX_VERSION: u64 = 1;
+
+/// Counters and occupancy of one store, as served by `/v1/stats`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub writes: u64,
+    pub evictions: u64,
+    /// Records dropped because they could not be read back.
+    pub corrupt: u64,
+}
+
+struct Inner {
+    /// fingerprint → LRU stamp (monotonic per store instance).
+    index: HashMap<u64, u64>,
+    tick: u64,
+    /// Index mutated since the last flush.
+    dirty: bool,
+}
+
+/// The store. See the module docs.
+pub struct ResultStore {
+    dir: PathBuf,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    evictions: AtomicU64,
+    corrupt: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store at `dir` holding at most
+    /// `capacity` records (`0` = unbounded).
+    pub fn open(dir: impl Into<PathBuf>, capacity: usize) -> io::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let mut inner = Inner { index: HashMap::new(), tick: 0, dirty: false };
+        let mut corrupt_index = false;
+        match fs::read_to_string(dir.join("index.json")) {
+            Ok(text) => match Self::parse_index(&text) {
+                Some((tick, index)) => {
+                    inner.tick = tick;
+                    inner.index = index;
+                }
+                None => corrupt_index = true,
+            },
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(_) => corrupt_index = true,
+        }
+        // reconcile with the records actually on disk: pick up files the
+        // index missed (crash between record write and index flush) and
+        // drop entries whose file is gone
+        let mut on_disk: HashMap<u64, ()> = HashMap::new();
+        for entry in fs::read_dir(&dir)?.flatten() {
+            if let Some(fp) = record_fp(&entry.file_name().to_string_lossy()) {
+                on_disk.insert(fp, ());
+            }
+        }
+        inner.index.retain(|fp, _| on_disk.contains_key(fp));
+        for fp in on_disk.keys() {
+            if !inner.index.contains_key(fp) {
+                inner.index.insert(*fp, 0); // oldest possible: evict first
+                inner.dirty = true;
+            }
+        }
+        if corrupt_index {
+            inner.dirty = true;
+        }
+        let store = Self {
+            dir,
+            capacity,
+            inner: Mutex::new(inner),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            corrupt: AtomicU64::new(if corrupt_index { 1 } else { 0 }),
+        };
+        if corrupt_index {
+            let _ = store.flush();
+        }
+        Ok(store)
+    }
+
+    fn parse_index(text: &str) -> Option<(u64, HashMap<u64, u64>)> {
+        let j = json::parse(text).ok()?;
+        if j.get("version")?.as_u64()? != INDEX_VERSION {
+            return None;
+        }
+        let tick = j.get("tick")?.as_u64()?;
+        let mut index = HashMap::new();
+        for entry in j.get("entries")?.as_array()? {
+            let fp = wire::parse_fp(entry.get("fp")?.as_str()?).ok()?;
+            index.insert(fp, entry.get("last_used")?.as_u64()?);
+        }
+        Some((tick, index))
+    }
+
+    fn record_path(&self, fp: u64) -> PathBuf {
+        self.dir.join(format!("{}.json", wire::fp_hex(fp)))
+    }
+
+    /// Atomic write: temp file in the same directory, then rename.
+    fn write_atomic(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, bytes)?;
+        match fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Look up a result by fingerprint. Corrupt records count as misses
+    /// and self-heal (entry dropped, file deleted).
+    pub fn get(&self, fp: u64) -> Option<CachedJob> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.index.contains_key(&fp) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let path = self.record_path(fp);
+        let decoded = fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| json::parse(&text).ok())
+            .and_then(|j| decode_record(&j, fp));
+        match decoded {
+            Some(job) => {
+                inner.tick += 1;
+                let tick = inner.tick;
+                inner.index.insert(fp, tick);
+                inner.dirty = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(job)
+            }
+            None => {
+                inner.index.remove(&fp);
+                inner.dirty = true;
+                let _ = fs::remove_file(&path);
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Persist a result, evicting least-recently-used records past the
+    /// capacity, and flush the index.
+    pub fn put(&self, fp: u64, job: &CachedJob) -> io::Result<()> {
+        let record = Json::obj(vec![
+            ("version", Json::U64(wire::WIRE_VERSION)),
+            ("fingerprint", Json::str(wire::fp_hex(fp))),
+            ("outcome", wire::encode_outcome(&job.outcome)),
+            ("events", wire::encode_events(&job.events)),
+        ]);
+        let bytes = record.to_string();
+        let mut inner = self.inner.lock().unwrap();
+        self.write_atomic(&self.record_path(fp), bytes.as_bytes())?;
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.index.insert(fp, tick);
+        inner.dirty = true;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        while self.capacity > 0 && inner.index.len() > self.capacity {
+            // the freshly inserted record has the max stamp, so it is
+            // never the minimum here
+            let Some((&victim, _)) =
+                inner.index.iter().min_by_key(|(_, &last_used)| last_used)
+            else {
+                break;
+            };
+            inner.index.remove(&victim);
+            let _ = fs::remove_file(self.record_path(victim));
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        self.flush_locked(&mut inner)
+    }
+
+    fn flush_locked(&self, inner: &mut Inner) -> io::Result<()> {
+        if !inner.dirty {
+            return Ok(());
+        }
+        let mut entries: Vec<(&u64, &u64)> = inner.index.iter().collect();
+        entries.sort(); // deterministic index bytes
+        let index = Json::obj(vec![
+            ("version", Json::U64(INDEX_VERSION)),
+            ("tick", Json::U64(inner.tick)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .into_iter()
+                        .map(|(fp, last_used)| {
+                            Json::obj(vec![
+                                ("fp", Json::str(wire::fp_hex(*fp))),
+                                ("last_used", Json::U64(*last_used)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        self.write_atomic(&self.dir.join("index.json"), index.to_string().as_bytes())?;
+        inner.dirty = false;
+        Ok(())
+    }
+
+    /// Write the index if it changed since the last flush (graceful
+    /// shutdown calls this; `put` flushes on its own).
+    pub fn flush(&self) -> io::Result<()> {
+        self.flush_locked(&mut self.inner.lock().unwrap())
+    }
+
+    /// Records currently indexed.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            entries: self.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for ResultStore {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+/// Fingerprint of a record filename (`<16 hex>.json`), `None` for
+/// anything else (the index, temp files, strangers).
+fn record_fp(name: &str) -> Option<u64> {
+    let stem = name.strip_suffix(".json")?;
+    if stem.len() != 16 || !stem.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    wire::parse_fp(stem).ok()
+}
+
+fn decode_record(j: &Json, fp: u64) -> Option<CachedJob> {
+    if j.get("version")?.as_u64()? != wire::WIRE_VERSION {
+        return None;
+    }
+    // a record renamed to the wrong fingerprint must not poison the cache
+    if wire::parse_fp(j.get("fingerprint")?.as_str()?).ok()? != fp {
+        return None;
+    }
+    Some(CachedJob {
+        outcome: wire::decode_outcome(j.get("outcome")?).ok()?,
+        events: wire::decode_events(j.get("events")?).ok()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::SearchEvent;
+    use crate::service::JobOutcome;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "helex-store-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn probe(tag: &str) -> CachedJob {
+        CachedJob {
+            outcome: JobOutcome::Infeasible(format!("probe-{tag}")),
+            events: vec![SearchEvent::PhaseStarted {
+                phase: tag.to_string(),
+                incumbent_cost: 1.5,
+            }],
+        }
+    }
+
+    fn reason(job: &CachedJob) -> String {
+        job.outcome.infeasible_reason().unwrap().to_string()
+    }
+
+    #[test]
+    fn roundtrip_within_and_across_opens() {
+        let dir = tmp_dir("rt");
+        {
+            let store = ResultStore::open(&dir, 0).unwrap();
+            assert!(store.is_empty());
+            assert!(store.get(7).is_none());
+            store.put(7, &probe("seven")).unwrap();
+            let back = store.get(7).expect("hit after put");
+            assert_eq!(reason(&back), "probe-seven");
+            assert_eq!(back.events.len(), 1);
+            assert_eq!(store.stats().writes, 1);
+            assert_eq!(store.stats().hits, 1);
+            assert_eq!(store.stats().misses, 1);
+        }
+        // a fresh open (new process, conceptually) serves the same bytes
+        let store = ResultStore::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 1);
+        assert_eq!(reason(&store.get(7).expect("survives reopen")), "probe-seven");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_record_is_a_self_healing_miss() {
+        let dir = tmp_dir("corrupt");
+        let store = ResultStore::open(&dir, 0).unwrap();
+        store.put(1, &probe("one")).unwrap();
+        store.put(2, &probe("two")).unwrap();
+        store.put(3, &probe("three")).unwrap();
+        drop(store);
+        // three corruption modes: garbage bytes, truncation, version skew
+        fs::write(dir.join(format!("{}.json", wire::fp_hex(1))), b"{not json").unwrap();
+        let p2 = dir.join(format!("{}.json", wire::fp_hex(2)));
+        let full = fs::read(&p2).unwrap();
+        fs::write(&p2, &full[..full.len() / 2]).unwrap();
+        let p3 = dir.join(format!("{}.json", wire::fp_hex(3)));
+        let skewed = fs::read_to_string(&p3)
+            .unwrap()
+            .replace("{\"version\":1", "{\"version\":999");
+        fs::write(&p3, skewed).unwrap();
+
+        let store = ResultStore::open(&dir, 0).unwrap();
+        for fp in [1u64, 2, 3] {
+            assert!(store.get(fp).is_none(), "corrupt record {fp} must miss, not panic");
+        }
+        assert_eq!(store.stats().corrupt, 3);
+        assert_eq!(store.len(), 0, "corrupt entries self-heal out of the index");
+        // and the store still accepts new work
+        store.put(1, &probe("fresh")).unwrap();
+        assert_eq!(reason(&store.get(1).unwrap()), "probe-fresh");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_missing_index_is_rebuilt_from_records() {
+        let dir = tmp_dir("index");
+        {
+            let store = ResultStore::open(&dir, 0).unwrap();
+            store.put(10, &probe("ten")).unwrap();
+            store.put(11, &probe("eleven")).unwrap();
+        }
+        fs::write(dir.join("index.json"), b"]]]]").unwrap();
+        let store = ResultStore::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 2, "records rediscovered by directory scan");
+        assert_eq!(reason(&store.get(10).unwrap()), "probe-ten");
+        drop(store);
+        fs::remove_file(dir.join("index.json")).unwrap();
+        let store = ResultStore::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_under_wrong_filename_does_not_poison() {
+        let dir = tmp_dir("rename");
+        let store = ResultStore::open(&dir, 0).unwrap();
+        store.put(0xAAAA, &probe("a")).unwrap();
+        drop(store);
+        fs::rename(
+            dir.join(format!("{}.json", wire::fp_hex(0xAAAA))),
+            dir.join(format!("{}.json", wire::fp_hex(0xBBBB))),
+        )
+        .unwrap();
+        let store = ResultStore::open(&dir, 0).unwrap();
+        assert!(store.get(0xBBBB).is_none(), "fingerprint mismatch must miss");
+        assert!(store.get(0xAAAA).is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_eviction_keeps_recently_used() {
+        let dir = tmp_dir("lru");
+        let store = ResultStore::open(&dir, 2).unwrap();
+        store.put(1, &probe("1")).unwrap();
+        store.put(2, &probe("2")).unwrap();
+        assert!(store.get(1).is_some(), "touch 1 so 2 is now the LRU");
+        store.put(3, &probe("3")).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.get(2).is_none(), "LRU record evicted");
+        assert!(store.get(1).is_some());
+        assert!(store.get(3).is_some());
+        assert_eq!(store.stats().evictions, 1);
+        assert!(
+            !dir.join(format!("{}.json", wire::fp_hex(2))).exists(),
+            "eviction deletes the record file"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn temp_files_and_strangers_are_ignored_on_open() {
+        let dir = tmp_dir("strangers");
+        {
+            let store = ResultStore::open(&dir, 0).unwrap();
+            store.put(5, &probe("five")).unwrap();
+        }
+        fs::write(dir.join(".tmp-999-0"), b"half a record").unwrap();
+        fs::write(dir.join("notes.txt"), b"hello").unwrap();
+        fs::write(dir.join("zz.json"), b"{}").unwrap(); // not 16 hex digits
+        let store = ResultStore::open(&dir, 0).unwrap();
+        assert_eq!(store.len(), 1, "only well-named records are indexed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -76,7 +76,9 @@ impl Harness {
         Self { filter, results: Vec::new(), samples: 15, min_time_s: 0.05 }
     }
 
-    fn enabled(&self, name: &str) -> bool {
+    /// Whether `name` passes the `--filter` (public so bench programs
+    /// can skip expensive fixture setup for filtered-out benches).
+    pub fn enabled(&self, name: &str) -> bool {
         self.filter.as_deref().map_or(true, |f| name.contains(f))
     }
 

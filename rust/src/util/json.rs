@@ -1,0 +1,577 @@
+//! Dependency-free JSON: a value model, a compact serializer and a
+//! recursive-descent parser (serde is not vendored in this image).
+//!
+//! This is the wire substrate of the serving layer: the HTTP server
+//! ([`crate::server`]) and the on-disk result store ([`crate::store`])
+//! both speak it, through the typed codecs in [`crate::service::wire`].
+//! Two properties matter there and are tested here:
+//!
+//! * **Determinism** — [`Json::to_string`] emits object keys in
+//!   insertion order with no whitespace, so encoding the same value twice
+//!   yields identical bytes (store files and API responses are
+//!   byte-stable, which the end-to-end tests byte-compare).
+//! * **Totality** — [`parse`] never panics on malformed input: errors are
+//!   [`JsonError`] values with a byte position, nesting depth is capped
+//!   (a `[[[[...` body cannot overflow the stack), and numbers that fit
+//!   no representation are rejected rather than wrapped.
+//!
+//! Integers keep full precision: `u64`/`i64` tokens parse into dedicated
+//! variants instead of being forced through `f64` (a spec fingerprint is
+//! a `u64`; rounding it through a double would corrupt the cache key).
+
+use std::fmt;
+
+/// Maximum nesting depth [`parse`] accepts before erroring out.
+pub const MAX_DEPTH: usize = 128;
+
+/// A JSON value. Objects preserve insertion order and may hold duplicate
+/// keys (e.g. from a hand-crafted request body); [`Json::get`] scans from
+/// the front, so the *first* occurrence of a key wins and later
+/// duplicates are inert. The codecs never emit duplicates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Non-negative integer token (also the carrier for `u64` precision).
+    U64(u64),
+    /// Negative integer token.
+    I64(i64),
+    /// Fractional/exponent token. Never NaN/infinite after [`parse`].
+    F64(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Build an object from key/value pairs (insertion order preserved).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Member lookup on an object; `None` on other variants.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as `u64` (rejects negatives and non-integers).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::U64(n) => Some(*n),
+            Json::I64(n) if *n >= 0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|n| usize::try_from(n).ok())
+    }
+
+    /// Numeric value as `f64` (accepts any numeric variant; integers above
+    /// 2^53 lose precision here, which is why ids travel as strings).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::U64(n) => Some(*n as f64),
+            Json::I64(n) => Some(*n as f64),
+            Json::F64(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Compact serialization (no whitespace, insertion-ordered keys).
+    #[allow(clippy::inherent_to_string)]
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::U64(n) => out.push_str(&n.to_string()),
+            Json::I64(n) => out.push_str(&n.to_string()),
+            Json::F64(x) => {
+                if x.is_finite() {
+                    // Display is the shortest decimal that round-trips;
+                    // integral values print without ".0" and re-parse as
+                    // integer tokens, which as_f64 accepts transparently
+                    out.push_str(&x.to_string());
+                } else {
+                    out.push_str("null"); // NaN/inf have no JSON spelling
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// A parse failure: what went wrong and the byte offset it was noticed at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid JSON at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Parse one JSON document (trailing whitespace allowed, trailing content
+/// rejected). Never panics; see the module docs for the guarantees.
+pub fn parse(text: &str) -> Result<Json, JsonError> {
+    let mut p = Parser { bytes: text.as_bytes(), text, pos: 0 };
+    p.skip_ws();
+    let value = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing content after document"));
+    }
+    Ok(value)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    text: &'a str,
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err(format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(other) => Err(self.err(format!("unexpected byte 0x{other:02x}"))),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value(depth + 1)?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            match b {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let Some(esc) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        other => {
+                            return Err(
+                                self.err(format!("invalid escape '\\{}'", other as char))
+                            )
+                        }
+                    }
+                }
+                0x00..=0x1F => return Err(self.err("raw control byte in string")),
+                _ => {
+                    // copy one full UTF-8 scalar (input is a &str, so
+                    // char boundaries are valid by construction)
+                    let rest = &self.text[self.pos..];
+                    let c = rest.chars().next().expect("non-empty by peek");
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let end = self.pos.checked_add(4).filter(|&e| e <= self.bytes.len());
+        let Some(end) = end else {
+            return Err(self.err("truncated \\u escape"));
+        };
+        // slice as bytes: the 4 positions after \u need not fall on char
+        // boundaries of the input, and a str slice would panic there
+        let hex = std::str::from_utf8(&self.bytes[self.pos..end])
+            .map_err(|_| self.err("non-ASCII \\u escape"))?;
+        let v = u32::from_str_radix(hex, 16)
+            .map_err(|_| self.err(format!("bad \\u escape '{hex}'")))?;
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4()?;
+        // surrogate pair handling: a high surrogate must be followed by
+        // an escaped low surrogate; anything else is an error
+        if (0xD800..=0xDBFF).contains(&hi) {
+            if self.peek() == Some(b'\\') && self.bytes.get(self.pos + 1) == Some(&b'u') {
+                self.pos += 2;
+                let lo = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&lo) {
+                    return Err(self.err("high surrogate not followed by low surrogate"));
+                }
+                let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                return char::from_u32(c).ok_or_else(|| self.err("invalid surrogate pair"));
+            }
+            return Err(self.err("lone high surrogate"));
+        }
+        if (0xDC00..=0xDFFF).contains(&hi) {
+            return Err(self.err("lone low surrogate"));
+        }
+        char::from_u32(hi).ok_or_else(|| self.err("invalid \\u escape"))
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut fractional = false;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    fractional = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let token = &self.text[start..self.pos];
+        if token.is_empty() || token == "-" {
+            return Err(self.err("invalid number"));
+        }
+        if !fractional {
+            if let Some(stripped) = token.strip_prefix('-') {
+                if let Ok(n) = stripped.parse::<u64>() {
+                    // magnitudes up to 2^63 fit i64 exactly (wrapping_neg
+                    // of 2^63 reinterprets as i64::MIN)
+                    if n <= 1u64 << 63 {
+                        return Ok(Json::I64(n.wrapping_neg() as i64));
+                    }
+                }
+            } else if let Ok(n) = token.parse::<u64>() {
+                return Ok(Json::U64(n));
+            }
+        }
+        match token.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Json::F64(x)),
+            _ => Err(self.err(format!("unrepresentable number '{token}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(j: &Json) -> Json {
+        parse(&j.to_string()).expect("serializer output must re-parse")
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for j in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::U64(0),
+            Json::U64(u64::MAX),
+            Json::I64(-1),
+            Json::I64(i64::MIN),
+            Json::F64(1.5),
+            Json::F64(-0.0625),
+            Json::Str("hé\"llo\n\\ \u{1F600} \u{0007}".into()),
+        ] {
+            assert_eq!(roundtrip(&j), j, "{j:?}");
+        }
+    }
+
+    #[test]
+    fn u64_precision_survives() {
+        // 2^53 + 1 is exactly where f64 would silently corrupt
+        let j = Json::U64((1u64 << 53) + 1);
+        assert_eq!(j.to_string(), "9007199254740993");
+        assert_eq!(roundtrip(&j).as_u64(), Some((1u64 << 53) + 1));
+    }
+
+    #[test]
+    fn structures_roundtrip_and_preserve_order() {
+        let j = Json::obj(vec![
+            ("b", Json::Arr(vec![Json::U64(1), Json::Null, Json::Str("x".into())])),
+            ("a", Json::obj(vec![("nested", Json::Bool(false))])),
+        ]);
+        let s = j.to_string();
+        assert_eq!(s, r#"{"b":[1,null,"x"],"a":{"nested":false}}"#);
+        assert_eq!(roundtrip(&j), j);
+        assert_eq!(j.get("a").and_then(|a| a.get("nested")), Some(&Json::Bool(false)));
+        assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn accessor_types() {
+        assert_eq!(Json::U64(7).as_usize(), Some(7));
+        assert_eq!(Json::I64(-7).as_u64(), None);
+        assert_eq!(Json::I64(7).as_u64(), Some(7));
+        assert_eq!(Json::U64(3).as_f64(), Some(3.0));
+        assert_eq!(Json::Str("3".into()).as_f64(), None);
+        assert_eq!(Json::Null.as_bool(), None);
+    }
+
+    #[test]
+    fn float_formatting_restabilizes_after_one_trip() {
+        // integral floats print as integers; the re-parse is a U64 token
+        // but encodes to the same bytes again (idempotent encoding)
+        let once = Json::F64(4.0).to_string();
+        assert_eq!(once, "4");
+        assert_eq!(roundtrip(&Json::F64(4.0)).to_string(), once);
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        for bad in [
+            "", "{", "}", "[", "]", "{]", "[}", "nul", "tru", "+1", "-", "1.2.3",
+            "\"", "\"\\q\"", "\"\\u12\"", "\"\\ud800\"", "\"\\ud800\\u0041\"",
+            "{\"a\"}", "{\"a\":}", "{\"a\":1,}", "[1,]", "[1 2]", "1 2",
+            "{\"a\":1}x", "\u{0007}", "\"\u{0001}\"", "1e9999", "NaN", "Infinity",
+            "--5", "0x10",
+        ] {
+            assert!(parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_bounded_not_a_stack_overflow() {
+        let deep: String = "[".repeat(100_000);
+        let err = parse(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // exactly at the cap still parses
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn fuzz_corpus_random_bytes_never_panic() {
+        // random byte soup (valid UTF-8 by construction via lossy) must
+        // always produce Ok or Err, never a panic
+        let mut rng = Rng::seed(0xF00D);
+        for _ in 0..500 {
+            let len = rng.below(200);
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let text = String::from_utf8_lossy(&bytes);
+            let _ = parse(&text);
+        }
+        // and mutations of a valid document
+        let seed = r#"{"a":[1,-2,3.5,"x\n",null,true],"b":{"c":"\u00e9"}}"#;
+        for i in 0..seed.len() {
+            for replacement in ["", "\"", "}", "]", ",", "\\"] {
+                let mut s = seed.to_string();
+                s.replace_range(i..i + 1, replacement);
+                let _ = parse(&s);
+            }
+        }
+    }
+
+    #[test]
+    fn random_trees_roundtrip() {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth >= 4 { rng.below(6) } else { rng.below(8) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::U64(rng.next_u64()),
+                // always strictly negative: I64(0) would re-parse as the
+                // (equal-valued but differently-variant) U64(0)
+                3 => Json::I64(-1 - ((rng.next_u64() >> 1) as i64)),
+                4 => Json::F64((rng.f64() - 0.5) * 1e6),
+                5 => Json::Str(format!("s{}·\"\\\n", rng.below(1000))),
+                6 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|k| (format!("k{k}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let mut rng = Rng::seed(42);
+        for _ in 0..200 {
+            let j = gen(&mut rng, 0);
+            assert_eq!(roundtrip(&j), j);
+        }
+    }
+}

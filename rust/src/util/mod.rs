@@ -5,11 +5,13 @@
 //! unavailable. Everything HeLEx needs from them is implemented here:
 //! a seeded PRNG ([`rng`]), an ASCII/CSV table emitter ([`table`]), a
 //! micro bench harness ([`bench`]), a tiny key-value config parser
-//! ([`config`]) and a property-test driver ([`prop`]).
+//! ([`config`]), a property-test driver ([`prop`]) and a JSON
+//! serializer/parser ([`json`]) for the serving and store layers.
 
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,246 @@
+//! End-to-end tests of the serving layer: a real `Server` on an
+//! ephemeral port, driven over real sockets by the `server::client`
+//! helpers — the same path `helex submit` and the CI smoke job use.
+
+use helex::coordinator::{experiments, ExperimentConfig};
+use helex::server::{client, Server, ServerConfig, ServerHandle};
+use helex::service::wire;
+use helex::service::{ExplorationService, JobSpec};
+use helex::util::json::{self, Json};
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "helex-server-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The paper's Fig 9 sweep at its smallest size (S4 @ 7×7), at a quick
+/// search budget — the acceptance-criteria spec.
+fn fig9_smallest_spec() -> JobSpec {
+    let cfg = ExperimentConfig { l_test_base: 40, gsg_passes: 1, ..Default::default() };
+    let defs = experiments::find("fig9").expect("fig9 exists");
+    let specs = (defs[0].specs)(&cfg, true);
+    let spec = specs.into_iter().next().expect("fig9 has specs");
+    assert_eq!((spec.grid.rows, spec.grid.cols), (7, 7), "smallest fig9 size");
+    spec
+}
+
+struct RunningServer {
+    addr: String,
+    handle: ServerHandle,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl RunningServer {
+    fn start(cfg: ServerConfig) -> Self {
+        let server = Server::bind(cfg).expect("bind ephemeral port");
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = server.handle().unwrap();
+        let thread = std::thread::spawn(move || server.serve().expect("serve exits cleanly"));
+        Self { addr, handle, thread }
+    }
+
+    fn stop(self) {
+        self.handle.begin_shutdown();
+        self.thread.join().expect("server thread exits after drain");
+    }
+}
+
+fn test_config(store_dir: Option<PathBuf>) -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        jobs: 1,
+        store_dir,
+        queue_cap: 8,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn http_result_matches_direct_run_and_restart_serves_from_store() {
+    let dir = tmp_dir("e2e");
+    let spec = fig9_smallest_spec();
+
+    // ground truth: the same spec through the in-process service
+    let direct = ExplorationService::with_jobs(1).run_job(&spec);
+    assert!(direct.outcome.is_completed(), "fig9 smallest spec must map");
+    let direct_bytes = wire::strip_volatile(&wire::encode_result(&direct)).to_string();
+
+    // cold server: compute over HTTP, persist into the store
+    let server = RunningServer::start(test_config(Some(dir.clone())));
+    let id = client::submit_spec(&server.addr, &spec).expect("submit");
+    let over_http =
+        client::wait_result(&server.addr, id, Duration::from_millis(100), 1200).expect("result");
+    assert!(!over_http.from_cache, "first run computes");
+    assert_eq!(over_http.id, id);
+    let http_bytes = wire::strip_volatile(&wire::encode_result(&over_http)).to_string();
+    assert_eq!(
+        http_bytes, direct_bytes,
+        "HTTP-served result must be byte-identical to a direct run_job (volatile fields aside)"
+    );
+
+    // the event stream replays the exact recorded trace as ndjson
+    let (status, body) =
+        client::request_raw(&server.addr, "GET", &format!("/v1/jobs/{id}/events"), b"")
+            .expect("events stream");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).expect("ndjson is UTF-8");
+    let events: Vec<_> = text
+        .lines()
+        .map(|line| {
+            wire::decode_event(&json::parse(line).expect("each line is one JSON event"))
+                .expect("decodes as SearchEvent")
+        })
+        .collect();
+    assert_eq!(events, over_http.events, "streamed events equal the result's trace");
+
+    // stats reflect one computed job; graceful shutdown flushes the index
+    let stats = client::get_json(&server.addr, "/v1/stats").unwrap();
+    assert_eq!(stats.get("cache").unwrap().get("computed").unwrap().as_u64(), Some(1));
+    server.stop();
+    assert!(dir.join("index.json").exists(), "drain must flush the store index");
+
+    // warm restart: a brand-new process-equivalent (fresh mem cache)
+    // must answer from the store without recomputing
+    let server = RunningServer::start(test_config(Some(dir.clone())));
+    let id2 = client::submit_spec(&server.addr, &spec).expect("resubmit");
+    let warm =
+        client::wait_result(&server.addr, id2, Duration::from_millis(100), 1200).expect("warm");
+    assert!(warm.from_cache, "restart must serve the identical spec from the store");
+    let warm_bytes = wire::strip_volatile(&wire::encode_result(&warm)).to_string();
+    assert_eq!(warm_bytes, direct_bytes, "store round-trip preserves every byte that matters");
+    let stats = client::get_json(&server.addr, "/v1/stats").unwrap();
+    let cache = stats.get("cache").unwrap();
+    assert_eq!(cache.get("computed").unwrap().as_u64(), Some(0), "zero recomputes after restart");
+    assert_eq!(cache.get("store_hits").unwrap().as_u64(), Some(1));
+    let store = stats.get("store").unwrap();
+    assert_eq!(store.get("hits").unwrap().as_u64(), Some(1));
+    server.stop();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_requests_get_4xx_and_the_server_survives() {
+    let server = RunningServer::start(test_config(None));
+
+    // JSON/spec corpus: every one must answer 400, none may kill a
+    // handler (the healthz probe at the end proves liveness)
+    let bad_bodies: &[&str] = &[
+        "",
+        "{",
+        "not json at all",
+        "[1,2,3]",
+        "null",
+        "true",
+        "{\"dfgs\":0,\"grid\":{\"rows\":5,\"cols\":5}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":2,\"cols\":2}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":1000,\"cols\":1000}}",
+        "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"zap\"],\"edges\":[]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+        "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"store\"],\"edges\":[[0,9]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+        "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"add\",\"add\"],\"edges\":[[0,1],[1,0]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"seed\":-3}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"objective\":\"speed\"}",
+        "\"\\ud800\"",
+        "{\"a\":1e999}",
+    ];
+    for body in bad_bodies {
+        let (status, reply) =
+            client::request_raw(&server.addr, "POST", "/v1/jobs", body.as_bytes()).unwrap();
+        assert_eq!(status, 400, "body {body:?} must be a 400");
+        let reply = String::from_utf8(reply).unwrap();
+        assert!(reply.contains("\"error\""), "structured error body, got {reply}");
+    }
+    // deep-nesting bomb: bounded parse, not a stack overflow
+    let bomb = "[".repeat(50_000);
+    let (status, _) =
+        client::request_raw(&server.addr, "POST", "/v1/jobs", bomb.as_bytes()).unwrap();
+    assert_eq!(status, 400);
+
+    // non-UTF-8 body
+    let (status, _) =
+        client::request_raw(&server.addr, "POST", "/v1/jobs", &[0xFF, 0xFE, 0x80]).unwrap();
+    assert_eq!(status, 400);
+
+    // oversize body: declare a huge Content-Length (without sending the
+    // bytes — the server must refuse from the header alone)
+    {
+        let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+        raw.write_all(b"POST /v1/jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 999999999\r\n\r\n")
+            .unwrap();
+        let mut reply = Vec::new();
+        let _ = raw.read_to_end(&mut reply);
+        let reply = String::from_utf8_lossy(&reply);
+        assert!(reply.starts_with("HTTP/1.1 413"), "got: {reply}");
+    }
+    // chunked request bodies are refused, not misread
+    {
+        let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+        raw.write_all(b"POST /v1/jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+            .unwrap();
+        let mut reply = Vec::new();
+        let _ = raw.read_to_end(&mut reply);
+        let reply = String::from_utf8_lossy(&reply);
+        assert!(reply.starts_with("HTTP/1.1 411"), "got: {reply}");
+    }
+
+    // routing errors
+    let (status, _) = client::request_raw(&server.addr, "GET", "/nope", b"").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client::request_raw(&server.addr, "DELETE", "/v1/jobs", b"").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) = client::request_raw(&server.addr, "GET", "/v1/jobs/garbage!", b"").unwrap();
+    assert_eq!(status, 400, "unparseable id");
+    let (status, _) =
+        client::request_raw(&server.addr, "GET", "/v1/jobs/job-00000000000000ff", b"").unwrap();
+    assert_eq!(status, 404, "well-formed but unknown id");
+
+    // raw-socket garbage: not even HTTP
+    {
+        let mut raw = std::net::TcpStream::connect(&server.addr).unwrap();
+        raw.write_all(b"\x00\x01\x02 garbage\r\n\r\n").unwrap();
+        let mut sink = Vec::new();
+        let _ = raw.read_to_end(&mut sink); // server answers 400 or closes
+    }
+
+    // after all of that, the server still answers
+    let health = client::get_json(&server.addr, "/v1/healthz").unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    server.stop();
+}
+
+#[test]
+fn submit_then_poll_surfaces_queue_states_and_infeasible_results() {
+    let server = RunningServer::start(test_config(None));
+    // SAD (63 compute ops) cannot fit 5x5 (9 compute cells): the job
+    // completes with an infeasible *outcome*, not an HTTP error
+    let spec = JobSpec {
+        search: helex::search::SearchConfig { l_test: 20, ..Default::default() },
+        ..JobSpec::new(
+            "no-fit",
+            vec![helex::dfg::benchmarks::benchmark("SAD")],
+            helex::Grid::new(5, 5),
+        )
+    };
+    let id = client::submit_spec(&server.addr, &spec).unwrap();
+    let result =
+        client::wait_result(&server.addr, id, Duration::from_millis(50), 1200).unwrap();
+    assert!(result.outcome.infeasible_reason().is_some());
+    assert!(result.best_cost().is_none());
+
+    // poll body shape for a known job
+    let body = client::get_json(&server.addr, &format!("/v1/jobs/{id}")).unwrap();
+    assert_eq!(body.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(body.get("id").and_then(Json::as_str), Some(id.to_string().as_str()));
+    assert!(body.get("result").is_some());
+    server.stop();
+}

@@ -138,3 +138,40 @@ fn suite_batch_streams_progress_and_replays_event_traces() {
             .any(|e| matches!(e, SearchEvent::PhaseFinished { .. })));
     }
 }
+
+#[test]
+fn job_id_display_fromstr_roundtrip_property() {
+    // the stable-id contract: URLs and filenames render ids as
+    // zero-padded hex, and parsing that form recovers exactly the
+    // in-memory id — for *every* u64, not just small ones
+    use helex::service::JobId;
+    prop::forall("JobId roundtrip", 500, 0x1D5, |g| {
+        let n = g.rng.next_u64();
+        let id = JobId(n);
+        let text = id.to_string();
+        if !text.starts_with("job-") || text.len() != "job-".len() + 16 {
+            return Err(format!("non-canonical rendering {text:?}"));
+        }
+        match text.parse::<JobId>() {
+            Ok(back) if back == id => {}
+            other => return Err(format!("{text:?} parsed to {other:?}, expected {id:?}")),
+        }
+        // the bare-hex convenience form parses to the same id
+        match text.trim_start_matches("job-").parse::<JobId>() {
+            Ok(back) if back == id => Ok(()),
+            other => Err(format!("bare hex parsed to {other:?}, expected {id:?}")),
+        }
+    });
+    // zero-padding keeps lexicographic order == numeric order
+    let mut rendered: Vec<String> = [0u64, 1, 15, 16, 255, 4096, u64::MAX >> 1, u64::MAX]
+        .iter()
+        .map(|&n| JobId(n).to_string())
+        .collect();
+    let numeric = rendered.clone();
+    rendered.sort();
+    assert_eq!(rendered, numeric, "zero-padded hex must sort like the numbers");
+    // malformed forms are rejected
+    for bad in ["", "job-", "job-xyz", "job-11112222333344445", "job--1", "0x12", "12 "] {
+        assert!(bad.parse::<JobId>().is_err(), "{bad:?} must not parse");
+    }
+}
