@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Gate the search perf record against the committed baseline.
+
+Usage: bench_gate.py BENCH_search.json BENCH_search.baseline.json
+
+Two checks, stdlib only:
+
+1. `speedup_4t` (tested-layouts/sec at 4 in-search threads vs 1) must be
+   >= MIN_SPEEDUP. This is hardware-independent enough to gate anywhere:
+   the deterministic parallel search must actually pay for itself.
+2. Unless the baseline is marked `"provisional": true`, the tracked
+   medians (`layouts_per_sec` at 1t and 4t) must not regress more than
+   MAX_REGRESSION vs the baseline. Refresh the baseline by committing a
+   bench-track run's BENCH_search.json as BENCH_search.baseline.json
+   (without the provisional flag).
+"""
+
+import json
+import sys
+
+MIN_SPEEDUP = 1.5
+MAX_REGRESSION = 0.20
+
+
+def main() -> int:
+    current_path, baseline_path = sys.argv[1], sys.argv[2]
+    with open(current_path) as f:
+        cur = json.load(f)
+
+    ok = True
+    speedup = cur["speedup_4t"]
+    print(f"speedup_4t = {speedup:.2f} (gate: >= {MIN_SPEEDUP})")
+    if speedup < MIN_SPEEDUP:
+        print(f"FAIL: 4-thread tested-layouts/sec speedup {speedup:.2f} < {MIN_SPEEDUP}")
+        ok = False
+
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        print(f"no baseline at {baseline_path}; regression check skipped")
+        base = None
+
+    if base is not None:
+        if base.get("provisional"):
+            print("baseline is provisional (no measured medians yet): regression check skipped")
+            print(
+                "refresh it by committing this run's BENCH_search.json as "
+                "BENCH_search.baseline.json without the provisional flag"
+            )
+        else:
+            for key in ("1t", "4t"):
+                b = base["layouts_per_sec"][key]
+                c = cur["layouts_per_sec"][key]
+                drop = (b - c) / b if b else 0.0
+                print(f"layouts_per_sec[{key}]: baseline {b:.1f}, current {c:.1f} ({-drop:+.1%})")
+                if drop > MAX_REGRESSION:
+                    print(f"FAIL: {key} median regressed {drop:.1%} (> {MAX_REGRESSION:.0%})")
+                    ok = False
+
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

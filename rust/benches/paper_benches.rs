@@ -8,11 +8,55 @@
 //! ```
 
 use helex::coordinator::{experiments, suite, Coordinator, ExperimentConfig};
+use helex::search::{Explorer, SearchConfig, SearchEvent};
 use helex::service::cache::CachedJob;
 use helex::service::ExplorationService;
 use helex::store::ResultStore;
 use helex::util::bench::Harness;
 use helex::util::json::{self, Json};
+
+/// One measured search at a given in-search thread count on the fig9
+/// medium spec (S4 @ 9×9, bench-scale budget). Returns
+/// `(opsg+gsg tested layouts, opsg secs, gsg secs, speculative)`.
+fn search_scaling_run(threads: usize) -> (usize, f64, f64, usize) {
+    let dfgs = helex::dfg::benchmarks::dfg_set("S4");
+    let grid = helex::Grid::new(9, 9);
+    let engine = helex::MappingEngine::default();
+    let cost = helex::CostModel::area();
+    let cfg = SearchConfig {
+        l_test: 400,
+        gsg_passes: 1,
+        search_threads: threads,
+        ..Default::default()
+    };
+    let tested = std::cell::Cell::new(0usize);
+    let in_search = std::cell::Cell::new(false);
+    let mut obs = |ev: &SearchEvent| match ev {
+        SearchEvent::PhaseStarted { phase, .. } => {
+            in_search.set(phase == "OPSG" || phase == "GSG");
+        }
+        SearchEvent::LayoutTested { .. } => {
+            if in_search.get() {
+                tested.set(tested.get() + 1);
+            }
+        }
+        _ => {}
+    };
+    let r = Explorer::new(grid)
+        .dfgs(&dfgs)
+        .engine(&engine)
+        .cost(&cost)
+        .config(cfg)
+        .observer(&mut obs)
+        .run()
+        .expect("S4 maps on 9x9");
+    (tested.get(), r.stats.t_opsg(), r.stats.t_gsg(), r.stats.speculative)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
 
 fn co() -> Coordinator {
     Coordinator::new(ExperimentConfig {
@@ -68,6 +112,67 @@ fn main() {
                 throughput.push((format!("{workers}w"), jobs_per_sec));
             }
             _ => {}
+        }
+    }
+
+    // Search-threads scaling: wall time and tested-layouts/sec of the
+    // OPSG+GSG phases at 1 vs 4 in-search workers on the fig9 medium
+    // spec. The deterministic reduction makes `tested` identical at any
+    // thread count, so layouts/sec isolates the real speedup. Five
+    // runs per point; medians feed BENCH_search.json, which CI's
+    // bench-track job gates (ratio >= 1.5 at 4t, and no >20% regression
+    // of the medians vs the committed baseline).
+    if h.enabled("search::threads") {
+        println!("\n== search-threads scaling (fig9 medium spec: S4 @ 9x9, l_test 400) ==");
+        let mut per_point: Vec<(usize, f64, f64)> = Vec::new(); // (threads, lps, wall)
+        for &threads in &[1usize, 4] {
+            let mut lps = Vec::new();
+            let mut walls = Vec::new();
+            let mut tested_total = 0usize;
+            let mut spec_total = 0usize;
+            // 5 samples per point: the medians gate CI on shared
+            // runners, so they need headroom against noisy neighbors
+            for _ in 0..5 {
+                let (tested, t_opsg, t_gsg, speculative) = search_scaling_run(threads);
+                let wall = (t_opsg + t_gsg).max(1e-9);
+                lps.push(tested as f64 / wall);
+                walls.push(wall);
+                tested_total = tested;
+                spec_total = speculative;
+            }
+            let lps_med = median(&mut lps);
+            let wall_med = median(&mut walls);
+            println!(
+                "    search::threads@{threads}t  {lps_med:>8.1} layouts/s  \
+                 (wall {wall_med:.2}s, {tested_total} tested, {spec_total} speculative)"
+            );
+            per_point.push((threads, lps_med, wall_med));
+        }
+        if let [(_, lps1, wall1), (_, lps4, wall4)] = per_point.as_slice() {
+            let speedup = lps4 / lps1;
+            println!("    -> {speedup:.2}x tested-layouts/sec at 4 threads vs 1");
+            let record = Json::obj(vec![
+                ("bench", Json::str("search")),
+                ("spec", Json::str("fig9-medium:S4@9x9,l_test=400,gsg_passes=1")),
+                (
+                    "layouts_per_sec",
+                    Json::obj(vec![
+                        ("1t", Json::F64(*lps1)),
+                        ("4t", Json::F64(*lps4)),
+                    ]),
+                ),
+                (
+                    "wall_secs",
+                    Json::obj(vec![
+                        ("1t", Json::F64(*wall1)),
+                        ("4t", Json::F64(*wall4)),
+                    ]),
+                ),
+                ("speedup_4t", Json::F64(speedup)),
+            ]);
+            if std::fs::write("BENCH_search.json", record.to_string()).is_ok() {
+                println!("    wrote BENCH_search.json");
+            }
         }
     }
 

@@ -40,6 +40,11 @@ pub struct ExperimentConfig {
     /// Worker threads for the experiment suite (`--jobs N` /
     /// `service.jobs`); `0` means available parallelism.
     pub jobs: usize,
+    /// In-search candidate-testing threads (`--search-threads N` /
+    /// `search.threads`); `0` means available parallelism. Results are
+    /// byte-identical at any value (deterministic reduction); the
+    /// service clamps `jobs × search_threads` to the machine.
+    pub search_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -56,6 +61,7 @@ impl Default for ExperimentConfig {
             use_xla_scorer: true,
             verbose: false,
             jobs: 0,
+            search_threads: 0,
         }
     }
 }
@@ -93,6 +99,8 @@ impl ExperimentConfig {
         self.mapper.feasibility_cache =
             cfg.bool_or("mapper.feasibility_cache", self.mapper.feasibility_cache);
         self.jobs = cfg.int_or("service.jobs", self.jobs as i64) as usize;
+        self.search_threads =
+            cfg.int_or("search.threads", self.search_threads as i64) as usize;
         if let Some(v) = cfg.get("results_dir").and_then(|v| v.as_str()) {
             self.results_dir = PathBuf::from(v);
         }
@@ -110,6 +118,7 @@ impl ExperimentConfig {
             gsg_stale_prune_after: 64,
             use_heatmap: self.use_heatmap,
             opsg_skip_arith: self.opsg_skip_arith,
+            search_threads: self.search_threads,
         }
     }
 }
@@ -234,7 +243,7 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         assert!(!cfg.opsg_skip_arith);
         let file = Config::parse(
-            "[search]\nopsg_skip_arith = true\nuse_heatmap = false\n\
+            "[search]\nopsg_skip_arith = true\nuse_heatmap = false\nthreads = 3\n\
              [mapper]\nhist_increment = 2.5\npresent_penalty = 3.25\n\
              [service]\njobs = 6",
         );
@@ -244,6 +253,9 @@ mod tests {
         assert_eq!(cfg.mapper.hist_increment, 2.5);
         assert_eq!(cfg.mapper.present_penalty, 3.25);
         assert_eq!(cfg.jobs, 6);
+        assert_eq!(cfg.search_threads, 3);
+        // and it lands in the per-grid SearchConfig
+        assert_eq!(cfg.search_config(Grid::new(6, 6)).search_threads, 3);
     }
 
     #[test]

@@ -23,7 +23,12 @@
 //! pipeline ([`search::HeatmapPhase`] → [`search::OpsgPhase`] →
 //! [`search::GsgPhase`]); alternative strategies plug in as further
 //! phases without changing any signature, and [`search::run`] remains as
-//! a thin compatibility wrapper.
+//! a thin compatibility wrapper. Inside one session, candidate
+//! feasibility tests run on a scoped worker pool
+//! ([`search::parallel::TestPool`], `SearchConfig::search_threads`)
+//! under a deterministic reduction, so thread count can never change a
+//! result — layouts, tables and the recorded trace are byte-identical
+//! at any width.
 //!
 //! One layer down, spatial mapping sits behind the **`MappingEngine`
 //! API** ([`mapper::MappingEngine`]): pluggable
@@ -58,8 +63,9 @@
 //!   `MappingEngine` API (structured outcomes + warm-start remapping).
 //! * [`search`] — the paper's contribution behind the `Explorer`
 //!   session API: heatmap initial layout and the two branch-and-bound
-//!   phases (OPSG then GSG), plus the convergence trace recorded from
-//!   the event stream.
+//!   phases (OPSG then GSG), deterministic in-search parallel candidate
+//!   testing ([`search::parallel`]), plus the convergence trace
+//!   recorded from the event stream.
 //! * [`service`] — the parallel job layer: `JobSpec`/`JobResult`,
 //!   the worker pool, the sharded deduplicating run cache (bounded,
 //!   LRU), the `ServiceEvent` progress stream, the async

@@ -1,11 +1,11 @@
 //! `helex` CLI — leader entrypoint.
 //!
 //! ```text
-//! helex repro [--quick] [--jobs N]
-//! helex serve [--addr H:P] [--jobs N] [--store-dir DIR]
+//! helex repro [--quick] [--jobs N] [--search-threads N]
+//! helex serve [--addr H:P] [--jobs N] [--search-threads N] [--store-dir DIR]
 //! helex submit [--addr H:P] [--dfgs S4] [--size 9x9]
 //! helex exp <fig3|...|table8|all> [--quick] [--jobs N] [--l-test N] [--no-gsg]
-//! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N]
+//! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N] [--trace-out FILE]
 //! helex map --dfg FFT --size 10x10
 //! helex heatmap --set S4 --size 9x9
 //! helex sweep --set S4 --from 7x7 --to 10x10
@@ -75,6 +75,9 @@ fn build_config(args: &Args) -> ExperimentConfig {
     }
     if let Some(jobs) = args.get("jobs") {
         cfg.jobs = jobs.parse().unwrap_or(cfg.jobs);
+    }
+    if let Some(threads) = args.get("search-threads") {
+        cfg.search_threads = threads.parse().unwrap_or(cfg.search_threads);
     }
     if let Some(dir) = args.get("results-dir") {
         cfg.results_dir = dir.into();
@@ -153,6 +156,7 @@ fn main() -> Result<()> {
             let cfg = helex::ServerConfig {
                 addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
                 jobs: args.usize_or("jobs", 0),
+                search_threads: args.usize_or("search-threads", 0),
                 store_dir: args.get("store-dir").map(std::path::PathBuf::from),
                 store_capacity: args.usize_or("store-cap", 4096),
                 queue_cap: args.usize_or("queue", 64),
@@ -190,6 +194,10 @@ fn main() -> Result<()> {
             if let Some(seed) = args.get("seed") {
                 spec.seed = seed.parse().unwrap_or(spec.seed);
             }
+            if let Some(threads) = args.get("search-threads") {
+                spec.search.search_threads =
+                    threads.parse().unwrap_or(spec.search.search_threads);
+            }
             let id = helex::server::client::submit_spec(addr, &spec)?;
             eprintln!("[helex] submitted {id} ({})", spec.describe());
             let result = helex::server::client::wait_result(
@@ -221,25 +229,64 @@ fn main() -> Result<()> {
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").context("--size RxC required")?;
             let mut co = Coordinator::new(build_config(&args));
-            // live progress from the Explorer event stream
+            // live progress from the Explorer event stream; --trace-out
+            // additionally records every event for the determinism dump
             let trace = args.flag("trace") || co.cfg.verbose;
-            let mut printer = |ev: &SearchEvent| match ev {
-                SearchEvent::PhaseStarted { phase, incumbent_cost } => {
-                    eprintln!("[helex] {phase}: start (incumbent cost {incumbent_cost:.1})")
-                }
-                SearchEvent::Improved { best_cost, tested, .. } => {
-                    eprintln!("[helex]   improved to {best_cost:.1} ({tested} layouts tested)")
-                }
-                SearchEvent::PhaseFinished { phase, secs, best_cost } => {
-                    eprintln!("[helex] {phase}: done in {secs:.2}s (best cost {best_cost:.1})")
-                }
-                SearchEvent::LayoutTested { .. } => {}
+            let trace_out = args.get("trace-out").map(String::from);
+            let mut events: Vec<SearchEvent> = Vec::new();
+            let result = {
+                let collect = trace_out.is_some();
+                let events = &mut events;
+                let mut hook = move |ev: &SearchEvent| {
+                    if collect {
+                        events.push(ev.clone());
+                    }
+                    if trace {
+                        match ev {
+                            SearchEvent::PhaseStarted { phase, incumbent_cost } => eprintln!(
+                                "[helex] {phase}: start (incumbent cost {incumbent_cost:.1})"
+                            ),
+                            SearchEvent::Improved { best_cost, tested, .. } => eprintln!(
+                                "[helex]   improved to {best_cost:.1} ({tested} layouts tested)"
+                            ),
+                            SearchEvent::PhaseFinished { phase, secs, best_cost } => eprintln!(
+                                "[helex] {phase}: done in {secs:.2}s (best cost {best_cost:.1})"
+                            ),
+                            SearchEvent::LayoutTested { .. } => {}
+                        }
+                    }
+                };
+                let observer: Option<&mut dyn SearchObserver> =
+                    if trace || collect { Some(&mut hook) } else { None };
+                co.run_helex_observed(&dfgs, Grid::new(r, c), observer)
+                    .context("DFG set does not map onto this CGRA size")?
             };
-            let observer: Option<&mut dyn SearchObserver> =
-                if trace { Some(&mut printer) } else { None };
-            let result = co
-                .run_helex_observed(&dfgs, Grid::new(r, c), observer)
-                .context("DFG set does not map onto this CGRA size")?;
+            if let Some(path) = &trace_out {
+                use helex::service::wire;
+                use helex::util::json::Json;
+                // header (final layout + counters) then one stripped
+                // event per line: byte-identical at any --search-threads
+                let mut out = String::new();
+                let header = wire::strip_volatile(&Json::obj(vec![
+                    ("dfgs", Json::str(args.get_or("dfgs", "S4"))),
+                    ("grid", Json::str(format!("{r}x{c}"))),
+                    ("best_cost", Json::F64(result.best_cost)),
+                    ("tested", Json::U64(result.stats.tested as u64)),
+                    ("expanded", Json::U64(result.stats.expanded as u64)),
+                    ("layout", wire::encode_layout(&result.best_layout)),
+                ]));
+                out.push_str(&header.to_string());
+                out.push('\n');
+                for ev in &events {
+                    out.push_str(&wire::strip_volatile(&wire::encode_event(ev)).to_string());
+                    out.push('\n');
+                }
+                std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+                eprintln!(
+                    "[helex] trace: {} events -> {path} (volatile fields stripped)",
+                    events.len()
+                );
+            }
             println!("full cost     : {:.1}", co.area.layout_cost(&result.full_layout));
             println!("initial layout: {}", if result.stats.heatmap_used { "heatmap" } else { "full" });
             println!("best cost     : {:.1}", result.best_cost);
@@ -374,17 +421,20 @@ fn print_usage() {
         "helex — heterogeneous layout explorer for spatial elastic CGRAs
 
 USAGE:
-  helex repro [--quick] [--jobs N]           full paper suite on N workers
-  helex serve [--addr HOST:PORT] [--jobs N] [--store-dir DIR] [--store-cap N] [--queue N]
+  helex repro [--quick] [--jobs N] [--search-threads N]
+                                             full paper suite on N workers
+  helex serve [--addr HOST:PORT] [--jobs N] [--search-threads N] [--store-dir DIR]
+              [--store-cap N] [--queue N]
                                              HTTP job server (POST /v1/jobs, GET /v1/jobs/:id[/events],
                                              /v1/healthz, /v1/stats); Ctrl-C drains gracefully
   helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB] [--size RxC] [--l-test N]
-               [--objective area|power] [--seed N] [--label NAME] [--json]
+               [--objective area|power] [--seed N] [--search-threads N] [--label NAME] [--json]
                                              submit one job over HTTP and wait for the result
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
-            [--quick] [--paper-scale] [--jobs N] [--l-test N] [--no-gsg]
+            [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
-  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace] [--no-xla]
+  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace] [--trace-out FILE]
+                [--search-threads N] [--no-xla]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10
@@ -392,7 +442,11 @@ USAGE:
   helex show-dfg NAME
   helex self-check
 
-  --jobs N defaults to the machine's available parallelism; output is
-  byte-identical for any N (per-job seeds derive from job content)."
+  --jobs N (suite workers) and --search-threads N (candidate-testing
+  threads inside one search) both default to the machine's available
+  parallelism, clamped so running-jobs x search-threads <= cores (a
+  lone job gets the whole machine). Output is byte-identical for any
+  combination: per-job seeds derive from job content, and in-search
+  parallelism uses a deterministic reduction."
     );
 }

@@ -36,7 +36,10 @@ use std::hash::{Hash, Hasher};
 
 /// Places every DFG node on a cell of the layout, avoiding `reserved`
 /// cells. Implementations must be deterministic for a given `rng` state.
-pub trait PlacementStrategy {
+///
+/// `Send` because the search's parallel candidate testing moves forked
+/// engines (see [`MappingEngine::fork`]) onto worker threads.
+pub trait PlacementStrategy: Send {
     fn name(&self) -> &'static str;
     fn place(
         &self,
@@ -45,10 +48,18 @@ pub trait PlacementStrategy {
         reserved: &[CellId],
         rng: &mut Rng,
     ) -> Option<Vec<CellId>>;
+
+    /// Clone this strategy for a forked engine ([`MappingEngine::fork`]):
+    /// each parallel search worker owns an engine, so strategies must be
+    /// duplicable. Stateless strategies just re-box themselves.
+    fn clone_box(&self) -> Box<dyn PlacementStrategy>;
 }
 
 /// Routes every DFG edge over the switch network for a fixed placement.
-pub trait RoutingStrategy {
+///
+/// `Send` + [`Self::clone_box`] for the same reason as
+/// [`PlacementStrategy`]: forked engines move onto search worker threads.
+pub trait RoutingStrategy: Send {
     fn name(&self) -> &'static str;
     fn route(
         &self,
@@ -57,6 +68,9 @@ pub trait RoutingStrategy {
         placement: &[CellId],
         cfg: &MapperConfig,
     ) -> RouteOutcome;
+
+    /// Clone this strategy for a forked engine ([`MappingEngine::fork`]).
+    fn clone_box(&self) -> Box<dyn RoutingStrategy>;
 
     /// Re-route only `affected` edges, keeping the other entries of
     /// `fixed_paths` pinned. The default falls back to full routing (a
@@ -98,6 +112,10 @@ impl PlacementStrategy for GreedyTopoPlacer {
     ) -> Option<Vec<CellId>> {
         place::place(dfg, layout, reserved, rng)
     }
+
+    fn clone_box(&self) -> Box<dyn PlacementStrategy> {
+        Box::new(*self)
+    }
 }
 
 /// The default router: negotiated-congestion (PathFinder-style) A* over
@@ -130,6 +148,10 @@ impl RoutingStrategy for PathFinderRouter {
         cfg: &MapperConfig,
     ) -> Option<Vec<Vec<CellId>>> {
         route::route_partial(dfg, layout, placement, fixed_paths, affected, cfg)
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingStrategy> {
+        Box::new(*self)
     }
 }
 
@@ -350,6 +372,15 @@ impl MappingEngine {
     /// Engine sharing the deprecated [`Mapper`]'s configuration.
     pub fn from_mapper(mapper: &Mapper) -> Self {
         Self::new(mapper.cfg.clone())
+    }
+
+    /// Cheap clone for a parallel worker: the same configuration and
+    /// strategies, but a fresh (empty) feasibility cache. The search's
+    /// worker pool ([`crate::search::parallel::TestPool`]) forks one
+    /// engine per thread so every cache stays thread-local and lock-free
+    /// on the mapping hot path.
+    pub fn fork(&self) -> MappingEngine {
+        Self::with_strategies(self.cfg.clone(), self.placer.clone_box(), self.router.clone_box())
     }
 
     pub fn placer_name(&self) -> &'static str {
@@ -952,6 +983,29 @@ mod tests {
     }
 
     #[test]
+    fn forked_engine_matches_parent_with_fresh_cache() {
+        let d = benchmarks::benchmark("SOB");
+        let l = full_layout(6, 6, &d);
+        let parent = MappingEngine::default();
+        assert!(parent.map(&d, &l).is_mapped());
+        assert_eq!(parent.cache_len(), 1);
+        let fork = parent.fork();
+        // same configuration and strategies, fresh cache
+        assert_eq!(fork.cfg.seed, parent.cfg.seed);
+        assert_eq!(fork.placer_name(), parent.placer_name());
+        assert_eq!(fork.router_name(), parent.router_name());
+        assert_eq!(fork.cache_len(), 0, "forks must not share cache state");
+        // deterministic: the fork reproduces the parent's mapping exactly
+        let a = parent.map(&d, &l).into_mapping().unwrap();
+        let b = fork.map(&d, &l).into_mapping().unwrap();
+        assert_eq!(a.node_cell, b.node_cell);
+        assert_eq!(a.edge_paths, b.edge_paths);
+        // forked engines are Send: they move onto search worker threads
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&fork);
+    }
+
+    #[test]
     fn map_all_reports_first_failure_with_name() {
         let sob = benchmarks::benchmark("SOB");
         let sad = benchmarks::benchmark("SAD");
@@ -985,6 +1039,9 @@ mod tests {
             ) -> Option<Vec<CellId>> {
                 GreedyTopoPlacer.place(dfg, layout, reserved, rng)
             }
+            fn clone_box(&self) -> Box<dyn PlacementStrategy> {
+                Box::new(NamedPlacer)
+            }
         }
         struct NamedRouter;
         impl RoutingStrategy for NamedRouter {
@@ -999,6 +1056,9 @@ mod tests {
                 cfg: &MapperConfig,
             ) -> RouteOutcome {
                 PathFinderRouter.route(dfg, layout, placement, cfg)
+            }
+            fn clone_box(&self) -> Box<dyn RoutingStrategy> {
+                Box::new(NamedRouter)
             }
         }
         let engine = MappingEngine::with_strategies(

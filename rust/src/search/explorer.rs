@@ -51,7 +51,11 @@ pub enum SearchEvent {
     PhaseStarted { phase: String, incumbent_cost: f64 },
     /// One candidate layout was feasibility-tested with the mapper
     /// (`tested` is the running `S_tst` counter after this test).
-    LayoutTested { feasible: bool, cost: f64, tested: usize },
+    /// `worker` is the pool worker that ran the test — diagnostic only:
+    /// events are always *emitted* in deterministic reduction order, but
+    /// the worker tag varies with thread count and timing, so the wire
+    /// codec treats it as volatile (stripped before byte comparisons).
+    LayoutTested { feasible: bool, cost: f64, tested: usize, worker: usize },
     /// The incumbent best layout improved. Costs are monotonically
     /// non-increasing across the whole session.
     Improved { best_cost: f64, tested: usize, secs: f64 },
@@ -111,7 +115,12 @@ pub struct SearchCtx<'a> {
     pub scorer: Option<&'a mut dyn BatchScorer>,
     /// Feasibility witnesses: one cached mapping per DFG, valid for the
     /// incumbent best layout. A candidate that does not invalidate a
-    /// witness is feasible for that DFG without re-mapping.
+    /// witness is feasible for that DFG without re-mapping. The OPSG/GSG
+    /// phases temporarily move this vector out (via `mem::take`) for the
+    /// duration of their run so worker threads can read a fixed snapshot
+    /// ([`super::parallel::SharedState`]) while the ctx keeps mutating
+    /// stats and events; it is merged back — updated in branching order —
+    /// before the phase returns.
     pub witness: Vec<Option<Mapping>>,
     /// The layout the search proper starts from, recorded by
     /// initialization phases (e.g. [`HeatmapPhase`]).
@@ -209,6 +218,14 @@ impl<'a> SearchCtx<'a> {
     /// take the incremental remap path instead of a full place-and-route.
     /// Callers store the returned mapping as the new witness when the
     /// candidate is accepted.
+    ///
+    /// This is the *serial* helper for custom [`SearchPhase`]s: it runs
+    /// on the session's shared, cache-enabled engine. The built-in
+    /// OPSG/GSG phases do **not** use it — their tests go through
+    /// [`super::parallel::TestPool`]'s cache-free forked engines, which
+    /// is what makes their results thread-count-independent (rule 1 of
+    /// the deterministic-reduction contract). A custom phase that wants
+    /// that guarantee should use the pool, not this method.
     pub fn test_dfg(&self, di: usize, layout: &Layout) -> MapOutcome {
         match &self.witness[di] {
             Some(w) => self.engine.remap_from(w, &self.dfgs[di], layout),

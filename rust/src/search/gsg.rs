@@ -10,12 +10,23 @@
 //! failChart and expand new subproblems from the improved layout. The
 //! queue is additionally pruned of subproblems too far from the best
 //! cost after prolonged non-improvement (Section III-F2 last paragraph).
+//!
+//! Frontier slices are feasibility-tested on the
+//! [`super::parallel::TestPool`]: the next batch of queue pops is
+//! prefetched speculatively, then consumed by the deterministic
+//! reduction in pop order — failChart increments, stale-pruning and the
+//! winner choice all happen in that order, and candidates after the
+//! winner go back to the queue untouched. The [`Cand`] ordering is a
+//! *total* order (a generation sequence number breaks every tie), so
+//! re-pushed candidates pop exactly where a serial run would have
+//! popped them; pruning is therefore reproducible at any thread count.
 
+use super::parallel::{CandidateTest, SharedState, TestPool};
 use super::{SearchCtx, SearchEvent};
 use crate::cgra::{CellId, Layout};
 use crate::ops::{GroupSet, NUM_GROUPS};
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::{BinaryHeap, HashMap};
 
 /// A queued subproblem: a layout plus the (cell, removed-mask) metadata
 /// that produced it.
@@ -24,28 +35,73 @@ struct Cand {
     layout: Layout,
     cell: CellId,
     removed: GroupSet,
+    /// Global generation sequence number, the final `Ord` tie-break:
+    /// makes the ordering total, so the pop order is a property of the
+    /// queue's *contents* (not of heap internals or insertion history)
+    /// and candidates re-pushed after a speculative batch pop exactly
+    /// where a serial run would have popped them.
+    seq: u64,
 }
 
 impl PartialEq for Cand {
     fn eq(&self, other: &Self) -> bool {
-        self.cost == other.cost
+        self.seq == other.seq
     }
 }
 impl Eq for Cand {}
 impl Ord for Cand {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by cost; deterministic tie-break
+        // min-heap by cost; fully deterministic total order
         other
             .cost
             .partial_cmp(&self.cost)
             .unwrap_or(Ordering::Equal)
             .then_with(|| other.cell.cmp(&self.cell))
             .then_with(|| other.removed.0.cmp(&self.removed.0))
+            .then_with(|| other.seq.cmp(&self.seq))
     }
 }
 impl PartialOrd for Cand {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
+    }
+}
+
+/// Exact-dedup memory of expanded layouts, keyed by [`layout_hash`] but
+/// collision-safe: layouts sharing a hash live in one bucket where an
+/// exact comparison tells them apart, so a hash collision degrades to a
+/// (harmless) duplicate test of nothing — a genuinely new layout is
+/// *never* wrongly pruned, it is admitted and re-tested.
+///
+/// Behaviorally this is `HashSet<Layout>` (which also resolves
+/// collisions by `Eq`); it exists as a separate type for the injectable
+/// hash function, without which the collision path could never be
+/// exercised by a test — `with_hash` is what lets
+/// `seen_set_collision_degrades_to_retest_never_wrong_prune` force one.
+struct SeenSet {
+    hash: fn(&Layout) -> u64,
+    buckets: HashMap<u64, Vec<Layout>>,
+}
+
+impl SeenSet {
+    fn new() -> Self {
+        Self::with_hash(layout_hash)
+    }
+
+    /// Seam for the collision tests: force collisions with a degenerate
+    /// hash and observe that dedup still compares exactly.
+    fn with_hash(hash: fn(&Layout) -> u64) -> Self {
+        Self { hash, buckets: HashMap::new() }
+    }
+
+    /// True when `l` was not seen before (and is now recorded).
+    fn insert(&mut self, l: &Layout) -> bool {
+        let bucket = self.buckets.entry((self.hash)(l)).or_default();
+        if bucket.iter().any(|seen| seen == l) {
+            return false;
+        }
+        bucket.push(l.clone());
+        true
     }
 }
 
@@ -71,8 +127,9 @@ fn removal_masks(support: GroupSet) -> Vec<GroupSet> {
 fn expand(
     base: &Layout,
     fail_chart: &HashMap<(u8, CellId), usize>,
-    seen: &mut HashSet<u64>,
+    seen: &mut SeenSet,
     pq: &mut BinaryHeap<Cand>,
+    seq: &mut u64,
     ctx: &mut SearchCtx,
 ) {
     let cost = ctx.cost;
@@ -125,11 +182,12 @@ fn expand(
     for (((cell, mask), _v), c) in metas.into_iter().zip(vectors).zip(costs) {
         let layout = base.without_groups(cell, mask);
         // dedupe layouts reachable through multiple removal orders
-        let h = layout_hash(&layout);
-        if !seen.insert(h) {
+        // (exact compare under the hash, so collisions cannot prune)
+        if !seen.insert(&layout) {
             continue;
         }
-        pq.push(Cand { cost: c, layout, cell, removed: mask });
+        *seq += 1;
+        pq.push(Cand { cost: c, layout, cell, removed: mask, seq: *seq });
     }
 }
 
@@ -145,82 +203,129 @@ fn layout_hash(l: &Layout) -> u64 {
 /// whose placements the candidate layout still supports proves
 /// feasibility without re-mapping, see `Mapping::still_valid`;
 /// EXPERIMENTS.md §Perf) — lives in the [`SearchCtx`]. DFGs whose
-/// witness went stale are remapped through [`SearchCtx::test_dfg`],
-/// which warm-starts the engine from the witness.
+/// witness went stale are remapped warm from the witness on the
+/// [`TestPool`]'s forked engines.
+///
+/// The loop pops the frontier in *batches*: every pop-time skip that is
+/// stable under future state (a candidate at or above the incumbent
+/// cost stays unviable, because the incumbent only improves) is applied
+/// while building the batch; failChart skips are merely *flagged*,
+/// because the chart resets on success — their fate is decided by the
+/// reduction, in pop order, against the failChart state a serial run
+/// would have seen at that point. Candidates after the winner are
+/// re-pushed untouched.
 pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
     let dfgs = ctx.dfgs;
     let cost = ctx.cost;
     let cfg = ctx.cfg.clone();
+    let mut pool = TestPool::for_search(ctx.engine, cfg.search_threads_resolved());
+    // witness snapshot moves out of the ctx for the phase (merged back
+    // at the end); candidate tests read it through the shared state
+    let mut witness = std::mem::take(&mut ctx.witness);
+    let all_dfgs: Vec<usize> = (0..dfgs.len()).collect();
     let mut best = initial.clone();
     let mut best_cost = cost.layout_cost(&best);
     let mut fail_chart: HashMap<(u8, CellId), usize> = HashMap::new();
-    let mut seen: HashSet<u64> = HashSet::new();
+    let mut seen = SeenSet::new();
     let mut pq: BinaryHeap<Cand> = BinaryHeap::new();
-    expand(&best, &fail_chart, &mut seen, &mut pq, ctx);
+    let mut seq = 0u64;
+    expand(&best, &fail_chart, &mut seen, &mut pq, &mut seq, ctx);
     let mut stale = 0usize;
 
-    while let Some(cand) = pq.pop() {
+    loop {
         if ctx.stats.tested >= cfg.l_test {
             break;
         }
-        if cand.cost >= best_cost {
-            continue;
-        }
-        // failChart pruning (line 8)
-        let key = (cand.removed.0, cand.cell);
-        if *fail_chart.get(&key).unwrap_or(&0) >= cfg.l_fail {
-            continue;
-        }
-        // full-set testing (line 9), with witness fast-path and
-        // warm-start remapping for stale witnesses
-        ctx.stats.tested += 1;
-        let mut succ = true;
-        let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
-        for (di, d) in dfgs.iter().enumerate() {
-            let valid = ctx.witness[di]
-                .as_ref()
-                .map_or(false, |w| w.still_valid(d, &cand.layout));
-            if valid {
-                continue;
+        // ---- batch build: the next frontier slice, in pop order
+        let budget = cfg.l_test - ctx.stats.tested;
+        let cap = (pool.threads() * 2).max(2).min(budget);
+        let mut batch: Vec<(Cand, bool)> = Vec::new();
+        let mut testable = 0usize;
+        while testable < cap {
+            let Some(c) = pq.pop() else { break };
+            if c.cost >= best_cost {
+                continue; // permanent skip: best_cost only decreases
             }
-            match ctx.test_dfg(di, &cand.layout) {
-                crate::mapper::MapOutcome::Mapped { mapping, .. } => {
-                    new_witnesses.push((di, mapping))
+            let flagged =
+                *fail_chart.get(&(c.removed.0, c.cell)).unwrap_or(&0) >= cfg.l_fail;
+            if !flagged {
+                testable += 1;
+            }
+            batch.push((c, flagged));
+        }
+        if batch.is_empty() {
+            break; // frontier exhausted
+        }
+
+        // ---- speculative prefetch + deterministic reduction
+        let mut winner: Option<(usize, CandidateTest)> = None;
+        {
+            let shared = SharedState { dfgs, witness: &witness, affected: &all_dfgs };
+            let items: Vec<(&Layout, bool)> =
+                batch.iter().map(|(c, flagged)| (&c.layout, *flagged)).collect();
+            let mut prefetched = pool.prefetch(&shared, &items);
+            for (i, (cand, _)) in batch.iter().enumerate() {
+                if winner.is_some() {
+                    break; // the rest of the batch is unconsumed
                 }
-                crate::mapper::MapOutcome::Failed { .. } => {
-                    succ = false;
-                    break;
+                // failChart pruning (line 8), against the chart state a
+                // serial run would have at this pop
+                let key = (cand.removed.0, cand.cell);
+                if *fail_chart.get(&key).unwrap_or(&0) >= cfg.l_fail {
+                    continue; // discarded, exactly like a serial pop
+                }
+                // full-set testing (line 9), witness fast-path inside
+                let t = match prefetched[i].take() {
+                    Some(t) => t,
+                    None => pool.test_one(&shared, &cand.layout),
+                };
+                ctx.stats.tested += 1;
+                ctx.emit(SearchEvent::LayoutTested {
+                    feasible: t.feasible,
+                    cost: cand.cost,
+                    tested: ctx.stats.tested,
+                    worker: t.worker,
+                });
+                if t.feasible {
+                    winner = Some((i, t));
+                } else {
+                    *fail_chart.entry(key).or_insert(0) += 1; // line 15
+                    stale += 1;
+                    if stale >= cfg.gsg_stale_prune_after {
+                        // prune subproblems too far in cost from best
+                        let keep: Vec<Cand> =
+                            pq.drain().filter(|c| c.cost < best_cost).collect();
+                        pq.extend(keep);
+                        stale = 0;
+                    }
                 }
             }
+            ctx.stats.speculative +=
+                prefetched.iter().filter(|o| o.is_some()).count();
         }
-        ctx.emit(SearchEvent::LayoutTested {
-            feasible: succ,
-            cost: cand.cost,
-            tested: ctx.stats.tested,
-        });
-        if succ {
-            for (di, m) in new_witnesses {
-                ctx.witness[di] = Some(m);
+
+        if let Some((w, t)) = winner {
+            let mut rest = batch.into_iter();
+            let (win, _) = rest.nth(w).expect("winner index is in the batch");
+            // candidates after the winner were never consumed: back to
+            // the frontier, exactly where a serial run would have left
+            // them (the total Cand order makes re-push order-invisible)
+            for (cand, _) in rest {
+                pq.push(cand);
+            }
+            for (di, m) in t.witnesses {
+                witness[di] = Some(m);
             }
             fail_chart.clear(); // line 12
-            best = cand.layout;
-            best_cost = cand.cost;
+            best = win.layout;
+            best_cost = win.cost;
             stale = 0;
             ctx.emit_improved(best_cost);
             // line 17: expand subproblems from the improved layout
-            expand(&best, &fail_chart, &mut seen, &mut pq, ctx);
-        } else {
-            *fail_chart.entry(key).or_insert(0) += 1; // line 15
-            stale += 1;
-            if stale >= cfg.gsg_stale_prune_after {
-                // prune subproblems too far in cost from the best layout
-                let keep: Vec<Cand> =
-                    pq.drain().filter(|c| c.cost < best_cost).collect();
-                pq.extend(keep);
-                stale = 0;
-            }
+            expand(&best, &fail_chart, &mut seen, &mut pq, &mut seq, ctx);
         }
     }
+    ctx.witness = witness;
     best
 }
 
@@ -299,7 +404,8 @@ mod tests {
         let grid = Grid::new(5, 5);
         let l = Layout::empty(grid);
         let mut pq = BinaryHeap::new();
-        let mut seen = HashSet::new();
+        let mut seen = SeenSet::new();
+        let mut seq = 0u64;
         let dfgs: Vec<Dfg> = Vec::new();
         let engine = MappingEngine::default();
         let cost = CostModel::area();
@@ -310,7 +416,80 @@ mod tests {
             [0; NUM_GROUPS],
             SearchConfig { l_fail: 3, ..Default::default() },
         );
-        expand(&l, &HashMap::new(), &mut seen, &mut pq, &mut c);
+        expand(&l, &HashMap::new(), &mut seen, &mut pq, &mut seq, &mut c);
         assert!(pq.is_empty());
+    }
+
+    #[test]
+    fn layout_hash_separates_a_randomized_distinct_corpus() {
+        // every single- and multi-group removal of a full 5x5 layout is a
+        // distinct layout; the default hash must keep them apart (a
+        // collision would only cost a re-test — see the SeenSet test —
+        // but should not happen on corpora this small)
+        let grid = Grid::new(5, 5);
+        let full = Layout::full(grid, GroupSet::all_compute());
+        let mut layouts: Vec<Layout> = vec![full.clone()];
+        for cell in grid.compute_cells() {
+            for mask in removal_masks(full.support(cell)) {
+                layouts.push(full.without_groups(cell, mask));
+            }
+        }
+        // pairwise-distinct by construction
+        let n = layouts.len();
+        assert!(n > 100, "corpus too small to be meaningful: {n}");
+        let mut hashes: Vec<u64> = layouts.iter().map(layout_hash).collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), n, "layout_hash collided on a distinct corpus");
+    }
+
+    #[test]
+    fn seen_set_collision_degrades_to_retest_never_wrong_prune() {
+        let grid = Grid::new(5, 5);
+        let full = Layout::full(grid, GroupSet::all_compute());
+        let cells: Vec<CellId> = grid.compute_cells().collect();
+        let a = full.without_group(cells[0], OpGroup::Arith);
+        let b = full.without_group(cells[1], OpGroup::Arith);
+        assert_ne!(a, b);
+        // degenerate hash: every layout collides into one bucket
+        let mut forced = SeenSet::with_hash(|_| 42);
+        assert!(forced.insert(&a), "first layout is new");
+        assert!(
+            forced.insert(&b),
+            "a colliding but distinct layout must be admitted (re-tested), never pruned"
+        );
+        assert!(!forced.insert(&a), "an exact repeat is still deduped");
+        assert!(!forced.insert(&b));
+        // the real hash behaves identically, just without collisions
+        let mut seen = SeenSet::new();
+        assert!(seen.insert(&a));
+        assert!(seen.insert(&b));
+        assert!(!seen.insert(&a));
+        assert!(!seen.insert(&b));
+    }
+
+    #[test]
+    fn gsg_thread_count_never_changes_the_result() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let full = Layout::full(Grid::new(7, 7), crate::dfg::groups_used(&dfgs));
+        let cost = CostModel::area();
+        let mut outs: Vec<(Layout, usize, usize)> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let engine = MappingEngine::default();
+            let cfg = SearchConfig {
+                l_test: 150,
+                l_fail: 2,
+                search_threads: threads,
+                ..Default::default()
+            };
+            let mut c = ctx(&dfgs, &engine, &cost, cfg);
+            let best = run(&full, &mut c);
+            outs.push((best, c.stats.tested, c.stats.expanded));
+        }
+        for o in &outs[1..] {
+            assert_eq!(outs[0].0, o.0, "layout must not depend on search_threads");
+            assert_eq!(outs[0].1, o.1, "S_tst must not depend on search_threads");
+            assert_eq!(outs[0].2, o.2, "S_exp must not depend on search_threads");
+        }
     }
 }

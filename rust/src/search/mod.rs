@@ -19,15 +19,40 @@
 //! report progress as [`SearchEvent`]s to an optional [`SearchObserver`];
 //! the convergence trace used by Figs 3–6 and Table IV is recorded from
 //! the event stream. Feasibility testing consumes structured
-//! [`crate::mapper::MapOutcome`]s from the [`crate::mapper::MappingEngine`]
-//! via [`SearchCtx::test_dfg`], warm-starting each candidate test from
-//! the cached witness mapping. [`run`] is the legacy entry point, kept
-//! as a thin wrapper over [`Explorer`].
+//! [`crate::mapper::MapOutcome`]s from the [`crate::mapper::MappingEngine`],
+//! warm-starting each candidate test from the cached witness mapping —
+//! the OPSG/GSG phases route tests through the [`parallel`] worker
+//! pool's forked engines (see below); [`SearchCtx::test_dfg`] remains
+//! as the serial helper for custom phases that do not need the pool.
+//! [`run`] is the legacy entry point, kept as a thin wrapper over
+//! [`Explorer`].
+//!
+//! ## Parallel candidate testing (deterministic)
+//!
+//! Candidates within one OPSG queue fill — and sibling expansions of a
+//! GSG frontier slice — are independent mapping problems, so both
+//! phases feasibility-test them on a scoped worker pool of
+//! [`SearchConfig::search_threads`] threads ([`parallel::TestPool`]),
+//! each worker owning a [forked](crate::mapper::MappingEngine::fork)
+//! engine so the mapping hot path stays lock-free. Results are merged
+//! by a *deterministic reduction*: the winner is always the first
+//! feasible candidate in the original branching order, speculative
+//! tests that lose the race are folded into
+//! [`SearchStats::speculative`] but cannot change anything, and all
+//! search-state mutation (witnesses, OPSG's failed set, GSG's
+//! failChart) happens in branching order on the reduction thread. The
+//! consequence is a hard contract: **thread count can never change a
+//! result** — layouts, result tables and the recorded
+//! [`SearchEvent`] trace are byte-identical for any `search_threads`
+//! (CI's `search-determinism` job and the property test in
+//! `rust/tests/explorer.rs` pin this). See [`parallel`] for the three
+//! rules that make the contract hold.
 
 pub mod explorer;
 pub mod gsg;
 pub mod heatmap;
 pub mod opsg;
+pub mod parallel;
 pub mod posteriori;
 
 pub use explorer::{
@@ -56,9 +81,11 @@ pub struct TracePoint {
 /// Search configuration (Algorithm 1 inputs + engineering knobs).
 ///
 /// `Hash` participates in the service's job fingerprints (run-cache key
-/// + per-job seed derivation); the derive keeps any field added here
-/// automatically result-relevant.
-#[derive(Debug, Clone, Hash)]
+/// + per-job seed derivation). It is implemented manually with an
+/// exhaustive destructuring so any field added here forces a decision:
+/// result-relevant fields hash, pure execution knobs (currently only
+/// [`Self::search_threads`]) are explicitly skipped.
+#[derive(Debug, Clone)]
 pub struct SearchConfig {
     /// Mapper-invocation budget `L_test` (paper: 2000 for 10×10, grown
     /// with instance size).
@@ -78,6 +105,13 @@ pub struct SearchConfig {
     /// "HeLEx without targeting the Arith group and without running GSG",
     /// Section IV-G).
     pub opsg_skip_arith: bool,
+    /// Worker threads for in-search candidate testing (OPSG queue fills,
+    /// GSG frontier batches); `0` means available parallelism. A pure
+    /// execution knob: the deterministic reduction ([`parallel`])
+    /// guarantees byte-identical results at any value, so it is excluded
+    /// from `Hash` — and therefore from job fingerprints and derived
+    /// seeds — on purpose.
+    pub search_threads: usize,
 }
 
 impl Default for SearchConfig {
@@ -90,7 +124,36 @@ impl Default for SearchConfig {
             gsg_stale_prune_after: 64,
             use_heatmap: true,
             opsg_skip_arith: false,
+            search_threads: 0,
         }
+    }
+}
+
+impl std::hash::Hash for SearchConfig {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        // Exhaustive destructuring: a field added to the struct breaks
+        // this impl until someone decides whether it is result-relevant.
+        // `search_threads` is skipped: any thread count computes the
+        // same result, so it must share one cache slot and one derived
+        // seed (see the `fingerprint_ignores_label_and_tracks_content`
+        // service test).
+        let Self {
+            l_test,
+            l_fail,
+            run_gsg,
+            gsg_passes,
+            gsg_stale_prune_after,
+            use_heatmap,
+            opsg_skip_arith,
+            search_threads: _,
+        } = self;
+        l_test.hash(state);
+        l_fail.hash(state);
+        run_gsg.hash(state);
+        gsg_passes.hash(state);
+        gsg_stale_prune_after.hash(state);
+        use_heatmap.hash(state);
+        opsg_skip_arith.hash(state);
     }
 }
 
@@ -113,6 +176,16 @@ impl SearchConfig {
     pub fn scale_l_test(base: usize, grid: crate::cgra::Grid) -> usize {
         (base * grid.num_compute() + REF_COMPUTE_CELLS - 1) / REF_COMPUTE_CELLS
     }
+
+    /// Effective in-search worker count: [`Self::search_threads`], or
+    /// the machine's available parallelism when it is `0`.
+    pub fn search_threads_resolved(&self) -> usize {
+        if self.search_threads > 0 {
+            self.search_threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
 }
 
 /// Statistics of one HeLEx run (Table IV + Figs 3/5/6 inputs).
@@ -120,8 +193,14 @@ impl SearchConfig {
 pub struct SearchStats {
     /// Subproblems expanded (`S_exp`): layouts generated into queues.
     pub expanded: usize,
-    /// Subproblems tested with the mapper (`S_tst`).
+    /// Subproblems tested with the mapper (`S_tst`). Counts exactly the
+    /// tests a serial run would perform — identical at any thread count.
     pub tested: usize,
+    /// Speculative candidate tests whose results the deterministic
+    /// reduction discarded (they lost the branching-order race).
+    /// Depends on thread count and timing, so it is diagnostic only:
+    /// excluded from result tables, wire records and compared traces.
+    pub speculative: usize,
     /// Wall seconds per executed phase, in pipeline order (one entry per
     /// phase execution; repeated phases accumulate entries).
     pub phase_secs: Vec<(String, f64)>,
@@ -336,6 +415,34 @@ mod tests {
         let g = Grid::new(12, 12); // 10x10 compute core = 100 cells
         assert_eq!(SearchConfig::scale_l_test(2000, g), (2000 * 100 + 63) / 64);
         assert_eq!(SearchConfig::scale_l_test(64, Grid::new(10, 10)), 64);
+    }
+
+    #[test]
+    fn search_threads_is_excluded_from_the_config_hash() {
+        use crate::util::StableHasher;
+        use std::hash::{Hash, Hasher};
+        let fp = |cfg: &SearchConfig| {
+            let mut h = StableHasher::new();
+            cfg.hash(&mut h);
+            h.finish()
+        };
+        let a = SearchConfig::default();
+        let b = SearchConfig { search_threads: 8, ..a.clone() };
+        assert_eq!(
+            fp(&a),
+            fp(&b),
+            "search_threads is an execution knob: it must not change job fingerprints"
+        );
+        let c = SearchConfig { l_test: a.l_test + 1, ..a.clone() };
+        assert_ne!(fp(&a), fp(&c), "result-relevant fields must still hash");
+    }
+
+    #[test]
+    fn search_threads_resolution() {
+        let auto = SearchConfig::default();
+        assert!(auto.search_threads_resolved() >= 1);
+        let fixed = SearchConfig { search_threads: 3, ..Default::default() };
+        assert_eq!(fixed.search_threads_resolved(), 3);
     }
 
     #[test]

@@ -8,7 +8,16 @@
 //! testing*: only the DFGs containing ops of the removed group are
 //! re-mapped — the others' mappings cannot be invalidated by removing a
 //! group they never use (the base layout is always feasible in OPSG).
+//!
+//! Candidates of one queue fill are independent, so they are tested on
+//! the [`super::parallel::TestPool`] and merged by the deterministic
+//! reduction: the winner is the first *feasible* candidate in the
+//! original branching order regardless of which worker finished first,
+//! and the `failed`-cell set is filled in that same order — so the
+//! search trajectory is byte-identical at any
+//! [`super::SearchConfig::search_threads`].
 
+use super::parallel::{CandidateTest, SharedState, TestPool};
 use super::{SearchCtx, SearchEvent};
 use crate::cgra::{CellId, Layout};
 use crate::ops::costs::groups_by_descending_cost;
@@ -47,14 +56,20 @@ fn generate_valid_layouts(
 /// `g`-op on `c` (support removal does not touch the switch fabric), so
 /// such candidates are accepted without re-mapping — a sound
 /// strengthening of the paper's selective testing. DFGs that *do* need
-/// re-mapping go through [`SearchCtx::test_dfg`], which warm-starts the
-/// engine from the witness: only the displaced nodes are re-placed and
-/// only their incident edges re-routed.
+/// re-mapping are remapped warm from the witness (only the displaced
+/// nodes re-placed, only their incident edges re-routed) on the
+/// [`TestPool`]'s forked engines; the deterministic reduction keeps the
+/// outcome independent of the worker count (see [`super::parallel`]).
 pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
     let dfgs = ctx.dfgs;
     let cost = ctx.cost;
     let min_insts = ctx.min_insts;
     let cfg = ctx.cfg.clone();
+    let mut pool = TestPool::for_search(ctx.engine, cfg.search_threads_resolved());
+    // the witness cache moves out of the ctx for the phase: candidate
+    // tests read a fixed snapshot of it through the shared state while
+    // the ctx stays free for stats/event mutation on the reduction side
+    let mut witness = std::mem::take(&mut ctx.witness);
     let mut best = initial.clone();
     let mut best_cost = cost.layout_cost(&best);
     let removal_order = groups_by_descending_cost(&cost.components);
@@ -64,7 +79,10 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
             continue;
         }
         // per-group memory of (cell) removals that failed on every base
-        // so far; reset when the base layout changes.
+        // so far; reset when the base layout changes. Filled in
+        // branching order by the reduction, so the parallel soundness of
+        // the next queue fill rests on `generate_valid_layouts`
+        // excluding exactly the serial run's failed cells.
         let mut failed: std::collections::HashSet<CellId> = std::collections::HashSet::new();
         loop {
             // line 7-8: (re)fill the queue from the incumbent best
@@ -92,61 +110,77 @@ pub fn run(initial: &Layout, ctx: &mut SearchCtx) -> Layout {
                 .filter(|&i| dfgs[i].uses_any(mask))
                 .collect();
 
-            let mut new_best_found = false;
-            for cell in cells {
-                if ctx.stats.tested >= cfg.l_test {
-                    break 'groups;
-                }
-                let candidate = best.without_group(cell, op_type);
-                ctx.stats.tested += 1;
-                // witness reuse: a DFG only needs re-mapping if its
-                // current witness executes an op of `op_type` on `cell`;
-                // those that do are remapped warm from the witness.
-                let mut ok = true;
-                let mut new_witnesses: Vec<(usize, crate::mapper::Mapping)> = Vec::new();
-                for &di in &affected {
-                    let d = &dfgs[di];
-                    let needs_remap = match &ctx.witness[di] {
-                        Some(w) => !w.still_valid(d, &candidate),
-                        None => true,
+            // the batch is the serial branching order capped to the
+            // remaining L_test budget; a serial run would have stopped
+            // at exactly that many tests
+            let remaining = cfg.l_test.saturating_sub(ctx.stats.tested);
+            if remaining == 0 {
+                break 'groups;
+            }
+            let batch: Vec<(CellId, Layout)> = cells
+                .iter()
+                .take(remaining)
+                .map(|&c| (c, best.without_group(c, op_type)))
+                .collect();
+            let budget_hit = cells.len() > batch.len();
+
+            // speculative prefetch + deterministic reduction: consume
+            // results in branching order, stop at the first feasible
+            // candidate (the winner), recompute on demand anything the
+            // prefetch skipped
+            let mut winner: Option<(usize, CandidateTest)> = None;
+            {
+                let shared = SharedState { dfgs, witness: &witness, affected: &affected };
+                let items: Vec<(&Layout, bool)> =
+                    batch.iter().map(|(_, l)| (l, false)).collect();
+                let mut prefetched = pool.prefetch(&shared, &items);
+                for (i, (cell, layout)) in batch.iter().enumerate() {
+                    let t = match prefetched[i].take() {
+                        Some(t) => t,
+                        None => pool.test_one(&shared, layout),
                     };
-                    if !needs_remap {
-                        continue;
+                    ctx.stats.tested += 1;
+                    ctx.emit(SearchEvent::LayoutTested {
+                        feasible: t.feasible,
+                        cost: cand_cost,
+                        tested: ctx.stats.tested,
+                        worker: t.worker,
+                    });
+                    if t.feasible {
+                        winner = Some((i, t));
+                        break;
                     }
-                    match ctx.test_dfg(di, &candidate) {
-                        crate::mapper::MapOutcome::Mapped { mapping, .. } => {
-                            new_witnesses.push((di, mapping))
-                        }
-                        crate::mapper::MapOutcome::Failed { .. } => {
-                            ok = false;
-                            break;
-                        }
-                    }
+                    failed.insert(*cell);
                 }
-                ctx.emit(SearchEvent::LayoutTested {
-                    feasible: ok,
-                    cost: cand_cost,
-                    tested: ctx.stats.tested,
-                });
-                if ok {
-                    best = candidate;
+                ctx.stats.speculative +=
+                    prefetched.iter().filter(|o| o.is_some()).count();
+            }
+
+            match winner {
+                Some((w, t)) => {
+                    best = batch
+                        .into_iter()
+                        .nth(w)
+                        .map(|(_, l)| l)
+                        .expect("winner index is in the batch");
                     best_cost = cand_cost;
-                    for (di, m) in new_witnesses {
-                        ctx.witness[di] = Some(m);
+                    for (di, m) in t.witnesses {
+                        witness[di] = Some(m);
                     }
                     failed.clear();
                     ctx.emit_improved(best_cost);
-                    new_best_found = true;
-                    break; // rebuild queue from new best
-                } else {
-                    failed.insert(cell);
+                    // rebuild the queue from the new best
                 }
-            }
-            if !new_best_found {
-                break; // stopSearchRound: all candidates failed
+                None => {
+                    if budget_hit {
+                        break 'groups; // L_test exhausted mid-round
+                    }
+                    break; // stopSearchRound: all candidates failed
+                }
             }
         }
     }
+    ctx.witness = witness;
     best
 }
 
@@ -246,5 +280,60 @@ mod tests {
         failed.insert(all[0]);
         let fewer = generate_valid_layouts(&full, OpGroup::Arith, &mins, &failed);
         assert_eq!(fewer.len(), all.len() - 1);
+        assert!(!fewer.contains(&all[0]));
+        // every cell failed: the round must produce zero candidates (the
+        // parallel reduction relies on this to terminate a group exactly
+        // where the serial search would)
+        let all_failed: std::collections::HashSet<CellId> = all.iter().copied().collect();
+        assert!(generate_valid_layouts(&full, OpGroup::Arith, &mins, &all_failed).is_empty());
+    }
+
+    #[test]
+    fn generate_at_exact_minimum_yields_no_candidates() {
+        // the `n[g] <= min_insts[g]` pruning edge: exactly at the
+        // minimum, removing one more instance is invalid, so the queue
+        // fill must be empty — at minimum+1 candidates reappear
+        let (_, full, _, _) = setup(&["SOB"], 6, 6);
+        let g = OpGroup::Arith;
+        let n = full.compute_group_instances();
+        assert!(n[g.index()] > 1, "fixture needs at least two Arith instances");
+        let mut mins = [0usize; NUM_GROUPS];
+        mins[g.index()] = n[g.index()];
+        assert!(
+            generate_valid_layouts(&full, g, &mins, &Default::default()).is_empty(),
+            "exactly-at-minimum must yield zero candidates"
+        );
+        mins[g.index()] = n[g.index()] - 1;
+        assert!(
+            !generate_valid_layouts(&full, g, &mins, &Default::default()).is_empty(),
+            "one instance of slack must yield candidates again"
+        );
+        // a group with zero instances yields nothing even with mins at 0
+        let empty = Layout::empty(full.grid);
+        assert!(generate_valid_layouts(&empty, g, &[0; NUM_GROUPS], &Default::default())
+            .is_empty());
+    }
+
+    #[test]
+    fn opsg_thread_count_never_changes_the_result() {
+        let (dfgs, full, engine, cost) = setup(&["SOB", "GB"], 7, 7);
+        let mut outs: Vec<(Layout, usize, usize, f64)> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let cfg = SearchConfig {
+                l_test: 150,
+                search_threads: threads,
+                ..Default::default()
+            };
+            let mut c = ctx(&dfgs, &engine, &cost, cfg);
+            let best = run(&full, &mut c);
+            let best_cost = cost.layout_cost(&best);
+            outs.push((best, c.stats.tested, c.stats.expanded, best_cost));
+        }
+        for o in &outs[1..] {
+            assert_eq!(outs[0].0, o.0, "layout must not depend on search_threads");
+            assert_eq!(outs[0].1, o.1, "S_tst must not depend on search_threads");
+            assert_eq!(outs[0].2, o.2, "S_exp must not depend on search_threads");
+            assert_eq!(outs[0].3, o.3);
+        }
     }
 }

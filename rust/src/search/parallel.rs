@@ -1,0 +1,281 @@
+//! Deterministic parallel candidate testing: the scoped worker pool
+//! behind OPSG's queue fills and GSG's frontier batches.
+//!
+//! ## The deterministic-reduction contract
+//!
+//! Candidates inside one branching step are *independent* mapping
+//! problems, so they can be feasibility-tested concurrently — but the
+//! search result must be a pure function of the inputs, never of the
+//! thread count or scheduling. Three rules make that hold:
+//!
+//! 1. **Pure tests.** A candidate test depends only on the DFG set, the
+//!    witness snapshot taken at the start of the branching step, the
+//!    candidate layout, and the engine configuration. Worker engines are
+//!    [forked](crate::mapper::MappingEngine::fork) with the feasibility
+//!    cache *disabled*: a cache hit could replay a mapping computed from
+//!    an older witness, which would make the returned witness depend on
+//!    which worker (and how many) had tested which layout before.
+//! 2. **Speculative prefetch, authoritative reduction.** Workers test
+//!    candidates speculatively ([`TestPool::prefetch`]); the reduction
+//!    then walks the batch in the original *branching order* and
+//!    consumes results exactly as the serial algorithm would — the
+//!    winner is the first feasible candidate in branching order, and a
+//!    result the reduction needs but the prefetch skipped is recomputed
+//!    on the spot ([`TestPool::test_one`]; identical by rule 1).
+//!    Speculative tests that lose the race are folded into
+//!    `SearchStats::speculative` but can never change the result.
+//! 3. **Ordered state merges.** All search-state mutation (witness
+//!    updates, OPSG's `failed` set, GSG's `failChart`, pruning, events)
+//!    happens on the reduction thread, in branching order — so pruning
+//!    decisions and the recorded [`super::SearchEvent`] trace are
+//!    byte-identical at any `SearchConfig::search_threads`.
+//!
+//! A single-threaded pool skips the prefetch entirely: the reduction's
+//! demand path then computes exactly the tests a serial run would, in
+//! the same order, through the same code.
+
+use crate::cgra::Layout;
+use crate::dfg::Dfg;
+use crate::mapper::{MapOutcome, Mapping, MappingEngine};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Shared-read snapshot of the search state one branching step tests
+/// against (the read-only half of the old monolithic `SearchCtx` view;
+/// the per-worker scratch is the pool's forked engines).
+pub struct SharedState<'a> {
+    pub dfgs: &'a [Dfg],
+    /// Witness cache snapshot: fixed for the whole branching step, only
+    /// merged (by the reduction, in branching order) once a winner is
+    /// accepted.
+    pub witness: &'a [Option<Mapping>],
+    /// DFG indices each candidate must be checked against (OPSG's
+    /// selective testing passes the users of the removed group; GSG
+    /// passes every index).
+    pub affected: &'a [usize],
+}
+
+/// The outcome of feasibility-testing one candidate layout.
+pub struct CandidateTest {
+    pub feasible: bool,
+    /// Fresh mappings for the DFGs that needed re-mapping, in `affected`
+    /// order. Consumed as new witnesses only if this candidate wins.
+    pub witnesses: Vec<(usize, Mapping)>,
+    /// Which worker ran the test. Diagnostic only: it rides on
+    /// [`super::SearchEvent::LayoutTested`] but is stripped from wire
+    /// records and byte-compared traces (it legitimately varies with
+    /// thread count and timing).
+    pub worker: usize,
+}
+
+/// Pure candidate test: a DFG is feasible on `layout` if its witness is
+/// still valid there, or if the engine re-maps it (warm-started from the
+/// witness). Short-circuits on the first failing DFG, exactly like the
+/// serial loops did.
+fn test_candidate(
+    engine: &MappingEngine,
+    shared: &SharedState<'_>,
+    layout: &Layout,
+    worker: usize,
+) -> CandidateTest {
+    let mut witnesses = Vec::new();
+    for &di in shared.affected {
+        let dfg = &shared.dfgs[di];
+        let outcome = match &shared.witness[di] {
+            Some(w) if w.still_valid(dfg, layout) => continue,
+            Some(w) => engine.remap_from(w, dfg, layout),
+            None => engine.map(dfg, layout),
+        };
+        match outcome {
+            MapOutcome::Mapped { mapping, .. } => witnesses.push((di, mapping)),
+            MapOutcome::Failed { .. } => {
+                return CandidateTest { feasible: false, witnesses, worker };
+            }
+        }
+    }
+    CandidateTest { feasible: true, witnesses, worker }
+}
+
+/// The scoped worker pool of one search phase: `search_threads` forked
+/// engines plus the prefetch/reduce drivers. See the module docs for the
+/// determinism contract.
+pub struct TestPool {
+    engines: Vec<MappingEngine>,
+}
+
+impl TestPool {
+    /// Fork `threads` worker engines off the session's shared engine.
+    /// The forks disable the feasibility cache — see the module docs
+    /// (rule 1) for why caching here would break reproducibility.
+    pub fn for_search(engine: &MappingEngine, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let engines = (0..threads)
+            .map(|_| {
+                let mut e = engine.fork();
+                e.cfg.feasibility_cache = false;
+                e
+            })
+            .collect();
+        Self { engines }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Authoritative test on the reduction thread (the demand path; also
+    /// the only path a 1-thread pool ever takes).
+    pub fn test_one(&self, shared: &SharedState<'_>, layout: &Layout) -> CandidateTest {
+        test_candidate(&self.engines[0], shared, layout, 0)
+    }
+
+    /// Speculatively test `candidates` in parallel. Entries flagged
+    /// `true` are skipped (the caller knows their result cannot be
+    /// consumed — e.g. GSG's failChart-pruned pops). Workers pull
+    /// indices in branching order and stop testing past the lowest
+    /// feasible index seen so far: everything after the winner is
+    /// discarded by the reduction anyway, so racing past it is pure
+    /// waste. Returns one slot per candidate; `None` means "not tested
+    /// here" and the reduction recomputes it on demand if it turns out
+    /// to be needed.
+    pub fn prefetch(
+        &mut self,
+        shared: &SharedState<'_>,
+        candidates: &[(&Layout, bool)],
+    ) -> Vec<Option<CandidateTest>> {
+        let n = candidates.len();
+        let mut out: Vec<Option<CandidateTest>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let testable = candidates.iter().filter(|c| !c.1).count();
+        if self.engines.len() < 2 || testable < 2 {
+            return out; // nothing to gain: let the demand path run serially
+        }
+        let next = AtomicUsize::new(0);
+        let winner = AtomicUsize::new(usize::MAX);
+        let (tx, rx) = mpsc::channel::<(usize, CandidateTest)>();
+        std::thread::scope(|scope| {
+            for (w, engine) in self.engines.iter_mut().enumerate() {
+                let tx = tx.clone();
+                let (next, winner) = (&next, &winner);
+                scope.spawn(move || {
+                    let engine: &MappingEngine = engine;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let (layout, skip) = candidates[i];
+                        if skip || i > winner.load(Ordering::Relaxed) {
+                            continue;
+                        }
+                        let t = test_candidate(engine, shared, layout, w);
+                        if t.feasible {
+                            winner.fetch_min(i, Ordering::Relaxed);
+                        }
+                        if tx.send((i, t)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (i, t) in rx {
+                out[i] = Some(t);
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::dfg::benchmarks;
+    use crate::ops::OpGroup;
+
+    fn shared_fixture() -> (Vec<Dfg>, Layout, Vec<Option<Mapping>>, Vec<usize>) {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let full = Layout::full(Grid::new(7, 7), crate::dfg::groups_used(&dfgs));
+        let engine = MappingEngine::default();
+        let witness: Vec<Option<Mapping>> = engine
+            .map_all(&dfgs, &full)
+            .expect("SOB+GB map on 7x7")
+            .into_iter()
+            .map(Some)
+            .collect();
+        let affected: Vec<usize> = (0..dfgs.len()).collect();
+        (dfgs, full, witness, affected)
+    }
+
+    #[test]
+    fn pool_forks_cache_free_engines() {
+        let engine = MappingEngine::default();
+        assert!(engine.cfg.feasibility_cache);
+        let pool = TestPool::for_search(&engine, 4);
+        assert_eq!(pool.threads(), 4);
+        let zero = TestPool::for_search(&engine, 0);
+        assert_eq!(zero.threads(), 1, "a pool always has at least one engine");
+    }
+
+    #[test]
+    fn prefetch_agrees_with_demand_path() {
+        // every prefetched verdict (and witness placement) must equal
+        // what the reduction-thread demand path computes: the purity that
+        // the deterministic reduction relies on
+        let (dfgs, full, witness, affected) = shared_fixture();
+        let engine = MappingEngine::default();
+        let shared = SharedState { dfgs: &dfgs, witness: &witness, affected: &affected };
+        let candidates: Vec<Layout> = full
+            .grid
+            .compute_cells()
+            .take(8)
+            .map(|c| full.without_group(c, OpGroup::Arith))
+            .collect();
+        // purity: repeated demand-path tests are bit-identical
+        let mut pool = TestPool::for_search(&engine, 4);
+        for layout in &candidates {
+            let a = pool.test_one(&shared, layout);
+            let b = pool.test_one(&shared, layout);
+            assert_eq!(a.feasible, b.feasible);
+            assert_eq!(a.witnesses.len(), b.witnesses.len());
+            for ((di_a, m_a), (di_b, m_b)) in a.witnesses.iter().zip(&b.witnesses) {
+                assert_eq!(di_a, di_b);
+                assert_eq!(m_a.node_cell, m_b.node_cell);
+                assert_eq!(m_a.edge_paths, m_b.edge_paths);
+            }
+        }
+        // and the parallel prefetch returns the same verdicts
+        let items: Vec<(&Layout, bool)> = candidates.iter().map(|l| (l, false)).collect();
+        let prefetched = pool.prefetch(&shared, &items);
+        for (i, slot) in prefetched.iter().enumerate() {
+            if let Some(t) = slot {
+                let direct = pool.test_one(&shared, &candidates[i]);
+                assert_eq!(t.feasible, direct.feasible, "candidate {i}");
+                assert_eq!(t.witnesses.len(), direct.witnesses.len(), "candidate {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_skips_flagged_candidates() {
+        let (dfgs, full, witness, affected) = shared_fixture();
+        let engine = MappingEngine::default();
+        let shared = SharedState { dfgs: &dfgs, witness: &witness, affected: &affected };
+        let candidates: Vec<Layout> = full
+            .grid
+            .compute_cells()
+            .take(4)
+            .map(|c| full.without_group(c, OpGroup::Arith))
+            .collect();
+        let items: Vec<(&Layout, bool)> =
+            candidates.iter().enumerate().map(|(i, l)| (l, i % 2 == 0)).collect();
+        let mut pool = TestPool::for_search(&engine, 2);
+        let prefetched = pool.prefetch(&shared, &items);
+        for (i, slot) in prefetched.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(slot.is_none(), "flagged candidate {i} must not be tested");
+            }
+        }
+    }
+}

@@ -54,6 +54,12 @@ pub struct ServerConfig {
     pub addr: String,
     /// Job-executor threads (`0` = available parallelism).
     pub jobs: usize,
+    /// Default in-search candidate-testing threads applied to submitted
+    /// specs that did not set `search.search_threads` themselves (`0` =
+    /// available parallelism, clamped by the service so that
+    /// `jobs × search_threads` never oversubscribes the machine).
+    /// Results are byte-identical at any value.
+    pub search_threads: usize,
     /// Directory of the on-disk result store; `None` disables
     /// persistence.
     pub store_dir: Option<PathBuf>,
@@ -78,6 +84,7 @@ impl Default for ServerConfig {
         Self {
             addr: "127.0.0.1:7878".into(),
             jobs: 0,
+            search_threads: 0,
             store_dir: None,
             store_capacity: 4096,
             queue_cap: 64,
@@ -110,6 +117,8 @@ struct ServerCtx {
     started: Instant,
     read_timeout: Duration,
     max_body: usize,
+    /// Default `search_threads` for specs that left it at 0.
+    search_threads: usize,
     /// Live event-stream threads, bounded by [`MAX_EVENT_STREAMS`].
     active_streams: std::sync::atomic::AtomicUsize,
 }
@@ -176,6 +185,7 @@ impl Server {
             started: Instant::now(),
             read_timeout: cfg.read_timeout,
             max_body: cfg.max_body,
+            search_threads: cfg.search_threads,
             active_streams: std::sync::atomic::AtomicUsize::new(0),
         });
         Ok(Self { cfg, listener, ctx })
@@ -356,13 +366,18 @@ fn post_job(stream: &mut TcpStream, request: &Request, ctx: &ServerCtx) {
             return;
         }
     };
-    let spec = match wire::decode_spec(&parsed) {
+    let mut spec = match wire::decode_spec(&parsed) {
         Ok(spec) => spec,
         Err(e) => {
             let _ = http::write_error(stream, 400, "bad_spec", &e.to_string());
             return;
         }
     };
+    // serve-level default for the in-search thread knob; cannot change
+    // the result (or the fingerprint), only how fast it is computed
+    if spec.search.search_threads == 0 {
+        spec.search.search_threads = ctx.search_threads;
+    }
     let fingerprint = spec.fingerprint();
     match ctx.registry.submit(spec) {
         Ok(id) => {

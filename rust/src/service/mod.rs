@@ -24,6 +24,13 @@
 //!   function of the job's content, so results are reproducible
 //!   regardless of worker count or scheduling order — `--jobs 8` emits
 //!   byte-identical tables to `--jobs 1`;
+//! * jobs may additionally parallelize *inside* the search
+//!   (`SearchConfig::search_threads`, deterministic by construction —
+//!   see [`crate::search::parallel`]); the service clamps the nested
+//!   product `actively-running jobs × search_threads` to the machine's
+//!   cores (a lone job on an idle pool gets every core), and
+//!   `search_threads` is deliberately excluded from fingerprints so any
+//!   thread count shares one cache slot and one derived seed;
 //! * progress streams to the caller as [`ServiceEvent`]s (job
 //!   started/improved/finished), the multi-job analogue of the
 //!   `Explorer`'s per-session observer.
@@ -343,6 +350,10 @@ pub struct ExplorationService {
     computed: AtomicU64,
     mem_hits: AtomicU64,
     store_hits: AtomicU64,
+    /// Jobs currently executing a search (not cache waits): the live
+    /// divisor of the nested-parallelism budget, so a lone job on an
+    /// idle pool still gets the whole machine for in-search threads.
+    active_jobs: AtomicUsize,
 }
 
 impl Default for ExplorationService {
@@ -362,6 +373,7 @@ impl ExplorationService {
             computed: AtomicU64::new(0),
             mem_hits: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
+            active_jobs: AtomicUsize::new(0),
         }
     }
 
@@ -542,7 +554,12 @@ impl ExplorationService {
             }
             computed_here.set(true);
             self.computed.fetch_add(1, Ordering::Relaxed);
-            let job = run_spec(id, spec, live, sink.clone());
+            // nested-parallelism budget divides the machine by the jobs
+            // *actually running right now* (guard keeps the counter
+            // accurate even if the search panics and poisons the slot)
+            let running = self.active_jobs.fetch_add(1, Ordering::Relaxed) + 1;
+            let _active = ActiveJobGuard(&self.active_jobs);
+            let job = run_spec(id, spec, live, sink.clone(), running);
             if let Some(store) = &self.store {
                 if let Err(e) = store.put(fingerprint, &job) {
                     eprintln!(
@@ -578,20 +595,53 @@ impl ExplorationService {
     }
 }
 
+/// Decrements the service's active-job counter when the job finishes
+/// (or unwinds).
+struct ActiveJobGuard<'a>(&'a AtomicUsize);
+
+impl Drop for ActiveJobGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Per-job in-search worker budget: the spec's `search_threads` request
+/// (`0` = all cores) clamped so that `concurrent_jobs × search_threads`
+/// cannot oversubscribe the machine. `concurrent_jobs` is the number of
+/// jobs *actively running* at launch time — not the pool width — so a
+/// single submit to an idle `helex serve` still fans its search across
+/// the whole machine. Purely a scheduling decision — the deterministic
+/// reduction makes results identical at any thread count, which is also
+/// why the clamp may depend on the local core count (and on load timing)
+/// without breaking cross-machine reproducibility.
+fn nested_search_threads(requested: &SearchConfig, concurrent_jobs: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let per_job = (cores / concurrent_jobs.max(1)).max(1);
+    requested.search_threads_resolved().min(per_job)
+}
+
 /// Execute one spec on the calling thread: a per-job [`MappingEngine`]
 /// (its feasibility cache stays thread-local and lock-free) seeded with
 /// the spec's derived seed, a per-job event channel owned by the session
 /// observer, and the objective's cost model. `sink`, when present,
 /// receives every event as it happens (the HTTP server's live stream).
+/// `concurrent_jobs` is the number of jobs running at this moment
+/// (including this one); it bounds the job's own `search_threads`.
 fn run_spec(
     id: JobId,
     spec: &JobSpec,
     live: Option<&mpsc::Sender<WorkerMsg>>,
     sink: Option<Arc<dyn EventSink>>,
+    concurrent_jobs: usize,
 ) -> CachedJob {
     let engine =
         MappingEngine::new(MapperConfig { seed: spec.derived_seed(), ..spec.mapper.clone() });
     let cost = spec.objective.cost_model();
+    // nested-parallelism budget: jobs × search_threads ≤ cores
+    let search = SearchConfig {
+        search_threads: nested_search_threads(&spec.search, concurrent_jobs),
+        ..spec.search.clone()
+    };
     // per-job event channel: the session owns the sender half (an owned
     // observer closure), the receiver drains into the result's trace —
     // and improvements stream live to the service progress channel
@@ -615,7 +665,7 @@ fn run_spec(
         .dfgs(&spec.dfgs)
         .engine(&engine)
         .cost(&cost)
-        .config(spec.search.clone())
+        .config(search)
         .observer_owned(Box::new(observer))
         .run();
     // the observer (and with it the sender) dropped when `run` returned,
@@ -670,6 +720,35 @@ mod tests {
         b = tiny_spec("x", (6, 6));
         b.dfgs.push(benchmarks::benchmark("GB"));
         assert_ne!(a.fingerprint(), b.fingerprint(), "DFG-set change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.search.search_threads = 8;
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "search_threads is an execution knob: any thread count computes the same \
+             result and must share one cache slot and one derived seed"
+        );
+    }
+
+    #[test]
+    fn nested_search_threads_clamp() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let req = |n: usize| SearchConfig { search_threads: n, ..Default::default() };
+        // an explicit request is honoured up to the per-job share
+        assert_eq!(nested_search_threads(&req(1), 1), 1);
+        assert_eq!(nested_search_threads(&req(2), 1), 2.min(cores));
+        // as many concurrent jobs as cores: one in-search thread each
+        assert_eq!(nested_search_threads(&req(4), cores), 1);
+        assert_eq!(nested_search_threads(&req(0), cores), 1);
+        // a single job may use the whole machine when asked for auto
+        assert_eq!(nested_search_threads(&req(0), 1), cores);
+        // the product never exceeds the machine
+        for jobs in [1usize, 2, 3, 8] {
+            let t = nested_search_threads(&req(0), jobs);
+            assert!(t >= 1);
+            assert!(t * jobs <= cores.max(jobs), "jobs={jobs} t={t} cores={cores}");
+        }
     }
 
     #[test]

@@ -242,6 +242,7 @@ fn encode_search_config(cfg: &SearchConfig) -> Json {
         ("gsg_stale_prune_after", Json::U64(cfg.gsg_stale_prune_after as u64)),
         ("use_heatmap", Json::Bool(cfg.use_heatmap)),
         ("opsg_skip_arith", Json::Bool(cfg.opsg_skip_arith)),
+        ("search_threads", Json::U64(cfg.search_threads as u64)),
     ])
 }
 
@@ -254,6 +255,13 @@ fn decode_search_config(j: &Json) -> Result<SearchConfig> {
         gsg_stale_prune_after: get_usize(j, "gsg_stale_prune_after")?,
         use_heatmap: get_bool(j, "use_heatmap")?,
         opsg_skip_arith: get_bool(j, "opsg_skip_arith")?,
+        // an execution hint, not result-relevant: absent in records
+        // written before parallel search (0 = available parallelism,
+        // clamped by the service's nested-parallelism budget)
+        search_threads: match j.get("search_threads") {
+            Some(_) => get_usize(j, "search_threads")?,
+            None => 0,
+        },
     })
 }
 
@@ -537,11 +545,12 @@ pub fn encode_event(event: &SearchEvent) -> Json {
             ("phase", Json::str(phase)),
             ("incumbent_cost", Json::F64(*incumbent_cost)),
         ]),
-        SearchEvent::LayoutTested { feasible, cost, tested } => Json::obj(vec![
+        SearchEvent::LayoutTested { feasible, cost, tested, worker } => Json::obj(vec![
             ("type", Json::str("layout_tested")),
             ("feasible", Json::Bool(*feasible)),
             ("cost", Json::F64(*cost)),
             ("tested", Json::U64(*tested as u64)),
+            ("worker", Json::U64(*worker as u64)),
         ]),
         SearchEvent::Improved { best_cost, tested, secs } => Json::obj(vec![
             ("type", Json::str("improved")),
@@ -568,6 +577,11 @@ pub fn decode_event(j: &Json) -> Result<SearchEvent> {
             feasible: get_bool(j, "feasible")?,
             cost: get_f64(j, "cost")?,
             tested: get_usize(j, "tested")?,
+            // absent in pre-parallel records (and in stripped traces)
+            worker: match j.get("worker") {
+                Some(_) => get_usize(j, "worker")?,
+                None => 0,
+            },
         }),
         "improved" => Ok(SearchEvent::Improved {
             best_cost: get_f64(j, "best_cost")?,
@@ -632,16 +646,20 @@ pub fn decode_result(j: &Json) -> Result<JobResult> {
 
 /// Normalization for byte-comparing two encodings of "the same" job:
 /// recursively drops the fields that legitimately differ between two
-/// executions of one spec — ids, cache provenance and every wall-clock
+/// executions of one spec — ids, cache provenance, every wall-clock
 /// reading (`wall_secs`, and the `secs` fields of phase timings, trace
-/// points and events). Everything that survives is part of the
-/// determinism contract.
+/// points and events), and the `worker` tag on tested-layout events
+/// (which worker ran a test varies with `search_threads` and timing;
+/// the *order* and content of the events do not). Everything that
+/// survives is part of the determinism contract.
 pub fn strip_volatile(j: &Json) -> Json {
     match j {
         Json::Obj(pairs) => Json::Obj(
             pairs
                 .iter()
-                .filter(|(k, _)| !matches!(k.as_str(), "id" | "from_cache" | "wall_secs" | "secs"))
+                .filter(|(k, _)| {
+                    !matches!(k.as_str(), "id" | "from_cache" | "wall_secs" | "secs" | "worker")
+                })
                 .map(|(k, v)| (k.clone(), strip_volatile(v)))
                 .collect(),
         ),
@@ -773,7 +791,24 @@ mod tests {
         let b = strip_volatile(&encode_result(&second)).to_string();
         assert_eq!(a, b, "stripped encodings of one spec must be byte-identical");
         assert!(!a.contains("wall_secs"));
+        assert!(!a.contains("\"worker\""), "worker tags are volatile");
         assert!(a.contains("best_cost"), "non-volatile fields survive");
+    }
+
+    #[test]
+    fn layout_tested_event_roundtrips_with_worker_tag() {
+        let ev = SearchEvent::LayoutTested { feasible: true, cost: 12.5, tested: 7, worker: 3 };
+        let j = encode_event(&ev);
+        assert_eq!(decode_event(&j).unwrap(), ev);
+        // records written before parallel search carry no worker tag
+        let legacy = json::parse(
+            r#"{"type":"layout_tested","feasible":false,"cost":1.0,"tested":2}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            decode_event(&legacy).unwrap(),
+            SearchEvent::LayoutTested { feasible: false, cost: 1.0, tested: 2, worker: 0 }
+        );
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! | `search.gsg_passes` | int | `gsg_passes` |
 //! | `search.use_heatmap` | bool | `use_heatmap` |
 //! | `search.opsg_skip_arith` | bool | `opsg_skip_arith` (Section IV-G noGSG variant) |
+//! | `search.threads` | int | `search_threads` (in-search candidate-testing threads; 0 = available parallelism; results are byte-identical at any value) |
 //! | `runtime.use_xla_scorer` | bool | `use_xla_scorer` |
 //! | `mapper.route_iters` | int | `mapper.route_iters` |
 //! | `mapper.placement_attempts` | int | `mapper.placement_attempts` |

@@ -1,7 +1,9 @@
 //! Integration tests for the `Explorer` session API: builder defaults
 //! and validation, observer event-stream invariants, custom phase
-//! pipelines, engine sharing, and parity with the legacy `search::run`
-//! and `.mapper(..)` compatibility surfaces.
+//! pipelines, engine sharing, parity with the legacy `search::run`
+//! and `.mapper(..)` compatibility surfaces, and the deterministic
+//! parallel-search contract (`search_threads` can never change a
+//! result).
 
 use helex::cgra::{Grid, Layout};
 use helex::cost::CostModel;
@@ -237,4 +239,125 @@ fn custom_phase_pipeline_plugs_in() {
     let names: Vec<&str> =
         full.stats.phase_secs.iter().map(|(n, _)| n.as_str()).collect();
     assert_eq!(names, vec![HeatmapPhase::NAME, OpsgPhase::NAME, GsgPhase::NAME, "null"]);
+}
+
+/// Everything result-relevant about one session, with the volatile
+/// fields (wall clocks, worker tags) normalized away. Two runs of the
+/// same spec must produce *equal* summaries at any thread count.
+#[derive(Debug, Clone, PartialEq)]
+struct RunSummary {
+    outcome: Result<(), String>,
+    best_cost_bits: u64,
+    best_layout: Option<Layout>,
+    tested: usize,
+    expanded: usize,
+    node_cells: Vec<Vec<helex::cgra::CellId>>,
+    trace: Vec<(String, usize, u64)>,
+    events: Vec<SearchEvent>,
+}
+
+fn normalize_event(ev: &SearchEvent) -> SearchEvent {
+    match ev {
+        SearchEvent::Improved { best_cost, tested, .. } => {
+            SearchEvent::Improved { best_cost: *best_cost, tested: *tested, secs: 0.0 }
+        }
+        SearchEvent::PhaseFinished { phase, best_cost, .. } => {
+            SearchEvent::PhaseFinished { phase: phase.clone(), secs: 0.0, best_cost: *best_cost }
+        }
+        SearchEvent::LayoutTested { feasible, cost, tested, .. } => SearchEvent::LayoutTested {
+            feasible: *feasible,
+            cost: *cost,
+            tested: *tested,
+            worker: 0,
+        },
+        other => other.clone(),
+    }
+}
+
+fn run_summary(dfgs: &[helex::Dfg], grid: Grid, cfg: SearchConfig) -> RunSummary {
+    let engine = MappingEngine::default();
+    let cost = CostModel::area();
+    let mut events: Vec<SearchEvent> = Vec::new();
+    let run = {
+        let events = &mut events;
+        let mut obs = move |ev: &SearchEvent| events.push(normalize_event(ev));
+        Explorer::new(grid)
+            .dfgs(dfgs)
+            .engine(&engine)
+            .cost(&cost)
+            .config(cfg)
+            .observer(&mut obs)
+            .run()
+    };
+    match run {
+        Ok(r) => RunSummary {
+            outcome: Ok(()),
+            best_cost_bits: r.best_cost.to_bits(),
+            best_layout: Some(r.best_layout),
+            tested: r.stats.tested,
+            expanded: r.stats.expanded,
+            node_cells: r.final_mappings.iter().map(|m| m.node_cell.clone()).collect(),
+            trace: r
+                .stats
+                .trace
+                .iter()
+                .map(|t| (t.phase.clone(), t.tested, t.best_cost.to_bits()))
+                .collect(),
+            events,
+        },
+        Err(e) => RunSummary {
+            outcome: Err(e.to_string()),
+            best_cost_bits: 0,
+            best_layout: None,
+            tested: 0,
+            expanded: 0,
+            node_cells: Vec::new(),
+            trace: Vec::new(),
+            events,
+        },
+    }
+}
+
+#[test]
+fn search_thread_count_never_changes_results() {
+    // the deterministic-reduction contract, as a property over random
+    // specs: N ∈ {1,2,4} search threads produce identical layouts,
+    // costs, counters, final mappings, and (normalized) event traces —
+    // including identical *infeasibility*. Mirrors CI's
+    // search-determinism job at unit scale.
+    let pool = ["SOB", "GB", "BOX", "GAR"];
+    helex::util::prop::forall("search-threads-parity", 4, 0xC0FFEE, |g| {
+        let k = 1 + g.rng.below(2);
+        let mut dfgs = Vec::new();
+        for _ in 0..k {
+            dfgs.push(benchmarks::benchmark(pool[g.rng.below(pool.len())]));
+        }
+        let side = 6 + (g.size % 3); // 6..=8
+        let grid = Grid::new(side, side);
+        let cfg = SearchConfig {
+            l_test: 40 + g.rng.below(40),
+            l_fail: 2,
+            gsg_passes: 1,
+            ..Default::default()
+        };
+        let baseline = run_summary(&dfgs, grid, SearchConfig { search_threads: 1, ..cfg.clone() });
+        for threads in [2usize, 4] {
+            let other =
+                run_summary(&dfgs, grid, SearchConfig { search_threads: threads, ..cfg.clone() });
+            if baseline != other {
+                return Err(format!(
+                    "threads=1 vs threads={threads} diverged on {:?} @ {side}x{side}: \
+                     base tested={} events={} outcome={:?}; other tested={} events={} outcome={:?}",
+                    dfgs.iter().map(|d| d.name.clone()).collect::<Vec<_>>(),
+                    baseline.tested,
+                    baseline.events.len(),
+                    baseline.outcome,
+                    other.tested,
+                    other.events.len(),
+                    other.outcome,
+                ));
+            }
+        }
+        Ok(())
+    });
 }
