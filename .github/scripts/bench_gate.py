@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Gate the search perf record against the committed baseline.
 
-Usage: bench_gate.py BENCH_search.json BENCH_search.baseline.json
+Usage: bench_gate.py [--refresh] BENCH_search.json BENCH_search.baseline.json
 
 Two checks, stdlib only:
 
@@ -10,9 +10,15 @@ Two checks, stdlib only:
    the deterministic parallel search must actually pay for itself.
 2. Unless the baseline is marked `"provisional": true`, the tracked
    medians (`layouts_per_sec` at 1t and 4t) must not regress more than
-   MAX_REGRESSION vs the baseline. Refresh the baseline by committing a
-   bench-track run's BENCH_search.json as BENCH_search.baseline.json
-   (without the provisional flag).
+   MAX_REGRESSION vs the baseline.
+
+`--refresh` adopts the current run's medians as the committed baseline —
+but ONLY when the existing baseline is missing or provisional (a real
+baseline is never silently moved; refresh that by deliberately
+committing a bench-track run's BENCH_search.json as
+BENCH_search.baseline.json). The bench-track CI job runs this after the
+gate and pushes the file back, so the first run on the tracking
+hardware seeds real medians and every later run is gated against them.
 """
 
 import json
@@ -22,8 +28,37 @@ MIN_SPEEDUP = 1.5
 MAX_REGRESSION = 0.20
 
 
+def refresh(current_path: str, baseline_path: str) -> int:
+    with open(current_path) as f:
+        cur = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        base = None
+    if base is not None and not base.get("provisional"):
+        print(f"baseline {baseline_path} already holds real medians; not touching it")
+        return 0
+    cur.pop("provisional", None)
+    cur["note"] = (
+        "Adopted by the bench-track CI job from its first measured run on the "
+        "tracking hardware (bench_gate.py --refresh). The >20% regression gate "
+        "bites against these medians; refresh deliberately by committing a newer "
+        "BENCH_search.json over this file."
+    )
+    with open(baseline_path, "w") as f:
+        json.dump(cur, f)
+        f.write("\n")
+    print(f"adopted {current_path} medians as {baseline_path}:")
+    print(f"  layouts_per_sec = {cur['layouts_per_sec']}")
+    return 0
+
+
 def main() -> int:
-    current_path, baseline_path = sys.argv[1], sys.argv[2]
+    argv = [a for a in sys.argv[1:] if a != "--refresh"]
+    if "--refresh" in sys.argv[1:]:
+        return refresh(argv[0], argv[1])
+    current_path, baseline_path = argv[0], argv[1]
     with open(current_path) as f:
         cur = json.load(f)
 

@@ -1,0 +1,569 @@
+//! The fleet's dispatch core: a priority queue of fingerprint-distinct
+//! tasks, fanned out to replicas by a small worker pool.
+//!
+//! The design transplants the `ShardedRunCache` slot discipline
+//! (`service::cache`) to fleet scope. Every admitted job maps to a
+//! [`RunSlot`] keyed by its content fingerprint; the *first* submission
+//! of a fingerprint (the primary) enqueues a [`Task`], later ones share
+//! the existing slot and wait on its condvar. One fingerprint is
+//! therefore dispatched at most once fleet-wide no matter how many
+//! batches carry it — the distributed analogue of the in-process
+//! `get_or_compute` dedup.
+//!
+//! Execution order is priority-then-FIFO: a max-heap pops the highest
+//! priority first, sequence numbers break ties so equal-priority work
+//! keeps submission order. Before dispatching, a worker consults the
+//! shared [`ResultStore`] — a fingerprint already persisted (by this
+//! coordinator or a previous run) resolves without touching a replica.
+//! Fresh results are written back to the store, so replicas' work
+//! accumulates into the shared tier.
+//!
+//! Failure policy: a task is only ever *moved*, never dropped. If the
+//! replica running it dies (connect refused, read timeout, poll error),
+//! the worker releases the replica slot with a failure mark and retries
+//! the task on whichever healthy replica `ReplicaPool::acquire` offers
+//! next. Determinism (seeds derived from the fingerprint) makes the
+//! re-execution byte-identical, so requeue needs no coordination beyond
+//! the slot itself.
+
+use super::replica::ReplicaPool;
+use crate::server::client::{self, RetryPolicy};
+use crate::service::cache::CachedJob;
+use crate::service::JobSpec;
+use crate::store::ResultStore;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Where a resolved run came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Origin {
+    /// A replica computed it during this batch.
+    Computed,
+    /// The shared store already had it.
+    StoreHit,
+}
+
+/// A resolved run: the cached payload plus provenance.
+#[derive(Debug, Clone)]
+pub struct DoneRun {
+    pub job: CachedJob,
+    pub origin: Origin,
+    /// Seconds from dequeue to resolution at the coordinator.
+    pub wall_secs: f64,
+}
+
+/// Lifecycle of one fingerprint's run.
+#[derive(Debug)]
+enum RunState {
+    Pending,
+    Dispatched,
+    Done(DoneRun),
+}
+
+/// Poll-visible status of a slot.
+#[derive(Debug, Clone)]
+pub enum SlotStatus {
+    Queued,
+    Running,
+    Done(DoneRun),
+}
+
+impl SlotStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlotStatus::Queued => "queued",
+            SlotStatus::Running => "running",
+            SlotStatus::Done(_) => "done",
+        }
+    }
+}
+
+/// One fingerprint's rendezvous point: every job sharing the
+/// fingerprint polls or waits here; the dispatch worker fills it once.
+pub struct RunSlot {
+    state: Mutex<RunState>,
+    done: Condvar,
+}
+
+impl RunSlot {
+    fn new() -> Self {
+        Self { state: Mutex::new(RunState::Pending), done: Condvar::new() }
+    }
+
+    pub fn status(&self) -> SlotStatus {
+        match &*self.state.lock().unwrap() {
+            RunState::Pending => SlotStatus::Queued,
+            RunState::Dispatched => SlotStatus::Running,
+            RunState::Done(run) => SlotStatus::Done(run.clone()),
+        }
+    }
+
+    /// Block until the slot resolves or `timeout` passes.
+    pub fn wait_done(&self, timeout: Duration) -> Option<DoneRun> {
+        let deadline = Instant::now() + timeout;
+        let mut state = self.state.lock().unwrap();
+        loop {
+            if let RunState::Done(run) = &*state {
+                return Some(run.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.done.wait_timeout(state, deadline - now).unwrap();
+            state = guard;
+        }
+    }
+
+    fn mark_dispatched(&self) {
+        let mut state = self.state.lock().unwrap();
+        if matches!(*state, RunState::Pending) {
+            *state = RunState::Dispatched;
+        }
+    }
+
+    fn mark_pending(&self) {
+        // requeue path: the task went back on the heap
+        let mut state = self.state.lock().unwrap();
+        if matches!(*state, RunState::Dispatched) {
+            *state = RunState::Pending;
+        }
+    }
+
+    fn fill(&self, run: DoneRun) {
+        *self.state.lock().unwrap() = RunState::Done(run);
+        self.done.notify_all();
+    }
+}
+
+/// A queued unit of work: one fingerprint's primary submission.
+struct Task {
+    priority: u8,
+    seq: u64,
+    fp: u64,
+    spec: JobSpec,
+}
+
+// JobSpec holds f64s (mapper parameters), so ordering is defined
+// manually over (priority, seq) alone: max-heap pops the highest
+// priority; within a priority, the earliest sequence number wins.
+impl PartialEq for Task {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Task {}
+impl Ord for Task {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Task {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct Queue {
+    heap: BinaryHeap<Task>,
+    /// fingerprint → slot; entries outlive resolution so late duplicates
+    /// of a finished fingerprint resolve instantly.
+    slots: HashMap<u64, Arc<RunSlot>>,
+    next_seq: u64,
+    draining: bool,
+    stopping: bool,
+}
+
+/// Why an admission was refused (distinct from quota refusals, which
+/// the HTTP layer handles before reaching the dispatcher).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    QueueFull { capacity: usize },
+    Draining,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { capacity } => {
+                write!(f, "dispatch queue is full (capacity {capacity})")
+            }
+            AdmitError::Draining => write!(f, "coordinator is draining"),
+        }
+    }
+}
+
+/// One admitted job's handle: its fingerprint, the shared slot, and
+/// whether this submission is the one that enqueued the work.
+pub struct Admitted {
+    pub fp: u64,
+    pub slot: Arc<RunSlot>,
+    pub primary: bool,
+}
+
+/// Counters for `/v1/stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// Distinct fingerprints ever admitted.
+    pub distinct: u64,
+    /// Slots resolved by replica computation.
+    pub computed: u64,
+    /// Slots resolved from the shared store.
+    pub store_hits: u64,
+    /// Admissions that joined an existing slot instead of enqueueing.
+    pub dedup_hits: u64,
+    /// Tasks put back after a replica failure.
+    pub requeues: u64,
+    /// Tasks currently waiting in the priority queue.
+    pub queued: u64,
+    /// Tasks currently dispatched to a replica (or store lookup).
+    pub running: u64,
+}
+
+pub struct Dispatcher {
+    queue: Mutex<Queue>,
+    work: Condvar,
+    pool: Arc<ReplicaPool>,
+    store: Option<Arc<ResultStore>>,
+    retry: RetryPolicy,
+    queue_cap: usize,
+    poll_interval: Duration,
+    max_polls: usize,
+    distinct: AtomicU64,
+    computed: AtomicU64,
+    store_hits: AtomicU64,
+    dedup_hits: AtomicU64,
+    requeues: AtomicU64,
+    running: AtomicU64,
+    admitted: AtomicU64,
+    resolved: AtomicU64,
+    /// Bumped on every resolution; batch aggregators and `drain` wait on
+    /// it instead of polling slots.
+    progress: Mutex<u64>,
+    progressed: Condvar,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl Dispatcher {
+    /// Start `worker_count` dispatch workers over `pool`. `queue_cap`
+    /// bounds *pending distinct* tasks (slots for finished work are
+    /// retained and don't count).
+    pub fn start(
+        pool: Arc<ReplicaPool>,
+        store: Option<Arc<ResultStore>>,
+        retry: RetryPolicy,
+        queue_cap: usize,
+        worker_count: usize,
+    ) -> Arc<Self> {
+        let dispatcher = Arc::new(Self {
+            queue: Mutex::new(Queue {
+                heap: BinaryHeap::new(),
+                slots: HashMap::new(),
+                next_seq: 0,
+                draining: false,
+                stopping: false,
+            }),
+            work: Condvar::new(),
+            pool,
+            store,
+            retry,
+            queue_cap: queue_cap.max(1),
+            poll_interval: Duration::from_millis(100),
+            max_polls: 36_000, // 1h of polling per dispatch attempt
+            distinct: AtomicU64::new(0),
+            computed: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            requeues: AtomicU64::new(0),
+            running: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            resolved: AtomicU64::new(0),
+            progress: Mutex::new(0),
+            progressed: Condvar::new(),
+            workers: Mutex::new(Vec::new()),
+        });
+        let mut workers = dispatcher.workers.lock().unwrap();
+        for i in 0..worker_count.max(1) {
+            let worker = Arc::clone(&dispatcher);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("fleet-dispatch-{i}"))
+                    .spawn(move || worker.worker_loop())
+                    .expect("spawn dispatch worker"),
+            );
+        }
+        drop(workers);
+        dispatcher
+    }
+
+    /// Admit a submission (single job or whole batch) atomically:
+    /// either every job gets a slot or none does. Jobs whose
+    /// fingerprint is already known join the existing slot; the rest
+    /// enqueue, provided the pending queue has room for *all* of them.
+    pub fn admit(&self, jobs: &[(JobSpec, u8)]) -> Result<Vec<Admitted>, AdmitError> {
+        let mut queue = self.queue.lock().unwrap();
+        if queue.draining || queue.stopping {
+            return Err(AdmitError::Draining);
+        }
+        let mut fresh: Vec<u64> = Vec::new();
+        for (spec, _) in jobs {
+            let fp = spec.fingerprint();
+            if !queue.slots.contains_key(&fp) && !fresh.contains(&fp) {
+                fresh.push(fp);
+            }
+        }
+        if queue.heap.len() + fresh.len() > self.queue_cap {
+            return Err(AdmitError::QueueFull { capacity: self.queue_cap });
+        }
+        let mut out = Vec::with_capacity(jobs.len());
+        for (spec, priority) in jobs {
+            let fp = spec.fingerprint();
+            if let Some(slot) = queue.slots.get(&fp) {
+                self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+                out.push(Admitted { fp, slot: Arc::clone(slot), primary: false });
+                continue;
+            }
+            let slot = Arc::new(RunSlot::new());
+            queue.slots.insert(fp, Arc::clone(&slot));
+            let seq = queue.next_seq;
+            queue.next_seq += 1;
+            queue.heap.push(Task { priority: *priority, seq, fp, spec: spec.clone() });
+            self.distinct.fetch_add(1, Ordering::Relaxed);
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            out.push(Admitted { fp, slot, primary: true });
+        }
+        drop(queue);
+        self.work.notify_all();
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> DispatchStats {
+        let queued = self.queue.lock().unwrap().heap.len() as u64;
+        DispatchStats {
+            distinct: self.distinct.load(Ordering::Relaxed),
+            computed: self.computed.load(Ordering::Relaxed),
+            store_hits: self.store_hits.load(Ordering::Relaxed),
+            dedup_hits: self.dedup_hits.load(Ordering::Relaxed),
+            requeues: self.requeues.load(Ordering::Relaxed),
+            queued,
+            running: self.running.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn draining(&self) -> bool {
+        self.queue.lock().unwrap().draining
+    }
+
+    /// Current progress tick; pair with
+    /// [`wait_progress`](Dispatcher::wait_progress).
+    pub fn progress_tick(&self) -> u64 {
+        *self.progress.lock().unwrap()
+    }
+
+    /// Block until the tick advances past `last` or `timeout` passes;
+    /// returns the current tick either way.
+    pub fn wait_progress(&self, last: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut tick = self.progress.lock().unwrap();
+        while *tick <= last {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.progressed.wait_timeout(tick, deadline - now).unwrap();
+            tick = guard;
+        }
+        *tick
+    }
+
+    /// Stop admissions, wait for every admitted task to resolve, then
+    /// stop the workers and the replica pool. Nothing queued is lost:
+    /// drain *finishes* the queue rather than discarding it.
+    pub fn drain(&self) {
+        self.queue.lock().unwrap().draining = true;
+        let mut tick = self.progress_tick();
+        while self.resolved.load(Ordering::SeqCst) < self.admitted.load(Ordering::SeqCst) {
+            tick = self.wait_progress(tick, Duration::from_millis(500));
+        }
+        self.queue.lock().unwrap().stopping = true;
+        self.work.notify_all();
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for handle in workers {
+            let _ = handle.join();
+        }
+        self.pool.shutdown();
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let task = {
+                let mut queue = self.queue.lock().unwrap();
+                loop {
+                    if let Some(task) = queue.heap.pop() {
+                        break task;
+                    }
+                    if queue.stopping {
+                        return;
+                    }
+                    let (guard, _) =
+                        self.work.wait_timeout(queue, Duration::from_millis(200)).unwrap();
+                    queue = guard;
+                }
+            };
+            let slot = {
+                let queue = self.queue.lock().unwrap();
+                Arc::clone(queue.slots.get(&task.fp).expect("queued task has a slot"))
+            };
+            self.running.fetch_add(1, Ordering::Relaxed);
+            slot.mark_dispatched();
+            let started = Instant::now();
+
+            // shared tier first: a fingerprint anyone ever computed
+            // against this store resolves without touching a replica
+            if let Some(store) = &self.store {
+                if let Some(job) = store.get(task.fp) {
+                    self.store_hits.fetch_add(1, Ordering::Relaxed);
+                    self.complete(
+                        &slot,
+                        DoneRun {
+                            job,
+                            origin: Origin::StoreHit,
+                            wall_secs: started.elapsed().as_secs_f64(),
+                        },
+                    );
+                    continue;
+                }
+            }
+
+            // compute on a replica; a failed replica just moves the task
+            loop {
+                let Some(addr) = self.pool.acquire() else {
+                    // pool shut down with the task un-run (only on abrupt
+                    // teardown): put it back so a later drain can see it
+                    slot.mark_pending();
+                    self.running.fetch_sub(1, Ordering::Relaxed);
+                    self.requeues.fetch_add(1, Ordering::Relaxed);
+                    let mut queue = self.queue.lock().unwrap();
+                    queue.heap.push(task);
+                    return;
+                };
+                match self.run_on(&addr, &task.spec) {
+                    Ok(job) => {
+                        self.pool.release(&addr, true);
+                        if let Some(store) = &self.store {
+                            if let Err(e) = store.put(task.fp, &job) {
+                                eprintln!(
+                                    "fleet: store write for {:016x} failed: {e}",
+                                    task.fp
+                                );
+                            }
+                        }
+                        self.computed.fetch_add(1, Ordering::Relaxed);
+                        self.complete(
+                            &slot,
+                            DoneRun {
+                                job,
+                                origin: Origin::Computed,
+                                wall_secs: started.elapsed().as_secs_f64(),
+                            },
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        self.pool.release(&addr, false);
+                        self.requeues.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "fleet: job {:016x} on {addr} failed ({e}); requeueing",
+                            task.fp
+                        );
+                        thread::sleep(Duration::from_millis(200));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one spec on one replica end-to-end: submit (with the
+    /// transport retry policy), then poll to completion.
+    fn run_on(&self, addr: &str, spec: &JobSpec) -> anyhow::Result<CachedJob> {
+        let id = client::submit_spec_retry(addr, spec, &self.retry)?;
+        let result = client::wait_result(addr, id, self.poll_interval, self.max_polls)?;
+        Ok(CachedJob { outcome: result.outcome, events: result.events })
+    }
+
+    fn complete(&self, slot: &RunSlot, run: DoneRun) {
+        slot.fill(run);
+        self.running.fetch_sub(1, Ordering::Relaxed);
+        self.resolved.fetch_add(1, Ordering::SeqCst);
+        let mut tick = self.progress.lock().unwrap();
+        *tick += 1;
+        self.progressed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(priority: u8, seq: u64) -> Task {
+        let spec = JobSpec::new("t", vec![], crate::cgra::Grid::new(5, 5));
+        Task { priority, seq, fp: seq, spec }
+    }
+
+    #[test]
+    fn heap_pops_priority_then_fifo() {
+        let mut heap = BinaryHeap::new();
+        heap.push(task(5, 0));
+        heap.push(task(9, 1));
+        heap.push(task(5, 2));
+        heap.push(task(1, 3));
+        heap.push(task(9, 4));
+        let order: Vec<(u8, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|t| (t.priority, t.seq))
+            .collect();
+        assert_eq!(
+            order,
+            vec![(9, 1), (9, 4), (5, 0), (5, 2), (1, 3)],
+            "highest priority first; FIFO within a priority"
+        );
+    }
+
+    #[test]
+    fn run_slot_statuses_and_wait() {
+        let slot = Arc::new(RunSlot::new());
+        assert_eq!(slot.status().name(), "queued");
+        slot.mark_dispatched();
+        assert_eq!(slot.status().name(), "running");
+        assert!(slot.wait_done(Duration::from_millis(20)).is_none(), "not done yet");
+        let waiter = {
+            let slot = Arc::clone(&slot);
+            thread::spawn(move || slot.wait_done(Duration::from_secs(5)))
+        };
+        let job = CachedJob {
+            outcome: crate::service::JobOutcome::Infeasible("test".into()),
+            events: vec![],
+        };
+        slot.fill(DoneRun { job, origin: Origin::Computed, wall_secs: 0.5 });
+        let run = waiter.join().unwrap().expect("fill wakes the waiter");
+        assert_eq!(run.origin, Origin::Computed);
+        assert_eq!(slot.status().name(), "done");
+    }
+
+    #[test]
+    fn mark_pending_only_reverts_dispatched() {
+        let slot = RunSlot::new();
+        slot.mark_dispatched();
+        slot.mark_pending();
+        assert_eq!(slot.status().name(), "queued");
+        let job = CachedJob {
+            outcome: crate::service::JobOutcome::Infeasible("test".into()),
+            events: vec![],
+        };
+        slot.fill(DoneRun { job, origin: Origin::StoreHit, wall_secs: 0.0 });
+        slot.mark_pending(); // must not clobber a resolved slot
+        assert_eq!(slot.status().name(), "done");
+    }
+}

@@ -1,0 +1,939 @@
+//! `helex fleet`: a multi-node coordinator over N `helex serve` replicas.
+//!
+//! One coordinator process speaks the same `/v1/jobs` wire format as a
+//! single replica — `helex submit` and `server::client` work against
+//! either, unchanged — and adds what only a fleet needs:
+//!
+//! | route | |
+//! |---|---|
+//! | `POST /v1/jobs` | one [`crate::service::JobSpec`] (+ optional `"client"`, `"priority"`); `202 {"id","fingerprint","status","url"}` |
+//! | `POST /v1/batches` | a whole suite as one submission; `202` with a batch id and per-job ids |
+//! | `GET /v1/batches/:id` | aggregate progress + per-job rows |
+//! | `GET /v1/batches/:id/events` | ndjson: one `job_done` line per resolution, then `batch_done` |
+//! | `GET /v1/jobs/:id[/events]` | per-job poll / trace replay, replica-compatible body shape |
+//! | `GET`/`POST /v1/quotas` | inspect / set per-client admission quotas |
+//! | `GET /v1/healthz`, `GET /v1/stats` | coordinator + per-replica health and run counters |
+//!
+//! **Shared result tier.** The coordinator's [`ResultStore`] is
+//! consulted before any dispatch and written back after every
+//! computation, and an in-flight [`dispatch::RunSlot`] per fingerprint
+//! (the `ShardedRunCache` discipline, fleet-wide) dedups concurrent
+//! submissions — each distinct fingerprint is computed exactly once
+//! across the whole fleet, no matter how many batches or clients carry
+//! it. Determinism makes this safe: replicas derive their seeds from
+//! the fingerprint, so *which* replica computes is unobservable.
+//!
+//! **Admission control.** Instead of the single-node blanket 503:
+//! per-client token quotas ([`quota::QuotaBook`], `429` when
+//! exhausted), priorities ordering the dispatch queue (9 highest, FIFO
+//! within a priority), and replica health probing with drain awareness
+//! ([`replica::ReplicaPool`]) — a replica that answers `"draining"`
+//! stops receiving work, an unreachable one has its assigned jobs
+//! requeued elsewhere. Queued work survives replica departure by
+//! construction: a task is only ever moved, never dropped.
+
+pub mod dispatch;
+pub mod quota;
+pub mod replica;
+
+use crate::server::client::RetryPolicy;
+use crate::server::http::{self, ChunkedWriter, Request};
+use crate::server::signal;
+use crate::service::{wire, JobId, JobOutcome, JobResult, JobSpec};
+use crate::store::ResultStore;
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use dispatch::{AdmitError, Admitted, Dispatcher, DoneRun, Origin, RunSlot, SlotStatus};
+use quota::{QuotaBook, QuotaRefusal};
+use replica::ReplicaPool;
+use std::collections::HashMap;
+use std::fmt;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Priority given to submissions that don't set one.
+pub const DEFAULT_PRIORITY: u8 = 5;
+/// Highest admissible priority (0 is lowest).
+pub const MAX_PRIORITY: u8 = 9;
+/// Hard bound on jobs per batch submission.
+pub const MAX_BATCH_JOBS: usize = 4096;
+
+/// Concurrent event-stream threads (same rationale as the single-node
+/// server: streams live as long as the watched work).
+const MAX_EVENT_STREAMS: usize = 64;
+
+/// A decoded `POST /v1/batches` submission (wire codec:
+/// [`crate::service::wire::decode_batch`]).
+#[derive(Debug, Clone)]
+pub struct BatchRequest {
+    pub label: String,
+    pub client: String,
+    pub priority: u8,
+    pub specs: Vec<JobSpec>,
+}
+
+/// Coordinator-assigned batch handle; same stable hex form as
+/// [`JobId`] so ids sort and round-trip identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchId(pub u64);
+
+impl fmt::Display for BatchId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "batch-{:016x}", self.0)
+    }
+}
+
+/// Failure to parse a [`BatchId`] from its textual form.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParseBatchIdError;
+
+impl fmt::Display for ParseBatchIdError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("invalid batch id (expected 'batch-' followed by up to 16 hex digits)")
+    }
+}
+
+impl std::error::Error for ParseBatchIdError {}
+
+impl std::str::FromStr for BatchId {
+    type Err = ParseBatchIdError;
+
+    fn from_str(s: &str) -> Result<Self, ParseBatchIdError> {
+        let hex = s.strip_prefix("batch-").unwrap_or(s);
+        if hex.is_empty() || hex.len() > 16 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(ParseBatchIdError);
+        }
+        u64::from_str_radix(hex, 16).map(BatchId).map_err(|_| ParseBatchIdError)
+    }
+}
+
+/// Coordinator tuning. `replicas` is the only field without a workable
+/// default — a fleet of zero replicas cannot run anything.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Coordinator listen address (`:0` picks an ephemeral port).
+    pub addr: String,
+    /// `helex serve` replica addresses to fan out to.
+    pub replicas: Vec<String>,
+    /// Directory of the *shared* result store; `None` disables the tier.
+    pub store_dir: Option<PathBuf>,
+    /// Store capacity in records (0 = unbounded).
+    pub store_capacity: usize,
+    /// Bound on pending distinct tasks in the dispatch queue, and on
+    /// the accepted-connection queue.
+    pub queue_cap: usize,
+    /// Concurrent jobs dispatched to each replica.
+    pub slots_per_replica: usize,
+    /// Replica health-probe interval.
+    pub probe_interval: Duration,
+    /// Connection-handler threads (HTTP plane).
+    pub conn_threads: usize,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+    /// Maximum request body size in bytes.
+    pub max_body: usize,
+    /// Default per-client quota: bucket capacity in jobs…
+    pub quota_burst: u64,
+    /// …and refill rate in jobs per second.
+    pub quota_rate: f64,
+    /// Transport retry policy for replica dispatch.
+    pub retry: RetryPolicy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7880".into(),
+            replicas: Vec::new(),
+            store_dir: None,
+            store_capacity: 4096,
+            queue_cap: 256,
+            slots_per_replica: 2,
+            probe_interval: Duration::from_secs(1),
+            conn_threads: 4,
+            read_timeout: Duration::from_secs(10),
+            max_body: 4 * 1024 * 1024,
+            quota_burst: 1024,
+            quota_rate: 64.0,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// Drain-state flags shared between the accept loop, the signal watcher
+/// and test harnesses (same shape as the single-node server's).
+struct Shutdown {
+    requested: AtomicBool,
+    drained: AtomicBool,
+}
+
+/// One admitted job as the coordinator tracks it: enough to assemble a
+/// replica-compatible [`JobResult`] from the shared slot.
+struct FleetJob {
+    id: JobId,
+    label: String,
+    grid: crate::cgra::Grid,
+    fingerprint: u64,
+    slot: Arc<RunSlot>,
+    /// Whether this submission enqueued the work (false: it joined an
+    /// existing slot, so its result reports `from_cache`).
+    primary: bool,
+}
+
+#[derive(Clone)]
+struct BatchEntry {
+    id: BatchId,
+    label: String,
+    client: String,
+    jobs: Vec<JobId>,
+}
+
+/// Everything a connection handler needs.
+struct FleetCtx {
+    dispatcher: Arc<Dispatcher>,
+    pool: Arc<ReplicaPool>,
+    quotas: QuotaBook,
+    store: Option<Arc<ResultStore>>,
+    jobs: Mutex<HashMap<JobId, Arc<FleetJob>>>,
+    batches: Mutex<HashMap<BatchId, BatchEntry>>,
+    /// One counter feeds both job and batch ids — they live in
+    /// different namespaces (`job-`/`batch-` prefixes) but never share
+    /// a number, which makes logs unambiguous.
+    next_id: AtomicU64,
+    shutdown: Arc<Shutdown>,
+    started: Instant,
+    queue_cap: usize,
+    read_timeout: Duration,
+    max_body: usize,
+    active_streams: AtomicUsize,
+}
+
+/// Handle for triggering a graceful shutdown from another thread.
+#[derive(Clone)]
+pub struct FleetHandle {
+    addr: SocketAddr,
+    shutdown: Arc<Shutdown>,
+}
+
+impl FleetHandle {
+    /// Start draining: refuse new admissions, finish everything queued
+    /// (requeueing across replicas as needed), then return from `serve`.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.requested.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The coordinator: bind with [`Fleet::bind`], then block in
+/// [`Fleet::serve`].
+pub struct Fleet {
+    cfg: FleetConfig,
+    listener: TcpListener,
+    ctx: Arc<FleetCtx>,
+}
+
+impl Fleet {
+    /// Bind the listener, open the shared store (if configured), start
+    /// the replica pool + prober and the dispatch workers.
+    pub fn bind(cfg: FleetConfig) -> Result<Self> {
+        if cfg.replicas.is_empty() {
+            bail!("fleet needs at least one replica address");
+        }
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let store = match &cfg.store_dir {
+            Some(dir) => Some(Arc::new(
+                ResultStore::open(dir, cfg.store_capacity)
+                    .with_context(|| format!("opening result store {}", dir.display()))?,
+            )),
+            None => None,
+        };
+        let pool = ReplicaPool::start(&cfg.replicas, cfg.slots_per_replica, cfg.probe_interval);
+        // one dispatch worker per replica slot, bounded: enough to keep
+        // every slot busy, never an unbounded thread pile
+        let workers = (cfg.replicas.len() * cfg.slots_per_replica.max(1)).clamp(2, 32);
+        let dispatcher = Dispatcher::start(
+            Arc::clone(&pool),
+            store.clone(),
+            cfg.retry.clone(),
+            cfg.queue_cap,
+            workers,
+        );
+        let ctx = Arc::new(FleetCtx {
+            dispatcher,
+            pool,
+            quotas: QuotaBook::new(cfg.quota_burst, cfg.quota_rate),
+            store,
+            jobs: Mutex::new(HashMap::new()),
+            batches: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            shutdown: Arc::new(Shutdown {
+                requested: AtomicBool::new(false),
+                drained: AtomicBool::new(false),
+            }),
+            started: Instant::now(),
+            queue_cap: cfg.queue_cap,
+            read_timeout: cfg.read_timeout,
+            max_body: cfg.max_body,
+            active_streams: AtomicUsize::new(0),
+        });
+        Ok(Self { cfg, listener, ctx })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn handle(&self) -> Result<FleetHandle> {
+        Ok(FleetHandle { addr: self.local_addr()?, shutdown: Arc::clone(&self.ctx.shutdown) })
+    }
+
+    /// Serve until a graceful shutdown (SIGINT or
+    /// [`FleetHandle::begin_shutdown`]) completes its drain.
+    pub fn serve(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let shutdown = Arc::clone(&self.ctx.shutdown);
+
+        if let Some(waiter) = signal::install_sigint() {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                waiter.wait();
+                eprintln!(
+                    "[helex fleet] SIGINT: draining (queued jobs finish, new work gets 503)"
+                );
+                shutdown.requested.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(addr);
+            });
+        }
+
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.cfg.queue_cap);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::new();
+        for _ in 0..self.cfg.conn_threads.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let ctx = Arc::clone(&self.ctx);
+            handlers.push(std::thread::spawn(move || loop {
+                let next = conn_rx.lock().unwrap().recv();
+                match next {
+                    Ok(stream) => handle_connection(stream, &ctx),
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        let mut drainer: Option<std::thread::JoinHandle<()>> = None;
+        for stream in self.listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            if shutdown.requested.load(Ordering::SeqCst) {
+                if drainer.is_none() {
+                    let ctx = Arc::clone(&self.ctx);
+                    let shutdown = Arc::clone(&shutdown);
+                    drainer = Some(std::thread::spawn(move || {
+                        ctx.dispatcher.drain();
+                        if let Some(store) = &ctx.store {
+                            if let Err(e) = store.flush() {
+                                eprintln!("[helex fleet] warning: store flush failed: {e}");
+                            }
+                        }
+                        shutdown.drained.store(true, Ordering::SeqCst);
+                        let _ = TcpStream::connect(addr);
+                    }));
+                }
+                if shutdown.drained.load(Ordering::SeqCst) {
+                    break;
+                }
+                // reads keep answering during the drain; admissions get
+                // 503 from the dispatcher's Draining refusal
+            }
+            match conn_tx.try_send(stream) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(mut stream)) => {
+                    let _ = http::write_error(
+                        &mut stream,
+                        503,
+                        "overloaded",
+                        "connection queue is full, retry later",
+                    );
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            }
+        }
+
+        drop(conn_tx);
+        for handler in handlers {
+            let _ = handler.join();
+        }
+        if let Some(drainer) = drainer {
+            let _ = drainer.join();
+        } else {
+            self.ctx.dispatcher.drain();
+            if let Some(store) = &self.ctx.store {
+                let _ = store.flush();
+            }
+        }
+        eprintln!("[helex fleet] drained; bye");
+        Ok(())
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &Arc<FleetCtx>) {
+    let _ = stream.set_read_timeout(Some(ctx.read_timeout));
+    let _ = stream.set_write_timeout(Some(ctx.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let request = match http::read_request(&mut stream, ctx.max_body, ctx.read_timeout) {
+        Ok(request) => request,
+        Err(e) => {
+            let _ = http::write_error(&mut stream, e.status, "bad_request", &e.message);
+            return;
+        }
+    };
+    route(stream, &request, ctx);
+}
+
+fn route(mut stream: TcpStream, request: &Request, ctx: &Arc<FleetCtx>) {
+    let path = request.path.as_str();
+    let method = request.method.as_str();
+    match (method, path) {
+        ("POST", "/v1/jobs") => post_job(&mut stream, request, ctx),
+        ("POST", "/v1/batches") => post_batch(&mut stream, request, ctx),
+        ("GET", "/v1/quotas") => {
+            let _ = http::write_json(&mut stream, 200, &quotas_body(ctx));
+        }
+        ("POST", "/v1/quotas") => post_quota(&mut stream, request, ctx),
+        ("GET", "/v1/healthz") => {
+            let _ = http::write_json(&mut stream, 200, &healthz_body(ctx));
+        }
+        ("GET", "/v1/stats") => {
+            let _ = http::write_json(&mut stream, 200, &stats_body(ctx));
+        }
+        ("GET", _) if path.starts_with("/v1/jobs/") => get_job(stream, path, ctx),
+        ("GET", _) if path.starts_with("/v1/batches/") => get_batch(stream, path, ctx),
+        (_, "/v1/jobs" | "/v1/batches" | "/v1/quotas" | "/v1/healthz" | "/v1/stats") => {
+            let _ = http::write_error(&mut stream, 405, "method_not_allowed", "wrong method");
+        }
+        (_, _) if path.starts_with("/v1/jobs/") || path.starts_with("/v1/batches/") => {
+            let _ = http::write_error(&mut stream, 405, "method_not_allowed", "wrong method");
+        }
+        _ => {
+            let _ = http::write_error(&mut stream, 404, "unknown_route", "no such route");
+        }
+    }
+}
+
+/// Decode a request body as JSON, answering the 400 on failure.
+fn parse_body(stream: &mut TcpStream, body: &[u8]) -> Option<Json> {
+    let text = match std::str::from_utf8(body) {
+        Ok(text) => text,
+        Err(_) => {
+            let _ = http::write_error(stream, 400, "bad_encoding", "body is not UTF-8");
+            return None;
+        }
+    };
+    match json::parse(text) {
+        Ok(parsed) => Some(parsed),
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_json", &e.to_string());
+            None
+        }
+    }
+}
+
+fn write_refusal(stream: &mut TcpStream, refusal: &QuotaRefusal) {
+    let _ = http::write_error(stream, 429, "quota_exhausted", &refusal.to_string());
+}
+
+fn write_admit_error(stream: &mut TcpStream, error: &AdmitError) {
+    let code = match error {
+        AdmitError::QueueFull { .. } => "queue_full",
+        AdmitError::Draining => "draining",
+    };
+    let _ = http::write_error(stream, 503, code, &error.to_string());
+}
+
+/// Allocate an id and register the admitted job for polling.
+fn register_job(
+    ctx: &FleetCtx,
+    label: String,
+    grid: crate::cgra::Grid,
+    admitted: Admitted,
+) -> Arc<FleetJob> {
+    let id = JobId(ctx.next_id.fetch_add(1, Ordering::SeqCst));
+    let job = Arc::new(FleetJob {
+        id,
+        label,
+        grid,
+        fingerprint: admitted.fp,
+        slot: admitted.slot,
+        primary: admitted.primary,
+    });
+    ctx.jobs.lock().unwrap().insert(id, Arc::clone(&job));
+    job
+}
+
+fn post_job(stream: &mut TcpStream, request: &Request, ctx: &Arc<FleetCtx>) {
+    let Some(parsed) = parse_body(stream, &request.body) else { return };
+    let spec = match wire::decode_spec(&parsed) {
+        Ok(spec) => spec,
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_spec", &e.to_string());
+            return;
+        }
+    };
+    // client identity and priority ride as extra top-level keys of the
+    // same body (the replica's decoder ignores them, so one payload
+    // works against both a replica and the fleet)
+    let client = match parsed.get("client").map(Json::as_str) {
+        None => "anonymous".to_string(),
+        Some(Some(name)) if !name.is_empty() => name.to_string(),
+        Some(_) => {
+            let _ =
+                http::write_error(stream, 400, "bad_client", "client must be a non-empty string");
+            return;
+        }
+    };
+    let priority = match parsed.get("priority") {
+        None => DEFAULT_PRIORITY,
+        Some(value) => match value.as_u64() {
+            Some(p) if p <= MAX_PRIORITY as u64 => p as u8,
+            _ => {
+                let _ = http::write_error(
+                    stream,
+                    400,
+                    "bad_priority",
+                    &format!("priority must be an integer in 0..={MAX_PRIORITY}"),
+                );
+                return;
+            }
+        },
+    };
+    if let Err(refusal) = ctx.quotas.try_take(&client, 1) {
+        write_refusal(stream, &refusal);
+        return;
+    }
+    let label = spec.label.clone();
+    let grid = spec.grid;
+    let jobs = [(spec, priority)];
+    let admitted = match ctx.dispatcher.admit(&jobs) {
+        Ok(admitted) => admitted,
+        Err(e) => {
+            ctx.quotas.refund(&client, 1);
+            write_admit_error(stream, &e);
+            return;
+        }
+    };
+    let admitted = admitted.into_iter().next().expect("one job admitted");
+    let job = register_job(ctx, label, grid, admitted);
+    let body = Json::obj(vec![
+        ("id", Json::str(job.id.to_string())),
+        ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
+        ("status", Json::str(job.slot.status().name())),
+        ("url", Json::str(format!("/v1/jobs/{}", job.id))),
+    ]);
+    let _ = http::write_json(stream, 202, &body);
+}
+
+fn post_batch(stream: &mut TcpStream, request: &Request, ctx: &Arc<FleetCtx>) {
+    let Some(parsed) = parse_body(stream, &request.body) else { return };
+    let batch = match wire::decode_batch(&parsed) {
+        Ok(batch) => batch,
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_batch", &e.to_string());
+            return;
+        }
+    };
+    let BatchRequest { label, client, priority, specs } = batch;
+    let count = specs.len() as u64;
+    if let Err(refusal) = ctx.quotas.try_take(&client, count) {
+        write_refusal(stream, &refusal);
+        return;
+    }
+    let jobs: Vec<(JobSpec, u8)> = specs.into_iter().map(|spec| (spec, priority)).collect();
+    let admitted = match ctx.dispatcher.admit(&jobs) {
+        Ok(admitted) => admitted,
+        Err(e) => {
+            ctx.quotas.refund(&client, count);
+            write_admit_error(stream, &e);
+            return;
+        }
+    };
+    let mut ids = Vec::with_capacity(jobs.len());
+    let mut rows = Vec::with_capacity(jobs.len());
+    for ((spec, _), adm) in jobs.into_iter().zip(admitted) {
+        let job = register_job(ctx, spec.label.clone(), spec.grid, adm);
+        ids.push(job.id);
+        rows.push(Json::obj(vec![
+            ("id", Json::str(job.id.to_string())),
+            ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
+            ("url", Json::str(format!("/v1/jobs/{}", job.id))),
+        ]));
+    }
+    let batch_id = BatchId(ctx.next_id.fetch_add(1, Ordering::SeqCst));
+    ctx.batches.lock().unwrap().insert(
+        batch_id,
+        BatchEntry { id: batch_id, label: label.clone(), client, jobs: ids },
+    );
+    let body = Json::obj(vec![
+        ("id", Json::str(batch_id.to_string())),
+        ("label", Json::str(label)),
+        ("count", Json::U64(count)),
+        ("jobs", Json::Arr(rows)),
+        ("url", Json::str(format!("/v1/batches/{batch_id}"))),
+    ]);
+    let _ = http::write_json(stream, 202, &body);
+}
+
+fn post_quota(stream: &mut TcpStream, request: &Request, ctx: &Arc<FleetCtx>) {
+    let Some(parsed) = parse_body(stream, &request.body) else { return };
+    let rule = match wire::decode_quota(&parsed) {
+        Ok(rule) => rule,
+        Err(e) => {
+            let _ = http::write_error(stream, 400, "bad_quota", &e.to_string());
+            return;
+        }
+    };
+    ctx.quotas.set_rule(&rule);
+    let _ = http::write_json(stream, 200, &wire::encode_quota(&rule));
+}
+
+/// Assemble a replica-compatible [`JobResult`] from a resolved slot.
+/// `from_cache` is true unless this job is the primary submission of a
+/// fingerprint the fleet actually computed — exactly the single-node
+/// semantics, lifted to fleet scope.
+fn job_result(job: &FleetJob, run: &DoneRun) -> JobResult {
+    JobResult {
+        id: job.id,
+        label: job.label.clone(),
+        grid: job.grid,
+        fingerprint: job.fingerprint,
+        outcome: run.job.outcome.clone(),
+        events: run.job.events.clone(),
+        wall_secs: run.wall_secs,
+        from_cache: !(job.primary && run.origin == Origin::Computed),
+    }
+}
+
+fn outcome_tag(outcome: &JobOutcome) -> &'static str {
+    match outcome {
+        JobOutcome::Completed(_) => "completed",
+        JobOutcome::Infeasible(_) => "infeasible",
+        JobOutcome::Rejected(_) => "rejected",
+    }
+}
+
+/// `GET /v1/jobs/:id` and `GET /v1/jobs/:id/events`. The poll body is
+/// shape-identical to the replica's, so `client::wait_result` works
+/// unchanged against the coordinator.
+fn get_job(mut stream: TcpStream, path: &str, ctx: &Arc<FleetCtx>) {
+    let rest = &path["/v1/jobs/".len()..];
+    let (id_text, events) = match rest.strip_suffix("/events") {
+        Some(id_text) => (id_text, true),
+        None => (rest, false),
+    };
+    let Ok(id) = id_text.parse::<JobId>() else {
+        let _ = http::write_error(&mut stream, 400, "bad_id", "job id must be job-<hex>");
+        return;
+    };
+    let Some(job) = ctx.jobs.lock().unwrap().get(&id).cloned() else {
+        let _ = http::write_error(&mut stream, 404, "unknown_job", "no such job on this fleet");
+        return;
+    };
+    if events {
+        if !claim_stream(&mut stream, ctx) {
+            return;
+        }
+        let ctx = Arc::clone(ctx);
+        std::thread::spawn(move || {
+            stream_job_events(&mut stream, &job);
+            ctx.active_streams.fetch_sub(1, Ordering::SeqCst);
+        });
+        return;
+    }
+    let status = job.slot.status();
+    let mut pairs = vec![
+        ("id", Json::str(id.to_string())),
+        ("label", Json::str(&job.label)),
+        ("status", Json::str(status.name())),
+        ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
+    ];
+    if let SlotStatus::Done(run) = &status {
+        pairs.push(("result", wire::encode_result(&job_result(&job, run))));
+    }
+    let _ = http::write_json(&mut stream, 200, &Json::obj(pairs));
+}
+
+/// Reserve an event-stream thread slot, answering the 503 when the cap
+/// is hit. Returns false if the stream must not be started.
+fn claim_stream(stream: &mut TcpStream, ctx: &FleetCtx) -> bool {
+    if ctx.active_streams.fetch_add(1, Ordering::SeqCst) >= MAX_EVENT_STREAMS {
+        ctx.active_streams.fetch_sub(1, Ordering::SeqCst);
+        let _ =
+            http::write_error(stream, 503, "overloaded", "too many concurrent event streams");
+        return false;
+    }
+    true
+}
+
+/// Replay a job's recorded search trace as ndjson once it resolves.
+/// (Live per-candidate events stay on the replica that runs the job;
+/// the coordinator serves the authoritative recorded trace.)
+fn stream_job_events(stream: &mut TcpStream, job: &FleetJob) {
+    let Some(run) = job.slot.wait_done(Duration::from_secs(4 * 3600)) else {
+        let _ = http::write_error(stream, 408, "timeout", "job did not resolve in time");
+        return;
+    };
+    let mut writer = match ChunkedWriter::start(stream, 200, "application/x-ndjson") {
+        Ok(writer) => writer,
+        Err(_) => return,
+    };
+    for event in &run.job.events {
+        let mut line = wire::encode_event(event).to_string();
+        line.push('\n');
+        if writer.chunk(line.as_bytes()).is_err() {
+            return;
+        }
+    }
+    let _ = writer.finish();
+}
+
+/// `GET /v1/batches/:id` and `GET /v1/batches/:id/events`.
+fn get_batch(mut stream: TcpStream, path: &str, ctx: &Arc<FleetCtx>) {
+    let rest = &path["/v1/batches/".len()..];
+    let (id_text, events) = match rest.strip_suffix("/events") {
+        Some(id_text) => (id_text, true),
+        None => (rest, false),
+    };
+    let Ok(id) = id_text.parse::<BatchId>() else {
+        let _ = http::write_error(&mut stream, 400, "bad_id", "batch id must be batch-<hex>");
+        return;
+    };
+    let Some(batch) = ctx.batches.lock().unwrap().get(&id).cloned() else {
+        let _ =
+            http::write_error(&mut stream, 404, "unknown_batch", "no such batch on this fleet");
+        return;
+    };
+    if events {
+        if !claim_stream(&mut stream, ctx) {
+            return;
+        }
+        let ctx = Arc::clone(ctx);
+        std::thread::spawn(move || {
+            stream_batch_events(&mut stream, &ctx, &batch);
+            ctx.active_streams.fetch_sub(1, Ordering::SeqCst);
+        });
+        return;
+    }
+    let _ = http::write_json(&mut stream, 200, &batch_body(ctx, &batch));
+}
+
+/// Snapshot the batch's jobs in submission order.
+fn batch_jobs(ctx: &FleetCtx, batch: &BatchEntry) -> Vec<Arc<FleetJob>> {
+    let jobs = ctx.jobs.lock().unwrap();
+    batch
+        .jobs
+        .iter()
+        .map(|id| Arc::clone(jobs.get(id).expect("batch job is registered")))
+        .collect()
+}
+
+/// The aggregate batch view: counts by status plus one row per job.
+fn batch_body(ctx: &FleetCtx, batch: &BatchEntry) -> Json {
+    let jobs = batch_jobs(ctx, batch);
+    let (mut queued, mut running, mut done) = (0u64, 0u64, 0u64);
+    let mut rows = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        let status = job.slot.status();
+        let mut row = vec![
+            ("id", Json::str(job.id.to_string())),
+            ("label", Json::str(&job.label)),
+            ("status", Json::str(status.name())),
+            ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
+            ("url", Json::str(format!("/v1/jobs/{}", job.id))),
+        ];
+        match &status {
+            SlotStatus::Queued => queued += 1,
+            SlotStatus::Running => running += 1,
+            SlotStatus::Done(run) => {
+                done += 1;
+                let result = job_result(job, run);
+                row.push(("outcome", Json::str(outcome_tag(&result.outcome))));
+                row.push(("best_cost", result.best_cost().map_or(Json::Null, Json::F64)));
+                row.push(("from_cache", Json::Bool(result.from_cache)));
+            }
+        }
+        rows.push(Json::obj(row));
+    }
+    Json::obj(vec![
+        ("id", Json::str(batch.id.to_string())),
+        ("label", Json::str(&batch.label)),
+        ("client", Json::str(&batch.client)),
+        ("total", Json::U64(jobs.len() as u64)),
+        ("queued", Json::U64(queued)),
+        ("running", Json::U64(running)),
+        ("done", Json::U64(done)),
+        ("jobs", Json::Arr(rows)),
+    ])
+}
+
+/// Tail a batch as ndjson: one `job_done` line per resolution (in
+/// resolution order), then a final `batch_done` line.
+fn stream_batch_events(stream: &mut TcpStream, ctx: &FleetCtx, batch: &BatchEntry) {
+    let jobs = batch_jobs(ctx, batch);
+    let mut writer = match ChunkedWriter::start(stream, 200, "application/x-ndjson") {
+        Ok(writer) => writer,
+        Err(_) => return,
+    };
+    let mut reported = vec![false; jobs.len()];
+    let mut tick = ctx.dispatcher.progress_tick();
+    loop {
+        for (i, job) in jobs.iter().enumerate() {
+            if reported[i] {
+                continue;
+            }
+            let SlotStatus::Done(run) = job.slot.status() else { continue };
+            reported[i] = true;
+            let result = job_result(job, &run);
+            let mut line = Json::obj(vec![
+                ("type", Json::str("job_done")),
+                ("id", Json::str(job.id.to_string())),
+                ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
+                ("outcome", Json::str(outcome_tag(&result.outcome))),
+                ("best_cost", result.best_cost().map_or(Json::Null, Json::F64)),
+                ("from_cache", Json::Bool(result.from_cache)),
+            ])
+            .to_string();
+            line.push('\n');
+            if writer.chunk(line.as_bytes()).is_err() {
+                return;
+            }
+        }
+        if reported.iter().all(|&r| r) {
+            break;
+        }
+        tick = ctx.dispatcher.wait_progress(tick, Duration::from_millis(500));
+    }
+    let mut line = Json::obj(vec![
+        ("type", Json::str("batch_done")),
+        ("id", Json::str(batch.id.to_string())),
+        ("total", Json::U64(jobs.len() as u64)),
+    ])
+    .to_string();
+    line.push('\n');
+    let _ = writer.chunk(line.as_bytes());
+    let _ = writer.finish();
+}
+
+fn quotas_body(ctx: &FleetCtx) -> Json {
+    let rows = ctx
+        .quotas
+        .rules()
+        .into_iter()
+        .map(|(rule, available)| {
+            Json::obj(vec![
+                ("client", Json::str(rule.client)),
+                ("burst", Json::U64(rule.burst)),
+                ("per_sec", Json::F64(rule.per_sec)),
+                ("available", Json::U64(available)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("clients", Json::Arr(rows))])
+}
+
+fn healthz_body(ctx: &FleetCtx) -> Json {
+    let draining =
+        ctx.shutdown.requested.load(Ordering::SeqCst) || ctx.dispatcher.draining();
+    let stats = ctx.dispatcher.stats();
+    let statuses = ctx.pool.statuses();
+    Json::obj(vec![
+        ("status", Json::str(if draining { "draining" } else { "ok" })),
+        ("role", Json::str("coordinator")),
+        ("draining", Json::Bool(draining)),
+        ("queued", Json::U64(stats.queued)),
+        ("running", Json::U64(stats.running)),
+        (
+            "replicas",
+            Json::obj(vec![
+                ("healthy", Json::U64(ctx.pool.healthy_count() as u64)),
+                ("total", Json::U64(statuses.len() as u64)),
+            ]),
+        ),
+        ("uptime_secs", Json::F64(ctx.started.elapsed().as_secs_f64())),
+    ])
+}
+
+fn stats_body(ctx: &FleetCtx) -> Json {
+    let draining =
+        ctx.shutdown.requested.load(Ordering::SeqCst) || ctx.dispatcher.draining();
+    let stats = ctx.dispatcher.stats();
+    let store = match &ctx.store {
+        Some(store) => {
+            let s = store.stats();
+            Json::obj(vec![
+                ("entries", Json::U64(s.entries as u64)),
+                ("hits", Json::U64(s.hits)),
+                ("misses", Json::U64(s.misses)),
+                ("writes", Json::U64(s.writes)),
+                ("evictions", Json::U64(s.evictions)),
+                ("corrupt", Json::U64(s.corrupt)),
+            ])
+        }
+        None => Json::Null,
+    };
+    let replicas =
+        ctx.pool.statuses().iter().map(wire::encode_replica_status).collect::<Vec<_>>();
+    Json::obj(vec![
+        ("role", Json::str("coordinator")),
+        ("draining", Json::Bool(draining)),
+        (
+            "queue",
+            Json::obj(vec![
+                ("queued", Json::U64(stats.queued)),
+                ("running", Json::U64(stats.running)),
+                ("capacity", Json::U64(ctx.queue_cap as u64)),
+            ]),
+        ),
+        (
+            "runs",
+            Json::obj(vec![
+                ("distinct", Json::U64(stats.distinct)),
+                ("computed", Json::U64(stats.computed)),
+                ("store_hits", Json::U64(stats.store_hits)),
+                ("dedup_hits", Json::U64(stats.dedup_hits)),
+                ("requeues", Json::U64(stats.requeues)),
+            ]),
+        ),
+        ("replicas", Json::Arr(replicas)),
+        ("store", store),
+        ("uptime_secs", Json::F64(ctx.started.elapsed().as_secs_f64())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_id_round_trips_and_rejects_garbage() {
+        let id = BatchId(0x2a);
+        assert_eq!(id.to_string(), "batch-000000000000002a");
+        assert_eq!("batch-000000000000002a".parse::<BatchId>(), Ok(id));
+        assert_eq!("2a".parse::<BatchId>(), Ok(id), "prefix is optional");
+        assert!("".parse::<BatchId>().is_err());
+        assert!("batch-".parse::<BatchId>().is_err());
+        assert!("batch-xyz".parse::<BatchId>().is_err());
+        assert!("batch-00000000000000000".parse::<BatchId>().is_err(), "17 digits");
+        // a job id's prefix is not a batch id's
+        assert_eq!("job-2a".parse::<BatchId>(), Err(ParseBatchIdError));
+    }
+
+    #[test]
+    fn fleet_refuses_to_bind_without_replicas() {
+        let cfg = FleetConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+        let err = Fleet::bind(cfg).unwrap_err();
+        assert!(err.to_string().contains("at least one replica"), "{err}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Per-client admission quotas: token buckets over wall-clock time.
+//!
+//! The single-node server's only admission control is a blanket 503 when
+//! its queue fills; a fleet coordinator fronting many clients needs
+//! *fairness*, not just backpressure. Each client (a free-form name the
+//! submitter puts in its request body; `"anonymous"` when absent) owns a
+//! token bucket: a batch of N jobs costs N tokens, tokens refill at
+//! `per_sec` up to `burst`, and an insufficient balance answers
+//! `429 quota_exhausted` with a retry hint instead of silently queueing
+//! one client's flood ahead of everyone else's interactive work.
+//!
+//! Rules are runtime-mutable (`POST /v1/quotas`), so an operator can
+//! widen a well-known client's budget without restarting the fleet.
+//! Admission is all-or-nothing per submission: a refused batch consumes
+//! zero tokens, and a submission that passes the quota but is refused
+//! later (queue full) is refunded.
+//!
+//! The refill arithmetic is a pure function ([`refill`]) so the edge
+//! cases — zero rate, saturation at `burst` — are unit-testable without
+//! a clock.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One client's quota configuration, as carried by `POST /v1/quotas`
+/// (wire codec in [`crate::service::wire`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaRule {
+    pub client: String,
+    /// Bucket capacity: the largest submission admissible at once.
+    pub burst: u64,
+    /// Refill rate in tokens (jobs) per second; `0.0` means the bucket
+    /// never refills (a hard cap).
+    pub per_sec: f64,
+}
+
+/// Why a submission was refused, with enough for a useful 429 body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuotaRefusal {
+    pub client: String,
+    /// Whole tokens available at refusal time.
+    pub available: u64,
+    /// Seconds until the bucket could cover the request; `None` when it
+    /// never can (rate 0, or the request exceeds `burst` outright).
+    pub retry_after_secs: Option<f64>,
+}
+
+impl std::fmt::Display for QuotaRefusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.retry_after_secs {
+            Some(secs) => write!(
+                f,
+                "quota exhausted for client '{}' ({} token(s) available; retry in {secs:.1}s)",
+                self.client, self.available
+            ),
+            None => write!(
+                f,
+                "request exceeds client '{}' quota burst and can never be admitted whole",
+                self.client
+            ),
+        }
+    }
+}
+
+/// Tokens after `elapsed_secs` of refill at `per_sec`, saturating at
+/// `burst`. Pure, so the zero-rate and saturation cases are testable
+/// without sleeping.
+pub fn refill(tokens: f64, burst: u64, per_sec: f64, elapsed_secs: f64) -> f64 {
+    let grown = tokens + per_sec * elapsed_secs.max(0.0);
+    grown.min(burst as f64)
+}
+
+struct Bucket {
+    burst: u64,
+    per_sec: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl Bucket {
+    fn new(burst: u64, per_sec: f64) -> Self {
+        Self { burst, per_sec, tokens: burst as f64, last: Instant::now() }
+    }
+
+    fn settle(&mut self) {
+        let now = Instant::now();
+        self.tokens = refill(
+            self.tokens,
+            self.burst,
+            self.per_sec,
+            now.duration_since(self.last).as_secs_f64(),
+        );
+        self.last = now;
+    }
+}
+
+/// All clients' buckets. Unknown clients get a bucket with the fleet's
+/// default burst/rate on first contact.
+pub struct QuotaBook {
+    default_burst: u64,
+    default_rate: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl QuotaBook {
+    pub fn new(default_burst: u64, default_rate: f64) -> Self {
+        Self {
+            default_burst: default_burst.max(1),
+            default_rate: default_rate.max(0.0),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Install (or replace) a client's rule. The bucket restarts full —
+    /// operators raise quotas to unblock someone *now*.
+    pub fn set_rule(&self, rule: &QuotaRule) {
+        self.buckets
+            .lock()
+            .unwrap()
+            .insert(rule.client.clone(), Bucket::new(rule.burst.max(1), rule.per_sec.max(0.0)));
+    }
+
+    /// Snapshot of every bucket seen so far: `(rule, whole tokens now)`.
+    pub fn rules(&self) -> Vec<(QuotaRule, u64)> {
+        let mut buckets = self.buckets.lock().unwrap();
+        let mut out: Vec<(QuotaRule, u64)> = buckets
+            .iter_mut()
+            .map(|(client, bucket)| {
+                bucket.settle();
+                (
+                    QuotaRule {
+                        client: client.clone(),
+                        burst: bucket.burst,
+                        per_sec: bucket.per_sec,
+                    },
+                    bucket.tokens as u64,
+                )
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.client.cmp(&b.0.client));
+        out
+    }
+
+    /// Take `n` tokens from `client`'s bucket, or refuse without taking
+    /// any (all-or-nothing).
+    pub fn try_take(&self, client: &str, n: u64) -> Result<(), QuotaRefusal> {
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets
+            .entry(client.to_string())
+            .or_insert_with(|| Bucket::new(self.default_burst, self.default_rate));
+        bucket.settle();
+        if bucket.tokens >= n as f64 {
+            bucket.tokens -= n as f64;
+            return Ok(());
+        }
+        let retry_after_secs = if n > bucket.burst {
+            None // can never fit, at any refill
+        } else if bucket.per_sec > 0.0 {
+            Some((n as f64 - bucket.tokens) / bucket.per_sec)
+        } else {
+            None
+        };
+        Err(QuotaRefusal {
+            client: client.to_string(),
+            available: bucket.tokens as u64,
+            retry_after_secs,
+        })
+    }
+
+    /// Return tokens taken by an admission that later failed (queue
+    /// full). Saturates at the bucket's burst.
+    pub fn refund(&self, client: &str, n: u64) {
+        let mut buckets = self.buckets.lock().unwrap();
+        if let Some(bucket) = buckets.get_mut(client) {
+            bucket.tokens = (bucket.tokens + n as f64).min(bucket.burst as f64);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refill_is_pure_and_saturates() {
+        assert_eq!(refill(0.0, 10, 2.0, 3.0), 6.0);
+        assert_eq!(refill(8.0, 10, 2.0, 60.0), 10.0, "must saturate at burst");
+        assert_eq!(refill(4.0, 10, 0.0, 1e9), 4.0, "zero rate never refills");
+        assert_eq!(refill(4.0, 10, 2.0, -5.0), 4.0, "negative elapsed is inert");
+    }
+
+    #[test]
+    fn all_or_nothing_admission_with_zero_rate() {
+        let book = QuotaBook::new(2, 0.0);
+        // a 3-job batch cannot ever fit a 2-token bucket
+        let refusal = book.try_take("a", 3).unwrap_err();
+        assert_eq!(refusal.retry_after_secs, None);
+        assert_eq!(refusal.available, 2, "refusal must not consume tokens");
+        // 2 jobs fit exactly once; the bucket never refills at rate 0
+        book.try_take("a", 2).unwrap();
+        let refusal = book.try_take("a", 1).unwrap_err();
+        assert_eq!(refusal.available, 0);
+        assert_eq!(refusal.retry_after_secs, None, "rate 0 has no retry horizon");
+        // an unrelated client has its own bucket
+        book.try_take("b", 2).unwrap();
+    }
+
+    #[test]
+    fn refund_restores_tokens_up_to_burst() {
+        let book = QuotaBook::new(4, 0.0);
+        book.try_take("a", 3).unwrap();
+        book.refund("a", 3);
+        book.try_take("a", 4).unwrap();
+        book.refund("a", 99); // saturates, never exceeds burst
+        let refusal = book.try_take("a", 5).unwrap_err();
+        assert_eq!(refusal.available, 4);
+    }
+
+    #[test]
+    fn set_rule_replaces_the_bucket_full() {
+        let book = QuotaBook::new(1, 0.0);
+        book.try_take("a", 1).unwrap();
+        assert!(book.try_take("a", 1).is_err());
+        book.set_rule(&QuotaRule { client: "a".into(), burst: 10, per_sec: 5.0 });
+        book.try_take("a", 10).unwrap();
+        // with a refill rate, the refusal carries a retry horizon
+        let refusal = book.try_take("a", 5).unwrap_err();
+        let secs = refusal.retry_after_secs.expect("rate > 0 has a horizon");
+        assert!(secs > 0.0 && secs <= 1.0 + 1e-6, "5 tokens at 5/s: {secs}");
+    }
+
+    #[test]
+    fn rules_snapshot_is_sorted_and_settled() {
+        let book = QuotaBook::new(3, 0.0);
+        book.try_take("zeta", 1).unwrap();
+        book.try_take("alpha", 2).unwrap();
+        let rules = book.rules();
+        assert_eq!(rules.len(), 2);
+        assert_eq!(rules[0].0.client, "alpha");
+        assert_eq!(rules[0].1, 1);
+        assert_eq!(rules[1].0.client, "zeta");
+        assert_eq!(rules[1].1, 2);
+    }
+}

@@ -1,0 +1,330 @@
+//! Replica membership, health probing, and slot accounting.
+//!
+//! The coordinator treats each `helex serve` process as a pool of
+//! dispatch slots (`slots_per_replica` concurrent jobs). A background
+//! prober hits every replica's `/v1/healthz` on an interval and folds
+//! the reply into a [`ReplicaState`]:
+//!
+//! - `Healthy` — answering, accepting work.
+//! - `Draining` — answering but shutting down (`"status": "draining"`);
+//!   no new work is sent, in-flight jobs are allowed to finish.
+//! - `Unreachable` — two consecutive probe or dispatch failures; the
+//!   dispatcher requeues anything it had assigned there.
+//!
+//! A single failure only bumps a counter (a replica mid-GC or briefly
+//! overloaded shouldn't get its queue confiscated); the second in a row
+//! flips it. Any successful probe or dispatch resets the count, so a
+//! restarted replica rejoins automatically.
+
+use crate::server::client;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Consecutive failures before a replica is marked [`ReplicaState::Unreachable`].
+pub const UNREACHABLE_AFTER: u32 = 2;
+
+/// A replica's standing in the fleet, as seen by the last probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    Healthy,
+    Draining,
+    Unreachable,
+}
+
+impl ReplicaState {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaState::Healthy => "healthy",
+            ReplicaState::Draining => "draining",
+            ReplicaState::Unreachable => "unreachable",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "healthy" => Some(ReplicaState::Healthy),
+            "draining" => Some(ReplicaState::Draining),
+            "unreachable" => Some(ReplicaState::Unreachable),
+            _ => None,
+        }
+    }
+}
+
+/// One replica's status row — what `/v1/stats` reports per node and
+/// what the `ReplicaStatus` wire codec carries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaStatus {
+    pub addr: String,
+    pub state: ReplicaState,
+    /// Jobs this coordinator currently has dispatched to the replica.
+    pub inflight: u64,
+    /// The replica's own queue depth, from its last healthz reply.
+    pub queued: u64,
+    /// The replica's own running-job count, from its last healthz reply.
+    pub running: u64,
+    pub consecutive_failures: u64,
+}
+
+impl ReplicaStatus {
+    fn new(addr: String) -> Self {
+        Self {
+            addr,
+            // optimistic until the first probe lands — the prober runs
+            // immediately on start, so this window is milliseconds
+            state: ReplicaState::Healthy,
+            inflight: 0,
+            queued: 0,
+            running: 0,
+            consecutive_failures: 0,
+        }
+    }
+}
+
+/// The fleet's view of its replicas: per-node state plus slot
+/// accounting, with a condvar so dispatch workers can block until a
+/// slot frees or a node recovers.
+pub struct ReplicaPool {
+    replicas: Mutex<Vec<ReplicaStatus>>,
+    freed: Condvar,
+    shutdown: AtomicBool,
+    slots_per_replica: u64,
+    prober: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl ReplicaPool {
+    /// Build the pool and start the health prober. The first probe runs
+    /// immediately so a dead address is discovered before the first
+    /// dispatch attempt, then every `probe_interval`.
+    pub fn start(
+        addrs: &[String],
+        slots_per_replica: usize,
+        probe_interval: Duration,
+    ) -> Arc<Self> {
+        let pool = Arc::new(Self {
+            replicas: Mutex::new(addrs.iter().map(|a| ReplicaStatus::new(a.clone())).collect()),
+            freed: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            slots_per_replica: slots_per_replica.max(1) as u64,
+            prober: Mutex::new(None),
+        });
+        let worker = Arc::clone(&pool);
+        let handle = thread::Builder::new()
+            .name("fleet-prober".into())
+            .spawn(move || worker.probe_loop(probe_interval))
+            .expect("spawn prober thread");
+        *pool.prober.lock().unwrap() = Some(handle);
+        pool
+    }
+
+    /// Pool without a prober, for unit tests that drive slot accounting
+    /// directly (a live prober would fail-probe dead test addresses and
+    /// race the failure-count assertions).
+    #[cfg(test)]
+    fn without_prober(addrs: &[String], slots_per_replica: usize) -> Arc<Self> {
+        Arc::new(Self {
+            replicas: Mutex::new(addrs.iter().map(|a| ReplicaStatus::new(a.clone())).collect()),
+            freed: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            slots_per_replica: slots_per_replica.max(1) as u64,
+            prober: Mutex::new(None),
+        })
+    }
+
+    fn probe_loop(&self, interval: Duration) {
+        loop {
+            let addrs: Vec<String> =
+                self.replicas.lock().unwrap().iter().map(|r| r.addr.clone()).collect();
+            for addr in addrs {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                self.probe_one(&addr);
+            }
+            // sleep in small steps so shutdown isn't delayed a full interval
+            let mut slept = Duration::ZERO;
+            while slept < interval {
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let step = Duration::from_millis(50).min(interval - slept);
+                thread::sleep(step);
+                slept += step;
+            }
+        }
+    }
+
+    fn probe_one(&self, addr: &str) {
+        // single attempt, no retry: the prober itself is the retry loop
+        let reply = client::get_json(addr, "/v1/healthz");
+        let mut replicas = self.replicas.lock().unwrap();
+        let Some(replica) = replicas.iter_mut().find(|r| r.addr == addr) else {
+            return;
+        };
+        match reply {
+            Ok(body) => {
+                let draining = body.get("status").and_then(Json::as_str) == Some("draining")
+                    || body.get("draining").and_then(Json::as_bool) == Some(true);
+                replica.state =
+                    if draining { ReplicaState::Draining } else { ReplicaState::Healthy };
+                replica.queued = body.get("queued").and_then(Json::as_u64).unwrap_or(0);
+                replica.running = body.get("running").and_then(Json::as_u64).unwrap_or(0);
+                replica.consecutive_failures = 0;
+            }
+            Err(_) => {
+                replica.consecutive_failures += 1;
+                if replica.consecutive_failures >= UNREACHABLE_AFTER as u64 {
+                    replica.state = ReplicaState::Unreachable;
+                }
+            }
+        }
+        drop(replicas);
+        // state changes can unblock waiters either way (a recovery frees
+        // capacity; a death lets a worker give up on a doomed wait)
+        self.freed.notify_all();
+    }
+
+    /// Claim a dispatch slot on the least-loaded healthy replica,
+    /// blocking until one exists. Returns `None` once [`shutdown`]
+    /// (`ReplicaPool::shutdown`) is called.
+    pub fn acquire(&self) -> Option<String> {
+        let mut replicas = self.replicas.lock().unwrap();
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            let best = replicas
+                .iter_mut()
+                .filter(|r| r.state == ReplicaState::Healthy && r.inflight < self.slots_per_replica)
+                .min_by_key(|r| r.inflight);
+            if let Some(replica) = best {
+                replica.inflight += 1;
+                return Some(replica.addr.clone());
+            }
+            // bounded wait: recheck shutdown/health even with no notify
+            let (guard, _) =
+                self.freed.wait_timeout(replicas, Duration::from_millis(200)).unwrap();
+            replicas = guard;
+        }
+    }
+
+    /// Release a slot taken by [`acquire`](ReplicaPool::acquire).
+    /// `ok = false` counts a dispatch failure toward unreachability;
+    /// `ok = true` clears the failure streak.
+    pub fn release(&self, addr: &str, ok: bool) {
+        let mut replicas = self.replicas.lock().unwrap();
+        if let Some(replica) = replicas.iter_mut().find(|r| r.addr == addr) {
+            replica.inflight = replica.inflight.saturating_sub(1);
+            if ok {
+                replica.consecutive_failures = 0;
+                if replica.state == ReplicaState::Unreachable {
+                    replica.state = ReplicaState::Healthy;
+                }
+            } else {
+                replica.consecutive_failures += 1;
+                if replica.consecutive_failures >= UNREACHABLE_AFTER as u64 {
+                    replica.state = ReplicaState::Unreachable;
+                }
+            }
+        }
+        drop(replicas);
+        self.freed.notify_all();
+    }
+
+    /// Snapshot of every replica's status, in configuration order.
+    pub fn statuses(&self) -> Vec<ReplicaStatus> {
+        self.replicas.lock().unwrap().clone()
+    }
+
+    /// How many replicas are currently dispatchable.
+    pub fn healthy_count(&self) -> usize {
+        self.replicas
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|r| r.state == ReplicaState::Healthy)
+            .count()
+    }
+
+    /// Stop the prober and unblock every `acquire` waiter with `None`.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.freed.notify_all();
+        let handle = self.prober.lock().unwrap().take();
+        if let Some(handle) = handle {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_names_round_trip() {
+        for state in
+            [ReplicaState::Healthy, ReplicaState::Draining, ReplicaState::Unreachable]
+        {
+            assert_eq!(ReplicaState::from_name(state.name()), Some(state));
+        }
+        assert_eq!(ReplicaState::from_name("zombie"), None);
+    }
+
+    #[test]
+    fn acquire_prefers_least_loaded_and_respects_slot_cap() {
+        // no live replica needed: acquire/release only touch pool state
+        let pool =
+            ReplicaPool::without_prober(&["127.0.0.1:1".into(), "127.0.0.1:2".into()], 2);
+        let a = pool.acquire().unwrap();
+        let b = pool.acquire().unwrap();
+        assert_ne!(a, b, "second acquire must take the idle replica");
+        let c = pool.acquire().unwrap();
+        let d = pool.acquire().unwrap();
+        assert_ne!(c, d);
+        // all 4 slots taken: a release must hand the slot to a blocked waiter
+        let pool2 = Arc::clone(&pool);
+        let waiter = thread::spawn(move || pool2.acquire());
+        thread::sleep(Duration::from_millis(50));
+        pool.release(&a, true);
+        let e = waiter.join().unwrap().unwrap();
+        assert_eq!(e, a);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn two_failures_mark_unreachable_and_success_recovers() {
+        let pool = ReplicaPool::without_prober(&["127.0.0.1:1".into()], 4);
+        let addr = pool.acquire().unwrap();
+        pool.release(&addr, false);
+        assert_eq!(pool.statuses()[0].state, ReplicaState::Healthy, "one strike is not out");
+        let addr = pool.acquire().unwrap();
+        pool.release(&addr, false);
+        assert_eq!(pool.statuses()[0].state, ReplicaState::Unreachable);
+        assert_eq!(pool.healthy_count(), 0);
+        // an unreachable replica is never handed out...
+        let pool2 = Arc::clone(&pool);
+        let waiter = thread::spawn(move || pool2.acquire());
+        thread::sleep(Duration::from_millis(50));
+        assert!(!waiter.is_finished(), "acquire must block with zero healthy replicas");
+        // ...until a successful contact (here: an ok release, as after a
+        // dispatch that worked) clears the streak and restores it
+        pool.release("127.0.0.1:1", true);
+        assert_eq!(waiter.join().unwrap().as_deref(), Some("127.0.0.1:1"));
+        assert_eq!(pool.statuses()[0].state, ReplicaState::Healthy);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks_waiters_with_none() {
+        let pool = ReplicaPool::without_prober(&["127.0.0.1:1".into()], 1);
+        let _slot = pool.acquire().unwrap();
+        let pool2 = Arc::clone(&pool);
+        let waiter = thread::spawn(move || pool2.acquire());
+        thread::sleep(Duration::from_millis(50));
+        pool.shutdown();
+        assert_eq!(waiter.join().unwrap(), None);
+    }
+}

@@ -80,7 +80,16 @@
 //!   JSON API on `std::net` (`helex serve`) exposing submit/poll/stream
 //!   routes over the registry, with a bounded accept queue, read
 //!   timeouts, structured errors and SIGINT graceful drain; plus the
-//!   `helex submit` client ([`server::client`]).
+//!   `helex submit` client ([`server::client`], with bounded
+//!   retry/backoff for transport failures).
+//! * [`fleet`] — the distributed layer over `server`: the `helex fleet`
+//!   coordinator fans batches of specs out to N `helex serve` replicas
+//!   ([`fleet::replica::ReplicaPool`] health probes + slot accounting,
+//!   [`fleet::dispatch::Dispatcher`] priority queue with fleet-wide
+//!   fingerprint dedup and requeue-on-failure,
+//!   [`fleet::quota::QuotaBook`] per-client admission quotas), promoting
+//!   the `store` to a shared cache tier so each distinct fingerprint is
+//!   computed exactly once across the fleet.
 //! * [`baselines`] — HETA-like and REVAMP-like comparators (Fig 11).
 //! * [`runtime`] — PJRT client executing the AOT-compiled XLA artifact
 //!   (built once by `python/compile/aot.py`; Python is never on the
@@ -98,6 +107,7 @@ pub mod cgra;
 pub mod coordinator;
 pub mod cost;
 pub mod dfg;
+pub mod fleet;
 pub mod mapper;
 pub mod metrics;
 pub mod ops;
@@ -115,6 +125,7 @@ pub use dfg::Dfg;
 pub use mapper::{
     MapFailure, MapOutcome, MapRequest, Mapper, MapperConfig, Mapping, MappingEngine,
 };
+pub use fleet::{Fleet, FleetConfig};
 pub use server::{Server, ServerConfig};
 pub use service::{ExplorationService, JobId, JobResult, JobSpec, Objective, ServiceConfig};
 pub use store::ResultStore;

@@ -3,7 +3,9 @@
 //! ```text
 //! helex repro [--quick] [--jobs N] [--search-threads N]
 //! helex serve [--addr H:P] [--jobs N] [--search-threads N] [--store-dir DIR]
+//! helex fleet --replicas A:P,B:P [--addr H:P] [--store-dir DIR] [--queue N] [--slots N]
 //! helex submit [--addr H:P] [--dfgs S4] [--size 9x9]
+//! helex submit --batch <fig9|...|all> [--addr H:P] [--priority 0..9] [--client NAME]
 //! helex exp <fig3|...|table8|all> [--quick] [--jobs N] [--l-test N] [--no-gsg]
 //! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N] [--trace-out FILE]
 //! helex map --dfg FFT --size 10x10
@@ -175,8 +177,100 @@ fn main() -> Result<()> {
             eprintln!("[helex] POST /v1/jobs · GET /v1/jobs/:id[/events] · /v1/healthz · /v1/stats");
             server.serve()?;
         }
+        "fleet" => {
+            let replicas: Vec<String> = args
+                .get("replicas")
+                .context("--replicas A:P,B:P required (comma-separated helex serve addresses)")?
+                .split(',')
+                .map(|a| a.trim().to_string())
+                .filter(|a| !a.is_empty())
+                .collect();
+            let replica_count = replicas.len();
+            let cfg = helex::FleetConfig {
+                addr: args.get_or("addr", "127.0.0.1:7880").to_string(),
+                replicas,
+                store_dir: args.get("store-dir").map(std::path::PathBuf::from),
+                store_capacity: args.usize_or("store-cap", 4096),
+                queue_cap: args.usize_or("queue", 256),
+                slots_per_replica: args.usize_or("slots", 2),
+                probe_interval: std::time::Duration::from_millis(args.u64_or("probe-ms", 1000)),
+                quota_burst: args.u64_or("quota-burst", 1024),
+                quota_rate: args.f64_or("quota-rate", 64.0),
+                ..Default::default()
+            };
+            let store_note = match &cfg.store_dir {
+                Some(dir) => format!("shared store {}", dir.display()),
+                None => "no shared store".to_string(),
+            };
+            let fleet = helex::Fleet::bind(cfg)?;
+            eprintln!(
+                "[helex fleet] coordinating on http://{} — {replica_count} replica(s), {store_note}",
+                fleet.local_addr()?,
+            );
+            eprintln!(
+                "[helex fleet] POST /v1/jobs · POST /v1/batches · GET /v1/batches/:id[/events] · /v1/quotas · /v1/healthz · /v1/stats"
+            );
+            fleet.serve()?;
+        }
         "submit" => {
             let addr = args.get_or("addr", "127.0.0.1:7878");
+            if let Some(suite_name) = args.get("batch") {
+                // a whole experiment suite as ONE fleet submission: every
+                // spec the suite would run locally, under one batch id
+                let cfg = build_config(&args);
+                let quick = !args.flag("paper-scale");
+                let defs = experiments::find(suite_name)?;
+                let mut specs = Vec::new();
+                for def in &defs {
+                    specs.extend((def.specs)(&cfg, quick));
+                }
+                if specs.is_empty() {
+                    bail!("suite '{suite_name}' produced no job specs");
+                }
+                let priority = args
+                    .get("priority")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(helex::fleet::DEFAULT_PRIORITY);
+                let batch = helex::fleet::BatchRequest {
+                    label: suite_name.to_string(),
+                    client: args.get_or("client", "cli").to_string(),
+                    priority,
+                    specs,
+                };
+                let (batch_id, ids) = helex::server::client::submit_batch(addr, &batch)?;
+                eprintln!("[helex] submitted {batch_id}: {} job(s) to {addr}", ids.len());
+                let body = helex::server::client::wait_batch(
+                    addr,
+                    batch_id,
+                    std::time::Duration::from_millis(250),
+                    4 * 3600, // poll ceiling: ~1h of 250ms polls
+                )?;
+                use helex::util::json::Json;
+                if let Some(rows) = body.get("jobs").and_then(Json::as_array) {
+                    for row in rows {
+                        let id = row.get("id").and_then(Json::as_str).unwrap_or("?");
+                        let label = row.get("label").and_then(Json::as_str).unwrap_or("?");
+                        let tag = if row
+                            .get("from_cache")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(false)
+                        {
+                            " [cached]"
+                        } else {
+                            ""
+                        };
+                        match row.get("best_cost").and_then(Json::as_f64) {
+                            Some(cost) => println!("{id}: {label} — cost {cost:.1}{tag}"),
+                            None => println!(
+                                "{id}: {label} — {}{tag}",
+                                row.get("outcome").and_then(Json::as_str).unwrap_or("?")
+                            ),
+                        }
+                    }
+                }
+                println!("{batch_id}: all {} job(s) done", ids.len());
+                return Ok(());
+            }
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").unwrap_or((9, 9));
             let mut spec = helex::JobSpec::new(
@@ -427,9 +521,18 @@ USAGE:
               [--store-cap N] [--queue N]
                                              HTTP job server (POST /v1/jobs, GET /v1/jobs/:id[/events],
                                              /v1/healthz, /v1/stats); Ctrl-C drains gracefully
+  helex fleet --replicas A:P,B:P [--addr HOST:PORT] [--store-dir DIR] [--store-cap N]
+              [--queue N] [--slots N] [--probe-ms N] [--quota-burst N] [--quota-rate F]
+                                             multi-node coordinator over N `helex serve` replicas:
+                                             POST /v1/jobs + /v1/batches, per-client quotas, job
+                                             priorities, replica health/drain, shared result store
   helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB] [--size RxC] [--l-test N]
                [--objective area|power] [--seed N] [--search-threads N] [--label NAME] [--json]
                                              submit one job over HTTP and wait for the result
+  helex submit --batch <suite> [--addr HOST:PORT] [--priority 0..9] [--client NAME]
+               [--l-test N] [--paper-scale]
+                                             submit a whole experiment suite to a fleet
+                                             coordinator as one batch and wait for it
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
             [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]

@@ -7,13 +7,60 @@
 //! failures surface as `anyhow` errors with the server's structured
 //! error message when one is present.
 
+use crate::fleet::{BatchId, BatchRequest};
 use crate::service::wire;
 use crate::service::{JobId, JobResult};
 use crate::util::json::{self, Json};
+use crate::util::rng::splitmix64;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 use std::time::Duration;
+
+/// Bounded retry for *transport-level* failures: connect refusal, read
+/// timeout, a connection dropped mid-response. HTTP responses of any
+/// status are returned, never retried — a 4xx/5xx is an answer, and
+/// retrying a 503 submit could double-enqueue a job.
+///
+/// Backoff is exponential (`base_delay × 2^(attempt-1)`, capped at
+/// `max_delay`) plus deterministic jitter in `[0, delay/4)` derived
+/// from `jitter_seed` via `splitmix64` — reproducible in tests, spread
+/// out in a fleet where every dispatcher seeds differently.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retry).
+    pub attempts: u32,
+    pub base_delay: Duration,
+    pub max_delay: Duration,
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            attempts: 4,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(1),
+            jitter_seed: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Single attempt, no retry — the historical client behaviour.
+    pub fn none() -> Self {
+        Self { attempts: 1, ..Default::default() }
+    }
+
+    /// The pause after the `attempt`-th failure (1-based). Pure, so the
+    /// backoff curve is unit-testable without sleeping.
+    pub fn delay_before(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        let capped = self.base_delay.saturating_mul(1u32 << shift).min(self.max_delay);
+        let jitter = (splitmix64(self.jitter_seed ^ attempt as u64) % 1000) as f64 / 4000.0;
+        capped + capped.mul_f64(jitter)
+    }
+}
 
 /// One raw HTTP exchange: returns `(status, body bytes)` with chunked
 /// transfer decoded. The byte-level entry point — the fuzz tests push
@@ -93,11 +140,49 @@ pub fn request_raw(
     Ok((status, body_bytes))
 }
 
+/// [`request_raw`] with bounded retry per `policy`. Only transport
+/// errors retry; any HTTP status returns on the first exchange that
+/// completes.
+pub fn request_raw_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    payload: &[u8],
+    policy: &RetryPolicy,
+) -> Result<(u16, Vec<u8>)> {
+    let attempts = policy.attempts.max(1);
+    let mut last = None;
+    for attempt in 1..=attempts {
+        match request_raw(addr, method, path, payload) {
+            Ok(reply) => return Ok(reply),
+            Err(e) => {
+                last = Some(e);
+                if attempt < attempts {
+                    std::thread::sleep(policy.delay_before(attempt));
+                }
+            }
+        }
+    }
+    let last = last.expect("at least one attempt ran");
+    Err(anyhow!("{method} {path} on {addr} failed after {attempts} attempt(s): {last}"))
+}
+
 /// One HTTP exchange with a JSON body: returns `(status, parsed body)`.
 /// Empty bodies parse as `Json::Null`.
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    request_with(addr, method, path, body, &RetryPolicy::none())
+}
+
+/// [`request`] with a retry policy for the transport.
+pub fn request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+    policy: &RetryPolicy,
+) -> Result<(u16, Json)> {
     let payload = body.map(|b| b.to_string()).unwrap_or_default();
-    let (status, body_bytes) = request_raw(addr, method, path, payload.as_bytes())?;
+    let (status, body_bytes) = request_raw_retry(addr, method, path, payload.as_bytes(), policy)?;
     if body_bytes.is_empty() {
         return Ok((status, Json::Null));
     }
@@ -130,7 +215,18 @@ pub fn get_json(addr: &str, path: &str) -> Result<Json> {
 
 /// Submit a spec; returns the assigned id.
 pub fn submit_spec(addr: &str, spec: &crate::service::JobSpec) -> Result<JobId> {
-    let (status, body) = request(addr, "POST", "/v1/jobs", Some(&wire::encode_spec(spec)))?;
+    submit_spec_retry(addr, spec, &RetryPolicy::none())
+}
+
+/// [`submit_spec`] with transport retry — what the fleet dispatcher
+/// uses, so a replica briefly mid-restart doesn't fail a dispatch.
+pub fn submit_spec_retry(
+    addr: &str,
+    spec: &crate::service::JobSpec,
+    policy: &RetryPolicy,
+) -> Result<JobId> {
+    let (status, body) =
+        request_with(addr, "POST", "/v1/jobs", Some(&wire::encode_spec(spec)), policy)?;
     if status != 202 {
         return Err(server_error(status, &body));
     }
@@ -138,6 +234,58 @@ pub fn submit_spec(addr: &str, spec: &crate::service::JobSpec) -> Result<JobId> 
         .and_then(Json::as_str)
         .and_then(|s| s.parse::<JobId>().ok())
         .ok_or_else(|| anyhow!("submit response carries no job id: {}", body.to_string()))
+}
+
+/// Submit a whole suite to a fleet coordinator as one batch; returns
+/// the batch id and the per-job ids, in submission order.
+pub fn submit_batch(addr: &str, batch: &BatchRequest) -> Result<(BatchId, Vec<JobId>)> {
+    let (status, body) = request(addr, "POST", "/v1/batches", Some(&wire::encode_batch(batch)))?;
+    if status != 202 {
+        return Err(server_error(status, &body));
+    }
+    let id = body
+        .get("id")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<BatchId>().ok())
+        .ok_or_else(|| anyhow!("batch response carries no batch id: {}", body.to_string()))?;
+    let rows = body
+        .get("jobs")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("batch response carries no jobs array: {}", body.to_string()))?;
+    let ids = rows
+        .iter()
+        .map(|row| {
+            row.get("id")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse::<JobId>().ok())
+                .ok_or_else(|| anyhow!("batch job row carries no id: {}", row.to_string()))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((id, ids))
+}
+
+/// Poll `GET /v1/batches/:id` until every job in the batch is done;
+/// returns the final aggregate body.
+pub fn wait_batch(
+    addr: &str,
+    id: BatchId,
+    poll_interval: Duration,
+    max_polls: usize,
+) -> Result<Json> {
+    let path = format!("/v1/batches/{id}");
+    for _ in 0..max_polls {
+        let body = get_json(addr, &path)?;
+        let total = body
+            .get("total")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("batch body carries no total: {}", body.to_string()))?;
+        let done = body.get("done").and_then(Json::as_u64).unwrap_or(0);
+        if done >= total {
+            return Ok(body);
+        }
+        std::thread::sleep(poll_interval);
+    }
+    bail!("batch {id} did not finish within {max_polls} polls")
 }
 
 /// Poll `GET /v1/jobs/:id` until the job is done; returns the decoded

@@ -328,9 +328,16 @@ fn route(mut stream: TcpStream, request: &Request, ctx: &Arc<ServerCtx>) {
     match (method, path) {
         ("POST", "/v1/jobs") => post_job(&mut stream, request, ctx),
         ("GET", "/v1/healthz") => {
+            // load fields ride along with liveness so a fleet
+            // coordinator's probe sees queue pressure, not just up/down
             let draining = ctx.shutdown.requested.load(Ordering::SeqCst);
+            let registry = ctx.registry.stats();
             let body = Json::obj(vec![
                 ("status", Json::str(if draining { "draining" } else { "ok" })),
+                ("draining", Json::Bool(draining)),
+                ("queued", Json::U64(registry.queued as u64)),
+                ("running", Json::U64(registry.running as u64)),
+                ("workers", Json::U64(ctx.service.workers() as u64)),
                 ("uptime_secs", Json::F64(ctx.started.elapsed().as_secs_f64())),
             ]);
             let _ = http::write_json(&mut stream, 200, &body);
@@ -506,6 +513,7 @@ fn stats_body(ctx: &ServerCtx) -> Json {
     };
     Json::obj(vec![
         ("workers", Json::U64(service.workers as u64)),
+        ("draining", Json::Bool(ctx.shutdown.requested.load(Ordering::SeqCst))),
         (
             "jobs",
             Json::obj(vec![

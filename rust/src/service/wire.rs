@@ -25,6 +25,9 @@
 use super::{JobId, JobOutcome, JobResult, JobSpec, Objective};
 use crate::cgra::{Grid, Layout};
 use crate::dfg::Dfg;
+use crate::fleet::quota::QuotaRule;
+use crate::fleet::replica::{ReplicaState, ReplicaStatus};
+use crate::fleet::{BatchRequest, DEFAULT_PRIORITY, MAX_BATCH_JOBS, MAX_PRIORITY};
 use crate::mapper::{MapperConfig, Mapping};
 use crate::ops::{GroupSet, Op};
 use crate::search::{SearchConfig, SearchEvent, SearchResult, SearchStats, TracePoint};
@@ -668,6 +671,136 @@ pub fn strip_volatile(j: &Json) -> Json {
     }
 }
 
+// ------------------------------------------------------------------ fleet
+
+pub fn encode_batch(batch: &BatchRequest) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&batch.label)),
+        ("client", Json::str(&batch.client)),
+        ("priority", Json::U64(batch.priority as u64)),
+        ("jobs", Json::Arr(batch.specs.iter().map(encode_spec).collect())),
+    ])
+}
+
+/// Decode a `POST /v1/batches` body. Optional fields: `label` (default
+/// `"batch"`), `client` (default `"anonymous"`), `priority` (default
+/// [`DEFAULT_PRIORITY`]); `jobs` is required, non-empty, and every
+/// entry must decode as a full job spec (errors carry the `jobs[i]:`
+/// index so a 4096-spec suite pinpoints its one bad entry).
+pub fn decode_batch(j: &Json) -> Result<BatchRequest> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(WireError::new("batch must be a JSON object"));
+    }
+    let label = match j.get("label") {
+        Some(l) => l
+            .as_str()
+            .ok_or_else(|| WireError::new("field 'label' must be a string"))?
+            .to_string(),
+        None => "batch".to_string(),
+    };
+    let client = match j.get("client") {
+        Some(c) => {
+            let c = c
+                .as_str()
+                .ok_or_else(|| WireError::new("field 'client' must be a string"))?;
+            if c.is_empty() {
+                return Err(WireError::new("field 'client' must be non-empty"));
+            }
+            c.to_string()
+        }
+        None => "anonymous".to_string(),
+    };
+    let priority = match j.get("priority") {
+        Some(p) => {
+            let p = p.as_u64().ok_or_else(|| {
+                WireError::new("field 'priority' must be a non-negative integer")
+            })?;
+            if p > MAX_PRIORITY as u64 {
+                return Err(WireError::new(format!("priority must be at most {MAX_PRIORITY}")));
+            }
+            p as u8
+        }
+        None => DEFAULT_PRIORITY,
+    };
+    let jobs = get_arr(j, "jobs")?;
+    if jobs.is_empty() {
+        return Err(WireError::new("batch must carry at least one job"));
+    }
+    if jobs.len() > MAX_BATCH_JOBS {
+        return Err(WireError::new(format!(
+            "batch carries {} jobs, at most {MAX_BATCH_JOBS} allowed",
+            jobs.len()
+        )));
+    }
+    let specs = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, job)| decode_spec(job).map_err(|e| WireError::new(format!("jobs[{i}]: {e}"))))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BatchRequest { label, client, priority, specs })
+}
+
+pub fn encode_quota(rule: &QuotaRule) -> Json {
+    Json::obj(vec![
+        ("client", Json::str(&rule.client)),
+        ("burst", Json::U64(rule.burst)),
+        ("per_sec", Json::F64(rule.per_sec)),
+    ])
+}
+
+pub fn decode_quota(j: &Json) -> Result<QuotaRule> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(WireError::new("quota rule must be a JSON object"));
+    }
+    let client = get_str(j, "client")?.to_string();
+    if client.is_empty() {
+        return Err(WireError::new("field 'client' must be non-empty"));
+    }
+    let burst = get_u64(j, "burst")?;
+    if burst == 0 {
+        return Err(WireError::new("field 'burst' must be at least 1"));
+    }
+    // the parser never yields NaN/inf, but decode_quota is also fed
+    // in-process values; keep it total either way
+    let per_sec = get_f64(j, "per_sec")?;
+    if !per_sec.is_finite() || per_sec < 0.0 {
+        return Err(WireError::new("field 'per_sec' must be a finite non-negative number"));
+    }
+    Ok(QuotaRule { client, burst, per_sec })
+}
+
+pub fn encode_replica_status(status: &ReplicaStatus) -> Json {
+    Json::obj(vec![
+        ("addr", Json::str(&status.addr)),
+        ("state", Json::str(status.state.name())),
+        ("inflight", Json::U64(status.inflight)),
+        ("queued", Json::U64(status.queued)),
+        ("running", Json::U64(status.running)),
+        ("consecutive_failures", Json::U64(status.consecutive_failures)),
+    ])
+}
+
+pub fn decode_replica_status(j: &Json) -> Result<ReplicaStatus> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(WireError::new("replica status must be a JSON object"));
+    }
+    let addr = get_str(j, "addr")?.to_string();
+    if addr.is_empty() {
+        return Err(WireError::new("field 'addr' must be non-empty"));
+    }
+    let state_name = get_str(j, "state")?;
+    let state = ReplicaState::from_name(state_name)
+        .ok_or_else(|| WireError::new(format!("unknown replica state '{state_name}'")))?;
+    Ok(ReplicaStatus {
+        addr,
+        state,
+        inflight: get_u64(j, "inflight")?,
+        queued: get_u64(j, "queued")?,
+        running: get_u64(j, "running")?,
+        consecutive_failures: get_u64(j, "consecutive_failures")?,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -809,6 +942,129 @@ mod tests {
             decode_event(&legacy).unwrap(),
             SearchEvent::LayoutTested { feasible: false, cost: 1.0, tested: 2, worker: 0 }
         );
+    }
+
+    #[test]
+    fn batch_roundtrip_and_defaults() {
+        let batch = BatchRequest {
+            label: "suite".into(),
+            client: "ci".into(),
+            priority: 8,
+            specs: vec![tiny_spec(), tiny_spec()],
+        };
+        let text = encode_batch(&batch).to_string();
+        let back = decode_batch(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.label, "suite");
+        assert_eq!(back.client, "ci");
+        assert_eq!(back.priority, 8);
+        assert_eq!(back.specs.len(), 2);
+        assert_eq!(back.specs[0].fingerprint(), batch.specs[0].fingerprint());
+
+        // a minimal batch only sends jobs
+        let minimal = json::parse(
+            r#"{"jobs":[{"dfgs":[{"name":"t","nodes":["load","store"],"edges":[[0,1]]}],
+                 "grid":{"rows":5,"cols":5}}]}"#,
+        )
+        .unwrap();
+        let back = decode_batch(&minimal).unwrap();
+        assert_eq!(back.label, "batch");
+        assert_eq!(back.client, "anonymous");
+        assert_eq!(back.priority, crate::fleet::DEFAULT_PRIORITY);
+    }
+
+    #[test]
+    fn invalid_batches_are_rejected_with_reasons() {
+        for (body, needle) in [
+            (r#"[1,2]"#, "object"),
+            (r#"{}"#, "jobs"),
+            (r#"{"jobs":[]}"#, "at least one job"),
+            (r#"{"jobs":0}"#, "array"),
+            (r#"{"jobs":[{"grid":{"rows":5,"cols":5}}]}"#, "jobs[0]"),
+            (r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}}],"priority":12}"#, "priority"),
+            (r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}}],"priority":-1}"#, "priority"),
+            (r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}}],"client":""}"#, "client"),
+            (r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}}],"client":7}"#, "client"),
+            (r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}}],"label":9}"#, "label"),
+        ] {
+            let err = decode_batch(&json::parse(body).unwrap()).unwrap_err();
+            assert!(
+                err.0.contains(needle),
+                "body {body} should fail mentioning '{needle}', got: {err}"
+            );
+        }
+        // the second bad spec is the one named
+        let j = json::parse(
+            r#"{"jobs":[{"dfgs":[],"grid":{"rows":5,"cols":5}},
+                 {"dfgs":[],"grid":{"rows":2,"cols":2}}]}"#,
+        )
+        .unwrap();
+        assert!(decode_batch(&j).unwrap_err().0.contains("jobs[1]"));
+    }
+
+    #[test]
+    fn quota_roundtrip_and_rejections() {
+        let rule = QuotaRule { client: "ci".into(), burst: 128, per_sec: 8.5 };
+        let back = decode_quota(&json::parse(&encode_quota(&rule).to_string()).unwrap()).unwrap();
+        assert_eq!(back, rule);
+        // integer-valued rates decode too (as_f64 accepts any numeric)
+        let j = json::parse(r#"{"client":"x","burst":4,"per_sec":2}"#).unwrap();
+        assert_eq!(decode_quota(&j).unwrap().per_sec, 2.0);
+        for (body, needle) in [
+            (r#"7"#, "object"),
+            (r#"{"burst":4,"per_sec":1.0}"#, "client"),
+            (r#"{"client":"","burst":4,"per_sec":1.0}"#, "non-empty"),
+            (r#"{"client":"x","per_sec":1.0}"#, "burst"),
+            (r#"{"client":"x","burst":0,"per_sec":1.0}"#, "at least 1"),
+            (r#"{"client":"x","burst":-2,"per_sec":1.0}"#, "burst"),
+            (r#"{"client":"x","burst":4}"#, "per_sec"),
+            (r#"{"client":"x","burst":4,"per_sec":-1.0}"#, "per_sec"),
+            (r#"{"client":"x","burst":4,"per_sec":"fast"}"#, "number"),
+        ] {
+            let err = decode_quota(&json::parse(body).unwrap()).unwrap_err();
+            assert!(
+                err.0.contains(needle),
+                "body {body} should fail mentioning '{needle}', got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn replica_status_roundtrip_and_rejections() {
+        for state in
+            [ReplicaState::Healthy, ReplicaState::Draining, ReplicaState::Unreachable]
+        {
+            let status = ReplicaStatus {
+                addr: "127.0.0.1:7878".into(),
+                state,
+                inflight: 2,
+                queued: 5,
+                running: 1,
+                consecutive_failures: 0,
+            };
+            let text = encode_replica_status(&status).to_string();
+            let back = decode_replica_status(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, status);
+        }
+        for (body, needle) in [
+            (r#"null"#, "object"),
+            (r#"{"state":"healthy"}"#, "addr"),
+            (r#"{"addr":"","state":"healthy"}"#, "non-empty"),
+            (
+                r#"{"addr":"x","state":"zombie","inflight":0,"queued":0,"running":0,"consecutive_failures":0}"#,
+                "unknown replica state",
+            ),
+            (r#"{"addr":"x","state":"healthy"}"#, "inflight"),
+            (
+                r#"{"addr":"x","state":"healthy","inflight":-1,"queued":0,"running":0,"consecutive_failures":0}"#,
+                "inflight",
+            ),
+        ] {
+            let err = decode_replica_status(&json::parse(body).unwrap()).unwrap_err();
+            assert!(
+                err.0.contains(needle),
+                "body {body} should fail mentioning '{needle}', got: {err}"
+            );
+        }
     }
 
     #[test]

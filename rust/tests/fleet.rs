@@ -1,0 +1,383 @@
+//! End-to-end tests of the fleet layer: a real `Fleet` coordinator on
+//! an ephemeral port fanning out to real `helex serve` replicas, driven
+//! over real sockets by the `server::client` helpers — the same path
+//! `helex submit --batch` and the CI fleet-smoke job use.
+
+use helex::coordinator::{experiments, ExperimentConfig};
+use helex::fleet::{BatchRequest, Fleet, FleetConfig, FleetHandle, DEFAULT_PRIORITY};
+use helex::server::{client, Server, ServerConfig, ServerHandle};
+use helex::service::wire;
+use helex::service::{ExplorationService, JobSpec};
+use helex::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "helex-fleet-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+struct RunningServer {
+    addr: String,
+    handle: ServerHandle,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl RunningServer {
+    fn start() -> Self {
+        let cfg = ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            jobs: 1,
+            queue_cap: 32,
+            ..Default::default()
+        };
+        let server = Server::bind(cfg).expect("bind replica on an ephemeral port");
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = server.handle().unwrap();
+        let thread = std::thread::spawn(move || server.serve().expect("replica exits cleanly"));
+        Self { addr, handle, thread }
+    }
+
+    fn stop(self) {
+        self.handle.begin_shutdown();
+        self.thread.join().expect("replica thread exits after drain");
+    }
+}
+
+struct RunningFleet {
+    addr: String,
+    handle: FleetHandle,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl RunningFleet {
+    fn start(cfg: FleetConfig) -> Self {
+        let fleet = Fleet::bind(cfg).expect("bind coordinator on an ephemeral port");
+        let addr = fleet.local_addr().unwrap().to_string();
+        let handle = fleet.handle().unwrap();
+        let thread = std::thread::spawn(move || fleet.serve().expect("fleet exits cleanly"));
+        Self { addr, handle, thread }
+    }
+
+    fn stop(self) {
+        self.handle.begin_shutdown();
+        self.thread.join().expect("fleet thread exits after drain");
+    }
+}
+
+fn fleet_config(replicas: Vec<String>, store_dir: Option<PathBuf>) -> FleetConfig {
+    FleetConfig {
+        addr: "127.0.0.1:0".into(),
+        replicas,
+        store_dir,
+        queue_cap: 32,
+        probe_interval: Duration::from_millis(200),
+        ..Default::default()
+    }
+}
+
+/// A quick deterministic spec: SAD (63 compute ops) cannot fit 5×5
+/// (9 compute cells), so the job resolves fast with an infeasible
+/// outcome. Varying the seed varies the fingerprint.
+fn quick_spec(seed: u64) -> JobSpec {
+    let mut spec = JobSpec::new(
+        "quick",
+        vec![helex::dfg::benchmarks::benchmark("SAD")],
+        helex::Grid::new(5, 5),
+    );
+    spec.search.l_test = 20;
+    spec.seed = seed;
+    spec
+}
+
+/// The acceptance-criteria E2E: the head of the fig9 sweep (plus a
+/// duplicate of its first spec) as ONE batch to a 2-replica fleet must
+/// yield results byte-identical (volatile fields aside) to the same
+/// specs through a single in-process `ExplorationService`, with each
+/// distinct fingerprint computed exactly once fleet-wide.
+#[test]
+fn batch_matches_direct_runs_and_computes_each_fingerprint_once() {
+    let cfg = ExperimentConfig { l_test_base: 40, gsg_passes: 1, ..Default::default() };
+    let defs = experiments::find("fig9").expect("fig9 exists");
+    let mut specs: Vec<JobSpec> = (defs[0].specs)(&cfg, true).into_iter().take(3).collect();
+    assert_eq!(specs.len(), 3, "fig9 has at least three sizes");
+    specs.push(specs[0].clone()); // 4 jobs, 3 distinct fingerprints
+
+    // ground truth: the same specs through one in-process service
+    let service = ExplorationService::with_jobs(1);
+    let direct: Vec<String> = specs
+        .iter()
+        .map(|s| wire::strip_volatile(&wire::encode_result(&service.run_job(s))).to_string())
+        .collect();
+
+    let r1 = RunningServer::start();
+    let r2 = RunningServer::start();
+    let dir = tmp_dir("e2e");
+    let fleet = RunningFleet::start(fleet_config(
+        vec![r1.addr.clone(), r2.addr.clone()],
+        Some(dir.clone()),
+    ));
+
+    let batch = BatchRequest {
+        label: "fig9-head".into(),
+        client: "e2e".into(),
+        priority: DEFAULT_PRIORITY,
+        specs: specs.clone(),
+    };
+    let (batch_id, ids) = client::submit_batch(&fleet.addr, &batch).expect("submit batch");
+    assert_eq!(ids.len(), 4);
+
+    let body = client::wait_batch(&fleet.addr, batch_id, Duration::from_millis(100), 6000)
+        .expect("batch finishes");
+    assert_eq!(body.get("total").and_then(Json::as_u64), Some(4));
+    assert_eq!(body.get("done").and_then(Json::as_u64), Some(4));
+    assert_eq!(body.get("label").and_then(Json::as_str), Some("fig9-head"));
+
+    for (i, id) in ids.iter().enumerate() {
+        let result = client::wait_result(&fleet.addr, *id, Duration::from_millis(50), 100)
+            .expect("job result");
+        let bytes = wire::strip_volatile(&wire::encode_result(&result)).to_string();
+        assert_eq!(
+            bytes, direct[i],
+            "fleet job {i} must be byte-identical to the direct run (volatile fields aside)"
+        );
+    }
+    // the duplicate spec joined the first job's slot instead of running
+    let dup = client::wait_result(&fleet.addr, ids[3], Duration::from_millis(50), 100).unwrap();
+    assert!(dup.from_cache, "duplicate fingerprint must not compute again");
+
+    let stats = client::get_json(&fleet.addr, "/v1/stats").unwrap();
+    let runs = stats.get("runs").unwrap();
+    assert_eq!(runs.get("distinct").and_then(Json::as_u64), Some(3));
+    assert_eq!(
+        runs.get("computed").and_then(Json::as_u64),
+        Some(3),
+        "each distinct fingerprint computed exactly once fleet-wide"
+    );
+    assert_eq!(runs.get("dedup_hits").and_then(Json::as_u64), Some(1));
+    assert_eq!(
+        stats.get("replicas").and_then(Json::as_array).map(Vec::len),
+        Some(2),
+        "stats report both replicas"
+    );
+
+    // the shared store holds every computed fingerprint; a fresh fleet
+    // over the same store answers without recomputing
+    fleet.stop();
+    let fleet = RunningFleet::start(fleet_config(
+        vec![r1.addr.clone(), r2.addr.clone()],
+        Some(dir.clone()),
+    ));
+    let (warm_id, warm_ids) = client::submit_batch(&fleet.addr, &batch).expect("warm batch");
+    client::wait_batch(&fleet.addr, warm_id, Duration::from_millis(50), 1200).expect("warm done");
+    let warm = client::wait_result(&fleet.addr, warm_ids[0], Duration::from_millis(50), 100)
+        .unwrap();
+    assert!(warm.from_cache, "restarted coordinator serves from the shared store");
+    let bytes = wire::strip_volatile(&wire::encode_result(&warm)).to_string();
+    assert_eq!(bytes, direct[0], "store round-trip preserves every byte that matters");
+    let stats = client::get_json(&fleet.addr, "/v1/stats").unwrap();
+    let runs = stats.get("runs").unwrap();
+    assert_eq!(runs.get("computed").and_then(Json::as_u64), Some(0));
+    assert_eq!(runs.get("store_hits").and_then(Json::as_u64), Some(3));
+
+    fleet.stop();
+    r1.stop();
+    r2.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Killing a replica mid-batch loses no jobs: its work is requeued onto
+/// the survivor and every job still resolves.
+#[test]
+fn replica_departure_mid_batch_loses_no_jobs() {
+    let specs: Vec<JobSpec> = (0..6).map(|i| quick_spec(1000 + i)).collect();
+    let r1 = RunningServer::start();
+    let r2 = RunningServer::start();
+    let fleet = RunningFleet::start(fleet_config(vec![r1.addr.clone(), r2.addr.clone()], None));
+
+    let batch = BatchRequest {
+        label: "departure".into(),
+        client: "e2e".into(),
+        priority: DEFAULT_PRIORITY,
+        specs,
+    };
+    let (batch_id, ids) = client::submit_batch(&fleet.addr, &batch).expect("submit batch");
+    // take replica 2 down right away — whatever it had accepted or was
+    // about to be handed must end up on replica 1 instead
+    r2.stop();
+
+    let body = client::wait_batch(&fleet.addr, batch_id, Duration::from_millis(100), 1200)
+        .expect("batch finishes despite the departure");
+    assert_eq!(body.get("done").and_then(Json::as_u64), Some(6), "zero lost jobs");
+    for id in &ids {
+        let result = client::wait_result(&fleet.addr, *id, Duration::from_millis(50), 100)
+            .expect("every job resolves");
+        assert!(result.outcome.infeasible_reason().is_some(), "SAD cannot fit 5x5");
+    }
+    let stats = client::get_json(&fleet.addr, "/v1/stats").unwrap();
+    let runs = stats.get("runs").unwrap();
+    assert_eq!(runs.get("distinct").and_then(Json::as_u64), Some(6));
+    assert_eq!(runs.get("computed").and_then(Json::as_u64), Some(6));
+
+    fleet.stop();
+    r1.stop();
+}
+
+/// Admission control end to end: an over-budget batch is refused whole
+/// with a 429, a within-budget one is admitted, and `POST /v1/quotas`
+/// raises a client's budget at runtime.
+#[test]
+fn quotas_gate_admission_and_can_be_raised_at_runtime() {
+    let r1 = RunningServer::start();
+    let mut cfg = fleet_config(vec![r1.addr.clone()], None);
+    cfg.quota_burst = 2;
+    cfg.quota_rate = 0.0;
+    let fleet = RunningFleet::start(cfg);
+
+    let batch = |n: u64| BatchRequest {
+        label: "quota".into(),
+        client: "t3".into(),
+        priority: 7,
+        specs: (0..n).map(|i| quick_spec(2000 + i)).collect(),
+    };
+    // three jobs can never fit a burst of two: refused whole
+    let err = client::submit_batch(&fleet.addr, &batch(3)).unwrap_err();
+    assert!(err.to_string().contains("quota_exhausted"), "got: {err}");
+
+    // two jobs fit exactly; the bucket is now empty and never refills
+    let (batch_id, _) = client::submit_batch(&fleet.addr, &batch(2)).expect("within budget");
+    let single = {
+        let mut body = wire::encode_spec(&quick_spec(3000));
+        if let Json::Obj(pairs) = &mut body {
+            pairs.push(("client".to_string(), Json::str("t3")));
+        }
+        body
+    };
+    let (status, reply) = client::request(&fleet.addr, "POST", "/v1/jobs", Some(&single)).unwrap();
+    assert_eq!(status, 429, "empty zero-rate bucket refuses, got: {reply:?}");
+
+    // raise the budget at runtime: the rule takes effect immediately
+    let rule = Json::obj(vec![
+        ("client", Json::str("t3")),
+        ("burst", Json::U64(8)),
+        ("per_sec", Json::F64(4.0)),
+    ]);
+    let (status, _) = client::request(&fleet.addr, "POST", "/v1/quotas", Some(&rule)).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = client::request(&fleet.addr, "POST", "/v1/jobs", Some(&single)).unwrap();
+    assert_eq!(status, 202, "raised quota admits the same submission");
+
+    let quotas = client::get_json(&fleet.addr, "/v1/quotas").unwrap();
+    let row = quotas
+        .get("clients")
+        .and_then(Json::as_array)
+        .and_then(|rows| {
+            rows.iter()
+                .find(|r| r.get("client").and_then(Json::as_str) == Some("t3"))
+                .cloned()
+        })
+        .expect("t3 has a listed rule");
+    assert_eq!(row.get("burst").and_then(Json::as_u64), Some(8));
+
+    client::wait_batch(&fleet.addr, batch_id, Duration::from_millis(100), 1200).unwrap();
+    fleet.stop();
+    r1.stop();
+}
+
+/// Malformed fleet submissions answer structured 4xx errors, and the
+/// coordinator survives all of them (healthz at the end proves it).
+#[test]
+fn malformed_fleet_requests_get_4xx_and_the_coordinator_survives() {
+    let r1 = RunningServer::start();
+    let fleet = RunningFleet::start(fleet_config(vec![r1.addr.clone()], None));
+
+    let bad_batches: &[&str] = &[
+        "",
+        "{",
+        "not json at all",
+        "[1,2,3]",
+        "null",
+        "{}",
+        "{\"jobs\":[]}",
+        "{\"jobs\":{}}",
+        "{\"jobs\":[{}]}",
+        "{\"jobs\":[{\"dfgs\":0,\"grid\":{\"rows\":5,\"cols\":5}}]}",
+        "{\"client\":\"\",\"jobs\":[{}]}",
+        "{\"priority\":12,\"jobs\":[{}]}",
+        "{\"priority\":-1,\"jobs\":[{}]}",
+    ];
+    for body in bad_batches {
+        let (status, reply) =
+            client::request_raw(&fleet.addr, "POST", "/v1/batches", body.as_bytes()).unwrap();
+        assert_eq!(status, 400, "batch body {body:?} must be a 400");
+        let reply = String::from_utf8(reply).unwrap();
+        assert!(reply.contains("\"error\""), "structured error body, got {reply}");
+    }
+
+    let bad_quotas: &[&str] = &[
+        "null",
+        "{}",
+        "{\"client\":\"\"}",
+        "{\"client\":\"x\",\"burst\":0}",
+        "{\"client\":\"x\",\"per_sec\":-1}",
+    ];
+    for body in bad_quotas {
+        let (status, _) =
+            client::request_raw(&fleet.addr, "POST", "/v1/quotas", body.as_bytes()).unwrap();
+        assert_eq!(status, 400, "quota body {body:?} must be a 400");
+    }
+
+    // a valid spec with an invalid priority / client rider is refused
+    let spec = quick_spec(4000);
+    let with = |key: &str, value: Json| {
+        let mut body = wire::encode_spec(&spec);
+        if let Json::Obj(pairs) = &mut body {
+            pairs.push((key.to_string(), value));
+        }
+        body
+    };
+    let (status, _) = client::request(
+        &fleet.addr,
+        "POST",
+        "/v1/jobs",
+        Some(&with("priority", Json::U64(99))),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "priority over the cap");
+    let (status, _) = client::request(
+        &fleet.addr,
+        "POST",
+        "/v1/jobs",
+        Some(&with("client", Json::U64(5))),
+    )
+    .unwrap();
+    assert_eq!(status, 400, "non-string client");
+
+    // routing errors
+    let (status, _) = client::request_raw(&fleet.addr, "DELETE", "/v1/batches", b"").unwrap();
+    assert_eq!(status, 405);
+    let (status, _) =
+        client::request_raw(&fleet.addr, "GET", "/v1/batches/garbage!", b"").unwrap();
+    assert_eq!(status, 400, "unparseable batch id");
+    let (status, _) =
+        client::request_raw(&fleet.addr, "GET", "/v1/batches/batch-00ff", b"").unwrap();
+    assert_eq!(status, 404, "well-formed but unknown batch id");
+    let (status, _) = client::request_raw(&fleet.addr, "GET", "/v1/jobs/job-00ff", b"").unwrap();
+    assert_eq!(status, 404, "well-formed but unknown job id");
+    let (status, _) = client::request_raw(&fleet.addr, "GET", "/nope", b"").unwrap();
+    assert_eq!(status, 404);
+
+    // after all of that, the coordinator still answers
+    let health = client::get_json(&fleet.addr, "/v1/healthz").unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(health.get("role").and_then(Json::as_str), Some("coordinator"));
+    fleet.stop();
+    r1.stop();
+}

@@ -244,3 +244,77 @@ fn submit_then_poll_surfaces_queue_states_and_infeasible_results() {
     assert!(body.get("result").is_some());
     server.stop();
 }
+
+#[test]
+fn transport_retry_survives_a_flaky_listener_and_reports_exhaustion() {
+    use helex::server::client::RetryPolicy;
+
+    // a listener that kills the first two connections before answering
+    // and serves a proper HTTP response on the third
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let flaky = std::thread::spawn(move || {
+        for i in 0..3 {
+            let (mut stream, _) = listener.accept().unwrap();
+            if i < 2 {
+                drop(stream); // reset before any response bytes
+                continue;
+            }
+            let mut head = [0u8; 4096];
+            let _ = stream.read(&mut head);
+            let body = br#"{"ok":true}"#;
+            let reply = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                body.len()
+            );
+            stream.write_all(reply.as_bytes()).unwrap();
+            stream.write_all(body).unwrap();
+        }
+    });
+
+    let policy = RetryPolicy {
+        attempts: 5,
+        base_delay: Duration::from_millis(10),
+        max_delay: Duration::from_millis(40),
+        jitter_seed: 7,
+    };
+    let (status, body) = client::request_raw_retry(&addr, "GET", "/v1/healthz", b"", &policy)
+        .expect("an attempt within the budget reaches the healthy exchange");
+    assert_eq!(status, 200);
+    assert_eq!(String::from_utf8(body).unwrap(), r#"{"ok":true}"#);
+    flaky.join().unwrap();
+
+    // the listener is gone: every attempt fails and the error says how
+    // many were made
+    let exhausted = RetryPolicy {
+        attempts: 3,
+        base_delay: Duration::from_millis(1),
+        max_delay: Duration::from_millis(2),
+        jitter_seed: 7,
+    };
+    let err =
+        client::request_raw_retry(&addr, "GET", "/v1/healthz", b"", &exhausted).unwrap_err();
+    assert!(err.to_string().contains("3 attempt(s)"), "got: {err}");
+}
+
+#[test]
+fn retry_backoff_is_deterministic_exponential_and_bounded() {
+    use helex::server::client::RetryPolicy;
+
+    let policy = RetryPolicy::default();
+    for attempt in 1..=6u32 {
+        let delay = policy.delay_before(attempt);
+        assert_eq!(delay, policy.delay_before(attempt), "same seed, same attempt, same delay");
+        let shift = attempt.saturating_sub(1).min(16);
+        let capped = policy.base_delay.saturating_mul(1u32 << shift).min(policy.max_delay);
+        assert!(delay >= capped, "jitter only ever adds to the exponential base");
+        assert!(delay <= capped.mul_f64(1.25), "jitter stays under a quarter of the delay");
+    }
+    // the curve saturates at max_delay (plus jitter), never past it
+    assert!(policy.delay_before(30) <= policy.max_delay.mul_f64(1.25));
+    // a different seed lands on a different jitter somewhere on the curve
+    let other = RetryPolicy { jitter_seed: 1, ..RetryPolicy::default() };
+    assert!((1..=6).any(|n| other.delay_before(n) != policy.delay_before(n)));
+    // the no-retry policy is a single attempt
+    assert_eq!(RetryPolicy::none().attempts, 1);
+}
