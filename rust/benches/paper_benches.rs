@@ -176,6 +176,24 @@ fn main() {
         }
     }
 
+    // Workload-generator throughput: graphs/sec of `dfg::gen` at the
+    // loadgen default shape, including the interchange encode — the
+    // per-request cost `helex loadgen` pays before it ever touches the
+    // network. Seeds advance deterministically (no wall clock).
+    if h.enabled("gen::throughput") {
+        println!("\n== workload generator throughput (default shape + JSON encode) ==");
+        let mut seed = 0u64;
+        h.bench("gen::throughput", || {
+            seed = seed.wrapping_add(1);
+            let cfg = helex::dfg::gen::GenConfig { seed, ..Default::default() };
+            let dfg = helex::dfg::gen::generate(&cfg);
+            helex::dfg::io::to_json_string(&dfg)
+        });
+        if let Some(r) = h.results.iter().rev().find(|r| r.name == "gen::throughput") {
+            println!("    -> {:.0} graphs/s", 1e9 / r.median_ns.max(1e-9));
+        }
+    }
+
     // Result-store round-trip: encode+write+read+decode of one real
     // completed JobResult. This is the per-job overhead `helex serve`
     // pays for durability; it must stay orders of magnitude under the

@@ -1,0 +1,379 @@
+//! Seeded random-DFG generator: fuzzing and load-generation workloads.
+//!
+//! [`generate`] builds a structurally valid DAG from a [`GenConfig`] —
+//! a pure function of the config, driven entirely by the deterministic
+//! [`Rng`] stream, so the same seed and knobs yield a byte-identical
+//! graph on any platform, at any thread count, in debug or release
+//! (the contract `helex loadgen` and the fuzz harness depend on).
+//!
+//! Construction is layered: loads form layer 0, each compute node is
+//! assigned a layer in `1..=depth`, stores come last; a node's inputs
+//! are drawn only from strictly earlier layers, so the result is a DAG
+//! with no self-loops or duplicate edges *by construction*, and a
+//! repair pass guarantees every produced value is consumed. Infeasible
+//! knob combinations (more loads than the op mix can absorb, absurd
+//! counts) are clamped, never rejected: `generate` is total and always
+//! returns a graph that passes [`Dfg::validate`].
+
+use super::Dfg;
+use crate::ops::{GroupSet, Op, ALL_OPS};
+use crate::util::rng::Rng;
+
+/// Shape knobs for one generated graph. The defaults make a small,
+/// mixed-group kernel comparable to the paper's smaller benchmarks.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    /// Name prefix; the graph is named `"{name}-{seed:016x}"` so
+    /// distinct seeds hash to distinct job fingerprints.
+    pub name: String,
+    /// RNG seed — the whole graph is a function of this plus the knobs.
+    pub seed: u64,
+    /// Load (source) nodes. Clamped to `1..=512`.
+    pub loads: usize,
+    /// Compute (non-memory) nodes. Clamped to `1..=1024`.
+    pub compute: usize,
+    /// Store (sink) nodes. Clamped to `1..=512`, then raised if the op
+    /// mix cannot absorb every load (coverage needs sinks).
+    pub stores: usize,
+    /// Op-group mix: compute ops are drawn only from these groups
+    /// (memory is implicit). An empty/compute-free mask falls back to
+    /// all compute groups.
+    pub groups: GroupSet,
+    /// Probability that a binary-capable op receives two inputs —
+    /// shapes the fan-in (and with it the edge count).
+    pub binary_p: f64,
+    /// Soft cap on consumers per producer (fan-out). 0 = unbounded.
+    pub max_fanout: usize,
+    /// Target number of compute layers (graph depth). 0 = auto
+    /// (roughly `sqrt(compute)`).
+    pub depth: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            name: "gen".into(),
+            seed: 0,
+            loads: 4,
+            compute: 12,
+            stores: 2,
+            groups: GroupSet::all_compute(),
+            binary_p: 0.6,
+            max_fanout: 4,
+            depth: 0,
+        }
+    }
+}
+
+/// Draw a config scaled by the property-test size hint — the fuzz
+/// harness's distribution over graph shapes.
+pub fn arb_config(rng: &mut Rng, size: usize) -> GenConfig {
+    let seed = rng.next_u64();
+    GenConfig {
+        name: "fuzz".into(),
+        seed,
+        loads: 1 + rng.below(2 + size / 2),
+        compute: 1 + rng.below(2 + 2 * size),
+        stores: 1 + rng.below(1 + size / 2),
+        // a random group subset; a useless mask falls back inside
+        // generate, so every draw is a legal config
+        groups: GroupSet((rng.next_u64() & 0x3f) as u8),
+        binary_p: rng.f64(),
+        max_fanout: [0usize, 2, 3, 4, 8][rng.below(5)],
+        depth: if rng.below(3) == 0 { 1 + rng.below(6) } else { 0 },
+    }
+}
+
+/// One input pick: uncovered-first (keeps every producer consumed, so
+/// the repair pass rarely fires), otherwise a bounded random probe that
+/// respects the fan-out cap, with a deterministic fallback when the
+/// probe keeps colliding.
+fn pick_producer(
+    rng: &mut Rng,
+    visible: usize,
+    outdeg: &[usize],
+    picked: &[usize],
+    max_fanout: usize,
+) -> usize {
+    if rng.chance(0.6) {
+        if let Some(u) = (0..visible).find(|u| outdeg[*u] == 0 && !picked.contains(u)) {
+            return u;
+        }
+    }
+    for _ in 0..32 {
+        let u = rng.below(visible);
+        if picked.contains(&u) {
+            continue;
+        }
+        if max_fanout > 0 && outdeg[u] >= max_fanout {
+            continue;
+        }
+        return u;
+    }
+    // every unsaturated producer already picked: ignore the (soft)
+    // fan-out cap rather than fail — the caller guarantees
+    // picked.len() < visible, so a free producer exists
+    (0..visible).find(|u| !picked.contains(u)).unwrap_or(0)
+}
+
+/// Build the graph described by `cfg`. Total and deterministic; the
+/// result always passes [`Dfg::validate`].
+pub fn generate(cfg: &GenConfig) -> Dfg {
+    let loads = cfg.loads.clamp(1, 512);
+    let compute = cfg.compute.clamp(1, 1024);
+    let mut rng = Rng::seed(cfg.seed);
+
+    let mut pool: Vec<Op> = ALL_OPS
+        .iter()
+        .copied()
+        .filter(|op| !op.is_memory() && cfg.groups.contains(op.group()))
+        .collect();
+    if pool.is_empty() {
+        pool = ALL_OPS.iter().copied().filter(|op| !op.is_memory()).collect();
+    }
+
+    let ops: Vec<Op> = (0..compute).map(|_| *rng.choose(&pool)).collect();
+    let binary_capable = ops.iter().filter(|op| op.arity() == 2).count();
+    // every producer needs a consumer; two-input nodes and stores are
+    // the only slack, so grow the sink count when the drawn op mix
+    // cannot absorb every load
+    let stores = cfg.stores.clamp(1, 512).max(loads.saturating_sub(binary_capable));
+
+    let depth = if cfg.depth > 0 {
+        cfg.depth.min(compute)
+    } else {
+        let mut d = 1usize;
+        while (d + 1) * (d + 1) <= compute {
+            d += 1;
+        }
+        d
+    };
+    // one layer per compute node, each of 1..=depth guaranteed
+    // nonempty; sorted so compute-node order is topological
+    let mut layers: Vec<usize> = (0..compute)
+        .map(|k| if k < depth { k + 1 } else { rng.range(1, depth + 1) })
+        .collect();
+    layers.sort_unstable();
+
+    // fan-in per compute node, forcing enough two-input nodes that all
+    // loads can be absorbed (only needed when loads > stores, in which
+    // case loads >= 2 and every node sees >= 2 producers)
+    let mut indeg: Vec<usize> = ops
+        .iter()
+        .map(|op| if op.arity() == 2 && rng.chance(cfg.binary_p) { 2 } else { 1 })
+        .collect();
+    let required2 = loads.saturating_sub(stores);
+    let mut n2 = indeg.iter().filter(|&&d| d == 2).count();
+    for i in 0..compute {
+        if n2 >= required2 {
+            break;
+        }
+        if ops[i].arity() == 2 && indeg[i] == 1 {
+            indeg[i] = 2;
+            n2 += 1;
+        }
+    }
+
+    let total_producers = loads + compute;
+    let mut outdeg = vec![0usize; total_producers];
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut indeg_actual = vec![0usize; compute];
+
+    for i in 0..compute {
+        // producers in strictly earlier layers (plus all loads)
+        let visible = loads + layers.partition_point(|&l| l < layers[i]);
+        let want = indeg[i].min(visible);
+        let gi = (loads + i) as u32;
+        let mut picked: Vec<usize> = Vec::with_capacity(want);
+        for _ in 0..want {
+            let choice = pick_producer(&mut rng, visible, &outdeg, &picked, cfg.max_fanout);
+            picked.push(choice);
+            outdeg[choice] += 1;
+            edges.push((choice as u32, gi));
+        }
+        indeg_actual[i] = want;
+    }
+
+    for j in 0..stores {
+        let gj = (total_producers + j) as u32;
+        // drain the latest uncovered producer; otherwise a bounded
+        // random probe under the fan-out cap
+        let choice = match (0..total_producers).rev().find(|&u| outdeg[u] == 0) {
+            Some(u) => u,
+            None => {
+                let mut c = rng.below(total_producers);
+                for _ in 0..32 {
+                    if cfg.max_fanout == 0 || outdeg[c] < cfg.max_fanout {
+                        break;
+                    }
+                    c = rng.below(total_producers);
+                }
+                c
+            }
+        };
+        outdeg[choice] += 1;
+        edges.push((choice as u32, gj));
+    }
+
+    let mut nodes: Vec<Op> = Vec::with_capacity(total_producers + stores);
+    nodes.extend(std::iter::repeat(Op::Load).take(loads));
+    nodes.extend(ops.iter().copied());
+    nodes.extend(std::iter::repeat(Op::Store).take(stores));
+
+    let layer_of = |u: usize| -> usize {
+        if u < loads {
+            0
+        } else {
+            layers[u - loads]
+        }
+    };
+
+    // coverage repair: every load/compute value must be consumed. Each
+    // fix targets a strictly later layer (or a store), so edges keep
+    // increasing in node index and the DAG property is preserved.
+    for u in 0..total_producers {
+        if outdeg[u] > 0 {
+            continue;
+        }
+        let gu = u as u32;
+        // (a) a later binary node with a free input slot
+        let free_slot = (0..compute).find(|&c| {
+            let gc = (loads + c) as u32;
+            layer_of(loads + c) > layer_of(u)
+                && ops[c].arity() == 2
+                && indeg_actual[c] == 1
+                && !edges.contains(&(gu, gc))
+        });
+        if let Some(c) = free_slot {
+            edges.push((gu, (loads + c) as u32));
+            indeg_actual[c] = 2;
+            outdeg[u] += 1;
+            continue;
+        }
+        // (b) steal a slot from an over-shared producer feeding a
+        // later consumer (the donor keeps >= 1 consumer)
+        let steal = (0..edges.len()).find(|&e| {
+            let (p, c) = edges[e];
+            let (p, c) = (p as usize, c as usize);
+            outdeg[p] >= 2
+                && (c >= total_producers || layer_of(c) > layer_of(u))
+                && !edges.contains(&(gu, c as u32))
+        });
+        if let Some(e) = steal {
+            let p = edges[e].0 as usize;
+            edges[e] = (gu, edges[e].1);
+            outdeg[p] -= 1;
+            outdeg[u] += 1;
+            continue;
+        }
+        // (c) last resort: drain through a fresh store
+        let gs = nodes.len() as u32;
+        nodes.push(Op::Store);
+        edges.push((gu, gs));
+        outdeg[u] += 1;
+    }
+
+    let dfg = Dfg { name: format!("{}-{:016x}", cfg.name, cfg.seed), nodes, edges };
+    debug_assert!(dfg.validate().is_empty(), "generator bug: {:?}", dfg.validate());
+    dfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::io;
+    use crate::ops::OpGroup;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn generated_graphs_are_always_valid() {
+        forall("gen_valid", 300, 0x6e11, |g| {
+            let cfg = arb_config(g.rng, g.size);
+            let d = generate(&cfg);
+            let errs = d.validate();
+            if !errs.is_empty() {
+                return Err(format!("cfg {cfg:?} produced invalid graph: {errs:?}"));
+            }
+            if d.topo_order().is_none() {
+                return Err(format!("cfg {cfg:?} produced a cyclic graph"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn same_seed_and_config_is_byte_identical() {
+        forall("gen_deterministic", 100, 0x6e12, |g| {
+            let cfg = arb_config(g.rng, g.size);
+            let a = io::to_json_string(&generate(&cfg));
+            let b = io::to_json_string(&generate(&cfg));
+            if a != b {
+                return Err(format!("cfg {cfg:?} produced different bytes"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shape_knobs_are_respected() {
+        let cfg = GenConfig {
+            loads: 5,
+            compute: 20,
+            stores: 3,
+            depth: 4,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        assert_eq!(d.compute_ops(), 20);
+        assert!(d.nodes[..5].iter().all(|&op| op == Op::Load));
+        // a path visits at most one node per compute layer
+        assert!(d.critical_path_nodes() <= 4 + 2, "{}", d.critical_path_nodes());
+
+        let mut arith_only = GroupSet::EMPTY;
+        arith_only.insert(OpGroup::Arith);
+        let d = generate(&GenConfig { groups: arith_only, ..Default::default() });
+        for op in d.nodes.iter().filter(|op| !op.is_memory()) {
+            assert_eq!(op.group(), OpGroup::Arith, "{op}");
+        }
+    }
+
+    #[test]
+    fn name_carries_the_seed() {
+        let d = generate(&GenConfig { seed: 0xABCD, ..Default::default() });
+        assert_eq!(d.name, "gen-000000000000abcd");
+    }
+
+    #[test]
+    fn absurd_configs_are_clamped_within_interchange_caps() {
+        let cfg = GenConfig {
+            loads: 10_000,
+            compute: 10_000,
+            stores: 10_000,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        assert!(d.validate().is_empty());
+        assert!(d.num_nodes() <= io::MAX_NODES, "{}", d.num_nodes());
+        assert!(d.num_edges() <= io::MAX_EDGES, "{}", d.num_edges());
+        let back = io::from_json_str(&io::to_json_string(&d)).unwrap();
+        assert_eq!(back.nodes, d.nodes);
+        assert_eq!(back.edges, d.edges);
+    }
+
+    #[test]
+    fn unary_only_mix_still_covers_every_load() {
+        // Other = Exp/Log/Sqrt/Sin/Cos, all unary: loads can only drain
+        // through stores, so the generator must grow the sink count
+        let mut other_only = GroupSet::EMPTY;
+        other_only.insert(OpGroup::Other);
+        let cfg = GenConfig {
+            loads: 8,
+            stores: 1,
+            groups: other_only,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        assert!(d.validate().is_empty(), "{:?}", d.validate());
+        assert!(d.nodes.iter().filter(|&&op| op == Op::Store).count() >= 8);
+    }
+}

@@ -1,0 +1,676 @@
+//! DFG interchange: validated JSON and DOT import/export.
+//!
+//! This is the ingestion front door for externally-authored workloads:
+//! compilers, graph tooling and load generators hand graphs to HeLEx in
+//! one of two textual forms and get back a structurally-checked
+//! [`Dfg`] or a precise [`DfgIoError`] — decoding is *total* (never
+//! panics, whatever the bytes) and *validating* (everything
+//! [`Dfg::validate_typed`] enforces is re-checked here, plus size caps
+//! so a hostile payload cannot balloon memory).
+//!
+//! **JSON** is the canonical format, shared byte-for-byte with the wire
+//! codec ([`crate::service::wire`] delegates here):
+//!
+//! ```json
+//! {"name":"sob","nodes":["load","load","mul","add","store"],
+//!  "edges":[[0,2],[1,2],[2,3],[1,3],[3,4]]}
+//! ```
+//!
+//! `nodes[i]` is the op of node `i` (see [`Op::name`]); `edges` are
+//! `[src,dst]` index pairs. Encoding is deterministic — fixed key
+//! order, compact output — so the same graph always serializes to the
+//! same bytes on any platform.
+//!
+//! **DOT** (a practical subset of Graphviz) is supported for interop:
+//! node statements must carry a `label` attribute naming the op, edge
+//! statements use `->`, and nodes must be declared before they are
+//! referenced. `// …`, `# …` and `/* … */` comments are skipped;
+//! unknown attributes are ignored.
+
+use super::{Dfg, DfgError};
+use crate::ops::Op;
+use crate::util::json::{self, Json};
+use std::fmt;
+use std::path::Path;
+
+/// Upper bound on nodes accepted from an interchange payload.
+pub const MAX_NODES: usize = 4096;
+
+/// Upper bound on edges accepted from an interchange payload.
+pub const MAX_EDGES: usize = 16384;
+
+/// Upper bound on a graph name, in bytes.
+pub const MAX_NAME_LEN: usize = 256;
+
+/// Upper bound on a DOT document, in bytes (JSON is bounded by the HTTP
+/// body cap upstream; DOT can also arrive from local files).
+pub const MAX_DOT_BYTES: usize = 4 * 1024 * 1024;
+
+/// Why an interchange payload was refused.
+#[derive(Debug, Clone)]
+pub enum DfgIoError {
+    /// Not syntactically valid JSON/DOT.
+    Parse(String),
+    /// Parses, but does not follow the schema: missing or mistyped
+    /// fields, unknown ops, dangling endpoints, size caps.
+    Schema(String),
+    /// Decodes into a graph that violates DFG structure (cycles,
+    /// arity, duplicate edges, …) — the typed violations say which.
+    Invalid { name: String, errors: Vec<DfgError> },
+}
+
+impl fmt::Display for DfgIoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DfgIoError::Parse(msg) | DfgIoError::Schema(msg) => f.write_str(msg),
+            DfgIoError::Invalid { name, errors } => {
+                let joined: Vec<String> = errors.iter().map(ToString::to_string).collect();
+                write!(f, "dfg '{name}' is invalid: {}", joined.join("; "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfgIoError {}
+
+type Result<T> = std::result::Result<T, DfgIoError>;
+
+fn schema(msg: impl Into<String>) -> DfgIoError {
+    DfgIoError::Schema(msg.into())
+}
+
+/// Shared tail of every import path: cap-check, build, validate.
+fn finish(name: String, nodes: Vec<Op>, edges: Vec<(u32, u32)>) -> Result<Dfg> {
+    let dfg = Dfg { name, nodes, edges };
+    let errors = dfg.validate_typed();
+    if !errors.is_empty() {
+        return Err(DfgIoError::Invalid { name: dfg.name, errors });
+    }
+    Ok(dfg)
+}
+
+// ------------------------------------------------------------------- JSON
+
+/// Encode to the canonical JSON object (the wire schema).
+pub fn dfg_to_json(dfg: &Dfg) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&dfg.name)),
+        ("nodes", Json::Arr(dfg.nodes.iter().map(|op| Json::str(op.name())).collect())),
+        (
+            "edges",
+            Json::Arr(
+                dfg.edges
+                    .iter()
+                    .map(|&(s, d)| Json::Arr(vec![Json::U64(s as u64), Json::U64(d as u64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Canonical file form: compact JSON plus a trailing newline.
+pub fn to_json_string(dfg: &Dfg) -> String {
+    let mut s = dfg_to_json(dfg).to_string();
+    s.push('\n');
+    s
+}
+
+/// Decode and validate a graph from a parsed JSON value.
+pub fn dfg_from_json(j: &Json) -> Result<Dfg> {
+    let name = j
+        .get("name")
+        .ok_or_else(|| schema("missing field 'name'"))?
+        .as_str()
+        .ok_or_else(|| schema("field 'name' must be a string"))?
+        .to_string();
+    if name.len() > MAX_NAME_LEN {
+        return Err(schema(format!(
+            "dfg name is {} bytes, at most {MAX_NAME_LEN} allowed",
+            name.len()
+        )));
+    }
+    let node_items = j
+        .get("nodes")
+        .ok_or_else(|| schema("missing field 'nodes'"))?
+        .as_array()
+        .ok_or_else(|| schema("field 'nodes' must be an array"))?;
+    if node_items.len() > MAX_NODES {
+        return Err(schema(format!(
+            "dfg '{name}': {} nodes, at most {MAX_NODES} allowed",
+            node_items.len()
+        )));
+    }
+    let mut nodes = Vec::with_capacity(node_items.len());
+    for (i, node) in node_items.iter().enumerate() {
+        let op_name = node
+            .as_str()
+            .ok_or_else(|| schema(format!("dfg '{name}': nodes[{i}] must be a string")))?;
+        let op = Op::from_name(op_name)
+            .ok_or_else(|| schema(format!("dfg '{name}': unknown operation '{op_name}'")))?;
+        nodes.push(op);
+    }
+    let edge_items = j
+        .get("edges")
+        .ok_or_else(|| schema("missing field 'edges'"))?
+        .as_array()
+        .ok_or_else(|| schema("field 'edges' must be an array"))?;
+    if edge_items.len() > MAX_EDGES {
+        return Err(schema(format!(
+            "dfg '{name}': {} edges, at most {MAX_EDGES} allowed",
+            edge_items.len()
+        )));
+    }
+    let mut edges = Vec::with_capacity(edge_items.len());
+    for (i, edge) in edge_items.iter().enumerate() {
+        let pair = edge
+            .as_array()
+            .filter(|p| p.len() == 2)
+            .ok_or_else(|| schema(format!("dfg '{name}': edges[{i}] must be [src,dst]")))?;
+        let endpoint = |k: usize| -> Result<u32> {
+            pair[k]
+                .as_u64()
+                .and_then(|n| u32::try_from(n).ok())
+                .filter(|&n| (n as usize) < nodes.len())
+                .ok_or_else(|| {
+                    schema(format!("dfg '{name}': edges[{i}] endpoint out of range"))
+                })
+        };
+        edges.push((endpoint(0)?, endpoint(1)?));
+    }
+    finish(name, nodes, edges)
+}
+
+/// Decode and validate a graph from JSON text.
+pub fn from_json_str(text: &str) -> Result<Dfg> {
+    let j = json::parse(text).map_err(|e| DfgIoError::Parse(e.to_string()))?;
+    dfg_from_json(&j)
+}
+
+// -------------------------------------------------------------------- DOT
+
+fn dot_quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render as a Graphviz digraph: one `nI [label="op"]` statement per
+/// node (declaration order = node id), then one `nS -> nD` per edge.
+pub fn to_dot(dfg: &Dfg) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("digraph {} {{\n", dot_quote(&dfg.name)));
+    for (i, op) in dfg.nodes.iter().enumerate() {
+        out.push_str(&format!("  n{i} [label=\"{}\"];\n", op.name()));
+    }
+    for &(s, d) in &dfg.edges {
+        out.push_str(&format!("  n{s} -> n{d};\n"));
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Word(String),
+    Sym(char),
+    Arrow,
+}
+
+/// Tokenize a DOT document: bare identifiers, quoted strings (with
+/// `\"`/`\\` escapes), the symbols `{ } [ ] = ; ,` and `->`. Comments
+/// (`//`, `#`, `/* */`) are skipped. Total: malformed input is a
+/// `Parse` error, never a panic.
+fn dot_tokens(text: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            c if c.is_ascii_whitespace() => i += 1,
+            '#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            '/' if bytes.get(i + 1) == Some(&b'*') => {
+                let mut j = i + 2;
+                loop {
+                    if j + 1 >= bytes.len() {
+                        return Err(DfgIoError::Parse("unterminated /* comment".into()));
+                    }
+                    if bytes[j] == b'*' && bytes[j + 1] == b'/' {
+                        break;
+                    }
+                    j += 1;
+                }
+                i = j + 2;
+            }
+            '{' | '}' | '[' | ']' | '=' | ';' | ',' => {
+                toks.push(Tok::Sym(c));
+                i += 1;
+            }
+            '-' if bytes.get(i + 1) == Some(&b'>') => {
+                toks.push(Tok::Arrow);
+                i += 2;
+            }
+            '"' => {
+                let mut raw: Vec<u8> = Vec::new();
+                let mut j = i + 1;
+                loop {
+                    if j >= bytes.len() {
+                        return Err(DfgIoError::Parse("unterminated string".into()));
+                    }
+                    match bytes[j] {
+                        b'"' => break,
+                        b'\\' => {
+                            let esc = *bytes.get(j + 1).ok_or_else(|| {
+                                DfgIoError::Parse("unterminated string".into())
+                            })?;
+                            raw.push(esc);
+                            j += 2;
+                        }
+                        b => {
+                            raw.push(b);
+                            j += 1;
+                        }
+                    }
+                }
+                let s = String::from_utf8(raw)
+                    .map_err(|_| DfgIoError::Parse("string is not UTF-8".into()))?;
+                toks.push(Tok::Word(s));
+                i = j + 1;
+            }
+            c if c.is_ascii_alphanumeric() || c == '_' || c == '.' => {
+                let start = i;
+                while i < bytes.len() {
+                    let b = bytes[i] as char;
+                    if b.is_ascii_alphanumeric() || b == '_' || b == '.' {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                toks.push(Tok::Word(text[start..i].to_string()));
+            }
+            other => {
+                return Err(DfgIoError::Parse(format!(
+                    "unexpected character '{other}' at byte {i}"
+                )));
+            }
+        }
+    }
+    Ok(toks)
+}
+
+/// Cursor over the token stream with total accessors.
+struct DotParser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl DotParser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect_sym(&mut self, sym: char) -> Result<()> {
+        match self.next() {
+            Some(Tok::Sym(c)) if c == sym => Ok(()),
+            other => Err(DfgIoError::Parse(format!("expected '{sym}', got {other:?}"))),
+        }
+    }
+
+    fn word(&mut self, what: &str) -> Result<String> {
+        match self.next() {
+            Some(Tok::Word(w)) => Ok(w),
+            other => Err(DfgIoError::Parse(format!("expected {what}, got {other:?}"))),
+        }
+    }
+
+    /// Consume `[k=v, …]`, returning the value of `label` if present.
+    fn attr_list(&mut self) -> Result<Option<String>> {
+        self.expect_sym('[')?;
+        let mut label = None;
+        loop {
+            match self.peek() {
+                Some(Tok::Sym(']')) => {
+                    self.next();
+                    return Ok(label);
+                }
+                Some(Tok::Sym(',')) | Some(Tok::Sym(';')) => {
+                    self.next();
+                }
+                _ => {
+                    let key = self.word("attribute name")?;
+                    self.expect_sym('=')?;
+                    let value = self.word("attribute value")?;
+                    if key == "label" {
+                        label = Some(value);
+                    }
+                }
+            }
+        }
+    }
+
+    fn skip_semis(&mut self) {
+        while matches!(self.peek(), Some(Tok::Sym(';'))) {
+            self.next();
+        }
+    }
+}
+
+/// Parse and validate a DOT digraph (see the module docs for the
+/// accepted subset).
+pub fn from_dot(text: &str) -> Result<Dfg> {
+    if text.len() > MAX_DOT_BYTES {
+        return Err(DfgIoError::Parse(format!(
+            "dot input is {} bytes, at most {MAX_DOT_BYTES} allowed",
+            text.len()
+        )));
+    }
+    let mut p = DotParser { toks: dot_tokens(text)?, pos: 0 };
+    match p.next() {
+        Some(Tok::Word(w)) if w == "digraph" => {}
+        other => {
+            return Err(DfgIoError::Parse(format!("expected 'digraph', got {other:?}")));
+        }
+    }
+    let name = match p.peek() {
+        Some(Tok::Word(_)) => p.word("graph name")?,
+        _ => "dot".to_string(),
+    };
+    if name.len() > MAX_NAME_LEN {
+        return Err(schema(format!(
+            "dfg name is {} bytes, at most {MAX_NAME_LEN} allowed",
+            name.len()
+        )));
+    }
+    p.expect_sym('{')?;
+
+    let mut ids: Vec<String> = Vec::new();
+    let mut nodes: Vec<Op> = Vec::new();
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let lookup = |ids: &[String], id: &str| -> Result<u32> {
+        ids.iter()
+            .position(|x| x == id)
+            .map(|i| i as u32)
+            .ok_or_else(|| schema(format!("edge references undeclared node '{id}'")))
+    };
+    loop {
+        p.skip_semis();
+        match p.peek() {
+            Some(Tok::Sym('}')) => {
+                p.next();
+                break;
+            }
+            None => return Err(DfgIoError::Parse("unexpected end of dot input".into())),
+            _ => {}
+        }
+        let first = p.word("node id")?;
+        if matches!(first.as_str(), "graph" | "node" | "edge")
+            && matches!(p.peek(), Some(Tok::Sym('[')))
+        {
+            // default-attribute statement: irrelevant here, skip it
+            p.attr_list()?;
+            continue;
+        }
+        match p.peek() {
+            Some(Tok::Arrow) => {
+                // edge chain: a -> b -> c [attrs]
+                let mut prev = lookup(&ids, &first)?;
+                while matches!(p.peek(), Some(Tok::Arrow)) {
+                    p.next();
+                    let id = p.word("edge target")?;
+                    let dst = lookup(&ids, &id)?;
+                    if edges.len() >= MAX_EDGES {
+                        return Err(schema(format!(
+                            "dfg '{name}': more than {MAX_EDGES} edges"
+                        )));
+                    }
+                    edges.push((prev, dst));
+                    prev = dst;
+                }
+                if matches!(p.peek(), Some(Tok::Sym('['))) {
+                    p.attr_list()?;
+                }
+            }
+            Some(Tok::Sym('[')) => {
+                // node declaration: id [label="op"]
+                let label = p.attr_list()?.ok_or_else(|| {
+                    schema(format!("node '{first}' has no label attribute"))
+                })?;
+                if ids.iter().any(|x| x == &first) {
+                    return Err(schema(format!("node '{first}' declared twice")));
+                }
+                if ids.len() >= MAX_NODES {
+                    return Err(schema(format!(
+                        "dfg '{name}': more than {MAX_NODES} nodes"
+                    )));
+                }
+                let op = Op::from_name(&label).ok_or_else(|| {
+                    schema(format!("dfg '{name}': unknown operation '{label}'"))
+                })?;
+                ids.push(first);
+                nodes.push(op);
+            }
+            _ => {
+                return Err(schema(format!("node '{first}' has no label attribute")));
+            }
+        }
+    }
+    if p.peek().is_some() {
+        return Err(DfgIoError::Parse("trailing content after digraph".into()));
+    }
+    finish(name, nodes, edges)
+}
+
+// ------------------------------------------------------------------ files
+
+/// Load a graph from a file, dispatching on extension: `.dot`/`.gv`
+/// parse as DOT, everything else as JSON.
+pub fn from_path(path: &Path) -> Result<Dfg> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| DfgIoError::Parse(format!("{}: {e}", path.display())))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("dot") | Some("gv") => from_dot(&text),
+        _ => from_json_str(&text),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::benchmarks;
+    use crate::ops::Op::*;
+
+    fn structurally_equal(a: &Dfg, b: &Dfg) -> bool {
+        a.name == b.name && a.nodes == b.nodes && a.edges == b.edges
+    }
+
+    #[test]
+    fn every_benchmark_roundtrips_through_json() {
+        for d in benchmarks::all() {
+            let text = to_json_string(&d);
+            assert!(text.ends_with('\n'));
+            let back = from_json_str(&text).expect(&d.name);
+            assert!(structurally_equal(&d, &back), "{} changed across json", d.name);
+            // byte-stable: re-encoding the decoded graph is identical
+            assert_eq!(to_json_string(&back), text);
+        }
+    }
+
+    #[test]
+    fn every_benchmark_roundtrips_through_dot() {
+        for d in benchmarks::all() {
+            let text = to_dot(&d);
+            let back = from_dot(&text).expect(&d.name);
+            assert!(structurally_equal(&d, &back), "{} changed across dot", d.name);
+        }
+    }
+
+    #[test]
+    fn dot_accepts_comments_attrs_and_chains() {
+        let text = r#"
+            // a hand-written graph
+            digraph pipeline {
+              graph [rankdir=LR];
+              node [shape=box];
+              a [label="load", color=red]; /* producer */
+              b [label="abs"]
+              c [label="store"]
+              # chain syntax
+              a -> b -> c;
+            }
+        "#;
+        let d = from_dot(text).unwrap();
+        assert_eq!(d.name, "pipeline");
+        assert_eq!(d.nodes, vec![Load, Abs, Store]);
+        assert_eq!(d.edges, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn dot_rejections_carry_reasons() {
+        for (text, needle) in [
+            ("graph g { }", "digraph"),
+            ("digraph g { a -> b; }", "undeclared node 'a'"),
+            ("digraph g { a; }", "no label"),
+            ("digraph g { a [shape=box]; }", "no label"),
+            ("digraph g { a [label=\"frob\"]; }", "unknown operation"),
+            ("digraph g { a [label=\"load\"]; a [label=\"load\"]; }", "declared twice"),
+            ("digraph g { a [label=\"load\"]", "end of dot"),
+            ("digraph g { } trailing", "trailing"),
+            ("digraph g { a [label=\"load\" }", "expected"),
+            ("digraph g { /* open", "unterminated"),
+            ("digraph g { \"open", "unterminated"),
+            ("digraph g { a @ b; }", "unexpected character"),
+        ] {
+            let err = from_dot(text).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "{text:?} should mention '{needle}', got: {msg}");
+        }
+    }
+
+    #[test]
+    fn dot_structural_violations_are_typed() {
+        // cycle through labeled nodes
+        let text = r#"digraph c {
+            a [label="add"]; b [label="add"];
+            a -> b; b -> a;
+        }"#;
+        match from_dot(text).unwrap_err() {
+            DfgIoError::Invalid { name, errors } => {
+                assert_eq!(name, "c");
+                assert!(errors.contains(&DfgError::Cycle), "{errors:?}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn json_rejections_carry_reasons() {
+        for (text, needle) in [
+            ("[", "invalid JSON"),
+            ("42", "missing field 'name'"),
+            (r#"{"name":7,"nodes":[],"edges":[]}"#, "must be a string"),
+            (r#"{"name":"t","edges":[]}"#, "missing field 'nodes'"),
+            (r#"{"name":"t","nodes":{},"edges":[]}"#, "must be an array"),
+            (r#"{"name":"t","nodes":["frob"],"edges":[]}"#, "unknown operation 'frob'"),
+            (r#"{"name":"t","nodes":["load"]}"#, "missing field 'edges'"),
+            (r#"{"name":"t","nodes":["load","store"],"edges":[[0]]}"#, "[src,dst]"),
+            (r#"{"name":"t","nodes":["load","store"],"edges":[[0,5]]}"#, "out of range"),
+            (r#"{"name":"t","nodes":["load","store"],"edges":[[0,-1]]}"#, "out of range"),
+            (
+                r#"{"name":"t","nodes":["add","add"],"edges":[[0,1],[1,0]]}"#,
+                "graph has a cycle",
+            ),
+            (
+                r#"{"name":"t","nodes":["load","abs","store"],"edges":[[0,1],[1,1],[1,2]]}"#,
+                "self-loop",
+            ),
+            (
+                r#"{"name":"t","nodes":["load","abs","store"],"edges":[[0,1],[0,1],[1,2]]}"#,
+                "duplicate edge",
+            ),
+        ] {
+            let err = from_json_str(text).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "{text:?} should mention '{needle}', got: {msg}");
+        }
+    }
+
+    #[test]
+    fn size_caps_are_enforced() {
+        let many_nodes = Json::obj(vec![
+            ("name", Json::str("big")),
+            ("nodes", Json::Arr(vec![Json::str("add"); MAX_NODES + 1])),
+            ("edges", Json::Arr(vec![])),
+        ]);
+        let msg = dfg_from_json(&many_nodes).unwrap_err().to_string();
+        assert!(msg.contains("at most"), "{msg}");
+
+        let many_edges = Json::obj(vec![
+            ("name", Json::str("big")),
+            ("nodes", Json::Arr(vec![Json::str("add"); 2])),
+            (
+                "edges",
+                Json::Arr(vec![
+                    Json::Arr(vec![Json::U64(0), Json::U64(1)]);
+                    MAX_EDGES + 1
+                ]),
+            ),
+        ]);
+        let msg = dfg_from_json(&many_edges).unwrap_err().to_string();
+        assert!(msg.contains("at most"), "{msg}");
+
+        let long_name = Json::obj(vec![
+            ("name", Json::str("x".repeat(MAX_NAME_LEN + 1))),
+            ("nodes", Json::Arr(vec![])),
+            ("edges", Json::Arr(vec![])),
+        ]);
+        let msg = dfg_from_json(&long_name).unwrap_err().to_string();
+        assert!(msg.contains("name"), "{msg}");
+    }
+
+    #[test]
+    fn deeply_nested_json_is_refused_not_overflowed() {
+        let bomb = format!("{}{}", "[".repeat(4000), "]".repeat(4000));
+        assert!(matches!(from_json_str(&bomb).unwrap_err(), DfgIoError::Parse(_)));
+    }
+
+    #[test]
+    fn from_path_dispatches_on_extension() {
+        let dir = std::env::temp_dir().join(format!("helex-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let d = benchmarks::benchmark("SOB");
+        let jpath = dir.join("g.json");
+        let dpath = dir.join("g.dot");
+        std::fs::write(&jpath, to_json_string(&d)).unwrap();
+        std::fs::write(&dpath, to_dot(&d)).unwrap();
+        assert!(structurally_equal(&d, &from_path(&jpath).unwrap()));
+        assert!(structurally_equal(&d, &from_path(&dpath).unwrap()));
+        assert!(from_path(&dir.join("missing.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,13 +7,77 @@
 
 pub mod builder;
 pub mod benchmarks;
+pub mod gen;
 pub mod heta;
+pub mod io;
 
 use crate::ops::{GroupSet, Op, OpGroup, NUM_GROUPS};
 use std::collections::VecDeque;
+use std::fmt;
 
 /// Node id within a DFG.
 pub type NodeId = u32;
+
+/// One structural violation found by [`Dfg::validate_typed`].
+///
+/// `Display` reproduces the exact strings [`Dfg::validate`] has always
+/// emitted, so callers matching on substrings (tests, HTTP error bodies)
+/// are unaffected by the typed form. `dfg::io` and `service::wire` reuse
+/// the enum so a rejected graph can be reported with the precise reason.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DfgError {
+    /// An edge endpoint is `>=` the node count.
+    EdgeOutOfRange { src: NodeId, dst: NodeId },
+    /// An edge with `src == dst`.
+    SelfLoop { node: NodeId },
+    /// The same `(src, dst)` edge appears more than once.
+    DuplicateEdge { src: NodeId, dst: NodeId },
+    /// The graph has a directed cycle.
+    Cycle,
+    /// A load (source) node with data inputs.
+    LoadHasInputs { node: usize, indeg: usize },
+    /// A store (sink) node whose indegree is not exactly 1.
+    StoreBadInputs { node: usize, indeg: usize },
+    /// A compute node with indegree 0 or more inputs than its arity.
+    BadIndegree { node: usize, op: Op, indeg: usize, arity: usize },
+    /// A load or compute node whose value nobody consumes.
+    NoConsumers { node: usize, op: Op },
+    /// A node with several in-edges from the same producer.
+    ParallelInEdges { node: usize },
+}
+
+impl fmt::Display for DfgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            DfgError::EdgeOutOfRange { src, dst } => {
+                write!(f, "edge ({src},{dst}) out of range")
+            }
+            DfgError::SelfLoop { node } => write!(f, "self-loop at {node}"),
+            DfgError::DuplicateEdge { src, dst } => {
+                write!(f, "duplicate edge ({src},{dst})")
+            }
+            DfgError::Cycle => write!(f, "graph has a cycle"),
+            DfgError::LoadHasInputs { node, indeg } => {
+                write!(f, "load {node} has {indeg} inputs")
+            }
+            DfgError::StoreBadInputs { node, indeg } => {
+                write!(f, "store {node} has {indeg} inputs")
+            }
+            DfgError::BadIndegree { node, op, indeg, arity } => {
+                write!(f, "compute {node} ({op}) indeg {indeg} vs arity {arity}")
+            }
+            DfgError::NoConsumers { node, op } => match op {
+                Op::Load => write!(f, "load {node} has no consumers"),
+                _ => write!(f, "compute {node} ({op}) has no consumers"),
+            },
+            DfgError::ParallelInEdges { node } => {
+                write!(f, "node {node} has parallel in-edges")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DfgError {}
 
 /// A data-flow graph. `Hash` is content identity (name + nodes + edges),
 /// used by the mapper's feasibility cache and the service's job
@@ -115,58 +179,89 @@ impl Dfg {
         !self.groups_used().intersect(mask).is_empty()
     }
 
-    /// Structural validation. Returns a list of violations (empty = ok).
+    /// Structural validation. Returns a list of violations (empty = ok);
+    /// the strings are the `Display` forms of [`Dfg::validate_typed`].
     pub fn validate(&self) -> Vec<String> {
+        self.validate_typed().iter().map(ToString::to_string).collect()
+    }
+
+    /// Structural validation with typed violations (empty = ok). Total:
+    /// never panics, whatever the node/edge contents.
+    pub fn validate_typed(&self) -> Vec<DfgError> {
         let mut errs = Vec::new();
         let n = self.nodes.len();
+        let mut seen: Vec<(NodeId, NodeId)> = Vec::with_capacity(self.edges.len());
         for &(s, d) in &self.edges {
             if s as usize >= n || d as usize >= n {
-                errs.push(format!("edge ({s},{d}) out of range"));
+                errs.push(DfgError::EdgeOutOfRange { src: s, dst: d });
             }
             if s == d {
-                errs.push(format!("self-loop at {s}"));
+                errs.push(DfgError::SelfLoop { node: s });
             }
+            seen.push((s, d));
+        }
+        seen.sort_unstable();
+        let mut prev: Option<(NodeId, NodeId)> = None;
+        for &e in &seen {
+            if prev == Some(e) {
+                let last = errs.last();
+                let already = matches!(
+                    last,
+                    Some(DfgError::DuplicateEdge { src, dst }) if (*src, *dst) == e
+                );
+                if !already {
+                    errs.push(DfgError::DuplicateEdge { src: e.0, dst: e.1 });
+                }
+            }
+            prev = Some(e);
+        }
+        // degree and cycle analysis index adjacency by endpoint: bail
+        // before them when an edge points outside the node range
+        if errs.iter().any(|e| matches!(e, DfgError::EdgeOutOfRange { .. })) {
+            return errs;
         }
         if self.topo_order().is_none() {
-            errs.push("graph has a cycle".into());
+            errs.push(DfgError::Cycle);
         }
         let preds = self.preds();
         let succs = self.succs();
-        for (i, op) in self.nodes.iter().enumerate() {
+        for (i, &op) in self.nodes.iter().enumerate() {
             let indeg = preds[i].len();
             let outdeg = succs[i].len();
             match op {
                 Op::Load => {
                     if indeg != 0 {
-                        errs.push(format!("load {i} has {indeg} inputs"));
+                        errs.push(DfgError::LoadHasInputs { node: i, indeg });
                     }
                     if outdeg == 0 {
-                        errs.push(format!("load {i} has no consumers"));
+                        errs.push(DfgError::NoConsumers { node: i, op });
                     }
                 }
                 Op::Store => {
                     if indeg != 1 {
-                        errs.push(format!("store {i} has {indeg} inputs"));
+                        errs.push(DfgError::StoreBadInputs { node: i, indeg });
                     }
                 }
                 _ => {
                     if indeg == 0 || indeg > op.arity().max(1) {
-                        errs.push(format!(
-                            "compute {i} ({op}) indeg {indeg} vs arity {}",
-                            op.arity()
-                        ));
+                        errs.push(DfgError::BadIndegree {
+                            node: i,
+                            op,
+                            indeg,
+                            arity: op.arity(),
+                        });
                     }
                     if outdeg == 0 {
-                        errs.push(format!("compute {i} ({op}) has no consumers"));
+                        errs.push(DfgError::NoConsumers { node: i, op });
                     }
                 }
             }
-            // duplicate parallel edges
+            // several in-edges from one producer
             let mut ps = preds[i].clone();
             ps.sort_unstable();
             ps.dedup();
             if ps.len() != preds[i].len() {
-                errs.push(format!("node {i} has parallel in-edges"));
+                errs.push(DfgError::ParallelInEdges { node: i });
             }
         }
         errs
@@ -294,6 +389,66 @@ mod tests {
             vec![(0, 3), (1, 3), (2, 3), (3, 4)],
         );
         assert!(d.validate().iter().any(|e| e.contains("indeg")));
+    }
+
+    #[test]
+    fn duplicate_edge_reported_explicitly() {
+        // the (0,2) edge appears twice: both the typed DuplicateEdge and
+        // the per-node parallel-in-edges report fire
+        let d = Dfg::new(
+            "dup",
+            vec![Load, Load, Add, Store],
+            vec![(0, 2), (0, 2), (1, 2), (2, 3)],
+        );
+        let typed = d.validate_typed();
+        assert!(typed.contains(&DfgError::DuplicateEdge { src: 0, dst: 2 }), "{typed:?}");
+        assert!(typed.contains(&DfgError::ParallelInEdges { node: 2 }), "{typed:?}");
+        let strs = d.validate();
+        assert!(strs.iter().any(|e| e.contains("duplicate edge (0,2)")), "{strs:?}");
+    }
+
+    #[test]
+    fn self_loop_reported_explicitly() {
+        let d = Dfg::new("sl", vec![Load, Add, Store], vec![(0, 1), (1, 1), (1, 2)]);
+        let typed = d.validate_typed();
+        assert!(typed.contains(&DfgError::SelfLoop { node: 1 }), "{typed:?}");
+        assert!(d.validate().iter().any(|e| e.contains("self-loop at 1")));
+    }
+
+    #[test]
+    fn typed_and_string_validation_agree() {
+        let cases = vec![
+            tiny(),
+            Dfg::new("cyc", vec![Add, Add], vec![(0, 1), (1, 0)]),
+            Dfg::new("dangling", vec![Load, Add, Store], vec![(0, 1), (1, 2), (7, 1)]),
+            Dfg::new("orphan", vec![Load, Add, Store], vec![(0, 1), (1, 2), (0, 1)]),
+        ];
+        for d in cases {
+            let typed: Vec<String> =
+                d.validate_typed().iter().map(ToString::to_string).collect();
+            assert_eq!(typed, d.validate(), "dfg {}", d.name);
+        }
+    }
+
+    #[test]
+    fn error_display_matches_historic_strings() {
+        assert_eq!(
+            DfgError::EdgeOutOfRange { src: 3, dst: 9 }.to_string(),
+            "edge (3,9) out of range"
+        );
+        assert_eq!(DfgError::Cycle.to_string(), "graph has a cycle");
+        assert_eq!(
+            DfgError::NoConsumers { node: 2, op: Op::Load }.to_string(),
+            "load 2 has no consumers"
+        );
+        assert_eq!(
+            DfgError::NoConsumers { node: 2, op: Op::Mul }.to_string(),
+            "compute 2 (mul) has no consumers"
+        );
+        assert_eq!(
+            DfgError::BadIndegree { node: 1, op: Op::Add, indeg: 3, arity: 2 }.to_string(),
+            "compute 1 (add) indeg 3 vs arity 2"
+        );
     }
 
     #[test]

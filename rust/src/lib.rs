@@ -61,6 +61,12 @@
 //!   operation/cost model, benchmark DFGs, the T-CGRA grid and the
 //!   RodMap-like reserve-on-demand spatial mapper behind the
 //!   `MappingEngine` API (structured outcomes + warm-start remapping).
+//!   Workload ingestion lives here too: [`dfg::io`] is the validated
+//!   JSON/DOT interchange layer (total decoding into typed
+//!   [`dfg::DfgError`]s — a graph that parses has been proven a
+//!   well-formed DAG) and [`dfg::gen`] the seeded random-DFG generator
+//!   whose output is byte-deterministic per seed, feeding the fuzz
+//!   harness and `helex loadgen`.
 //! * [`search`] — the paper's contribution behind the `Explorer`
 //!   session API: heatmap initial layout and the two branch-and-bound
 //!   phases (OPSG then GSG), deterministic in-search parallel candidate

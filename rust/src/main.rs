@@ -4,8 +4,10 @@
 //! helex repro [--quick] [--jobs N] [--search-threads N]
 //! helex serve [--addr H:P] [--jobs N] [--search-threads N] [--store-dir DIR]
 //! helex fleet --replicas A:P,B:P [--addr H:P] [--store-dir DIR] [--queue N] [--slots N]
-//! helex submit [--addr H:P] [--dfgs S4] [--size 9x9]
+//! helex submit [--addr H:P] [--dfgs S4|graph.json] [--size 9x9]
 //! helex submit --batch <fig9|...|all> [--addr H:P] [--priority 0..9] [--client NAME]
+//! helex loadgen [--addr H:P] [--requests N] [--rate R] [--dup-ratio F] [--batches]
+//! helex dfg <list|export|convert> [--out DIR] [--format json|dot]
 //! helex exp <fig3|...|table8|all> [--quick] [--jobs N] [--l-test N] [--no-gsg]
 //! helex explore --dfgs BIL,SOB --size 10x10 [--l-test N] [--trace-out FILE]
 //! helex map --dfg FFT --size 10x10
@@ -35,12 +37,21 @@ fn load_dfgs(spec: &str) -> Result<Vec<Dfg>> {
     spec.split(',')
         .map(|n| {
             let n = n.trim();
+            // interchange files ride alongside named benchmarks:
+            // `--dfgs corpus/BIL.json,SOB` mixes both
+            if n.ends_with(".json") || n.ends_with(".dot") || n.ends_with(".gv") {
+                return helex::dfg::io::from_path(std::path::Path::new(n))
+                    .map_err(|e| anyhow::anyhow!("loading '{n}': {e}"));
+            }
             if benchmarks::TABLE_II.iter().any(|(b, _, _)| *b == n) {
                 Ok(benchmarks::benchmark(n))
             } else if heta::TABLE_IX.iter().any(|(b, ..)| *b == n) {
                 Ok(heta::heta_benchmark(n))
             } else {
-                bail!("unknown DFG '{n}' (Table II names, Table IX names, or S1..S6)")
+                bail!(
+                    "unknown DFG '{n}' (Table II names, Table IX names, S1..S6, \
+                     or a .json/.dot file path)"
+                )
             }
         })
         .collect()
@@ -132,6 +143,269 @@ fn run_suite_cmd(args: &Args, name: &str) -> Result<()> {
         service.workers(),
         service.cache_len()
     );
+    Ok(())
+}
+
+/// `helex dfg <list|export|convert>` — the interchange-corpus tooling.
+fn run_dfg_cmd(args: &Args) -> Result<()> {
+    use helex::dfg::io;
+    let action = args.positional.first().map(String::as_str).unwrap_or("list");
+    match action {
+        "list" => {
+            println!("{:<6} {:>4} {:>4}  groups", "name", "V", "E");
+            for (name, _, _) in benchmarks::TABLE_II {
+                let d = benchmarks::benchmark(name);
+                let h = d.group_histogram();
+                let groups: Vec<String> = helex::ops::ALL_GROUPS
+                    .iter()
+                    .filter(|g| {
+                        h[g.index()] > 0 && g.index() != helex::ops::OpGroup::Mem.index()
+                    })
+                    .map(|g| format!("{}:{}", g.name(), h[g.index()]))
+                    .collect();
+                println!(
+                    "{name:<6} {:>4} {:>4}  {}",
+                    d.num_nodes(),
+                    d.num_edges(),
+                    groups.join(" ")
+                );
+            }
+        }
+        "export" => {
+            let out_dir = std::path::PathBuf::from(args.get_or("out", "corpus"));
+            let format = args.get_or("format", "json").to_string();
+            let names: Vec<String> = match args.positional.get(1).map(String::as_str) {
+                Some(sel) if sel != "all" => {
+                    sel.split(',').map(|s| s.trim().to_string()).collect()
+                }
+                _ => benchmarks::TABLE_II.iter().map(|(n, _, _)| n.to_string()).collect(),
+            };
+            std::fs::create_dir_all(&out_dir)
+                .with_context(|| format!("creating {}", out_dir.display()))?;
+            for name in &names {
+                let d = load_dfgs(name)?.remove(0);
+                let (text, ext) = match format.as_str() {
+                    "json" => (io::to_json_string(&d), "json"),
+                    "dot" => (io::to_dot(&d), "dot"),
+                    other => bail!("unknown --format '{other}' (json|dot)"),
+                };
+                let path = out_dir.join(format!("{name}.{ext}"));
+                std::fs::write(&path, text)
+                    .with_context(|| format!("writing {}", path.display()))?;
+                println!(
+                    "wrote {} (V={} E={})",
+                    path.display(),
+                    d.num_nodes(),
+                    d.num_edges()
+                );
+            }
+        }
+        "convert" => {
+            let input = args.get("in").context("--in FILE required")?;
+            let output = args.get("out").context("--out FILE required")?;
+            let d = io::from_path(std::path::Path::new(input))
+                .map_err(|e| anyhow::anyhow!("loading '{input}': {e}"))?;
+            let text = if output.ends_with(".dot") || output.ends_with(".gv") {
+                io::to_dot(&d)
+            } else {
+                io::to_json_string(&d)
+            };
+            std::fs::write(output, text).with_context(|| format!("writing {output}"))?;
+            println!("{}: V={} E={} -> {output}", d.name, d.num_nodes(), d.num_edges());
+        }
+        other => bail!("unknown dfg action '{other}' (list|export|convert)"),
+    }
+    Ok(())
+}
+
+/// One loadgen request-response cycle. Returns
+/// `(from_cache, completed)`; a transport failure or in-band rejection
+/// is the error case the report counts.
+fn loadgen_submit(
+    addr: &str,
+    spec: &helex::JobSpec,
+    use_batches: bool,
+    clients: usize,
+    k: usize,
+) -> Result<(bool, bool)> {
+    use helex::server::client;
+    use helex::util::json::Json;
+    let poll = std::time::Duration::from_millis(20);
+    let max_polls = 3000; // 60s ceiling per request
+    if use_batches {
+        // one-job batches with rotating client names and mixed
+        // priorities exercise the fleet's quota + priority paths
+        let batch = helex::fleet::BatchRequest {
+            label: format!("loadgen-{k}"),
+            client: format!("client-{}", k % clients),
+            priority: (helex::util::rng::splitmix64(k as u64)
+                % (helex::fleet::MAX_PRIORITY as u64 + 1)) as u8,
+            specs: vec![spec.clone()],
+        };
+        let (batch_id, _ids) = client::submit_batch(addr, &batch)?;
+        let body = client::wait_batch(addr, batch_id, poll, max_polls)?;
+        let row = body
+            .get("jobs")
+            .and_then(Json::as_array)
+            .and_then(|rows| rows.first())
+            .cloned()
+            .unwrap_or(Json::Null);
+        let cached = row.get("from_cache").and_then(Json::as_bool).unwrap_or(false);
+        let completed = row.get("best_cost").and_then(Json::as_f64).is_some();
+        Ok((cached, completed))
+    } else {
+        let id = client::submit_spec(addr, spec)?;
+        let result = client::wait_result(addr, id, poll, max_polls)?;
+        if let helex::service::JobOutcome::Rejected(why) = &result.outcome {
+            bail!("job rejected: {why}");
+        }
+        Ok((result.from_cache, result.outcome.is_completed()))
+    }
+}
+
+/// `helex loadgen` — synthesize traffic from generated DFG specs
+/// against a serve or fleet endpoint and report throughput, latency
+/// percentiles and error counts.
+fn run_loadgen(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::{Duration, Instant};
+
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let requests = args.usize_or("requests", 200);
+    let workers = args.usize_or("workers", 4).max(1);
+    let rate = args.f64_or("rate", 0.0); // total req/s; 0 = unpaced
+    let dup_ratio = args.f64_or("dup-ratio", 0.25);
+    let clients = args.usize_or("clients", 3).max(1);
+    let seed = args.u64_or("seed", 1);
+    let (rows, cols) = args.size("size").unwrap_or((7, 7));
+    let l_test = args.usize_or("l-test", 60);
+    let compute = args.usize_or("compute", 6);
+    let use_batches = args.flag("batches");
+    if requests == 0 {
+        bail!("--requests must be at least 1");
+    }
+
+    // the whole request sequence derives from --seed: request k either
+    // repeats an earlier spec (a --dup-ratio share, exercising dedup)
+    // or carries a freshly generated graph
+    let mut rng = helex::util::rng::Rng::seed(seed);
+    let mut specs: Vec<helex::JobSpec> = Vec::with_capacity(requests);
+    for k in 0..requests {
+        if k > 0 && rng.chance(dup_ratio) {
+            let dup = specs[rng.below(k)].clone();
+            specs.push(dup);
+            continue;
+        }
+        let cfg = helex::dfg::gen::GenConfig {
+            name: "loadgen".into(),
+            seed: rng.next_u64(),
+            loads: 2 + rng.below(3),
+            compute: compute.max(1),
+            stores: 1 + rng.below(2),
+            binary_p: 0.5,
+            ..Default::default()
+        };
+        let dfg = helex::dfg::gen::generate(&cfg);
+        let mut spec = helex::JobSpec::new("loadgen", vec![dfg], Grid::new(rows, cols));
+        spec.search.l_test = l_test;
+        spec.search.gsg_passes = 1;
+        specs.push(spec);
+    }
+
+    struct Rec {
+        ok: bool,
+        cached: bool,
+        completed: bool,
+        latency: f64,
+        error: Option<String>,
+    }
+    let next = AtomicUsize::new(0);
+    let records: Mutex<Vec<Rec>> = Mutex::new(Vec::with_capacity(requests));
+    let started = Instant::now();
+    eprintln!(
+        "[loadgen] {requests} request(s) to {addr} on {workers} worker(s){}{}",
+        if rate > 0.0 { format!(", {rate} req/s") } else { String::new() },
+        if use_batches { ", via /v1/batches" } else { "" },
+    );
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= requests {
+                    break;
+                }
+                if rate > 0.0 {
+                    // pace by global request index so the target rate
+                    // holds regardless of worker count
+                    let due = started + Duration::from_secs_f64(k as f64 / rate);
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                }
+                let t0 = Instant::now();
+                let rec = match loadgen_submit(&addr, &specs[k], use_batches, clients, k)
+                {
+                    Ok((cached, completed)) => Rec {
+                        ok: true,
+                        cached,
+                        completed,
+                        latency: t0.elapsed().as_secs_f64(),
+                        error: None,
+                    },
+                    Err(e) => Rec {
+                        ok: false,
+                        cached: false,
+                        completed: false,
+                        latency: t0.elapsed().as_secs_f64(),
+                        error: Some(e.to_string()),
+                    },
+                };
+                records.lock().unwrap().push(rec);
+            });
+        }
+    });
+    let wall = started.elapsed().as_secs_f64().max(1e-9);
+
+    let recs = records.into_inner().unwrap();
+    let completed = recs.iter().filter(|r| r.completed).count();
+    let infeasible = recs.iter().filter(|r| r.ok && !r.completed).count();
+    let cached = recs.iter().filter(|r| r.cached).count();
+    let errors = recs.iter().filter(|r| !r.ok).count();
+    let mut lat: Vec<f64> =
+        recs.iter().filter(|r| r.ok).map(|r| r.latency).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat[((lat.len() - 1) as f64 * q).round() as usize] * 1e3
+    };
+    println!(
+        "[loadgen] {} request(s) in {wall:.2}s — {:.1} req/s",
+        recs.len(),
+        recs.len() as f64 / wall
+    );
+    println!(
+        "[loadgen] completed {completed}, infeasible {infeasible}, cached {cached}, errors: {errors}"
+    );
+    if !lat.is_empty() {
+        println!(
+            "[loadgen] latency p50 {:.1}ms  p90 {:.1}ms  p99 {:.1}ms  max {:.1}ms",
+            pct(0.50),
+            pct(0.90),
+            pct(0.99),
+            lat.last().unwrap() * 1e3
+        );
+    }
+    if errors > 0 {
+        let first = recs
+            .iter()
+            .find_map(|r| r.error.as_deref())
+            .unwrap_or("unknown");
+        bail!("{errors} request(s) failed; first error: {first}");
+    }
     Ok(())
 }
 
@@ -482,6 +756,8 @@ fn main() -> Result<()> {
             let mut co = Coordinator::new(build_config(&args));
             experiments::run_experiment(&mut co, "fig11", args.flag("quick"))?;
         }
+        "dfg" => run_dfg_cmd(&args)?,
+        "loadgen" => run_loadgen(&args)?,
         "show-dfg" => {
             let name = args.positional.first().context("show-dfg NAME")?;
             let d = load_dfgs(name)?.remove(0);
@@ -526,17 +802,27 @@ USAGE:
                                              multi-node coordinator over N `helex serve` replicas:
                                              POST /v1/jobs + /v1/batches, per-client quotas, job
                                              priorities, replica health/drain, shared result store
-  helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB] [--size RxC] [--l-test N]
+  helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB|graph.json] [--size RxC] [--l-test N]
                [--objective area|power] [--seed N] [--search-threads N] [--label NAME] [--json]
                                              submit one job over HTTP and wait for the result
   helex submit --batch <suite> [--addr HOST:PORT] [--priority 0..9] [--client NAME]
                [--l-test N] [--paper-scale]
                                              submit a whole experiment suite to a fleet
                                              coordinator as one batch and wait for it
+  helex loadgen [--addr HOST:PORT] [--requests N] [--workers N] [--rate R] [--dup-ratio F]
+                [--clients N] [--seed N] [--size RxC] [--l-test N] [--compute N] [--batches]
+                                             synthesize traffic from seeded generated DFG specs
+                                             against a serve/fleet endpoint; reports throughput,
+                                             latency percentiles and error counts (--batches
+                                             drives /v1/batches with mixed clients/priorities)
+  helex dfg list                             the paper benchmark corpus (Table II)
+  helex dfg export [NAMES|all] [--out DIR] [--format json|dot]
+                                             write benchmarks as interchange files (corpus/)
+  helex dfg convert --in FILE --out FILE     convert one graph between .json and .dot
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
             [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
-  helex explore --dfgs BIL,SOB|S1..S6 --size RxC [--show] [--trace] [--trace-out FILE]
+  helex explore --dfgs BIL,SOB|S1..S6|graph.json --size RxC [--show] [--trace] [--trace-out FILE]
                 [--search-threads N] [--no-xla]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC

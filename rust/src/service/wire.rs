@@ -29,7 +29,7 @@ use crate::fleet::quota::QuotaRule;
 use crate::fleet::replica::{ReplicaState, ReplicaStatus};
 use crate::fleet::{BatchRequest, DEFAULT_PRIORITY, MAX_BATCH_JOBS, MAX_PRIORITY};
 use crate::mapper::{MapperConfig, Mapping};
-use crate::ops::{GroupSet, Op};
+use crate::ops::GroupSet;
 use crate::search::{SearchConfig, SearchEvent, SearchResult, SearchStats, TracePoint};
 use crate::util::json::Json;
 use std::fmt;
@@ -177,63 +177,19 @@ pub fn decode_grid(j: &Json) -> Result<Grid> {
     Ok(Grid::new(rows, cols))
 }
 
+/// DFG codec: the interchange format is owned by [`crate::dfg::io`];
+/// the wire schema and the file format are the same bytes.
 pub fn encode_dfg(dfg: &Dfg) -> Json {
-    Json::obj(vec![
-        ("name", Json::str(&dfg.name)),
-        ("nodes", Json::Arr(dfg.nodes.iter().map(|op| Json::str(op.name())).collect())),
-        (
-            "edges",
-            Json::Arr(
-                dfg.edges
-                    .iter()
-                    .map(|&(s, d)| Json::Arr(vec![Json::U64(s as u64), Json::U64(d as u64)]))
-                    .collect(),
-            ),
-        ),
-    ])
+    crate::dfg::io::dfg_to_json(dfg)
 }
 
+/// Decode and validate one DFG. The mapper and search assume
+/// structurally valid DAGs (topo order, arity, no parallel edges);
+/// `dfg::io` rejects anything else — including oversized payloads —
+/// with the precise typed reason, which travels here as the error
+/// string for HTTP 400 bodies.
 pub fn decode_dfg(j: &Json) -> Result<Dfg> {
-    let name = get_str(j, "name")?.to_string();
-    let mut nodes = Vec::new();
-    for (i, node) in get_arr(j, "nodes")?.iter().enumerate() {
-        let op_name = node
-            .as_str()
-            .ok_or_else(|| WireError::new(format!("dfg '{name}': nodes[{i}] must be a string")))?;
-        let op = Op::from_name(op_name).ok_or_else(|| {
-            WireError::new(format!("dfg '{name}': unknown operation '{op_name}'"))
-        })?;
-        nodes.push(op);
-    }
-    let mut edges = Vec::new();
-    for (i, edge) in get_arr(j, "edges")?.iter().enumerate() {
-        let pair = edge
-            .as_array()
-            .filter(|p| p.len() == 2)
-            .ok_or_else(|| WireError::new(format!("dfg '{name}': edges[{i}] must be [src,dst]")))?;
-        let endpoint = |k: usize| -> Result<u32> {
-            pair[k]
-                .as_u64()
-                .and_then(|n| u32::try_from(n).ok())
-                .filter(|&n| (n as usize) < nodes.len())
-                .ok_or_else(|| {
-                    WireError::new(format!("dfg '{name}': edges[{i}] endpoint out of range"))
-                })
-        };
-        edges.push((endpoint(0)?, endpoint(1)?));
-    }
-    let dfg = Dfg { name, nodes, edges };
-    // the mapper and search assume structurally valid DAGs (topo order,
-    // arity, no parallel edges); reject anything else up front
-    let violations = dfg.validate();
-    if !violations.is_empty() {
-        return Err(WireError::new(format!(
-            "dfg '{}' is invalid: {}",
-            dfg.name,
-            violations.join("; ")
-        )));
-    }
-    Ok(dfg)
+    crate::dfg::io::dfg_from_json(j).map_err(|e| WireError::new(e.to_string()))
 }
 
 fn encode_search_config(cfg: &SearchConfig) -> Json {
@@ -860,6 +816,14 @@ mod tests {
             (
                 r#"{"dfgs":[{"name":"t","nodes":["add","add"],"edges":[[0,1],[1,0]]}],"grid":{"rows":5,"cols":5}}"#,
                 "invalid",
+            ),
+            (
+                r#"{"dfgs":[{"name":"t","nodes":["load","abs","store"],"edges":[[0,1],[0,1],[1,2]]}],"grid":{"rows":5,"cols":5}}"#,
+                "duplicate edge",
+            ),
+            (
+                r#"{"dfgs":[{"name":"t","nodes":["load","abs","store"],"edges":[[0,1],[1,1],[1,2]]}],"grid":{"rows":5,"cols":5}}"#,
+                "self-loop",
             ),
             (
                 r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"objective":"speed"}"#,

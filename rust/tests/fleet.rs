@@ -291,6 +291,56 @@ fn quotas_gate_admission_and_can_be_raised_at_runtime() {
     r1.stop();
 }
 
+/// Inline user graphs travel through the fleet end to end: a valid
+/// hand-authored graph in a batch completes byte-identical to a direct
+/// run, an invalid one is refused with a 400 naming the offending job,
+/// and the coordinator stays healthy throughout.
+#[test]
+fn inline_user_graphs_flow_through_fleet_batches() {
+    let r1 = RunningServer::start();
+    let fleet = RunningFleet::start(fleet_config(vec![r1.addr.clone()], None));
+
+    // a hand-authored kernel, decoded exactly as `helex submit` would
+    let dfg = helex::dfg::io::from_json_str(
+        "{\"name\":\"user\",\"nodes\":[\"load\",\"load\",\"add\",\"abs\",\"store\"],\"edges\":[[0,2],[1,2],[2,3],[3,4]]}",
+    )
+    .expect("valid user graph");
+    let mut spec = JobSpec::new("user-batch", vec![dfg], helex::Grid::new(6, 6));
+    spec.search.l_test = 40;
+    spec.search.gsg_passes = 1;
+    let direct = ExplorationService::with_jobs(1).run_job(&spec);
+    assert!(direct.outcome.is_completed(), "tiny kernel maps on 6x6");
+    let direct_bytes = wire::strip_volatile(&wire::encode_result(&direct)).to_string();
+
+    let batch = BatchRequest {
+        label: "user".into(),
+        client: "e2e".into(),
+        priority: DEFAULT_PRIORITY,
+        specs: vec![spec],
+    };
+    let (batch_id, ids) = client::submit_batch(&fleet.addr, &batch).expect("submit user batch");
+    client::wait_batch(&fleet.addr, batch_id, Duration::from_millis(100), 1200)
+        .expect("user batch finishes");
+    let result =
+        client::wait_result(&fleet.addr, ids[0], Duration::from_millis(50), 100).unwrap();
+    let bytes = wire::strip_volatile(&wire::encode_result(&result)).to_string();
+    assert_eq!(bytes, direct_bytes, "fleet-served user graph matches the direct run");
+
+    // a structurally broken graph is refused whole, naming the job
+    let bad = "{\"jobs\":[{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"add\",\"add\"],\"edges\":[[0,1],[1,0]]}],\"grid\":{\"rows\":5,\"cols\":5}}]}";
+    let (status, reply) =
+        client::request_raw(&fleet.addr, "POST", "/v1/batches", bad.as_bytes()).unwrap();
+    assert_eq!(status, 400, "cyclic inline graph must be a 400");
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("jobs[0]"), "error names the offending job, got {reply}");
+    assert!(reply.contains("cycle"), "error carries the validation reason, got {reply}");
+
+    let health = client::get_json(&fleet.addr, "/v1/healthz").unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    fleet.stop();
+    r1.stop();
+}
+
 /// Malformed fleet submissions answer structured 4xx errors, and the
 /// coordinator survives all of them (healthz at the end proves it).
 #[test]

@@ -1,0 +1,168 @@
+//! Property-fuzz harness over the random-DFG generator (`dfg::gen`):
+//! thousands of generated graphs pushed through the interchange codecs,
+//! the mapper and the search, asserting soundness everywhere — graphs
+//! always validate, codecs round-trip byte-stably, mapper witnesses
+//! validate, search treats infeasibility as data and its trace does not
+//! depend on the thread count. The committed interchange corpus
+//! (`corpus/*.json`) is also checked against paper Table II.
+//!
+//! Together the `forall` budgets here exceed 1000 generated graphs per
+//! run (600 codec + 200 DOT + 200 mapper + 12 search).
+
+use helex::cgra::{Grid, Layout};
+use helex::cost::CostModel;
+use helex::dfg::benchmarks::TABLE_II;
+use helex::dfg::gen::{arb_config, generate, GenConfig};
+use helex::dfg::io;
+use helex::mapper::MapOutcome;
+use helex::search::SearchConfig;
+use helex::util::prop::forall;
+use helex::{Mapper, MappingEngine};
+
+#[test]
+fn fuzz_generated_graphs_validate_and_roundtrip_json() {
+    forall("fuzz_json_roundtrip", 600, 0xF0221, |g| {
+        let cfg = arb_config(g.rng, g.size);
+        let dfg = generate(&cfg);
+        let errs = dfg.validate();
+        if !errs.is_empty() {
+            return Err(format!("{cfg:?}: invalid graph: {errs:?}"));
+        }
+        let text = io::to_json_string(&dfg);
+        let back = io::from_json_str(&text).map_err(|e| format!("{cfg:?}: decode: {e}"))?;
+        if back.name != dfg.name || back.nodes != dfg.nodes || back.edges != dfg.edges {
+            return Err(format!("{cfg:?}: JSON round-trip changed the graph"));
+        }
+        // re-encode is byte-stable: the format is a canonical form
+        if io::to_json_string(&back) != text {
+            return Err(format!("{cfg:?}: re-encode not byte-identical"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_generated_graphs_roundtrip_dot() {
+    forall("fuzz_dot_roundtrip", 200, 0xF0D07, |g| {
+        let cfg = arb_config(g.rng, g.size);
+        let dfg = generate(&cfg);
+        let text = io::to_dot(&dfg);
+        let back = io::from_dot(&text).map_err(|e| format!("{cfg:?}: decode: {e}"))?;
+        if back.name != dfg.name || back.nodes != dfg.nodes || back.edges != dfg.edges {
+            return Err(format!("{cfg:?}: DOT round-trip changed the graph"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fuzz_mapper_is_sound_on_generated_graphs() {
+    forall("fuzz_mapper_sound", 200, 0xF03A9, |g| {
+        let cfg = arb_config(g.rng, g.size);
+        let dfg = generate(&cfg);
+        let side = 5 + g.rng.below(4);
+        let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
+        match MappingEngine::default().map(&dfg, &layout) {
+            MapOutcome::Mapped { mapping, .. } => {
+                let errs = mapping.validate(&dfg, &layout);
+                if !errs.is_empty() {
+                    return Err(format!("{}: witness invalid: {errs:?}", dfg.name));
+                }
+                if mapping.latency(&dfg) < dfg.critical_path_nodes() {
+                    return Err(format!("{}: latency below critical path", dfg.name));
+                }
+            }
+            MapOutcome::Failed { .. } => { /* unmappable instance: data, not a bug */ }
+        }
+        Ok(())
+    });
+}
+
+/// Search soundness + thread invariance over generated workloads: a
+/// feasible search yields a validating witness at any thread count, the
+/// improvement trace (phase, tested, cost — wall time aside) and the
+/// deterministic counters are byte-equal between 1 and 2 worker threads,
+/// and infeasibility surfaces as an absent result, never a panic.
+#[test]
+fn fuzz_search_is_sound_and_thread_invariant() {
+    forall("fuzz_search_sound", 12, 0xF05EA, |g| {
+        let cfg = GenConfig {
+            seed: g.rng.next_u64(),
+            loads: 2 + g.rng.below(2),
+            compute: 3 + g.rng.below(5 + g.size),
+            stores: 1 + g.rng.below(2),
+            binary_p: 0.5,
+            ..Default::default()
+        };
+        let dfgs = vec![generate(&cfg)];
+        let side = 6 + g.rng.below(2);
+        let grid = Grid::new(side, side);
+        let mapper = Mapper::default();
+        let cost = CostModel::area();
+        let runs: Vec<_> = [1usize, 2]
+            .iter()
+            .map(|&threads| {
+                let scfg = SearchConfig {
+                    l_test: 30,
+                    gsg_passes: 1,
+                    search_threads: threads,
+                    ..Default::default()
+                };
+                helex::search::run(&dfgs, grid, &mapper, &cost, &scfg, None)
+            })
+            .collect();
+        match (&runs[0], &runs[1]) {
+            (Some(a), Some(b)) => {
+                for (di, d) in dfgs.iter().enumerate() {
+                    let errs = a.final_mappings[di].validate(d, &a.best_layout);
+                    if !errs.is_empty() {
+                        return Err(format!("{}: witness invalid: {errs:?}", d.name));
+                    }
+                }
+                if a.best_layout != b.best_layout || a.best_cost != b.best_cost {
+                    return Err(format!("{cfg:?}: result depends on search_threads"));
+                }
+                if a.stats.tested != b.stats.tested || a.stats.expanded != b.stats.expanded {
+                    return Err(format!("{cfg:?}: counters depend on search_threads"));
+                }
+                let key = |r: &helex::search::SearchResult| -> Vec<(String, usize, f64)> {
+                    r.stats
+                        .trace
+                        .iter()
+                        .map(|p| (p.phase.clone(), p.tested, p.best_cost))
+                        .collect()
+                };
+                if key(a) != key(b) {
+                    return Err(format!("{cfg:?}: trace depends on search_threads"));
+                }
+            }
+            (None, None) => { /* infeasible at both thread counts: fine */ }
+            _ => return Err(format!("{cfg:?}: feasibility depends on search_threads")),
+        }
+        Ok(())
+    });
+}
+
+/// The committed interchange corpus stays decodable, valid and faithful
+/// to paper Table II. (CI's fuzz-smoke job additionally diffs the bytes
+/// against a fresh `helex dfg export`.)
+#[test]
+fn corpus_files_decode_validate_and_match_table_ii() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("corpus");
+    for (name, v, e) in TABLE_II {
+        let path = dir.join(format!("{name}.json"));
+        let dfg = io::from_path(&path)
+            .unwrap_or_else(|err| panic!("{}: {err}", path.display()));
+        assert_eq!(dfg.name, name, "{}: name mismatch", path.display());
+        assert_eq!(dfg.num_nodes(), v, "{name}: V");
+        assert_eq!(dfg.num_edges(), e, "{name}: E");
+        let errs = dfg.validate();
+        assert!(errs.is_empty(), "{name}: {errs:?}");
+    }
+    let files = std::fs::read_dir(&dir)
+        .expect("corpus/ exists")
+        .filter_map(|f| f.ok())
+        .filter(|f| f.path().extension().map_or(false, |x| x == "json"))
+        .count();
+    assert_eq!(files, TABLE_II.len(), "corpus has exactly the 12 Table II graphs");
+}

@@ -178,6 +178,49 @@ fn prop_search_result_feasible_and_bounded() {
 }
 
 #[test]
+fn prop_gen_workloads_are_valid_and_mapper_sound() {
+    // the seeded workload generator (dfg::gen) — the loadgen/fuzz input
+    // source — under the same soundness bar as the spec builder above
+    forall("gen_workloads", 30, 0x6E0, |g| {
+        let cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfg = helex::dfg::gen::generate(&cfg);
+        let errs = dfg.validate();
+        if !errs.is_empty() {
+            return Err(format!("{cfg:?}: {errs:?}"));
+        }
+        let side = 6 + g.rng.below(3);
+        let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
+        if let MapOutcome::Mapped { mapping: m, .. } = MappingEngine::default().map(&dfg, &layout)
+        {
+            let errs = m.validate(&dfg, &layout);
+            if !errs.is_empty() {
+                return Err(format!("{}: {errs:?}", dfg.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gen_graphs_roundtrip_the_interchange_codecs() {
+    forall("gen_roundtrip", 40, 0x6E1, |g| {
+        let cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfg = helex::dfg::gen::generate(&cfg);
+        let json = helex::dfg::io::to_json_string(&dfg);
+        let back = helex::dfg::io::from_json_str(&json).map_err(|e| e.to_string())?;
+        if back.nodes != dfg.nodes || back.edges != dfg.edges {
+            return Err("JSON round-trip changed the graph".into());
+        }
+        let dot = helex::dfg::io::to_dot(&dfg);
+        let back = helex::dfg::io::from_dot(&dot).map_err(|e| e.to_string())?;
+        if back.nodes != dfg.nodes || back.edges != dfg.edges {
+            return Err("DOT round-trip changed the graph".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cost_linear_in_removals() {
     forall("cost_linear", 200, 0xC0, |g| {
         let grid = Grid::new(4 + g.rng.below(6), 4 + g.rng.below(6));

@@ -160,6 +160,49 @@ fn malformed_requests_get_4xx_and_the_server_survives() {
         let reply = String::from_utf8(reply).unwrap();
         assert!(reply.contains("\"error\""), "structured error body, got {reply}");
     }
+    // structurally broken user graphs must answer with the *precise*
+    // validation reason (the typed DfgError surface), still as a 400
+    let precise: &[(&str, &str)] = &[
+        (
+            "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"add\",\"add\"],\"edges\":[[0,1],[1,0]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+            "cycle",
+        ),
+        (
+            "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"abs\",\"store\"],\"edges\":[[0,1],[0,1],[1,2]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+            "duplicate edge",
+        ),
+        (
+            "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"abs\",\"store\"],\"edges\":[[0,1],[1,1],[1,2]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+            "self-loop",
+        ),
+        (
+            "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"zap\",\"store\"],\"edges\":[[0,1],[1,2]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+            "unknown operation 'zap'",
+        ),
+        (
+            "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"store\"],\"edges\":[[0,9]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
+            "out of range",
+        ),
+    ];
+    for (body, needle) in precise {
+        let (status, reply) =
+            client::request_raw(&server.addr, "POST", "/v1/jobs", body.as_bytes()).unwrap();
+        assert_eq!(status, 400, "body {body:?} must be a 400");
+        let reply = String::from_utf8(reply).unwrap();
+        assert!(reply.contains(needle), "expected {needle:?} in {reply}");
+    }
+    // a graph over the interchange node cap is refused by the cap, not
+    // by an attempt to build it
+    let big = format!(
+        "{{\"dfgs\":[{{\"name\":\"big\",\"nodes\":[{}],\"edges\":[]}}],\"grid\":{{\"rows\":5,\"cols\":5}}}}",
+        vec!["\"add\""; helex::dfg::io::MAX_NODES + 1].join(",")
+    );
+    let (status, reply) =
+        client::request_raw(&server.addr, "POST", "/v1/jobs", big.as_bytes()).unwrap();
+    assert_eq!(status, 400, "oversized graph must be a 400");
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("at most"), "cap message, got {reply}");
+
     // deep-nesting bomb: bounded parse, not a stack overflow
     let bomb = "[".repeat(50_000);
     let (status, _) =
@@ -216,6 +259,63 @@ fn malformed_requests_get_4xx_and_the_server_survives() {
     let health = client::get_json(&server.addr, "/v1/healthz").unwrap();
     assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
     server.stop();
+}
+
+/// The workload-ingestion acceptance path: a user-authored JSON graph
+/// file (written by hand, not by our encoder) loads through
+/// `dfg::io::from_path`, submits over HTTP, maps, its witness
+/// validates, and the served result is byte-identical to the same spec
+/// through a direct in-process `ExplorationService` run. The DOT form
+/// of the same graph parses to the identical structure.
+#[test]
+fn user_authored_graph_file_submits_and_matches_direct_run() {
+    let dir = tmp_dir("usergraph");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // hand-authored interchange text (whitespace and key order differ
+    // from our canonical encoder on purpose)
+    let json_path = dir.join("kernel.json");
+    std::fs::write(
+        &json_path,
+        "{ \"name\": \"kernel\",\n  \"edges\": [[0,2],[1,2],[2,3],[2,4],[3,5],[4,5]],\n  \"nodes\": [\"load\",\"load\",\"add\",\"abs\",\"shr\",\"store\"] }\n",
+    )
+    .unwrap();
+    let dfg = helex::dfg::io::from_path(&json_path).expect("hand-written JSON loads");
+    assert!(dfg.validate().is_empty());
+
+    // the same kernel as DOT parses to the identical structure
+    let dot_path = dir.join("kernel.dot");
+    std::fs::write(
+        &dot_path,
+        "digraph \"kernel\" { // hand-written\n  n0 [label=\"load\"]; n1 [label=\"load\"];\n  n2 [label=\"add\"]; n3 [label=\"abs\"]; n4 [label=\"shr\"]; n5 [label=\"store\"];\n  n0 -> n2; n1 -> n2; n2 -> n3; n2 -> n4; n3 -> n5; n4 -> n5;\n}\n",
+    )
+    .unwrap();
+    let from_dot = helex::dfg::io::from_path(&dot_path).expect("hand-written DOT loads");
+    assert_eq!(from_dot.nodes, dfg.nodes);
+    assert_eq!(from_dot.edges, dfg.edges);
+
+    let mut spec = JobSpec::new("user-kernel", vec![dfg], helex::Grid::new(6, 6));
+    spec.search.l_test = 40;
+    spec.search.gsg_passes = 1;
+
+    // ground truth: direct in-process run; the witness must validate
+    let direct = ExplorationService::with_jobs(1).run_job(&spec);
+    let result = direct.outcome.search_result().expect("tiny kernel maps on 6x6");
+    for (di, d) in spec.dfgs.iter().enumerate() {
+        let errs = result.final_mappings[di].validate(d, &result.best_layout);
+        assert!(errs.is_empty(), "witness invalid: {errs:?}");
+    }
+    let direct_bytes = wire::strip_volatile(&wire::encode_result(&direct)).to_string();
+
+    // the same spec over HTTP is byte-identical, volatile fields aside
+    let server = RunningServer::start(test_config(None));
+    let id = client::submit_spec(&server.addr, &spec).expect("submit user graph");
+    let over_http =
+        client::wait_result(&server.addr, id, Duration::from_millis(100), 1200).expect("result");
+    let http_bytes = wire::strip_volatile(&wire::encode_result(&over_http)).to_string();
+    assert_eq!(http_bytes, direct_bytes, "served result must match the direct run byte-for-byte");
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

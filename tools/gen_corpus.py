@@ -1,0 +1,206 @@
+#!/usr/bin/env python3
+"""Regenerate the committed DFG interchange corpus (corpus/*.json).
+
+This is a faithful port of the Rust pipeline
+`dfg::benchmarks::benchmark(name)` -> `dfg::io::to_json_string(&dfg)`:
+the xoshiro256** PRNG (seeded via splitmix64), the synthetic-DFG builder
+(`dfg::builder::DfgSpec::build`) and the 12 Table II benchmark specs.
+The output must stay byte-identical to `helex dfg export --out corpus`
+— CI's fuzz-smoke job diffs the two.
+
+Usage: python3 tools/gen_corpus.py [outdir]   (default: corpus)
+"""
+
+import sys
+from pathlib import Path
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    z = (x + 0x9E3779B97F4A7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** — port of rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        g = 0x9E3779B97F4A7C15
+        self.s = [
+            splitmix64(seed & MASK),
+            splitmix64((seed + g) & MASK),
+            splitmix64((seed + 2 * g) & MASK),
+            splitmix64((seed + 3 * g) & MASK),
+        ]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, n: int) -> int:
+        # Lemire's multiply-shift rejection method.
+        assert n > 0
+        threshold = ((1 << 64) - n) % n  # n.wrapping_neg() % n
+        while True:
+            x = self.next_u64()
+            m = x * n
+            if (m & MASK) >= threshold:
+                return m >> 64
+
+    def range(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo)
+
+    def shuffle(self, xs: list) -> None:
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+UNARY = {"abs", "fabs", "ftoi", "itof", "exp", "log", "sqrt", "sin", "cos", "store"}
+
+
+def arity(op: str) -> int:
+    if op == "load":
+        return 0
+    return 1 if op in UNARY else 2
+
+
+def build(name: str, loads: int, stores: int, compute, binary: int, seed: int):
+    """Port of DfgSpec::build (rust/src/dfg/builder.rs)."""
+    rng = Rng(seed)
+
+    ops = ["load"] * loads
+    compute_ops = [op for (op, count) in compute for _ in range(count)]
+    rng.shuffle(compute_ops)
+    compute_start = len(ops)
+    ops.extend(compute_ops)
+    store_start = len(ops)
+    ops.extend(["store"] * stores)
+
+    indeg = [0] * len(ops)
+    budget = binary
+    for i in range(store_start - 1, compute_start - 1, -1):
+        indeg[i] = 1
+        if arity(ops[i]) == 2 and budget > 0 and i >= 2:
+            indeg[i] = 2
+            budget -= 1
+    assert budget == 0, f"{name}: binary budget unspent"
+    for i in range(store_start, len(ops)):
+        indeg[i] = 1
+
+    edges = []
+    outdeg = [0] * len(ops)
+    for i in range(compute_start, len(ops)):
+        picked = []
+        visible_end = min(i, store_start)
+        for _slot in range(indeg[i]):
+            uncovered = [p for p in range(visible_end)
+                         if outdeg[p] == 0 and p not in picked]
+            if uncovered:
+                choice = uncovered[-1] if i >= store_start else uncovered[0]
+            else:
+                window = max(8, visible_end // 3)
+                lo = visible_end - window if visible_end > window else 0
+                tries = 0
+                while True:
+                    p = rng.range(lo, visible_end)
+                    if p not in picked:
+                        choice = p
+                        break
+                    tries += 1
+                    if tries > 32:
+                        choice = next(p for p in range(visible_end)
+                                      if p not in picked)
+                        break
+            picked.append(choice)
+            outdeg[choice] += 1
+            edges.append((choice, i))
+
+    # Repair pass: cover any still-unconsumed producer.
+    while True:
+        u = next((p for p in range(store_start) if outdeg[p] == 0), None)
+        if u is None:
+            break
+        fixed = False
+        for ei, (p, c) in enumerate(edges):
+            if c > u and outdeg[p] >= 2 and p != u \
+                    and not any(a == u and b == c for (a, b) in edges):
+                outdeg[p] -= 1
+                outdeg[u] += 1
+                edges[ei] = (u, c)
+                fixed = True
+                break
+        assert fixed, f"{name}: cannot cover producer {u}"
+
+    return ops, edges
+
+
+# The 12 Table II specs (rust/src/dfg/benchmarks.rs), in table order.
+SPECS = [
+    ("BIL", 6, 1, [("fmul", 5), ("fadd", 4), ("fsub", 3), ("fdiv", 2),
+                   ("exp", 2), ("fabs", 2), ("itof", 1)], 9, 0x811),
+    ("BOX", 5, 1, [("add", 8), ("mul", 2), ("shr", 2), ("abs", 1)], 4, 0x80C),
+    ("FFT", 8, 8, [("add", 10), ("sub", 10), ("mul", 14), ("shr", 4)], 22, 0xFF7),
+    ("GAR", 4, 1, [("fmul", 5), ("fadd", 3), ("fsub", 2), ("mul", 2),
+                   ("sin", 1), ("cos", 1), ("exp", 1), ("itof", 1)], 7, 0x6A2),
+    ("GB", 4, 4, [("add", 5), ("mul", 3)], 0, 0x6B1),
+    ("MD", 10, 4, [("fmul", 11), ("fadd", 7), ("fsub", 8), ("fdiv", 3),
+                   ("sqrt", 2), ("fcmp", 2), ("fmin", 2), ("mul", 3),
+                   ("add", 3)], 29, 0x3D5),
+    ("NB", 6, 3, [("fmul", 7), ("fadd", 5), ("fsub", 4), ("fdiv", 2),
+                  ("sqrt", 1), ("fabs", 1), ("itof", 1)], 13, 0x2B0),
+    ("NMS", 6, 2, [("cmp", 5), ("max", 5), ("select", 4), ("add", 3),
+                   ("sub", 2), ("mul", 2)], 13, 0x4E5),
+    ("RGB", 3, 3, [("mul", 9), ("add", 6), ("shr", 3), ("sub", 3)], 6, 0x26B),
+    ("ROI", 8, 4, [("add", 8), ("sub", 4), ("mul", 6), ("cmp", 3),
+                   ("max", 3), ("min", 2), ("fadd", 3), ("fmul", 2),
+                   ("ftoi", 1), ("itof", 1)], 19, 0x901),
+    ("SAD", 16, 1, [("abs", 24), ("sub", 24), ("add", 15)], 15, 0x5AD),
+    ("SOB", 4, 1, [("add", 2), ("mul", 1), ("abs", 1)], 3, 0x50B),
+]
+
+# Table II (name, V, E) — sanity-checked after each build.
+TABLE_II = {
+    "BIL": (26, 29), "BOX": (19, 18), "FFT": (54, 68), "GAR": (21, 24),
+    "GB": (16, 12), "MD": (55, 74), "NB": (30, 37), "NMS": (29, 36),
+    "RGB": (27, 30), "ROI": (45, 56), "SAD": (80, 79), "SOB": (9, 8),
+}
+
+
+def to_json(name: str, ops, edges) -> str:
+    # Matches util::json compact output + io::to_json_string trailing newline.
+    nodes = ",".join(f'"{op}"' for op in ops)
+    es = ",".join(f"[{s},{d}]" for (s, d) in edges)
+    return f'{{"name":"{name}","nodes":[{nodes}],"edges":[{es}]}}\n'
+
+
+def main():
+    outdir = Path(sys.argv[1] if len(sys.argv) > 1 else "corpus")
+    outdir.mkdir(parents=True, exist_ok=True)
+    for (name, loads, stores, compute, binary, seed) in SPECS:
+        ops, edges = build(name, loads, stores, compute, binary, seed)
+        v, e = TABLE_II[name]
+        assert len(ops) == v, f"{name}: V={len(ops)} expected {v}"
+        assert len(edges) == e, f"{name}: E={len(edges)} expected {e}"
+        path = outdir / f"{name}.json"
+        path.write_text(to_json(name, ops, edges))
+        print(f"wrote {path} (V={v} E={e})")
+
+
+if __name__ == "__main__":
+    main()
