@@ -9,7 +9,8 @@ Two checks, stdlib only:
    >= MIN_SPEEDUP. This is hardware-independent enough to gate anywhere:
    the deterministic parallel search must actually pay for itself.
 2. Unless the baseline is marked `"provisional": true`, the tracked
-   medians (`layouts_per_sec` at 1t and 4t) must not regress more than
+   medians (`layouts_per_sec` at 1t and 4t, and `genetic_hv_per_sec`
+   when both records carry it) must not regress more than
    MAX_REGRESSION vs the baseline.
 
 `--refresh` adopts the current run's medians as the committed baseline —
@@ -92,6 +93,21 @@ def main() -> int:
                 if drop > MAX_REGRESSION:
                     print(f"FAIL: {key} median regressed {drop:.1%} (> {MAX_REGRESSION:.0%})")
                     ok = False
+            # hypervolume/sec of the genetic phase: gated only once both
+            # records carry a measurement (older baselines predate it)
+            b = base.get("genetic_hv_per_sec", 0.0)
+            c = cur.get("genetic_hv_per_sec", 0.0)
+            if b > 0.0 and c > 0.0:
+                drop = (b - c) / b
+                print(f"genetic_hv_per_sec: baseline {b:.0f}, current {c:.0f} ({-drop:+.1%})")
+                if drop > MAX_REGRESSION:
+                    print(
+                        f"FAIL: genetic_hv_per_sec regressed {drop:.1%} "
+                        f"(> {MAX_REGRESSION:.0%})"
+                    )
+                    ok = False
+            elif c > 0.0:
+                print("genetic_hv_per_sec: no baseline median yet; check skipped")
 
     return 0 if ok else 1
 

@@ -122,6 +122,10 @@ fn main() {
     // runs per point; medians feed BENCH_search.json, which CI's
     // bench-track job gates (ratio >= 1.5 at 4t, and no >20% regression
     // of the medians vs the committed baseline).
+    // (lps1, lps4, wall1, wall4, speedup); None when the section is
+    // filtered out — the merged BENCH_search.json write keeps the prior
+    // record's values then
+    let mut threads_fields: Option<(f64, f64, f64, f64, f64)> = None;
     if h.enabled("search::threads") {
         println!("\n== search-threads scaling (fig9 medium spec: S4 @ 9x9, l_test 400) ==");
         let mut per_point: Vec<(usize, f64, f64)> = Vec::new(); // (threads, lps, wall)
@@ -151,28 +155,91 @@ fn main() {
         if let [(_, lps1, wall1), (_, lps4, wall4)] = per_point.as_slice() {
             let speedup = lps4 / lps1;
             println!("    -> {speedup:.2}x tested-layouts/sec at 4 threads vs 1");
-            let record = Json::obj(vec![
-                ("bench", Json::str("search")),
-                ("spec", Json::str("fig9-medium:S4@9x9,l_test=400,gsg_passes=1")),
-                (
-                    "layouts_per_sec",
-                    Json::obj(vec![
-                        ("1t", Json::F64(*lps1)),
-                        ("4t", Json::F64(*lps4)),
-                    ]),
-                ),
-                (
-                    "wall_secs",
-                    Json::obj(vec![
-                        ("1t", Json::F64(*wall1)),
-                        ("4t", Json::F64(*wall4)),
-                    ]),
-                ),
-                ("speedup_4t", Json::F64(speedup)),
-            ]);
-            if std::fs::write("BENCH_search.json", record.to_string()).is_ok() {
-                println!("    wrote BENCH_search.json");
-            }
+            threads_fields = Some((*lps1, *lps4, *wall1, *wall4, speedup));
+        }
+    }
+
+    // Genetic front quality: Pareto-objective searches on the same
+    // fig9 medium spec, scored as 2-D (area, power) hypervolume of the
+    // final front against the full layout's synth numbers, per second
+    // of session wall time. Medians feed BENCH_search.json next to the
+    // thread-scaling numbers.
+    let mut genetic_hv_per_sec: Option<f64> = None;
+    if h.enabled("search::genetic") {
+        println!("\n== genetic front quality (S4 @ 9x9, pareto objective, l_test 400) ==");
+        let cfg = SearchConfig {
+            l_test: 400,
+            gsg_passes: 1,
+            objective: helex::search::SearchObjective::Pareto,
+            ..Default::default()
+        };
+        let dfgs = helex::dfg::benchmarks::dfg_set("S4");
+        let grid = helex::Grid::new(9, 9);
+        let cost = helex::CostModel::area();
+        let mut rates = Vec::new();
+        let mut front_len = 0usize;
+        let mut hv = 0.0f64;
+        for _ in 0..3 {
+            let engine = helex::MappingEngine::default();
+            let r = Explorer::new(grid)
+                .dfgs(&dfgs)
+                .engine(&engine)
+                .cost(&cost)
+                .config(cfg.clone())
+                .run()
+                .expect("S4 maps on 9x9");
+            let full = helex::cost::synth::synthesize(&r.full_layout);
+            hv = helex::search::pareto::hypervolume_2d(
+                &r.front,
+                full.area_um2,
+                full.power_uw,
+            );
+            rates.push(hv / r.stats.t_total().max(1e-9));
+            front_len = r.front.len();
+        }
+        let rate_med = median(&mut rates);
+        println!(
+            "    search::genetic  {rate_med:>12.0} hv-um2uW/s  \
+             ({front_len} front point(s), hv {hv:.0})"
+        );
+        genetic_hv_per_sec = Some(rate_med);
+    }
+
+    // Merge-write BENCH_search.json: a filtered run refreshes only the
+    // sections it measured (same pattern as BENCH_service.json below).
+    if threads_fields.is_some() || genetic_hv_per_sec.is_some() {
+        let prior = std::fs::read_to_string("BENCH_search.json")
+            .ok()
+            .and_then(|text| json::parse(&text).ok());
+        let keep = |key: &str, fallback: Json| {
+            prior.as_ref().and_then(|p| p.get(key)).cloned().unwrap_or(fallback)
+        };
+        let (lps_field, wall_field, speedup_field) = match threads_fields {
+            Some((lps1, lps4, wall1, wall4, speedup)) => (
+                Json::obj(vec![("1t", Json::F64(lps1)), ("4t", Json::F64(lps4))]),
+                Json::obj(vec![("1t", Json::F64(wall1)), ("4t", Json::F64(wall4))]),
+                Json::F64(speedup),
+            ),
+            None => (
+                keep("layouts_per_sec", Json::Obj(Vec::new())),
+                keep("wall_secs", Json::Obj(Vec::new())),
+                keep("speedup_4t", Json::F64(0.0)),
+            ),
+        };
+        let genetic_field = match genetic_hv_per_sec {
+            Some(rate) => Json::F64(rate),
+            None => keep("genetic_hv_per_sec", Json::F64(0.0)),
+        };
+        let record = Json::obj(vec![
+            ("bench", Json::str("search")),
+            ("spec", Json::str("fig9-medium:S4@9x9,l_test=400,gsg_passes=1")),
+            ("layouts_per_sec", lps_field),
+            ("wall_secs", wall_field),
+            ("speedup_4t", speedup_field),
+            ("genetic_hv_per_sec", genetic_field),
+        ]);
+        if std::fs::write("BENCH_search.json", record.to_string()).is_ok() {
+            println!("    wrote BENCH_search.json");
         }
     }
 

@@ -307,22 +307,26 @@ fn fold_fig5(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
 /// theoretical-minimum layout.
 fn fold_fig6(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
     let mut t = Table::new(
-        "Fig 6: reduction remaining to theoretical minimum (%Rm)",
-        &["Size", "A achieved %", "A remaining %", "P achieved %", "P remaining %"],
+        "Fig 6: reduction remaining to theoretical minimum (%Rm), per objective",
+        &[
+            "Size",
+            "A achieved %",
+            "A remaining %",
+            "P achieved %",
+            "P remaining %",
+            "Ops achieved %",
+            "Ops remaining %",
+        ],
     );
-    let (mut ra, mut rp, mut n) = (0.0, 0.0, 0);
+    let (mut ra, mut rp, mut ro, mut n) = (0.0, 0.0, 0.0, 0);
     for size in sizes(quick) {
         let Some(r) = ctx.runs.get("table2", size) else { continue };
-        let calc = |m: &crate::cost::CostModel| {
-            let full = m.layout_cost(&r.full_layout);
-            let best = m.layout_cost(&r.best_layout);
-            let tmin = m.theoretical_min_cost(&r.full_layout, &r.min_insts);
-            100.0 * (full - best) / (full - tmin)
-        };
-        let a = calc(&ctx.area);
-        let p = calc(&ctx.power);
+        let gaps = posteriori::objective_gaps(r);
+        let (a, p, o) =
+            (gaps.area.achieved_pct(), gaps.power.achieved_pct(), gaps.ops.achieved_pct());
         ra += a;
         rp += p;
+        ro += o;
         n += 1;
         t.row(vec![
             format!("{}x{}", size.0, size.1),
@@ -330,15 +334,20 @@ fn fold_fig6(ctx: &FoldCtx, quick: bool) -> Vec<Table> {
             pct(100.0 - a),
             pct(p),
             pct(100.0 - p),
+            pct(o),
+            pct(100.0 - o),
         ]);
     }
     if n > 0 {
+        let n = n as f64;
         t.row(vec![
             "AVG".into(),
-            pct(ra / n as f64),
-            pct(100.0 - ra / n as f64),
-            pct(rp / n as f64),
-            pct(100.0 - rp / n as f64),
+            pct(ra / n),
+            pct(100.0 - ra / n),
+            pct(rp / n),
+            pct(100.0 - rp / n),
+            pct(ro / n),
+            pct(100.0 - ro / n),
         ]);
     }
     vec![t]

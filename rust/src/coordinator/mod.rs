@@ -31,6 +31,15 @@ pub struct ExperimentConfig {
     pub use_heatmap: bool,
     /// Section IV-G noGSG variant: also skip the Arith group in OPSG.
     pub opsg_skip_arith: bool,
+    /// Scalar op-count minimisation (the paper's mode) or Pareto-front
+    /// exploration over (ops, synth area, synth power).
+    pub objective: search::SearchObjective,
+    /// Genetic-phase generations for Pareto sessions.
+    pub genetic_generations: usize,
+    /// Genetic-phase population cap for Pareto sessions.
+    pub genetic_population: usize,
+    /// Start from a mined frequent-subgraph seed layout when feasible.
+    pub subgraph_seed: bool,
     pub mapper: MapperConfig,
     /// Where CSVs are written.
     pub results_dir: PathBuf,
@@ -56,6 +65,10 @@ impl Default for ExperimentConfig {
             gsg_passes: 2,
             use_heatmap: true,
             opsg_skip_arith: false,
+            objective: search::SearchObjective::OpCount,
+            genetic_generations: SearchConfig::default().genetic_generations,
+            genetic_population: SearchConfig::default().genetic_population,
+            subgraph_seed: false,
             mapper: MapperConfig::default(),
             results_dir: PathBuf::from("results"),
             use_xla_scorer: true,
@@ -83,6 +96,16 @@ impl ExperimentConfig {
         self.gsg_passes = cfg.int_or("search.gsg_passes", self.gsg_passes as i64) as usize;
         self.use_heatmap = cfg.bool_or("search.use_heatmap", self.use_heatmap);
         self.opsg_skip_arith = cfg.bool_or("search.opsg_skip_arith", self.opsg_skip_arith);
+        if let Some(name) = cfg.get("search.objective").and_then(|v| v.as_str()) {
+            if let Some(objective) = search::SearchObjective::from_name(name) {
+                self.objective = objective;
+            }
+        }
+        self.genetic_generations =
+            cfg.int_or("search.genetic.generations", self.genetic_generations as i64) as usize;
+        self.genetic_population =
+            cfg.int_or("search.genetic.population", self.genetic_population as i64) as usize;
+        self.subgraph_seed = cfg.bool_or("search.subgraph_seed", self.subgraph_seed);
         self.use_xla_scorer = cfg.bool_or("runtime.use_xla_scorer", self.use_xla_scorer);
         self.mapper.route_iters =
             cfg.int_or("mapper.route_iters", self.mapper.route_iters as i64) as usize;
@@ -118,6 +141,10 @@ impl ExperimentConfig {
             gsg_stale_prune_after: 64,
             use_heatmap: self.use_heatmap,
             opsg_skip_arith: self.opsg_skip_arith,
+            objective: self.objective,
+            genetic_generations: self.genetic_generations,
+            genetic_population: self.genetic_population,
+            subgraph_seed: self.subgraph_seed,
             search_threads: self.search_threads,
         }
     }
@@ -244,6 +271,8 @@ mod tests {
         assert!(!cfg.opsg_skip_arith);
         let file = Config::parse(
             "[search]\nopsg_skip_arith = true\nuse_heatmap = false\nthreads = 3\n\
+             objective = \"pareto\"\nsubgraph_seed = true\n\
+             [search.genetic]\ngenerations = 5\npopulation = 11\n\
              [mapper]\nhist_increment = 2.5\npresent_penalty = 3.25\n\
              [service]\njobs = 6",
         );
@@ -254,8 +283,17 @@ mod tests {
         assert_eq!(cfg.mapper.present_penalty, 3.25);
         assert_eq!(cfg.jobs, 6);
         assert_eq!(cfg.search_threads, 3);
-        // and it lands in the per-grid SearchConfig
-        assert_eq!(cfg.search_config(Grid::new(6, 6)).search_threads, 3);
+        assert_eq!(cfg.objective, search::SearchObjective::Pareto);
+        assert!(cfg.subgraph_seed);
+        assert_eq!(cfg.genetic_generations, 5);
+        assert_eq!(cfg.genetic_population, 11);
+        // and it all lands in the per-grid SearchConfig
+        let scfg = cfg.search_config(Grid::new(6, 6));
+        assert_eq!(scfg.search_threads, 3);
+        assert_eq!(scfg.objective, search::SearchObjective::Pareto);
+        assert!(scfg.subgraph_seed);
+        assert_eq!(scfg.genetic_generations, 5);
+        assert_eq!(scfg.genetic_population, 11);
     }
 
     #[test]

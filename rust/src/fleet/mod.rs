@@ -761,6 +761,15 @@ fn batch_body(ctx: &FleetCtx, batch: &BatchEntry) -> Json {
                 let result = job_result(job, run);
                 row.push(("outcome", Json::str(outcome_tag(&result.outcome))));
                 row.push(("best_cost", result.best_cost().map_or(Json::Null, Json::F64)));
+                // Pareto jobs report how wide their final front is (0
+                // for scalar jobs), so suite dashboards can tell the
+                // modes apart without pulling each full result
+                row.push((
+                    "front_size",
+                    Json::U64(
+                        result.outcome.search_result().map_or(0, |r| r.front.len()) as u64
+                    ),
+                ));
                 row.push(("from_cache", Json::Bool(result.from_cache)));
             }
         }
@@ -802,6 +811,12 @@ fn stream_batch_events(stream: &mut TcpStream, ctx: &FleetCtx, batch: &BatchEntr
                 ("fingerprint", Json::str(wire::fp_hex(job.fingerprint))),
                 ("outcome", Json::str(outcome_tag(&result.outcome))),
                 ("best_cost", result.best_cost().map_or(Json::Null, Json::F64)),
+                (
+                    "front_size",
+                    Json::U64(
+                        result.outcome.search_result().map_or(0, |r| r.front.len()) as u64
+                    ),
+                ),
                 ("from_cache", Json::Bool(result.from_cache)),
             ])
             .to_string();

@@ -71,7 +71,17 @@
 //!   session API: heatmap initial layout and the two branch-and-bound
 //!   phases (OPSG then GSG), deterministic in-search parallel candidate
 //!   testing ([`search::parallel`]), plus the convergence trace
-//!   recorded from the event stream.
+//!   recorded from the event stream. The multi-objective extension
+//!   lives here too: [`search::pareto`] (the
+//!   [`search::SearchObjective`] switch, dominance checks and the
+//!   deterministic [`search::ParetoFront`] archive over op count ×
+//!   synth area × synth power), [`search::subgraph`] (the optional
+//!   `SubgraphSeedPhase` that mines frequent connected subgraphs
+//!   across the input DFGs and seeds the session from a near-minimal
+//!   layout when it maps) and [`search::genetic`] (the seeded
+//!   NSGA-II-style `GeneticPhase` that widens the front after the
+//!   scalar phases, streaming every improvement as a
+//!   `SearchEvent::ParetoPoint`).
 //! * [`service`] — the parallel job layer: `JobSpec`/`JobResult`,
 //!   the worker pool, the sharded deduplicating run cache (bounded,
 //!   LRU), the `ServiceEvent` progress stream, the async

@@ -92,6 +92,23 @@ fn build_config(args: &Args) -> ExperimentConfig {
     if let Some(threads) = args.get("search-threads") {
         cfg.search_threads = threads.parse().unwrap_or(cfg.search_threads);
     }
+    if let Some(name) = args.get("objective") {
+        match helex::search::SearchObjective::from_name(name) {
+            Some(objective) => cfg.objective = objective,
+            None => eprintln!(
+                "[helex] warning: unknown --objective '{name}' (op_count|pareto)"
+            ),
+        }
+    }
+    if args.flag("subgraph-seed") {
+        cfg.subgraph_seed = true;
+    }
+    if let Some(v) = args.get("generations") {
+        cfg.genetic_generations = v.parse().unwrap_or(cfg.genetic_generations);
+    }
+    if let Some(v) = args.get("population") {
+        cfg.genetic_population = v.parse().unwrap_or(cfg.genetic_population);
+    }
     if let Some(dir) = args.get("results-dir") {
         cfg.results_dir = dir.into();
     }
@@ -552,8 +569,12 @@ fn main() -> Result<()> {
                 dfgs,
                 Grid::new(r, c),
             );
-            if args.get_or("objective", "area") == "power" {
-                spec.objective = helex::Objective::Power;
+            match args.get_or("objective", "area") {
+                "power" => spec.objective = helex::Objective::Power,
+                // Pareto rides on the same spec field; the service flips
+                // the nested SearchConfig when it runs the job
+                "pareto" => spec.objective = helex::Objective::Pareto,
+                _ => {}
             }
             spec.search.l_test = args
                 .get("l-test")
@@ -591,6 +612,17 @@ fn main() -> Result<()> {
                             .unwrap_or("rejected (invalid spec)")
                     ),
                 }
+                if let Some(front) =
+                    result.outcome.search_result().map(|r| &r.front).filter(|f| !f.is_empty())
+                {
+                    println!("{id}: pareto front ({} point(s))", front.len());
+                    for p in front {
+                        println!(
+                            "  {:>3} ops  {:>9.1} um2  {:>8.2} uW",
+                            p.ops, p.area_um2, p.power_uw
+                        );
+                    }
+                }
             }
         }
         "explore" => {
@@ -620,6 +652,12 @@ fn main() -> Result<()> {
                             SearchEvent::PhaseFinished { phase, secs, best_cost } => eprintln!(
                                 "[helex] {phase}: done in {secs:.2}s (best cost {best_cost:.1})"
                             ),
+                            SearchEvent::ParetoPoint {
+                                ops, area_um2, power_uw, front_size, ..
+                            } => eprintln!(
+                                "[helex]   front +[{ops} ops, {area_um2:.1} um2, \
+                                 {power_uw:.2} uW] ({front_size} point(s))"
+                            ),
                             SearchEvent::LayoutTested { .. } => {}
                         }
                     }
@@ -635,6 +673,7 @@ fn main() -> Result<()> {
                 // header (final layout + counters) then one stripped
                 // event per line: byte-identical at any --search-threads
                 let mut out = String::new();
+                let full_synth = helex::cost::synth::synthesize(&result.full_layout);
                 let header = wire::strip_volatile(&Json::obj(vec![
                     ("dfgs", Json::str(args.get_or("dfgs", "S4"))),
                     ("grid", Json::str(format!("{r}x{c}"))),
@@ -642,6 +681,26 @@ fn main() -> Result<()> {
                     ("tested", Json::U64(result.stats.tested as u64)),
                     ("expanded", Json::U64(result.stats.expanded as u64)),
                     ("layout", wire::encode_layout(&result.best_layout)),
+                    // the full layout's objective-space point (the pareto
+                    // reference) + the final front: lets trace consumers
+                    // (CI's pareto-smoke) check dominance without a server
+                    (
+                        "full_point",
+                        Json::obj(vec![
+                            (
+                                "ops",
+                                Json::U64(result.full_layout.compute_instances() as u64),
+                            ),
+                            ("area_um2", Json::F64(full_synth.area_um2)),
+                            ("power_uw", Json::F64(full_synth.power_uw)),
+                        ]),
+                    ),
+                    (
+                        "front",
+                        Json::Arr(
+                            result.front.iter().map(wire::encode_pareto_point).collect(),
+                        ),
+                    ),
                 ]));
                 out.push_str(&header.to_string());
                 out.push('\n');
@@ -680,6 +739,15 @@ fn main() -> Result<()> {
                 result.stats.tested,
                 result.stats.t_total()
             );
+            if !result.front.is_empty() {
+                println!("pareto front  : {} point(s)", result.front.len());
+                for p in &result.front {
+                    println!(
+                        "  {:>3} ops  {:>9.1} um2  {:>8.2} uW  [{:016x}]",
+                        p.ops, p.area_um2, p.power_uw, p.fingerprint
+                    );
+                }
+            }
             if args.flag("show") {
                 println!("{}", result.best_layout.render());
             }
@@ -803,7 +871,7 @@ USAGE:
                                              POST /v1/jobs + /v1/batches, per-client quotas, job
                                              priorities, replica health/drain, shared result store
   helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB|graph.json] [--size RxC] [--l-test N]
-               [--objective area|power] [--seed N] [--search-threads N] [--label NAME] [--json]
+               [--objective area|power|pareto] [--seed N] [--search-threads N] [--label NAME] [--json]
                                              submit one job over HTTP and wait for the result
   helex submit --batch <suite> [--addr HOST:PORT] [--priority 0..9] [--client NAME]
                [--l-test N] [--paper-scale]
@@ -822,8 +890,10 @@ USAGE:
   helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
             [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
+            [--objective op_count|pareto] [--subgraph-seed]
   helex explore --dfgs BIL,SOB|S1..S6|graph.json --size RxC [--show] [--trace] [--trace-out FILE]
-                [--search-threads N] [--no-xla]
+                [--search-threads N] [--no-xla] [--objective op_count|pareto] [--subgraph-seed]
+                [--generations N] [--population N]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10

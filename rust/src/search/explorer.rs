@@ -32,6 +32,9 @@
 //!     .expect("S4 maps on 9x9");
 //! ```
 
+use super::genetic::GeneticPhase;
+use super::pareto::{ParetoFront, SearchObjective};
+use super::subgraph::SubgraphSeedPhase;
 use super::{gsg, heatmap, opsg, BatchScorer, SearchConfig, SearchResult, SearchStats, TracePoint};
 use crate::cgra::{Grid, Layout};
 use crate::cost::CostModel;
@@ -59,6 +62,12 @@ pub enum SearchEvent {
     /// The incumbent best layout improved. Costs are monotonically
     /// non-increasing across the whole session.
     Improved { best_cost: f64, tested: usize, secs: f64 },
+    /// A point was admitted to the session's Pareto front
+    /// ([`super::SearchObjective::Pareto`] sessions only): the anytime
+    /// front streams as these events. `front_size` is the archive size
+    /// after admission; like every event, emission order is
+    /// deterministic at any thread count (no volatile fields).
+    ParetoPoint { ops: usize, area_um2: f64, power_uw: f64, front_size: usize, tested: usize },
     /// A phase finished; `secs` is the phase's own wall time.
     PhaseFinished { phase: String, secs: f64, best_cost: f64 },
 }
@@ -128,6 +137,11 @@ pub struct SearchCtx<'a> {
     /// when no phase records one, so custom pipelines without an
     /// initialization phase keep the correct reduction baseline.
     pub initial: Option<Layout>,
+    /// The session's Pareto archive — `Some` exactly for
+    /// [`SearchObjective::Pareto`] sessions. Phases offer feasible
+    /// layouts through [`Self::record_front`], which emits
+    /// [`SearchEvent::ParetoPoint`] on admission.
+    pub front: Option<ParetoFront>,
     observer: Option<&'a mut dyn SearchObserver>,
     current_phase: String,
     aborted: Option<String>,
@@ -152,6 +166,7 @@ impl<'a> SearchCtx<'a> {
             scorer: None,
             witness: vec![None; dfgs.len()],
             initial: None,
+            front: None,
             observer: None,
             current_phase: String::new(),
             aborted: None,
@@ -205,6 +220,25 @@ impl<'a> SearchCtx<'a> {
         let tested = self.stats.tested;
         let secs = self.sw.secs();
         self.emit(SearchEvent::Improved { best_cost, tested, secs });
+    }
+
+    /// Offer a proven-feasible layout to the session's Pareto front.
+    /// No-op for scalar sessions; on admission the new point streams as
+    /// a [`SearchEvent::ParetoPoint`]. Must only be called while a
+    /// phase is open (events nest inside phase boundaries).
+    pub fn record_front(&mut self, layout: &Layout) {
+        let Some(mut front) = self.front.take() else { return };
+        if let Some(p) = front.insert(layout) {
+            let tested = self.stats.tested;
+            self.emit(SearchEvent::ParetoPoint {
+                ops: p.ops,
+                area_um2: p.area_um2,
+                power_uw: p.power_uw,
+                front_size: front.len(),
+                tested,
+            });
+        }
+        self.front = Some(front);
     }
 
     pub(crate) fn begin_phase(&mut self, name: &str, incumbent_cost: f64) {
@@ -482,12 +516,24 @@ impl<'a> Explorer<'a> {
 
     /// The paper's Algorithm 1 pipeline for a given configuration:
     /// heatmap, OPSG, and (when `cfg.run_gsg`) `cfg.gsg_passes` GSG
-    /// passes.
+    /// passes. `cfg.subgraph_seed` inserts the [`SubgraphSeedPhase`]
+    /// after the heatmap, and [`SearchObjective::Pareto`] appends the
+    /// [`GeneticPhase`] — the scalar pipeline always runs first, so the
+    /// paper's op-count result is always on the front.
     pub fn default_phases(cfg: &SearchConfig) -> Vec<Box<dyn SearchPhase>> {
-        let mut phases: Vec<Box<dyn SearchPhase>> =
-            vec![Box::new(HeatmapPhase), Box::new(OpsgPhase)];
+        let mut phases: Vec<Box<dyn SearchPhase>> = vec![Box::new(HeatmapPhase)];
+        if cfg.subgraph_seed {
+            phases.push(Box::new(SubgraphSeedPhase));
+        }
+        phases.push(Box::new(OpsgPhase));
         if cfg.run_gsg {
             phases.push(Box::new(GsgPhase { passes: cfg.gsg_passes }));
+        }
+        if cfg.objective == SearchObjective::Pareto {
+            phases.push(Box::new(GeneticPhase {
+                generations: cfg.genetic_generations,
+                population: cfg.genetic_population,
+            }));
         }
         phases
     }
@@ -543,6 +589,15 @@ impl<'a> Explorer<'a> {
             ctx.set_observer(obs);
         }
         ctx.stats.insts_full = full_layout.compute_group_instances();
+        if ctx.cfg.objective == SearchObjective::Pareto {
+            // the full layout anchors the archive: the search dominates
+            // it, so the final front never retains its point (direct
+            // insert, not record_front — no phase is open yet, and the
+            // anchor is not an improvement worth streaming)
+            let mut front = ParetoFront::new();
+            front.insert(&full_layout);
+            ctx.front = Some(front);
+        }
 
         let mut best = full_layout.clone();
         for mut phase in phases {
@@ -557,6 +612,9 @@ impl<'a> Explorer<'a> {
             if let Some(reason) = ctx.take_abort() {
                 return Err(ExploreError::Infeasible(reason));
             }
+            // every phase returns a proven-feasible incumbent: offer it
+            // to the front (still inside the phase's event scope)
+            ctx.record_front(&best);
             let insts = best.compute_group_instances();
             ctx.finish_phase(&name, t.secs(), cost.layout_cost(&best), insts);
         }
@@ -593,6 +651,7 @@ impl<'a> Explorer<'a> {
         }
 
         let best_cost = cost.layout_cost(&best);
+        let front = ctx.front.take().map(|f| f.points()).unwrap_or_default();
         Ok(SearchResult {
             full_layout,
             initial_layout,
@@ -600,6 +659,7 @@ impl<'a> Explorer<'a> {
             best_cost,
             min_insts,
             final_mappings,
+            front,
             stats: ctx.stats,
         })
     }

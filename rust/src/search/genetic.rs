@@ -1,0 +1,290 @@
+//! Pareto-mode genetic phase: an NSGA-II-style seeded loop over layout
+//! support masks, run after the scalar pipeline in
+//! [`super::SearchObjective::Pareto`] sessions.
+//!
+//! The scalar phases converge to one op-count-minimal layout; this
+//! phase spreads the session's [`super::ParetoFront`] around it.
+//! Genomes *are* layouts (per-compute-cell [`GroupSet`] support
+//! vectors): crossover mixes parents per cell, mutation removes a
+//! supported group or restores one from the full-support mask, and
+//! feasibility is tested through the [`TestPool`]'s forked engines —
+//! the same batched drivers the OPSG/GSG phases use.
+//!
+//! Determinism contract: the RNG is seeded from a fixed constant via
+//! [`splitmix64`], offspring are generated *before* any testing, every
+//! batch is consumed in full in generation order, and selection sorts
+//! by `(Pareto rank, ops, area, power, fingerprint)` — so the tested
+//! count, the front, the emitted event trace and the returned layout
+//! are byte-identical at any `search_threads` width (pinned by the
+//! property test in `rust/tests/properties.rs`).
+
+use super::parallel::{SharedState, TestPool};
+use super::pareto::{self, ParetoPoint};
+use super::{meets_min_instances, SearchCtx, SearchEvent};
+use crate::cgra::Layout;
+use crate::dfg::groups_used;
+use crate::mapper::Mapping;
+use crate::ops::GroupSet;
+use crate::util::rng::{splitmix64, Rng};
+use std::collections::HashSet;
+
+/// Seeded multi-objective exploration phase. Constructed by
+/// [`super::Explorer::default_phases`] from
+/// `SearchConfig::genetic_generations` / `genetic_population`.
+pub struct GeneticPhase {
+    pub generations: usize,
+    pub population: usize,
+}
+
+impl GeneticPhase {
+    pub const NAME: &'static str = "genetic";
+
+    /// RNG seed domain: fixed, so the phase is a pure function of the
+    /// incumbent and configuration (thread-count-invariant by
+    /// construction).
+    const SEED: u64 = 0x6765_6E65_7469_6331; // "genetic1"
+}
+
+/// One selection candidate: a feasible layout plus its objective point.
+struct Member {
+    layout: Layout,
+    point: ParetoPoint,
+}
+
+/// NSGA-II-flavoured deterministic selection: non-dominated members
+/// first, each tier ordered by the archive's total order, truncated to
+/// `cap`.
+fn select(mut members: Vec<Member>, cap: usize) -> Vec<Member> {
+    let pts: Vec<ParetoPoint> = members.iter().map(|m| m.point.clone()).collect();
+    let rank = |p: &ParetoPoint| -> usize {
+        pts.iter().filter(|q| pareto::dominates(q, p)).count().min(1)
+    };
+    members.sort_by_key(|m| {
+        (
+            rank(&m.point),
+            m.point.ops,
+            m.point.area_um2.to_bits(),
+            m.point.power_uw.to_bits(),
+            m.point.fingerprint,
+        )
+    });
+    members.truncate(cap.max(1));
+    members
+}
+
+impl super::SearchPhase for GeneticPhase {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
+        let dfgs = ctx.dfgs;
+        if dfgs.is_empty() || self.generations == 0 {
+            return incumbent;
+        }
+        let cfg = ctx.cfg.clone();
+        let full_mask = groups_used(dfgs).intersect(GroupSet::all_compute());
+        let compute: Vec<_> = incumbent.grid.compute_cells().collect();
+        let pop_target = self.population.max(2);
+        let mut rng = Rng::seed(splitmix64(Self::SEED));
+        let mut pool = TestPool::for_search(ctx.engine, cfg.search_threads_resolved());
+        let mut witness = std::mem::take(&mut ctx.witness);
+        let all_dfgs: Vec<usize> = (0..dfgs.len()).collect();
+
+        let mut best = incumbent.clone();
+        let mut best_cost = ctx.cost.layout_cost(&best);
+        ctx.record_front(&best);
+        // every layout ever generated (population + offspring), so no
+        // candidate is bred or tested twice
+        let mut seen: HashSet<u64> = HashSet::new();
+        seen.insert(pareto::layout_fingerprint(&incumbent));
+        let mut members =
+            vec![Member { point: pareto::evaluate(&incumbent), layout: incumbent }];
+
+        for _gen in 0..self.generations {
+            let remaining = cfg.l_test.saturating_sub(ctx.stats.tested);
+            if remaining == 0 {
+                break;
+            }
+            // ---- breed: offspring are fixed before any testing, so the
+            // candidate sequence cannot depend on thread interleaving
+            let mut offspring: Vec<Layout> = Vec::new();
+            let mut attempts = 0usize;
+            while offspring.len() < pop_target.min(remaining) && attempts < pop_target * 8 {
+                attempts += 1;
+                let a = &members[rng.below(members.len())].layout;
+                let b = &members[rng.below(members.len())].layout;
+                let mut child = a.clone();
+                for &cell in &compute {
+                    if rng.chance(0.5) {
+                        child.set_support(cell, b.support(cell));
+                    }
+                }
+                for _ in 0..=rng.below(2) {
+                    let cell = compute[rng.below(compute.len())];
+                    let support = child.support(cell);
+                    let missing = full_mask.minus(support);
+                    // bias toward removal: the front grows toward the
+                    // cheap corner; restores keep feasibility reachable
+                    if !support.is_empty() && (missing.is_empty() || rng.chance(0.7)) {
+                        let gs: Vec<_> = support.iter().collect();
+                        child.set_support(cell, support.without(*rng.choose(&gs)));
+                    } else if !missing.is_empty() {
+                        let gs: Vec<_> = missing.iter().collect();
+                        child.set_support(cell, support.with(*rng.choose(&gs)));
+                    }
+                }
+                if !meets_min_instances(&child, &ctx.min_insts) {
+                    continue;
+                }
+                if seen.insert(pareto::layout_fingerprint(&child)) {
+                    offspring.push(child);
+                }
+            }
+            if offspring.is_empty() {
+                continue;
+            }
+
+            // ---- batched feasibility testing, consumed in breed order
+            let costs: Vec<f64> =
+                offspring.iter().map(|l| ctx.cost.layout_cost(l)).collect();
+            let mut survivors: Vec<usize> = Vec::new();
+            let mut pending_witness: Option<Vec<(usize, Mapping)>> = None;
+            {
+                let shared = SharedState { dfgs, witness: &witness, affected: &all_dfgs };
+                let items: Vec<(&Layout, bool)> =
+                    offspring.iter().map(|l| (l, false)).collect();
+                let mut prefetched = pool.prefetch(&shared, &items);
+                for (i, child) in offspring.iter().enumerate() {
+                    let t = match prefetched[i].take() {
+                        Some(t) => t,
+                        None => pool.test_one(&shared, child),
+                    };
+                    ctx.stats.tested += 1;
+                    ctx.stats.expanded += 1;
+                    ctx.emit(SearchEvent::LayoutTested {
+                        feasible: t.feasible,
+                        cost: costs[i],
+                        tested: ctx.stats.tested,
+                        worker: t.worker,
+                    });
+                    if t.feasible {
+                        survivors.push(i);
+                        ctx.record_front(child);
+                        if costs[i] < best_cost {
+                            best = child.clone();
+                            best_cost = costs[i];
+                            pending_witness = Some(t.witnesses);
+                            ctx.emit_improved(best_cost);
+                        }
+                    }
+                }
+            }
+            // witness updates outside the batch's shared snapshot, in
+            // reduction order (only the last scalar improvement sticks)
+            if let Some(ws) = pending_witness {
+                for (di, m) in ws {
+                    witness[di] = Some(m);
+                }
+            }
+
+            // ---- deterministic environmental selection
+            for i in survivors.into_iter().rev() {
+                let layout = offspring.swap_remove(i);
+                let point = pareto::evaluate(&layout);
+                members.push(Member { layout, point });
+            }
+            members = select(members, pop_target);
+        }
+
+        ctx.witness = witness;
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::cost::CostModel;
+    use crate::dfg::benchmarks;
+    use crate::mapper::MappingEngine;
+    use crate::search::{Explorer, SearchConfig, SearchObjective};
+
+    fn pareto_cfg(l_test: usize) -> SearchConfig {
+        SearchConfig {
+            l_test,
+            l_fail: 2,
+            gsg_passes: 1,
+            objective: SearchObjective::Pareto,
+            genetic_generations: 4,
+            genetic_population: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pareto_session_keeps_the_scalar_result_on_the_front() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let grid = Grid::new(6, 6);
+        let cost = CostModel::area();
+        let scalar = {
+            let engine = MappingEngine::default();
+            let cfg = SearchConfig {
+                objective: SearchObjective::OpCount,
+                ..pareto_cfg(150)
+            };
+            Explorer::new(grid)
+                .dfgs(&dfgs)
+                .engine(&engine)
+                .cost(&cost)
+                .config(cfg)
+                .run()
+                .expect("scalar search maps")
+        };
+        assert!(scalar.front.is_empty(), "scalar sessions carry no front");
+        let engine = MappingEngine::default();
+        let r = Explorer::new(grid)
+            .dfgs(&dfgs)
+            .engine(&engine)
+            .cost(&cost)
+            .config(pareto_cfg(150))
+            .run()
+            .expect("pareto search maps");
+        assert!(!r.front.is_empty());
+        let scalar_ops = scalar.best_layout.compute_instances();
+        assert!(
+            r.front.iter().any(|p| p.ops <= scalar_ops),
+            "the paper's scalar result must not regress: front {:?} vs {scalar_ops} ops",
+            r.front
+        );
+        // the front never retains a dominated point, and the dominated
+        // full-layout anchor is gone
+        let full = pareto::evaluate(&r.full_layout);
+        for p in &r.front {
+            assert_ne!(p.fingerprint, full.fingerprint);
+            assert!(!r.front.iter().any(|q| pareto::dominates(q, p)), "{p:?}");
+        }
+        // genetic ran and respected the budget
+        assert!(r.stats.phase_secs.iter().any(|(n, _)| n == GeneticPhase::NAME));
+        assert!(r.stats.tested <= 150);
+    }
+
+    #[test]
+    fn selection_is_rank_then_objective_order() {
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let cells: Vec<_> = l.grid.compute_cells().collect();
+        let mk = |layout: Layout| Member { point: pareto::evaluate(&layout), layout };
+        let dominated = mk(l.clone());
+        let better = mk(l.without_group(cells[0], crate::ops::OpGroup::Div));
+        let sel = select(vec![dominated, better], 2);
+        assert_eq!(sel.len(), 2);
+        assert!(sel[0].point.ops < sel[1].point.ops, "non-dominated tier sorts first");
+        let sel = select(
+            vec![mk(l.clone()), mk(l.without_group(cells[0], crate::ops::OpGroup::Div))],
+            1,
+        );
+        assert_eq!(sel.len(), 1);
+        assert!(sel[0].point.ops < l.compute_instances());
+    }
+}

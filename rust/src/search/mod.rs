@@ -14,6 +14,14 @@
 //!    combinations with a `failChart` pruning memory and full-set
 //!    testing.
 //!
+//! Two optional phases extend the pipeline: [`SubgraphSeedPhase`]
+//! ([`subgraph`], `SearchConfig::subgraph_seed`) mines frequent DFG
+//! motifs and tries a near-minimal seed layout after the heatmap, and
+//! in [`SearchObjective::Pareto`] mode ([`pareto`]) a [`GeneticPhase`]
+//! ([`genetic`]) runs last, growing a deterministic [`ParetoFront`]
+//! over `(ops, area_um2, power_uw)` whose improvements stream as
+//! [`SearchEvent::ParetoPoint`] events (anytime fronts).
+//!
 //! All phases share one [`SearchCtx`] (DFG set, mapping engine, cost
 //! model, bounds, config, stats, stopwatch, scorer, witness cache) and
 //! report progress as [`SearchEvent`]s to an optional [`SearchObserver`];
@@ -49,16 +57,22 @@
 //! rules that make the contract hold.
 
 pub mod explorer;
+pub mod genetic;
 pub mod gsg;
 pub mod heatmap;
 pub mod opsg;
 pub mod parallel;
+pub mod pareto;
 pub mod posteriori;
+pub mod subgraph;
 
 pub use explorer::{
     channel_observer, ExploreError, Explorer, GsgPhase, HeatmapPhase, OpsgPhase, SearchCtx,
     SearchEvent, SearchObserver, SearchPhase,
 };
+pub use genetic::GeneticPhase;
+pub use pareto::{ParetoFront, ParetoPoint, SearchObjective};
+pub use subgraph::SubgraphSeedPhase;
 
 use crate::cgra::Layout;
 use crate::cost::CostModel;
@@ -112,6 +126,19 @@ pub struct SearchConfig {
     /// from `Hash` — and therefore from job fingerprints and derived
     /// seeds — on purpose.
     pub search_threads: usize,
+    /// What the search minimises: the paper's scalar op-count, or the
+    /// three-objective `(ops, area, power)` Pareto mode (which appends a
+    /// [`GeneticPhase`] to the pipeline and streams
+    /// [`SearchEvent::ParetoPoint`] improvements).
+    pub objective: SearchObjective,
+    /// Generations of the Pareto-mode [`GeneticPhase`].
+    pub genetic_generations: usize,
+    /// Population size of the Pareto-mode [`GeneticPhase`].
+    pub genetic_population: usize,
+    /// Run the [`SubgraphSeedPhase`] after the heatmap: mine frequent
+    /// DFG motifs and try a near-minimal seed layout instead of the
+    /// heatmap start, falling back when it does not map.
+    pub subgraph_seed: bool,
 }
 
 impl Default for SearchConfig {
@@ -125,6 +152,10 @@ impl Default for SearchConfig {
             use_heatmap: true,
             opsg_skip_arith: false,
             search_threads: 0,
+            objective: SearchObjective::OpCount,
+            genetic_generations: 8,
+            genetic_population: 16,
+            subgraph_seed: false,
         }
     }
 }
@@ -146,6 +177,10 @@ impl std::hash::Hash for SearchConfig {
             use_heatmap,
             opsg_skip_arith,
             search_threads: _,
+            objective,
+            genetic_generations,
+            genetic_population,
+            subgraph_seed,
         } = self;
         l_test.hash(state);
         l_fail.hash(state);
@@ -154,6 +189,10 @@ impl std::hash::Hash for SearchConfig {
         gsg_stale_prune_after.hash(state);
         use_heatmap.hash(state);
         opsg_skip_arith.hash(state);
+        objective.hash(state);
+        genetic_generations.hash(state);
+        genetic_population.hash(state);
+        subgraph_seed.hash(state);
     }
 }
 
@@ -269,6 +308,10 @@ pub struct SearchResult {
     /// the heuristic mapper cannot re-derive a mapping from scratch, so
     /// consumers must use these instead of re-mapping.
     pub final_mappings: Vec<crate::mapper::Mapping>,
+    /// The final Pareto front ([`SearchObjective::Pareto`] sessions;
+    /// empty for scalar runs). Deterministic archive order — byte-stable
+    /// at any thread count.
+    pub front: Vec<ParetoPoint>,
     pub stats: SearchStats,
 }
 

@@ -1,0 +1,322 @@
+//! Multi-objective search substrate: the [`SearchObjective`] switch and
+//! the [`ParetoFront`] archive.
+//!
+//! The paper's search minimises a scalar (op-count / Equation-1 cost),
+//! yet its headline results are *area* and *power* — quantities
+//! [`crate::cost::synth`] already models. `SearchObjective::Pareto`
+//! turns the session into a three-objective minimisation over
+//! `(ops, area_um2, power_uw)`: every proven-feasible layout the
+//! pipeline produces is offered to the session's `ParetoFront`, which
+//! keeps exactly the non-dominated set.
+//!
+//! Determinism contract: the archive's state is a pure function of the
+//! *sequence of offered layouts*. Points are keyed by a
+//! [`StableHasher`]-based layout fingerprint (stable across platforms
+//! and toolchains), kept sorted by `(ops, area, power, fingerprint)`,
+//! and duplicate fingerprints are rejected — so two runs that offer the
+//! same layouts in the same order hold byte-identical fronts at any
+//! `--search-threads` width (the phases guarantee the offer order is
+//! thread-invariant; see [`super::parallel`]).
+
+use crate::cgra::Layout;
+use crate::cost::synth;
+use crate::util::StableHasher;
+use std::hash::Hasher;
+
+/// What the search minimises.
+///
+/// Part of [`super::SearchConfig`] and therefore of job fingerprints:
+/// switching objectives is a different job with a different derived
+/// seed, exactly like changing `l_test`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SearchObjective {
+    /// The paper's scalar search (Equation-1 cost over op-group
+    /// instances). The session keeps no front; behavior is identical to
+    /// every release before this field existed.
+    #[default]
+    OpCount,
+    /// Three-objective minimisation of `(ops, area_um2, power_uw)`.
+    /// The scalar pipeline still runs (so the paper's op-count result
+    /// is always on the front), followed by a [`super::GeneticPhase`]
+    /// that spreads the front; improvements stream as
+    /// [`super::SearchEvent::ParetoPoint`] events.
+    Pareto,
+}
+
+impl SearchObjective {
+    /// Wire/CLI name (`"op_count"` / `"pareto"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchObjective::OpCount => "op_count",
+            SearchObjective::Pareto => "pareto",
+        }
+    }
+
+    /// Inverse of [`Self::name`]; `None` for unknown names.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "op_count" => Some(SearchObjective::OpCount),
+            "pareto" => Some(SearchObjective::Pareto),
+            _ => None,
+        }
+    }
+}
+
+/// One point of the Pareto front: a feasible layout's coordinates in
+/// objective space plus the layout fingerprint that keys it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// Total op-group instances over compute cells (the paper's scalar).
+    pub ops: usize,
+    /// Absolute chip area from [`synth::synthesize`] (µm²).
+    pub area_um2: f64,
+    /// Absolute chip power from [`synth::synthesize`] (µW).
+    pub power_uw: f64,
+    /// [`layout_fingerprint`] of the layout behind the point.
+    pub fingerprint: u64,
+}
+
+/// Content fingerprint of a layout: grid shape plus every compute
+/// cell's support mask, through the pinned FNV-1a [`StableHasher`].
+/// Stable across platforms, toolchains and sessions — it keys Pareto
+/// archive entries and breaks minimum-layout ties
+/// ([`super::posteriori::select_min_layout`]), both reproducibility
+/// contracts.
+pub fn layout_fingerprint(layout: &Layout) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_u64(layout.grid.rows as u64);
+    h.write_u64(layout.grid.cols as u64);
+    for cell in layout.grid.compute_cells() {
+        h.write_u8(layout.support(cell).0);
+    }
+    h.finish()
+}
+
+/// Weak dominance in minimisation: `a` dominates `b` when it is no
+/// worse on every objective and strictly better on at least one.
+pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    let no_worse = a.ops <= b.ops && a.area_um2 <= b.area_um2 && a.power_uw <= b.power_uw;
+    let better = a.ops < b.ops || a.area_um2 < b.area_um2 || a.power_uw < b.power_uw;
+    no_worse && better
+}
+
+/// Evaluate a layout's objective-space coordinates.
+pub fn evaluate(layout: &Layout) -> ParetoPoint {
+    let s = synth::synthesize(layout);
+    ParetoPoint {
+        ops: layout.compute_instances(),
+        area_um2: s.area_um2,
+        power_uw: s.power_uw,
+        fingerprint: layout_fingerprint(layout),
+    }
+}
+
+/// The non-dominated archive. Holds the points *and* the layouts behind
+/// them (consumers need the layouts: the CLI renders them, the wire
+/// layer re-derives synth numbers from them).
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFront {
+    /// Sorted by `(ops, area, power, fingerprint)` at all times.
+    entries: Vec<(ParetoPoint, Layout)>,
+}
+
+impl ParetoFront {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Offer a feasible layout to the archive. Returns the new point
+    /// when it was admitted (not dominated by and not a duplicate of
+    /// any resident point); admission evicts every resident point the
+    /// new one dominates.
+    pub fn insert(&mut self, layout: &Layout) -> Option<ParetoPoint> {
+        let p = evaluate(layout);
+        for (q, _) in &self.entries {
+            if q.fingerprint == p.fingerprint || dominates(q, &p) {
+                return None;
+            }
+            // a resident with identical coordinates keeps the archive
+            // deterministic under re-offers of equivalent layouts: the
+            // first-offered layout wins the coordinate slot
+            if q.ops == p.ops && q.area_um2 == p.area_um2 && q.power_uw == p.power_uw {
+                return None;
+            }
+        }
+        self.entries.retain(|(q, _)| !dominates(&p, q));
+        let at = self
+            .entries
+            .partition_point(|(q, _)| Self::order_key(q) < Self::order_key(&p));
+        self.entries.insert(at, (p.clone(), layout.clone()));
+        Some(p)
+    }
+
+    /// Total order for the archive layout: objective lexicographic,
+    /// fingerprint last so distinct layouts never compare equal.
+    fn order_key(p: &ParetoPoint) -> (usize, u64, u64, u64) {
+        (p.ops, p.area_um2.to_bits(), p.power_uw.to_bits(), p.fingerprint)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Points in archive order.
+    pub fn points(&self) -> Vec<ParetoPoint> {
+        self.entries.iter().map(|(p, _)| p.clone()).collect()
+    }
+
+    /// `(point, layout)` pairs in archive order.
+    pub fn entries(&self) -> &[(ParetoPoint, Layout)] {
+        &self.entries
+    }
+
+    /// True when some resident point dominates `p`.
+    pub fn dominates_point(&self, p: &ParetoPoint) -> bool {
+        self.entries.iter().any(|(q, _)| dominates(q, p))
+    }
+
+    /// 2-D hypervolume of the front's `(area, power)` projection against
+    /// a reference point (typically the full layout's synth numbers) —
+    /// the quality-per-second metric of the `search::genetic` bench.
+    /// Points at or beyond the reference contribute nothing.
+    pub fn hypervolume(&self, ref_area: f64, ref_power: f64) -> f64 {
+        hypervolume_2d(&self.points(), ref_area, ref_power)
+    }
+}
+
+/// [`ParetoFront::hypervolume`] over a bare point list — what consumers
+/// of a finished [`super::SearchResult`] (which carries points, not the
+/// archive) use.
+pub fn hypervolume_2d(points: &[ParetoPoint], ref_area: f64, ref_power: f64) -> f64 {
+    // non-dominated staircase of the 2-D projection: area ascending,
+    // keep only strict power improvements
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .map(|p| (p.area_um2, p.power_uw))
+        .filter(|&(a, pw)| a < ref_area && pw < ref_power)
+        .collect();
+    pts.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let mut hv = 0.0;
+    let mut prev_power = ref_power;
+    for (a, pw) in pts {
+        if pw < prev_power {
+            hv += (ref_area - a) * (prev_power - pw);
+            prev_power = pw;
+        }
+    }
+    hv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::ops::{GroupSet, OpGroup};
+
+    fn full(r: usize, c: usize) -> Layout {
+        Layout::full(Grid::new(r, c), GroupSet::all_compute())
+    }
+
+    #[test]
+    fn objective_names_roundtrip() {
+        for obj in [SearchObjective::OpCount, SearchObjective::Pareto] {
+            assert_eq!(SearchObjective::from_name(obj.name()), Some(obj));
+        }
+        assert_eq!(SearchObjective::from_name("area"), None);
+        assert_eq!(SearchObjective::default(), SearchObjective::OpCount);
+    }
+
+    #[test]
+    fn fingerprint_tracks_support_not_identity() {
+        let a = full(5, 5);
+        let b = full(5, 5);
+        assert_eq!(layout_fingerprint(&a), layout_fingerprint(&b));
+        let cell = a.grid.compute_cells().next().unwrap();
+        let c = a.without_group(cell, OpGroup::Div);
+        assert_ne!(layout_fingerprint(&a), layout_fingerprint(&c));
+        assert_ne!(layout_fingerprint(&full(5, 6)), layout_fingerprint(&a));
+    }
+
+    #[test]
+    fn dominance_is_strict_somewhere() {
+        let p = evaluate(&full(5, 5));
+        assert!(!dominates(&p, &p), "a point never dominates itself");
+        let cell = full(5, 5).grid.compute_cells().next().unwrap();
+        let smaller = evaluate(&full(5, 5).without_group(cell, OpGroup::Div));
+        assert!(dominates(&smaller, &p));
+        assert!(!dominates(&p, &smaller));
+    }
+
+    #[test]
+    fn front_never_retains_a_dominated_point() {
+        let l = full(6, 6);
+        let cells: Vec<_> = l.grid.compute_cells().collect();
+        let mut front = ParetoFront::new();
+        // full first, then strictly smaller layouts that dominate it
+        assert!(front.insert(&l).is_some());
+        assert!(front.insert(&l.without_group(cells[0], OpGroup::Div)).is_some());
+        let pts = front.points();
+        assert_eq!(pts.len(), 1, "the dominated full point must be evicted: {pts:?}");
+        // incomparable points coexist: two cheap groups removed trades
+        // more ops for less area/power saving than one Div removal
+        assert!(front
+            .insert(&l.without_groups(
+                cells[1],
+                GroupSet::from_groups(&[OpGroup::Arith, OpGroup::Mult]),
+            ))
+            .is_some());
+        assert_eq!(front.len(), 2);
+        // re-offering a resident layout is a no-op
+        assert!(front.insert(&l.without_group(cells[0], OpGroup::Div)).is_none());
+        // a dominated offer is rejected outright
+        assert!(front.insert(&l).is_none());
+        assert_eq!(front.len(), 2);
+        for (p, _) in front.entries() {
+            assert!(!front.dominates_point(p));
+        }
+    }
+
+    #[test]
+    fn front_order_is_insertion_order_invariant() {
+        let l = full(6, 6);
+        let cells: Vec<_> = l.grid.compute_cells().collect();
+        let variants: Vec<Layout> = vec![
+            l.without_group(cells[0], OpGroup::Div),
+            l.without_group(cells[1], OpGroup::Other),
+            l.without_group(cells[2], OpGroup::FP),
+            l.without_groups(cells[3], GroupSet::from_groups(&[OpGroup::Div, OpGroup::FP])),
+        ];
+        let mut a = ParetoFront::new();
+        for v in &variants {
+            a.insert(v);
+        }
+        let mut b = ParetoFront::new();
+        for v in variants.iter().rev() {
+            b.insert(v);
+        }
+        assert_eq!(a.points(), b.points(), "archive order must not depend on offer order");
+    }
+
+    #[test]
+    fn hypervolume_grows_with_the_front() {
+        let l = full(6, 6);
+        let cells: Vec<_> = l.grid.compute_cells().collect();
+        let r = evaluate(&l);
+        let mut front = ParetoFront::new();
+        front.insert(&l);
+        assert_eq!(front.hypervolume(r.area_um2, r.power_uw), 0.0);
+        front.insert(&l.without_group(cells[0], OpGroup::Div));
+        let hv1 = front.hypervolume(r.area_um2, r.power_uw);
+        assert!(hv1 > 0.0);
+        front.insert(&l.without_groups(
+            cells[1],
+            GroupSet::from_groups(&[OpGroup::Div, OpGroup::Other]),
+        ));
+        let hv2 = front.hypervolume(r.area_um2, r.power_uw);
+        assert!(hv2 > hv1);
+    }
+}

@@ -5,11 +5,76 @@
 //! removed without affecting functionality. This module computes the
 //! unused-FIFO count and the resulting extra area/power savings.
 
+use super::pareto;
 use crate::cgra::Layout;
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
 use crate::mapper::MappingEngine;
+use crate::ops::COMPUTE_GROUPS;
 use std::collections::HashSet;
+
+/// One objective axis of the theoretical-minimum comparison: the full
+/// layout's value, the achieved value, and the floor implied by the
+/// per-group minimum instance counts.
+#[derive(Debug, Clone, Copy)]
+pub struct Gap {
+    pub full: f64,
+    pub best: f64,
+    pub theoretical_min: f64,
+}
+
+impl Gap {
+    /// Share of the theoretically possible reduction actually achieved
+    /// (the paper's Fig 6 metric). 100 when there was nothing to reduce.
+    pub fn achieved_pct(&self) -> f64 {
+        let possible = self.full - self.theoretical_min;
+        if possible <= 0.0 {
+            return 100.0;
+        }
+        100.0 * (self.full - self.best) / possible
+    }
+
+    pub fn remaining_pct(&self) -> f64 {
+        100.0 - self.achieved_pct()
+    }
+}
+
+/// Fig 6 generalized to every objective the Pareto mode tracks: op
+/// count, area and power, each against its own theoretical minimum.
+#[derive(Debug, Clone, Copy)]
+pub struct ObjectiveGaps {
+    pub ops: Gap,
+    pub area: Gap,
+    pub power: Gap,
+}
+
+/// Per-objective theoretical-minimum gaps of a finished search.
+pub fn objective_gaps(r: &super::SearchResult) -> ObjectiveGaps {
+    let gap = |m: &CostModel| Gap {
+        full: m.layout_cost(&r.full_layout),
+        best: m.layout_cost(&r.best_layout),
+        theoretical_min: m.theoretical_min_cost(&r.full_layout, &r.min_insts),
+    };
+    let ops_min: usize = COMPUTE_GROUPS.iter().map(|g| r.min_insts[g.index()]).sum();
+    ObjectiveGaps {
+        ops: Gap {
+            full: r.full_layout.compute_instances() as f64,
+            best: r.best_layout.compute_instances() as f64,
+            theoretical_min: ops_min as f64,
+        },
+        area: gap(&CostModel::area()),
+        power: gap(&CostModel::power()),
+    }
+}
+
+/// The op-count-minimal layout of a set, ties broken deterministically
+/// by stable layout fingerprint — the selection cannot depend on the
+/// order candidates were produced in (e.g. by a parallel front sweep).
+pub fn select_min_layout(layouts: &[Layout]) -> Option<&Layout> {
+    layouts
+        .iter()
+        .min_by_key(|l| (l.compute_instances(), pareto::layout_fingerprint(l)))
+}
 
 /// Result of the posteriori FIFO analysis.
 #[derive(Debug, Clone)]
@@ -116,5 +181,66 @@ mod tests {
         let dfgs = vec![benchmarks::benchmark("SAD")];
         let l = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
         assert!(fifo_analysis(&dfgs, &l, &l, &MappingEngine::default()).is_none());
+    }
+
+    #[test]
+    fn select_min_layout_is_order_independent() {
+        let grid = Grid::new(6, 6);
+        let full = Layout::full(grid, GroupSet::all_compute());
+        let cells: Vec<_> = grid.compute_cells().collect();
+        // two distinct layouts tying on op count, plus a bigger one
+        let a = full.without_group(cells[0], crate::ops::OpGroup::Div);
+        let b = full.without_group(cells[1], crate::ops::OpGroup::Mult);
+        assert_eq!(a.compute_instances(), b.compute_instances());
+        assert_ne!(
+            crate::search::pareto::layout_fingerprint(&a),
+            crate::search::pareto::layout_fingerprint(&b)
+        );
+        let fwd = select_min_layout(&[full.clone(), a.clone(), b.clone()]).unwrap().clone();
+        let rev = select_min_layout(&[b, full.clone(), a]).unwrap().clone();
+        assert_eq!(
+            crate::search::pareto::layout_fingerprint(&fwd),
+            crate::search::pareto::layout_fingerprint(&rev),
+            "tie-break must not depend on candidate order"
+        );
+        assert!(fwd.compute_instances() < full.compute_instances());
+        assert!(select_min_layout(&[]).is_none());
+    }
+
+    #[test]
+    fn objective_gaps_cover_all_three_axes() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let engine = MappingEngine::default();
+        let cost = CostModel::area();
+        let cfg = crate::search::SearchConfig {
+            l_test: 80,
+            l_fail: 2,
+            gsg_passes: 1,
+            ..Default::default()
+        };
+        let r = crate::search::Explorer::new(Grid::new(7, 7))
+            .dfgs(&dfgs)
+            .engine(&engine)
+            .cost(&cost)
+            .config(cfg)
+            .run()
+            .expect("maps");
+        let gaps = objective_gaps(&r);
+        for (name, gap) in
+            [("ops", gaps.ops), ("area", gaps.area), ("power", gaps.power)]
+        {
+            assert!(gap.best <= gap.full, "{name}: the search never regresses");
+            assert!(
+                gap.theoretical_min <= gap.best + 1e-9,
+                "{name}: the floor bounds every feasible layout"
+            );
+            assert!(
+                (0.0..=100.0).contains(&gap.achieved_pct()),
+                "{name}: achieved {} out of range",
+                gap.achieved_pct()
+            );
+            assert!((gap.achieved_pct() + gap.remaining_pct() - 100.0).abs() < 1e-9);
+        }
+        assert!(gaps.ops.full > gaps.ops.best, "SOB+GB on 7x7 sheds instances");
     }
 }

@@ -1,0 +1,231 @@
+//! Frequent-subgraph seeding (Melchert et al.-style): mine recurring
+//! connected motifs across the input DFG collection and start the
+//! search from a near-minimal layout covering them, instead of the
+//! full/heatmap layout.
+//!
+//! Enabled by `SearchConfig::subgraph_seed`; runs right after the
+//! heatmap phase. The mining is a deterministic enumeration of
+//! group-labelled edge motifs `(group(u), group(v))` over every DFG, in
+//! input order, with a fixed size cap — no RNG, no hashing-order
+//! dependence. The seed layout packs each group's theoretical-minimum
+//! instance count (plus motif-weighted headroom) onto the first compute
+//! cells in row-major order, co-locating frequently adjacent groups on
+//! the same cells so motif instances map without long routes.
+//!
+//! Fallback contract: the phase *never* fails the session. The seed is
+//! adopted only when every DFG maps on it **and** it beats the
+//! incumbent's scalar cost; otherwise the incumbent passes through
+//! untouched (one tested subproblem spent from the `L_test` budget).
+
+use super::{meets_min_instances, SearchCtx, SearchEvent};
+use crate::cgra::Layout;
+use crate::mapper::MapOutcome;
+use crate::ops::{OpGroup, COMPUTE_GROUPS, NUM_GROUPS};
+
+/// Most-frequent motifs that earn headroom instances in the seed.
+const MAX_MOTIFS: usize = 8;
+
+/// The seeding phase. Stateless: everything derives from the session
+/// context.
+pub struct SubgraphSeedPhase;
+
+impl SubgraphSeedPhase {
+    pub const NAME: &'static str = "subgraph";
+}
+
+/// Deterministic motif mining: frequency of every compute-group edge
+/// pair `(group(src), group(dst))` across the DFG set, as a dense
+/// matrix (enumeration order cannot leak into the result).
+fn motif_counts(dfgs: &[crate::dfg::Dfg]) -> [[usize; NUM_GROUPS]; NUM_GROUPS] {
+    let mut counts = [[0usize; NUM_GROUPS]; NUM_GROUPS];
+    for d in dfgs {
+        for &(u, v) in &d.edges {
+            let gu = d.nodes[u as usize].group();
+            let gv = d.nodes[v as usize].group();
+            if gu != OpGroup::Mem && gv != OpGroup::Mem {
+                counts[gu.index()][gv.index()] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// The top-`MAX_MOTIFS` pairs by `(count desc, src, dst)` — a total
+/// order, so the cap is deterministic.
+fn top_motifs(counts: &[[usize; NUM_GROUPS]; NUM_GROUPS]) -> Vec<(OpGroup, OpGroup)> {
+    let mut pairs: Vec<(usize, OpGroup, OpGroup)> = Vec::new();
+    for a in COMPUTE_GROUPS {
+        for b in COMPUTE_GROUPS {
+            let c = counts[a.index()][b.index()];
+            if c > 0 {
+                pairs.push((c, a, b));
+            }
+        }
+    }
+    pairs.sort_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2)));
+    pairs.truncate(MAX_MOTIFS);
+    pairs.into_iter().map(|(_, a, b)| (a, b)).collect()
+}
+
+/// Build the near-minimal seed: per-group instance targets are the
+/// theoretical minimum plus one instance of headroom per mined motif
+/// the group participates in, packed onto the first compute cells
+/// (row-major) so co-frequent groups share cells and stay adjacent.
+fn seed_layout(ctx: &SearchCtx, grid: crate::cgra::Grid) -> Layout {
+    let motifs = top_motifs(&motif_counts(ctx.dfgs));
+    let num_compute = grid.num_compute();
+    let mut targets = [0usize; NUM_GROUPS];
+    for g in COMPUTE_GROUPS {
+        targets[g.index()] = ctx.min_insts[g.index()];
+    }
+    for (a, b) in motifs {
+        if targets[a.index()] > 0 {
+            targets[a.index()] = (targets[a.index()] + 1).min(num_compute);
+        }
+        if targets[b.index()] > 0 {
+            targets[b.index()] = (targets[b.index()] + 1).min(num_compute);
+        }
+    }
+    let mut seed = Layout::empty(grid);
+    let compute: Vec<_> = grid.compute_cells().collect();
+    for g in COMPUTE_GROUPS {
+        for &cell in compute.iter().take(targets[g.index()].min(num_compute)) {
+            seed.set_support(cell, seed.support(cell).with(g));
+        }
+    }
+    seed
+}
+
+impl super::SearchPhase for SubgraphSeedPhase {
+    fn name(&self) -> &str {
+        Self::NAME
+    }
+
+    fn run(&mut self, incumbent: Layout, ctx: &mut SearchCtx) -> Layout {
+        if ctx.dfgs.is_empty() || ctx.stats.tested >= ctx.cfg.l_test {
+            return incumbent;
+        }
+        let seed = seed_layout(ctx, incumbent.grid);
+        let seed_cost = ctx.cost.layout_cost(&seed);
+        let incumbent_cost = ctx.cost.layout_cost(&incumbent);
+        // only a strict scalar improvement that still meets the bounds
+        // is worth one budget unit
+        if seed_cost >= incumbent_cost || !meets_min_instances(&seed, &ctx.min_insts) {
+            return incumbent;
+        }
+        ctx.stats.expanded += 1;
+        // full-set serial test (one subproblem): motifs guide the seed,
+        // the mapper decides
+        let mut mappings = Vec::with_capacity(ctx.dfgs.len());
+        for di in 0..ctx.dfgs.len() {
+            match ctx.test_dfg(di, &seed) {
+                MapOutcome::Mapped { mapping, .. } => mappings.push(mapping),
+                MapOutcome::Failed { .. } => break,
+            }
+        }
+        let feasible = mappings.len() == ctx.dfgs.len();
+        ctx.stats.tested += 1;
+        ctx.emit(SearchEvent::LayoutTested {
+            feasible,
+            cost: seed_cost,
+            tested: ctx.stats.tested,
+            worker: 0,
+        });
+        if !feasible {
+            return incumbent; // fallback: the session continues unharmed
+        }
+        ctx.witness = mappings.into_iter().map(Some).collect();
+        // the seed replaces the heatmap/full start: it is the new
+        // reduction baseline
+        ctx.initial = Some(seed.clone());
+        ctx.emit_improved(seed_cost);
+        seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cgra::Grid;
+    use crate::cost::CostModel;
+    use crate::dfg::benchmarks;
+    use crate::mapper::MappingEngine;
+    use crate::search::{Explorer, SearchConfig, SearchPhase};
+
+    #[test]
+    fn motif_mining_is_deterministic_and_capped() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("MD")];
+        let a = top_motifs(&motif_counts(&dfgs));
+        let b = top_motifs(&motif_counts(&dfgs));
+        assert_eq!(a, b);
+        assert!(a.len() <= MAX_MOTIFS);
+        assert!(!a.is_empty(), "real benchmarks have compute-compute edges");
+    }
+
+    #[test]
+    fn seed_meets_min_instances_and_is_near_minimal() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let engine = MappingEngine::default();
+        let cost = CostModel::area();
+        let mins = crate::dfg::min_group_instances(&dfgs);
+        let ctx = SearchCtx::new(&dfgs, &engine, &cost, mins, SearchConfig::default());
+        let grid = Grid::new(7, 7);
+        let seed = seed_layout(&ctx, grid);
+        assert!(meets_min_instances(&seed, &mins));
+        let full = Layout::full(grid, crate::dfg::groups_used(&dfgs));
+        assert!(seed.compute_instances() < full.compute_instances());
+    }
+
+    #[test]
+    fn phase_adopts_or_falls_back_but_never_fails() {
+        // a grid barely fitting the DFG makes the packed seed unroutable
+        // often enough to exercise the fallback; either way the phase
+        // must return a feasible incumbent and never abort
+        for name in ["SOB", "GB", "MD"] {
+            let dfgs = vec![benchmarks::benchmark(name)];
+            let engine = MappingEngine::default();
+            let cost = CostModel::area();
+            let mins = crate::dfg::min_group_instances(&dfgs);
+            let mut ctx =
+                SearchCtx::new(&dfgs, &engine, &cost, mins, SearchConfig::default());
+            let full = Layout::full(Grid::new(6, 6), crate::dfg::groups_used(&dfgs));
+            let mappings = engine.map_all(&dfgs, &full).expect("full maps");
+            ctx.witness = mappings.into_iter().map(Some).collect();
+            let out = SubgraphSeedPhase.run(full.clone(), &mut ctx);
+            assert!(!ctx.is_aborted(), "{name}: the seed phase must never fail");
+            // whatever came back is feasible under the session witnesses
+            for (di, d) in dfgs.iter().enumerate() {
+                match &ctx.witness[di] {
+                    Some(w) => assert!(w.validate(d, &out).is_empty(), "{name}"),
+                    None => panic!("{name}: witnesses must survive the phase"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_with_seed_phase_completes_end_to_end() {
+        let dfgs = vec![benchmarks::benchmark("SOB"), benchmarks::benchmark("GB")];
+        let engine = MappingEngine::default();
+        let cost = CostModel::area();
+        let cfg = SearchConfig {
+            l_test: 150,
+            l_fail: 2,
+            gsg_passes: 1,
+            subgraph_seed: true,
+            ..Default::default()
+        };
+        let r = Explorer::new(Grid::new(7, 7))
+            .dfgs(&dfgs)
+            .engine(&engine)
+            .cost(&cost)
+            .config(cfg)
+            .run()
+            .expect("seeded pipeline still completes");
+        assert!(r.stats.phase_secs.iter().any(|(n, _)| n == SubgraphSeedPhase::NAME));
+        assert!(r.best_cost < cost.layout_cost(&r.full_layout));
+        for (di, d) in dfgs.iter().enumerate() {
+            assert!(r.final_mappings[di].validate(d, &r.best_layout).is_empty());
+        }
+    }
+}

@@ -74,12 +74,17 @@ use std::sync::Arc;
 pub enum Objective {
     Area,
     Power,
+    /// Multi-objective mode: the scalar phases still descend on the
+    /// area model, but the search keeps a Pareto front over
+    /// `(op count, synth area, synth power)` and runs the genetic
+    /// spreading phase — see [`crate::search::SearchObjective`].
+    Pareto,
 }
 
 impl Objective {
     pub fn cost_model(self) -> CostModel {
         match self {
-            Objective::Area => CostModel::area(),
+            Objective::Area | Objective::Pareto => CostModel::area(),
             Objective::Power => CostModel::power(),
         }
     }
@@ -88,6 +93,7 @@ impl Objective {
         match self {
             Objective::Area => "area",
             Objective::Power => "power",
+            Objective::Pareto => "pareto",
         }
     }
 }
@@ -638,10 +644,15 @@ fn run_spec(
         MappingEngine::new(MapperConfig { seed: spec.derived_seed(), ..spec.mapper.clone() });
     let cost = spec.objective.cost_model();
     // nested-parallelism budget: jobs × search_threads ≤ cores
-    let search = SearchConfig {
+    let mut search = SearchConfig {
         search_threads: nested_search_threads(&spec.search, concurrent_jobs),
         ..spec.search.clone()
     };
+    // a Pareto job switches the search engine itself into front-keeping
+    // mode (idempotent when the spec's SearchConfig already says so)
+    if spec.objective == Objective::Pareto {
+        search.objective = crate::search::SearchObjective::Pareto;
+    }
     // per-job event channel: the session owns the sender half (an owned
     // observer closure), the receiver drains into the result's trace —
     // and improvements stream live to the service progress channel
@@ -774,6 +785,34 @@ mod tests {
         assert_eq!(again.best_cost(), r.best_cost());
         assert_eq!(again.events.len(), r.events.len(), "cached jobs replay the trace");
         assert_eq!(service.cache_len(), 1);
+    }
+
+    #[test]
+    fn pareto_objective_jobs_carry_a_front() {
+        let spec = JobSpec {
+            objective: Objective::Pareto,
+            search: SearchConfig {
+                l_test: 60,
+                l_fail: 2,
+                gsg_passes: 1,
+                genetic_generations: 2,
+                genetic_population: 6,
+                ..Default::default()
+            },
+            seed: 1,
+            ..JobSpec::new("pf", vec![benchmarks::benchmark("SOB")], Grid::new(6, 6))
+        };
+        let r = ExplorationService::with_jobs(1).run_job(&spec);
+        let res = r.outcome.search_result().expect("pareto job completes");
+        assert!(!res.front.is_empty(), "pareto jobs must carry the final front");
+        assert!(
+            r.events.iter().any(|e| matches!(e, SearchEvent::ParetoPoint { .. })),
+            "front improvements must stream through the event trace"
+        );
+        // the service-level objective keys the cache: same spec under
+        // the scalar objective is a different computation
+        let scalar = JobSpec { objective: Objective::Area, ..spec.clone() };
+        assert_ne!(r.fingerprint, scalar.fingerprint());
     }
 
     #[test]

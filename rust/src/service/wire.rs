@@ -30,14 +30,22 @@ use crate::fleet::replica::{ReplicaState, ReplicaStatus};
 use crate::fleet::{BatchRequest, DEFAULT_PRIORITY, MAX_BATCH_JOBS, MAX_PRIORITY};
 use crate::mapper::{MapperConfig, Mapping};
 use crate::ops::GroupSet;
-use crate::search::{SearchConfig, SearchEvent, SearchResult, SearchStats, TracePoint};
+use crate::search::{
+    ParetoPoint, SearchConfig, SearchEvent, SearchObjective, SearchResult, SearchStats,
+    TracePoint,
+};
 use crate::util::json::Json;
 use std::fmt;
 
 /// Version stamp embedded in persisted/served result payloads. Bump on
 /// any incompatible schema change; the store treats a mismatch as a miss
 /// (recompute) rather than an error.
-pub const WIRE_VERSION: u64 = 1;
+///
+/// History: `2` added the multi-objective fields — the search config's
+/// `objective`/`genetic_*`/`subgraph_seed` knobs, the result's Pareto
+/// `front` and best-layout `synth` estimate, and the `pareto_point`
+/// event.
+pub const WIRE_VERSION: u64 = 2;
 
 /// A decode failure: what was malformed, with enough context to fix the
 /// request.
@@ -201,11 +209,16 @@ fn encode_search_config(cfg: &SearchConfig) -> Json {
         ("gsg_stale_prune_after", Json::U64(cfg.gsg_stale_prune_after as u64)),
         ("use_heatmap", Json::Bool(cfg.use_heatmap)),
         ("opsg_skip_arith", Json::Bool(cfg.opsg_skip_arith)),
+        ("objective", Json::str(cfg.objective.name())),
+        ("genetic_generations", Json::U64(cfg.genetic_generations as u64)),
+        ("genetic_population", Json::U64(cfg.genetic_population as u64)),
+        ("subgraph_seed", Json::Bool(cfg.subgraph_seed)),
         ("search_threads", Json::U64(cfg.search_threads as u64)),
     ])
 }
 
 fn decode_search_config(j: &Json) -> Result<SearchConfig> {
+    let defaults = SearchConfig::default();
     Ok(SearchConfig {
         l_test: get_usize(j, "l_test")?,
         l_fail: get_usize(j, "l_fail")?,
@@ -214,6 +227,33 @@ fn decode_search_config(j: &Json) -> Result<SearchConfig> {
         gsg_stale_prune_after: get_usize(j, "gsg_stale_prune_after")?,
         use_heatmap: get_bool(j, "use_heatmap")?,
         opsg_skip_arith: get_bool(j, "opsg_skip_arith")?,
+        // the multi-objective knobs default when absent so minimal
+        // clients (and pre-Pareto callers) keep working unchanged
+        objective: match j.get("objective") {
+            None => defaults.objective,
+            Some(o) => {
+                let name = o
+                    .as_str()
+                    .ok_or_else(|| WireError::new("field 'objective' must be a string"))?;
+                SearchObjective::from_name(name).ok_or_else(|| {
+                    WireError::new(format!(
+                        "search objective must be \"op_count\" or \"pareto\", got '{name}'"
+                    ))
+                })?
+            }
+        },
+        genetic_generations: match j.get("genetic_generations") {
+            Some(_) => get_usize(j, "genetic_generations")?,
+            None => defaults.genetic_generations,
+        },
+        genetic_population: match j.get("genetic_population") {
+            Some(_) => get_usize(j, "genetic_population")?,
+            None => defaults.genetic_population,
+        },
+        subgraph_seed: match j.get("subgraph_seed") {
+            Some(_) => get_bool(j, "subgraph_seed")?,
+            None => defaults.subgraph_seed,
+        },
         // an execution hint, not result-relevant: absent in records
         // written before parallel search (0 = available parallelism,
         // clamped by the service's nested-parallelism budget)
@@ -283,7 +323,12 @@ pub fn decode_spec(j: &Json) -> Result<JobSpec> {
         Some(o) => match o.as_str() {
             Some("area") => Objective::Area,
             Some("power") => Objective::Power,
-            _ => return Err(WireError::new("field 'objective' must be \"area\" or \"power\"")),
+            Some("pareto") => Objective::Pareto,
+            _ => {
+                return Err(WireError::new(
+                    "field 'objective' must be \"area\", \"power\" or \"pareto\"",
+                ))
+            }
         },
     };
     let search = match j.get("search") {
@@ -446,12 +491,42 @@ fn decode_stats(j: &Json) -> Result<SearchStats> {
     Ok(stats)
 }
 
+pub fn encode_pareto_point(p: &ParetoPoint) -> Json {
+    Json::obj(vec![
+        ("ops", Json::U64(p.ops as u64)),
+        ("area_um2", Json::F64(p.area_um2)),
+        ("power_uw", Json::F64(p.power_uw)),
+        ("fingerprint", Json::str(fp_hex(p.fingerprint))),
+    ])
+}
+
+fn decode_pareto_point(j: &Json) -> Result<ParetoPoint> {
+    Ok(ParetoPoint {
+        ops: get_usize(j, "ops")?,
+        area_um2: get_f64(j, "area_um2")?,
+        power_uw: get_f64(j, "power_uw")?,
+        fingerprint: parse_fp(get_str(j, "fingerprint")?)?,
+    })
+}
+
 fn encode_search_result(r: &SearchResult) -> Json {
+    // the best layout's synth estimate travels on every result (scalar
+    // jobs too); derived purely from the layout, so decoders may ignore
+    // it and re-encoding stays byte-stable
+    let synth = crate::cost::synth::synthesize(&r.best_layout);
     Json::obj(vec![
         ("full_layout", encode_layout(&r.full_layout)),
         ("initial_layout", encode_layout(&r.initial_layout)),
         ("best_layout", encode_layout(&r.best_layout)),
         ("best_cost", Json::F64(r.best_cost)),
+        (
+            "synth",
+            Json::obj(vec![
+                ("area_um2", Json::F64(synth.area_um2)),
+                ("power_uw", Json::F64(synth.power_uw)),
+            ]),
+        ),
+        ("front", Json::Arr(r.front.iter().map(encode_pareto_point).collect())),
         ("min_insts", insts_json(&r.min_insts)),
         ("final_mappings", Json::Arr(r.final_mappings.iter().map(encode_mapping).collect())),
         ("stats", encode_stats(&r.stats)),
@@ -464,6 +539,16 @@ fn decode_search_result(j: &Json) -> Result<SearchResult> {
         initial_layout: decode_layout(field(j, "initial_layout")?)?,
         best_layout: decode_layout(field(j, "best_layout")?)?,
         best_cost: get_f64(j, "best_cost")?,
+        // "synth" is not decoded: it is a pure function of best_layout
+        front: match j.get("front") {
+            Some(f) => f
+                .as_array()
+                .ok_or_else(|| WireError::new("field 'front' must be an array"))?
+                .iter()
+                .map(decode_pareto_point)
+                .collect::<Result<_>>()?,
+            None => Vec::new(),
+        },
         min_insts: decode_insts(field(j, "min_insts")?, "min_insts")?,
         final_mappings: get_arr(j, "final_mappings")?
             .iter()
@@ -517,6 +602,16 @@ pub fn encode_event(event: &SearchEvent) -> Json {
             ("tested", Json::U64(*tested as u64)),
             ("secs", Json::F64(*secs)),
         ]),
+        SearchEvent::ParetoPoint { ops, area_um2, power_uw, front_size, tested } => {
+            Json::obj(vec![
+                ("type", Json::str("pareto_point")),
+                ("ops", Json::U64(*ops as u64)),
+                ("area_um2", Json::F64(*area_um2)),
+                ("power_uw", Json::F64(*power_uw)),
+                ("front_size", Json::U64(*front_size as u64)),
+                ("tested", Json::U64(*tested as u64)),
+            ])
+        }
         SearchEvent::PhaseFinished { phase, secs, best_cost } => Json::obj(vec![
             ("type", Json::str("phase_finished")),
             ("phase", Json::str(phase)),
@@ -546,6 +641,13 @@ pub fn decode_event(j: &Json) -> Result<SearchEvent> {
             best_cost: get_f64(j, "best_cost")?,
             tested: get_usize(j, "tested")?,
             secs: get_f64(j, "secs")?,
+        }),
+        "pareto_point" => Ok(SearchEvent::ParetoPoint {
+            ops: get_usize(j, "ops")?,
+            area_um2: get_f64(j, "area_um2")?,
+            power_uw: get_f64(j, "power_uw")?,
+            front_size: get_usize(j, "front_size")?,
+            tested: get_usize(j, "tested")?,
         }),
         "phase_finished" => Ok(SearchEvent::PhaseFinished {
             phase: get_str(j, "phase")?.to_string(),
@@ -852,6 +954,75 @@ mod tests {
         assert_eq!(a.best_layout, b.best_layout);
         assert_eq!(a.stats.tested, b.stats.tested);
         assert_eq!(a.final_mappings.len(), b.final_mappings.len());
+    }
+
+    #[test]
+    fn pareto_spec_and_search_config_roundtrip() {
+        let spec = JobSpec {
+            objective: Objective::Pareto,
+            search: SearchConfig {
+                objective: SearchObjective::Pareto,
+                genetic_generations: 3,
+                genetic_population: 5,
+                subgraph_seed: true,
+                ..tiny_spec().search
+            },
+            ..tiny_spec()
+        };
+        let text = encode_spec(&spec).to_string();
+        let back = decode_spec(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fingerprint(), spec.fingerprint());
+        assert_eq!(back.objective, Objective::Pareto);
+        assert_eq!(back.search.objective, SearchObjective::Pareto);
+        assert_eq!(back.search.genetic_generations, 3);
+        assert_eq!(back.search.genetic_population, 5);
+        assert!(back.search.subgraph_seed);
+        // pre-Pareto records carry none of the new knobs: defaults apply
+        let legacy = json::parse(
+            r#"{"l_test":40,"l_fail":2,"run_gsg":true,"gsg_passes":1,
+                 "gsg_stale_prune_after":3,"use_heatmap":true,"opsg_skip_arith":false}"#,
+        )
+        .unwrap();
+        let cfg = decode_search_config(&legacy).unwrap();
+        assert_eq!(cfg.objective, SearchObjective::OpCount);
+        assert_eq!(cfg.genetic_generations, SearchConfig::default().genetic_generations);
+        assert!(!cfg.subgraph_seed);
+        let bad = json::parse(r#"{"l_test":1,"l_fail":1,"run_gsg":true,"gsg_passes":1,
+                 "gsg_stale_prune_after":3,"use_heatmap":true,"opsg_skip_arith":false,
+                 "objective":"speed"}"#)
+        .unwrap();
+        assert!(decode_search_config(&bad).unwrap_err().0.contains("op_count"));
+    }
+
+    #[test]
+    fn pareto_result_front_and_events_roundtrip() {
+        let spec = JobSpec {
+            objective: Objective::Pareto,
+            search: SearchConfig {
+                genetic_generations: 2,
+                genetic_population: 6,
+                ..tiny_spec().search
+            },
+            ..tiny_spec()
+        };
+        let service = ExplorationService::with_jobs(1);
+        let result = service.run_job(&spec);
+        let r = result.outcome.search_result().expect("pareto job completes");
+        assert!(!r.front.is_empty());
+        let text = encode_result(&result).to_string();
+        assert!(text.contains("\"synth\""), "every result carries the synth estimate");
+        let back = decode_result(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(encode_result(&back).to_string(), text, "front round-trips byte-stably");
+        assert_eq!(back.outcome.search_result().unwrap().front, r.front);
+
+        let ev = SearchEvent::ParetoPoint {
+            ops: 9,
+            area_um2: 42.5,
+            power_uw: 17.25,
+            front_size: 3,
+            tested: 21,
+        };
+        assert_eq!(decode_event(&encode_event(&ev)).unwrap(), ev);
     }
 
     #[test]

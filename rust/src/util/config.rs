@@ -20,6 +20,10 @@
 //! | `search.gsg_passes` | int | `gsg_passes` |
 //! | `search.use_heatmap` | bool | `use_heatmap` |
 //! | `search.opsg_skip_arith` | bool | `opsg_skip_arith` (Section IV-G noGSG variant) |
+//! | `search.objective` | string | `objective`: `"op_count"` (scalar, the paper's mode, default) or `"pareto"` (keep a front over op count × synth area × synth power and run the genetic phase) |
+//! | `search.subgraph_seed` | bool | `subgraph_seed` (start from a mined frequent-subgraph seed layout when it maps and beats the incumbent; falls back silently otherwise) |
+//! | `search.genetic.generations` | int | `genetic_generations` (Pareto genetic-phase generations) |
+//! | `search.genetic.population` | int | `genetic_population` (Pareto genetic-phase population cap) |
 //! | `search.threads` | int | `search_threads` (in-search candidate-testing threads; 0 = available parallelism; results are byte-identical at any value) |
 //! | `runtime.use_xla_scorer` | bool | `use_xla_scorer` |
 //! | `mapper.route_iters` | int | `mapper.route_iters` |

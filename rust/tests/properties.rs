@@ -16,7 +16,8 @@ use helex::dfg::builder::DfgSpec;
 use helex::dfg::Dfg;
 use helex::mapper::{MapOutcome, MapperConfig};
 use helex::ops::{GroupSet, Op, OpGroup};
-use helex::search::SearchConfig;
+use helex::search::pareto::{dominates, evaluate};
+use helex::search::{Explorer, ParetoFront, SearchConfig, SearchEvent, SearchObjective};
 use helex::util::prop::{forall, GenCtx};
 use helex::util::rng::Rng;
 use helex::{Mapper, MappingEngine};
@@ -347,6 +348,189 @@ fn prop_warm_start_remap_parity() {
                 return Err("remap_from failed where from-scratch succeeds".into());
             }
             (MapOutcome::Failed { .. }, MapOutcome::Failed { .. }) => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_front_is_nondominated_and_complete() {
+    // the archive invariant under random offer sequences: no resident
+    // point is dominated by another, and every offered layout is either
+    // resident, dominated by a resident, or a coordinate duplicate of
+    // one — nothing is silently lost. The surviving *coordinate set* is
+    // offer-order independent.
+    forall("pareto_front_sound", 60, 0xFA0, |g| {
+        let side = 5 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let full = Layout::full(grid, GroupSet::all_compute());
+        let cells: Vec<_> = grid.compute_cells().collect();
+        let mut offers = vec![full.clone()];
+        for _ in 0..(4 + g.size) {
+            let mut l = full.clone();
+            for &c in &cells {
+                for grp in l.support(c).iter().collect::<Vec<_>>() {
+                    if g.rng.chance(0.2) {
+                        l.set_support(c, l.support(c).without(grp));
+                    }
+                }
+            }
+            offers.push(l);
+        }
+        let mut front = ParetoFront::new();
+        for l in &offers {
+            front.insert(l);
+        }
+        let pts = front.points();
+        for (i, p) in pts.iter().enumerate() {
+            for (j, q) in pts.iter().enumerate() {
+                if i != j && dominates(p, q) {
+                    return Err(format!("front retains dominated point: {q:?} under {p:?}"));
+                }
+            }
+        }
+        for l in &offers {
+            let p = evaluate(l);
+            let resident = pts.iter().any(|q| q.fingerprint == p.fingerprint);
+            let duplicate = pts.iter().any(|q| {
+                q.ops == p.ops && q.area_um2 == p.area_um2 && q.power_uw == p.power_uw
+            });
+            if !(resident || duplicate || front.dominates_point(&p)) {
+                return Err(format!("offer lost without cause: {p:?}"));
+            }
+        }
+        // reversing the offer order must keep the same coordinate set
+        // (fingerprints may differ when distinct layouts tie on all
+        // three coordinates — the first offer wins the slot)
+        let mut rev = ParetoFront::new();
+        for l in offers.iter().rev() {
+            rev.insert(l);
+        }
+        let coords = |f: &ParetoFront| -> Vec<(usize, u64, u64)> {
+            f.points()
+                .iter()
+                .map(|p| (p.ops, p.area_um2.to_bits(), p.power_uw.to_bits()))
+                .collect()
+        };
+        if coords(&front) != coords(&rev) {
+            return Err("non-dominated coordinate set depends on offer order".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subgraph_seed_adopts_or_falls_back() {
+    // enabling the subgraph seed phase can steer the search but can
+    // never break it: feasibility is unchanged, and the seeded session
+    // still meets the full soundness bar (valid witnesses, minimum
+    // instances, cost never above full).
+    forall("subgraph_seed_sound", 10, 0x5B6, |g| {
+        let gen_cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfgs = vec![helex::dfg::gen::generate(&gen_cfg)];
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let cost = CostModel::area();
+        let base = SearchConfig { l_test: 40, gsg_passes: 1, ..Default::default() };
+        let plain = Explorer::new(grid)
+            .dfgs(&dfgs)
+            .engine(&MappingEngine::default())
+            .cost(&cost)
+            .config(base.clone())
+            .run();
+        let seeded = Explorer::new(grid)
+            .dfgs(&dfgs)
+            .engine(&MappingEngine::default())
+            .cost(&cost)
+            .config(SearchConfig { subgraph_seed: true, ..base })
+            .run();
+        match (&plain, &seeded) {
+            (Ok(_), Ok(s)) => {
+                for (di, d) in dfgs.iter().enumerate() {
+                    let errs = s.final_mappings[di].validate(d, &s.best_layout);
+                    if !errs.is_empty() {
+                        return Err(format!("seeded witness invalid: {errs:?}"));
+                    }
+                }
+                if !helex::search::meets_min_instances(&s.best_layout, &s.min_insts) {
+                    return Err("seeded run violates min instances".into());
+                }
+                let full_cost = cost.layout_cost(&s.full_layout);
+                if s.best_cost > full_cost + 1e-9 {
+                    return Err(format!("seeded cost increased: {} > {full_cost}", s.best_cost));
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => {
+                return Err(format!(
+                    "subgraph seed flipped feasibility: plain ok={} seeded ok={}",
+                    plain.is_ok(),
+                    seeded.is_ok()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_trace_is_thread_invariant() {
+    // the multi-objective analogue of search-threads-parity: a Pareto
+    // session's stripped wire trace, final front and counters are
+    // byte-identical at 1/2/4 in-search threads on random generated
+    // workloads (the genetic phase's RNG is thread-invariant and its
+    // batches reduce in breed order).
+    use helex::service::wire;
+    forall("pareto_threads_parity", 3, 0x9A12, |g| {
+        let gen_cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfgs = vec![helex::dfg::gen::generate(&gen_cfg)];
+        let side = 6 + g.size % 3;
+        let grid = Grid::new(side, side);
+        let scfg = SearchConfig {
+            l_test: 40 + g.rng.below(30),
+            l_fail: 2,
+            gsg_passes: 1,
+            objective: SearchObjective::Pareto,
+            genetic_generations: 2,
+            genetic_population: 6,
+            ..Default::default()
+        };
+        let run = |threads: usize| {
+            let engine = MappingEngine::default();
+            let cost = CostModel::area();
+            let mut trace = String::new();
+            let result = {
+                let trace = &mut trace;
+                let mut obs = move |ev: &SearchEvent| {
+                    trace.push_str(&wire::strip_volatile(&wire::encode_event(ev)).to_string());
+                    trace.push('\n');
+                };
+                Explorer::new(grid)
+                    .dfgs(&dfgs)
+                    .engine(&engine)
+                    .cost(&cost)
+                    .config(SearchConfig { search_threads: threads, ..scfg.clone() })
+                    .observer(&mut obs)
+                    .run()
+            };
+            let summary = result.ok().map(|r| {
+                (r.front, r.best_layout, r.stats.tested, r.stats.expanded)
+            });
+            (trace, summary)
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let other = run(threads);
+            if base != other {
+                return Err(format!(
+                    "pareto run diverged at {threads} threads: \
+                     base trace {}B front {:?}; other trace {}B front {:?}",
+                    base.0.len(),
+                    base.1.as_ref().map(|s| s.0.len()),
+                    other.0.len(),
+                    other.1.as_ref().map(|s| s.0.len()),
+                ));
+            }
         }
         Ok(())
     });
