@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Unit tests for bench_gate.py — the self-seeding baseline contract.
+
+Pure stdlib (unittest + tempfile); run directly:
+
+    python3 .github/scripts/test_bench_gate.py
+
+Covers the four behaviors CI leans on:
+
+1. `--refresh` adopts the current medians when the baseline is missing
+   or provisional, and strips the provisional markers.
+2. `--refresh` never touches a baseline that already holds real medians.
+3. The gate passes/fails on speedup_4t and on >20% median regressions,
+   and skips the regression check against a provisional baseline.
+4. A provisional baseline seen a second time is a hard failure (the
+   first run's adoption push never landed).
+"""
+
+import importlib.util
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_spec = importlib.util.spec_from_file_location(
+    "bench_gate", os.path.join(_HERE, "bench_gate.py")
+)
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+def record(lps1=100.0, lps4=180.0, speedup=None, genetic=None):
+    rec = {
+        "bench": "search",
+        "spec": "fig9-medium:S4@9x9,l_test=400,gsg_passes=1",
+        "layouts_per_sec": {"1t": lps1, "4t": lps4},
+        "wall_secs": {"1t": 2.0, "4t": 1.1},
+        "speedup_4t": lps4 / lps1 if speedup is None else speedup,
+    }
+    if genetic is not None:
+        rec["genetic_hv_per_sec"] = genetic
+    return rec
+
+
+class GateCase(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.cur = os.path.join(self.dir.name, "BENCH_search.json")
+        self.base = os.path.join(self.dir.name, "BENCH_search.baseline.json")
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, path, obj):
+        with open(path, "w") as f:
+            json.dump(obj, f)
+
+    def read(self, path):
+        with open(path) as f:
+            return json.load(f)
+
+    def run_gate(self, *argv):
+        old = sys.argv
+        sys.argv = ["bench_gate.py", *argv]
+        try:
+            return bench_gate.main()
+        finally:
+            sys.argv = old
+
+
+class TestRefresh(GateCase):
+    def test_adopts_when_baseline_missing(self):
+        self.write(self.cur, record())
+        self.assertEqual(self.run_gate("--refresh", self.cur, self.base), 0)
+        adopted = self.read(self.base)
+        self.assertEqual(adopted["layouts_per_sec"], {"1t": 100.0, "4t": 180.0})
+        self.assertNotIn("provisional", adopted)
+        self.assertIn("note", adopted)
+
+    def test_adopts_over_provisional_and_strips_markers(self):
+        self.write(self.cur, record())
+        self.write(
+            self.base,
+            {"provisional": True, "provisional_runs": 1, "layouts_per_sec": None},
+        )
+        self.assertEqual(self.run_gate("--refresh", self.cur, self.base), 0)
+        adopted = self.read(self.base)
+        self.assertNotIn("provisional", adopted)
+        self.assertNotIn("provisional_runs", adopted)
+        self.assertEqual(adopted["layouts_per_sec"]["4t"], 180.0)
+
+    def test_never_moves_a_real_baseline(self):
+        self.write(self.cur, record(lps1=500.0, lps4=900.0))
+        real = record()
+        self.write(self.base, real)
+        self.assertEqual(self.run_gate("--refresh", self.cur, self.base), 0)
+        self.assertEqual(self.read(self.base), real)
+
+
+class TestGate(GateCase):
+    def test_passes_against_matching_real_baseline(self):
+        self.write(self.cur, record())
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
+    def test_fails_on_low_speedup(self):
+        self.write(self.cur, record(speedup=1.1))
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 1)
+
+    def test_fails_on_median_regression(self):
+        # 4t median down 25% vs baseline: past the 20% gate
+        self.write(self.cur, record(lps1=100.0, lps4=135.0, speedup=1.8))
+        self.write(self.base, record(lps1=100.0, lps4=180.0))
+        self.assertEqual(self.run_gate(self.cur, self.base), 1)
+
+    def test_tolerates_small_regression(self):
+        self.write(self.cur, record(lps1=95.0, lps4=170.0, speedup=1.79))
+        self.write(self.base, record(lps1=100.0, lps4=180.0))
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
+    def test_gates_genetic_rate_when_both_present(self):
+        self.write(self.cur, record(genetic=700.0))
+        self.write(self.base, record(genetic=1000.0))
+        self.assertEqual(self.run_gate(self.cur, self.base), 1)
+
+    def test_skips_genetic_rate_without_baseline_median(self):
+        self.write(self.cur, record(genetic=700.0))
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
+    def test_missing_baseline_skips_regression(self):
+        self.write(self.cur, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
+
+class TestProvisionalLifecycle(GateCase):
+    def provisional(self):
+        return {
+            "provisional": True,
+            "layouts_per_sec": None,
+            "note": "placeholder",
+        }
+
+    def test_first_sighting_skips_regression_and_counts(self):
+        self.write(self.cur, record())
+        self.write(self.base, self.provisional())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+        self.assertEqual(self.read(self.base)["provisional_runs"], 1)
+
+    def test_second_sighting_fails_loudly(self):
+        self.write(self.cur, record())
+        self.write(self.base, self.provisional())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+        # the CI job pushes the counted baseline back; a second main run
+        # still seeing a provisional file means adoption never landed
+        self.assertEqual(self.run_gate(self.cur, self.base), 1)
+        self.assertEqual(self.read(self.base)["provisional_runs"], 2)
+
+    def test_refresh_resets_the_lifecycle(self):
+        self.write(self.cur, record())
+        self.write(self.base, self.provisional())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+        self.assertEqual(self.run_gate("--refresh", self.cur, self.base), 0)
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+        self.assertNotIn("provisional_runs", self.read(self.base))
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)

@@ -205,9 +205,71 @@ fn main() {
         genetic_hv_per_sec = Some(rate_med);
     }
 
+    // Fabric routing throughput: routed-nets/sec of the PathFinder on a
+    // pinned 8-stream LOAD->ADD->STORE workload at 9x9, Mesh4 vs
+    // Express(stride 2). Placement and net set are identical; the delta
+    // is the cost of searching the richer link set. Medians land in
+    // BENCH_search.json next to the thread-scaling numbers.
+    let mut fabric_route: Option<(f64, f64)> = None;
+    if h.enabled("fabric::route") {
+        use helex::cgra::Layout;
+        use helex::fabric::{Fabric, FabricSpec, Topology};
+        use helex::mapper::route::{route, RouteOutcome};
+        use helex::mapper::MapperConfig;
+        use helex::ops::{GroupSet, Op};
+
+        println!("\n== fabric routing throughput (8 LOAD->ADD->STORE streams @ 9x9) ==");
+        let mut ops = Vec::new();
+        ops.extend(std::iter::repeat(Op::Load).take(8));
+        ops.extend(std::iter::repeat(Op::Add).take(8));
+        ops.extend(std::iter::repeat(Op::Store).take(8));
+        let mut edges = Vec::new();
+        for i in 0..8u32 {
+            edges.push((i, 8 + i)); // LOAD -> ADD
+            edges.push((8 + i, 16 + i)); // ADD -> STORE
+        }
+        let dfg = helex::dfg::Dfg::new("fabric-route-bench", ops, edges);
+        let net_count = 16.0f64;
+
+        let express =
+            FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() };
+        let mut rates = Vec::new();
+        for (tag, spec) in [("mesh4", FabricSpec::default()), ("express", express)] {
+            let layout =
+                Layout::full_on(Fabric::new(helex::Grid::new(9, 9), spec), GroupSet::all_compute());
+            let g = &layout.grid;
+            let placement: Vec<_> = (0..8)
+                .map(|c| g.cell(0, c))
+                .chain((0..8).map(|c| g.cell(4, c)))
+                .chain((0..8).map(|c| g.cell(8, c)))
+                .collect();
+            let cfg = MapperConfig::default();
+            let name = format!("fabric::route@{tag}");
+            h.bench(&name, || match route(&dfg, &layout, &placement, &cfg) {
+                RouteOutcome::Routed(paths) => paths.len(),
+                RouteOutcome::Congested { .. } => {
+                    panic!("pinned parallel streams must route on {tag}")
+                }
+            });
+            let median_ns = h
+                .results
+                .iter()
+                .rev()
+                .find(|r| r.name == name)
+                .map(|r| r.median_ns)
+                .unwrap_or(0.0);
+            let nets_per_sec = net_count * 1e9 / median_ns.max(1e-9);
+            println!("    {name}  {nets_per_sec:>10.0} routed nets/s");
+            rates.push(nets_per_sec);
+        }
+        if let [mesh4, express] = rates.as_slice() {
+            fabric_route = Some((*mesh4, *express));
+        }
+    }
+
     // Merge-write BENCH_search.json: a filtered run refreshes only the
     // sections it measured (same pattern as BENCH_service.json below).
-    if threads_fields.is_some() || genetic_hv_per_sec.is_some() {
+    if threads_fields.is_some() || genetic_hv_per_sec.is_some() || fabric_route.is_some() {
         let prior = std::fs::read_to_string("BENCH_search.json")
             .ok()
             .and_then(|text| json::parse(&text).ok());
@@ -230,6 +292,13 @@ fn main() {
             Some(rate) => Json::F64(rate),
             None => keep("genetic_hv_per_sec", Json::F64(0.0)),
         };
+        let fabric_field = match fabric_route {
+            Some((mesh4, express)) => Json::obj(vec![
+                ("mesh4", Json::F64(mesh4)),
+                ("express", Json::F64(express)),
+            ]),
+            None => keep("fabric_route_nets_per_sec", Json::Obj(Vec::new())),
+        };
         let record = Json::obj(vec![
             ("bench", Json::str("search")),
             ("spec", Json::str("fig9-medium:S4@9x9,l_test=400,gsg_passes=1")),
@@ -237,6 +306,7 @@ fn main() {
             ("wall_secs", wall_field),
             ("speedup_4t", speedup_field),
             ("genetic_hv_per_sec", genetic_field),
+            ("fabric_route_nets_per_sec", fabric_field),
         ]);
         if std::fs::write("BENCH_search.json", record.to_string()).is_ok() {
             println!("    wrote BENCH_search.json");

@@ -7,12 +7,18 @@
 //! *reserved* by the mapper (reserve-on-demand: routing only, no ops).
 
 use super::{CellId, Grid};
+use crate::fabric::Fabric;
 use crate::ops::{GroupSet, OpGroup, NUM_GROUPS};
 
 /// A functional layout of a grid.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Layout {
     pub grid: Grid,
+    /// The interconnect the layout is provisioned on. Defaults to the
+    /// legacy-equivalent Mesh4 fabric; always consistent with `grid`
+    /// (constructors guarantee it). Private so derived transforms
+    /// (`clone`, `without_group`, `union`, …) can never drop it.
+    fabric: Fabric,
     /// Per-cell supported groups (row-major, same indexing as `Grid`).
     support: Vec<GroupSet>,
 }
@@ -21,22 +27,63 @@ impl Layout {
     /// Full homogeneous layout: every compute cell supports every compute
     /// group in `groups` (Mem is routed to I/O cells automatically).
     pub fn full(grid: Grid, groups: GroupSet) -> Self {
+        Self::full_on(Fabric::mesh4(grid), groups)
+    }
+
+    /// [`Self::full`] on an explicit fabric: inert border cells (I/O
+    /// sides disabled by the fabric's mask) and masked cells get empty
+    /// support — they route but host no ops.
+    pub fn full_on(fabric: Fabric, groups: GroupSet) -> Self {
+        let grid = fabric.grid();
         let compute_support = groups.intersect(GroupSet::all_compute());
         let support = grid
             .cells()
-            .map(|c| if grid.is_compute(c) { compute_support } else { GroupSet::mem_only() })
+            .map(|c| {
+                if fabric.is_masked(c) {
+                    GroupSet::EMPTY
+                } else if grid.is_compute(c) {
+                    compute_support
+                } else if fabric.is_active_io(c) {
+                    GroupSet::mem_only()
+                } else {
+                    GroupSet::EMPTY
+                }
+            })
             .collect();
-        Self { grid, support }
+        Self { grid, fabric, support }
     }
 
     /// Layout with empty compute cells (used as a base for constructing
     /// heatmap layouts).
     pub fn empty(grid: Grid) -> Self {
+        Self::empty_on(Fabric::mesh4(grid))
+    }
+
+    /// [`Self::empty`] on an explicit fabric.
+    pub fn empty_on(fabric: Fabric) -> Self {
+        let grid = fabric.grid();
         let support = grid
             .cells()
-            .map(|c| if grid.is_compute(c) { GroupSet::EMPTY } else { GroupSet::mem_only() })
+            .map(|c| {
+                if grid.is_compute(c) || fabric.is_masked(c) || !fabric.is_active_io(c) {
+                    GroupSet::EMPTY
+                } else {
+                    GroupSet::mem_only()
+                }
+            })
             .collect();
-        Self { grid, support }
+        Self { grid, fabric, support }
+    }
+
+    /// An empty layout on the same grid *and fabric* as `self` (the
+    /// fabric-preserving base for heatmap/seed construction).
+    pub fn empty_like(&self) -> Self {
+        Self::empty_on(self.fabric.clone())
+    }
+
+    /// The interconnect this layout is provisioned on.
+    pub fn fabric(&self) -> &Fabric {
+        &self.fabric
     }
 
     pub fn support(&self, cell: CellId) -> GroupSet {
@@ -119,12 +166,13 @@ impl Layout {
     /// the heatmap layout).
     pub fn union(&self, other: &Layout) -> Layout {
         assert_eq!(self.grid, other.grid);
+        assert_eq!(self.fabric, other.fabric);
         let support = self
             .grid
             .cells()
             .map(|c| self.support(c).union(other.support(c)))
             .collect();
-        Layout { grid: self.grid, support }
+        Layout { grid: self.grid, fabric: self.fabric.clone(), support }
     }
 
     /// Compact one-char-per-group textual rendering, for debugging and
@@ -245,6 +293,62 @@ mod tests {
         let u = a.union(&b);
         assert_eq!(u.support(c1).len(), 2);
         assert_eq!(u.support(c2).len(), 1);
+    }
+
+    #[test]
+    fn default_constructors_carry_the_mesh4_fabric() {
+        let l = Layout::full(grid(), GroupSet::all_compute());
+        assert!(l.fabric().is_default());
+        assert_eq!(l.fabric().grid(), l.grid);
+        assert!(Layout::empty(grid()).fabric().is_default());
+    }
+
+    #[test]
+    fn fabric_survives_every_layout_transform() {
+        use crate::fabric::{FabricSpec, Topology};
+        let spec = FabricSpec { topology: Topology::Mesh8, ..Default::default() };
+        let f = spec.build(grid());
+        let l = Layout::full_on(f.clone(), GroupSet::all_compute());
+        assert_eq!(l.fabric(), &f);
+        let cell = l.grid.compute_cells().next().unwrap();
+        assert_eq!(l.without_group(cell, OpGroup::Div).fabric(), &f);
+        assert_eq!(
+            l.without_groups(cell, GroupSet::from_groups(&[OpGroup::Div])).fabric(),
+            &f
+        );
+        assert_eq!(l.clone().fabric(), &f);
+        assert_eq!(l.union(&l.without_group(cell, OpGroup::Div)).fabric(), &f);
+        assert_eq!(l.empty_like().fabric(), &f);
+        // layouts differing only in fabric are different layouts
+        let legacy = Layout::full(grid(), GroupSet::all_compute());
+        assert_ne!(l, legacy);
+    }
+
+    #[test]
+    fn inert_io_cells_have_no_mem_support() {
+        use crate::fabric::{FabricSpec, SIDE_N, SIDE_S};
+        let g = grid(); // 4x5
+        let f = FabricSpec { io_mask: SIDE_N | SIDE_S, ..Default::default() }.build(g);
+        let l = Layout::full_on(f.clone(), GroupSet::all_compute());
+        assert_eq!(l.support(g.cell(0, 2)), GroupSet::mem_only());
+        // west/east edge non-corner cells are inert: empty support
+        assert_eq!(l.support(g.cell(1, 0)), GroupSet::EMPTY);
+        assert_eq!(l.support(g.cell(2, 4)), GroupSet::EMPTY);
+        // compute cells untouched
+        assert_eq!(l.support(g.cell(1, 1)), GroupSet::all_compute());
+        let e = Layout::empty_on(f);
+        assert_eq!(e.support(g.cell(1, 0)), GroupSet::EMPTY);
+        assert_eq!(e.support(g.cell(0, 2)), GroupSet::mem_only());
+    }
+
+    #[test]
+    fn masked_cells_have_no_support() {
+        let g = grid();
+        let dead = g.cell(1, 2);
+        let f = crate::fabric::Fabric::mesh4(g).with_masked(&[dead]);
+        let l = Layout::full_on(f, GroupSet::all_compute());
+        assert_eq!(l.support(dead), GroupSet::EMPTY);
+        assert_eq!(l.support(g.cell(1, 1)), GroupSet::all_compute());
     }
 
     #[test]

@@ -26,6 +26,32 @@ pub enum CellKind {
     Compute,
 }
 
+/// Why a grid could not be constructed. [`Grid::try_new`] is total:
+/// untrusted dimensions (wire decoding, CLI input) turn into one of
+/// these instead of a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridError {
+    /// Fewer than 3 rows or columns: no compute cell would exist.
+    TooSmall { rows: usize, cols: usize },
+    /// `rows*cols` overflows the [`CellId`] index space.
+    TooLarge { rows: usize, cols: usize },
+}
+
+impl std::fmt::Display for GridError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GridError::TooSmall { rows, cols } => {
+                write!(f, "grid must be at least 3x3, got {rows}x{cols}")
+            }
+            GridError::TooLarge { rows, cols } => {
+                write!(f, "grid {rows}x{cols} too large for CellId")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GridError {}
+
 /// An R×C T-CGRA grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Grid {
@@ -35,11 +61,27 @@ pub struct Grid {
 
 impl Grid {
     /// Create a grid. Needs at least 3×3 so at least one compute cell
-    /// exists.
+    /// exists. Panics on invalid dimensions; use [`Self::try_new`] for
+    /// untrusted input.
     pub fn new(rows: usize, cols: usize) -> Self {
-        assert!(rows >= 3 && cols >= 3, "grid must be at least 3x3, got {rows}x{cols}");
-        assert!(rows * cols <= u16::MAX as usize, "grid too large for CellId");
-        Self { rows, cols }
+        match Self::try_new(rows, cols) {
+            Ok(g) => g,
+            Err(e @ GridError::TooSmall { .. }) => {
+                panic!("{e}")
+            }
+            Err(GridError::TooLarge { .. }) => panic!("grid too large for CellId"),
+        }
+    }
+
+    /// Total constructor: validates the dimensions instead of panicking.
+    pub fn try_new(rows: usize, cols: usize) -> Result<Self, GridError> {
+        if rows < 3 || cols < 3 {
+            return Err(GridError::TooSmall { rows, cols });
+        }
+        if rows.saturating_mul(cols) > u16::MAX as usize {
+            return Err(GridError::TooLarge { rows, cols });
+        }
+        Ok(Self { rows, cols })
     }
 
     pub fn num_cells(&self) -> usize {
@@ -293,6 +335,34 @@ mod tests {
     #[should_panic(expected = "at least 3x3")]
     fn too_small_grid_panics() {
         Grid::new(2, 5);
+    }
+
+    #[test]
+    fn try_new_is_total() {
+        assert_eq!(Grid::try_new(3, 3), Ok(Grid { rows: 3, cols: 3 }));
+        assert_eq!(Grid::try_new(2, 5), Err(GridError::TooSmall { rows: 2, cols: 5 }));
+        assert_eq!(Grid::try_new(5, 0), Err(GridError::TooSmall { rows: 5, cols: 0 }));
+        assert_eq!(
+            Grid::try_new(1000, 1000),
+            Err(GridError::TooLarge { rows: 1000, cols: 1000 })
+        );
+        // usize overflow must not panic either
+        assert!(matches!(
+            Grid::try_new(usize::MAX, usize::MAX),
+            Err(GridError::TooLarge { .. })
+        ));
+        // 255x257 = 65535 = u16::MAX fits exactly
+        assert!(Grid::try_new(255, 257).is_ok());
+        assert!(Grid::try_new(256, 257).is_err());
+        // the error messages are what wire decoding surfaces as 400 reasons
+        assert_eq!(
+            Grid::try_new(2, 2).unwrap_err().to_string(),
+            "grid must be at least 3x3, got 2x2"
+        );
+        assert_eq!(
+            Grid::try_new(1000, 1000).unwrap_err().to_string(),
+            "grid 1000x1000 too large for CellId"
+        );
     }
 
     #[test]

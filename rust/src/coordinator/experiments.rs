@@ -20,6 +20,7 @@ use crate::baselines::{fig11_metrics, heta as heta_bl, revamp};
 use crate::cgra::{Grid, Layout};
 use crate::cost::reduction_pct;
 use crate::dfg::{benchmarks, heta, Dfg};
+use crate::fabric::{FabricSpec, Topology};
 use crate::ops::{COMPUTE_GROUPS, NUM_GROUPS};
 use crate::search::{posteriori, GsgPhase, HeatmapPhase, OpsgPhase, SearchResult};
 use crate::service::{ExplorationService, JobSpec, Objective, ServiceConfig, ServiceEvent};
@@ -45,6 +46,7 @@ fn spec(cfg: &ExperimentConfig, label: &str, dfgs: Vec<Dfg>, size: (usize, usize
         label: label.to_string(),
         dfgs,
         grid,
+        fabric: cfg.fabric,
         objective: Objective::Area,
         search: cfg.search_config(grid),
         mapper: cfg.mapper.clone(),
@@ -103,6 +105,75 @@ fn fig9_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
         .into_iter()
         .map(|size| spec(cfg, "set_S4_sweep", benchmarks::dfg_set("S4"), size))
         .collect()
+}
+
+/// The provisioning regimes the `fabric_gaps` experiment contrasts: the
+/// paper's Mesh4 fabric, the 8-neighbour diagonal mesh, and a stride-2
+/// express overlay. Everything else (grid, DFG set, search budget,
+/// mapper) stays at the experiment configuration's values so the gap
+/// deltas isolate the interconnect.
+fn fabric_regimes() -> [(&'static str, FabricSpec); 3] {
+    let base = FabricSpec::default();
+    [
+        ("fabric_mesh4", base),
+        ("fabric_diagonal", FabricSpec { topology: Topology::Mesh8, ..base }),
+        ("fabric_express", FabricSpec { topology: Topology::Express { stride: 2 }, ..base }),
+    ]
+}
+
+/// 8×8 carries the S4 image set (see [`table5_specs`]): small enough to
+/// be routing-bound, so the interconnect actually matters.
+const FABRIC_GAPS_SIZE: (usize, usize) = (8, 8);
+
+fn fabric_gaps_specs(cfg: &ExperimentConfig, _quick: bool) -> Vec<JobSpec> {
+    fabric_regimes()
+        .into_iter()
+        .map(|(label, fabric)| {
+            let mut s = spec(cfg, label, benchmarks::dfg_set("S4"), FABRIC_GAPS_SIZE);
+            s.fabric = fabric;
+            s
+        })
+        .collect()
+}
+
+/// fabric_gaps: the Fig 6 theoretical-minimum gaps recomputed per
+/// provisioning regime — how much of the remaining reduction a richer
+/// interconnect recovers at a fixed grid size.
+fn fold_fabric_gaps(ctx: &FoldCtx, _quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fabric gaps: reduction remaining to theoretical minimum per provisioning regime (S4, 8x8)",
+        &[
+            "Fabric",
+            "Best cost",
+            "A achieved %",
+            "A remaining %",
+            "P achieved %",
+            "P remaining %",
+            "Ops achieved %",
+            "Ops remaining %",
+        ],
+    );
+    for (label, fabric) in fabric_regimes() {
+        let Some(r) = ctx.runs.get(label, FABRIC_GAPS_SIZE) else {
+            t.row(vec![fabric.describe(), "infeasible".into(), "-".into(), "-".into(),
+                       "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        let gaps = posteriori::objective_gaps(r);
+        let (a, p, o) =
+            (gaps.area.achieved_pct(), gaps.power.achieved_pct(), gaps.ops.achieved_pct());
+        t.row(vec![
+            fabric.describe(),
+            f(r.best_cost, 1),
+            pct(a),
+            pct(100.0 - a),
+            pct(p),
+            pct(100.0 - p),
+            pct(o),
+            pct(100.0 - o),
+        ]);
+    }
+    vec![t]
 }
 
 fn fig11_size(quick: bool) -> (usize, usize) {
@@ -727,6 +798,13 @@ pub const EXPERIMENTS: &[ExperimentDef] = &[
         specs: fig11_specs,
         fold: fold_fig11,
     },
+    ExperimentDef {
+        name: "fabric_gaps",
+        aliases: &["fabric"],
+        csvs: &["fabric_gaps"],
+        specs: fabric_gaps_specs,
+        fold: fold_fabric_gaps,
+    },
 ];
 
 /// Resolve an experiment name (or `"all"`) to its definitions.
@@ -737,7 +815,9 @@ pub fn find(name: &str) -> anyhow::Result<Vec<&'static ExperimentDef>> {
     let matched: Vec<&'static ExperimentDef> =
         EXPERIMENTS.iter().filter(|d| d.matches(name)).collect();
     if matched.is_empty() {
-        anyhow::bail!("unknown experiment '{name}' (try fig3..fig11, table4/5/6/8, all)");
+        anyhow::bail!(
+            "unknown experiment '{name}' (try fig3..fig11, table4/5/6/8, fabric_gaps, all)"
+        );
     }
     Ok(matched)
 }
@@ -825,5 +905,22 @@ mod tests {
         assert!(t8[0].search.run_gsg && !t8[1].search.run_gsg);
         assert!(!t8[0].search.opsg_skip_arith && t8[1].search.opsg_skip_arith);
         assert_ne!(t8[0].fingerprint(), t8[1].fingerprint());
+    }
+
+    #[test]
+    fn fabric_gaps_regimes_are_distinct_runs() {
+        let cfg = ExperimentConfig { l_test_base: 100, ..Default::default() };
+        let specs = fabric_gaps_specs(&cfg, true);
+        assert_eq!(specs.len(), 3);
+        // the mesh4 regime is the byte-identical legacy path
+        assert!(specs[0].fabric.is_default());
+        // same grid, distinct labels and fingerprints per regime
+        for s in &specs[1..] {
+            assert_eq!(s.grid, specs[0].grid);
+            assert_ne!(s.label, specs[0].label);
+            assert_ne!(s.fingerprint(), specs[0].fingerprint());
+        }
+        assert_eq!(find("fabric_gaps").unwrap()[0].name, "fabric_gaps");
+        assert_eq!(find("fabric").unwrap()[0].name, "fabric_gaps");
     }
 }

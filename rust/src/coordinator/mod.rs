@@ -40,6 +40,10 @@ pub struct ExperimentConfig {
     pub genetic_population: usize,
     /// Start from a mined frequent-subgraph seed layout when feasible.
     pub subgraph_seed: bool,
+    /// Interconnect provisioning every session/spec built from this
+    /// config runs on (`fabric.*` keys / `--topology` etc.). The default
+    /// is the byte-identical legacy Mesh4 fabric.
+    pub fabric: crate::fabric::FabricSpec,
     pub mapper: MapperConfig,
     /// Where CSVs are written.
     pub results_dir: PathBuf,
@@ -69,6 +73,7 @@ impl Default for ExperimentConfig {
             genetic_generations: SearchConfig::default().genetic_generations,
             genetic_population: SearchConfig::default().genetic_population,
             subgraph_seed: false,
+            fabric: crate::fabric::FabricSpec::default(),
             mapper: MapperConfig::default(),
             results_dir: PathBuf::from("results"),
             use_xla_scorer: true,
@@ -106,6 +111,29 @@ impl ExperimentConfig {
         self.genetic_population =
             cfg.int_or("search.genetic.population", self.genetic_population as i64) as usize;
         self.subgraph_seed = cfg.bool_or("search.subgraph_seed", self.subgraph_seed);
+        // fabric provisioning: `fabric.express_stride` only matters for
+        // the express topology, mirroring the CLI's --express-stride
+        let stride = cfg.int_or(
+            "fabric.express_stride",
+            match self.fabric.topology {
+                crate::fabric::Topology::Express { stride } => stride as i64,
+                _ => 2,
+            },
+        ) as usize;
+        if let Some(name) = cfg.get("fabric.topology").and_then(|v| v.as_str()) {
+            if let Ok(t) = crate::fabric::Topology::parse(name, stride) {
+                self.fabric.topology = t;
+            }
+        } else if matches!(self.fabric.topology, crate::fabric::Topology::Express { .. }) {
+            self.fabric.topology = crate::fabric::Topology::Express { stride: stride.max(2) };
+        }
+        self.fabric.link_cap =
+            cfg.int_or("fabric.link_cap", self.fabric.link_cap as i64).clamp(1, 255) as u8;
+        if let Some(name) = cfg.get("fabric.io_mask").and_then(|v| v.as_str()) {
+            if let Ok(mask) = crate::fabric::parse_io_mask(name) {
+                self.fabric.io_mask = mask;
+            }
+        }
         self.use_xla_scorer = cfg.bool_or("runtime.use_xla_scorer", self.use_xla_scorer);
         self.mapper.route_iters =
             cfg.int_or("mapper.route_iters", self.mapper.route_iters as i64) as usize;
@@ -208,6 +236,7 @@ impl Coordinator {
     ) -> Option<SearchResult> {
         let scfg = self.cfg.search_config(grid);
         let mut explorer = search::Explorer::new(grid)
+            .fabric(self.cfg.fabric)
             .dfgs(dfgs)
             .engine(&self.engine)
             .cost(&self.area)
@@ -274,7 +303,9 @@ mod tests {
              objective = \"pareto\"\nsubgraph_seed = true\n\
              [search.genetic]\ngenerations = 5\npopulation = 11\n\
              [mapper]\nhist_increment = 2.5\npresent_penalty = 3.25\n\
-             [service]\njobs = 6",
+             [service]\njobs = 6\n\
+             [fabric]\ntopology = \"express\"\nexpress_stride = 3\nlink_cap = 2\n\
+             io_mask = \"ns\"",
         );
         cfg.apply_file(&file);
         assert!(cfg.opsg_skip_arith);
@@ -287,6 +318,15 @@ mod tests {
         assert!(cfg.subgraph_seed);
         assert_eq!(cfg.genetic_generations, 5);
         assert_eq!(cfg.genetic_population, 11);
+        assert_eq!(
+            cfg.fabric,
+            crate::fabric::FabricSpec {
+                topology: crate::fabric::Topology::Express { stride: 3 },
+                link_cap: 2,
+                io_mask: crate::fabric::SIDE_N | crate::fabric::SIDE_S,
+            }
+        );
+        assert_eq!(cfg.fabric.describe(), "express:3+cap2+io:ns");
         // and it all lands in the per-grid SearchConfig
         let scfg = cfg.search_config(Grid::new(6, 6));
         assert_eq!(scfg.search_threads, 3);

@@ -10,6 +10,12 @@
 //! accounts for and Equation 1 does not, and reports chip totals. The
 //! point of Table V is that two differently-structured estimates agree
 //! to ~1%; that property is preserved.
+//!
+//! Provisioned fabrics (see [`crate::fabric`]) price their interconnect
+//! here: extra switch degree (diagonal/express links) and per-stream
+//! link capacity add per-cell surcharges, and masked cells are not
+//! synthesized at all. The default Mesh4/cap-1 fabric adds *exactly*
+//! zero, so Table V numbers are bit-identical to the pre-fabric model.
 
 use crate::cgra::Layout;
 use crate::cost::{CostModel, Objective};
@@ -38,6 +44,12 @@ struct Leaves {
     io: f64,
     /// per-cell wiring / clock overhead added by synthesis
     wiring: f64,
+    /// per directed link *beyond* the baseline 4-dir switch (diagonal or
+    /// express fabrics): extra crossbar ports and drivers
+    link: f64,
+    /// per extra value stream of link capacity (beyond 1), per directed
+    /// link: wider mux trees and per-stream buffering
+    stream: f64,
 }
 
 fn area_leaves() -> Leaves {
@@ -52,6 +64,8 @@ fn area_leaves() -> Leaves {
         empty: 4.58 * u,
         io: 11.86 * u,
         wiring: 0.062 * u,
+        link: 0.21 * u,
+        stream: 0.13 * u,
     }
 }
 
@@ -67,18 +81,31 @@ fn power_leaves() -> Leaves {
         empty: 6.87 * u,
         io: 16.55 * u,
         wiring: 0.055 * u,
+        link: 0.19 * u,
+        stream: 0.24 * u,
     }
 }
 
 fn synthesize_one(layout: &Layout, l: &Leaves) -> f64 {
     use crate::ops::OpGroup::*;
+    let f = layout.fabric();
+    // Fabric surcharge per cell: extra switch degree beyond the baseline
+    // 4-dir mesh, plus per-stream capacity widening on every outgoing
+    // link. Exactly zero for the default Mesh4/cap-1 fabric, so Table V
+    // numbers are untouched.
+    let extra_dirs = f.num_dirs().saturating_sub(4) as f64;
+    let extra_streams = f.link_cap().saturating_sub(1) as f64 * f.num_dirs() as f64;
+    let fabric_extra = extra_dirs * l.link + extra_streams * l.stream;
     let mut total = 0.0;
     for c in layout.grid.cells() {
+        if f.is_masked(c) {
+            continue; // masked cells are not synthesized at all
+        }
         if layout.grid.is_io(c) {
-            total += l.io + l.wiring;
+            total += l.io + l.wiring + fabric_extra;
             continue;
         }
-        total += l.empty + l.fifos + l.wiring;
+        total += l.empty + l.fifos + l.wiring + fabric_extra;
         let s = layout.support(c);
         if s.contains(Arith) {
             total += l.arith;
@@ -179,6 +206,36 @@ mod tests {
             "8x8 area {} vs 2.12e6",
             s.area_um2
         );
+    }
+
+    #[test]
+    fn default_fabric_adds_exactly_nothing() {
+        use crate::fabric::Fabric;
+        let grid = Grid::new(8, 8);
+        let legacy = Layout::full(grid, GroupSet::all_compute());
+        let explicit = Layout::full_on(Fabric::mesh4(grid), GroupSet::all_compute());
+        let (a, b) = (synthesize(&legacy), synthesize(&explicit));
+        assert_eq!(a.area_um2.to_bits(), b.area_um2.to_bits());
+        assert_eq!(a.power_uw.to_bits(), b.power_uw.to_bits());
+    }
+
+    #[test]
+    fn richer_fabrics_cost_more() {
+        use crate::fabric::{Fabric, FabricSpec, Topology};
+        let grid = Grid::new(8, 8);
+        let mesh4 = synthesize(&Layout::full(grid, GroupSet::all_compute()));
+        for spec in [
+            FabricSpec { topology: Topology::Mesh8, ..FabricSpec::default() },
+            FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() },
+            FabricSpec { link_cap: 2, ..FabricSpec::default() },
+        ] {
+            let l = Layout::full_on(Fabric::new(grid, spec), GroupSet::all_compute());
+            let s = synthesize(&l);
+            assert!(s.area_um2 > mesh4.area_um2, "{}: area must rise", spec.describe());
+            assert!(s.power_uw > mesh4.power_uw, "{}: power must rise", spec.describe());
+            // the surcharge is a small overlay, not a rebasing
+            assert!(s.area_um2 < mesh4.area_um2 * 1.10, "{}: surcharge too big", spec.describe());
+        }
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Fabric provisioning explorer: the outer loop over candidate fabrics.
+//!
+//! [`FabricExplorer`] wraps the nested op-layout search
+//! ([`crate::search::Explorer`]) in a provisioning sweep: for each
+//! candidate [`FabricSpec`] it runs one full search session on the same
+//! grid/DFG set, then merges every per-fabric outcome into a single
+//! non-dominated front whose points carry the fabric descriptor they
+//! were found on ([`FabricFrontPoint`]). Scalar (area/power) sessions
+//! contribute their best layout's objective-space coordinates; Pareto
+//! sessions contribute their whole archive. The merge is a plain
+//! dominance filter over [`crate::search::pareto::dominates`] with a
+//! deterministic sort, so the combined front is byte-stable at any
+//! thread count, exactly like the inner search.
+//!
+//! Candidate order is preserved in [`FabricExploration::runs`]; an
+//! infeasible candidate (e.g. a topology the DFG set congests on) stays
+//! in the report with its error, it just contributes no points.
+
+use crate::cgra::Grid;
+use crate::cost::CostModel;
+use crate::dfg::Dfg;
+use crate::mapper::MappingEngine;
+use crate::search::pareto::{self, ParetoPoint};
+use crate::search::{ExploreError, Explorer, SearchConfig, SearchResult};
+
+use super::{FabricSpec, Topology};
+
+/// One point of the merged provisioning front: objective-space
+/// coordinates plus the descriptor of the fabric that produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricFrontPoint {
+    pub point: ParetoPoint,
+    /// [`FabricSpec::describe`] of the producing candidate.
+    pub fabric: String,
+}
+
+/// One candidate's full search outcome.
+#[derive(Debug)]
+pub struct FabricRun {
+    pub spec: FabricSpec,
+    /// [`FabricSpec::describe`] — stable key for reports and traces.
+    pub descriptor: String,
+    pub outcome: Result<SearchResult, ExploreError>,
+}
+
+impl FabricRun {
+    /// The candidate's points in objective space: the Pareto archive
+    /// when the session ran multi-objective, else the best layout's
+    /// coordinates. Empty for failed candidates.
+    fn points(&self) -> Vec<ParetoPoint> {
+        match &self.outcome {
+            Ok(r) if !r.front.is_empty() => r.front.clone(),
+            Ok(r) => vec![pareto::evaluate(&r.best_layout)],
+            Err(_) => Vec::new(),
+        }
+    }
+}
+
+/// The provisioning sweep's result: every per-fabric run (candidate
+/// order) and the merged descriptor-tagged non-dominated front.
+#[derive(Debug)]
+pub struct FabricExploration {
+    pub runs: Vec<FabricRun>,
+    /// Non-dominated across *all* candidates; sorted by
+    /// `(ops, area, power, fingerprint, fabric)`.
+    pub front: Vec<FabricFrontPoint>,
+}
+
+impl FabricExploration {
+    /// The run behind the scalar-best point (lowest best_cost among
+    /// feasible candidates; ties break toward earlier candidates).
+    pub fn best_run(&self) -> Option<&FabricRun> {
+        self.runs
+            .iter()
+            .filter(|r| r.outcome.is_ok())
+            .min_by(|a, b| {
+                let ca = a.outcome.as_ref().map(|r| r.best_cost).unwrap_or(f64::INFINITY);
+                let cb = b.outcome.as_ref().map(|r| r.best_cost).unwrap_or(f64::INFINITY);
+                ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+}
+
+/// The default provisioning sweep: today's mesh, the diagonal mesh and
+/// a stride-2 express overlay, all at unit link capacity with the full
+/// I/O border.
+pub fn default_candidates() -> Vec<FabricSpec> {
+    vec![
+        FabricSpec::default(),
+        FabricSpec { topology: Topology::Mesh8, ..FabricSpec::default() },
+        FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() },
+    ]
+}
+
+/// Builder-style provisioning sweep. Mirrors [`Explorer`]'s builder:
+/// required grid (constructor) and DFG set ([`Self::dfgs`]); candidates
+/// default to [`default_candidates`]; engine/cost/config default like
+/// the inner search.
+pub struct FabricExplorer<'a> {
+    grid: Grid,
+    candidates: Vec<FabricSpec>,
+    dfgs: Option<&'a [Dfg]>,
+    engine: Option<&'a MappingEngine>,
+    cost: Option<&'a CostModel>,
+    cfg: SearchConfig,
+}
+
+impl<'a> FabricExplorer<'a> {
+    pub fn new(grid: Grid) -> Self {
+        Self {
+            grid,
+            candidates: default_candidates(),
+            dfgs: None,
+            engine: None,
+            cost: None,
+            cfg: SearchConfig::default(),
+        }
+    }
+
+    /// The DFG set every candidate fabric is searched against (required).
+    pub fn dfgs(mut self, dfgs: &'a [Dfg]) -> Self {
+        self.dfgs = Some(dfgs);
+        self
+    }
+
+    /// Replace the candidate set. Invalid specs are rejected at
+    /// [`Self::run`] time; an empty set is rejected too.
+    pub fn candidates(mut self, candidates: Vec<FabricSpec>) -> Self {
+        self.candidates = candidates;
+        self
+    }
+
+    /// Share a [`MappingEngine`] across every candidate's session. Safe:
+    /// the feasibility cache keys on the whole layout, fabric included.
+    pub fn engine(mut self, engine: &'a MappingEngine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    pub fn cost(mut self, cost: &'a CostModel) -> Self {
+        self.cost = Some(cost);
+        self
+    }
+
+    pub fn config(mut self, cfg: SearchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run one full search session per candidate and merge the fronts.
+    pub fn run(self) -> Result<FabricExploration, ExploreError> {
+        let dfgs = self.dfgs.filter(|d| !d.is_empty()).ok_or(ExploreError::MissingDfgs)?;
+        if self.candidates.is_empty() {
+            return Err(ExploreError::Infeasible("no candidate fabrics".into()));
+        }
+        for spec in &self.candidates {
+            if let Err(e) = spec.validate() {
+                return Err(ExploreError::Infeasible(format!(
+                    "invalid candidate fabric {}: {e}",
+                    spec.describe()
+                )));
+            }
+        }
+        let mut runs = Vec::with_capacity(self.candidates.len());
+        for spec in self.candidates {
+            let mut session = Explorer::new(self.grid)
+                .fabric(spec)
+                .dfgs(dfgs)
+                .config(self.cfg.clone());
+            if let Some(engine) = self.engine {
+                session = session.engine(engine);
+            }
+            if let Some(cost) = self.cost {
+                session = session.cost(cost);
+            }
+            let outcome = session.run();
+            runs.push(FabricRun { spec, descriptor: spec.describe(), outcome });
+        }
+        let front = merge_front(&runs);
+        Ok(FabricExploration { runs, front })
+    }
+}
+
+/// Dominance-filter every candidate's points into one descriptor-tagged
+/// front. Duplicate coordinates keep the earliest candidate's tag.
+fn merge_front(runs: &[FabricRun]) -> Vec<FabricFrontPoint> {
+    let mut front: Vec<FabricFrontPoint> = Vec::new();
+    for run in runs {
+        for point in run.points() {
+            if front.iter().any(|f| {
+                pareto::dominates(&f.point, &point)
+                    || (f.point.ops == point.ops
+                        && f.point.area_um2 == point.area_um2
+                        && f.point.power_uw == point.power_uw)
+            }) {
+                continue;
+            }
+            front.retain(|f| !pareto::dominates(&point, &f.point));
+            front.push(FabricFrontPoint { point, fabric: run.descriptor.clone() });
+        }
+    }
+    front.sort_by(|a, b| {
+        (a.point.ops, a.point.area_um2.to_bits(), a.point.power_uw.to_bits(), a.point.fingerprint)
+            .cmp(&(
+                b.point.ops,
+                b.point.area_um2.to_bits(),
+                b.point.power_uw.to_bits(),
+                b.point.fingerprint,
+            ))
+            .then_with(|| a.fabric.cmp(&b.fabric))
+    });
+    front
+}
+
+/// Scalar-vs-scalar convenience used by reports: true when the sweep
+/// found any point a plain Mesh4 run could not reach.
+pub fn front_leaves_mesh4(exploration: &FabricExploration) -> bool {
+    exploration.front.iter().any(|f| f.fabric != FabricSpec::default().describe())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg;
+    use crate::search::SearchConfig;
+
+    fn tiny_cfg() -> SearchConfig {
+        SearchConfig { l_test: 40, l_fail: 2, gsg_passes: 1, ..SearchConfig::default() }
+    }
+
+    #[test]
+    fn sweep_reports_every_candidate_and_merges_the_front() {
+        let dfgs = [dfg::benchmarks::benchmark("SOB")];
+        let out = FabricExplorer::new(Grid::new(6, 6))
+            .dfgs(&dfgs)
+            .config(tiny_cfg())
+            .run()
+            .unwrap();
+        assert_eq!(out.runs.len(), default_candidates().len());
+        assert_eq!(out.runs[0].descriptor, "mesh4");
+        assert!(out.runs.iter().all(|r| r.outcome.is_ok()), "SOB maps on every default fabric");
+        assert!(!out.front.is_empty());
+        // Every front point's tag names a swept candidate.
+        for p in &out.front {
+            assert!(out.runs.iter().any(|r| r.descriptor == p.fabric), "unknown tag {}", p.fabric);
+        }
+        // The merged front is mutually non-dominated.
+        for a in &out.front {
+            for b in &out.front {
+                assert!(!pareto::dominates(&a.point, &b.point) || a == b);
+            }
+        }
+        assert!(out.best_run().is_some());
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_runs() {
+        let dfgs = [dfg::benchmarks::benchmark("SOB")];
+        let run = || {
+            FabricExplorer::new(Grid::new(6, 6))
+                .dfgs(&dfgs)
+                .config(tiny_cfg())
+                .run()
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.front, b.front);
+        let costs = |e: &FabricExploration| {
+            e.runs
+                .iter()
+                .map(|r| r.outcome.as_ref().map(|r| r.best_cost.to_bits()).ok())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(costs(&a), costs(&b));
+    }
+
+    #[test]
+    fn invalid_and_empty_candidate_sets_are_rejected() {
+        let dfgs = [dfg::benchmarks::benchmark("SOB")];
+        let err = FabricExplorer::new(Grid::new(6, 6))
+            .dfgs(&dfgs)
+            .candidates(Vec::new())
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ExploreError::Infeasible(_)));
+        let bad = FabricSpec { link_cap: 0, ..FabricSpec::default() };
+        let err = FabricExplorer::new(Grid::new(6, 6))
+            .dfgs(&dfgs)
+            .candidates(vec![bad])
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ExploreError::Infeasible(_)));
+    }
+}

@@ -1,0 +1,636 @@
+//! Fabric model: the provisioning-searchable generalisation of
+//! [`crate::cgra::Grid`].
+//!
+//! A [`Fabric`] describes the *interconnect* half of the architecture
+//! the layout search provisions: the cell array (rows × cols, with
+//! optional masked/irregular dead cells), a [`Topology`] (the classic
+//! 4-neighbour mesh, the 8-neighbour diagonal mesh, or express links
+//! that jump a configurable stride), a per-link capacity, and an
+//! explicit I/O *border-side mask* replacing the implicit
+//! kind-by-position rule. It exposes the same `neighbors`/`link`/
+//! `num_links` surface the PathFinder router, placement and `CellSet`
+//! occupancy consume, so the whole mapper runs on a fabric instead of
+//! the fixed mesh.
+//!
+//! ## Compatibility contract
+//!
+//! The default fabric — [`Topology::Mesh4`], link capacity 1, all four
+//! I/O sides enabled, no masked cells — reproduces today's `Grid`
+//! **exactly**: direction indices 0..4 are N, E, S, W in that order,
+//! `link(cell, dir) = cell*4 + dir`, `num_links = num_cells*4`, and
+//! `min_hops` equals the Manhattan distance. Every trace, fingerprint
+//! and table stays byte-identical by default (pinned by the equivalence
+//! tests below and the property test in `rust/tests/properties.rs`).
+//!
+//! Richer topologies append directions *after* the four mesh ones:
+//!
+//! * [`Topology::Mesh8`] ("diagonal"): dirs 4..8 are NE, SE, SW, NW;
+//! * [`Topology::Express`]: dirs 4..8 are N, E, S, W jumps of `stride`
+//!   cells (bypass wires over the mesh, Li et al.-style).
+//!
+//! I/O semantics under the side mask: a border cell on a *disabled*
+//! side stays a border cell but becomes **inert** — its switches still
+//! route, but it hosts no LOAD/STORE (placement skips it and the Mem
+//! capacity precheck counts only active I/O cells). Interior masked
+//! cells are *dead*: `neighbor` never enters or leaves them, so routes
+//! avoid them entirely. Masked cells are a model-level facility
+//! (exercised by unit tests and available to library callers); the CLI
+//! exposes topology, capacity and the I/O mask.
+
+pub mod explore;
+
+use crate::cgra::{CellId, Grid, DIRS};
+use std::sync::Arc;
+
+/// I/O border-side mask bits (north/east/south/west edges of the
+/// border ring). Corners belong to two sides and stay active while
+/// either is enabled.
+pub const SIDE_N: u8 = 1 << 0;
+pub const SIDE_E: u8 = 1 << 1;
+pub const SIDE_S: u8 = 1 << 2;
+pub const SIDE_W: u8 = 1 << 3;
+/// All four sides: the legacy kind-by-position behaviour.
+pub const IO_ALL_SIDES: u8 = SIDE_N | SIDE_E | SIDE_S | SIDE_W;
+
+/// Diagonal direction offsets for [`Topology::Mesh8`], dirs 4..8 in
+/// order NE, SE, SW, NW (clockwise from NE, mirroring the N,E,S,W
+/// clockwise order of dirs 0..4).
+const DIAG: [(i32, i32); 4] = [(-1, 1), (1, 1), (1, -1), (-1, -1)];
+
+/// Interconnect topology of a fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// 4-nearest-neighbour mesh: the paper's T-CGRA interconnect and
+    /// the byte-identical default.
+    Mesh4,
+    /// 8-neighbour mesh ("diagonal"): adds NE/SE/SW/NW links.
+    Mesh8,
+    /// Mesh plus express links jumping `stride` cells along each axis.
+    Express { stride: usize },
+}
+
+impl Topology {
+    /// Outgoing link directions per cell. Dirs 0..4 are always N,E,S,W.
+    pub fn num_dirs(self) -> usize {
+        match self {
+            Topology::Mesh4 => 4,
+            Topology::Mesh8 | Topology::Express { .. } => 8,
+        }
+    }
+
+    /// (row, col) offset of direction `dir`.
+    pub fn offset(self, dir: usize) -> (i32, i32) {
+        if dir < 4 {
+            return DIRS[dir];
+        }
+        match self {
+            Topology::Mesh4 => panic!("Mesh4 has 4 directions, got dir {dir}"),
+            Topology::Mesh8 => DIAG[dir - 4],
+            Topology::Express { stride } => {
+                let (dr, dc) = DIRS[dir - 4];
+                (dr * stride as i32, dc * stride as i32)
+            }
+        }
+    }
+
+    /// Canonical CLI/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Mesh4 => "mesh4",
+            Topology::Mesh8 => "diagonal",
+            Topology::Express { .. } => "express",
+        }
+    }
+
+    /// Parse a CLI/wire/config topology name. `stride` is consumed only
+    /// by `express` (the `--express-stride` flag / `fabric.express_stride`
+    /// key).
+    pub fn parse(name: &str, stride: usize) -> Result<Topology, String> {
+        match name {
+            "mesh4" | "mesh" => Ok(Topology::Mesh4),
+            "diagonal" | "mesh8" => Ok(Topology::Mesh8),
+            "express" => {
+                if stride < 2 {
+                    return Err(format!(
+                        "express stride must be at least 2, got {stride}"
+                    ));
+                }
+                Ok(Topology::Express { stride })
+            }
+            other => Err(format!(
+                "unknown topology '{other}' (expected mesh4, diagonal or express)"
+            )),
+        }
+    }
+}
+
+/// Parse an I/O side mask like `"nesw"`, `"ns"` or `"all"` into side
+/// bits. Order-insensitive; rejects empty masks and unknown sides.
+pub fn parse_io_mask(s: &str) -> Result<u8, String> {
+    if s == "all" {
+        return Ok(IO_ALL_SIDES);
+    }
+    let mut mask = 0u8;
+    for ch in s.chars() {
+        mask |= match ch.to_ascii_lowercase() {
+            'n' => SIDE_N,
+            'e' => SIDE_E,
+            's' => SIDE_S,
+            'w' => SIDE_W,
+            other => return Err(format!("unknown I/O side '{other}' (expected n/e/s/w)")),
+        };
+    }
+    if mask == 0 {
+        return Err("I/O mask cannot be empty (no side would host LOAD/STORE)".into());
+    }
+    Ok(mask)
+}
+
+/// Render an I/O side mask in canonical `nesw` order.
+pub fn io_mask_name(mask: u8) -> String {
+    let mut s = String::new();
+    for (bit, ch) in [(SIDE_N, 'n'), (SIDE_E, 'e'), (SIDE_S, 's'), (SIDE_W, 'w')] {
+        if mask & bit != 0 {
+            s.push(ch);
+        }
+    }
+    s
+}
+
+/// The provisioning knobs of a fabric, without the grid: what travels
+/// on [`crate::service::JobSpec`]s, config files and CLI flags.
+/// `Default` is the byte-identical legacy fabric; [`Self::is_default`]
+/// gates fingerprint/codec participation so pre-fabric specs keep their
+/// fingerprints, store keys and wire bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FabricSpec {
+    pub topology: Topology,
+    /// Values one directed link carries per configuration (the paper's
+    /// fabric is 1).
+    pub link_cap: u8,
+    /// Border sides hosting I/O cells (see [`IO_ALL_SIDES`]).
+    pub io_mask: u8,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        Self { topology: Topology::Mesh4, link_cap: 1, io_mask: IO_ALL_SIDES }
+    }
+}
+
+impl FabricSpec {
+    /// True when building this spec reproduces the legacy grid exactly.
+    pub fn is_default(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Validate the knobs (total: wire decoding routes through this so
+    /// hostile bodies 400 instead of panicking).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.link_cap == 0 {
+            return Err("link capacity must be at least 1".into());
+        }
+        if self.io_mask == 0 || self.io_mask > IO_ALL_SIDES {
+            return Err(format!(
+                "I/O mask must be a non-empty subset of nesw, got {:#06b}",
+                self.io_mask
+            ));
+        }
+        if let Topology::Express { stride } = self.topology {
+            if stride < 2 {
+                return Err(format!("express stride must be at least 2, got {stride}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate on a grid.
+    pub fn build(&self, grid: Grid) -> Fabric {
+        Fabric {
+            grid,
+            topology: self.topology,
+            link_cap: self.link_cap,
+            io_mask: self.io_mask,
+            masked: None,
+        }
+    }
+
+    /// Compact human/wire descriptor, e.g. `mesh4`, `express:3`,
+    /// `diagonal+cap2`, `mesh4+io:ns`. The default renders as `mesh4`.
+    pub fn describe(&self) -> String {
+        let mut s = match self.topology {
+            Topology::Express { stride } => format!("express:{stride}"),
+            t => t.name().to_string(),
+        };
+        if self.link_cap != 1 {
+            s.push_str(&format!("+cap{}", self.link_cap));
+        }
+        if self.io_mask != IO_ALL_SIDES {
+            s.push_str(&format!("+io:{}", io_mask_name(self.io_mask)));
+        }
+        s
+    }
+}
+
+/// A concrete fabric: a grid plus its interconnect provisioning. Cheap
+/// to clone (masked cells are shared); content-compared and
+/// content-hashed.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Fabric {
+    grid: Grid,
+    topology: Topology,
+    link_cap: u8,
+    io_mask: u8,
+    /// Dead cells (sorted, deduped): `neighbor` never enters or leaves
+    /// them. Model-level irregularity; `None` for regular fabrics.
+    masked: Option<Arc<Vec<CellId>>>,
+}
+
+impl Fabric {
+    /// The byte-identical legacy fabric over `grid`.
+    pub fn mesh4(grid: Grid) -> Self {
+        FabricSpec::default().build(grid)
+    }
+
+    /// Build from provisioning knobs.
+    pub fn new(grid: Grid, spec: FabricSpec) -> Self {
+        spec.build(grid)
+    }
+
+    /// Mark cells dead (irregular array). Sorted and deduped so equal
+    /// masked sets compare and hash equal.
+    pub fn with_masked(mut self, cells: &[CellId]) -> Self {
+        let mut v: Vec<CellId> = cells.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        v.retain(|&c| (c as usize) < self.grid.num_cells());
+        self.masked = if v.is_empty() { None } else { Some(Arc::new(v)) };
+        self
+    }
+
+    pub fn grid(&self) -> Grid {
+        self.grid
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    pub fn link_cap(&self) -> usize {
+        self.link_cap as usize
+    }
+
+    pub fn io_mask(&self) -> u8 {
+        self.io_mask
+    }
+
+    /// The provisioning knobs, without the grid.
+    pub fn spec(&self) -> FabricSpec {
+        FabricSpec { topology: self.topology, link_cap: self.link_cap, io_mask: self.io_mask }
+    }
+
+    /// True for the legacy-equivalent fabric (Mesh4, cap 1, all I/O
+    /// sides, no masked cells).
+    pub fn is_default(&self) -> bool {
+        self.spec().is_default() && self.masked.is_none()
+    }
+
+    /// Compact descriptor (see [`FabricSpec::describe`]); masked cells
+    /// append their count.
+    pub fn describe(&self) -> String {
+        let mut s = self.spec().describe();
+        if let Some(m) = &self.masked {
+            s.push_str(&format!("+masked{}", m.len()));
+        }
+        s
+    }
+
+    /// Outgoing link directions per cell (4 or 8).
+    pub fn num_dirs(&self) -> usize {
+        self.topology.num_dirs()
+    }
+
+    pub fn is_masked(&self, cell: CellId) -> bool {
+        self.masked.as_ref().map_or(false, |m| m.binary_search(&cell).is_ok())
+    }
+
+    /// Border cell that actually hosts LOAD/STORE: lies on at least one
+    /// enabled side and is not masked. Border cells on disabled sides
+    /// are *inert* — routing-only.
+    pub fn is_active_io(&self, cell: CellId) -> bool {
+        self.grid.is_io(cell) && !self.is_masked(cell) && self.sides(cell) & self.io_mask != 0
+    }
+
+    /// Border cell whose I/O is disabled by the side mask (or masking):
+    /// still routes, hosts no ops.
+    pub fn is_inert_io(&self, cell: CellId) -> bool {
+        self.grid.is_io(cell) && !self.is_active_io(cell)
+    }
+
+    /// Which border sides a cell lies on (0 for interior cells).
+    fn sides(&self, cell: CellId) -> u8 {
+        let (r, c) = self.grid.coords(cell);
+        let mut s = 0u8;
+        if r == 0 {
+            s |= SIDE_N;
+        }
+        if c == self.grid.cols - 1 {
+            s |= SIDE_E;
+        }
+        if r == self.grid.rows - 1 {
+            s |= SIDE_S;
+        }
+        if c == 0 {
+            s |= SIDE_W;
+        }
+        s
+    }
+
+    /// Active I/O cells in row-major order.
+    pub fn active_io_cells(&self) -> impl Iterator<Item = CellId> + '_ {
+        self.grid.cells().filter(move |&c| self.is_active_io(c))
+    }
+
+    pub fn num_active_io(&self) -> usize {
+        self.active_io_cells().count()
+    }
+
+    /// Neighbour of `cell` in direction `dir`, if the link exists:
+    /// inside the grid and neither endpoint dead.
+    pub fn neighbor(&self, cell: CellId, dir: usize) -> Option<CellId> {
+        if self.is_masked(cell) {
+            return None;
+        }
+        let (r, c) = self.grid.coords(cell);
+        let (dr, dc) = self.topology.offset(dir);
+        let (nr, nc) = (r as i32 + dr, c as i32 + dc);
+        if nr < 0 || nc < 0 || nr >= self.grid.rows as i32 || nc >= self.grid.cols as i32 {
+            return None;
+        }
+        let n = self.grid.cell(nr as usize, nc as usize);
+        if self.is_masked(n) {
+            return None;
+        }
+        Some(n)
+    }
+
+    /// All reachable neighbours, in direction order (mesh dirs first).
+    pub fn neighbors(&self, cell: CellId) -> impl Iterator<Item = CellId> + '_ {
+        (0..self.num_dirs()).filter_map(move |d| self.neighbor(cell, d))
+    }
+
+    /// Directed-link id of the link leaving `cell` in direction `dir`.
+    /// Dense in `[0, num_dirs*num_cells)`; identical to
+    /// [`Grid::link`] for Mesh4.
+    pub fn link(&self, cell: CellId, dir: usize) -> usize {
+        cell as usize * self.num_dirs() + dir
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.grid.num_cells() * self.num_dirs()
+    }
+
+    /// The direction whose link connects `a` to `b`, if adjacent.
+    pub fn direction(&self, a: CellId, b: CellId) -> Option<usize> {
+        (0..self.num_dirs()).find(|&d| self.neighbor(a, d) == Some(b))
+    }
+
+    /// Minimum hop count between two cells on an unobstructed fabric —
+    /// the admissible routing heuristic and placement distance.
+    /// Manhattan on Mesh4, Chebyshev on Mesh8, per-axis optimal
+    /// express/unit mix on Express.
+    pub fn min_hops(&self, a: CellId, b: CellId) -> usize {
+        let (ar, ac) = self.grid.coords(a);
+        let (br, bc) = self.grid.coords(b);
+        let (dr, dc) = (ar.abs_diff(br), ac.abs_diff(bc));
+        match self.topology {
+            Topology::Mesh4 => dr + dc,
+            Topology::Mesh8 => dr.max(dc),
+            Topology::Express { stride } => axis_hops(dr, stride) + axis_hops(dc, stride),
+        }
+    }
+}
+
+/// Fewest hops to cover `d` cells along one axis with unit hops and
+/// `stride`-jump express hops: `min_k (k + |d - k*stride|)`. The
+/// optimum is at `k = d/stride` or one above.
+fn axis_hops(d: usize, stride: usize) -> usize {
+    let k0 = d / stride;
+    let mut best = d;
+    for k in [k0, k0 + 1] {
+        best = best.min(k + d.abs_diff(k * stride));
+    }
+    best
+}
+
+impl std::fmt::Display for Fabric {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.grid, self.describe())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh4_reproduces_grid_links_and_neighbors_exactly() {
+        // the byte-identity cornerstone: every link id, every neighbor,
+        // every iteration order matches the legacy Grid surface
+        for (r, c) in [(3, 3), (4, 7), (6, 6)] {
+            let g = Grid::new(r, c);
+            let f = Fabric::mesh4(g);
+            assert_eq!(f.num_dirs(), 4);
+            assert_eq!(f.num_links(), g.num_links());
+            for cell in g.cells() {
+                for d in 0..4 {
+                    assert_eq!(f.link(cell, d), g.link(cell, d));
+                    assert_eq!(f.neighbor(cell, d), g.neighbor(cell, d));
+                }
+                let fab: Vec<CellId> = f.neighbors(cell).collect();
+                let leg: Vec<CellId> = g.neighbors(cell).collect();
+                assert_eq!(fab, leg, "neighbor iteration order must match");
+                for other in g.cells() {
+                    assert_eq!(f.min_hops(cell, other), g.manhattan(cell, other));
+                }
+                assert_eq!(f.is_active_io(cell), g.is_io(cell));
+            }
+            assert_eq!(f.num_active_io(), g.num_io());
+            assert!(f.is_default());
+        }
+    }
+
+    #[test]
+    fn mesh8_adds_diagonals_after_the_mesh_dirs() {
+        let g = Grid::new(5, 5);
+        let f = FabricSpec { topology: Topology::Mesh8, ..Default::default() }.build(g);
+        assert_eq!(f.num_dirs(), 8);
+        let c = g.cell(2, 2);
+        // dirs 0..4 unchanged
+        assert_eq!(f.neighbor(c, 0), Some(g.cell(1, 2)));
+        assert_eq!(f.neighbor(c, 3), Some(g.cell(2, 1)));
+        // dirs 4..8: NE, SE, SW, NW
+        assert_eq!(f.neighbor(c, 4), Some(g.cell(1, 3)));
+        assert_eq!(f.neighbor(c, 5), Some(g.cell(3, 3)));
+        assert_eq!(f.neighbor(c, 6), Some(g.cell(3, 1)));
+        assert_eq!(f.neighbor(c, 7), Some(g.cell(1, 1)));
+        // corner has 2 mesh + 1 diagonal neighbor
+        assert_eq!(f.neighbors(g.cell(0, 0)).count(), 3);
+        // chebyshev distance
+        assert_eq!(f.min_hops(g.cell(0, 0), g.cell(3, 4)), 4);
+        assert_eq!(f.min_hops(g.cell(1, 1), g.cell(2, 2)), 1);
+        assert!(!f.is_default());
+    }
+
+    #[test]
+    fn express_links_jump_the_stride() {
+        let g = Grid::new(7, 7);
+        let f = FabricSpec { topology: Topology::Express { stride: 3 }, ..Default::default() }
+            .build(g);
+        let c = g.cell(3, 3);
+        assert_eq!(f.neighbor(c, 4), Some(g.cell(0, 3))); // N×3
+        assert_eq!(f.neighbor(c, 5), Some(g.cell(3, 6))); // E×3
+        assert_eq!(f.neighbor(c, 6), Some(g.cell(6, 3))); // S×3
+        assert_eq!(f.neighbor(c, 7), Some(g.cell(3, 0))); // W×3
+        // near the border the jump leaves the grid
+        assert_eq!(f.neighbor(g.cell(1, 1), 4), None);
+        // min_hops mixes express and unit hops optimally per axis
+        assert_eq!(f.min_hops(g.cell(0, 0), g.cell(0, 6)), 2); // 2 express
+        assert_eq!(f.min_hops(g.cell(0, 0), g.cell(0, 4)), 2); // 3+1
+        assert_eq!(f.min_hops(g.cell(0, 0), g.cell(0, 2)), 2); // 1+1 or 3-1
+        assert_eq!(f.min_hops(g.cell(0, 0), g.cell(4, 5)), 5); // (3+1)+(3+1+1)
+        assert_eq!(axis_hops(7, 3), 3); // 3+3+1
+        assert_eq!(axis_hops(0, 3), 0);
+    }
+
+    #[test]
+    fn link_ids_dense_and_distinct_on_eight_dir_fabrics() {
+        let g = Grid::new(3, 3);
+        let f = FabricSpec { topology: Topology::Mesh8, ..Default::default() }.build(g);
+        let mut seen = std::collections::HashSet::new();
+        for c in g.cells() {
+            for d in 0..f.num_dirs() {
+                assert!(seen.insert(f.link(c, d)));
+                assert!(f.link(c, d) < f.num_links());
+            }
+        }
+        assert_eq!(f.num_links(), 9 * 8);
+    }
+
+    #[test]
+    fn io_side_mask_makes_disabled_sides_inert() {
+        let g = Grid::new(5, 6);
+        let f = FabricSpec { io_mask: SIDE_N | SIDE_S, ..Default::default() }.build(g);
+        // top and bottom rows (incl. corners) stay active
+        assert!(f.is_active_io(g.cell(0, 0)));
+        assert!(f.is_active_io(g.cell(0, 3)));
+        assert!(f.is_active_io(g.cell(4, 5)));
+        // east/west edges (non-corner) are inert: route-only
+        assert!(f.is_inert_io(g.cell(2, 0)));
+        assert!(f.is_inert_io(g.cell(1, 5)));
+        assert!(!f.is_active_io(g.cell(2, 0)));
+        // inert cells still route: their links exist
+        assert_eq!(f.neighbor(g.cell(2, 0), 1), Some(g.cell(2, 1)));
+        // 2 full rows of 6
+        assert_eq!(f.num_active_io(), 12);
+        // compute cells are never I/O of any kind
+        assert!(!f.is_active_io(g.cell(2, 2)) && !f.is_inert_io(g.cell(2, 2)));
+    }
+
+    #[test]
+    fn masked_cells_are_dead() {
+        let g = Grid::new(5, 5);
+        let dead = g.cell(2, 2);
+        let f = Fabric::mesh4(g).with_masked(&[dead, dead]); // dedup
+        assert!(f.is_masked(dead));
+        assert!(!f.is_default());
+        // no link enters or leaves a dead cell
+        for d in 0..4 {
+            assert_eq!(f.neighbor(dead, d), None);
+        }
+        assert_eq!(f.neighbor(g.cell(1, 2), 2), None, "S into the dead cell");
+        assert_eq!(f.neighbor(g.cell(2, 1), 1), None, "E into the dead cell");
+        // routes can still pass around it
+        assert_eq!(f.neighbor(g.cell(1, 2), 1), Some(g.cell(1, 3)));
+        // a masked border cell is not active I/O
+        let fb = Fabric::mesh4(g).with_masked(&[g.cell(0, 2)]);
+        assert!(!fb.is_active_io(g.cell(0, 2)));
+        assert!(fb.is_inert_io(g.cell(0, 2)));
+        assert_eq!(fb.num_active_io(), g.num_io() - 1);
+    }
+
+    #[test]
+    fn direction_finds_the_connecting_link() {
+        let g = Grid::new(6, 6);
+        let f = FabricSpec { topology: Topology::Express { stride: 4 }, ..Default::default() }
+            .build(g);
+        let c = g.cell(4, 1);
+        assert_eq!(f.direction(c, g.cell(3, 1)), Some(0));
+        assert_eq!(f.direction(c, g.cell(0, 1)), Some(4)); // express N
+        assert_eq!(f.direction(c, g.cell(4, 5)), Some(5)); // express E
+        assert_eq!(f.direction(c, g.cell(1, 2)), None);
+    }
+
+    #[test]
+    fn spec_validation_and_describe() {
+        assert!(FabricSpec::default().is_default());
+        assert!(FabricSpec::default().validate().is_ok());
+        assert_eq!(FabricSpec::default().describe(), "mesh4");
+
+        let bad_cap = FabricSpec { link_cap: 0, ..Default::default() };
+        assert!(bad_cap.validate().unwrap_err().contains("capacity"));
+        let bad_mask = FabricSpec { io_mask: 0, ..Default::default() };
+        assert!(bad_mask.validate().unwrap_err().contains("I/O mask"));
+        let bad_stride =
+            FabricSpec { topology: Topology::Express { stride: 1 }, ..Default::default() };
+        assert!(bad_stride.validate().unwrap_err().contains("stride"));
+
+        let rich = FabricSpec {
+            topology: Topology::Express { stride: 3 },
+            link_cap: 2,
+            io_mask: SIDE_N | SIDE_S,
+        };
+        assert!(!rich.is_default());
+        assert_eq!(rich.describe(), "express:3+cap2+io:ns");
+        assert_eq!(
+            FabricSpec { topology: Topology::Mesh8, ..Default::default() }.describe(),
+            "diagonal"
+        );
+    }
+
+    #[test]
+    fn topology_and_mask_parsing() {
+        assert_eq!(Topology::parse("mesh4", 0), Ok(Topology::Mesh4));
+        assert_eq!(Topology::parse("diagonal", 0), Ok(Topology::Mesh8));
+        assert_eq!(Topology::parse("mesh8", 0), Ok(Topology::Mesh8));
+        assert_eq!(Topology::parse("express", 3), Ok(Topology::Express { stride: 3 }));
+        assert!(Topology::parse("express", 1).is_err());
+        assert!(Topology::parse("torus", 0).is_err());
+        assert_eq!(Topology::Mesh8.name(), "diagonal");
+
+        assert_eq!(parse_io_mask("all"), Ok(IO_ALL_SIDES));
+        assert_eq!(parse_io_mask("nesw"), Ok(IO_ALL_SIDES));
+        assert_eq!(parse_io_mask("sn"), Ok(SIDE_N | SIDE_S));
+        assert!(parse_io_mask("x").is_err());
+        assert!(parse_io_mask("").is_err());
+        assert_eq!(io_mask_name(SIDE_N | SIDE_S), "ns");
+        assert_eq!(io_mask_name(IO_ALL_SIDES), "nesw");
+    }
+
+    #[test]
+    fn fabric_equality_and_hash_are_content_based() {
+        use std::collections::HashSet;
+        let g = Grid::new(5, 5);
+        let a = Fabric::mesh4(g).with_masked(&[7, 12]);
+        let b = Fabric::mesh4(g).with_masked(&[12, 7]); // order-insensitive
+        assert_eq!(a, b);
+        let mut set = HashSet::new();
+        set.insert(a.clone());
+        assert!(set.contains(&b));
+        assert_ne!(a, Fabric::mesh4(g));
+        assert_ne!(
+            Fabric::mesh4(g),
+            FabricSpec { link_cap: 2, ..Default::default() }.build(g)
+        );
+    }
+}

@@ -67,6 +67,17 @@
 //!   well-formed DAG) and [`dfg::gen`] the seeded random-DFG generator
 //!   whose output is byte-deterministic per seed, feeding the fuzz
 //!   harness and `helex loadgen`.
+//! * [`fabric`] — the interconnect substrate over [`cgra`]: a
+//!   [`fabric::Fabric`] pairs the grid with a provisioned
+//!   [`fabric::Topology`] (Mesh4, Diagonal/Mesh8, Express skip links),
+//!   per-direction link capacity and an I/O border mask, behind the
+//!   `neighbors`/`link`/`num_links` surface the mapper and occupancy
+//!   tables consume. [`fabric::FabricSpec`] is the searchable knob set
+//!   ([`fabric::explore::FabricExplorer`] sweeps it jointly with the
+//!   functional layout search); the default Mesh4 spec reproduces the
+//!   legacy grid path bit-for-bit — link ids, iteration order, traces
+//!   and fingerprints are unchanged unless a fabric is explicitly
+//!   provisioned.
 //! * [`search`] — the paper's contribution behind the `Explorer`
 //!   session API: heatmap initial layout and the two branch-and-bound
 //!   phases (OPSG then GSG), deterministic in-search parallel candidate
@@ -123,6 +134,7 @@ pub mod cgra;
 pub mod coordinator;
 pub mod cost;
 pub mod dfg;
+pub mod fabric;
 pub mod fleet;
 pub mod mapper;
 pub mod metrics;
@@ -137,6 +149,7 @@ pub mod util;
 
 pub use cgra::{Grid, Layout};
 pub use cost::CostModel;
+pub use fabric::{Fabric, FabricSpec, Topology};
 pub use dfg::Dfg;
 pub use mapper::{
     MapFailure, MapOutcome, MapRequest, Mapper, MapperConfig, Mapping, MappingEngine,

@@ -115,11 +115,47 @@ fn build_config(args: &Args) -> ExperimentConfig {
     cfg
 }
 
+/// Apply `--topology/--express-stride/--link-cap/--io-mask` on top of
+/// `fabric` (which already carries any config-file `fabric.*` keys).
+/// Unlike [`build_config`]'s warn-and-default knobs this *errors*: a
+/// mistyped fabric silently falling back to Mesh4 would "succeed" on
+/// the wrong interconnect.
+fn apply_fabric_args(args: &Args, fabric: &mut helex::FabricSpec) -> Result<()> {
+    let stride = match args.get("express-stride") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--express-stride '{v}' must be an integer (>= 2)")
+        })?),
+        None => None,
+    };
+    if let Some(name) = args.get("topology") {
+        let s = stride.unwrap_or(match fabric.topology {
+            helex::Topology::Express { stride } => stride,
+            _ => 2,
+        });
+        fabric.topology = helex::Topology::parse(name, s).map_err(anyhow::Error::msg)?;
+    } else if let (Some(s), helex::Topology::Express { .. }) = (stride, fabric.topology) {
+        fabric.topology = helex::Topology::Express { stride: s };
+    }
+    if let Some(v) = args.get("link-cap") {
+        fabric.link_cap = v
+            .parse::<u64>()
+            .ok()
+            .and_then(|c| u8::try_from(c).ok())
+            .filter(|c| *c >= 1)
+            .ok_or_else(|| anyhow::anyhow!("--link-cap '{v}' must be an integer in 1..=255"))?;
+    }
+    if let Some(mask) = args.get("io-mask") {
+        fabric.io_mask = helex::fabric::parse_io_mask(mask).map_err(anyhow::Error::msg)?;
+    }
+    fabric.validate().map_err(anyhow::Error::msg)
+}
+
 /// Run an experiment suite through the [`ExplorationService`] worker
 /// pool with live multi-job progress lines.
 fn run_suite_cmd(args: &Args, name: &str) -> Result<()> {
     let quick = args.flag("quick") || !args.flag("paper-scale");
-    let cfg = build_config(args);
+    let mut cfg = build_config(args);
+    apply_fabric_args(args, &mut cfg.fabric)?;
     let defs = experiments::find(name)?;
     let service = ExplorationService::new(ServiceConfig {
         jobs: cfg.jobs,
@@ -508,7 +544,8 @@ fn main() -> Result<()> {
             if let Some(suite_name) = args.get("batch") {
                 // a whole experiment suite as ONE fleet submission: every
                 // spec the suite would run locally, under one batch id
-                let cfg = build_config(&args);
+                let mut cfg = build_config(&args);
+                apply_fabric_args(&args, &mut cfg.fabric)?;
                 let quick = !args.flag("paper-scale");
                 let defs = experiments::find(suite_name)?;
                 let mut specs = Vec::new();
@@ -576,6 +613,7 @@ fn main() -> Result<()> {
                 "pareto" => spec.objective = helex::Objective::Pareto,
                 _ => {}
             }
+            apply_fabric_args(&args, &mut spec.fabric)?;
             spec.search.l_test = args
                 .get("l-test")
                 .and_then(|v| v.parse().ok())
@@ -628,7 +666,9 @@ fn main() -> Result<()> {
         "explore" => {
             let dfgs = load_dfgs(args.get_or("dfgs", "S4"))?;
             let (r, c) = args.size("size").context("--size RxC required")?;
-            let mut co = Coordinator::new(build_config(&args));
+            let mut cfg = build_config(&args);
+            apply_fabric_args(&args, &mut cfg.fabric)?;
+            let mut co = Coordinator::new(cfg);
             // live progress from the Explorer event stream; --trace-out
             // additionally records every event for the determinism dump
             let trace = args.flag("trace") || co.cfg.verbose;
@@ -802,7 +842,9 @@ fn main() -> Result<()> {
             let dfgs = load_dfgs(args.get_or("set", "S4"))?;
             let (r0, c0) = parse_size(args.get_or("from", "7x7")).context("--from")?;
             let (r1, c1) = parse_size(args.get_or("to", "10x10")).context("--to")?;
-            let mut co = Coordinator::new(build_config(&args));
+            let mut cfg = build_config(&args);
+            apply_fabric_args(&args, &mut cfg.fabric)?;
+            let mut co = Coordinator::new(cfg);
             let mut best: Option<((usize, usize), f64)> = None;
             for r in r0..=r1 {
                 for c in c0..=c1 {
@@ -872,6 +914,7 @@ USAGE:
                                              priorities, replica health/drain, shared result store
   helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB|graph.json] [--size RxC] [--l-test N]
                [--objective area|power|pareto] [--seed N] [--search-threads N] [--label NAME] [--json]
+               [--topology mesh4|diagonal|express] [--express-stride N] [--link-cap N] [--io-mask nesw]
                                              submit one job over HTTP and wait for the result
   helex submit --batch <suite> [--addr HOST:PORT] [--priority 0..9] [--client NAME]
                [--l-test N] [--paper-scale]
@@ -887,13 +930,14 @@ USAGE:
   helex dfg export [NAMES|all] [--out DIR] [--format json|dot]
                                              write benchmarks as interchange files (corpus/)
   helex dfg convert --in FILE --out FILE     convert one graph between .json and .dot
-  helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|all>
+  helex exp <fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|table4|table5|table6|table8|fabric_gaps|all>
             [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
-            [--objective op_count|pareto] [--subgraph-seed]
+            [--objective op_count|pareto] [--subgraph-seed] [--topology T] [--link-cap N] [--io-mask M]
   helex explore --dfgs BIL,SOB|S1..S6|graph.json --size RxC [--show] [--trace] [--trace-out FILE]
                 [--search-threads N] [--no-xla] [--objective op_count|pareto] [--subgraph-seed]
                 [--generations N] [--population N]
+                [--topology mesh4|diagonal|express] [--express-stride N] [--link-cap N] [--io-mask nesw]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10
@@ -906,6 +950,14 @@ USAGE:
   parallelism, clamped so running-jobs x search-threads <= cores (a
   lone job gets the whole machine). Output is byte-identical for any
   combination: per-job seeds derive from job content, and in-search
-  parallelism uses a deterministic reduction."
+  parallelism uses a deterministic reduction.
+
+  Fabric provisioning (submit/explore/exp/sweep): --topology picks the
+  interconnect (mesh4 is the paper's fabric and the byte-identical
+  default; diagonal adds the 4 diagonal neighbours; express adds
+  stride-N row/column skip links, stride via --express-stride, >= 2),
+  --link-cap N lets one directed link carry N values (default 1), and
+  --io-mask restricts LOAD/STORE cells to a border subset (any of
+  n/e/s/w, e.g. 'ns'; default all four sides)."
     );
 }

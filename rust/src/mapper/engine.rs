@@ -119,7 +119,8 @@ impl PlacementStrategy for GreedyTopoPlacer {
 }
 
 /// The default router: negotiated-congestion (PathFinder-style) A* over
-/// the 4NN switch network (see [`route::route`]).
+/// the layout's provisioned switch network — the 4NN mesh by default
+/// (see [`route::route`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PathFinderRouter;
 
@@ -522,11 +523,12 @@ impl MappingEngine {
     fn precheck(dfg: &Dfg, layout: &Layout) -> Option<MapFailure> {
         let demand = dfg.group_histogram();
         let mem = demand[OpGroup::Mem.index()];
-        if mem > layout.grid.num_io() {
+        let io_capacity = layout.fabric().num_active_io();
+        if mem > io_capacity {
             return Some(MapFailure::UnsupportedGroup {
                 group: OpGroup::Mem,
                 demand: mem,
-                capacity: layout.grid.num_io(),
+                capacity: io_capacity,
             });
         }
         for g in COMPUTE_GROUPS {
@@ -616,15 +618,17 @@ impl MappingEngine {
     }
 
     /// Structural guard for the warm path: the witness must describe
-    /// this DFG on this grid — lengths match, every cell is in range and
-    /// of the right kind for its node, and every path connects its
-    /// endpoints through grid-adjacent hops. A witness from a
-    /// different-shaped grid fails here and falls back to cold mapping
+    /// this DFG on this grid and fabric — lengths match, every cell is
+    /// in range and of the right kind for its node, and every path
+    /// connects its endpoints through fabric-adjacent hops. A witness
+    /// from a different-shaped grid (or one using links this fabric
+    /// does not provision) fails here and falls back to cold mapping
     /// (support and link capacity are covered elsewhere: displaced-node
     /// computation re-checks support, and adjacency-valid paths reuse
     /// the exact `(cell, dir)` link ids the witness already satisfied).
     fn witness_matches_grid(witness: &Mapping, dfg: &Dfg, layout: &Layout) -> bool {
         let g = &layout.grid;
+        let f = layout.fabric();
         let num_cells = g.num_cells();
         if witness.node_cell.len() != dfg.num_nodes()
             || witness.edge_paths.len() != dfg.num_edges()
@@ -635,7 +639,11 @@ impl MappingEngine {
         }
         for (n, op) in dfg.nodes.iter().enumerate() {
             let c = witness.node_cell[n];
-            if op.is_memory() != g.is_io(c) {
+            if op.is_memory() {
+                if !f.is_active_io(c) {
+                    return false;
+                }
+            } else if g.is_io(c) {
                 return false;
             }
         }
@@ -644,7 +652,7 @@ impl MappingEngine {
             if path.first() != Some(&witness.node_cell[s as usize])
                 || path.last() != Some(&witness.node_cell[d as usize])
                 || path.iter().any(|&c| c as usize >= num_cells)
-                || path.windows(2).any(|w| g.manhattan(w[0], w[1]) != 1)
+                || path.windows(2).any(|w| f.direction(w[0], w[1]).is_none())
             {
                 return false;
             }

@@ -170,8 +170,12 @@ impl Mapping {
     }
 
     /// Structural validation against a DFG + layout; returns violations.
+    /// Adjacency and link capacity follow the layout's
+    /// [`crate::fabric::Fabric`] (the legacy 4NN mesh by default).
     pub fn validate(&self, dfg: &Dfg, layout: &Layout) -> Vec<String> {
         let g = &layout.grid;
+        let f = layout.fabric();
+        let cap = f.link_cap();
         let mut errs = Vec::new();
         if self.node_cell.len() != dfg.num_nodes() {
             errs.push("node_cell length mismatch".into());
@@ -198,6 +202,8 @@ impl Mapping {
             if op.is_memory() {
                 if !g.is_io(c) {
                     errs.push(format!("mem node {n} on non-IO cell {c}"));
+                } else if !f.is_active_io(c) {
+                    errs.push(format!("mem node {n} on inactive IO cell {c}"));
                 }
             } else {
                 if !g.is_compute(c) {
@@ -220,25 +226,24 @@ impl Mapping {
                 errs.push(format!("edge {i} path endpoints wrong"));
             }
             for w in path.windows(2) {
-                if g.manhattan(w[0], w[1]) != 1 {
+                if f.direction(w[0], w[1]).is_none() {
                     errs.push(format!("edge {i} has non-adjacent hop {}->{}", w[0], w[1]));
                 }
             }
         }
-        // 4. link capacity: distinct source nodes per directed link <= 1
+        // 4. link capacity: distinct source nodes per directed link must
+        // stay within the fabric's capacity (1 on the legacy mesh)
         let mut link_srcs: std::collections::HashMap<usize, std::collections::HashSet<u32>> =
             std::collections::HashMap::new();
         for (i, &(s, _)) in dfg.edges.iter().enumerate() {
             for w in self.edge_paths[i].windows(2) {
-                for dir in 0..4 {
-                    if g.neighbor(w[0], dir) == Some(w[1]) {
-                        link_srcs.entry(g.link(w[0], dir)).or_default().insert(s);
-                    }
+                if let Some(dir) = f.direction(w[0], w[1]) {
+                    link_srcs.entry(f.link(w[0], dir)).or_default().insert(s);
                 }
             }
         }
         for (link, srcs) in link_srcs {
-            if srcs.len() > 1 {
+            if srcs.len() > cap {
                 errs.push(format!("link {link} carries {} distinct values", srcs.len()));
             }
         }

@@ -10,24 +10,33 @@ use crate::dfg::Dfg;
 use crate::ops::Op;
 use crate::util::rng::Rng;
 
-/// Border cells in clockwise order starting at the top-left corner.
+/// Active I/O border cells in clockwise order starting at the top-left
+/// corner. Border cells on fabric-disabled sides (I/O mask) or masked
+/// out entirely are skipped — on the default fabric this is every
+/// border cell, exactly as before.
 pub fn border_clockwise(layout: &Layout) -> Vec<CellId> {
     let g = &layout.grid;
+    let f = layout.fabric();
     let (rows, cols) = (g.rows, g.cols);
-    let mut out = Vec::with_capacity(g.num_io());
+    let mut out = Vec::with_capacity(f.num_active_io());
+    let mut push = |cell: CellId| {
+        if f.is_active_io(cell) {
+            out.push(cell);
+        }
+    };
     for c in 0..cols {
-        out.push(g.cell(0, c));
+        push(g.cell(0, c));
     }
     for r in 1..rows {
-        out.push(g.cell(r, cols - 1));
+        push(g.cell(r, cols - 1));
     }
     for c in (0..cols - 1).rev() {
-        out.push(g.cell(rows - 1, c));
+        push(g.cell(rows - 1, c));
     }
     for r in (1..rows - 1).rev() {
-        out.push(g.cell(r, 0));
+        push(g.cell(r, 0));
     }
-    debug_assert_eq!(out.len(), g.num_io());
+    debug_assert_eq!(out.len(), f.num_active_io());
     out
 }
 
@@ -40,6 +49,7 @@ pub fn place(
     rng: &mut Rng,
 ) -> Option<Vec<CellId>> {
     let g = &layout.grid;
+    let f = layout.fabric();
     let n = dfg.num_nodes();
     let mut cell_of = vec![u16::MAX; n];
     let mut occupied = vec![false; g.num_cells()];
@@ -54,6 +64,9 @@ pub fn place(
     let border = border_clockwise(layout);
     let loads: Vec<usize> = (0..n).filter(|&i| dfg.nodes[i] == Op::Load).collect();
     if !loads.is_empty() {
+        if border.is_empty() {
+            return None; // every I/O side disabled or masked away
+        }
         let rot = rng.below(border.len());
         let stride = border.len() as f64 / loads.len() as f64;
         for (k, &ld) in loads.iter().enumerate() {
@@ -94,14 +107,14 @@ pub fn place(
             for &p in &preds[u] {
                 let pc = cell_of[p as usize];
                 if pc != u16::MAX {
-                    score += g.manhattan(cand, pc) as f64;
+                    score += f.min_hops(cand, pc) as f64;
                     have_pred = true;
                 }
             }
             if !have_pred {
                 // root-ish node: bias toward the border side where loads
                 // sit lightly (distance to center as mild repulsion)
-                score = g.manhattan(cand, center) as f64 * 0.25;
+                score = f.min_hops(cand, center) as f64 * 0.25;
             }
             // deterministic jitter to diversify attempts
             score += rng.f64() * 0.01;
@@ -125,7 +138,7 @@ pub fn place(
             if occupied[cand as usize] {
                 continue;
             }
-            let d = pc.map_or(0, |p| g.manhattan(cand, p));
+            let d = pc.map_or(0, |p| f.min_hops(cand, p));
             if best.map_or(true, |(bd, bc)| d < bd || (d == bd && cand < bc)) {
                 best = Some((d, cand));
             }
@@ -157,6 +170,7 @@ pub fn replace_displaced(
     occupied: &mut [bool],
 ) -> bool {
     let g = &layout.grid;
+    let f = layout.fabric();
     let preds = dfg.preds();
     let succs = dfg.succs();
     let mut pending = vec![false; dfg.num_nodes()];
@@ -182,13 +196,13 @@ pub fn replace_displaced(
             let mut anchors = 0usize;
             for &v in preds[u].iter().chain(succs[u].iter()) {
                 if !pending[v as usize] {
-                    score += g.manhattan(cand, cell_of[v as usize]) as f64;
+                    score += f.min_hops(cand, cell_of[v as usize]) as f64;
                     anchors += 1;
                 }
             }
             if anchors == 0 {
                 // no fixed neighbour yet: stay close to the old spot
-                score = g.manhattan(cand, old) as f64;
+                score = f.min_hops(cand, old) as f64;
             }
             if best.map_or(true, |(bs, _)| score < bs) {
                 best = Some((score, cand));
@@ -221,6 +235,23 @@ mod tests {
         for c in &b {
             assert!(l.grid.is_io(*c));
         }
+    }
+
+    #[test]
+    fn border_clockwise_respects_the_io_mask() {
+        use crate::fabric::{Fabric, FabricSpec, SIDE_N, SIDE_S};
+        let spec = FabricSpec { io_mask: SIDE_N | SIDE_S, ..FabricSpec::default() };
+        let l = Layout::full_on(Fabric::new(Grid::new(5, 7), spec), GroupSet::all_compute());
+        let b = border_clockwise(&l);
+        assert_eq!(b.len(), l.fabric().num_active_io());
+        for &c in &b {
+            let r = c as usize / l.grid.cols;
+            assert!(r == 0 || r == l.grid.rows - 1, "cell {c} not on an enabled side");
+        }
+        // disabled-side cells are gone but the full-mask count is intact
+        let full = border_clockwise(&Layout::full(Grid::new(5, 7), GroupSet::all_compute()));
+        assert!(b.len() < full.len());
+        assert_eq!(full.len(), Grid::new(5, 7).num_io());
     }
 
     #[test]

@@ -1,24 +1,29 @@
-//! Negotiated-congestion routing over the 4NN switch network.
+//! Negotiated-congestion routing over the layout's switch network.
 //!
 //! PathFinder-style: every routing round rips up all paths and re-routes
 //! each edge by A* search, where a link's cost is
-//! `base + history + present_penalty * overuse`. Links carry one value
-//! stream, but edges with the same source share links for free (fan-out
-//! of the same value). History accumulates on overused links between
-//! rounds, pushing later rounds around persistent congestion; negotiation
-//! exits early when total overuse stops improving.
+//! `base + history + present_penalty * overuse`. The network is whatever
+//! the layout's [`crate::fabric::Fabric`] provisions — the legacy 4NN
+//! mesh by default, optionally with diagonal or express links and a
+//! per-link capacity above one. A link carries `link_cap` distinct value
+//! streams before counting as overused, and edges with the same source
+//! share links for free (fan-out of the same value). History accumulates
+//! on overused links between rounds, pushing later rounds around
+//! persistent congestion; negotiation exits early when total overuse
+//! stops improving.
 //!
 //! If congestion survives, the most-overused link's adjacent occupied
 //! compute cell is reported as the `hot_cell` so the driver can apply
 //! reserve-on-demand.
 //!
-//! Perf notes (EXPERIMENTS.md §Perf): the A* heuristic is the full
-//! manhattan distance when the edge's source drives no links yet (every
+//! Perf notes (EXPERIMENTS.md §Perf): the A* heuristic is the fabric's
+//! minimum hop count when the edge's source drives no links yet (every
 //! remaining hop then costs ≥ 1), and the 0.01-reuse floor otherwise —
 //! both admissible. Distance/parent arrays are reused across calls via
 //! generation stamps instead of reallocation.
 
 use crate::cgra::{CellId, Layout};
+use crate::fabric::Fabric;
 use crate::dfg::Dfg;
 use crate::mapper::MapperConfig;
 use std::cmp::Ordering;
@@ -69,8 +74,10 @@ struct LinkUse {
 }
 
 impl LinkUse {
-    fn overuse(&self) -> usize {
-        self.srcs.len().saturating_sub(1)
+    /// Streams beyond the link's capacity (`cap` distinct values ride
+    /// for free; the legacy mesh has `cap == 1`).
+    fn overuse(&self, cap: usize) -> usize {
+        self.srcs.len().saturating_sub(cap)
     }
     fn has(&self, s: u32) -> bool {
         self.srcs.contains(&s)
@@ -126,7 +133,9 @@ pub fn route(
     cfg: &MapperConfig,
 ) -> RouteOutcome {
     let g = &layout.grid;
-    let nlinks = g.num_links();
+    let f = layout.fabric();
+    let nlinks = f.num_links();
+    let cap = f.link_cap();
     let mut history = vec![0.0f64; nlinks];
 
     // Route longer edges first: they have fewer detour options.
@@ -134,7 +143,7 @@ pub fn route(
     order.sort_by_key(|&i| {
         let (s, d) = dfg.edges[i];
         std::cmp::Reverse(
-            g.manhattan(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
+            f.min_hops(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
         )
     });
 
@@ -142,7 +151,7 @@ pub fn route(
     let mut last_usage: Vec<LinkUse> = vec![LinkUse::default(); nlinks];
     let mut buffers = AStarBuffers::new(g.num_cells());
     // links-per-source count this round: a source with zero links admits
-    // the strong (manhattan) heuristic.
+    // the strong (min-hops) heuristic.
     let mut src_links: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
     // early-exit when negotiation stalls: if total overuse has not
     // improved for `stall_limit` rounds, more rounds will not help and
@@ -159,7 +168,7 @@ pub fn route(
             let (src, dst) = (placement[sn as usize], placement[dn as usize]);
             let strong_heuristic = src_links.get(&sn).copied().unwrap_or(0) == 0;
             let path = astar(
-                g,
+                f,
                 src,
                 dst,
                 sn,
@@ -170,23 +179,23 @@ pub fn route(
                 &mut buffers,
             );
             for w in path.windows(2) {
-                let dir = direction(g, w[0], w[1]);
-                usage[g.link(w[0], dir)].add(sn);
+                let dir = direction(f, w[0], w[1]);
+                usage[f.link(w[0], dir)].add(sn);
             }
             *src_links.entry(sn).or_insert(0) += path.len().saturating_sub(1) as u32;
             paths[ei] = path;
         }
         // converged?
         let over: Vec<usize> =
-            (0..nlinks).filter(|&l| usage[l].overuse() > 0).collect();
+            (0..nlinks).filter(|&l| usage[l].overuse(cap) > 0).collect();
         if over.is_empty() {
             return RouteOutcome::Routed(paths);
         }
         // accumulate history on overused links
         let mut total_overuse = 0;
         for &l in &over {
-            history[l] += cfg.hist_increment * usage[l].overuse() as f64;
-            total_overuse += usage[l].overuse();
+            history[l] += cfg.hist_increment * usage[l].overuse(cap) as f64;
+            total_overuse += usage[l].overuse(cap);
         }
         last_usage = usage;
         if total_overuse < best_overuse {
@@ -203,20 +212,21 @@ pub fn route(
     // Pick the hottest link and suggest reserving an adjacent occupied
     // compute cell (RodMap's reserve-on-demand trigger).
     let mut hot_links: Vec<usize> =
-        (0..nlinks).filter(|&l| last_usage[l].overuse() > 0).collect();
+        (0..nlinks).filter(|&l| last_usage[l].overuse(cap) > 0).collect();
     // hottest first; ties resolve to the highest link id (same pick as
     // the previous `max_by_key`, which kept the last maximal element)
-    hot_links
-        .sort_by_key(|&l| (std::cmp::Reverse(last_usage[l].overuse()), std::cmp::Reverse(l)));
+    hot_links.sort_by_key(|&l| {
+        (std::cmp::Reverse(last_usage[l].overuse(cap)), std::cmp::Reverse(l))
+    });
     let hottest = hot_links.first().copied().unwrap_or(0);
-    let cell = (hottest / 4) as CellId;
-    let dir = hottest % 4;
+    let cell = (hottest / f.num_dirs()) as CellId;
+    let dir = hottest % f.num_dirs();
     let occupied: Vec<CellId> = placement.to_vec();
-    let candidates = [Some(cell), g.neighbor(cell, dir)];
+    let candidates = [Some(cell), f.neighbor(cell, dir)];
     let hot_cell = candidates
         .into_iter()
         .flatten()
-        .chain(g.neighbors(cell))
+        .chain(f.neighbors(cell))
         .find(|&c| g.is_compute(c) && occupied.contains(&c))
         .unwrap_or(cell);
     RouteOutcome::Congested { hot_cell, hot_links, overuse: best_overuse }
@@ -239,7 +249,9 @@ pub fn route_partial(
     cfg: &MapperConfig,
 ) -> Option<Vec<Vec<CellId>>> {
     let g = &layout.grid;
-    let nlinks = g.num_links();
+    let f = layout.fabric();
+    let nlinks = f.num_links();
+    let cap = f.link_cap();
     let mut affected_mask = vec![false; dfg.edges.len()];
     for &ei in affected {
         affected_mask[ei] = true;
@@ -254,8 +266,8 @@ pub fn route_partial(
             continue;
         }
         for w in fixed_paths[ei].windows(2) {
-            let dir = direction(g, w[0], w[1]);
-            fixed_usage[g.link(w[0], dir)].add(s);
+            let dir = direction(f, w[0], w[1]);
+            fixed_usage[f.link(w[0], dir)].add(s);
         }
         *fixed_src_links.entry(s).or_insert(0) +=
             fixed_paths[ei].len().saturating_sub(1) as u32;
@@ -266,7 +278,7 @@ pub fn route_partial(
     order.sort_by_key(|&i| {
         let (s, d) = dfg.edges[i];
         std::cmp::Reverse(
-            g.manhattan(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
+            f.min_hops(placement[s as usize], placement[d as usize]) as u32 * 1000 + i as u32,
         )
     });
 
@@ -285,7 +297,7 @@ pub fn route_partial(
             let (src, dst) = (placement[sn as usize], placement[dn as usize]);
             let strong_heuristic = src_links.get(&sn).copied().unwrap_or(0) == 0;
             let path = astar(
-                g,
+                f,
                 src,
                 dst,
                 sn,
@@ -296,15 +308,15 @@ pub fn route_partial(
                 &mut buffers,
             );
             for w in path.windows(2) {
-                let dir = direction(g, w[0], w[1]);
-                usage[g.link(w[0], dir)].add(sn);
+                let dir = direction(f, w[0], w[1]);
+                usage[f.link(w[0], dir)].add(sn);
             }
             *src_links.entry(sn).or_insert(0) += path.len().saturating_sub(1) as u32;
             paths[ei] = path;
         }
         let mut total_overuse = 0;
         for l in 0..nlinks {
-            let o = usage[l].overuse();
+            let o = usage[l].overuse(cap);
             if o > 0 {
                 history[l] += cfg.hist_increment * o as f64;
                 total_overuse += o;
@@ -326,23 +338,21 @@ pub fn route_partial(
     None
 }
 
-/// Direction index (0..4) such that `g.neighbor(a, dir) == b`.
-fn direction(g: &crate::cgra::Grid, a: CellId, b: CellId) -> usize {
-    (0..4)
-        .find(|&d| g.neighbor(a, d) == Some(b))
-        .expect("cells must be adjacent")
+/// Direction index such that `f.neighbor(a, dir) == b`.
+fn direction(f: &Fabric, a: CellId, b: CellId) -> usize {
+    f.direction(a, b).expect("cells must be adjacent")
 }
 
 /// A* from `src` to `dst` for the value produced by node `src_node`.
 ///
-/// Heuristic: `manhattan` when the source drives no links yet this round
-/// (every remaining step costs at least the base 1.0), else
-/// `0.01 * manhattan` (a route could in principle ride reused links the
-/// whole way at the reuse floor). Both are admissible, so paths are
-/// optimal under the current penalty landscape.
+/// Heuristic: the fabric's minimum hop count when the source drives no
+/// links yet this round (every remaining step costs at least the base
+/// 1.0), else `0.01 * min_hops` (a route could in principle ride reused
+/// links the whole way at the reuse floor). Both are admissible, so
+/// paths are optimal under the current penalty landscape.
 #[allow(clippy::too_many_arguments)]
 fn astar(
-    g: &crate::cgra::Grid,
+    f: &Fabric,
     src: CellId,
     dst: CellId,
     src_node: u32,
@@ -353,7 +363,8 @@ fn astar(
     buf: &mut AStarBuffers,
 ) -> Vec<CellId> {
     let h_scale = if strong_heuristic { 0.999 } else { 0.01 };
-    let h = |c: CellId| g.manhattan(c, dst) as f64 * h_scale;
+    let h = |c: CellId| f.min_hops(c, dst) as f64 * h_scale;
+    let free_streams = f.link_cap().saturating_sub(1);
     buf.begin();
     let mut heap = BinaryHeap::with_capacity(64);
     buf.set(src as usize, 0.0, src);
@@ -365,16 +376,18 @@ fn astar(
         if cost > buf.get_dist(cell as usize) {
             continue;
         }
-        for d in 0..4 {
-            let Some(next) = g.neighbor(cell, d) else { continue };
-            let link = g.link(cell, d);
+        for d in 0..f.num_dirs() {
+            let Some(next) = f.neighbor(cell, d) else { continue };
+            let link = f.link(cell, d);
             let u = &usage[link];
             // same-source reuse is nearly free (fan-out broadcast);
-            // otherwise pay base + congestion penalties.
+            // below-capacity sharing pays no present penalty; otherwise
+            // pay base + congestion penalties.
             let step = if u.has(src_node) {
                 0.01
             } else {
-                1.0 + history[link] + cfg.present_penalty * u.srcs.len() as f64
+                1.0 + history[link]
+                    + cfg.present_penalty * u.srcs.len().saturating_sub(free_streams) as f64
             };
             let nc = cost + step;
             if nc < buf.get_dist(next as usize) {
@@ -479,14 +492,15 @@ mod tests {
     #[test]
     fn astar_finds_shortest_path_uncongested() {
         let g = Grid::new(8, 8);
+        let f = Fabric::mesh4(g);
         let mut buf = AStarBuffers::new(g.num_cells());
-        let usage = vec![LinkUse::default(); g.num_links()];
-        let history = vec![0.0; g.num_links()];
+        let usage = vec![LinkUse::default(); f.num_links()];
+        let history = vec![0.0; f.num_links()];
         let cfg = MapperConfig::default();
         for (a, b) in [((1, 1), (6, 6)), ((0, 0), (7, 3)), ((4, 4), (4, 4))] {
             let src = g.cell(a.0, a.1);
             let dst = g.cell(b.0, b.1);
-            let p = astar(&g, src, dst, 0, true, &usage, &history, &cfg, &mut buf);
+            let p = astar(&f, src, dst, 0, true, &usage, &history, &cfg, &mut buf);
             assert_eq!(p.len(), g.manhattan(src, dst) + 1, "{a:?}->{b:?}");
         }
     }
@@ -494,12 +508,13 @@ mod tests {
     #[test]
     fn buffers_reuse_across_generations() {
         let g = Grid::new(5, 5);
+        let f = Fabric::mesh4(g);
         let mut buf = AStarBuffers::new(g.num_cells());
-        let usage = vec![LinkUse::default(); g.num_links()];
-        let history = vec![0.0; g.num_links()];
+        let usage = vec![LinkUse::default(); f.num_links()];
+        let history = vec![0.0; f.num_links()];
         let cfg = MapperConfig::default();
-        let p1 = astar(&g, g.cell(0, 0), g.cell(4, 4), 0, true, &usage, &history, &cfg, &mut buf);
-        let p2 = astar(&g, g.cell(4, 0), g.cell(0, 4), 1, true, &usage, &history, &cfg, &mut buf);
+        let p1 = astar(&f, g.cell(0, 0), g.cell(4, 4), 0, true, &usage, &history, &cfg, &mut buf);
+        let p2 = astar(&f, g.cell(4, 0), g.cell(0, 4), 1, true, &usage, &history, &cfg, &mut buf);
         assert_eq!(p1.len(), 9);
         assert_eq!(p2.len(), 9);
     }
@@ -507,8 +522,9 @@ mod tests {
     #[test]
     fn direction_helper() {
         let g = Grid::new(4, 4);
-        assert_eq!(direction(&g, g.cell(1, 1), g.cell(0, 1)), 0);
-        assert_eq!(direction(&g, g.cell(1, 1), g.cell(1, 2)), 1);
+        let f = Fabric::mesh4(g);
+        assert_eq!(direction(&f, g.cell(1, 1), g.cell(0, 1)), 0);
+        assert_eq!(direction(&f, g.cell(1, 1), g.cell(1, 2)), 1);
     }
 
     #[test]
@@ -624,6 +640,77 @@ mod tests {
                 assert!(overuse > 0);
                 assert!(hot_links.iter().all(|&l| l < g.num_links()));
             }
+        }
+    }
+
+    /// The jam DFG and its placement on a given fabric (see
+    /// `congested_outcome_reports_hot_links` for why Mesh4 congests).
+    fn jam_on(fabric: crate::fabric::Fabric) -> (Dfg, Layout, Vec<CellId>) {
+        let d = Dfg::new(
+            "jam",
+            vec![
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+            ],
+            vec![(0, 4), (1, 5), (2, 6), (3, 7), (4, 8), (5, 9), (6, 10), (7, 11)],
+        );
+        let l = Layout::full_on(fabric, GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![
+            g.cell(0, 0),
+            g.cell(0, 1),
+            g.cell(0, 2),
+            g.cell(0, 3),
+            g.cell(1, 4),
+            g.cell(1, 5),
+            g.cell(1, 6),
+            g.cell(1, 7),
+            g.cell(2, 4),
+            g.cell(2, 5),
+            g.cell(2, 6),
+            g.cell(2, 7),
+        ];
+        (d, l, p)
+    }
+
+    #[test]
+    fn link_capacity_two_clears_the_jam() {
+        use crate::fabric::FabricSpec;
+        let spec = FabricSpec { link_cap: 2, ..FabricSpec::default() };
+        let (d, l, p) = jam_on(Fabric::new(Grid::new(3, 9), spec));
+        let cfg = MapperConfig { route_iters: 3, ..Default::default() };
+        match route(&d, &l, &p, &cfg) {
+            RouteOutcome::Routed(paths) => {
+                let m = crate::mapper::Mapping { node_cell: p, edge_paths: paths, reserved: vec![] };
+                assert!(m.validate(&d, &l).is_empty());
+            }
+            RouteOutcome::Congested { .. } => panic!("a 2-capacity cut carries 6 streams"),
+        }
+    }
+
+    #[test]
+    fn express_links_clear_the_jam() {
+        use crate::fabric::{FabricSpec, Topology};
+        let spec =
+            FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() };
+        let (d, l, p) = jam_on(Fabric::new(Grid::new(3, 9), spec));
+        let cfg = MapperConfig { route_iters: 3, ..Default::default() };
+        match route(&d, &l, &p, &cfg) {
+            RouteOutcome::Routed(paths) => {
+                let m = crate::mapper::Mapping { node_cell: p, edge_paths: paths, reserved: vec![] };
+                assert!(m.validate(&d, &l).is_empty());
+            }
+            RouteOutcome::Congested { .. } => panic!("express overlay doubles the cut"),
         }
     }
 }

@@ -416,6 +416,9 @@ impl std::error::Error for ExploreError {}
 /// heatmap → OPSG → GSG pipeline ([`Self::default_phases`]).
 pub struct Explorer<'a> {
     grid: Grid,
+    /// Interconnect provisioning for the session's layouts; defaults to
+    /// the byte-identical legacy Mesh4 fabric.
+    fabric: crate::fabric::FabricSpec,
     dfgs: Option<&'a [Dfg]>,
     engine: Option<&'a MappingEngine>,
     /// Engine built from a legacy [`Self::mapper`] call (owned so the
@@ -433,6 +436,7 @@ impl<'a> Explorer<'a> {
     pub fn new(grid: Grid) -> Self {
         Self {
             grid,
+            fabric: crate::fabric::FabricSpec::default(),
             dfgs: None,
             engine: None,
             owned_engine: None,
@@ -448,6 +452,14 @@ impl<'a> Explorer<'a> {
     /// The DFG set to optimise the layout for (required).
     pub fn dfgs(mut self, dfgs: &'a [Dfg]) -> Self {
         self.dfgs = Some(dfgs);
+        self
+    }
+
+    /// Provision the session's fabric (topology, link capacity, I/O
+    /// mask). The default [`crate::fabric::FabricSpec`] reproduces the
+    /// legacy grid byte-for-byte.
+    pub fn fabric(mut self, spec: crate::fabric::FabricSpec) -> Self {
+        self.fabric = spec;
         self
     }
 
@@ -568,8 +580,8 @@ impl<'a> Explorer<'a> {
 
         let min_insts = min_group_instances(dfgs);
         // full layout over the groups the DFG set actually uses
-        // (Section IV-F)
-        let full_layout = Layout::full(self.grid, groups_used(dfgs));
+        // (Section IV-F), on the session's provisioned fabric
+        let full_layout = Layout::full_on(self.fabric.build(self.grid), groups_used(dfgs));
 
         // declared before ctx so the ctx's borrow of the owned observer
         // (below) outlives it, exactly like default_engine/default_cost

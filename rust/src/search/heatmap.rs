@@ -32,7 +32,7 @@ pub fn try_overlay(
     full: &Layout,
     engine: &MappingEngine,
 ) -> Result<Layout, MapSetFailure> {
-    let mut heat = Layout::empty(full.grid);
+    let mut heat = full.empty_like();
     for (mapping, dfg) in engine.map_all(dfgs, full)?.iter().zip(dfgs) {
         for (n, op) in dfg.nodes.iter().enumerate() {
             if op.is_memory() {

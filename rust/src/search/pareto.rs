@@ -89,6 +89,12 @@ pub fn layout_fingerprint(layout: &Layout) -> u64 {
     for cell in layout.grid.compute_cells() {
         h.write_u8(layout.support(cell).0);
     }
+    // Fabric identity folds in only when provisioning departs from the
+    // legacy Mesh4/cap-1/all-sides default, so every pre-fabric
+    // fingerprint is preserved byte-for-byte.
+    if !layout.fabric().is_default() {
+        h.write(layout.fabric().describe().as_bytes());
+    }
     h.finish()
 }
 
@@ -239,6 +245,24 @@ mod tests {
         let c = a.without_group(cell, OpGroup::Div);
         assert_ne!(layout_fingerprint(&a), layout_fingerprint(&c));
         assert_ne!(layout_fingerprint(&full(5, 6)), layout_fingerprint(&a));
+    }
+
+    #[test]
+    fn fingerprint_tracks_fabric_only_when_non_default() {
+        use crate::fabric::{Fabric, FabricSpec, Topology};
+        let grid = Grid::new(5, 5);
+        let legacy = Layout::full(grid, GroupSet::all_compute());
+        let explicit = Layout::full_on(Fabric::mesh4(grid), GroupSet::all_compute());
+        // default Mesh4 preserves every pre-fabric fingerprint exactly
+        assert_eq!(layout_fingerprint(&legacy), layout_fingerprint(&explicit));
+        let express = Layout::full_on(
+            Fabric::new(
+                grid,
+                FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() },
+            ),
+            GroupSet::all_compute(),
+        );
+        assert_ne!(layout_fingerprint(&legacy), layout_fingerprint(&express));
     }
 
     #[test]

@@ -71,7 +71,8 @@ fn top_motifs(counts: &[[usize; NUM_GROUPS]; NUM_GROUPS]) -> Vec<(OpGroup, OpGro
 /// theoretical minimum plus one instance of headroom per mined motif
 /// the group participates in, packed onto the first compute cells
 /// (row-major) so co-frequent groups share cells and stay adjacent.
-fn seed_layout(ctx: &SearchCtx, grid: crate::cgra::Grid) -> Layout {
+fn seed_layout(ctx: &SearchCtx, incumbent: &Layout) -> Layout {
+    let grid = incumbent.grid;
     let motifs = top_motifs(&motif_counts(ctx.dfgs));
     let num_compute = grid.num_compute();
     let mut targets = [0usize; NUM_GROUPS];
@@ -86,7 +87,7 @@ fn seed_layout(ctx: &SearchCtx, grid: crate::cgra::Grid) -> Layout {
             targets[b.index()] = (targets[b.index()] + 1).min(num_compute);
         }
     }
-    let mut seed = Layout::empty(grid);
+    let mut seed = incumbent.empty_like();
     let compute: Vec<_> = grid.compute_cells().collect();
     for g in COMPUTE_GROUPS {
         for &cell in compute.iter().take(targets[g.index()].min(num_compute)) {
@@ -105,7 +106,7 @@ impl super::SearchPhase for SubgraphSeedPhase {
         if ctx.dfgs.is_empty() || ctx.stats.tested >= ctx.cfg.l_test {
             return incumbent;
         }
-        let seed = seed_layout(ctx, incumbent.grid);
+        let seed = seed_layout(ctx, &incumbent);
         let seed_cost = ctx.cost.layout_cost(&seed);
         let incumbent_cost = ctx.cost.layout_cost(&incumbent);
         // only a strict scalar improvement that still meets the bounds

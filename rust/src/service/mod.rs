@@ -56,6 +56,7 @@ pub mod wire;
 use crate::cgra::Grid;
 use crate::cost::CostModel;
 use crate::dfg::Dfg;
+use crate::fabric::FabricSpec;
 use crate::mapper::{MapperConfig, MappingEngine};
 use crate::search::{Explorer, SearchConfig, SearchEvent, SearchResult};
 use crate::store::ResultStore;
@@ -109,6 +110,11 @@ pub struct JobSpec {
     pub label: String,
     pub dfgs: Vec<Dfg>,
     pub grid: Grid,
+    /// Interconnect provisioning for the target grid (topology, link
+    /// capacity, I/O border mask). The default Mesh4/cap-1/all-sides
+    /// fabric is the legacy grid: it is excluded from the fingerprint,
+    /// so every pre-fabric spec keeps its cache key and derived seed.
+    pub fabric: FabricSpec,
     pub objective: Objective,
     pub search: SearchConfig,
     pub mapper: MapperConfig,
@@ -127,6 +133,7 @@ impl JobSpec {
             label: label.into(),
             dfgs,
             grid,
+            fabric: FabricSpec::default(),
             objective: Objective::Area,
             search: SearchConfig::default(),
             mapper,
@@ -146,10 +153,16 @@ impl JobSpec {
     /// `DefaultHasher`): per-job seeds derive from this value, so it is
     /// part of the reproducibility contract.
     pub fn fingerprint(&self) -> u64 {
-        let Self { label: _, dfgs, grid, objective, search, mapper, seed } = self;
+        let Self { label: _, dfgs, grid, fabric, objective, search, mapper, seed } = self;
         let mut h = StableHasher::new();
         dfgs.hash(&mut h);
         grid.hash(&mut h);
+        // the default fabric is the legacy grid: hashing it only when it
+        // departs from Mesh4/cap-1/all-sides keeps every pre-fabric
+        // fingerprint (and with it store keys and derived seeds) intact
+        if !fabric.is_default() {
+            fabric.hash(&mut h);
+        }
         objective.hash(&mut h);
         search.hash(&mut h);
         mapper.hash(&mut h);
@@ -673,6 +686,7 @@ fn run_spec(
         }
     };
     let run = Explorer::new(spec.grid)
+        .fabric(spec.fabric)
         .dfgs(&spec.dfgs)
         .engine(&engine)
         .cost(&cost)
@@ -731,6 +745,22 @@ mod tests {
         b = tiny_spec("x", (6, 6));
         b.dfgs.push(benchmarks::benchmark("GB"));
         assert_ne!(a.fingerprint(), b.fingerprint(), "DFG-set change must miss");
+
+        b = tiny_spec("x", (6, 6));
+        b.fabric = crate::fabric::FabricSpec {
+            topology: crate::fabric::Topology::Mesh4,
+            link_cap: 1,
+            io_mask: crate::fabric::IO_ALL_SIDES,
+        };
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "an explicit default fabric is the legacy grid and must share its cache slot"
+        );
+
+        b = tiny_spec("x", (6, 6));
+        b.fabric.topology = crate::fabric::Topology::Express { stride: 2 };
+        assert_ne!(a.fingerprint(), b.fingerprint(), "fabric change must miss");
 
         b = tiny_spec("x", (6, 6));
         b.search.search_threads = 8;

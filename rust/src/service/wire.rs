@@ -44,8 +44,19 @@ use std::fmt;
 /// History: `2` added the multi-objective fields — the search config's
 /// `objective`/`genetic_*`/`subgraph_seed` knobs, the result's Pareto
 /// `front` and best-layout `synth` estimate, and the `pareto_point`
-/// event.
-pub const WIRE_VERSION: u64 = 2;
+/// event. `3` added fabric provisioning: the spec's optional `fabric`
+/// object (topology / link capacity / I/O mask) and the same key on
+/// encoded layouts. A record only carries `fabric` keys when the
+/// provisioning departs from the legacy Mesh4 default, and decoding
+/// defaults absent keys, so version-2 records decode unchanged —
+/// [`decode_result`] accepts both (a warm restart over a v2 store
+/// reports zero recomputes).
+pub const WIRE_VERSION: u64 = 3;
+
+/// Oldest persisted/served version this build still decodes. Every v2
+/// record is a valid v3 record with the fabric keys absent (defaulted
+/// Mesh4), so the store keeps serving pre-fabric results byte-for-byte.
+pub const WIRE_VERSION_MIN: u64 = 2;
 
 /// A decode failure: what was malformed, with enough context to fix the
 /// request.
@@ -174,15 +185,68 @@ pub fn encode_grid(grid: Grid) -> Json {
 pub fn decode_grid(j: &Json) -> Result<Grid> {
     let rows = get_usize(j, "rows")?;
     let cols = get_usize(j, "cols")?;
-    // re-check the Grid::new assertions so bad input errors instead of
-    // panicking a worker
-    if rows < 3 || cols < 3 {
-        return Err(WireError::new(format!("grid must be at least 3x3, got {rows}x{cols}")));
+    // the total constructor owns the bounds checks, so bad input errors
+    // (with its typed reason) instead of panicking a worker
+    Grid::try_new(rows, cols).map_err(|e| WireError::new(e.to_string()))
+}
+
+/// Fabric provisioning codec. Only non-default knobs are emitted — the
+/// default Mesh4/cap-1/all-sides fabric encodes as an *absent* key, so
+/// version-2 records and minimal clients are covered by the decoder's
+/// defaults.
+pub fn encode_fabric(spec: &crate::fabric::FabricSpec) -> Json {
+    let mut pairs = vec![("topology", Json::str(spec.topology.name()))];
+    if let crate::fabric::Topology::Express { stride } = spec.topology {
+        pairs.push(("express_stride", Json::U64(stride as u64)));
     }
-    if rows.saturating_mul(cols) > u16::MAX as usize {
-        return Err(WireError::new(format!("grid {rows}x{cols} too large")));
+    if spec.link_cap != 1 {
+        pairs.push(("link_cap", Json::U64(spec.link_cap as u64)));
     }
-    Ok(Grid::new(rows, cols))
+    if spec.io_mask != crate::fabric::IO_ALL_SIDES {
+        pairs.push(("io_mask", Json::str(crate::fabric::io_mask_name(spec.io_mask))));
+    }
+    Json::obj(pairs)
+}
+
+/// Decode and validate a fabric spec. Every field is optional and
+/// defaults to the legacy value, so `{}` is the Mesh4 fabric.
+pub fn decode_fabric(j: &Json) -> Result<crate::fabric::FabricSpec> {
+    if !matches!(j, Json::Obj(_)) {
+        return Err(WireError::new("field 'fabric' must be a JSON object"));
+    }
+    let defaults = crate::fabric::FabricSpec::default();
+    let stride = match j.get("express_stride") {
+        Some(_) => get_usize(j, "express_stride")?,
+        None => 2,
+    };
+    let topology = match j.get("topology") {
+        None => defaults.topology,
+        Some(t) => {
+            let name = t
+                .as_str()
+                .ok_or_else(|| WireError::new("field 'topology' must be a string"))?;
+            crate::fabric::Topology::parse(name, stride).map_err(WireError::new)?
+        }
+    };
+    let link_cap = match j.get("link_cap") {
+        None => defaults.link_cap,
+        Some(c) => c
+            .as_u64()
+            .and_then(|n| u8::try_from(n).ok())
+            .ok_or_else(|| WireError::new("field 'link_cap' must be an integer in 1..=255"))?,
+    };
+    let io_mask = match j.get("io_mask") {
+        None => defaults.io_mask,
+        Some(m) => {
+            let name = m
+                .as_str()
+                .ok_or_else(|| WireError::new("field 'io_mask' must be a string"))?;
+            crate::fabric::parse_io_mask(name).map_err(WireError::new)?
+        }
+    };
+    let spec = crate::fabric::FabricSpec { topology, link_cap, io_mask };
+    spec.validate().map_err(WireError::new)?;
+    Ok(spec)
 }
 
 /// DFG codec: the interchange format is owned by [`crate::dfg::io`];
@@ -289,15 +353,23 @@ fn decode_mapper_config(j: &Json) -> Result<MapperConfig> {
 }
 
 pub fn encode_spec(spec: &JobSpec) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("label", Json::str(&spec.label)),
         ("dfgs", Json::Arr(spec.dfgs.iter().map(encode_dfg).collect())),
         ("grid", encode_grid(spec.grid)),
+    ];
+    // default provisioning is the legacy grid: the key is absent so
+    // pre-fabric specs re-encode to their exact version-2 bytes
+    if !spec.fabric.is_default() {
+        pairs.push(("fabric", encode_fabric(&spec.fabric)));
+    }
+    pairs.extend([
         ("objective", Json::str(spec.objective.name())),
         ("search", encode_search_config(&spec.search)),
         ("mapper", encode_mapper_config(&spec.mapper)),
         ("seed", Json::U64(spec.seed)),
-    ])
+    ]);
+    Json::obj(pairs)
 }
 
 /// Decode and validate a job spec. Optional fields: `objective` (default
@@ -318,6 +390,10 @@ pub fn decode_spec(j: &Json) -> Result<JobSpec> {
     let dfgs: Vec<Dfg> =
         get_arr(j, "dfgs")?.iter().map(decode_dfg).collect::<Result<_>>()?;
     let grid = decode_grid(field(j, "grid")?)?;
+    let fabric = match j.get("fabric") {
+        Some(f) => decode_fabric(f)?,
+        None => crate::fabric::FabricSpec::default(),
+    };
     let objective = match j.get("objective") {
         None => Objective::Area,
         Some(o) => match o.as_str() {
@@ -343,29 +419,39 @@ pub fn decode_spec(j: &Json) -> Result<JobSpec> {
         Some(s) => s.as_u64().ok_or_else(|| WireError::new("field 'seed' must be a u64"))?,
         None => mapper.seed,
     };
-    Ok(JobSpec { label, dfgs, grid, objective, search, mapper, seed })
+    Ok(JobSpec { label, dfgs, grid, fabric, objective, search, mapper, seed })
 }
 
 // ----------------------------------------------------------------- result
 
 pub fn encode_layout(layout: &Layout) -> Json {
     let grid = layout.grid;
-    Json::obj(vec![
+    let mut pairs = vec![
         ("rows", Json::U64(grid.rows as u64)),
         ("cols", Json::U64(grid.cols as u64)),
-        (
-            "support",
-            Json::Arr(
-                grid.compute_cells()
-                    .map(|c| Json::U64(layout.support(c).0 as u64))
-                    .collect(),
-            ),
+    ];
+    // like specs: the fabric key travels only when provisioning departs
+    // from the default, so pre-fabric layout bytes are unchanged
+    if !layout.fabric().is_default() {
+        pairs.push(("fabric", encode_fabric(&layout.fabric().spec())));
+    }
+    pairs.push((
+        "support",
+        Json::Arr(
+            grid.compute_cells()
+                .map(|c| Json::U64(layout.support(c).0 as u64))
+                .collect(),
         ),
-    ])
+    ));
+    Json::obj(pairs)
 }
 
 pub fn decode_layout(j: &Json) -> Result<Layout> {
     let grid = decode_grid(j)?;
+    let fabric = match j.get("fabric") {
+        Some(f) => decode_fabric(f)?,
+        None => crate::fabric::FabricSpec::default(),
+    };
     let support = get_arr(j, "support")?;
     if support.len() != grid.num_compute() {
         return Err(WireError::new(format!(
@@ -374,7 +460,7 @@ pub fn decode_layout(j: &Json) -> Result<Layout> {
             support.len()
         )));
     }
-    let mut layout = Layout::empty(grid);
+    let mut layout = Layout::empty_on(fabric.build(grid));
     for (cell, bits) in grid.compute_cells().zip(support) {
         let bits = bits
             .as_u64()
@@ -686,9 +772,10 @@ pub fn encode_result(result: &JobResult) -> Json {
 
 pub fn decode_result(j: &Json) -> Result<JobResult> {
     let version = get_u64(j, "version")?;
-    if version != WIRE_VERSION {
+    if !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&version) {
         return Err(WireError::new(format!(
-            "unsupported result version {version} (this build speaks {WIRE_VERSION})"
+            "unsupported result version {version} (this build speaks \
+             {WIRE_VERSION_MIN}..={WIRE_VERSION})"
         )));
     }
     Ok(JobResult {
@@ -938,6 +1025,101 @@ mod tests {
                 "body {body} should fail mentioning '{needle}', got: {err}"
             );
         }
+    }
+
+    #[test]
+    fn fabric_spec_roundtrip_and_default_is_absent() {
+        use crate::fabric::{FabricSpec, Topology, SIDE_N, SIDE_S};
+        let spec = JobSpec {
+            fabric: FabricSpec {
+                topology: Topology::Express { stride: 3 },
+                link_cap: 2,
+                io_mask: SIDE_N | SIDE_S,
+            },
+            ..tiny_spec()
+        };
+        let text = encode_spec(&spec).to_string();
+        assert!(text.contains("\"fabric\""));
+        let back = decode_spec(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fabric, spec.fabric);
+        assert_eq!(back.fingerprint(), spec.fingerprint(), "codec must be content-lossless");
+        assert_eq!(encode_spec(&back).to_string(), text, "re-encoding is byte-stable");
+        // the default fabric travels as an *absent* key: pre-fabric
+        // (version 2) spec bytes are unchanged
+        assert!(!encode_spec(&tiny_spec()).to_string().contains("\"fabric\""));
+        // an explicit empty fabric object is the Mesh4 default too
+        let j = json::parse(
+            r#"{"dfgs":[{"name":"t","nodes":["load","store"],"edges":[[0,1]]}],
+                 "grid":{"rows":5,"cols":5},"fabric":{}}"#,
+        )
+        .unwrap();
+        let decoded = decode_spec(&j).unwrap();
+        assert!(decoded.fabric.is_default());
+        assert_eq!(decoded.fingerprint(), JobSpec { fabric: FabricSpec::default(), ..decoded.clone() }.fingerprint());
+    }
+
+    #[test]
+    fn invalid_fabrics_are_rejected_with_reasons() {
+        for (body, needle) in [
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":7}"#, "object"),
+            (
+                r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"topology":"hypercube"}}"#,
+                "unknown topology",
+            ),
+            (
+                r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"topology":"express","express_stride":1}}"#,
+                "stride",
+            ),
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"link_cap":0}}"#, "capacity"),
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"link_cap":300}}"#, "link_cap"),
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"io_mask":"nx"}}"#, "side"),
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"io_mask":""}}"#, "empty"),
+            (r#"{"dfgs":[],"grid":{"rows":5,"cols":5},"fabric":{"topology":4}}"#, "string"),
+        ] {
+            let err = decode_spec(&json::parse(body).unwrap()).unwrap_err();
+            assert!(
+                err.0.contains(needle),
+                "body {body} should fail mentioning '{needle}', got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn fabric_layouts_roundtrip_and_v2_records_decode() {
+        use crate::fabric::{Fabric, FabricSpec, Topology};
+        use crate::ops::GroupSet;
+        // a non-default layout carries its fabric and round-trips
+        let spec = FabricSpec { topology: Topology::Express { stride: 2 }, ..Default::default() };
+        let layout =
+            Layout::full_on(Fabric::new(Grid::new(6, 6), spec), GroupSet::all_compute());
+        let text = encode_layout(&layout).to_string();
+        assert!(text.contains("\"fabric\""));
+        let back = decode_layout(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, layout, "fabric must survive the layout codec");
+        assert_eq!(encode_layout(&back).to_string(), text);
+        // default layouts keep their version-2 bytes (no fabric key)
+        let legacy = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        assert!(!encode_layout(&legacy).to_string().contains("\"fabric\""));
+
+        // a version-2 record (as persisted by the previous release: no
+        // fabric keys, version stamp 2) still decodes — the warm-restart
+        // contract that keeps a v2 store serving with zero recomputes
+        let service = ExplorationService::with_jobs(1);
+        let result = service.run_job(&tiny_spec());
+        let mut j = encode_result(&result);
+        if let Json::Obj(pairs) = &mut j {
+            assert_eq!(pairs[0].0, "version");
+            pairs[0].1 = Json::U64(2);
+        }
+        let back = decode_result(&j).unwrap();
+        assert_eq!(back.best_cost(), result.best_cost());
+        assert!(back
+            .outcome
+            .search_result()
+            .unwrap()
+            .best_layout
+            .fabric()
+            .is_default());
     }
 
     #[test]

@@ -34,8 +34,15 @@
 //! | `mapper.seed` | int | `mapper.seed` (base seed; per-job seeds derive from it) |
 //! | `mapper.feasibility_cache` | bool | `mapper.feasibility_cache` |
 //! | `service.jobs` | int | `jobs` (suite worker threads; 0 = available parallelism) |
+//! | `fabric.topology` | string | `fabric.topology`: `"mesh4"` (the legacy default), `"diagonal"` (8-neighbour mesh) or `"express"` (mesh + stride links) |
+//! | `fabric.express_stride` | int | express-link stride (≥ 2; only read for the `express` topology) |
+//! | `fabric.link_cap` | int | `fabric.link_cap` (values one directed link carries; clamped to 1..=255; the paper's fabric is 1) |
+//! | `fabric.io_mask` | string | `fabric.io_mask`: border sides hosting I/O cells, e.g. `"nesw"`/`"all"` (default) or `"ns"` |
 //! | `results_dir` | string | `results_dir` |
 //! | `verbose` | bool | `verbose` |
+//!
+//! The `fabric.*` keys default to the legacy Mesh4/cap-1/all-sides
+//! fabric, which is byte-identical to the pre-fabric grid path.
 
 use std::collections::BTreeMap;
 use std::fmt;

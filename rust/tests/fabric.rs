@@ -1,0 +1,111 @@
+//! Integration tests of fabric provisioning: the pinned congestion
+//! case (a net set Congested on Mesh4 that routes on Express links at
+//! the same grid size) and its objective-space consequence (the richer
+//! fabric's synthesis surcharge shows up in the layout's ParetoPoint).
+
+use helex::cgra::{CellId, Grid, Layout};
+use helex::dfg::Dfg;
+use helex::fabric::{Fabric, FabricSpec, Topology};
+use helex::mapper::route::{route, RouteOutcome};
+use helex::mapper::{Mapping, MapperConfig};
+use helex::ops::{GroupSet, Op};
+use helex::search::pareto::evaluate;
+
+/// Four parallel LOAD→ADD→STORE streams pinned so every LOAD→ADD net
+/// must cross the row-0/row-1 boundary between columns 3 and 4. Mesh4
+/// gives that cut fewer directed links than there are values, so
+/// PathFinder must report Congested; express skip links widen the cut.
+fn jam_case(spec: FabricSpec) -> (Dfg, Layout, Vec<CellId>) {
+    let d = Dfg::new(
+        "jam",
+        vec![
+            Op::Load,
+            Op::Load,
+            Op::Load,
+            Op::Load,
+            Op::Add,
+            Op::Add,
+            Op::Add,
+            Op::Add,
+            Op::Store,
+            Op::Store,
+            Op::Store,
+            Op::Store,
+        ],
+        vec![(0, 4), (1, 5), (2, 6), (3, 7), (4, 8), (5, 9), (6, 10), (7, 11)],
+    );
+    let l = Layout::full_on(Fabric::new(Grid::new(3, 9), spec), GroupSet::all_compute());
+    let g = &l.grid;
+    let p = vec![
+        g.cell(0, 0),
+        g.cell(0, 1),
+        g.cell(0, 2),
+        g.cell(0, 3),
+        g.cell(1, 4),
+        g.cell(1, 5),
+        g.cell(1, 6),
+        g.cell(1, 7),
+        g.cell(2, 4),
+        g.cell(2, 5),
+        g.cell(2, 6),
+        g.cell(2, 7),
+    ];
+    (d, l, p)
+}
+
+#[test]
+fn pinned_jam_is_congested_on_mesh4_and_routes_on_express() {
+    let cfg = MapperConfig { route_iters: 3, ..Default::default() };
+
+    let (d, l, p) = jam_case(FabricSpec::default());
+    match route(&d, &l, &p, &cfg) {
+        RouteOutcome::Congested { hot_links, overuse, .. } => {
+            assert!(!hot_links.is_empty(), "congestion must name the hot links");
+            assert!(overuse > 0);
+        }
+        RouteOutcome::Routed(_) => panic!("4 values across a 3-link Mesh4 cut must congest"),
+    }
+
+    let express =
+        FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() };
+    let (d, l, p) = jam_case(express);
+    match route(&d, &l, &p, &cfg) {
+        RouteOutcome::Routed(paths) => {
+            let m = Mapping { node_cell: p, edge_paths: paths, reserved: vec![] };
+            assert!(m.validate(&d, &l).is_empty(), "express witness must validate");
+        }
+        RouteOutcome::Congested { .. } => {
+            panic!("express skip links must clear the jam at the same grid size")
+        }
+    }
+}
+
+#[test]
+fn express_fabric_synth_surcharge_shows_in_its_pareto_point() {
+    let grid = Grid::new(3, 9);
+    let mesh4 =
+        Layout::full_on(Fabric::new(grid, FabricSpec::default()), GroupSet::all_compute());
+    let express_spec =
+        FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() };
+    let express = Layout::full_on(Fabric::new(grid, express_spec), GroupSet::all_compute());
+
+    let a = evaluate(&mesh4);
+    let b = evaluate(&express);
+    // same compute provisioning, so the whole delta is the fabric
+    assert_eq!(a.ops, b.ops);
+    assert!(
+        b.area_um2 > a.area_um2,
+        "express links must cost synth area: {} vs {}",
+        b.area_um2,
+        a.area_um2
+    );
+    assert!(
+        b.power_uw > a.power_uw,
+        "express links must cost synth power: {} vs {}",
+        b.power_uw,
+        a.power_uw
+    );
+    // the fabric participates in layout identity, so both points can
+    // coexist on one front
+    assert_ne!(a.fingerprint, b.fingerprint);
+}

@@ -536,6 +536,108 @@ fn prop_pareto_trace_is_thread_invariant() {
     });
 }
 
+/// One observed search run: the stripped wire trace plus (on success)
+/// the encoded best layout, cost bits and counters — everything the
+/// byte-identity contract covers.
+fn fabric_parity_run(
+    dfgs: &[Dfg],
+    grid: Grid,
+    scfg: &SearchConfig,
+    fabric: Option<helex::FabricSpec>,
+    threads: usize,
+) -> (String, Option<(String, u64, usize, usize)>) {
+    use helex::service::wire;
+    let engine = MappingEngine::default();
+    let cost = CostModel::area();
+    let mut trace = String::new();
+    let result = {
+        let trace = &mut trace;
+        let mut obs = move |ev: &SearchEvent| {
+            trace.push_str(&wire::strip_volatile(&wire::encode_event(ev)).to_string());
+            trace.push('\n');
+        };
+        let mut ex = Explorer::new(grid)
+            .dfgs(dfgs)
+            .engine(&engine)
+            .cost(&cost)
+            .config(SearchConfig { search_threads: threads, ..scfg.clone() })
+            .observer(&mut obs);
+        if let Some(spec) = fabric {
+            ex = ex.fabric(spec);
+        }
+        ex.run()
+    };
+    let summary = result.ok().map(|r| {
+        (
+            wire::encode_layout(&r.best_layout).to_string(),
+            r.best_cost.to_bits(),
+            r.stats.tested,
+            r.stats.expanded,
+        )
+    });
+    (trace, summary)
+}
+
+/// The explicit-Mesh4 `Fabric` path must be byte-identical to the
+/// legacy grid path — same stripped traces, same encoded layouts, same
+/// counters — at 1 and 4 in-search threads, on committed corpus graphs
+/// and on generated workloads.
+fn fabric_parity_check(dfgs: &[Dfg], grid: Grid, scfg: &SearchConfig) -> Result<(), String> {
+    let legacy = fabric_parity_run(dfgs, grid, scfg, None, 1);
+    for threads in [1usize, 4] {
+        let explicit =
+            fabric_parity_run(dfgs, grid, scfg, Some(helex::FabricSpec::default()), threads);
+        if explicit != legacy {
+            return Err(format!(
+                "explicit Mesh4 fabric diverged from the legacy path at {threads} thread(s): \
+                 trace {}B vs {}B",
+                explicit.0.len(),
+                legacy.0.len()
+            ));
+        }
+    }
+    if let Some((layout_bytes, ..)) = &legacy.1 {
+        if layout_bytes.contains("\"fabric\"") {
+            return Err("default-fabric layout must not carry a fabric wire key".into());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mesh4_fabric_matches_legacy_on_corpus_graphs() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("corpus");
+    let scfg = SearchConfig { l_test: 40, l_fail: 2, gsg_passes: 1, ..Default::default() };
+    for name in ["SOB", "BIL"] {
+        let dfg = helex::dfg::io::from_path(&dir.join(format!("{name}.json")))
+            .expect("corpus graph loads");
+        fabric_parity_check(&[dfg], Grid::new(7, 7), &scfg).unwrap();
+    }
+    // the job-level identity: a spec with an explicitly-default fabric
+    // keys the same cached run as a pre-fabric spec
+    let dfg = helex::dfg::io::from_path(&dir.join("SOB.json")).unwrap();
+    let legacy = helex::JobSpec::new("corpus", vec![dfg], Grid::new(7, 7));
+    let mut explicit = legacy.clone();
+    explicit.fabric = helex::FabricSpec::default();
+    assert_eq!(explicit.fingerprint(), legacy.fingerprint());
+}
+
+#[test]
+fn prop_mesh4_fabric_matches_legacy_on_generated_workloads() {
+    forall("mesh4_fabric_parity", 3, 0xFAB0, |g| {
+        let gen_cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfgs = vec![helex::dfg::gen::generate(&gen_cfg)];
+        let side = 6 + g.rng.below(3);
+        let scfg = SearchConfig {
+            l_test: 40 + g.rng.below(30),
+            l_fail: 2,
+            gsg_passes: 1,
+            ..Default::default()
+        };
+        fabric_parity_check(&dfgs, Grid::new(side, side), &scfg)
+    });
+}
+
 #[test]
 fn prop_groupset_algebra() {
     let mut rng = Rng::seed(0x6e);

@@ -150,6 +150,13 @@ fn malformed_requests_get_4xx_and_the_server_survives() {
         "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"add\",\"add\"],\"edges\":[[0,1],[1,0]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
         "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"seed\":-3}",
         "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"objective\":\"speed\"}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":7}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"topology\":\"torus\"}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"topology\":\"express\",\"express_stride\":1}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"link_cap\":0}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"link_cap\":300}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"io_mask\":\"q\"}}",
+        "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"io_mask\":\"\"}}",
         "\"\\ud800\"",
         "{\"a\":1e999}",
     ];
@@ -182,6 +189,40 @@ fn malformed_requests_get_4xx_and_the_server_survives() {
         (
             "{\"dfgs\":[{\"name\":\"x\",\"nodes\":[\"load\",\"store\"],\"edges\":[[0,9]]}],\"grid\":{\"rows\":5,\"cols\":5}}",
             "out of range",
+        ),
+        // hostile dimensions surface the typed GridError reason
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":2,\"cols\":2}}",
+            "grid must be at least 3x3, got 2x2",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":1000,\"cols\":1000}}",
+            "grid 1000x1000 too large for CellId",
+        ),
+        // hostile fabrics surface the typed provisioning reason
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"topology\":\"torus\"}}",
+            "unknown topology 'torus'",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"topology\":\"express\",\"express_stride\":1}}",
+            "express stride must be at least 2",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"link_cap\":0}}",
+            "link capacity must be at least 1",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"link_cap\":300}}",
+            "1..=255",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"io_mask\":\"q\"}}",
+            "unknown I/O side 'q'",
+        ),
+        (
+            "{\"dfgs\":[],\"grid\":{\"rows\":5,\"cols\":5},\"fabric\":{\"io_mask\":\"\"}}",
+            "I/O mask cannot be empty",
         ),
     ];
     for (body, needle) in precise {
