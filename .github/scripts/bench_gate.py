@@ -8,6 +8,9 @@ Two checks, stdlib only:
 1. `speedup_4t` (tested-layouts/sec at 4 in-search threads vs 1) must be
    >= MIN_SPEEDUP. This is hardware-independent enough to gate anywhere:
    the deterministic parallel search must actually pay for itself.
+   Likewise `steiner_speedup` (Steiner vs legacy routed-nets/sec on the
+   fanout-heavy Mesh4 workload, when the record carries it) must be
+   >= MIN_STEINER_SPEEDUP: trunk sharing must actually pay for itself.
 2. Unless the baseline is marked `"provisional": true`, the tracked
    medians (`layouts_per_sec` at 1t and 4t, and `genetic_hv_per_sec`
    when both records carry it) must not regress more than
@@ -33,6 +36,7 @@ import json
 import sys
 
 MIN_SPEEDUP = 1.5
+MIN_STEINER_SPEEDUP = 1.3
 MAX_REGRESSION = 0.20
 
 
@@ -77,6 +81,21 @@ def main() -> int:
     if speedup < MIN_SPEEDUP:
         print(f"FAIL: 4-thread tested-layouts/sec speedup {speedup:.2f} < {MIN_SPEEDUP}")
         ok = False
+
+    # Steiner routed-nets/sec speedup: gated only when the record
+    # carries a measurement (filtered runs keep the prior value; records
+    # predating the bench have none)
+    steiner = cur.get("steiner_speedup") or 0.0
+    if steiner > 0.0:
+        print(f"steiner_speedup = {steiner:.2f} (gate: >= {MIN_STEINER_SPEEDUP})")
+        if steiner < MIN_STEINER_SPEEDUP:
+            print(
+                f"FAIL: steiner routed-nets/sec speedup {steiner:.2f} "
+                f"< {MIN_STEINER_SPEEDUP}"
+            )
+            ok = False
+    else:
+        print("steiner_speedup: no measurement in record; check skipped")
 
     try:
         with open(baseline_path) as f:

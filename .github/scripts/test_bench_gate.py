@@ -135,6 +135,29 @@ class TestGate(GateCase):
         self.write(self.cur, record())
         self.assertEqual(self.run_gate(self.cur, self.base), 0)
 
+    def test_fails_on_low_steiner_speedup(self):
+        cur = record()
+        cur["steiner_speedup"] = 1.1
+        self.write(self.cur, cur)
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 1)
+
+    def test_passes_steiner_speedup_at_gate(self):
+        cur = record()
+        cur["steiner_speedup"] = 1.35
+        self.write(self.cur, cur)
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
+    def test_skips_steiner_speedup_when_record_lacks_it(self):
+        # records predating the bench (or filtered runs that kept a zero
+        # placeholder) must not trip the steiner gate
+        cur = record()
+        cur["steiner_speedup"] = 0.0
+        self.write(self.cur, cur)
+        self.write(self.base, record())
+        self.assertEqual(self.run_gate(self.cur, self.base), 0)
+
 
 class TestProvisionalLifecycle(GateCase):
     def provisional(self):

@@ -267,9 +267,111 @@ fn main() {
         }
     }
 
+    // Steiner routing throughput: routed-nets/sec and rip-up rounds of
+    // the legacy edge-by-edge router vs the Steiner multi-fanout router
+    // on a fanout-heavy workload (8 fanout-4 nets @ 9x9), Mesh4 vs
+    // Express(stride 2). Placement and net set are identical, so the
+    // delta is shared-trunk construction plus the engine-owned arena.
+    // Medians land in BENCH_search.json; CI's bench-track job gates the
+    // Mesh4 speedup (steiner >= 1.3x legacy nets/sec).
+    // (per-router rates, mesh4 speedup, legacy rounds, steiner rounds)
+    let mut steiner_route_bench: Option<(Vec<(String, f64)>, f64, usize, usize)> = None;
+    if h.enabled("route::steiner") {
+        use helex::cgra::Layout;
+        use helex::fabric::{Fabric, FabricSpec, Topology};
+        use helex::mapper::route::{route_rounds, RouteOutcome};
+        use helex::mapper::{MapperConfig, SteinerRouter};
+        use helex::ops::{GroupSet, Op};
+
+        println!("\n== steiner routing throughput (8 fanout-4 nets @ 9x9) ==");
+        let mut ops = Vec::new();
+        ops.extend(std::iter::repeat(Op::Load).take(8));
+        ops.extend(std::iter::repeat(Op::Add).take(32));
+        let mut edges = Vec::new();
+        for i in 0..8u32 {
+            for k in 0..4u32 {
+                edges.push((i, 8 + 4 * i + k)); // LOAD -> 4 consumers
+            }
+        }
+        let dfg = helex::dfg::Dfg::new("steiner-route-bench", ops, edges);
+        let net_count = 8.0f64;
+
+        let express =
+            FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() };
+        let mut rates: Vec<(String, f64)> = Vec::new();
+        let mut legacy_rounds = 0usize;
+        let mut steiner_rounds = 0usize;
+        for (tag, spec) in [("mesh4", FabricSpec::default()), ("express", express)] {
+            let layout =
+                Layout::full_on(Fabric::new(helex::Grid::new(9, 9), spec), GroupSet::all_compute());
+            let g = &layout.grid;
+            let placement: Vec<_> = (0..8)
+                .map(|c| g.cell(0, c))
+                .chain((0..32).map(|j| g.cell(2 + j / 7, 1 + j % 7)))
+                .collect();
+            let cfg = MapperConfig::default();
+            let scfg = MapperConfig { router_steiner: true, ..MapperConfig::default() };
+            let steiner = SteinerRouter::new();
+            let nets_per_sec = |h: &Harness, name: &str| {
+                let median_ns = h
+                    .results
+                    .iter()
+                    .rev()
+                    .find(|r| r.name == name)
+                    .map(|r| r.median_ns)
+                    .unwrap_or(0.0);
+                net_count * 1e9 / median_ns.max(1e-9)
+            };
+
+            let name = format!("route::legacy@{tag}");
+            h.bench(&name, || {
+                let (out, rounds) = route_rounds(&dfg, &layout, &placement, &cfg);
+                match out {
+                    RouteOutcome::Routed(paths) => {
+                        legacy_rounds = rounds;
+                        paths.len()
+                    }
+                    RouteOutcome::Congested { .. } => {
+                        panic!("fanout workload must route on {tag}")
+                    }
+                }
+            });
+            let nps = nets_per_sec(&h, &name);
+            println!("    {name}  {nps:>10.0} routed nets/s  ({legacy_rounds} round(s))");
+            rates.push((format!("legacy_{tag}"), nps));
+
+            let name = format!("route::steiner@{tag}");
+            h.bench(&name, || {
+                let (out, rounds) = steiner.route_rounds(&dfg, &layout, &placement, &scfg);
+                match out {
+                    RouteOutcome::Routed(paths) => {
+                        steiner_rounds = rounds;
+                        paths.len()
+                    }
+                    RouteOutcome::Congested { .. } => {
+                        panic!("fanout workload must route on {tag}")
+                    }
+                }
+            });
+            let nps = nets_per_sec(&h, &name);
+            println!("    {name}  {nps:>10.0} routed nets/s  ({steiner_rounds} round(s))");
+            rates.push((format!("steiner_{tag}"), nps));
+        }
+        let rate_of = |key: &str| {
+            rates.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(0.0)
+        };
+        let speedup = rate_of("steiner_mesh4") / rate_of("legacy_mesh4").max(1e-9);
+        println!("    -> {speedup:.2}x steiner vs legacy routed-nets/sec on mesh4");
+        steiner_route_bench = Some((rates, speedup, legacy_rounds, steiner_rounds));
+    }
+
     // Merge-write BENCH_search.json: a filtered run refreshes only the
     // sections it measured (same pattern as BENCH_service.json below).
-    if threads_fields.is_some() || genetic_hv_per_sec.is_some() || fabric_route.is_some() {
+    if threads_fields.is_some()
+        || genetic_hv_per_sec.is_some()
+        || fabric_route.is_some()
+        || steiner_route_bench.is_some()
+    {
         let prior = std::fs::read_to_string("BENCH_search.json")
             .ok()
             .and_then(|text| json::parse(&text).ok());
@@ -299,6 +401,24 @@ fn main() {
             ]),
             None => keep("fabric_route_nets_per_sec", Json::Obj(Vec::new())),
         };
+        let (steiner_rates_field, steiner_speedup_field, steiner_rounds_field) =
+            match &steiner_route_bench {
+                Some((rates, speedup, legacy_rounds, steiner_rounds)) => (
+                    Json::Obj(
+                        rates.iter().map(|(k, v)| (k.clone(), Json::F64(*v))).collect(),
+                    ),
+                    Json::F64(*speedup),
+                    Json::obj(vec![
+                        ("legacy", Json::F64(*legacy_rounds as f64)),
+                        ("steiner", Json::F64(*steiner_rounds as f64)),
+                    ]),
+                ),
+                None => (
+                    keep("steiner_route_nets_per_sec", Json::Obj(Vec::new())),
+                    keep("steiner_speedup", Json::F64(0.0)),
+                    keep("steiner_ripup_rounds", Json::Obj(Vec::new())),
+                ),
+            };
         let record = Json::obj(vec![
             ("bench", Json::str("search")),
             ("spec", Json::str("fig9-medium:S4@9x9,l_test=400,gsg_passes=1")),
@@ -307,6 +427,9 @@ fn main() {
             ("speedup_4t", speedup_field),
             ("genetic_hv_per_sec", genetic_field),
             ("fabric_route_nets_per_sec", fabric_field),
+            ("steiner_route_nets_per_sec", steiner_rates_field),
+            ("steiner_speedup", steiner_speedup_field),
+            ("steiner_ripup_rounds", steiner_rounds_field),
         ]);
         if std::fs::write("BENCH_search.json", record.to_string()).is_ok() {
             println!("    wrote BENCH_search.json");

@@ -149,6 +149,10 @@ impl ExperimentConfig {
         self.mapper.seed = cfg.int_or("mapper.seed", self.mapper.seed as i64) as u64;
         self.mapper.feasibility_cache =
             cfg.bool_or("mapper.feasibility_cache", self.mapper.feasibility_cache);
+        self.mapper.router_steiner =
+            cfg.bool_or("mapper.router.steiner", self.mapper.router_steiner);
+        self.mapper.router_criticality =
+            cfg.bool_or("mapper.router.criticality", self.mapper.router_criticality);
         self.jobs = cfg.int_or("service.jobs", self.jobs as i64) as usize;
         self.search_threads =
             cfg.int_or("search.threads", self.search_threads as i64) as usize;
@@ -303,6 +307,7 @@ mod tests {
              objective = \"pareto\"\nsubgraph_seed = true\n\
              [search.genetic]\ngenerations = 5\npopulation = 11\n\
              [mapper]\nhist_increment = 2.5\npresent_penalty = 3.25\n\
+             [mapper.router]\nsteiner = true\ncriticality = true\n\
              [service]\njobs = 6\n\
              [fabric]\ntopology = \"express\"\nexpress_stride = 3\nlink_cap = 2\n\
              io_mask = \"ns\"",
@@ -312,6 +317,8 @@ mod tests {
         assert!(!cfg.use_heatmap);
         assert_eq!(cfg.mapper.hist_increment, 2.5);
         assert_eq!(cfg.mapper.present_penalty, 3.25);
+        assert!(cfg.mapper.router_steiner);
+        assert!(cfg.mapper.router_criticality);
         assert_eq!(cfg.jobs, 6);
         assert_eq!(cfg.search_threads, 3);
         assert_eq!(cfg.objective, search::SearchObjective::Pareto);

@@ -34,7 +34,10 @@
 //! API** ([`mapper::MappingEngine`]): pluggable
 //! [`mapper::PlacementStrategy`]/[`mapper::RoutingStrategy`] traits
 //! (greedy-topological placement + PathFinder-style routing as
-//! defaults), [`mapper::MapRequest`] → [`mapper::MapOutcome`] resolution
+//! defaults; [`mapper::SteinerRouter`] is the opt-in multi-fanout
+//! alternative, with per-net criticality weighting — see
+//! `docs/ROUTER.md` for both routers' algorithms and determinism
+//! guarantees), [`mapper::MapRequest`] → [`mapper::MapOutcome`] resolution
 //! where failures carry structured [`mapper::MapFailure`] diagnostics,
 //! and incremental warm-start remapping
 //! ([`mapper::MappingEngine::remap_from`]) with a per-DFG feasibility
@@ -60,7 +63,9 @@
 //! * [`ops`], [`dfg`], [`cgra`], [`mapper`], [`cost`] — substrates: the
 //!   operation/cost model, benchmark DFGs, the T-CGRA grid and the
 //!   RodMap-like reserve-on-demand spatial mapper behind the
-//!   `MappingEngine` API (structured outcomes + warm-start remapping).
+//!   `MappingEngine` API (structured outcomes + warm-start remapping;
+//!   router selection — legacy edge-by-edge vs Steiner multi-fanout —
+//!   lives in [`mapper::route`], documented in `docs/ROUTER.md`).
 //!   Workload ingestion lives here too: [`dfg::io`] is the validated
 //!   JSON/DOT interchange layer (total decoding into typed
 //!   [`dfg::DfgError`]s — a graph that parses has been proven a

@@ -103,6 +103,12 @@ fn build_config(args: &Args) -> ExperimentConfig {
     if args.flag("subgraph-seed") {
         cfg.subgraph_seed = true;
     }
+    if args.flag("steiner") {
+        cfg.mapper.router_steiner = true;
+    }
+    if args.flag("router-criticality") {
+        cfg.mapper.router_criticality = true;
+    }
     if let Some(v) = args.get("generations") {
         cfg.genetic_generations = v.parse().unwrap_or(cfg.genetic_generations);
     }
@@ -625,6 +631,12 @@ fn main() -> Result<()> {
                 spec.search.search_threads =
                     threads.parse().unwrap_or(spec.search.search_threads);
             }
+            if args.flag("steiner") {
+                spec.mapper.router_steiner = true;
+            }
+            if args.flag("router-criticality") {
+                spec.mapper.router_criticality = true;
+            }
             let id = helex::server::client::submit_spec(addr, &spec)?;
             eprintln!("[helex] submitted {id} ({})", spec.describe());
             let result = helex::server::client::wait_result(
@@ -915,6 +927,7 @@ USAGE:
   helex submit [--addr HOST:PORT] [--dfgs S4|BIL,SOB|graph.json] [--size RxC] [--l-test N]
                [--objective area|power|pareto] [--seed N] [--search-threads N] [--label NAME] [--json]
                [--topology mesh4|diagonal|express] [--express-stride N] [--link-cap N] [--io-mask nesw]
+               [--steiner] [--router-criticality]
                                              submit one job over HTTP and wait for the result
   helex submit --batch <suite> [--addr HOST:PORT] [--priority 0..9] [--client NAME]
                [--l-test N] [--paper-scale]
@@ -934,10 +947,12 @@ USAGE:
             [--quick] [--paper-scale] [--jobs N] [--search-threads N] [--l-test N] [--no-gsg]
             [--no-heatmap] [--seed N] [--config FILE] [--results-dir DIR] [--verbose]
             [--objective op_count|pareto] [--subgraph-seed] [--topology T] [--link-cap N] [--io-mask M]
+            [--steiner] [--router-criticality]
   helex explore --dfgs BIL,SOB|S1..S6|graph.json --size RxC [--show] [--trace] [--trace-out FILE]
                 [--search-threads N] [--no-xla] [--objective op_count|pareto] [--subgraph-seed]
                 [--generations N] [--population N]
                 [--topology mesh4|diagonal|express] [--express-stride N] [--link-cap N] [--io-mask nesw]
+                [--steiner] [--router-criticality]
   helex map --dfg NAME --size RxC
   helex heatmap --set S4 --size RxC
   helex sweep --set S4 --from 7x7 --to 10x10
@@ -958,6 +973,13 @@ USAGE:
   stride-N row/column skip links, stride via --express-stride, >= 2),
   --link-cap N lets one directed link carry N values (default 1), and
   --io-mask restricts LOAD/STORE cells to a border subset (any of
-  n/e/s/w, e.g. 'ns'; default all four sides)."
+  n/e/s/w, e.g. 'ns'; default all four sides).
+
+  Router selection (submit/explore/exp): --steiner routes multi-fanout
+  nets as shared-trunk Steiner trees (config key mapper.router.steiner;
+  default is the legacy edge-by-edge router with byte-identical traces),
+  --router-criticality weights congestion negotiation by per-net
+  longest-path criticality (mapper.router.criticality; Steiner only).
+  Each router is deterministic at any --search-threads width."
     );
 }

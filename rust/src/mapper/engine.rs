@@ -4,11 +4,15 @@
 //! The engine decomposes one map attempt into a [`PlacementStrategy`]
 //! and a [`RoutingStrategy`] joined by the reserve-on-demand driver loop,
 //! so alternative placers/routers (simulated-annealing placement, ILP
-//! routing, ...) slot in without forking the engine. Every request
-//! resolves to a [`MapOutcome`]: success carries the [`Mapping`] plus
-//! attempt statistics, failure carries a structured [`MapFailure`]
-//! (which group ran out of capacity, which links stayed congested, or
-//! that placement was exhausted) instead of a bare `None`.
+//! routing, ...) slot in without forking the engine. Two routers ship
+//! in-tree: the default [`PathFinderRouter`] (legacy edge-by-edge
+//! negotiation, byte-identical traces) and the opt-in [`SteinerRouter`]
+//! (shared-trunk multi-fanout trees over an engine-owned scratch arena;
+//! `MapperConfig::router_steiner`). Every request resolves to a
+//! [`MapOutcome`]: success carries the [`Mapping`] plus attempt
+//! statistics, failure carries a structured [`MapFailure`] (which group
+//! ran out of capacity, which links stayed congested, or that placement
+//! was exhausted) instead of a bare `None`.
 //!
 //! ## Warm-start remapping
 //!
@@ -153,6 +157,85 @@ impl RoutingStrategy for PathFinderRouter {
 
     fn clone_box(&self) -> Box<dyn RoutingStrategy> {
         Box::new(*self)
+    }
+}
+
+/// The opt-in Steiner multi-fanout router
+/// (`MapperConfig::router_steiner`): edges sharing a source node form
+/// one net, routed as a shared-trunk Steiner tree grown by nearest-sink
+/// attachment ([`route::steiner_route`]), with optional per-net
+/// criticality weighting of the congestion negotiation
+/// (`MapperConfig::router_criticality`). See `docs/ROUTER.md`.
+///
+/// Owns a [`route::RouterArena`] — the generation-stamped A* scratch
+/// and occupancy tables — reused across every route this engine
+/// performs; [`Self::clone_box`] (and therefore
+/// [`MappingEngine::fork`]) hands each parallel search worker a fresh
+/// arena, so scratch is never shared across threads.
+///
+/// Its `route_partial` is *net-granular*: nets with no affected edge
+/// stay pinned, nets touching one are ripped up and re-grown whole (a
+/// shared trunk cannot be repaired one branch at a time).
+#[derive(Default)]
+pub struct SteinerRouter {
+    arena: RefCell<route::RouterArena>,
+}
+
+impl SteinerRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Route with rip-up accounting — negotiation rounds consumed —
+    /// used by the `route::steiner` bench.
+    pub fn route_rounds(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        cfg: &MapperConfig,
+    ) -> (RouteOutcome, usize) {
+        route::steiner_route_rounds(dfg, layout, placement, cfg, &mut self.arena.borrow_mut())
+    }
+}
+
+impl RoutingStrategy for SteinerRouter {
+    fn name(&self) -> &'static str {
+        "steiner"
+    }
+
+    fn route(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        cfg: &MapperConfig,
+    ) -> RouteOutcome {
+        route::steiner_route(dfg, layout, placement, cfg, &mut self.arena.borrow_mut())
+    }
+
+    fn route_partial(
+        &self,
+        dfg: &Dfg,
+        layout: &Layout,
+        placement: &[CellId],
+        fixed_paths: &[Vec<CellId>],
+        affected: &[usize],
+        cfg: &MapperConfig,
+    ) -> Option<Vec<Vec<CellId>>> {
+        route::steiner_route_partial(
+            dfg,
+            layout,
+            placement,
+            fixed_paths,
+            affected,
+            cfg,
+            &mut self.arena.borrow_mut(),
+        )
+    }
+
+    fn clone_box(&self) -> Box<dyn RoutingStrategy> {
+        Box::new(SteinerRouter::new())
     }
 }
 
@@ -355,10 +438,17 @@ impl fmt::Debug for MappingEngine {
 }
 
 impl MappingEngine {
-    /// Engine with the default strategies ([`GreedyTopoPlacer`] +
-    /// [`PathFinderRouter`]).
+    /// Engine with the configured strategies: [`GreedyTopoPlacer`] plus
+    /// the router `cfg` selects — the legacy edge-by-edge
+    /// [`PathFinderRouter`] by default, the [`SteinerRouter`] when
+    /// `cfg.router_steiner` is set.
     pub fn new(cfg: MapperConfig) -> Self {
-        Self::with_strategies(cfg, Box::new(GreedyTopoPlacer), Box::new(PathFinderRouter))
+        let router: Box<dyn RoutingStrategy> = if cfg.router_steiner {
+            Box::new(SteinerRouter::new())
+        } else {
+            Box::new(PathFinderRouter)
+        };
+        Self::with_strategies(cfg, Box::new(GreedyTopoPlacer), router)
     }
 
     /// Engine with custom strategies.
@@ -1011,6 +1101,63 @@ mod tests {
         // forked engines are Send: they move onto search worker threads
         fn assert_send<T: Send>(_: &T) {}
         assert_send(&fork);
+    }
+
+    #[test]
+    fn config_selects_steiner_router() {
+        let engine = MappingEngine::new(MapperConfig {
+            router_steiner: true,
+            ..MapperConfig::default()
+        });
+        assert_eq!(engine.router_name(), "steiner");
+        assert_eq!(MappingEngine::default().router_name(), "pathfinder");
+        // forks keep the selection (with a fresh arena)
+        assert_eq!(engine.fork().router_name(), "steiner");
+    }
+
+    #[test]
+    fn steiner_engine_maps_benchmarks_and_agrees_on_feasibility() {
+        let engine = MappingEngine::new(MapperConfig {
+            router_steiner: true,
+            ..MapperConfig::default()
+        });
+        for name in ["SOB", "GB", "RGB", "NMS"] {
+            let d = benchmarks::benchmark(name);
+            let l = full_layout(10, 10, &d);
+            let m = engine.map(&d, &l);
+            assert!(m.is_mapped(), "{name} must map with the Steiner router");
+            assert!(m.mapping().unwrap().validate(&d, &l).is_empty(), "{name}");
+        }
+        // infeasible stays infeasible: missing group support is decided
+        // before routing, whatever the router
+        let d = benchmarks::benchmark("BIL");
+        let l = Layout::full(Grid::new(10, 10), GroupSet::from_groups(&[OpGroup::Arith]));
+        assert!(!engine.map(&d, &l).is_mapped());
+    }
+
+    #[test]
+    fn steiner_warm_start_repairs_single_removal() {
+        let d = Dfg::new(
+            "chain",
+            vec![Op::Load, Op::Add, Op::Mul, Op::Store],
+            vec![(0, 1), (1, 2), (2, 3)],
+        );
+        let full = full_layout(6, 6, &d);
+        let engine = MappingEngine::new(MapperConfig {
+            router_steiner: true,
+            ..MapperConfig::default()
+        });
+        let witness = engine.map(&d, &full).into_mapping().expect("chain maps on 6x6");
+        let neighbor = full.without_group(witness.node_cell[1], OpGroup::Arith);
+        match engine.remap_from(&witness, &d, &neighbor) {
+            MapOutcome::Mapped { mapping, stats } => {
+                assert!(stats.warm, "one-removal neighbor must take the warm path");
+                assert!(mapping.validate(&d, &neighbor).is_empty());
+            }
+            MapOutcome::Failed { failure, .. } => {
+                panic!("single-removal neighbor must remap: {failure}")
+            }
+        }
     }
 
     #[test]

@@ -11,8 +11,13 @@
 //!    topological order, stores drained to the border) and
 //!    [`PathFinderRouter`] ([`route`]: negotiated-congestion A* over the
 //!    4NN switch network; links carry one value stream, but edges with
-//!    the same source share links for free). Alternative placers/routers
-//!    plug in via [`MappingEngine::with_strategies`].
+//!    the same source share links for free). The opt-in
+//!    [`SteinerRouter`] (`MapperConfig::router_steiner`) routes each
+//!    multi-fanout net as one shared-trunk Steiner tree instead of
+//!    edge-by-edge, optionally weighting negotiation by per-net
+//!    criticality — see `docs/ROUTER.md` for the full router internals
+//!    guide. Alternative placers/routers plug in via
+//!    [`MappingEngine::with_strategies`].
 //! 2. **The engine** ([`engine`]) — drives the strategies through the
 //!    reserve-on-demand loop (evict the compute cell next to the
 //!    most-overused link, re-place, re-route) and resolves every
@@ -30,6 +35,30 @@
 //! The engine is deterministic for a given seed; multiple placement
 //! attempts perturb tie-breaks. The pre-engine [`Mapper`] type survives
 //! as a thin deprecated wrapper.
+//!
+//! ```
+//! use helex::{MappingEngine, MapperConfig};
+//! use helex::cgra::{Grid, Layout};
+//! use helex::dfg::benchmarks;
+//!
+//! let dfg = benchmarks::benchmark("SOB");
+//! let layout = Layout::full(Grid::new(6, 6), dfg.groups_used());
+//!
+//! // Default engine: legacy edge-by-edge PathFinder routing.
+//! let engine = MappingEngine::default();
+//! assert_eq!(engine.router_name(), "pathfinder");
+//! let mapping = engine.map(&dfg, &layout).into_mapping().unwrap();
+//! assert!(mapping.validate(&dfg, &layout).is_empty());
+//!
+//! // Opt into the Steiner multi-fanout router: same feasibility
+//! // verdicts, shared-trunk routes.
+//! let steiner = MappingEngine::new(MapperConfig {
+//!     router_steiner: true,
+//!     ..MapperConfig::default()
+//! });
+//! assert_eq!(steiner.router_name(), "steiner");
+//! assert!(steiner.map(&dfg, &layout).is_mapped());
+//! ```
 
 pub mod engine;
 pub mod place;
@@ -37,7 +66,7 @@ pub mod route;
 
 pub use engine::{
     GreedyTopoPlacer, MapFailure, MapOutcome, MapRequest, MapSetFailure, MapStats, MappingEngine,
-    PathFinderRouter, PlacementStrategy, RoutingStrategy,
+    PathFinderRouter, PlacementStrategy, RoutingStrategy, SteinerRouter,
 };
 
 use crate::cgra::{CellId, CellSet, Grid, Layout};
@@ -62,6 +91,17 @@ pub struct MapperConfig {
     /// [`MappingEngine`]); disable for micro-benchmarks that re-map the
     /// same pair on purpose.
     pub feasibility_cache: bool,
+    /// Select the Steiner multi-fanout router ([`SteinerRouter`]):
+    /// edges sharing a source are routed together as one shared-trunk
+    /// tree instead of independently. Off by default — the legacy
+    /// edge-by-edge [`PathFinderRouter`] keeps its byte-identical
+    /// traces. Config key `mapper.router.steiner`.
+    pub router_steiner: bool,
+    /// Weight congestion negotiation by per-net criticality (longest-
+    /// path slack): critical nets pay less to hold contested links, so
+    /// negotiation converges in fewer rip-up rounds. Only consulted by
+    /// the Steiner router. Config key `mapper.router.criticality`.
+    pub router_criticality: bool,
 }
 
 impl Default for MapperConfig {
@@ -74,6 +114,8 @@ impl Default for MapperConfig {
             present_penalty: 2.0,
             seed: 0xC6A1,
             feasibility_cache: true,
+            router_steiner: false,
+            router_criticality: false,
         }
     }
 }
@@ -93,6 +135,8 @@ impl std::hash::Hash for MapperConfig {
             present_penalty,
             seed,
             feasibility_cache,
+            router_steiner,
+            router_criticality,
         } = self;
         route_iters.hash(state);
         placement_attempts.hash(state);
@@ -101,6 +145,14 @@ impl std::hash::Hash for MapperConfig {
         present_penalty.to_bits().hash(state);
         seed.hash(state);
         feasibility_cache.hash(state);
+        // Router-selection knobs participate only when non-default so
+        // every fingerprint, derived seed and run-cache key from before
+        // they existed is reproduced bit-for-bit (same gating as
+        // `FabricSpec` in the wire codec).
+        if *router_steiner || *router_criticality {
+            router_steiner.hash(state);
+            router_criticality.hash(state);
+        }
     }
 }
 

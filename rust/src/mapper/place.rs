@@ -4,6 +4,26 @@
 //! attempt), compute nodes are placed in topological order on the
 //! compatible free interior cell closest to their placed predecessors,
 //! stores drain to the border cell nearest their producer.
+//!
+//! The engine drives [`place`] through its placement strategy; it is
+//! equally usable standalone:
+//!
+//! ```
+//! use helex::cgra::{Grid, Layout};
+//! use helex::dfg::Dfg;
+//! use helex::mapper::place::place;
+//! use helex::ops::{GroupSet, Op};
+//! use helex::util::rng::Rng;
+//!
+//! let dfg = Dfg::new("pipe", vec![Op::Load, Op::Add, Op::Store], vec![(0, 1), (1, 2)]);
+//! let layout = Layout::full(Grid::new(5, 5), GroupSet::all_compute());
+//! let cells = place(&dfg, &layout, &[], &mut Rng::seed(7)).expect("a 5x5 grid fits 3 nodes");
+//!
+//! assert_eq!(cells.len(), dfg.num_nodes());
+//! // Load and Store land on I/O border cells, the Add on a compute cell.
+//! assert!(layout.grid.is_io(cells[0]) && layout.grid.is_io(cells[2]));
+//! assert!(layout.grid.is_compute(cells[1]));
+//! ```
 
 use crate::cgra::{CellId, Layout};
 use crate::dfg::Dfg;

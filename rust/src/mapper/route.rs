@@ -16,11 +16,29 @@
 //! compute cell is reported as the `hot_cell` so the driver can apply
 //! reserve-on-demand.
 //!
+//! Two routers share this negotiation skeleton (see `docs/ROUTER.md`
+//! for the full internals guide):
+//!
+//! * the legacy **edge-by-edge** router ([`route`]) — each DFG edge is
+//!   an independent A* query; fan-out sharing emerges only through the
+//!   0.01 same-source reuse discount. Kept byte-identical: it is the
+//!   default and its traces are pinned by CI.
+//! * the **Steiner multi-fanout** router ([`steiner_route`], selected
+//!   via `MapperConfig::router_steiner`) — edges sharing a source form
+//!   one *net*, routed as a shared-trunk Steiner tree grown by repeated
+//!   nearest-sink attachment (multi-source A* from every tree cell to
+//!   the closest unconnected sink). One tree search replaces N
+//!   independent queries, trunk links are counted once, and per-net
+//!   criticality (longest-path slack, `router_criticality`) can scale
+//!   congestion penalties so critical nets hold contested links.
+//!
 //! Perf notes (EXPERIMENTS.md §Perf): the A* heuristic is the fabric's
 //! minimum hop count when the edge's source drives no links yet (every
 //! remaining hop then costs ≥ 1), and the 0.01-reuse floor otherwise —
 //! both admissible. Distance/parent arrays are reused across calls via
-//! generation stamps instead of reallocation.
+//! generation stamps instead of reallocation; the Steiner router keeps
+//! them in an engine-owned [`RouterArena`] that survives across the
+//! thousands of candidate feasibility tests one search performs.
 
 use crate::cgra::{CellId, Layout};
 use crate::fabric::Fabric;
@@ -106,8 +124,27 @@ impl AStarBuffers {
             generation: 0,
         }
     }
+    /// Resize for a (possibly different) grid; cheap when already sized.
+    fn ensure(&mut self, n: usize) {
+        if self.dist.len() < n {
+            self.dist.resize(n, f64::INFINITY);
+            self.prev.resize(n, u16::MAX);
+            self.stamp.resize(n, 0);
+        }
+    }
     fn begin(&mut self) {
+        // long-lived arenas survive billions of searches: on generation
+        // wrap, reset the stamps so stale entries cannot alias as current
+        if self.generation == u32::MAX {
+            self.stamp.fill(0);
+            self.generation = 0;
+        }
         self.generation += 1;
+    }
+    /// Frontier-size hint for the search heap: the cell count (searches
+    /// can push more entries than cells, but this bounds the common case).
+    fn capacity_hint(&self) -> usize {
+        self.dist.len()
     }
     #[inline]
     fn get_dist(&self, c: usize) -> f64 {
@@ -132,6 +169,17 @@ pub fn route(
     placement: &[CellId],
     cfg: &MapperConfig,
 ) -> RouteOutcome {
+    route_rounds(dfg, layout, placement, cfg).0
+}
+
+/// Like [`route`], additionally reporting the negotiation rounds
+/// consumed — the rip-up count tracked by the `route::steiner` bench.
+pub fn route_rounds(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    cfg: &MapperConfig,
+) -> (RouteOutcome, usize) {
     let g = &layout.grid;
     let f = layout.fabric();
     let nlinks = f.num_links();
@@ -159,8 +207,10 @@ pub fn route(
     let mut best_overuse = usize::MAX;
     let mut stalled = 0usize;
     let stall_limit = 3;
+    let mut rounds = 0usize;
 
     for _round in 0..cfg.route_iters {
+        rounds += 1;
         let mut usage: Vec<LinkUse> = vec![LinkUse::default(); nlinks];
         src_links.clear();
         for &ei in &order {
@@ -189,7 +239,7 @@ pub fn route(
         let over: Vec<usize> =
             (0..nlinks).filter(|&l| usage[l].overuse(cap) > 0).collect();
         if over.is_empty() {
-            return RouteOutcome::Routed(paths);
+            return (RouteOutcome::Routed(paths), rounds);
         }
         // accumulate history on overused links
         let mut total_overuse = 0;
@@ -229,7 +279,7 @@ pub fn route(
         .chain(f.neighbors(cell))
         .find(|&c| g.is_compute(c) && occupied.contains(&c))
         .unwrap_or(cell);
-    RouteOutcome::Congested { hot_cell, hot_links, overuse: best_overuse }
+    (RouteOutcome::Congested { hot_cell, hot_links, overuse: best_overuse }, rounds)
 }
 
 /// Incremental rip-up-and-reroute: re-route only the `affected` edges of
@@ -366,7 +416,11 @@ fn astar(
     let h = |c: CellId| f.min_hops(c, dst) as f64 * h_scale;
     let free_streams = f.link_cap().saturating_sub(1);
     buf.begin();
-    let mut heap = BinaryHeap::with_capacity(64);
+    // Size the frontier for the grid instead of a hardcoded 64: congested
+    // searches visit a large fraction of the cells, and re-pushes on
+    // relaxation mean the heap can exceed the cell count, so a too-small
+    // capacity reallocates repeatedly in the inner loop.
+    let mut heap = BinaryHeap::with_capacity(buf.capacity_hint());
     buf.set(src as usize, 0.0, src);
     heap.push(HeapEntry { priority: h(src), cost: 0.0, cell: src });
     while let Some(HeapEntry { cost, cell, .. }) = heap.pop() {
@@ -396,8 +450,10 @@ fn astar(
             }
         }
     }
-    // reconstruct
-    let mut path = vec![dst];
+    // reconstruct; the uncongested length is min_hops + 1 cells, so
+    // reserve that up front (detours past it are rare)
+    let mut path = Vec::with_capacity(f.min_hops(src, dst) + 1);
+    path.push(dst);
     let mut cur = dst;
     while cur != src {
         cur = buf.prev[cur as usize];
@@ -406,6 +462,475 @@ fn astar(
     }
     path.reverse();
     path
+}
+
+// ---- Steiner multi-fanout routing ----
+
+/// Word-parallel membership set over link ids. Unlike
+/// [`crate::cgra::CellSet`] this is `usize`-indexed: `num_links` is
+/// `num_cells * num_dirs` and can exceed `u16::MAX` on large
+/// multi-direction fabrics.
+#[derive(Clone, Default)]
+struct LinkSet {
+    words: Vec<u64>,
+}
+
+impl LinkSet {
+    fn ensure(&mut self, nbits: usize) {
+        let words = (nbits + 63) / 64;
+        if self.words.len() < words {
+            self.words.resize(words, 0);
+        }
+    }
+    /// Word-parallel reset: one write per 64 links.
+    fn clear(&mut self) {
+        self.words.fill(0);
+    }
+    #[inline]
+    fn contains(&self, i: usize) -> bool {
+        self.words[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+    #[inline]
+    fn insert(&mut self, i: usize) {
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+}
+
+/// Engine-owned router scratch, reused across the thousands of candidate
+/// feasibility tests one search performs: the generation-stamped A*
+/// buffers, the per-link usage/history tables and the per-net tree
+/// bookkeeping all survive between calls instead of reallocating in the
+/// router inner loop.
+///
+/// [`crate::mapper::SteinerRouter`] owns one behind a `RefCell`; forked
+/// engines ([`crate::mapper::MappingEngine::fork`]) get a fresh arena,
+/// so parallel search workers never share scratch and the deterministic
+/// reduction is untouched.
+pub struct RouterArena {
+    astar: AStarBuffers,
+    /// Distinct-source (= distinct-net) count per link this round.
+    usage: Vec<u32>,
+    /// Congestion history per link; reset per routing call.
+    history: Vec<f64>,
+    /// Links of the net tree currently being grown (word-parallel).
+    tree_links: LinkSet,
+    /// Parent cell toward the net source, per tree cell.
+    tree_parent: Vec<CellId>,
+    /// Generation stamp marking tree membership (avoids clearing).
+    tree_stamp: Vec<u32>,
+    tree_gen: u32,
+}
+
+impl Default for RouterArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RouterArena {
+    pub fn new() -> Self {
+        Self {
+            astar: AStarBuffers::new(0),
+            usage: Vec::new(),
+            history: Vec::new(),
+            tree_links: LinkSet::default(),
+            tree_parent: Vec::new(),
+            tree_stamp: Vec::new(),
+            tree_gen: 0,
+        }
+    }
+
+    /// Lazily size every table for a fabric; cheap when already sized.
+    fn ensure(&mut self, num_cells: usize, num_links: usize) {
+        self.astar.ensure(num_cells);
+        if self.usage.len() < num_links {
+            self.usage.resize(num_links, 0);
+            self.history.resize(num_links, 0.0);
+        }
+        self.tree_links.ensure(num_links);
+        if self.tree_parent.len() < num_cells {
+            self.tree_parent.resize(num_cells, u16::MAX);
+            self.tree_stamp.resize(num_cells, 0);
+        }
+    }
+
+    /// Start a fresh net tree (with the same wrap guard as the A*
+    /// stamps: long-lived arenas survive billions of trees).
+    fn begin_tree(&mut self) {
+        if self.tree_gen == u32::MAX {
+            self.tree_stamp.fill(0);
+            self.tree_gen = 0;
+        }
+        self.tree_gen += 1;
+        self.tree_links.clear();
+    }
+}
+
+/// One multi-fanout net: every DFG edge sharing a source node, routed
+/// together as one shared-trunk Steiner tree.
+struct Net {
+    src_node: u32,
+    src_cell: CellId,
+    /// Deduped sink cells, first-encounter edge order.
+    sinks: Vec<CellId>,
+    /// Indices into `dfg.edges` belonging to this net.
+    edges: Vec<usize>,
+}
+
+/// Group `dfg.edges` by source node, in first-encounter order.
+fn build_nets(dfg: &Dfg, placement: &[CellId]) -> Vec<Net> {
+    let mut by_src: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    let mut nets: Vec<Net> = Vec::new();
+    for (ei, &(s, d)) in dfg.edges.iter().enumerate() {
+        let idx = *by_src.entry(s).or_insert_with(|| {
+            nets.push(Net {
+                src_node: s,
+                src_cell: placement[s as usize],
+                sinks: Vec::new(),
+                edges: Vec::new(),
+            });
+            nets.len() - 1
+        });
+        let dst = placement[d as usize];
+        let net = &mut nets[idx];
+        if dst != net.src_cell && !net.sinks.contains(&dst) {
+            net.sinks.push(dst);
+        }
+        net.edges.push(ei);
+    }
+    nets
+}
+
+/// Per-node criticality in `[0, 1]`: longest path through the node
+/// (forward depth + backward depth − 1, in nodes) over the DFG's
+/// critical-path length. A net inherits its source node's score;
+/// computed once per routing call.
+fn node_criticality(dfg: &Dfg) -> Vec<f64> {
+    let n = dfg.num_nodes();
+    let Some(order) = dfg.topo_order() else {
+        return vec![1.0; n];
+    };
+    let preds = dfg.preds();
+    let succs = dfg.succs();
+    // longest path ending at / starting from each node, in nodes
+    let mut down = vec![1u32; n];
+    for &u in &order {
+        for &p in &preds[u as usize] {
+            down[u as usize] = down[u as usize].max(down[p as usize] + 1);
+        }
+    }
+    let mut up = vec![1u32; n];
+    for &u in order.iter().rev() {
+        for &s in &succs[u as usize] {
+            up[u as usize] = up[u as usize].max(up[s as usize] + 1);
+        }
+    }
+    let total = (0..n).map(|i| down[i] + up[i] - 1).max().unwrap_or(1).max(1) as f64;
+    (0..n).map(|i| (down[i] + up[i] - 1) as f64 / total).collect()
+}
+
+/// Congestion-penalty scale for a net: critical nets pay less to hold
+/// contested links (they have no slack to detour), so negotiation
+/// displaces slack nets first and converges in fewer rip-up rounds.
+#[inline]
+fn crit_factor(crit: Option<&Vec<f64>>, src_node: u32) -> f64 {
+    match crit {
+        Some(c) => 1.0 - 0.5 * c[src_node as usize],
+        None => 1.0,
+    }
+}
+
+/// Route all edges of a placed DFG as shared-trunk Steiner trees, one
+/// per multi-fanout net, under the same negotiated-congestion loop as
+/// [`route`]. Fabric-generic: trunk growth only uses
+/// `neighbor`/`link`/`min_hops`, so Mesh4, Mesh8 and Express all
+/// benefit. Selected via `MapperConfig::router_steiner`.
+pub fn steiner_route(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    cfg: &MapperConfig,
+    arena: &mut RouterArena,
+) -> RouteOutcome {
+    steiner_route_rounds(dfg, layout, placement, cfg, arena).0
+}
+
+/// Like [`steiner_route`], additionally reporting negotiation rounds
+/// consumed (the rip-up count benchmarked by `route::steiner`).
+pub fn steiner_route_rounds(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    cfg: &MapperConfig,
+    arena: &mut RouterArena,
+) -> (RouteOutcome, usize) {
+    let g = &layout.grid;
+    let f = layout.fabric();
+    let nlinks = f.num_links();
+    let cap = f.link_cap();
+    arena.ensure(g.num_cells(), nlinks);
+    arena.history[..nlinks].fill(0.0);
+
+    let nets = build_nets(dfg, placement);
+    // Route wide-span nets first: they have the fewest detour options
+    // (same rationale as the legacy longest-edge-first order).
+    let mut order: Vec<usize> = (0..nets.len()).collect();
+    order.sort_by_key(|&i| {
+        let span =
+            nets[i].sinks.iter().map(|&s| f.min_hops(nets[i].src_cell, s)).max().unwrap_or(0);
+        std::cmp::Reverse(span as u32 * 1000 + i as u32)
+    });
+    let crit = cfg.router_criticality.then(|| node_criticality(dfg));
+
+    let mut paths: Vec<Vec<CellId>> = vec![Vec::new(); dfg.edges.len()];
+    let mut best_overuse = usize::MAX;
+    let mut stalled = 0usize;
+    let stall_limit = 3;
+    let mut rounds = 0usize;
+
+    for _round in 0..cfg.route_iters {
+        rounds += 1;
+        arena.usage[..nlinks].fill(0);
+        for &ni in &order {
+            let factor = crit_factor(crit.as_ref(), nets[ni].src_node);
+            route_net_tree(f, &nets[ni], placement, dfg, factor, cfg, arena, &mut paths);
+        }
+        let mut total_overuse = 0usize;
+        for l in 0..nlinks {
+            let o = (arena.usage[l] as usize).saturating_sub(cap);
+            if o > 0 {
+                arena.history[l] += cfg.hist_increment * o as f64;
+                total_overuse += o;
+            }
+        }
+        if total_overuse == 0 {
+            return (RouteOutcome::Routed(paths), rounds);
+        }
+        if total_overuse < best_overuse {
+            best_overuse = total_overuse;
+            stalled = 0;
+        } else {
+            stalled += 1;
+            if stalled >= stall_limit {
+                break; // negotiation stalled; hand over to reserve-on-demand
+            }
+        }
+    }
+
+    // Same hot-cell diagnosis as the legacy router, read off the final
+    // round's usage counters.
+    let mut hot_links: Vec<usize> =
+        (0..nlinks).filter(|&l| arena.usage[l] as usize > cap).collect();
+    hot_links.sort_by_key(|&l| {
+        (std::cmp::Reverse(arena.usage[l] as usize - cap), std::cmp::Reverse(l))
+    });
+    let hottest = hot_links.first().copied().unwrap_or(0);
+    let cell = (hottest / f.num_dirs()) as CellId;
+    let dir = hottest % f.num_dirs();
+    let candidates = [Some(cell), f.neighbor(cell, dir)];
+    let hot_cell = candidates
+        .into_iter()
+        .flatten()
+        .chain(f.neighbors(cell))
+        .find(|&c| g.is_compute(c) && placement.contains(&c))
+        .unwrap_or(cell);
+    (RouteOutcome::Congested { hot_cell, hot_links, overuse: best_overuse }, rounds)
+}
+
+/// Net-granular incremental reroute for the warm-start path: nets with
+/// no affected edge keep their `fixed_paths` pinned (their link usage is
+/// seeded into every round); nets touching an affected edge are ripped
+/// up and re-grown whole — a tree cannot be repaired one branch at a
+/// time without losing the shared trunk. Returns the complete path set
+/// once overuse reaches zero, or `None` to fall back to cold mapping.
+pub fn steiner_route_partial(
+    dfg: &Dfg,
+    layout: &Layout,
+    placement: &[CellId],
+    fixed_paths: &[Vec<CellId>],
+    affected: &[usize],
+    cfg: &MapperConfig,
+    arena: &mut RouterArena,
+) -> Option<Vec<Vec<CellId>>> {
+    let g = &layout.grid;
+    let f = layout.fabric();
+    let nlinks = f.num_links();
+    let cap = f.link_cap();
+    arena.ensure(g.num_cells(), nlinks);
+    arena.history[..nlinks].fill(0.0);
+
+    let mut affected_mask = vec![false; dfg.edges.len()];
+    for &ei in affected {
+        affected_mask[ei] = true;
+    }
+    let nets = build_nets(dfg, placement);
+    let (dirty, pinned): (Vec<usize>, Vec<usize>) =
+        (0..nets.len()).partition(|&ni| nets[ni].edges.iter().any(|&ei| affected_mask[ei]));
+
+    // Usage contributed by pinned nets: constant across rounds, trunk
+    // links deduped per net (edges of one net share links for free).
+    let mut fixed_usage = vec![0u32; nlinks];
+    let mut seen = LinkSet::default();
+    seen.ensure(nlinks);
+    for &ni in &pinned {
+        for &ei in &nets[ni].edges {
+            for w in fixed_paths[ei].windows(2) {
+                let link = f.link(w[0], direction(f, w[0], w[1]));
+                if !seen.contains(link) {
+                    seen.insert(link);
+                    fixed_usage[link] += 1;
+                }
+            }
+        }
+        seen.clear();
+    }
+
+    let mut order: Vec<usize> = dirty;
+    order.sort_by_key(|&i| {
+        let span =
+            nets[i].sinks.iter().map(|&s| f.min_hops(nets[i].src_cell, s)).max().unwrap_or(0);
+        std::cmp::Reverse(span as u32 * 1000 + i as u32)
+    });
+    let crit = cfg.router_criticality.then(|| node_criticality(dfg));
+
+    let mut paths = fixed_paths.to_vec();
+    let mut best_overuse = usize::MAX;
+    let mut stalled = 0usize;
+    let stall_limit = 3;
+
+    for _round in 0..cfg.route_iters {
+        arena.usage[..nlinks].copy_from_slice(&fixed_usage);
+        for &ni in &order {
+            let factor = crit_factor(crit.as_ref(), nets[ni].src_node);
+            route_net_tree(f, &nets[ni], placement, dfg, factor, cfg, arena, &mut paths);
+        }
+        let mut total_overuse = 0usize;
+        for l in 0..nlinks {
+            let o = (arena.usage[l] as usize).saturating_sub(cap);
+            if o > 0 {
+                arena.history[l] += cfg.hist_increment * o as f64;
+                total_overuse += o;
+            }
+        }
+        if total_overuse == 0 {
+            return Some(paths);
+        }
+        if total_overuse < best_overuse {
+            best_overuse = total_overuse;
+            stalled = 0;
+        } else {
+            stalled += 1;
+            if stalled >= stall_limit {
+                break;
+            }
+        }
+    }
+    None
+}
+
+/// Grow one net's Steiner tree by repeated nearest-sink attachment and
+/// write its per-edge paths into `paths`.
+///
+/// Each attachment is a multi-source A*: every tree cell seeds the
+/// frontier at cost 0 and the search terminates at the first (=
+/// cheapest) unconnected sink it pops, so the nearest sink attaches to
+/// whatever trunk already exists — riding the tree is free, which is
+/// exactly the fan-out sharing the legacy router only approximates with
+/// its 0.01 reuse discount. The admissible heuristic is the cheapest
+/// `min_hops` to any unconnected sink. Tree links are recorded
+/// word-parallel in the arena's [`LinkSet`] and counted once into the
+/// round's usage table, whatever the fan-out.
+#[allow(clippy::too_many_arguments)]
+fn route_net_tree(
+    f: &Fabric,
+    net: &Net,
+    placement: &[CellId],
+    dfg: &Dfg,
+    crit_factor: f64,
+    cfg: &MapperConfig,
+    arena: &mut RouterArena,
+    paths: &mut [Vec<CellId>],
+) {
+    arena.begin_tree();
+    let gen = arena.tree_gen;
+    arena.tree_stamp[net.src_cell as usize] = gen;
+    arena.tree_parent[net.src_cell as usize] = net.src_cell;
+    let mut tree_cells: Vec<CellId> = vec![net.src_cell];
+    let mut remaining: Vec<CellId> = net.sinks.clone();
+    let free_streams = f.link_cap().saturating_sub(1);
+
+    while !remaining.is_empty() {
+        arena.astar.begin();
+        let mut heap = BinaryHeap::with_capacity(arena.astar.capacity_hint());
+        let h = |c: CellId| -> f64 {
+            remaining.iter().map(|&s| f.min_hops(c, s)).min().unwrap_or(0) as f64 * 0.999
+        };
+        for &tc in &tree_cells {
+            arena.astar.set(tc as usize, 0.0, tc);
+            heap.push(HeapEntry { priority: h(tc), cost: 0.0, cell: tc });
+        }
+        let mut found: Option<CellId> = None;
+        while let Some(HeapEntry { cost, cell, .. }) = heap.pop() {
+            if remaining.contains(&cell) {
+                found = Some(cell);
+                break;
+            }
+            if cost > arena.astar.get_dist(cell as usize) {
+                continue;
+            }
+            for d in 0..f.num_dirs() {
+                let Some(next) = f.neighbor(cell, d) else { continue };
+                let link = f.link(cell, d);
+                // other nets' streams on this link price it; this net's
+                // own trunk is free by construction (tree cells seed the
+                // frontier at cost 0, so trunk links are never re-paid)
+                let shared = arena.usage[link] as usize;
+                let step = 1.0
+                    + (arena.history[link]
+                        + cfg.present_penalty * shared.saturating_sub(free_streams) as f64)
+                        * crit_factor;
+                let nc = cost + step;
+                if nc < arena.astar.get_dist(next as usize) {
+                    arena.astar.set(next as usize, nc, cell);
+                    heap.push(HeapEntry { priority: nc + h(next), cost: nc, cell: next });
+                }
+            }
+        }
+        let sink = found.expect("fabric is connected; every sink is reachable");
+        // splice the new branch: walk the search parents back to the
+        // attachment point, recording tree parents and trunk links
+        let mut cur = sink;
+        while arena.tree_stamp[cur as usize] != gen {
+            let prev = arena.astar.prev[cur as usize];
+            debug_assert!(prev != u16::MAX, "branch must reach the tree");
+            arena.tree_parent[cur as usize] = prev;
+            arena.tree_stamp[cur as usize] = gen;
+            tree_cells.push(cur);
+            let link = f.link(prev, direction(f, prev, cur));
+            if !arena.tree_links.contains(link) {
+                arena.tree_links.insert(link);
+                arena.usage[link] += 1;
+            }
+            cur = prev;
+        }
+        remaining.retain(|&s| s != sink);
+    }
+
+    // per-edge paths: walk tree parents from each sink back to the
+    // source (parallel edges to one sink share the same trunk path)
+    for &ei in &net.edges {
+        let (_, dn) = dfg.edges[ei];
+        let dst = placement[dn as usize];
+        let mut path = Vec::with_capacity(f.min_hops(net.src_cell, dst) + 1);
+        path.push(dst);
+        let mut cur = dst;
+        while cur != net.src_cell {
+            cur = arena.tree_parent[cur as usize];
+            path.push(cur);
+        }
+        path.reverse();
+        paths[ei] = path;
+    }
 }
 
 #[cfg(test)]
@@ -681,6 +1206,213 @@ mod tests {
             g.cell(2, 7),
         ];
         (d, l, p)
+    }
+
+    fn steiner_cfg() -> MapperConfig {
+        MapperConfig { router_steiner: true, ..Default::default() }
+    }
+
+    #[test]
+    fn steiner_routes_straight_line() {
+        let (d, l, p) = straight_line_dfg();
+        let mut arena = RouterArena::new();
+        match steiner_route(&d, &l, &p, &steiner_cfg(), &mut arena) {
+            RouteOutcome::Routed(paths) => {
+                assert_eq!(paths[0].first(), Some(&p[0]));
+                assert_eq!(paths[0].last(), Some(&p[1]));
+                assert_eq!(paths[0].len(), 3);
+                assert_eq!(paths[1].len(), 3);
+            }
+            RouteOutcome::Congested { .. } => panic!("line must route"),
+        }
+    }
+
+    #[test]
+    fn steiner_fanout_shares_one_trunk() {
+        // one load feeding two consumers two rows apart: the tree must
+        // route both sinks, and the trunk prefix is shared by
+        // construction — each tree link is counted once, so the total
+        // distinct links used stay at most the sum of both sink walks.
+        let d = Dfg::new(
+            "fan",
+            vec![Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 1), (0, 2), (1, 3), (2, 4)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![g.cell(0, 2), g.cell(3, 2), g.cell(3, 3), g.cell(5, 2), g.cell(5, 3)];
+        let mut arena = RouterArena::new();
+        match steiner_route(&d, &l, &p, &steiner_cfg(), &mut arena) {
+            RouteOutcome::Routed(paths) => {
+                let m = crate::mapper::Mapping {
+                    node_cell: p.clone(),
+                    edge_paths: paths.clone(),
+                    reserved: vec![],
+                };
+                assert!(m.validate(&d, &l).is_empty());
+                // both fan-out paths leave the source over the SAME first
+                // link: the trunk is shared, not re-derived per edge
+                assert_eq!(paths[0][1], paths[1][1], "fan-out must share its trunk");
+            }
+            RouteOutcome::Congested { .. } => panic!("fanout must route"),
+        }
+    }
+
+    #[test]
+    fn steiner_deterministic_and_arena_reusable() {
+        let (d, l, p) = straight_line_dfg();
+        let cfg = steiner_cfg();
+        let mut arena = RouterArena::new();
+        let RouteOutcome::Routed(a) = steiner_route(&d, &l, &p, &cfg, &mut arena) else {
+            panic!("must route");
+        };
+        // same arena, different grid size, then back: stamps must keep
+        // reuse sound
+        let d2 = Dfg::new("line2", vec![Op::Load, Op::Add, Op::Store], vec![(0, 1), (1, 2)]);
+        let l2 = Layout::full(Grid::new(8, 8), GroupSet::all_compute());
+        let g2 = &l2.grid;
+        let p2 = vec![g2.cell(3, 0), g2.cell(3, 4), g2.cell(3, 7)];
+        assert!(matches!(
+            steiner_route(&d2, &l2, &p2, &cfg, &mut arena),
+            RouteOutcome::Routed(_)
+        ));
+        let RouteOutcome::Routed(b) = steiner_route(&d, &l, &p, &cfg, &mut arena) else {
+            panic!("must route");
+        };
+        assert_eq!(a, b, "arena reuse must not change results");
+    }
+
+    #[test]
+    fn steiner_reports_jam_congestion() {
+        let (d, l, p) = jam_on(Fabric::mesh4(Grid::new(3, 9)));
+        let cfg = MapperConfig { route_iters: 3, ..steiner_cfg() };
+        let mut arena = RouterArena::new();
+        match steiner_route(&d, &l, &p, &cfg, &mut arena) {
+            RouteOutcome::Routed(_) => panic!("4 values cannot fit a 3-link cut"),
+            RouteOutcome::Congested { hot_links, overuse, .. } => {
+                assert!(!hot_links.is_empty());
+                assert!(overuse > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn steiner_clears_jam_with_capacity_and_express() {
+        use crate::fabric::{FabricSpec, Topology};
+        let mut arena = RouterArena::new();
+        let cfg = MapperConfig { route_iters: 3, ..steiner_cfg() };
+        for spec in [
+            FabricSpec { link_cap: 2, ..FabricSpec::default() },
+            FabricSpec { topology: Topology::Express { stride: 2 }, ..FabricSpec::default() },
+        ] {
+            let (d, l, p) = jam_on(Fabric::new(Grid::new(3, 9), spec));
+            match steiner_route(&d, &l, &p, &cfg, &mut arena) {
+                RouteOutcome::Routed(paths) => {
+                    let m = crate::mapper::Mapping {
+                        node_cell: p,
+                        edge_paths: paths,
+                        reserved: vec![],
+                    };
+                    assert!(m.validate(&d, &l).is_empty());
+                }
+                RouteOutcome::Congested { .. } => panic!("provisioned fabric must clear the jam"),
+            }
+        }
+    }
+
+    #[test]
+    fn steiner_criticality_still_validates() {
+        // a diamond with a long and a short arm: criticality weighting
+        // must only re-weight costs, never produce invalid routes
+        let d = Dfg::new(
+            "diamond",
+            vec![Op::Load, Op::Add, Op::Mul, Op::Add, Op::Add, Op::Store],
+            vec![(0, 1), (0, 2), (1, 3), (3, 4), (2, 4), (4, 5)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let p = vec![
+            g.cell(0, 2),
+            g.cell(1, 1),
+            g.cell(1, 3),
+            g.cell(2, 1),
+            g.cell(3, 2),
+            g.cell(5, 2),
+        ];
+        let cfg = MapperConfig { router_criticality: true, ..steiner_cfg() };
+        let mut arena = RouterArena::new();
+        match steiner_route(&d, &l, &p, &cfg, &mut arena) {
+            RouteOutcome::Routed(paths) => {
+                let m = crate::mapper::Mapping { node_cell: p, edge_paths: paths, reserved: vec![] };
+                assert!(m.validate(&d, &l).is_empty());
+            }
+            RouteOutcome::Congested { .. } => panic!("diamond must route"),
+        }
+    }
+
+    #[test]
+    fn steiner_partial_pins_untouched_nets() {
+        // same scenario as route_partial_keeps_fixed_paths_pinned, but
+        // net-granular: the net of the untouched source keeps its path
+        let d = Dfg::new(
+            "pin",
+            vec![Op::Load, Op::Load, Op::Add, Op::Add, Op::Store, Op::Store],
+            vec![(0, 2), (1, 3), (2, 4), (3, 5)],
+        );
+        let l = Layout::full(Grid::new(6, 6), GroupSet::all_compute());
+        let g = &l.grid;
+        let mut p = vec![
+            g.cell(0, 1),
+            g.cell(0, 4),
+            g.cell(2, 1),
+            g.cell(2, 4),
+            g.cell(5, 1),
+            g.cell(5, 4),
+        ];
+        let cfg = steiner_cfg();
+        let mut arena = RouterArena::new();
+        let RouteOutcome::Routed(paths) = steiner_route(&d, &l, &p, &cfg, &mut arena) else {
+            panic!("must route");
+        };
+        // displace node 3 and reroute its incident edges (1 and 3)
+        p[3] = g.cell(2, 3);
+        let new = steiner_route_partial(&d, &l, &p, &paths, &[1, 3], &cfg, &mut arena)
+            .expect("partial");
+        assert_eq!(new[0], paths[0], "net of node 0 untouched: edge 0 pinned");
+        assert_eq!(new[2], paths[2], "net of node 2 untouched: edge 2 pinned");
+        assert_eq!(new[1].first(), Some(&p[1]));
+        assert_eq!(new[1].last(), Some(&p[3]));
+        let m = crate::mapper::Mapping { node_cell: p, edge_paths: new, reserved: vec![] };
+        assert!(m.validate(&d, &l).is_empty());
+    }
+
+    #[test]
+    fn node_criticality_peaks_on_the_long_arm() {
+        // 0 -> 1 -> 2 -> 4 (long arm), 0 -> 3 -> 4 (short arm)
+        let d = Dfg::new(
+            "crit",
+            vec![Op::Load, Op::Add, Op::Mul, Op::Add, Op::Store],
+            vec![(0, 1), (1, 2), (2, 4), (0, 3), (3, 4)],
+        );
+        let c = node_criticality(&d);
+        assert_eq!(c[0], 1.0, "source sits on the critical path");
+        assert_eq!(c[1], 1.0);
+        assert_eq!(c[2], 1.0);
+        assert_eq!(c[4], 1.0, "sink sits on the critical path");
+        assert!(c[3] < 1.0, "the short arm has slack: {}", c[3]);
+    }
+
+    #[test]
+    fn route_rounds_reports_ripups() {
+        let (d, l, p) = straight_line_dfg();
+        let cfg = MapperConfig::default();
+        let (out, rounds) = route_rounds(&d, &l, &p, &cfg);
+        assert!(matches!(out, RouteOutcome::Routed(_)));
+        assert_eq!(rounds, 1, "an uncongested line converges in one round");
+        let mut arena = RouterArena::new();
+        let (out, rounds) = steiner_route_rounds(&d, &l, &p, &steiner_cfg(), &mut arena);
+        assert!(matches!(out, RouteOutcome::Routed(_)));
+        assert_eq!(rounds, 1);
     }
 
     #[test]

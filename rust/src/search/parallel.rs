@@ -14,7 +14,13 @@
 //!    [forked](crate::mapper::MappingEngine::fork) with the feasibility
 //!    cache *disabled*: a cache hit could replay a mapping computed from
 //!    an older witness, which would make the returned witness depend on
-//!    which worker (and how many) had tested which layout before.
+//!    which worker (and how many) had tested which layout before. The
+//!    fork also hands each worker a **fresh router arena**
+//!    ([`crate::mapper::route::RouterArena`], cloned via the engine's
+//!    routing strategy): router scratch is never shared across threads,
+//!    so a routing call's output depends only on its arguments — pure by
+//!    construction, whichever router
+//!    ([legacy or Steiner](crate::mapper::route)) the config selects.
 //! 2. **Speculative prefetch, authoritative reduction.** Workers test
 //!    candidates speculatively ([`TestPool::prefetch`]); the reduction
 //!    then walks the batch in the original *branching order* and
@@ -33,6 +39,29 @@
 //! A single-threaded pool skips the prefetch entirely: the reduction's
 //! demand path then computes exactly the tests a serial run would, in
 //! the same order, through the same code.
+//!
+//! The contract is observable from the outside: the same exploration run
+//! at different `search_threads` widths returns identical results.
+//!
+//! ```
+//! use helex::cgra::Grid;
+//! use helex::dfg::Dfg;
+//! use helex::ops::Op;
+//! use helex::search::{Explorer, SearchConfig};
+//!
+//! let dfgs = vec![Dfg::new(
+//!     "pipe",
+//!     vec![Op::Load, Op::Add, Op::Store],
+//!     vec![(0, 1), (1, 2)],
+//! )];
+//! let run = |threads: usize| {
+//!     let cfg = SearchConfig { l_test: 40, search_threads: threads, ..Default::default() };
+//!     Explorer::new(Grid::new(6, 6)).dfgs(&dfgs).config(cfg).run().expect("maps")
+//! };
+//! let (serial, parallel) = (run(1), run(4));
+//! assert_eq!(serial.best_cost, parallel.best_cost);
+//! assert_eq!(serial.stats.tested, parallel.stats.tested);
+//! ```
 
 use crate::cgra::Layout;
 use crate::dfg::Dfg;

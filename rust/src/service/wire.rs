@@ -329,7 +329,7 @@ fn decode_search_config(j: &Json) -> Result<SearchConfig> {
 }
 
 fn encode_mapper_config(cfg: &MapperConfig) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("route_iters", Json::U64(cfg.route_iters as u64)),
         ("placement_attempts", Json::U64(cfg.placement_attempts as u64)),
         ("max_reserves", Json::U64(cfg.max_reserves as u64)),
@@ -337,7 +337,17 @@ fn encode_mapper_config(cfg: &MapperConfig) -> Json {
         ("present_penalty", Json::F64(cfg.present_penalty)),
         ("seed", Json::U64(cfg.seed)),
         ("feasibility_cache", Json::Bool(cfg.feasibility_cache)),
-    ])
+    ];
+    // router-selection knobs: emitted only when non-default, so every
+    // pre-router record re-encodes to its exact bytes (same pattern as
+    // the absent-when-default fabric key)
+    if cfg.router_steiner {
+        pairs.push(("router_steiner", Json::Bool(true)));
+    }
+    if cfg.router_criticality {
+        pairs.push(("router_criticality", Json::Bool(true)));
+    }
+    Json::obj(pairs)
 }
 
 fn decode_mapper_config(j: &Json) -> Result<MapperConfig> {
@@ -349,6 +359,14 @@ fn decode_mapper_config(j: &Json) -> Result<MapperConfig> {
         present_penalty: get_f64(j, "present_penalty")?,
         seed: get_u64(j, "seed")?,
         feasibility_cache: get_bool(j, "feasibility_cache")?,
+        router_steiner: match j.get("router_steiner") {
+            Some(_) => get_bool(j, "router_steiner")?,
+            None => false,
+        },
+        router_criticality: match j.get("router_criticality") {
+            Some(_) => get_bool(j, "router_criticality")?,
+            None => false,
+        },
     })
 }
 

@@ -33,6 +33,8 @@
 //! | `mapper.present_penalty` | float | `mapper.present_penalty` |
 //! | `mapper.seed` | int | `mapper.seed` (base seed; per-job seeds derive from it) |
 //! | `mapper.feasibility_cache` | bool | `mapper.feasibility_cache` |
+//! | `mapper.router.steiner` | bool | `mapper.router_steiner` (route multi-fanout nets as shared-trunk Steiner trees instead of edge-by-edge; default false keeps the legacy router's byte-identical traces) |
+//! | `mapper.router.criticality` | bool | `mapper.router_criticality` (weight congestion negotiation by per-net longest-path criticality; Steiner router only) |
 //! | `service.jobs` | int | `jobs` (suite worker threads; 0 = available parallelism) |
 //! | `fabric.topology` | string | `fabric.topology`: `"mesh4"` (the legacy default), `"diagonal"` (8-neighbour mesh) or `"express"` (mesh + stride links) |
 //! | `fabric.express_stride` | int | express-link stride (≥ 2; only read for the `express` topology) |

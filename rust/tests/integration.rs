@@ -166,6 +166,132 @@ fn latency_ratios_bounded() {
 }
 
 #[test]
+fn jam_scenarios_pin_both_routers() {
+    // The canonical congestion scenario, pinned through the public API
+    // for both routers: four distinct values must cross the cut between
+    // columns 3 and 4 eastbound, but a 3-row Mesh4 grid has only three
+    // eastbound cap-1 links per cut — routing must report congestion.
+    // Doubling link capacity or adding express stride-2 links clears
+    // the jam for both routers, and the cleared mappings validate.
+    use helex::cgra::CellId;
+    use helex::dfg::Dfg;
+    use helex::fabric::{FabricSpec, Topology};
+    use helex::mapper::route::{route, steiner_route, RouteOutcome, RouterArena};
+    use helex::mapper::{Mapping, MapperConfig};
+    use helex::ops::{GroupSet, Op};
+
+    let jam_dfg = || {
+        Dfg::new(
+            "jam",
+            vec![
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Load,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Add,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+                Op::Store,
+            ],
+            vec![(0, 4), (1, 5), (2, 6), (3, 7), (4, 8), (5, 9), (6, 10), (7, 11)],
+        )
+    };
+    let jam_placement = |l: &Layout| -> Vec<CellId> {
+        let g = &l.grid;
+        vec![
+            g.cell(0, 0),
+            g.cell(0, 1),
+            g.cell(0, 2),
+            g.cell(0, 3),
+            g.cell(1, 4),
+            g.cell(1, 5),
+            g.cell(1, 6),
+            g.cell(1, 7),
+            g.cell(2, 4),
+            g.cell(2, 5),
+            g.cell(2, 6),
+            g.cell(2, 7),
+        ]
+    };
+    let d = jam_dfg();
+    let legacy_cfg = MapperConfig { route_iters: 3, ..Default::default() };
+    let steiner_cfg =
+        MapperConfig { router_steiner: true, route_iters: 3, ..Default::default() };
+    let mut arena = RouterArena::new();
+
+    // cap-1 Mesh4: both routers must diagnose the jam
+    let mesh = Layout::full(Grid::new(3, 9), GroupSet::all_compute());
+    let p = jam_placement(&mesh);
+    assert!(
+        matches!(route(&d, &mesh, &p, &legacy_cfg), RouteOutcome::Congested { .. }),
+        "legacy router must report the Mesh4 jam"
+    );
+    assert!(
+        matches!(
+            steiner_route(&d, &mesh, &p, &steiner_cfg, &mut arena),
+            RouteOutcome::Congested { .. }
+        ),
+        "steiner router must report the Mesh4 jam"
+    );
+
+    // capacity 2 or express stride-2 links clear it for both routers
+    let fixes = [
+        FabricSpec { link_cap: 2, ..Default::default() },
+        FabricSpec { topology: Topology::Express { stride: 2 }, ..Default::default() },
+    ];
+    for spec in fixes {
+        let l = Layout::full_on(spec.build(Grid::new(3, 9)), GroupSet::all_compute());
+        let p = jam_placement(&l);
+        let RouteOutcome::Routed(paths) = route(&d, &l, &p, &legacy_cfg) else {
+            panic!("{} must clear the jam for the legacy router", spec.describe());
+        };
+        let m = Mapping { node_cell: p.clone(), edge_paths: paths, reserved: vec![] };
+        assert!(m.validate(&d, &l).is_empty(), "{}", spec.describe());
+        let RouteOutcome::Routed(paths) = steiner_route(&d, &l, &p, &steiner_cfg, &mut arena)
+        else {
+            panic!("{} must clear the jam for the steiner router", spec.describe());
+        };
+        let m = Mapping { node_cell: p, edge_paths: paths, reserved: vec![] };
+        assert!(m.validate(&d, &l).is_empty(), "{}", spec.describe());
+    }
+}
+
+#[test]
+fn steiner_engine_matches_legacy_on_benchmark_corpus() {
+    // end-to-end feasibility parity on the paper's Table II set: the
+    // Steiner engine (with and without criticality weighting) agrees
+    // with the legacy engine on every benchmark at 10x10, and its
+    // mappings pass full validation.
+    let dfgs = benchmarks::all();
+    let full = Layout::full(Grid::new(10, 10), helex::dfg::groups_used(&dfgs));
+    let legacy = MappingEngine::default();
+    for crit in [false, true] {
+        let engine = MappingEngine::new(helex::MapperConfig {
+            router_steiner: true,
+            router_criticality: crit,
+            ..Default::default()
+        });
+        for d in &dfgs {
+            let a = legacy.map(d, &full).is_mapped();
+            let m = engine.map(d, &full);
+            assert_eq!(
+                a,
+                m.is_mapped(),
+                "{} (crit={crit}): routers disagree on feasibility",
+                d.name
+            );
+            if let Some(m) = m.into_mapping() {
+                assert!(m.validate(d, &full).is_empty(), "{} (crit={crit})", d.name);
+            }
+        }
+    }
+}
+
+#[test]
 fn cli_binary_basic_invocations() {
     // run the built binary for usage + show-dfg; this keeps the CLI wired
     let exe = env!("CARGO_BIN_EXE_helex");

@@ -354,6 +354,192 @@ fn prop_warm_start_remap_parity() {
 }
 
 #[test]
+fn prop_steiner_router_matches_legacy_verdicts() {
+    // the Steiner multi-fanout router must agree with the legacy
+    // edge-by-edge router on feasibility (roomy full layouts, where
+    // both negotiations certainly converge), and every mapping it
+    // produces — with and without criticality weighting — must pass
+    // the same validation bar as the legacy router's output.
+    forall("steiner_vs_legacy", 25, 0x57E1, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 8 + g.rng.below(3);
+        let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
+        let legacy = MappingEngine::default().map(&dfg, &layout);
+        for crit in [false, true] {
+            let steiner = MappingEngine::new(MapperConfig {
+                router_steiner: true,
+                router_criticality: crit,
+                ..Default::default()
+            })
+            .map(&dfg, &layout);
+            match (&legacy, &steiner) {
+                (MapOutcome::Mapped { .. }, MapOutcome::Mapped { mapping, .. }) => {
+                    let errs = mapping.validate(&dfg, &layout);
+                    if !errs.is_empty() {
+                        return Err(format!(
+                            "steiner mapping invalid (crit={crit}): {errs:?}"
+                        ));
+                    }
+                }
+                (MapOutcome::Failed { .. }, MapOutcome::Failed { .. }) => {}
+                _ => {
+                    return Err(format!(
+                        "routers disagree on feasibility (crit={crit}): \
+                         legacy mapped={} steiner mapped={}",
+                        matches!(legacy, MapOutcome::Mapped { .. }),
+                        matches!(steiner, MapOutcome::Mapped { .. }),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steiner_router_sound_on_gen_workloads() {
+    // the seeded workload generator's graphs (the loadgen/fuzz input
+    // source) through the Steiner router: every success validates.
+    forall("steiner_gen_sound", 25, 0x57E3, |g| {
+        let cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfg = helex::dfg::gen::generate(&cfg);
+        let side = 7 + g.rng.below(3);
+        let layout = Layout::full(Grid::new(side, side), dfg.groups_used());
+        let engine = MappingEngine::new(MapperConfig {
+            router_steiner: true,
+            ..Default::default()
+        });
+        if let MapOutcome::Mapped { mapping: m, .. } = engine.map(&dfg, &layout) {
+            let errs = m.validate(&dfg, &layout);
+            if !errs.is_empty() {
+                return Err(format!("{}: {errs:?}", dfg.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steiner_warm_remap_parity() {
+    // the Steiner engine's warm path (net-granular rip-up of dirty
+    // nets, pinned routing for the rest) under random support
+    // removals: whenever it succeeds the result validates, and it
+    // succeeds at least whenever the cold Steiner path does.
+    forall("steiner_warm_parity", 20, 0x57E2, |g| {
+        let tag = g.rng.next_u64();
+        let spec = arb_spec(g, tag);
+        let dfg = spec.build();
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let full = Layout::full(grid, dfg.groups_used());
+        let scfg = MapperConfig { router_steiner: true, ..Default::default() };
+        let engine = MappingEngine::new(scfg.clone());
+        let MapOutcome::Mapped { mapping: witness, .. } = engine.map(&dfg, &full) else {
+            return Ok(()); // unmappable random instance: nothing to warm-start
+        };
+        let mut layout = full.clone();
+        for c in grid.compute_cells().collect::<Vec<_>>() {
+            for grp in layout.support(c).iter().collect::<Vec<_>>() {
+                if g.rng.chance(0.25) {
+                    layout.set_support(c, layout.support(c).without(grp));
+                }
+            }
+        }
+        let warm = engine.remap_from(&witness, &dfg, &layout);
+        let cold = MappingEngine::new(MapperConfig {
+            feasibility_cache: false,
+            ..scfg
+        })
+        .map(&dfg, &layout);
+        match (&warm, &cold) {
+            (MapOutcome::Mapped { mapping, stats }, _) => {
+                let errs = mapping.validate(&dfg, &layout);
+                if !errs.is_empty() {
+                    return Err(format!(
+                        "steiner warm remap invalid (warm path: {}): {errs:?}",
+                        stats.warm
+                    ));
+                }
+            }
+            (MapOutcome::Failed { .. }, MapOutcome::Mapped { .. }) => {
+                return Err("steiner remap_from failed where from-scratch succeeds".into());
+            }
+            (MapOutcome::Failed { .. }, MapOutcome::Failed { .. }) => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_steiner_search_trace_is_thread_invariant() {
+    // the byte-identity contract re-pinned for the Steiner router: a
+    // search session's stripped wire trace, best layout and counters
+    // are identical at 1/2/4 in-search threads (each forked worker
+    // gets a fresh router arena, so shared scratch can never leak
+    // nondeterminism into the reduction).
+    use helex::service::wire;
+    forall("steiner_threads_parity", 3, 0x57E4, |g| {
+        let gen_cfg = helex::dfg::gen::arb_config(g.rng, g.size);
+        let dfgs = vec![helex::dfg::gen::generate(&gen_cfg)];
+        let side = 6 + g.rng.below(3);
+        let grid = Grid::new(side, side);
+        let scfg = SearchConfig {
+            l_test: 40 + g.rng.below(30),
+            l_fail: 2,
+            gsg_passes: 1,
+            ..Default::default()
+        };
+        let run = |threads: usize| {
+            let engine = MappingEngine::new(MapperConfig {
+                router_steiner: true,
+                router_criticality: true,
+                ..Default::default()
+            });
+            let cost = CostModel::area();
+            let mut trace = String::new();
+            let result = {
+                let trace = &mut trace;
+                let mut obs = move |ev: &SearchEvent| {
+                    trace.push_str(&wire::strip_volatile(&wire::encode_event(ev)).to_string());
+                    trace.push('\n');
+                };
+                Explorer::new(grid)
+                    .dfgs(&dfgs)
+                    .engine(&engine)
+                    .cost(&cost)
+                    .config(SearchConfig { search_threads: threads, ..scfg.clone() })
+                    .observer(&mut obs)
+                    .run()
+            };
+            let summary = result.ok().map(|r| {
+                (
+                    wire::encode_layout(&r.best_layout).to_string(),
+                    r.best_cost.to_bits(),
+                    r.stats.tested,
+                    r.stats.expanded,
+                )
+            });
+            (trace, summary)
+        };
+        let base = run(1);
+        for threads in [2usize, 4] {
+            let other = run(threads);
+            if base != other {
+                return Err(format!(
+                    "steiner search diverged at {threads} threads: \
+                     trace {}B vs {}B",
+                    base.0.len(),
+                    other.0.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pareto_front_is_nondominated_and_complete() {
     // the archive invariant under random offer sequences: no resident
     // point is dominated by another, and every offered layout is either
